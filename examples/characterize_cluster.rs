@@ -1,0 +1,45 @@
+//! Characterize a cluster: the paper's §4.3 system-analysis workflow.
+//!
+//! Runs the Fig. 3 staircase, prints the per-level settled behaviour, then
+//! fits and prints the static model (Fig. 4 / Table 2 rows) for the chosen
+//! cluster.
+//!
+//! Run: `cargo run --release --example characterize_cluster -- [gros|dahu|yeti]`
+
+use powerctl::experiments::{fig3, identify, Ctx, Scale};
+use powerctl::sim::cluster::{Cluster, ClusterId};
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "dahu".into());
+    let id = ClusterId::parse(&name).unwrap_or_else(|| {
+        eprintln!("unknown cluster '{name}' (gros|dahu|yeti)");
+        std::process::exit(2);
+    });
+    let truth = Cluster::get(id);
+    let ctx = Ctx::new("results/characterize", 7, Scale::Fast);
+    std::fs::create_dir_all(&ctx.out_dir).ok();
+
+    println!("== staircase analysis (Fig. 3) on {} ==", id.name());
+    let (_, summary) = fig3::run_cluster(&ctx, id);
+    println!("per-level settled progress [Hz]: {:?}", rounded(&summary.level_progress));
+    println!("per-level cap−power gap  [W]: {:?}", rounded(&summary.level_gap));
+    println!("progress noise: {:.2} Hz", summary.noise);
+
+    println!("\n== static + dynamic identification (Fig. 4 / Table 2) ==");
+    let ident = identify(&ctx, id);
+    let m = &ident.model;
+    let s = &m.static_model;
+    println!("          paper    fitted");
+    println!("a        {:>6.3}   {:>6.3}", truth.rapl_a, s.a);
+    println!("b        {:>6.2}   {:>6.2}", truth.rapl_b, s.b);
+    println!("alpha    {:>6.4}   {:>6.4}", truth.alpha, s.alpha);
+    println!("beta     {:>6.1}   {:>6.1}", truth.beta, s.beta);
+    println!("K_L      {:>6.1}   {:>6.1}", truth.k_l, s.k_l);
+    println!("tau      {:>6.3}   {:>6.3}", truth.tau, m.tau);
+    println!("R² = {:.3};  Pearson r(progress, 1/T) = {:.2}", s.r_squared, ident.pearson_throughput);
+    println!("\nCSV data under {}", ctx.out_dir.display());
+}
+
+fn rounded(xs: &[f64]) -> Vec<f64> {
+    xs.iter().map(|x| (x * 10.0).round() / 10.0).collect()
+}

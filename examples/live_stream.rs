@@ -1,0 +1,105 @@
+//! End-to-end live driver (the DESIGN.md validation workload): all three
+//! layers execute for real.
+//!
+//! * L1/L2 — the Pallas STREAM kernels, AOT-lowered to `artifacts/`, run
+//!   through PJRT each iteration;
+//! * L3 — the NRM daemon receives the heartbeats over the Unix-domain
+//!   socket transport, computes the Eq. (1) progress, and the PI controller
+//!   actuates the (simulated) RAPL cap in real time; the workload paces
+//!   itself to the plant's sustainable rate.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example live_stream -- [iterations] [epsilon]`
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use powerctl::control::baseline::Policy;
+use powerctl::coordinator::nrm::{NrmDaemon, SimBackend};
+use powerctl::coordinator::transport::UnixSocket;
+use powerctl::experiments::{fig6, identify, Ctx, Scale};
+use powerctl::sim::cluster::{Cluster, ClusterId};
+use powerctl::sim::clock::WallClock;
+use powerctl::sim::node::NodeSim;
+use powerctl::workload::{run_live, LiveConfig};
+
+fn main() {
+    let iterations: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(100);
+    let epsilon: f64 = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.15);
+
+    let ctx = Ctx::new("results/live", 42, Scale::Fast);
+    std::fs::create_dir_all(&ctx.out_dir).ok();
+
+    println!("identifying gros ...");
+    let ident = identify(&ctx, ClusterId::Gros);
+    let (policy, setpoint) = fig6::make_pi(&ident, epsilon);
+    println!("PI tuned: setpoint {setpoint:.1} Hz (ε = {epsilon})");
+
+    let sock_path = std::env::temp_dir().join(format!("powerctl-live-{}.sock", std::process::id()));
+    let receiver = UnixSocket::bind(&sock_path).expect("bind heartbeat socket");
+    println!("heartbeat socket: {}", sock_path.display());
+
+    let backend = SimBackend::new(NodeSim::new(Cluster::get(ClusterId::Gros), 42));
+    let rate = backend.rate_handle();
+    let mut daemon = NrmDaemon::new(
+        receiver,
+        Box::new(backend),
+        Box::new(policy) as Box<dyn Policy>,
+        1.0,
+        setpoint,
+        epsilon,
+    );
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_wl = stop.clone();
+    let sock_for_wl = sock_path.clone();
+    let workload = std::thread::spawn(move || {
+        let result = (|| {
+            let runtime = powerctl::runtime::Runtime::new("artifacts")?;
+            let executor = powerctl::runtime::StreamExecutor::new(runtime, 42, true)?;
+            let sender = UnixSocket::connect(&sock_for_wl)?;
+            run_live(
+                executor,
+                &sender,
+                rate,
+                &stop_wl,
+                &LiveConfig {
+                    app_id: 1,
+                    iterations,
+                    initial_rate: 25.0,
+                    check_digest: true,
+                },
+            )
+        })();
+        stop_wl.store(true, Ordering::Relaxed);
+        result
+    });
+
+    let mut clock = WallClock::new();
+    let rec = daemon.run(&mut clock, &stop, Some(iterations), 600.0);
+    stop.store(true, Ordering::Relaxed);
+    let outcome = workload
+        .join()
+        .expect("workload thread")
+        .expect("workload failed (artifacts missing? run `make artifacts`)");
+
+    println!(
+        "\nworkload: {} iterations in {:.1} s ({:.1} Hz), final digest {:.3e} (validated)",
+        outcome.iterations, outcome.wall_time, outcome.rate, outcome.last_digest
+    );
+    for s in daemon.samples().iter().rev().take(3).rev() {
+        println!(
+            "daemon t={:>5.1}s  cap={:>6.1} W  power={:>6.1} W  progress={:>5.1} Hz",
+            s.time, s.pcap, s.power, s.progress
+        );
+    }
+    let path = ctx.path("live_stream.csv");
+    rec.to_table().save(&path).expect("save");
+    println!("trace: {}", path.display());
+}

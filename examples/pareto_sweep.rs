@@ -1,0 +1,54 @@
+//! Pareto sweep: regenerate Fig. 7 for one cluster and report the
+//! paper's headline trade-off.
+//!
+//! Run: `cargo run --release --example pareto_sweep -- [gros|dahu|yeti] [--full]`
+
+use powerctl::experiments::{fig7, identify, Ctx, Scale};
+use powerctl::sim::cluster::ClusterId;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let full = args.iter().any(|a| a == "--full");
+    let name = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .cloned()
+        .unwrap_or_else(|| "gros".into());
+    let id = ClusterId::parse(&name).unwrap_or_else(|| {
+        eprintln!("unknown cluster '{name}'");
+        std::process::exit(2);
+    });
+    let scale = if full { Scale::Full } else { Scale::Fast };
+    let ctx = Ctx::new("results/pareto", 42, scale);
+    std::fs::create_dir_all(&ctx.out_dir).ok();
+
+    println!("identifying {} ...", id.name());
+    let ident = identify(&ctx, id);
+    println!(
+        "sweeping {} degradation levels × {} repetitions ...",
+        ctx.scale.epsilons().len(),
+        ctx.scale.reps()
+    );
+    let s = fig7::run_cluster(&ctx, &ident);
+
+    println!(
+        "\n{} baseline: T = {:.0} s, E = {:.0} J",
+        id.name(),
+        s.base_time,
+        s.base_energy
+    );
+    println!("  eps     T[s]     E[J]    ΔT%     ΔE%");
+    for &(eps, t, e, dt, de) in &s.points {
+        println!("  {eps:>4.2} {t:>8.1} {e:>8.0} {dt:>+7.1} {de:>+7.1}");
+    }
+    if let Some((dt, de)) = s.deltas_at(0.1) {
+        println!(
+            "\nheadline (paper: ε=0.1 on gros ⇒ −22 % energy for +7 % time):\n\
+             here: ε=0.1 on {} ⇒ {:+.0} % energy for {:+.0} % time",
+            id.name(),
+            -de,
+            dt
+        );
+    }
+    println!("raw points: {}", ctx.path(&format!("fig7_{}.csv", id.name())).display());
+}

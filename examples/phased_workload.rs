@@ -1,0 +1,57 @@
+//! Phases + adaptation: the paper's §6 future-work direction, runnable.
+//!
+//! Runs a workload alternating memory-bound and compute-bound phases under
+//! (a) the fixed PI tuned for the memory-bound profile and (b) the
+//! gain-scheduled adaptive PI, and compares tracking quality and the
+//! estimated gain trajectory.
+//!
+//! Run: `cargo run --release --example phased_workload`
+
+use powerctl::control::adaptive::AdaptivePi;
+use powerctl::experiments::{ablation, fig6, identify, Ctx, Scale};
+use powerctl::sim::cluster::{Cluster, ClusterId};
+use powerctl::workload::phases::{run_phased, AdaptivePolicy, PhaseSchedule};
+
+fn main() {
+    let ctx = Ctx::new("results/phased", 42, Scale::Fast);
+    std::fs::create_dir_all(&ctx.out_dir).ok();
+    let cluster = Cluster::get(ClusterId::Gros);
+
+    println!("identifying gros (memory-bound profile) ...");
+    let ident = identify(&ctx, ClusterId::Gros);
+
+    let schedule = PhaseSchedule::alternating(120.0, 2);
+    println!(
+        "schedule: {} phases × 120 s (memory-bound ↔ compute-bound)\n",
+        schedule.phases.len()
+    );
+
+    let (mut fixed, _) = fig6::make_pi(&ident, 0.15);
+    let rec_fixed = run_phased(&cluster, &mut fixed, &schedule, 1.0, 42);
+    let mut adaptive = AdaptivePolicy(AdaptivePi::new(
+        ident.model.clone(),
+        10.0,
+        0.15,
+        cluster.pcap_min,
+        cluster.pcap_max,
+    ));
+    let rec_adapt = run_phased(&cluster, &mut adaptive, &schedule, 1.0, 42);
+    println!(
+        "fixed PI   : energy {:.0} J, final gain K_L = {:.1} (never adapts)",
+        rec_fixed.energy, ident.model.static_model.k_l
+    );
+    println!(
+        "adaptive PI: energy {:.0} J, final estimated gain K̂_L = {:.1}",
+        rec_adapt.energy,
+        adaptive.0.estimated_gain()
+    );
+
+    let (rms_fixed, rms_adapt) = ablation::adaptive_ablation(&ctx, &ident);
+    println!("\nsettled tracking RMS: fixed {rms_fixed:.2} Hz vs adaptive {rms_adapt:.2} Hz");
+
+    for (name, rec) in [("fixed", &rec_fixed), ("adaptive", &rec_adapt)] {
+        let path = ctx.path(&format!("phased_{name}.csv"));
+        rec.to_table().save(&path).expect("save");
+        println!("trace: {}", path.display());
+    }
+}

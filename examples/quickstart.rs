@@ -1,0 +1,56 @@
+//! Quickstart: the complete workflow of the paper in ~40 lines of API.
+//!
+//! 1. Identify the gros cluster (static + dynamic campaigns, Table 2).
+//! 2. Tune the PI controller by pole placement (§4.5).
+//! 3. Run the controlled benchmark at ε = 0.15 and compare with the
+//!    uncontrolled baseline (Fig. 7's headline trade-off).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use powerctl::control::baseline::Uncontrolled;
+use powerctl::coordinator::experiment::run_closed_loop;
+use powerctl::experiments::{fig6, identify, Ctx, Scale};
+use powerctl::sim::cluster::{Cluster, ClusterId};
+
+fn main() {
+    let ctx = Ctx::new("results/quickstart", 42, Scale::Fast);
+    std::fs::create_dir_all(&ctx.out_dir).ok();
+    let cluster = Cluster::get(ClusterId::Gros);
+
+    println!("== step 1: identification (static + dynamic campaigns) ==");
+    let ident = identify(&ctx, ClusterId::Gros);
+    let m = &ident.model;
+    println!(
+        "fitted: power = {:.2}·pcap + {:.2};  progress = {:.1}·(1 − e^(−{:.3}·(power − {:.1})));  τ = {:.2} s  (R² = {:.3})",
+        m.static_model.a, m.static_model.b, m.static_model.k_l, m.static_model.alpha,
+        m.static_model.beta, m.tau, m.static_model.r_squared
+    );
+
+    println!("\n== step 2: PI tuning (pole placement, τ_obj = 10 s) ==");
+    let epsilon = 0.15;
+    let (mut policy, setpoint) = fig6::make_pi(&ident, epsilon);
+    println!("ε = {epsilon} → setpoint {setpoint:.1} Hz");
+
+    println!("\n== step 3: controlled run vs baseline ==");
+    let cfg = ctx.run_config();
+    let mut baseline_policy = Uncontrolled {
+        pcap_max: cluster.pcap_max,
+    };
+    let base = run_closed_loop(&cluster, &mut baseline_policy, f64::NAN, 0.0, &cfg, 1);
+    let ctl = run_closed_loop(&cluster, &mut policy, setpoint, epsilon, &cfg, 1);
+
+    println!(
+        "baseline   : {:>6.1} s, {:>8.0} J",
+        base.exec_time, base.energy
+    );
+    println!(
+        "PI ε = {epsilon}: {:>6.1} s, {:>8.0} J  →  {:+.1} % time, {:+.1} % energy",
+        ctl.exec_time,
+        ctl.energy,
+        100.0 * (ctl.exec_time / base.exec_time - 1.0),
+        100.0 * (ctl.energy / base.energy - 1.0),
+    );
+    let path = ctx.path("controlled_run.csv");
+    ctl.to_table().save(&path).expect("save");
+    println!("trace: {}", path.display());
+}

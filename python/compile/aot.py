@@ -1,0 +1,141 @@
+"""AOT lowering: JAX (L2) -> HLO *text* artifacts for the Rust runtime.
+
+HLO text — NOT ``lowered.compile()`` / serialized HloModuleProto — is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids that
+the image's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the XLA
+text parser reassigns ids and round-trips cleanly. Pattern follows
+/opt/xla-example/gen_hlo.py.
+
+Usage (from the repo root, via ``make artifacts``)::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits:
+    artifacts/stream_step.hlo.txt   (a,b,c) -> (a,b,c,digest)
+    artifacts/stream_init.hlo.txt   seed    -> (a,b,c)
+    artifacts/manifest.json         shapes + metadata for the Rust loader
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_stream_step() -> str:
+    spec = jax.ShapeDtypeStruct((model.N,), jnp.float32)
+    return to_hlo_text(jax.jit(model.stream_step).lower(spec))
+
+
+def lower_stream_step_k(k: int) -> str:
+    spec = jax.ShapeDtypeStruct((model.N,), jnp.float32)
+    return to_hlo_text(jax.jit(functools.partial(model.stream_step_k, k=k)).lower(spec))
+
+
+def lower_stream_step_block(block: int) -> str:
+    spec = jax.ShapeDtypeStruct((model.N,), jnp.float32)
+    return to_hlo_text(
+        jax.jit(functools.partial(model.stream_step_block, block=block)).lower(spec)
+    )
+
+
+def lower_stream_init() -> str:
+    seed = jax.ShapeDtypeStruct((), jnp.int32)
+    return to_hlo_text(jax.jit(model.stream_init).lower(seed))
+
+
+# Fused-iteration factor of the stream_step_k artifact (§Perf).
+K_FUSED = 8
+# Tile-sweep variants (Pallas block sizes) for the §Perf analysis. 2**20 =
+# whole-array tile (grid=1): fastest on the CPU interpret path but its
+# 4 × 4 MiB working set exceeds a comfortable TPU VMEM budget — kept as a
+# measurement point, not a default.
+PERF_BLOCKS = (1 << 14, 1 << 16, 1 << 20)
+
+
+def manifest() -> dict:
+    entries = {
+        "stream_step": {
+            "file": "stream_step.hlo.txt",
+            "iters": 1,
+            "inputs": [["f32", [model.N]]],
+            "outputs": [["f32", [model.N]], ["f32", []]],
+        },
+        "stream_step_k": {
+            "file": "stream_step_k.hlo.txt",
+            "iters": K_FUSED + 1,
+            "inputs": [["f32", [model.N]]],
+            "outputs": [["f32", [model.N]], ["f32", []]],
+        },
+        "stream_init": {
+            "file": "stream_init.hlo.txt",
+            "iters": 0,
+            "inputs": [["s32", []]],
+            "outputs": [["f32", [model.N]]],
+        },
+    }
+    for blk in PERF_BLOCKS:
+        entries[f"stream_step_b{blk}"] = {
+            "file": f"stream_step_b{blk}.hlo.txt",
+            "iters": 1,
+            "inputs": [["f32", [model.N]]],
+            "outputs": [["f32", [model.N]], ["f32", []]],
+        }
+    return {
+        "n": model.N,
+        "block": model.BLOCK,
+        "scalar": model.SCALAR,
+        "dtype": "f32",
+        "k_fused": K_FUSED + 1,
+        "entries": entries,
+        # Bytes moved per stream_step on an ideal bandwidth-bound machine:
+        # copy 2N + scale 2N + add 3N + triad 3N = 10N floats.
+        "bytes_per_step": 10 * model.N * 4,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    jobs = [
+        ("stream_step", lower_stream_step),
+        ("stream_step_k", lambda: lower_stream_step_k(K_FUSED)),
+        ("stream_init", lower_stream_init),
+    ]
+    for blk in PERF_BLOCKS:
+        jobs.append((f"stream_step_b{blk}", functools.partial(lower_stream_step_block, blk)))
+    for name, fn in jobs:
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        text = fn()
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest(), f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

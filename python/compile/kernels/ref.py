@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the Pallas STREAM kernels (correctness reference)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def copy(a: jax.Array) -> jax.Array:
+    return jnp.asarray(a)
+
+
+def scale(c: jax.Array, s: jax.Array) -> jax.Array:
+    return s.astype(c.dtype) * c
+
+
+def add(a: jax.Array, b: jax.Array) -> jax.Array:
+    return a + b
+
+
+def triad(b: jax.Array, c: jax.Array, s: jax.Array) -> jax.Array:
+    return b + s.astype(b.dtype) * c
+
+
+def stream_iteration(a, b, c, s):
+    c = copy(a)
+    b = scale(c, s)
+    c = add(a, b)
+    a = triad(b, c, s)
+    return a, b, c
+
+
+def stream_checksum(a, b, c):
+    """Scalar digest used by the rust runtime to validate artifact numerics."""
+    return jnp.sum(a) + 2.0 * jnp.sum(b) + 3.0 * jnp.sum(c)

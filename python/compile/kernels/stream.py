@@ -1,0 +1,173 @@
+"""L1 — Pallas STREAM kernels.
+
+The paper's workload is McCalpin's STREAM 5.10 (memory-bound): four kernels
+run in a loop, one heartbeat per loop completion.
+
+    copy :  c[i] = a[i]
+    scale:  b[i] = s * c[i]
+    add  :  c[i] = a[i] + b[i]
+    triad:  a[i] = b[i] + s * c[i]
+
+Hardware adaptation (see DESIGN.md §3): the paper runs STREAM on Xeon
+packages where the power knee comes from DRAM bandwidth saturation. The TPU
+analogue is an HBM-bandwidth-bound kernel that keeps the MXU idle: we tile
+each 1-D array over a grid with `BlockSpec`, stream HBM->VMEM block by
+block, and do element-wise VPU work only. `interpret=True` everywhere —
+CPU PJRT cannot execute Mosaic custom-calls (see /opt/xla-example/README.md).
+
+Block size: STREAM arrays are contiguous f32 vectors. A (8, 128)-multiple
+flat tile keeps the VPU lanes full; `BLOCK` elements of each operand live in
+VMEM at once. With the default BLOCK=65536 a triad tile holds
+3 * 65536 * 4 B = 768 KiB in VMEM — comfortably under the ~16 MiB budget and
+large enough that the HBM stream dominates (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default element count per kernel invocation. STREAM 5.10 in the paper uses
+# N = 33_554_432 (2**25) per array; under interpret=True that wall-clock is
+# prohibitive, and experiment pacing comes from the simulated plant (see
+# DESIGN.md §2), so artifacts are built at a smaller N that preserves the
+# bandwidth-bound structure.
+DEFAULT_N = 1 << 20
+# Elements per grid step. Multiple of 8*128 = 1024 VPU lanes.
+#
+# §Perf: raised from 2**16 to 2**18 after the tile sweep (see
+# EXPERIMENTS.md §Perf): on the CPU interpret path the per-grid-step
+# overhead dominates, and 2**18 (grid=4) ran the STREAM step 2.5× faster
+# than 2**16 (grid=16). On a real TPU the triad tile then holds
+# 3 inputs + 1 output × 1 MiB = 4 MiB in VMEM — comfortably inside the
+# ~16 MiB budget while still double-bufferable.
+DEFAULT_BLOCK = 1 << 18
+
+
+def _grid(n: int, block: int) -> int:
+    if n % block != 0:
+        raise ValueError(f"n={n} must be a multiple of block={block}")
+    return n // block
+
+
+# --- kernel bodies (shared element-wise cores) -------------------------------
+
+
+def _copy_kernel(a_ref, c_ref):
+    c_ref[...] = a_ref[...]
+
+
+def _scale_kernel(c_ref, s_ref, b_ref):
+    # s is a (1, 1) scalar tile broadcast over the block.
+    b_ref[...] = s_ref[0, 0] * c_ref[...]
+
+
+def _add_kernel(a_ref, b_ref, c_ref):
+    c_ref[...] = a_ref[...] + b_ref[...]
+
+
+def _triad_kernel(b_ref, c_ref, s_ref, a_ref):
+    a_ref[...] = b_ref[...] + s_ref[0, 0] * c_ref[...]
+
+
+# --- pallas_call wrappers -----------------------------------------------------
+#
+# All arrays are shaped (n,) logically; we view them as (n/block, block) rows
+# and grid over rows so each grid step streams one `block`-element tile
+# through VMEM. The scalar `s` rides along as a (1, 1) block replicated to
+# every grid step.
+
+
+def _vec_spec(block: int):
+    return pl.BlockSpec((1, block), lambda i: (i, 0))
+
+
+def _scalar_spec():
+    return pl.BlockSpec((1, 1), lambda i: (0, 0))
+
+
+def _as_rows(x: jax.Array, block: int) -> jax.Array:
+    return x.reshape((-1, block))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def copy(a: jax.Array, *, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """STREAM copy: returns c = a."""
+    n = a.shape[0]
+    g = _grid(n, block)
+    out = pl.pallas_call(
+        _copy_kernel,
+        grid=(g,),
+        in_specs=[_vec_spec(block)],
+        out_specs=_vec_spec(block),
+        out_shape=jax.ShapeDtypeStruct((g, block), a.dtype),
+        interpret=True,
+    )(_as_rows(a, block))
+    return out.reshape((n,))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def scale(c: jax.Array, s: jax.Array, *, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """STREAM scale: returns b = s * c."""
+    n = c.shape[0]
+    g = _grid(n, block)
+    out = pl.pallas_call(
+        _scale_kernel,
+        grid=(g,),
+        in_specs=[_vec_spec(block), _scalar_spec()],
+        out_specs=_vec_spec(block),
+        out_shape=jax.ShapeDtypeStruct((g, block), c.dtype),
+        interpret=True,
+    )(_as_rows(c, block), s.reshape((1, 1)).astype(c.dtype))
+    return out.reshape((n,))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def add(a: jax.Array, b: jax.Array, *, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """STREAM add: returns c = a + b."""
+    n = a.shape[0]
+    g = _grid(n, block)
+    out = pl.pallas_call(
+        _add_kernel,
+        grid=(g,),
+        in_specs=[_vec_spec(block), _vec_spec(block)],
+        out_specs=_vec_spec(block),
+        out_shape=jax.ShapeDtypeStruct((g, block), a.dtype),
+        interpret=True,
+    )(_as_rows(a, block), _as_rows(b, block))
+    return out.reshape((n,))
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def triad(b: jax.Array, c: jax.Array, s: jax.Array, *, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """STREAM triad: returns a = b + s * c."""
+    n = b.shape[0]
+    g = _grid(n, block)
+    out = pl.pallas_call(
+        _triad_kernel,
+        grid=(g,),
+        in_specs=[_vec_spec(block), _vec_spec(block), _scalar_spec()],
+        out_specs=_vec_spec(block),
+        out_shape=jax.ShapeDtypeStruct((g, block), b.dtype),
+        interpret=True,
+    )(_as_rows(b, block), _as_rows(c, block), s.reshape((1, 1)).astype(b.dtype))
+    return out.reshape((n,))
+
+
+def stream_iteration(
+    a: jax.Array, b: jax.Array, c: jax.Array, s: jax.Array, *, block: int = DEFAULT_BLOCK
+):
+    """One STREAM loop body (paper §4.1): copy, scale, add, triad.
+
+    Returns the updated (a, b, c) triple — exactly the data flow of
+    STREAM 5.10's main loop, so iterating this function is the instrumented
+    benchmark whose completion emits one heartbeat.
+    """
+    c = copy(a, block=block)
+    b = scale(c, s, block=block)
+    c = add(a, b, block=block)
+    a = triad(b, c, s, block=block)
+    return a, b, c

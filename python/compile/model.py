@@ -1,0 +1,107 @@
+"""L2 — JAX compute graph for the instrumented STREAM benchmark.
+
+The "model" of this paper is not a neural network: the compute artifact the
+Rust coordinator executes per heartbeat is one (or a fused batch of) STREAM
+loop iterations, built from the L1 Pallas kernels. Two entry points are
+AOT-lowered (see aot.py):
+
+  * ``stream_step``   — one loop iteration (4 kernels) + checksum. This is
+    the unit of work whose completion emits one heartbeat.
+  * ``stream_init``   — deterministic array initialization (STREAM 5.10's
+    a=1, b=2, c=0 scaled by a seed-derived jitter so repeated runs differ),
+    so the Rust side never materializes host-side arrays beyond feeding a
+    seed scalar.
+
+Both are lowered with all array state as explicit inputs/outputs so the Rust
+runtime can keep buffers device-resident across iterations.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref, stream
+
+# Problem size of the AOT artifact. See kernels/stream.py for why this is
+# smaller than STREAM 5.10's 2**25 (interpret=True wall-clock; the plant,
+# not wall-clock, paces experiment time).
+N = stream.DEFAULT_N
+BLOCK = stream.DEFAULT_BLOCK
+# STREAM's scalar is arbitrary for bandwidth purposes (McCalpin uses 3.0).
+# We pick s = √2 − 1, the positive root of s² + 2s − 1 = 0, which makes the
+# loop-carried update a' = (2s + s²)·a = a exactly norm-preserving: the
+# artifact can iterate indefinitely without f32 overflow (STREAM 5.10 only
+# runs NTIMES=10, so its growth never bites; our runs do 10⁴ iterations).
+SCALAR = 0.4142135623730951
+
+
+def stream_init(seed: jax.Array):
+    """Initial `a` array; a tiny seed-derived jitter keeps distinct runs
+    numerically distinct while matching STREAM's a=1 init."""
+    jitter = (seed.astype(jnp.float32) % 977.0) * 1e-6
+    return (jnp.full((N,), 1.0, jnp.float32) + jitter,)
+
+
+def stream_step(a: jax.Array):
+    """One heartbeat's worth of work: copy, scale, add, triad + checksum.
+
+    STREAM's loop only carries `a` across iterations (c = copy(a),
+    b = s·c, c = a+b, a = b+s·c): b and c are recomputed every pass, so the
+    AOT artifact takes a single array input and returns the next `a` plus a
+    checksum digest. XLA would prune unused b/c params anyway.
+    """
+    s = jnp.float32(SCALAR)
+    b = jnp.zeros_like(a)
+    c = jnp.zeros_like(a)
+    a, b, c = stream.stream_iteration(a, b, c, s, block=BLOCK)
+    digest = ref.stream_checksum(a, b, c)
+    return a, digest
+
+
+def stream_step_k(a: jax.Array, k: int, block: int = BLOCK):
+    """`k` fused STREAM iterations in one artifact call (§Perf).
+
+    Each PJRT call costs a host→device upload of `a` and a device→host
+    download of the result (~2·4·N bytes of PCIe-equivalent traffic on real
+    hardware, plus dispatch latency). Folding k iterations into one
+    executable with `lax.fori_loop` amortizes that overhead k× while
+    keeping per-iteration STREAM semantics; the caller credits k heartbeats
+    per call (the transport's `units` field exists for exactly this).
+    """
+    s = jnp.float32(SCALAR)
+
+    def body(_, carry):
+        a = carry
+        b = jnp.zeros_like(a)
+        c = jnp.zeros_like(a)
+        a, _, _ = stream.stream_iteration(a, b, c, s, block=block)
+        return a
+
+    a = jax.lax.fori_loop(0, k, body, a)
+    b = jnp.zeros_like(a)
+    c = jnp.zeros_like(a)
+    a, b, c = stream.stream_iteration(a, b, c, s, block=block)
+    digest = ref.stream_checksum(a, b, c)
+    return a, digest
+
+
+def stream_step_block(a: jax.Array, block: int):
+    """stream_step lowered at an alternative Pallas block size (tile-sweep
+    variants for the §Perf analysis)."""
+    s = jnp.float32(SCALAR)
+    b = jnp.zeros_like(a)
+    c = jnp.zeros_like(a)
+    a, b, c = stream.stream_iteration(a, b, c, s, block=block)
+    digest = ref.stream_checksum(a, b, c)
+    return a, digest
+
+
+def stream_step_ref(a: jax.Array):
+    """Oracle twin of stream_step (pure jnp) for pytest comparison."""
+    s = jnp.float32(SCALAR)
+    b = jnp.zeros_like(a)
+    c = jnp.zeros_like(a)
+    a, b, c = ref.stream_iteration(a, b, c, s)
+    digest = ref.stream_checksum(a, b, c)
+    return a, digest

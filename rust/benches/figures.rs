@@ -1,0 +1,91 @@
+//! `cargo bench --bench figures` — one end-to-end bench per paper table and
+//! figure (deliverable d): each bench regenerates the artifact at Fast
+//! scale and prints the paper-shape summary rows alongside its timing, so
+//! a single `cargo bench` run both re-derives every result and reports the
+//! cost of doing so.
+
+use powerctl::experiments::{self, Ctx, Scale};
+use powerctl::util::bench::{black_box, section, Bench};
+
+fn ctx() -> Ctx {
+    let dir = std::env::temp_dir().join("powerctl-bench-figs");
+    Ctx::new(dir, 42, Scale::Fast)
+}
+
+fn main() {
+    let ctx = ctx();
+    std::fs::create_dir_all(&ctx.out_dir).ok();
+    let bench = Bench::endtoend();
+
+    section("Table 1 — cluster characteristics");
+    let mut t1 = String::new();
+    bench.run("table1", || {
+        t1 = experiments::tables::table1();
+        black_box(&t1);
+    });
+    print!("{t1}");
+
+    section("Table 2 — identification campaign (static + dynamic fit)");
+    let mut idents = Vec::new();
+    let mut t2 = String::new();
+    bench.run("table2_identify_all", || {
+        let (out, ids) = experiments::tables::run(&ctx);
+        t2 = out;
+        idents = ids;
+        black_box(&idents);
+    });
+    print!("{t2}");
+
+    section("Fig. 3 — staircase characterization");
+    let mut f3 = String::new();
+    bench.run("fig3_staircase_all_clusters", || {
+        let (out, s) = experiments::fig3::run(&ctx);
+        f3 = out;
+        black_box(s);
+    });
+    print!("{f3}");
+
+    section("Fig. 4 — static characteristic");
+    let mut f4 = String::new();
+    bench.run("fig4_static_fit", || {
+        let (out, s) = experiments::fig4::run(&ctx, &idents);
+        f4 = out;
+        black_box(s);
+    });
+    print!("{f4}");
+
+    section("Fig. 5 — dynamic model validation");
+    let mut f5 = String::new();
+    bench.run("fig5_dynamic_validation", || {
+        let (out, s) = experiments::fig5::run(&ctx, &idents);
+        f5 = out;
+        black_box(s);
+    });
+    print!("{f5}");
+
+    section("Fig. 6 — closed-loop evaluation");
+    let mut f6 = String::new();
+    bench.run("fig6_tracking", || {
+        let (out, s) = experiments::fig6::run(&ctx, &idents);
+        f6 = out;
+        black_box(s);
+    });
+    print!("{f6}");
+
+    section("Fig. 7 — time/energy Pareto sweep");
+    let mut f7 = String::new();
+    bench.run("fig7_pareto_sweep", || {
+        let (out, s) = experiments::fig7::run(&ctx, &idents);
+        f7 = out;
+        black_box(s);
+    });
+    print!("{f7}");
+
+    section("Ablations");
+    let mut ab = String::new();
+    bench.run("ablations", || {
+        ab = experiments::ablation::run(&ctx, &idents);
+        black_box(&ab);
+    });
+    print!("{ab}");
+}

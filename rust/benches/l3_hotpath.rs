@@ -1,0 +1,92 @@
+//! `cargo bench --bench l3_hotpath` — L3 hot-path micro-benchmarks
+//! (§Perf targets, DESIGN.md §7):
+//!
+//! * controller step: target ≪ 1 ms (sampling period is 1 s);
+//! * Eq. (1) heartbeat ingestion + median: target ≥ 1 M beats/s;
+//! * simulated node step: dominates campaign wall-time;
+//! * one full closed-loop run (the fig7 unit of work).
+
+use powerctl::control::baseline::{PiPolicy, Uncontrolled};
+use powerctl::control::pi::{PiConfig, PiController};
+use powerctl::coordinator::experiment::{run_closed_loop, RunConfig};
+use powerctl::coordinator::progress::ProgressAggregator;
+use powerctl::experiments::{identify, Ctx, Scale};
+use powerctl::sim::cluster::{Cluster, ClusterId};
+use powerctl::sim::node::NodeSim;
+use powerctl::util::bench::{black_box, section, Bench};
+
+fn main() {
+    let ctx = Ctx::new(std::env::temp_dir().join("powerctl-bench-l3"), 42, Scale::Fast);
+    std::fs::create_dir_all(&ctx.out_dir).ok();
+    let ident = identify(&ctx, ClusterId::Gros);
+    let cluster = Cluster::get(ClusterId::Gros);
+    let fast = Bench::default();
+
+    section("controller");
+    {
+        let cfg = PiConfig::from_model(&ident.model, 10.0, 40.0, 120.0);
+        let mut ctl = PiController::new(ident.model.clone(), cfg, 0.15);
+        let mut t = 0.0;
+        let r = fast.run("pi_controller_step", || {
+            t += 1.0;
+            black_box(ctl.step(t, 21.0 + (t % 3.0)));
+        });
+        assert!(
+            r.mean < std::time::Duration::from_millis(1),
+            "PI step must be ≪ 1 ms"
+        );
+    }
+
+    section("progress aggregation (Eq. 1)");
+    {
+        // 1000 beats per window at ~25 Hz equivalent spacing.
+        let mut agg = ProgressAggregator::new();
+        let mut beats = Vec::with_capacity(1000);
+        let mut base = 0.0;
+        let r = fast.run("ingest_1000_beats_plus_median", || {
+            beats.clear();
+            for i in 0..1000 {
+                beats.push(base + i as f64 * 0.04);
+            }
+            base += 40.0;
+            agg.ingest(&beats);
+            black_box(agg.sample());
+        });
+        let beats_per_sec = 1000.0 * r.ops_per_sec();
+        println!("  → {:.2}M beats/s ingested+aggregated", beats_per_sec / 1e6);
+        assert!(beats_per_sec > 1e6, "Eq. 1 path below 1M beats/s");
+    }
+
+    section("simulated node");
+    {
+        let mut node = NodeSim::new(cluster.clone(), 7);
+        node.set_pcap(100.0);
+        fast.run("node_step_1s_(20_substeps)", || {
+            black_box(node.step(1.0));
+        });
+    }
+
+    section("end-to-end closed-loop runs");
+    {
+        let slow = Bench::endtoend();
+        let cfg = RunConfig {
+            sample_period: 1.0,
+            total_beats: 1_500,
+            max_time: 600.0,
+        };
+        let mut seed = 0u64;
+        slow.run("uncontrolled_run_1500_beats", || {
+            seed += 1;
+            let mut p = Uncontrolled { pcap_max: 120.0 };
+            black_box(run_closed_loop(&cluster, &mut p, f64::NAN, 0.0, &cfg, seed));
+        });
+        slow.run("pi_run_1500_beats_eps0.15", || {
+            seed += 1;
+            let pic = PiConfig::from_model(&ident.model, 10.0, 40.0, 120.0);
+            let ctl = PiController::new(ident.model.clone(), pic, 0.15);
+            let sp = ctl.setpoint();
+            let mut p = PiPolicy(ctl);
+            black_box(run_closed_loop(&cluster, &mut p, sp, 0.15, &cfg, seed));
+        });
+    }
+}

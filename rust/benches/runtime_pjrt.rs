@@ -1,0 +1,77 @@
+//! `cargo bench --bench runtime_pjrt` — L2/L1 runtime benchmarks: PJRT
+//! compile time, per-iteration latency of the AOT STREAM step, and the
+//! effective memory bandwidth implied by the kernel's 10N·4 bytes/step
+//! (the STREAM metric itself).
+//!
+//! Skips (with a message) if `artifacts/` has not been built.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use powerctl::runtime::{Runtime, StreamExecutor};
+use powerctl::util::bench::{black_box, section, Bench};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn main() {
+    if !artifacts_dir().join("manifest.json").exists() {
+        println!("runtime_pjrt: artifacts/ not built (run `make artifacts`); skipping");
+        return;
+    }
+
+    section("artifact load + compile");
+    let t0 = Instant::now();
+    let mut rt = Runtime::new(artifacts_dir()).expect("runtime");
+    rt.load("stream_step").expect("compile stream_step");
+    rt.load("stream_init").expect("compile stream_init");
+    println!(
+        "cold load+compile of both artifacts: {:.2} s (platform: {})",
+        t0.elapsed().as_secs_f64(),
+        rt.platform()
+    );
+
+    section("stream_step execution (per-variant; §Perf iteration log)");
+    let bytes = rt.manifest.bytes_per_step as f64;
+    let variants: Vec<&str> = {
+        let mut v = vec!["stream_step", "stream_step_k"];
+        let names: Vec<String> = rt.manifest.entries.keys().cloned().collect();
+        drop(rt);
+        for n in &names {
+            if n.starts_with("stream_step_b") {
+                v.push(Box::leak(n.clone().into_boxed_str()));
+            }
+        }
+        v
+    };
+    let bench = Bench {
+        warmup: std::time::Duration::from_millis(500),
+        measure: std::time::Duration::from_secs(3),
+        max_iterations: 200,
+    };
+    for entry in variants {
+        let rt = Runtime::new(artifacts_dir()).expect("runtime");
+        let Ok(mut ex) = StreamExecutor::with_entry(rt, entry, 1, false) else {
+            println!("{entry:<28} (not in manifest; skipped)");
+            continue;
+        };
+        let iters = ex.iters_per_call() as f64;
+        let r = bench.run(&format!("{entry}_pjrt_call"), || {
+            black_box(ex.step().expect("step"));
+        });
+        let per_iter = r.mean.as_secs_f64() / iters;
+        let gbps = bytes / per_iter / 1e9;
+        println!(
+            "  → {iters:.0} iter/call ⇒ {:.2} ms/iter, effective STREAM bandwidth {gbps:.2} GB/s",
+            per_iter * 1e3
+        );
+    }
+
+    section("digest-checked execution (hot-path validation cost)");
+    let rt2 = Runtime::new(artifacts_dir()).expect("runtime");
+    let mut ex2 = StreamExecutor::new(rt2, 1, true).expect("executor");
+    bench.run("stream_step_with_digest_check", || {
+        black_box(ex2.step().expect("step"));
+    });
+}

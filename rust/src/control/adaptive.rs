@@ -1,0 +1,224 @@
+//! Gain-scheduled adaptive control — the paper's §6 future-work direction.
+//!
+//! > "controlling an application with varying resource usage patterns thus
+//! > requires *adaptation* — a control technique implying automatic tuning
+//! > of the controller parameters — to handle powercap-to-progress
+//! > behavior transitions between phases."
+//!
+//! This module implements the simplest sound version: an online estimator
+//! of the local gain `K̂_L` (recursive least squares on the linearized
+//! signals, with forgetting) feeding a gain-scheduled PI whose K_P/K_I are
+//! recomputed each period from the pole-placement formulas. When the
+//! workload switches between a memory-bound and a compute-bound phase
+//! (different static gain), the controller re-tunes within a few τ_obj
+//! instead of staying mis-tuned.
+
+use crate::control::pi::PiConfig;
+use crate::ident::DynamicModel;
+
+/// Recursive least-squares estimator of the local linear gain.
+///
+/// Eq. (2) gives `progress − K_L = K_L·pcap_L`, i.e.
+/// `progress = K_L · (1 + pcap_L)` — a pure-slope regression of the raw
+/// progress on the regressor `(1 + pcap_L)`, which avoids any intercept
+/// coupling with the estimate itself. Exponential forgetting keeps the
+/// estimator responsive to phase transitions.
+#[derive(Debug, Clone)]
+pub struct GainEstimator {
+    /// Current estimate K̂_L [Hz].
+    k_hat: f64,
+    /// Estimation covariance (scalar RLS).
+    p: f64,
+    /// Forgetting factor λ ∈ (0.9, 1).
+    forgetting: f64,
+}
+
+impl GainEstimator {
+    pub fn new(initial_gain: f64, forgetting: f64) -> Self {
+        assert!(initial_gain > 0.0);
+        assert!((0.5..1.0).contains(&forgetting));
+        GainEstimator {
+            k_hat: initial_gain,
+            p: 1.0,
+            forgetting,
+        }
+    }
+
+    pub fn gain(&self) -> f64 {
+        self.k_hat
+    }
+
+    /// One RLS update with regressor `phi = 1 + pcap_L` (∈ (0, 1)) and
+    /// observation `y = progress` [Hz].
+    pub fn update(&mut self, phi: f64, y: f64) {
+        if phi.abs() < 1e-9 {
+            return; // no excitation, no update
+        }
+        let denom = self.forgetting + phi * self.p * phi;
+        let gain = self.p * phi / denom;
+        let innovation = y - self.k_hat * phi;
+        self.k_hat += gain * innovation;
+        self.p = (self.p - gain * phi * self.p) / self.forgetting;
+        // Keep the estimate physically meaningful.
+        self.k_hat = self.k_hat.clamp(1.0, 1e4);
+        self.p = self.p.clamp(1e-6, 1e6);
+    }
+}
+
+/// PI controller whose gains are rescheduled from an online K̂_L estimate.
+#[derive(Debug, Clone)]
+pub struct AdaptivePi {
+    model: DynamicModel,
+    estimator: GainEstimator,
+    tau_obj: f64,
+    epsilon: f64,
+    pcap_min: f64,
+    pcap_max: f64,
+    prev_error: f64,
+    prev_pcap_l: f64,
+    prev_time: Option<f64>,
+}
+
+impl AdaptivePi {
+    pub fn new(model: DynamicModel, tau_obj: f64, epsilon: f64, pcap_min: f64, pcap_max: f64) -> Self {
+        assert!((0.0..=0.9).contains(&epsilon));
+        let k0 = model.static_model.k_l;
+        let prev_pcap_l = model.static_model.linearize_pcap(pcap_max);
+        AdaptivePi {
+            estimator: GainEstimator::new(k0, 0.98),
+            model,
+            tau_obj,
+            epsilon,
+            pcap_min,
+            pcap_max,
+            prev_error: 0.0,
+            prev_pcap_l,
+            prev_time: None,
+        }
+    }
+
+    /// Current (scheduled) gains, recomputed from K̂_L.
+    pub fn current_config(&self) -> PiConfig {
+        let k = self.estimator.gain();
+        PiConfig {
+            k_p: self.model.tau / (k * self.tau_obj),
+            k_i: 1.0 / (k * self.tau_obj),
+            tau_obj: self.tau_obj,
+            progress_max: self.progress_max(),
+            pcap_min: self.pcap_min,
+            pcap_max: self.pcap_max,
+        }
+    }
+
+    /// progress_max re-estimated with the adapted gain: the static shape
+    /// (α, β, a, b) is kept, the asymptote rescales with K̂_L.
+    fn progress_max(&self) -> f64 {
+        let s = &self.model.static_model;
+        let shape = 1.0 + s.linearize_pcap(self.pcap_max); // ∈ (0,1)
+        self.estimator.gain() * shape
+    }
+
+    pub fn setpoint(&self) -> f64 {
+        (1.0 - self.epsilon) * self.progress_max()
+    }
+
+    pub fn estimated_gain(&self) -> f64 {
+        self.estimator.gain()
+    }
+
+    /// One control period: update the estimate, reschedule gains, run the
+    /// Eq. (4) increment.
+    pub fn step(&mut self, t: f64, progress: f64) -> f64 {
+        let s = self.model.static_model.clone();
+        // Estimator sees the *previous* linearized command and the current
+        // linearized response (one-period transport delay).
+        self.estimator.update(1.0 + self.prev_pcap_l, progress);
+
+        let dt = match self.prev_time {
+            Some(t0) => (t - t0).max(1e-6),
+            None => self.tau_obj / 10.0,
+        };
+        self.prev_time = Some(t);
+
+        let cfg = self.current_config();
+        let error = self.setpoint() - progress;
+        let pcap_l = (cfg.k_i * dt + cfg.k_p) * error - cfg.k_p * self.prev_error + self.prev_pcap_l;
+        let raw = s.delinearize_pcap(pcap_l);
+        let clamped = raw.clamp(self.pcap_min, self.pcap_max);
+        self.prev_pcap_l = s.linearize_pcap(clamped);
+        self.prev_error = error;
+        clamped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::pi::tests::fitted_model;
+    use crate::sim::cluster::ClusterId;
+
+    #[test]
+    fn estimator_converges_on_static_data() {
+        let m = fitted_model(ClusterId::Gros);
+        let s = &m.static_model;
+        let mut est = GainEstimator::new(10.0, 0.95); // start badly wrong
+        for i in 0..400 {
+            let pcap = 40.0 + (i % 80) as f64;
+            let phi = 1.0 + s.linearize_pcap(pcap);
+            est.update(phi, s.predict(pcap));
+        }
+        assert!(
+            (est.gain() - s.k_l).abs() / s.k_l < 0.05,
+            "K̂_L {} vs {}",
+            est.gain(),
+            s.k_l
+        );
+    }
+
+    #[test]
+    fn estimator_tracks_gain_change() {
+        // Phase transition: gain halves mid-run (compute-bound phase).
+        let m = fitted_model(ClusterId::Dahu);
+        let s = &m.static_model;
+        let mut est = GainEstimator::new(s.k_l, 0.95);
+        for i in 0..600 {
+            let pcap = 40.0 + (i % 80) as f64;
+            let phi = 1.0 + s.linearize_pcap(pcap);
+            let k_true = if i < 300 { s.k_l } else { s.k_l / 2.0 };
+            est.update(phi, k_true * phi);
+        }
+        assert!(
+            (est.gain() - s.k_l / 2.0).abs() / (s.k_l / 2.0) < 0.1,
+            "did not track: {}",
+            est.gain()
+        );
+    }
+
+    #[test]
+    fn adaptive_converges_like_fixed_pi_nominal() {
+        let m = fitted_model(ClusterId::Gros);
+        let plant = fitted_model(ClusterId::Gros);
+        let mut ctl = AdaptivePi::new(m, 10.0, 0.15, 40.0, 120.0);
+        let mut progress = plant.static_model.predict(120.0);
+        for i in 0..300 {
+            let pcap = ctl.step(i as f64, progress);
+            progress = plant.predict_next(progress, pcap, 1.0);
+        }
+        assert!(
+            (progress - ctl.setpoint()).abs() < 0.5,
+            "progress {} setpoint {}",
+            progress,
+            ctl.setpoint()
+        );
+    }
+
+    #[test]
+    fn adaptive_output_stays_in_range() {
+        let m = fitted_model(ClusterId::Yeti);
+        let mut ctl = AdaptivePi::new(m, 10.0, 0.3, 40.0, 120.0);
+        for i in 0..200 {
+            let cap = ctl.step(i as f64, if i % 3 == 0 { 10.0 } else { 70.0 });
+            assert!((40.0..=120.0).contains(&cap));
+        }
+    }
+}

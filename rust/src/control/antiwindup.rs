@@ -1,0 +1,95 @@
+//! Anti-windup behaviour of the incremental PI — dedicated invariants.
+//!
+//! The Eq. (4) controller stores its state as the *linearized command of
+//! the previous period*; after actuator clamping the stored value is
+//! re-linearized from the clamped physical cap. This is "back-calculation"
+//! anti-windup in disguise: the integral state can never drift beyond what
+//! the actuator achieved, so release from a long saturation episode is
+//! immediate (no windup bleed-off transient).
+//!
+//! The module is test-only glue: it exposes small helpers used by the
+//! property tests and documents the invariant set.
+
+use crate::control::pi::PiController;
+
+/// Bounds of the stored linearized command for a given actuator range.
+/// `pcap_L` is monotone in `pcap`, so the achievable interval is
+/// `[lin(pcap_min), lin(pcap_max)]`.
+pub fn linearized_bounds(ctl: &PiController) -> (f64, f64) {
+    let s = &ctlmodel(ctl).static_model;
+    (
+        s.linearize_pcap(ctl.config().pcap_min),
+        s.linearize_pcap(ctl.config().pcap_max),
+    )
+}
+
+// PiController keeps its model private; a read accessor lives here to keep
+// pi.rs minimal. (Crate-internal.)
+fn ctlmodel(ctl: &PiController) -> &crate::ident::DynamicModel {
+    ctl.model()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::pi::tests::fitted_model;
+    use crate::control::pi::{PiConfig, PiController};
+    use crate::sim::cluster::ClusterId;
+    use crate::util::check;
+
+    fn controller(eps: f64) -> PiController {
+        let m = fitted_model(ClusterId::Gros);
+        let cfg = PiConfig::from_model(&m, 10.0, 40.0, 120.0);
+        PiController::new(m, cfg, eps)
+    }
+
+    #[test]
+    fn saturation_release_is_immediate() {
+        // Saturate high for 500 s with an impossible setpoint error, then
+        // feed on-setpoint measurements: the cap must leave the rail within
+        // a few periods (windup would hold it at the rail for ~500 s).
+        let mut ctl = controller(0.15);
+        let mut t = 0.0;
+        for _ in 0..500 {
+            ctl.step(t, 1.0); // far below setpoint → rail high
+            t += 1.0;
+        }
+        let sp = ctl.setpoint();
+        let mut left_rail_after = None;
+        for i in 0..20 {
+            let cap = ctl.step(t, sp + 2.0); // above setpoint → must come down
+            t += 1.0;
+            if cap < 119.0 {
+                left_rail_after = Some(i);
+                break;
+            }
+        }
+        assert!(
+            left_rail_after.is_some() && left_rail_after.unwrap() <= 3,
+            "windup: cap stuck at rail for {left_rail_after:?} periods"
+        );
+    }
+
+    #[test]
+    fn stored_state_always_achievable() {
+        // Property: after any measurement sequence, the internal linearized
+        // command stays within the achievable actuator interval.
+        check::check(42, 64, |rng| {
+            let eps = rng.uniform(0.0, 0.5);
+            let n = 50 + rng.below(100) as usize;
+            let meas: Vec<f64> = (0..n).map(|_| rng.uniform(-10.0, 100.0)).collect();
+            (eps, meas)
+        }, |(eps, meas)| {
+            let mut ctl = controller(*eps);
+            let (lo, hi) = linearized_bounds(&ctl);
+            for (i, &m) in meas.iter().enumerate() {
+                ctl.step(i as f64, m);
+                let state = ctl.stored_pcap_l();
+                if !(state >= lo - 1e-9 && state <= hi + 1e-9) {
+                    return Err(format!("state {state} outside [{lo}, {hi}]"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

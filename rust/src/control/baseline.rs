@@ -1,0 +1,81 @@
+//! Baseline power-management policies the evaluation compares against.
+//!
+//! The paper's baseline is the uncontrolled execution (ε = 0, cap at the
+//! upper limit, §5.2). We additionally implement the classic *static*
+//! power-capping policy of the related work (§6: "static schemes used at
+//! the beginning of a job"): pick one cap at job start and never adapt.
+//! Ablation benches use these to show what the feedback loop buys.
+
+/// A power-management policy: one cap decision per control period.
+pub trait Policy {
+    /// `t` is the sample time [s]; `progress` the Eq. (1) measurement [Hz].
+    fn decide(&mut self, t: f64, progress: f64) -> f64;
+    /// Human-readable name for records/benches.
+    fn name(&self) -> String;
+}
+
+/// Uncontrolled baseline: cap pinned at the maximum (the paper's ε = 0
+/// reference for Fig. 7's "baseline execution").
+#[derive(Debug, Clone)]
+pub struct Uncontrolled {
+    pub pcap_max: f64,
+}
+
+impl Policy for Uncontrolled {
+    fn decide(&mut self, _t: f64, _progress: f64) -> f64 {
+        self.pcap_max
+    }
+    fn name(&self) -> String {
+        "uncontrolled".to_string()
+    }
+}
+
+/// Static cap chosen at job start (related-work §6): no runtime feedback,
+/// so it cannot react to phases or disturbances.
+#[derive(Debug, Clone)]
+pub struct StaticCap {
+    pub pcap: f64,
+}
+
+impl Policy for StaticCap {
+    fn decide(&mut self, _t: f64, _progress: f64) -> f64 {
+        self.pcap
+    }
+    fn name(&self) -> String {
+        format!("static-{}W", self.pcap)
+    }
+}
+
+/// Adapter making [`crate::control::pi::PiController`] a [`Policy`].
+pub struct PiPolicy(pub crate::control::pi::PiController);
+
+impl Policy for PiPolicy {
+    fn decide(&mut self, t: f64, progress: f64) -> f64 {
+        self.0.step(t, progress)
+    }
+    fn name(&self) -> String {
+        format!("pi-eps{:.2}", self.0.epsilon())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uncontrolled_pins_max() {
+        let mut u = Uncontrolled { pcap_max: 120.0 };
+        for t in 0..10 {
+            assert_eq!(u.decide(t as f64, 3.0), 120.0);
+        }
+        assert_eq!(u.name(), "uncontrolled");
+    }
+
+    #[test]
+    fn static_cap_constant() {
+        let mut s = StaticCap { pcap: 75.0 };
+        assert_eq!(s.decide(0.0, 10.0), 75.0);
+        assert_eq!(s.decide(5.0, 90.0), 75.0);
+        assert_eq!(s.name(), "static-75W");
+    }
+}

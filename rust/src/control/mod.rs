@@ -1,0 +1,18 @@
+//! Controllers (paper §4.5) and baselines.
+//!
+//! * [`pi`] — the paper's PI controller on linearized signals (Eq. 4) with
+//!   pole-placement tuning;
+//! * [`antiwindup`] — the saturation/anti-windup invariants;
+//! * [`adaptive`] — gain-scheduled extension for phase transitions (the
+//!   §6 future-work direction, exercised by the phases workload);
+//! * [`baseline`] — uncontrolled and static-cap policies for the
+//!   evaluation's comparisons.
+
+pub mod adaptive;
+pub mod antiwindup;
+pub mod baseline;
+pub mod pi;
+
+pub use adaptive::AdaptivePi;
+pub use baseline::{Policy, StaticCap, Uncontrolled};
+pub use pi::{PiConfig, PiController};

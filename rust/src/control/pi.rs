@@ -1,0 +1,319 @@
+//! The paper's PI controller (§4.5, Eq. 4).
+//!
+//! Incremental (velocity-form) PI on the *linearized* signals of Eq. (2):
+//!
+//! ```text
+//! e(tᵢ)      = (1 − ε)·progress_max − progress(tᵢ)
+//! pcap_L(tᵢ) = (K_I·Δtᵢ + K_P)·e(tᵢ) − K_P·e(tᵢ₋₁) + pcap_L(tᵢ₋₁)
+//! ```
+//!
+//! with pole-placement gains `K_P = τ/(K_L·τ_obj)`, `K_I = 1/(K_L·τ_obj)`
+//! and the non-aggressive tuning `τ_obj = 10 s ≫ τ` (Åström & Hägglund).
+//! The physical cap is recovered through the inverse of Eq. (2) and clamped
+//! to the actuator range; because the controller is incremental and the
+//! stored state is the *linearized* command, clamping doubles as anti-windup
+//! (the stored command never runs away beyond the saturation bound — see
+//! `antiwindup.rs` for the tests that pin this behaviour).
+
+use crate::ident::DynamicModel;
+
+/// PI gains + references, derived from a fitted [`DynamicModel`].
+#[derive(Debug, Clone)]
+pub struct PiConfig {
+    /// Proportional gain K_P = τ/(K_L·τ_obj).
+    pub k_p: f64,
+    /// Integral gain K_I = 1/(K_L·τ_obj).
+    pub k_i: f64,
+    /// Desired closed-loop time constant τ_obj [s].
+    pub tau_obj: f64,
+    /// Estimated maximum progress (at pcap_max) [Hz].
+    pub progress_max: f64,
+    /// Actuator range [W].
+    pub pcap_min: f64,
+    pub pcap_max: f64,
+}
+
+impl PiConfig {
+    /// Pole-placement tuning from a fitted model (paper §4.5). The paper
+    /// uses τ_obj = 10 s (> 10·τ): non-aggressive, no oscillation.
+    pub fn from_model(model: &DynamicModel, tau_obj: f64, pcap_min: f64, pcap_max: f64) -> Self {
+        assert!(tau_obj > 0.0 && pcap_max > pcap_min);
+        let k_l = model.static_model.k_l;
+        PiConfig {
+            k_p: model.tau / (k_l * tau_obj),
+            k_i: 1.0 / (k_l * tau_obj),
+            tau_obj,
+            progress_max: model.static_model.progress_max(pcap_max),
+            pcap_min,
+            pcap_max,
+        }
+    }
+}
+
+/// Controller state across sampling periods.
+#[derive(Debug, Clone)]
+pub struct PiController {
+    config: PiConfig,
+    model: DynamicModel,
+    /// Degradation factor ε ∈ [0, 0.5]: the only user knob (§5.2).
+    epsilon: f64,
+    /// Previous error e(tᵢ₋₁).
+    prev_error: f64,
+    /// Previous linearized command pcap_L(tᵢ₋₁).
+    prev_pcap_l: f64,
+    /// Previous sample time.
+    prev_time: Option<f64>,
+}
+
+impl PiController {
+    /// `epsilon` is the tolerable performance degradation (0 = none).
+    pub fn new(model: DynamicModel, config: PiConfig, epsilon: f64) -> Self {
+        assert!((0.0..=0.9).contains(&epsilon), "epsilon {epsilon} out of range");
+        // Experiments start with the cap at its upper limit (§5.2).
+        let prev_pcap_l = model.static_model.linearize_pcap(config.pcap_max);
+        PiController {
+            config,
+            model,
+            epsilon,
+            prev_error: 0.0,
+            prev_pcap_l,
+            prev_time: None,
+        }
+    }
+
+    /// The progress setpoint `(1 − ε)·progress_max` [Hz].
+    pub fn setpoint(&self) -> f64 {
+        (1.0 - self.epsilon) * self.config.progress_max
+    }
+
+    pub fn epsilon(&self) -> f64 {
+        self.epsilon
+    }
+
+    pub fn config(&self) -> &PiConfig {
+        &self.config
+    }
+
+    /// The fitted model the controller was tuned from.
+    pub fn model(&self) -> &DynamicModel {
+        &self.model
+    }
+
+    /// Internal linearized-command state (exposed for the anti-windup
+    /// invariants in `antiwindup.rs`).
+    pub fn stored_pcap_l(&self) -> f64 {
+        self.prev_pcap_l
+    }
+
+    /// Change ε at runtime (used by the phase-adaptive extension).
+    pub fn set_epsilon(&mut self, epsilon: f64) {
+        assert!((0.0..=0.9).contains(&epsilon));
+        self.epsilon = epsilon;
+    }
+
+    /// One control period: measured `progress` at time `t` → new power cap
+    /// [W], already clamped to the actuator range.
+    pub fn step(&mut self, t: f64, progress: f64) -> f64 {
+        let dt = match self.prev_time {
+            Some(t0) => (t - t0).max(1e-6),
+            None => self.config.tau_obj / 10.0, // first sample: nominal period
+        };
+        self.prev_time = Some(t);
+
+        let error = self.setpoint() - progress;
+        // Eq. (4), velocity form on linearized command.
+        let pcap_l = (self.config.k_i * dt + self.config.k_p) * error
+            - self.config.k_p * self.prev_error
+            + self.prev_pcap_l;
+
+        // Inverse linearization to a physical cap, then actuator clamp.
+        let raw = self.model.static_model.delinearize_pcap(pcap_l);
+        let clamped = raw.clamp(self.config.pcap_min, self.config.pcap_max);
+
+        // Anti-windup: store the *achievable* linearized command so the
+        // integral term cannot run away while saturated.
+        self.prev_pcap_l = self.model.static_model.linearize_pcap(clamped);
+        self.prev_error = error;
+        clamped
+    }
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+    use crate::ident::static_model::{StaticModel, StaticPoint};
+    use crate::sim::cluster::{Cluster, ClusterId};
+
+    pub fn fitted_model(id: ClusterId) -> DynamicModel {
+        let c = Cluster::get(id);
+        let points: Vec<StaticPoint> = (0..60)
+            .map(|i| {
+                let pcap = 40.0 + i as f64 * (80.0 / 59.0);
+                StaticPoint {
+                    pcap,
+                    power: c.expected_power(pcap),
+                    progress: c.static_progress(pcap),
+                }
+            })
+            .collect();
+        DynamicModel {
+            static_model: StaticModel::fit(&points),
+            tau: c.tau,
+            rmse: 0.0,
+        }
+    }
+
+    fn controller(id: ClusterId, epsilon: f64) -> PiController {
+        let m = fitted_model(id);
+        let cfg = PiConfig::from_model(&m, 10.0, 40.0, 120.0);
+        PiController::new(m, cfg, epsilon)
+    }
+
+    #[test]
+    fn gains_match_pole_placement_formulas() {
+        let m = fitted_model(ClusterId::Gros);
+        let cfg = PiConfig::from_model(&m, 10.0, 40.0, 120.0);
+        let k_l = m.static_model.k_l;
+        assert!((cfg.k_p - m.tau / (k_l * 10.0)).abs() < 1e-15);
+        assert!((cfg.k_i - 1.0 / (k_l * 10.0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn setpoint_scales_with_epsilon() {
+        let c = controller(ClusterId::Gros, 0.15);
+        let c0 = controller(ClusterId::Gros, 0.0);
+        assert!((c.setpoint() - 0.85 * c0.setpoint()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn output_always_in_actuator_range() {
+        let mut c = controller(ClusterId::Dahu, 0.2);
+        // Feed pathological progress values; cap must stay in range.
+        for (i, p) in [0.0, -5.0, 1000.0, 42.0, f64::MIN_POSITIVE, 3.0]
+            .iter()
+            .cycle()
+            .take(200)
+            .enumerate()
+        {
+            let cap = c.step(i as f64, *p);
+            assert!((40.0..=120.0).contains(&cap), "cap {cap}");
+        }
+    }
+
+    #[test]
+    fn closed_loop_with_true_plant_converges() {
+        // Simulate the paper's nominal case: plant = fitted model (gros).
+        let mut ctl = controller(ClusterId::Gros, 0.15);
+        let plant = fitted_model(ClusterId::Gros); // same dynamics
+        let mut progress = plant.static_model.predict(120.0);
+        let mut pcap = 120.0;
+        let dt = 1.0;
+        for i in 0..200 {
+            pcap = ctl.step(i as f64 * dt, progress);
+            progress = plant.predict_next(progress, pcap, dt);
+        }
+        let setpoint = ctl.setpoint();
+        assert!(
+            (progress - setpoint).abs() < 0.05,
+            "converged to {progress}, setpoint {setpoint}"
+        );
+        // Energy must actually be saved: final cap below max.
+        assert!(pcap < 100.0, "final cap {pcap} did not decrease");
+    }
+
+    #[test]
+    fn no_overshoot_below_setpoint() {
+        // Non-aggressive tuning (τ_obj = 10 s): progress must descend
+        // smoothly to the setpoint without undershooting it (Fig. 6a:
+        // "neither oscillation nor degradation of the progress below the
+        // allowed value").
+        let mut ctl = controller(ClusterId::Gros, 0.15);
+        let plant = fitted_model(ClusterId::Gros);
+        let mut progress = plant.static_model.predict(120.0);
+        let setpoint = ctl.setpoint();
+        for i in 0..300 {
+            let pcap = ctl.step(i as f64, progress);
+            progress = plant.predict_next(progress, pcap, 1.0);
+            assert!(
+                progress > setpoint - 0.2,
+                "undershoot at step {i}: {progress} < {setpoint}"
+            );
+        }
+    }
+
+    #[test]
+    fn epsilon_zero_keeps_full_cap() {
+        let mut ctl = controller(ClusterId::Gros, 0.0);
+        let plant = fitted_model(ClusterId::Gros);
+        let mut progress = plant.static_model.predict(120.0);
+        let mut min_cap = f64::INFINITY;
+        for i in 0..100 {
+            let pcap = ctl.step(i as f64, progress);
+            progress = plant.predict_next(progress, pcap, 1.0);
+            min_cap = min_cap.min(pcap);
+        }
+        // With ε=0 the setpoint equals max progress: cap stays high.
+        assert!(min_cap > 100.0, "cap fell to {min_cap} under ε=0");
+    }
+
+    #[test]
+    fn larger_epsilon_lower_final_cap() {
+        let run = |eps: f64| {
+            let mut ctl = controller(ClusterId::Dahu, eps);
+            let plant = fitted_model(ClusterId::Dahu);
+            let mut progress = plant.static_model.predict(120.0);
+            let mut pcap = 120.0;
+            for i in 0..300 {
+                pcap = ctl.step(i as f64, progress);
+                progress = plant.predict_next(progress, pcap, 1.0);
+            }
+            pcap
+        };
+        let c10 = run(0.10);
+        let c30 = run(0.30);
+        assert!(c30 < c10, "ε=0.3 cap {c30} !< ε=0.1 cap {c10}");
+    }
+
+    #[test]
+    fn recovers_from_disturbance() {
+        // Clamp progress to 10 Hz for a while (yeti drop), then release:
+        // the controller must push the cap up during the drop and settle
+        // back afterwards.
+        let mut ctl = controller(ClusterId::Gros, 0.15);
+        let plant = fitted_model(ClusterId::Gros);
+        let mut progress = plant.static_model.predict(120.0);
+        let mut t = 0.0;
+        for _ in 0..100 {
+            let pcap = ctl.step(t, progress);
+            progress = plant.predict_next(progress, pcap, 1.0);
+            t += 1.0;
+        }
+        // Drop event: measured progress pinned at 10 Hz.
+        let mut cap_during_drop = 0.0;
+        for _ in 0..30 {
+            cap_during_drop = ctl.step(t, 10.0);
+            t += 1.0;
+        }
+        assert!(
+            cap_during_drop > 115.0,
+            "controller should push cap up during drop, got {cap_during_drop}"
+        );
+        // Release: must re-converge without divergence (anti-windup).
+        for _ in 0..150 {
+            let pcap = ctl.step(t, progress);
+            progress = plant.predict_next(progress, pcap, 1.0);
+            t += 1.0;
+        }
+        assert!(
+            (progress - ctl.setpoint()).abs() < 0.3,
+            "did not re-converge: {progress} vs {}",
+            ctl.setpoint()
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn invalid_epsilon_panics() {
+        controller(ClusterId::Gros, 0.95);
+    }
+}

@@ -1,0 +1,258 @@
+//! Experiment orchestration: open-loop (characterization/identification)
+//! and closed-loop (evaluation) runs of the simulated node under the NRM
+//! control loop, with repetition and splittable seeding.
+//!
+//! This is the §4.1 "characterization vs evaluation" distinction made
+//! executable: the same sampling loop either replays a predefined
+//! [`Plan`] (open loop) or lets a [`Policy`] react to the Eq. (1) progress
+//! signal (closed loop).
+
+use crate::control::baseline::Policy;
+use crate::coordinator::progress::ProgressAggregator;
+use crate::coordinator::records::RunRecord;
+use crate::ident::signals::Plan;
+use crate::sim::cluster::Cluster;
+use crate::sim::node::NodeSim;
+
+/// Common run parameters.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Control/sampling period Δt [s] (the paper samples at 1 s).
+    pub sample_period: f64,
+    /// Benchmark length: total heartbeats to complete (closed loop).
+    pub total_beats: u64,
+    /// Hard timeout [s] (closed loop safety net).
+    pub max_time: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            sample_period: 1.0,
+            // STREAM 5.10 in the paper runs 10,000 iterations; one
+            // heartbeat per loop of the four kernels.
+            total_beats: 10_000,
+            max_time: 3_600.0,
+        }
+    }
+}
+
+/// Execute an open-loop plan (characterization mode): the resource manager
+/// follows the schedule; the benchmark runs for the plan's duration.
+pub fn run_open_loop(cluster: &Cluster, plan: &Plan, config: &RunConfig, seed: u64) -> RunRecord {
+    let mut node = NodeSim::new(cluster.clone(), seed);
+    let mut agg = ProgressAggregator::new();
+    let mut rec = RunRecord {
+        cluster: cluster.id.name().to_string(),
+        policy: "plan".to_string(),
+        seed,
+        epsilon: f64::NAN,
+        setpoint: f64::NAN,
+        ..Default::default()
+    };
+
+    node.set_pcap(plan.pcap_at(0.0));
+    let mut t = 0.0;
+    let periods = (plan.duration / config.sample_period).round() as usize;
+    for _ in 0..periods {
+        let pcap = plan.pcap_at(t);
+        node.set_pcap(pcap);
+        let sensors = node.step(config.sample_period);
+        agg.ingest(&sensors.heartbeats);
+        let progress = agg.sample();
+        t = sensors.time;
+        rec.pcap.push(t, pcap);
+        rec.power.push(t, sensors.power);
+        rec.progress.push(t, progress);
+        rec.true_progress.push(t, sensors.true_progress);
+    }
+    rec.exec_time = t;
+    rec.energy = node.step(1e-6).energy;
+    rec.beats = node.beats();
+    rec.completed = true;
+    rec
+}
+
+/// Execute a closed-loop run (evaluation mode): `policy` chooses the cap
+/// each period from the Eq. (1) progress; the run ends when the benchmark
+/// completes `total_beats` (or times out).
+pub fn run_closed_loop(
+    cluster: &Cluster,
+    policy: &mut dyn Policy,
+    setpoint: f64,
+    epsilon: f64,
+    config: &RunConfig,
+    seed: u64,
+) -> RunRecord {
+    let mut node = NodeSim::new(cluster.clone(), seed);
+    let mut agg = ProgressAggregator::new();
+    let mut rec = RunRecord {
+        cluster: cluster.id.name().to_string(),
+        policy: policy.name(),
+        seed,
+        epsilon,
+        setpoint,
+        ..Default::default()
+    };
+
+    // §5.2: "The initial powercap is set at its upper limit."
+    node.set_pcap(cluster.pcap_max);
+    let mut finish_time = None;
+    loop {
+        let sensors = node.step(config.sample_period);
+        // Record the exact completion timestamp from the heartbeat stream.
+        if finish_time.is_none() && node.beats() >= config.total_beats {
+            let overshoot = (node.beats() - config.total_beats) as usize;
+            let idx = sensors.heartbeats.len().saturating_sub(overshoot + 1);
+            finish_time = sensors.heartbeats.get(idx).copied().or(Some(sensors.time));
+        }
+        agg.ingest(&sensors.heartbeats);
+        let progress = agg.sample();
+        let t = sensors.time;
+        rec.power.push(t, sensors.power);
+        rec.progress.push(t, progress);
+        rec.true_progress.push(t, sensors.true_progress);
+
+        if finish_time.is_some() || t >= config.max_time {
+            rec.pcap.push(t, node.pcap());
+            rec.energy = sensors.energy;
+            break;
+        }
+        let pcap = policy.decide(t, progress);
+        node.set_pcap(pcap);
+        rec.pcap.push(t, pcap);
+    }
+    rec.completed = finish_time.is_some();
+    rec.exec_time = finish_time.unwrap_or(config.max_time);
+    rec.beats = node.beats().min(config.total_beats);
+    rec
+}
+
+/// Repeat a closed-loop configuration `reps` times with split seeds.
+pub fn repeat_closed_loop<F>(
+    cluster: &Cluster,
+    reps: usize,
+    config: &RunConfig,
+    root_seed: u64,
+    mut make_policy: F,
+) -> Vec<RunRecord>
+where
+    F: FnMut() -> (Box<dyn Policy>, f64, f64), // (policy, setpoint, epsilon)
+{
+    let mut rng = crate::util::rng::Pcg64::seeded(root_seed);
+    (0..reps)
+        .map(|i| {
+            let (mut policy, setpoint, epsilon) = make_policy();
+            let seed = rng.split(i as u64).next_u64();
+            run_closed_loop(cluster, policy.as_mut(), setpoint, epsilon, config, seed)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::baseline::{PiPolicy, Uncontrolled};
+    use crate::control::pi::tests::fitted_model;
+    use crate::control::pi::{PiConfig, PiController};
+    use crate::ident::signals;
+    use crate::sim::cluster::{Cluster, ClusterId};
+
+    fn short_config() -> RunConfig {
+        RunConfig {
+            sample_period: 1.0,
+            total_beats: 1500,
+            max_time: 600.0,
+        }
+    }
+
+    #[test]
+    fn open_loop_staircase_records_levels() {
+        let c = Cluster::get(ClusterId::Gros);
+        let plan = signals::staircase(40.0, 120.0, 20.0, 20.0);
+        let rec = run_open_loop(&c, &plan, &short_config(), 1);
+        assert_eq!(rec.pcap.len(), 100);
+        // Progress increases with the staircase overall.
+        let early = rec.true_progress.values[5];
+        let late = rec.true_progress.values[95];
+        assert!(late > early * 1.5, "staircase effect missing: {early} → {late}");
+        assert!(rec.energy > 0.0);
+        assert!(rec.beats > 0);
+    }
+
+    #[test]
+    fn uncontrolled_run_completes_fast() {
+        let c = Cluster::get(ClusterId::Gros);
+        let mut p = Uncontrolled { pcap_max: 120.0 };
+        let rec = run_closed_loop(&c, &mut p, f64::NAN, 0.0, &short_config(), 2);
+        assert!(rec.completed);
+        // ~1500 beats at ~25 Hz ⇒ ~60 s.
+        assert!((40.0..90.0).contains(&rec.exec_time), "{}", rec.exec_time);
+        assert_eq!(rec.beats, 1500);
+    }
+
+    #[test]
+    fn pi_run_saves_energy_with_bounded_slowdown() {
+        let c = Cluster::get(ClusterId::Gros);
+        let cfg = short_config();
+
+        let mut base = Uncontrolled { pcap_max: 120.0 };
+        let base_rec = run_closed_loop(&c, &mut base, f64::NAN, 0.0, &cfg, 3);
+
+        let m = fitted_model(ClusterId::Gros);
+        let pic = PiConfig::from_model(&m, 10.0, 40.0, 120.0);
+        let ctl = PiController::new(m, pic, 0.15);
+        let sp = ctl.setpoint();
+        let mut pi = PiPolicy(ctl);
+        let rec = run_closed_loop(&c, &mut pi, sp, 0.15, &cfg, 3);
+
+        assert!(rec.completed);
+        assert!(
+            rec.energy < base_rec.energy,
+            "no energy saved: {} vs {}",
+            rec.energy,
+            base_rec.energy
+        );
+        let slowdown = rec.exec_time / base_rec.exec_time;
+        assert!(
+            slowdown < 1.35,
+            "slowdown {slowdown} too large for ε=0.15"
+        );
+    }
+
+    #[test]
+    fn timeout_marks_incomplete() {
+        let c = Cluster::get(ClusterId::Gros);
+        let mut p = Uncontrolled { pcap_max: 120.0 };
+        let cfg = RunConfig {
+            sample_period: 1.0,
+            total_beats: 1_000_000,
+            max_time: 10.0,
+        };
+        let rec = run_closed_loop(&c, &mut p, f64::NAN, 0.0, &cfg, 4);
+        assert!(!rec.completed);
+        assert_eq!(rec.exec_time, 10.0);
+    }
+
+    #[test]
+    fn repeat_gives_distinct_seeds() {
+        let c = Cluster::get(ClusterId::Dahu);
+        let recs = repeat_closed_loop(&c, 3, &short_config(), 99, || {
+            (Box::new(Uncontrolled { pcap_max: 120.0 }), f64::NAN, 0.0)
+        });
+        assert_eq!(recs.len(), 3);
+        assert!(recs[0].seed != recs[1].seed && recs[1].seed != recs[2].seed);
+        // Different seeds → different exec times (noise).
+        assert!(recs[0].exec_time != recs[1].exec_time);
+    }
+
+    #[test]
+    fn completion_time_interpolated_from_heartbeat() {
+        let c = Cluster::get(ClusterId::Gros);
+        let mut p = Uncontrolled { pcap_max: 120.0 };
+        let rec = run_closed_loop(&c, &mut p, f64::NAN, 0.0, &short_config(), 5);
+        // exec_time is a heartbeat timestamp, not a period boundary: it
+        // should not be an integer multiple of the period (almost surely).
+        assert!((rec.exec_time.fract()).abs() > 1e-9);
+    }
+}

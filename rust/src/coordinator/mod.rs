@@ -1,0 +1,19 @@
+//! The NRM-style coordinator — the L3 system the paper builds on (§2.1).
+//!
+//! * [`transport`] — heartbeat delivery (in-proc channel, Unix socket);
+//! * [`progress`] — the Eq. (1) median-heartrate progress metric;
+//! * [`nrm`] — the daemon: monitoring/actuation bookkeeping + synchronous
+//!   control loop (the live path);
+//! * [`experiment`] — lockstep open-/closed-loop experiment drivers over
+//!   the simulated node (the campaign path);
+//! * [`records`] — run records with CSV/JSON export.
+
+pub mod experiment;
+pub mod nrm;
+pub mod progress;
+pub mod records;
+pub mod transport;
+
+pub use experiment::{run_closed_loop, run_open_loop, RunConfig};
+pub use progress::ProgressAggregator;
+pub use records::RunRecord;

@@ -1,0 +1,155 @@
+//! The progress metric — Eq. (1) of the paper.
+//!
+//! ```text
+//! progress(tᵢ) = median over { 1/(tₖ − tₖ₋₁) : tₖ ∈ [tᵢ₋₁, tᵢ) }
+//! ```
+//!
+//! Heartbeats arrive continuously; at each sampling time the aggregator
+//! computes the median of the inter-arrival *frequencies* observed since
+//! the previous sampling time. The median (not the mean) makes the signal
+//! robust to straggler beats — an explicit design choice in §4.2.
+
+use crate::util::stats;
+
+/// Aggregates raw heartbeat timestamps into the Eq. (1) progress signal.
+#[derive(Debug, Clone, Default)]
+pub struct ProgressAggregator {
+    /// Timestamp of the last heartbeat seen (spans window boundaries, so
+    /// the first beat of a window still yields an interval).
+    last_beat: Option<f64>,
+    /// Inter-arrival frequencies accumulated in the current window.
+    freqs: Vec<f64>,
+    /// Scratch buffer reused by the in-place median (hot path: avoids an
+    /// allocation per control period).
+    scratch: Vec<f64>,
+    /// Total beats ever ingested.
+    total_beats: u64,
+}
+
+impl ProgressAggregator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Ingest a batch of heartbeat timestamps (must be globally monotone).
+    pub fn ingest(&mut self, beats: &[f64]) {
+        for &t in beats {
+            if let Some(prev) = self.last_beat {
+                let dt = t - prev;
+                if dt > 0.0 {
+                    self.freqs.push(1.0 / dt);
+                } else {
+                    // Coincident beats: infinitely fast interval — clamp to
+                    // a large frequency rather than poisoning the median.
+                    self.freqs.push(1e9);
+                }
+            }
+            self.last_beat = Some(t);
+            self.total_beats += 1;
+        }
+    }
+
+    /// Close the current window and return `progress(tᵢ)` [Hz]. Returns
+    /// 0.0 for an empty window (no beats: the application made no
+    /// observable progress, and the controller should push power up).
+    pub fn sample(&mut self) -> f64 {
+        if self.freqs.is_empty() {
+            return 0.0;
+        }
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&self.freqs);
+        self.freqs.clear();
+        stats::median_inplace(&mut self.scratch)
+    }
+
+    /// Beats in the currently open window.
+    pub fn pending(&self) -> usize {
+        self.freqs.len()
+    }
+
+    pub fn total_beats(&self) -> u64 {
+        self.total_beats
+    }
+
+    /// Timestamp of the most recent beat.
+    pub fn last_beat(&self) -> Option<f64> {
+        self.last_beat
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn beats_at_rate(t0: f64, rate: f64, n: usize) -> Vec<f64> {
+        (1..=n).map(|i| t0 + i as f64 / rate).collect()
+    }
+
+    #[test]
+    fn steady_rate_recovered() {
+        let mut agg = ProgressAggregator::new();
+        agg.ingest(&beats_at_rate(0.0, 25.0, 25));
+        let p = agg.sample();
+        assert!((p - 25.0).abs() < 1e-9, "progress {p}");
+    }
+
+    #[test]
+    fn median_robust_to_straggler() {
+        // One 10× straggler interval must not move the median much —
+        // the §4.2 motivation for Eq. (1).
+        let mut agg = ProgressAggregator::new();
+        let mut ts = beats_at_rate(0.0, 20.0, 20);
+        // Inject a straggler: delay one beat by 10 intervals.
+        ts[10] += 0.5;
+        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        agg.ingest(&ts);
+        let p = agg.sample();
+        assert!((p - 20.0).abs() < 2.0, "median progress {p} polluted");
+    }
+
+    #[test]
+    fn window_boundary_interval_preserved() {
+        // The first beat of window 2 pairs with the last beat of window 1.
+        let mut agg = ProgressAggregator::new();
+        agg.ingest(&[0.9]);
+        let _ = agg.sample();
+        agg.ingest(&beats_at_rate(0.9, 10.0, 10));
+        let p = agg.sample();
+        assert!((p - 10.0).abs() < 1e-9, "progress {p}");
+    }
+
+    #[test]
+    fn empty_window_zero() {
+        let mut agg = ProgressAggregator::new();
+        agg.ingest(&beats_at_rate(0.0, 5.0, 5));
+        let _ = agg.sample();
+        assert_eq!(agg.sample(), 0.0); // nothing since last sample
+    }
+
+    #[test]
+    fn single_beat_first_window_zero() {
+        // One beat ever: no interval yet.
+        let mut agg = ProgressAggregator::new();
+        agg.ingest(&[1.0]);
+        assert_eq!(agg.sample(), 0.0);
+    }
+
+    #[test]
+    fn coincident_beats_do_not_poison() {
+        let mut agg = ProgressAggregator::new();
+        agg.ingest(&[1.0, 1.0, 1.1, 1.2, 1.3, 1.4, 1.5, 1.6, 1.7, 1.8, 1.9]);
+        let p = agg.sample();
+        assert!((p - 10.0).abs() < 1.0, "progress {p}");
+    }
+
+    #[test]
+    fn counts_tracked() {
+        let mut agg = ProgressAggregator::new();
+        agg.ingest(&beats_at_rate(0.0, 10.0, 7));
+        assert_eq!(agg.total_beats(), 7);
+        assert_eq!(agg.pending(), 6); // first beat has no predecessor
+        let _ = agg.sample();
+        assert_eq!(agg.pending(), 0);
+        assert_eq!(agg.last_beat(), Some(0.7));
+    }
+}

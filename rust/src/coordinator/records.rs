@@ -1,0 +1,154 @@
+//! Run records: everything one experiment run produces, with CSV/JSON
+//! export. These are the raw data behind every reproduced figure.
+
+use crate::util::csv::Table;
+use crate::util::json::Json;
+use crate::util::timeseries::TimeSeries;
+
+/// Complete record of a single benchmark execution under some policy.
+#[derive(Debug, Clone, Default)]
+pub struct RunRecord {
+    /// Cluster name.
+    pub cluster: String,
+    /// Policy name ("uncontrolled", "pi-eps0.15", "plan:staircase", ...).
+    pub policy: String,
+    /// Root RNG seed of the run.
+    pub seed: u64,
+    /// Requested degradation ε (NaN for open-loop runs).
+    pub epsilon: f64,
+    /// Progress setpoint [Hz] (NaN for open-loop runs).
+    pub setpoint: f64,
+    /// Sampled signals, one row per control period.
+    pub pcap: TimeSeries,
+    pub power: TimeSeries,
+    pub progress: TimeSeries,
+    /// Oracle true progress (sim only; empty on real hardware).
+    pub true_progress: TimeSeries,
+    /// Total benchmark execution time [s].
+    pub exec_time: f64,
+    /// Total energy consumed [J].
+    pub energy: f64,
+    /// Total heartbeats observed.
+    pub beats: u64,
+    /// Whether the workload ran to completion (vs timeout).
+    pub completed: bool,
+}
+
+impl RunRecord {
+    /// Per-period samples as a CSV table (`fig3`/`fig5`/`fig6a` format).
+    pub fn to_table(&self) -> Table {
+        let mut t = Table::new(vec![
+            "time_s",
+            "pcap_w",
+            "power_w",
+            "progress_hz",
+            "true_progress_hz",
+        ]);
+        for i in 0..self.pcap.len() {
+            let tp = self
+                .true_progress
+                .values
+                .get(i)
+                .copied()
+                .unwrap_or(f64::NAN);
+            t.push_f64(&[
+                self.pcap.times[i],
+                self.pcap.values[i],
+                self.power.values.get(i).copied().unwrap_or(f64::NAN),
+                self.progress.values.get(i).copied().unwrap_or(f64::NAN),
+                tp,
+            ]);
+        }
+        t
+    }
+
+    /// Scalar summary (one Fig. 7 point).
+    pub fn summary(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("cluster", self.cluster.as_str())
+            .set("policy", self.policy.as_str())
+            .set("seed", self.seed)
+            .set("epsilon", self.epsilon)
+            .set("setpoint_hz", self.setpoint)
+            .set("exec_time_s", self.exec_time)
+            .set("energy_j", self.energy)
+            .set("beats", self.beats)
+            .set("completed", self.completed)
+            .set("mean_pcap_w", self.pcap.time_mean())
+            .set("mean_power_w", self.power.time_mean())
+            .set("mean_progress_hz", self.progress.time_mean());
+        j
+    }
+
+    /// Tracking error samples (setpoint − measured progress), the Fig. 6b
+    /// distribution. Only meaningful for closed-loop runs.
+    pub fn tracking_errors(&self) -> Vec<f64> {
+        if !self.setpoint.is_finite() {
+            return Vec::new();
+        }
+        self.progress
+            .values
+            .iter()
+            .map(|p| self.setpoint - p)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record() -> RunRecord {
+        let mut r = RunRecord {
+            cluster: "gros".into(),
+            policy: "pi-eps0.15".into(),
+            seed: 7,
+            epsilon: 0.15,
+            setpoint: 21.0,
+            exec_time: 120.5,
+            energy: 9876.0,
+            beats: 3000,
+            completed: true,
+            ..Default::default()
+        };
+        for i in 0..5 {
+            let t = i as f64;
+            r.pcap.push(t, 120.0 - i as f64);
+            r.power.push(t, 100.0 - i as f64);
+            r.progress.push(t, 25.0 - i as f64 * 0.5);
+            r.true_progress.push(t, 25.0 - i as f64 * 0.5);
+        }
+        r
+    }
+
+    #[test]
+    fn table_shape() {
+        let t = record().to_table();
+        assert_eq!(t.header.len(), 5);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.col_f64("pcap_w").unwrap()[0], 120.0);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let j = record().summary();
+        assert_eq!(j.get("cluster").unwrap().as_str(), Some("gros"));
+        assert_eq!(j.get("exec_time_s").unwrap().as_f64(), Some(120.5));
+        assert_eq!(j.get("beats").unwrap().as_u64(), Some(3000));
+    }
+
+    #[test]
+    fn tracking_errors_vs_setpoint() {
+        let r = record();
+        let e = r.tracking_errors();
+        assert_eq!(e.len(), 5);
+        assert!((e[0] - (21.0 - 25.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn open_loop_has_no_tracking_errors() {
+        let mut r = record();
+        r.setpoint = f64::NAN;
+        assert!(r.tracking_errors().is_empty());
+    }
+}

@@ -1,0 +1,270 @@
+//! Heartbeat transport: how instrumented applications deliver progress
+//! messages to the NRM daemon.
+//!
+//! The paper's NRM receives heartbeats "on a socket local to the node"
+//! (§2.1). Two transports are provided:
+//!
+//! * [`InProc`] — a lock-free-ish mpsc channel for workloads hosted in the
+//!   same process (the live demo and all benches);
+//! * [`UnixSocket`] — a SOCK_DGRAM Unix-domain socket matching the real
+//!   NRM's architecture; each datagram carries one heartbeat message in a
+//!   tiny line format: `beat <app-id> <progress-units>\n`.
+//!
+//! Both deliver [`Heartbeat`] values to a receiver owned by the daemon.
+
+use std::io;
+use std::os::unix::net::UnixDatagram;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+
+/// One progress message from an instrumented application.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Heartbeat {
+    /// Sender application id (one NRM can track several).
+    pub app_id: u32,
+    /// Progress units since the previous beat (the STREAM workload sends 1
+    /// per loop of the four kernels).
+    pub units: u32,
+    /// Receive timestamp [s] — stamped by the transport at ingestion, on
+    /// the experiment clock.
+    pub time: f64,
+}
+
+/// Sender half handed to workloads.
+pub trait BeatSender: Send {
+    fn send(&self, app_id: u32, units: u32) -> io::Result<()>;
+}
+
+/// Receiver half owned by the daemon: drain everything currently pending,
+/// stamping `now` as the receive time.
+pub trait BeatReceiver {
+    fn drain(&mut self, now: f64, out: &mut Vec<Heartbeat>);
+}
+
+// --------------------------------------------------------------------------
+// In-process transport
+// --------------------------------------------------------------------------
+
+/// In-process channel transport.
+pub struct InProc;
+
+pub struct InProcSender(mpsc::Sender<(u32, u32)>);
+pub struct InProcReceiver(mpsc::Receiver<(u32, u32)>);
+
+impl InProc {
+    pub fn pair() -> (InProcSender, InProcReceiver) {
+        let (tx, rx) = mpsc::channel();
+        (InProcSender(tx), InProcReceiver(rx))
+    }
+}
+
+impl BeatSender for InProcSender {
+    fn send(&self, app_id: u32, units: u32) -> io::Result<()> {
+        self.0
+            .send((app_id, units))
+            .map_err(|_| io::Error::new(io::ErrorKind::BrokenPipe, "daemon gone"))
+    }
+}
+
+impl Clone for InProcSender {
+    fn clone(&self) -> Self {
+        InProcSender(self.0.clone())
+    }
+}
+
+impl BeatReceiver for InProcReceiver {
+    fn drain(&mut self, now: f64, out: &mut Vec<Heartbeat>) {
+        while let Ok((app_id, units)) = self.0.try_recv() {
+            out.push(Heartbeat {
+                app_id,
+                units,
+                time: now,
+            });
+        }
+    }
+}
+
+// --------------------------------------------------------------------------
+// Unix-domain-socket transport (the real NRM shape)
+// --------------------------------------------------------------------------
+
+/// Datagram wire format: `beat <app-id> <units>\n` (ASCII).
+pub fn encode_beat(app_id: u32, units: u32) -> String {
+    format!("beat {app_id} {units}\n")
+}
+
+/// Parse a datagram; `None` for malformed input (dropped, as a daemon must
+/// never crash on a bad client).
+pub fn decode_beat(msg: &str) -> Option<(u32, u32)> {
+    let mut parts = msg.trim_end().split(' ');
+    if parts.next()? != "beat" {
+        return None;
+    }
+    let app_id = parts.next()?.parse().ok()?;
+    let units = parts.next()?.parse().ok()?;
+    if parts.next().is_some() {
+        return None;
+    }
+    Some((app_id, units))
+}
+
+/// Unix-datagram transport bound to a filesystem path.
+pub struct UnixSocket;
+
+pub struct UnixSocketSender {
+    sock: UnixDatagram,
+    path: PathBuf,
+}
+
+pub struct UnixSocketReceiver {
+    sock: UnixDatagram,
+    path: PathBuf,
+    buf: [u8; 256],
+}
+
+impl UnixSocket {
+    /// Bind the daemon side at `path` (unlinking any stale socket).
+    pub fn bind(path: impl AsRef<Path>) -> io::Result<UnixSocketReceiver> {
+        let path = path.as_ref().to_path_buf();
+        let _ = std::fs::remove_file(&path);
+        let sock = UnixDatagram::bind(&path)?;
+        sock.set_nonblocking(true)?;
+        Ok(UnixSocketReceiver {
+            sock,
+            path,
+            buf: [0; 256],
+        })
+    }
+
+    /// Create a client for the daemon at `path`.
+    pub fn connect(path: impl AsRef<Path>) -> io::Result<UnixSocketSender> {
+        let sock = UnixDatagram::unbound()?;
+        Ok(UnixSocketSender {
+            sock,
+            path: path.as_ref().to_path_buf(),
+        })
+    }
+}
+
+impl BeatSender for UnixSocketSender {
+    fn send(&self, app_id: u32, units: u32) -> io::Result<()> {
+        let msg = encode_beat(app_id, units);
+        self.sock.send_to(msg.as_bytes(), &self.path)?;
+        Ok(())
+    }
+}
+
+impl BeatReceiver for UnixSocketReceiver {
+    fn drain(&mut self, now: f64, out: &mut Vec<Heartbeat>) {
+        loop {
+            match self.sock.recv(&mut self.buf) {
+                Ok(n) => {
+                    if let Ok(text) = std::str::from_utf8(&self.buf[..n]) {
+                        if let Some((app_id, units)) = decode_beat(text) {
+                            out.push(Heartbeat {
+                                app_id,
+                                units,
+                                time: now,
+                            });
+                        }
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(_) => break,
+            }
+        }
+    }
+}
+
+impl Drop for UnixSocketReceiver {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inproc_roundtrip() {
+        let (tx, mut rx) = InProc::pair();
+        tx.send(1, 1).unwrap();
+        tx.send(1, 2).unwrap();
+        let mut out = Vec::new();
+        rx.drain(5.0, &mut out);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[1].units, 2);
+        assert_eq!(out[0].time, 5.0);
+    }
+
+    #[test]
+    fn inproc_multi_sender() {
+        let (tx, mut rx) = InProc::pair();
+        let tx2 = tx.clone();
+        std::thread::spawn(move || {
+            for _ in 0..100 {
+                tx2.send(2, 1).unwrap();
+            }
+        })
+        .join()
+        .unwrap();
+        for _ in 0..50 {
+            tx.send(1, 1).unwrap();
+        }
+        let mut out = Vec::new();
+        rx.drain(0.0, &mut out);
+        assert_eq!(out.len(), 150);
+    }
+
+    #[test]
+    fn wire_format_roundtrip() {
+        assert_eq!(decode_beat(&encode_beat(7, 3)), Some((7, 3)));
+    }
+
+    #[test]
+    fn malformed_datagrams_dropped() {
+        for bad in ["", "beat", "beat x 1", "beat 1", "pulse 1 1", "beat 1 2 3"] {
+            assert_eq!(decode_beat(bad), None, "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn unix_socket_roundtrip() {
+        let path = std::env::temp_dir().join(format!("powerctl-test-{}.sock", std::process::id()));
+        let mut rx = UnixSocket::bind(&path).unwrap();
+        let tx = UnixSocket::connect(&path).unwrap();
+        for i in 0..10 {
+            tx.send(1, i).unwrap();
+        }
+        // Datagrams are synchronous on the same host; drain immediately.
+        let mut out = Vec::new();
+        rx.drain(1.0, &mut out);
+        assert_eq!(out.len(), 10);
+        assert_eq!(out[9].units, 9);
+    }
+
+    #[test]
+    fn unix_socket_ignores_garbage() {
+        let path = std::env::temp_dir().join(format!("powerctl-gbg-{}.sock", std::process::id()));
+        let mut rx = UnixSocket::bind(&path).unwrap();
+        let raw = UnixDatagram::unbound().unwrap();
+        raw.send_to(b"not a beat", &path).unwrap();
+        let tx = UnixSocket::connect(&path).unwrap();
+        tx.send(3, 1).unwrap();
+        let mut out = Vec::new();
+        rx.drain(0.0, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].app_id, 3);
+    }
+
+    #[test]
+    fn socket_file_cleaned_up() {
+        let path = std::env::temp_dir().join(format!("powerctl-cln-{}.sock", std::process::id()));
+        {
+            let _rx = UnixSocket::bind(&path).unwrap();
+            assert!(path.exists());
+        }
+        assert!(!path.exists());
+    }
+}

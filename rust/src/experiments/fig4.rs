@@ -1,0 +1,103 @@
+//! Fig. 4 — "Static characteristic: modeling of time-averaged behavior."
+//!
+//! (a) per-cluster scatter of (pcap, mean progress) with the fitted
+//!     saturating model and its R² (paper band: 0.83–0.95);
+//! (b) the same data through the Eq. (2) linearization: progress_L vs
+//!     pcap_L collapses onto the line of slope K_L through the origin.
+
+use crate::experiments::common::{Ctx, Identified};
+use crate::util::csv::Table;
+use crate::util::stats;
+
+#[derive(Debug, Clone)]
+pub struct Fig4Summary {
+    pub cluster: crate::sim::cluster::ClusterId,
+    pub r_squared: f64,
+    /// R² of the linear fit through the origin in linearized coordinates.
+    pub linear_r_squared: f64,
+    pub k_l: f64,
+}
+
+pub fn run_cluster(ctx: &Ctx, ident: &Identified) -> Fig4Summary {
+    let s = &ident.model.static_model;
+    // Fig. 4a CSV: one row per static run + model prediction.
+    let mut t = Table::new(vec![
+        "pcap_w",
+        "power_w",
+        "progress_hz",
+        "model_hz",
+        "pcap_linearized",
+        "progress_linearized",
+    ]);
+    let mut lin_x = Vec::new();
+    let mut lin_y = Vec::new();
+    for &(pcap, power, progress, _) in &ident.static_runs {
+        let x = s.linearize_pcap(pcap);
+        let y = s.linearize_progress(progress);
+        lin_x.push(x);
+        lin_y.push(y);
+        t.push_f64(&[pcap, power, progress, s.predict(pcap), x, y]);
+    }
+    let _ = t.save(ctx.path(&format!("fig4_{}.csv", ident.cluster.name())));
+
+    // Fig. 4b: linearized data must fit y = K_L·x through the origin.
+    let pred: Vec<f64> = lin_x.iter().map(|x| s.k_l * x).collect();
+    Fig4Summary {
+        cluster: ident.cluster,
+        r_squared: s.r_squared,
+        linear_r_squared: stats::r_squared(&lin_y, &pred),
+        k_l: s.k_l,
+    }
+}
+
+pub fn run(ctx: &Ctx, idents: &[Identified]) -> (String, Vec<Fig4Summary>) {
+    let mut out = String::from("Fig. 4 — static characteristic (fit quality)\n");
+    let mut summaries = Vec::new();
+    for ident in idents {
+        let s = run_cluster(ctx, ident);
+        out.push_str(&format!(
+            "{:<6} K_L={:6.1} Hz  R²(nonlinear)={:.3}  R²(linearized)={:.3}\n",
+            ident.cluster.name(),
+            s.k_l,
+            s.r_squared,
+            s.linear_r_squared
+        ));
+        summaries.push(s);
+    }
+    (out, summaries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::common::{identify, Scale};
+    use crate::sim::cluster::ClusterId;
+
+    #[test]
+    fn fit_quality_in_paper_band_and_linearization_collapses() {
+        let dir = std::env::temp_dir().join("powerctl-fig4-test");
+        let ctx = Ctx::new(&dir, 4, Scale::Fast);
+        let ident = identify(&ctx, ClusterId::Gros);
+        let s = run_cluster(&ctx, &ident);
+        assert!(s.r_squared > 0.83, "R² {} below the paper band", s.r_squared);
+        assert!(
+            s.linear_r_squared > 0.8,
+            "linearization did not collapse: {}",
+            s.linear_r_squared
+        );
+        assert!(ctx.path("fig4_gros.csv").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn k_l_ordering_across_clusters() {
+        // Fig. 4a: yeti's curve tops dahu's tops gros's.
+        let dir = std::env::temp_dir().join("powerctl-fig4-ord-test");
+        let ctx = Ctx::new(&dir, 5, Scale::Fast);
+        let g = identify(&ctx, ClusterId::Gros).model.static_model.k_l;
+        let d = identify(&ctx, ClusterId::Dahu).model.static_model.k_l;
+        let y = identify(&ctx, ClusterId::Yeti).model.static_model.k_l;
+        assert!(g < d && d < y, "K_L order violated: {g} {d} {y}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,95 @@
+//! Fig. 5 — "Modeling the time dynamics."
+//!
+//! Per cluster: one representative random-powercap execution with the
+//! measured progress and the first-order model's simulated trace (top
+//! panel), the requested cap and measured power (bottom panel), plus the
+//! model-error distribution aggregated over the identification campaign.
+//! Shape criteria (§5.1): error mean ≈ 0 for all clusters; dispersion and
+//! extrema grow with the socket count.
+
+use crate::experiments::common::{dynamic_campaign, Ctx, Identified};
+use crate::sim::cluster::{Cluster, ClusterId};
+use crate::util::csv::Table;
+
+#[derive(Debug, Clone)]
+pub struct Fig5Summary {
+    pub cluster: ClusterId,
+    pub error_mean: f64,
+    pub error_std: f64,
+    pub error_min: f64,
+    pub error_max: f64,
+}
+
+pub fn run_cluster(ctx: &Ctx, ident: &Identified) -> Fig5Summary {
+    let cluster = Cluster::get(ident.cluster);
+    // Fresh validation runs (not the ones τ was fitted on).
+    let runs = dynamic_campaign(
+        &cluster,
+        ctx.scale.ident_runs().max(3),
+        ctx.seed ^ (0x5000 + ident.cluster as u64),
+    );
+
+    // Representative trace CSV: measured vs model for the first run.
+    let rep = &runs[0];
+    let sim = ident.model.simulate(rep);
+    let mut t = Table::new(vec!["time_s", "pcap_w", "progress_hz", "model_hz"]);
+    for i in 0..rep.len() {
+        t.push_f64(&[rep.times[i], rep.pcaps[i], rep.progress[i], sim[i]]);
+    }
+    let _ = t.save(ctx.path(&format!("fig5_{}.csv", ident.cluster.name())));
+
+    let (error_mean, error_std, error_min, error_max) = ident.model.error_summary(&runs);
+    Fig5Summary {
+        cluster: ident.cluster,
+        error_mean,
+        error_std,
+        error_min,
+        error_max,
+    }
+}
+
+pub fn run(ctx: &Ctx, idents: &[Identified]) -> (String, Vec<Fig5Summary>) {
+    let mut out = String::from("Fig. 5 — dynamic model accuracy (validation campaign)\n");
+    let mut summaries = Vec::new();
+    for ident in idents {
+        let s = run_cluster(ctx, ident);
+        out.push_str(&format!(
+            "{:<6} model error: mean={:+.2} Hz  std={:.2} Hz  range=[{:+.1}, {:+.1}]\n",
+            ident.cluster.name(),
+            s.error_mean,
+            s.error_std,
+            s.error_min,
+            s.error_max
+        ));
+        summaries.push(s);
+    }
+    (out, summaries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::common::{identify, Scale};
+
+    #[test]
+    fn error_centered_and_grows_with_sockets() {
+        let dir = std::env::temp_dir().join("powerctl-fig5-test");
+        let ctx = Ctx::new(&dir, 6, Scale::Fast);
+        let ig = identify(&ctx, ClusterId::Gros);
+        let iy = identify(&ctx, ClusterId::Yeti);
+        let sg = run_cluster(&ctx, &ig);
+        let sy = run_cluster(&ctx, &iy);
+        // Mean error near zero relative to each cluster's magnitude.
+        assert!(sg.error_mean.abs() < 1.0, "gros mean {}", sg.error_mean);
+        assert!(sy.error_mean.abs() < 6.0, "yeti mean {}", sy.error_mean);
+        // Dispersion ordering (the "fewer sockets, better modeling" claim).
+        assert!(
+            sy.error_std > sg.error_std,
+            "yeti std {} !> gros std {}",
+            sy.error_std,
+            sg.error_std
+        );
+        assert!(ctx.path("fig5_gros.csv").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

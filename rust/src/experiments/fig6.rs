@@ -1,0 +1,193 @@
+//! Fig. 6 — "Evaluation of the controlled system."
+//!
+//! (a) one representative closed-loop run (ε = 0.15, gros): progress +
+//!     setpoint and cap + power through time. Shape: the cap descends
+//!     smoothly from its upper limit; progress settles on the setpoint
+//!     with neither oscillation nor sustained undershoot.
+//! (b) distribution of the tracking error (setpoint − progress) per
+//!     cluster, aggregated over the whole evaluation campaign. Shape:
+//!     gros/dahu unimodal centered ≈ 0 with dispersion ≈ 1.8 / 6.1 Hz;
+//!     yeti bimodal with a second mode at 50–60 Hz from the drop events.
+
+use crate::control::baseline::PiPolicy;
+use crate::control::pi::{PiConfig, PiController};
+use crate::coordinator::experiment::run_closed_loop;
+use crate::coordinator::records::RunRecord;
+use crate::experiments::common::{Ctx, Identified};
+use crate::sim::cluster::Cluster;
+use crate::util::csv::Table;
+use crate::util::rng::Pcg64;
+use crate::util::stats::{self, Histogram};
+
+/// Build a tuned PI policy for a cluster from its identified model.
+pub fn make_pi(ident: &Identified, epsilon: f64) -> (PiPolicy, f64) {
+    let cluster = Cluster::get(ident.cluster);
+    let cfg = PiConfig::from_model(&ident.model, 10.0, cluster.pcap_min, cluster.pcap_max);
+    let ctl = PiController::new(ident.model.clone(), cfg, epsilon);
+    let sp = ctl.setpoint();
+    (PiPolicy(ctl), sp)
+}
+
+/// Fig. 6a: the representative run.
+pub fn representative_run(ctx: &Ctx, ident: &Identified, epsilon: f64) -> RunRecord {
+    let cluster = Cluster::get(ident.cluster);
+    let (mut policy, sp) = make_pi(ident, epsilon);
+    let rec = run_closed_loop(
+        &cluster,
+        &mut policy,
+        sp,
+        epsilon,
+        &ctx.run_config(),
+        ctx.seed ^ 0x6A00,
+    );
+    let mut t = rec.to_table();
+    t.header.push("setpoint_hz".to_string());
+    for row in &mut t.rows {
+        row.push(format!("{sp}"));
+    }
+    let _ = t.save(ctx.path(&format!(
+        "fig6a_{}_eps{:.2}.csv",
+        ident.cluster.name(),
+        epsilon
+    )));
+    rec
+}
+
+#[derive(Debug, Clone)]
+pub struct Fig6bSummary {
+    pub cluster: crate::sim::cluster::ClusterId,
+    pub error_mean: f64,
+    pub error_std: f64,
+    /// Centers [Hz] of detected modes in the error histogram.
+    pub mode_centers: Vec<f64>,
+}
+
+/// Fig. 6b: tracking-error distribution across the ε sweep.
+pub fn error_distribution(ctx: &Ctx, ident: &Identified) -> Fig6bSummary {
+    let cluster = Cluster::get(ident.cluster);
+    let cfg = ctx.run_config();
+    let mut rng = Pcg64::new(ctx.seed ^ 0x6B00, ident.cluster as u64);
+    let mut errors: Vec<f64> = Vec::new();
+    for &eps in &ctx.scale.epsilons() {
+        for _ in 0..ctx.scale.reps() {
+            let (mut policy, sp) = make_pi(ident, eps);
+            let rec = run_closed_loop(&cluster, &mut policy, sp, eps, &cfg, rng.next_u64());
+            // Skip the convergence transient (~3·τ_obj).
+            let idx0 = rec
+                .progress
+                .times
+                .partition_point(|&t| t < 30.0)
+                .min(rec.progress.len());
+            errors.extend(rec.tracking_errors()[idx0..].iter());
+        }
+    }
+    let hist = Histogram::from_samples(&errors, -20.0, 80.0, 50);
+    let mut csv = Table::new(vec!["error_hz", "density"]);
+    for (i, d) in hist.densities().iter().enumerate() {
+        csv.push_f64(&[hist.bin_center(i), *d]);
+    }
+    let _ = csv.save(ctx.path(&format!("fig6b_{}.csv", ident.cluster.name())));
+
+    let mode_centers = hist
+        .modes(0.02)
+        .into_iter()
+        .map(|i| hist.bin_center(i))
+        .collect();
+    Fig6bSummary {
+        cluster: ident.cluster,
+        error_mean: stats::mean(&errors),
+        error_std: stats::stddev(&errors),
+        mode_centers,
+    }
+}
+
+pub fn run(ctx: &Ctx, idents: &[Identified]) -> (String, Vec<Fig6bSummary>) {
+    let mut out = String::from("Fig. 6 — controlled-system evaluation\n");
+    // (a) representative gros run at ε = 0.15.
+    if let Some(gros) = idents.iter().find(|i| i.cluster.name() == "gros") {
+        let rec = representative_run(ctx, gros, 0.15);
+        let final_prog = rec.progress.values.last().copied().unwrap_or(f64::NAN);
+        out.push_str(&format!(
+            "(a) gros ε=0.15: setpoint={:.1} Hz, final progress={:.1} Hz, final cap={:.1} W, exec={:.0} s\n",
+            rec.setpoint,
+            final_prog,
+            rec.pcap.values.last().copied().unwrap_or(f64::NAN),
+            rec.exec_time
+        ));
+    }
+    // (b) distributions.
+    let mut summaries = Vec::new();
+    for ident in idents {
+        let s = error_distribution(ctx, ident);
+        out.push_str(&format!(
+            "(b) {:<6} tracking error: mean={:+.2} Hz  std={:.2} Hz  modes at {:?}\n",
+            ident.cluster.name(),
+            s.error_mean,
+            s.error_std,
+            s.mode_centers
+                .iter()
+                .map(|x| (x * 10.0).round() / 10.0)
+                .collect::<Vec<_>>()
+        ));
+        summaries.push(s);
+    }
+    (out, summaries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::common::{identify, Scale};
+    use crate::sim::cluster::ClusterId;
+
+    fn ctx(tag: &str) -> Ctx {
+        Ctx::new(
+            std::env::temp_dir().join(format!("powerctl-fig6-{tag}")),
+            7,
+            Scale::Fast,
+        )
+    }
+
+    #[test]
+    fn representative_run_settles_smoothly() {
+        let ctx = ctx("a");
+        let ident = identify(&ctx, ClusterId::Gros);
+        let rec = representative_run(&ctx, &ident, 0.15);
+        assert!(rec.completed);
+        let sp = rec.setpoint;
+        // Settled band after 40 s: progress within ±3 Hz of the setpoint,
+        // no oscillation (std small), cap meaningfully below max.
+        let idx0 = rec.progress.times.partition_point(|&t| t < 40.0);
+        let settled = &rec.progress.values[idx0..];
+        let mean = stats::mean(settled);
+        assert!((mean - sp).abs() < 2.0, "settled mean {mean} vs sp {sp}");
+        assert!(stats::stddev(settled) < 3.0, "oscillating");
+        let final_cap = *rec.pcap.values.last().unwrap();
+        assert!(final_cap < 110.0, "no energy saving: cap {final_cap}");
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    }
+
+    #[test]
+    fn gros_unimodal_yeti_bimodal() {
+        let ctx = ctx("b");
+        let ig = identify(&ctx, ClusterId::Gros);
+        let iy = identify(&ctx, ClusterId::Yeti);
+        let sg = error_distribution(&ctx, &ig);
+        let sy = error_distribution(&ctx, &iy);
+        // gros: single mode near zero, tight dispersion (paper: 1.8 Hz).
+        assert!(
+            sg.mode_centers.iter().all(|&m| m.abs() < 10.0),
+            "gros modes {:?}",
+            sg.mode_centers
+        );
+        assert!(sg.error_std < 4.0, "gros std {}", sg.error_std);
+        // yeti: a second mode well above zero (paper: 50–60 Hz region).
+        assert!(
+            sy.mode_centers.iter().any(|&m| m > 30.0),
+            "yeti second mode missing: {:?}",
+            sy.mode_centers
+        );
+        assert!(sy.error_std > sg.error_std);
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    }
+}

@@ -1,0 +1,26 @@
+//! One runner per paper table/figure (DESIGN.md §5) plus ablations.
+//!
+//! | module    | regenerates                                        |
+//! |-----------|----------------------------------------------------|
+//! | [`tables`]| Table 1, Table 2, §4.2 Pearson check               |
+//! | [`fig3`]  | Fig. 3a–c staircase time view                      |
+//! | [`fig4`]  | Fig. 4a–b static characteristic + linearization    |
+//! | [`fig5`]  | Fig. 5 dynamic model accuracy                      |
+//! | [`fig6`]  | Fig. 6a representative run, 6b error distributions |
+//! | [`fig7`]  | Fig. 7 time/energy Pareto sweep                    |
+//! | [`ablation`] | design-choice ablations (median/mean, excitation shape, adaptive PI) |
+//!
+//! Every runner writes its raw data as CSV under the context's output
+//! directory and returns a printed summary with the paper-shape checks.
+
+pub mod ablation;
+pub mod common;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod replay;
+pub mod tables;
+
+pub use common::{identify, identify_all, Ctx, Identified, Scale};

@@ -1,0 +1,119 @@
+//! Table 1 (cluster characteristics) and Table 2 (model + controller
+//! parameters) regeneration, plus the §4.2 Pearson correlation check.
+
+use crate::experiments::common::{identify_all, Ctx, Identified};
+use crate::sim::cluster::{Cluster, ClusterId};
+use crate::util::csv::Table;
+
+/// Paper values for Table 2, used to print paper-vs-fitted side by side.
+pub fn paper_table2(id: ClusterId) -> (f64, f64, f64, f64, f64, f64) {
+    let c = Cluster::get(id); // ground truth *is* the paper's Table 2
+    (c.rapl_a, c.rapl_b, c.alpha, c.beta, c.k_l, c.tau)
+}
+
+/// Render Table 1.
+pub fn table1() -> String {
+    let mut out = String::from(
+        "Table 1: Hardware characteristics (simulated per paper Table 1)\n\
+         cluster  CPU              cores/CPU  sockets  RAM[GiB]\n",
+    );
+    for c in Cluster::all() {
+        out.push_str(&format!(
+            "{:<8} {:<16} {:>9}  {:>7}  {:>8}\n",
+            c.id.name(),
+            c.cpu,
+            c.cores_per_cpu,
+            c.sockets,
+            c.ram_gib
+        ));
+    }
+    out
+}
+
+/// Run the identification pipeline and render Table 2 (paper vs fitted).
+pub fn table2(ctx: &Ctx, idents: &[Identified]) -> String {
+    let mut out = String::from(
+        "Table 2: model and controller parameters (paper / fitted-from-simulated-campaign)\n\
+         cluster  param        paper      fitted\n",
+    );
+    let mut csv = Table::new(vec![
+        "cluster", "a_paper", "a_fit", "b_paper", "b_fit", "alpha_paper", "alpha_fit",
+        "beta_paper", "beta_fit", "kl_paper", "kl_fit", "tau_paper", "tau_fit", "r2",
+        "pearson_time", "pearson_throughput",
+    ]);
+    for ident in idents {
+        let (a, b, alpha, beta, k_l, tau) = paper_table2(ident.cluster);
+        let m = &ident.model;
+        let s = &m.static_model;
+        let rows = [
+            ("a", a, s.a),
+            ("b [W]", b, s.b),
+            ("alpha [1/W]", alpha, s.alpha),
+            ("beta [W]", beta, s.beta),
+            ("K_L [Hz]", k_l, s.k_l),
+            ("tau [s]", tau, m.tau),
+        ];
+        for (name, paper, fitted) in rows {
+            out.push_str(&format!(
+                "{:<8} {:<12} {:>9.3}  {:>9.3}\n",
+                ident.cluster.name(),
+                name,
+                paper,
+                fitted
+            ));
+        }
+        out.push_str(&format!(
+            "{:<8} {:<12} {:>9}  {:>9.3}   (R²={:.3}, pearson r(progress,T)={:.2}, r(progress,1/T)={:.2})\n",
+            ident.cluster.name(),
+            "tau_obj [s]",
+            10.0,
+            10.0,
+            s.r_squared,
+            ident.pearson_time,
+            ident.pearson_throughput,
+        ));
+        csv.push_f64(&[
+            ident.cluster as usize as f64,
+            a, s.a, b, s.b, alpha, s.alpha, beta, s.beta, k_l, s.k_l, tau, m.tau,
+            s.r_squared, ident.pearson_time, ident.pearson_throughput,
+        ]);
+    }
+    let _ = csv.save(ctx.path("table2.csv"));
+    out
+}
+
+/// Convenience: identify + render both tables.
+pub fn run(ctx: &Ctx) -> (String, Vec<Identified>) {
+    let idents = identify_all(ctx);
+    let mut out = table1();
+    out.push('\n');
+    out.push_str(&table2(ctx, &idents));
+    (out, idents)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::common::Scale;
+
+    #[test]
+    fn table1_contains_all_clusters() {
+        let t = table1();
+        for name in ["gros", "dahu", "yeti"] {
+            assert!(t.contains(name));
+        }
+        assert!(t.contains("Xeon Gold 5220"));
+    }
+
+    #[test]
+    fn table2_renders_and_saves() {
+        let dir = std::env::temp_dir().join("powerctl-table2-test");
+        let ctx = Ctx::new(&dir, 1, Scale::Fast);
+        let idents = vec![crate::experiments::common::identify(&ctx, ClusterId::Gros)];
+        let t = table2(&ctx, &idents);
+        assert!(t.contains("K_L"));
+        assert!(t.contains("gros"));
+        assert!(dir.join("table2.csv").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,389 @@
+//! Least-squares fitting: ordinary linear LSQ and Levenberg–Marquardt
+//! nonlinear LSQ, built from scratch (no linear-algebra crate available).
+//!
+//! The paper fits the RAPL accuracy line (`power = a·pcap + b`) by linear
+//! least squares and the static characteristic
+//! `progress = K_L(1 − e^{−α(a·pcap + b − β)})` by *nonlinear least
+//! squares* (§4.4 "automatically found by using nonlinear least squares").
+//! LM with numerical Jacobians is the standard tool; problems here are tiny
+//! (≤4 parameters, ≲10³ residuals), so dense Gaussian elimination on the
+//! normal equations is ample.
+
+/// Result of a fit.
+#[derive(Debug, Clone)]
+pub struct FitResult {
+    /// Fitted parameter vector.
+    pub params: Vec<f64>,
+    /// Final sum of squared residuals.
+    pub ssr: f64,
+    /// Iterations used.
+    pub iterations: usize,
+    /// Whether the tolerance criterion was met (vs iteration cap).
+    pub converged: bool,
+}
+
+/// Ordinary least squares for `y ≈ a·x + b`; returns `(a, b)`.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    assert!(xs.len() >= 2, "need at least two points");
+    let n = xs.len() as f64;
+    let sx: f64 = xs.iter().sum();
+    let sy: f64 = ys.iter().sum();
+    let sxx: f64 = xs.iter().map(|x| x * x).sum();
+    let sxy: f64 = xs.iter().zip(ys).map(|(x, y)| x * y).sum();
+    let denom = n * sxx - sx * sx;
+    assert!(
+        denom.abs() > 1e-12,
+        "degenerate design matrix (all x identical)"
+    );
+    let a = (n * sxy - sx * sy) / denom;
+    let b = (sy - a * sx) / n;
+    (a, b)
+}
+
+/// Solve the square system `A·x = b` in place by Gaussian elimination with
+/// partial pivoting. `a` is row-major `n×n`. Returns `None` if singular.
+pub fn solve(a: &mut [f64], b: &mut [f64], n: usize) -> Option<Vec<f64>> {
+    debug_assert_eq!(a.len(), n * n);
+    debug_assert_eq!(b.len(), n);
+    for col in 0..n {
+        // Pivot.
+        let mut pivot = col;
+        for row in col + 1..n {
+            if a[row * n + col].abs() > a[pivot * n + col].abs() {
+                pivot = row;
+            }
+        }
+        if a[pivot * n + col].abs() < 1e-12 {
+            return None;
+        }
+        if pivot != col {
+            for k in 0..n {
+                a.swap(col * n + k, pivot * n + k);
+            }
+            b.swap(col, pivot);
+        }
+        // Eliminate below.
+        let diag = a[col * n + col];
+        for row in col + 1..n {
+            let f = a[row * n + col] / diag;
+            if f == 0.0 {
+                continue;
+            }
+            for k in col..n {
+                a[row * n + k] -= f * a[col * n + k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    // Back substitution.
+    let mut x = vec![0.0; n];
+    for row in (0..n).rev() {
+        let mut acc = b[row];
+        for k in row + 1..n {
+            acc -= a[row * n + k] * x[k];
+        }
+        x[row] = acc / a[row * n + row];
+    }
+    Some(x)
+}
+
+/// Options for [`levenberg_marquardt`].
+#[derive(Debug, Clone)]
+pub struct LmOptions {
+    pub max_iterations: usize,
+    /// Stop when the relative SSR improvement falls below this.
+    pub tolerance: f64,
+    /// Initial damping factor.
+    pub lambda0: f64,
+    /// Optional per-parameter lower/upper bounds (projected after each step).
+    pub lower: Option<Vec<f64>>,
+    pub upper: Option<Vec<f64>>,
+}
+
+impl Default for LmOptions {
+    fn default() -> Self {
+        LmOptions {
+            max_iterations: 200,
+            tolerance: 1e-12,
+            lambda0: 1e-3,
+            lower: None,
+            upper: None,
+        }
+    }
+}
+
+fn clamp_params(p: &mut [f64], opts: &LmOptions) {
+    if let Some(lo) = &opts.lower {
+        for (x, &l) in p.iter_mut().zip(lo) {
+            *x = x.max(l);
+        }
+    }
+    if let Some(hi) = &opts.upper {
+        for (x, &u) in p.iter_mut().zip(hi) {
+            *x = x.min(u);
+        }
+    }
+}
+
+/// Levenberg–Marquardt minimization of `Σᵢ residual(params, i)²`.
+///
+/// `residuals(params, out)` fills `out` with the residual vector. The
+/// Jacobian is estimated by central finite differences.
+pub fn levenberg_marquardt<F>(
+    mut params: Vec<f64>,
+    n_residuals: usize,
+    opts: &LmOptions,
+    mut residuals: F,
+) -> FitResult
+where
+    F: FnMut(&[f64], &mut [f64]),
+{
+    let np = params.len();
+    clamp_params(&mut params, opts);
+    let mut r = vec![0.0; n_residuals];
+    let mut r_trial = vec![0.0; n_residuals];
+    let mut jac = vec![0.0; n_residuals * np]; // row-major: residual × param
+    let mut lambda = opts.lambda0;
+
+    residuals(&params, &mut r);
+    let mut ssr: f64 = r.iter().map(|x| x * x).sum();
+    let mut converged = false;
+    let mut iter = 0;
+
+    while iter < opts.max_iterations {
+        iter += 1;
+        // Numerical Jacobian (central differences, parameter-scaled h).
+        let mut rp = vec![0.0; n_residuals];
+        let mut rm = vec![0.0; n_residuals];
+        for j in 0..np {
+            let h = 1e-6 * params[j].abs().max(1e-4);
+            let mut pp = params.clone();
+            pp[j] += h;
+            residuals(&pp, &mut rp);
+            pp[j] = params[j] - h;
+            residuals(&pp, &mut rm);
+            for i in 0..n_residuals {
+                jac[i * np + j] = (rp[i] - rm[i]) / (2.0 * h);
+            }
+        }
+        // Normal equations: (JᵀJ + λ·diag(JᵀJ))·δ = -Jᵀr.
+        let mut jtj = vec![0.0; np * np];
+        let mut jtr = vec![0.0; np];
+        for i in 0..n_residuals {
+            for a in 0..np {
+                let ja = jac[i * np + a];
+                jtr[a] -= ja * r[i];
+                for b in a..np {
+                    jtj[a * np + b] += ja * jac[i * np + b];
+                }
+            }
+        }
+        for a in 0..np {
+            for b in 0..a {
+                jtj[a * np + b] = jtj[b * np + a];
+            }
+        }
+
+        // Try damped steps, increasing λ on failure.
+        let mut improved = false;
+        for _ in 0..16 {
+            let mut a = jtj.clone();
+            let mut b = jtr.clone();
+            for d in 0..np {
+                a[d * np + d] += lambda * jtj[d * np + d].max(1e-12);
+            }
+            let Some(delta) = solve(&mut a, &mut b, np) else {
+                lambda *= 10.0;
+                continue;
+            };
+            let mut trial: Vec<f64> = params
+                .iter()
+                .zip(&delta)
+                .map(|(p, d)| p + d)
+                .collect();
+            clamp_params(&mut trial, opts);
+            residuals(&trial, &mut r_trial);
+            let ssr_trial: f64 = r_trial.iter().map(|x| x * x).sum();
+            if ssr_trial.is_finite() && ssr_trial < ssr {
+                let rel = (ssr - ssr_trial) / ssr.max(1e-300);
+                params = trial;
+                std::mem::swap(&mut r, &mut r_trial);
+                ssr = ssr_trial;
+                lambda = (lambda * 0.3).max(1e-12);
+                improved = true;
+                if rel < opts.tolerance {
+                    converged = true;
+                }
+                break;
+            }
+            lambda *= 10.0;
+            if lambda > 1e12 {
+                break;
+            }
+        }
+        if !improved {
+            converged = true; // stuck at a (local) minimum
+            break;
+        }
+        if converged {
+            break;
+        }
+    }
+
+    FitResult {
+        params,
+        ssr,
+        iterations: iter,
+        converged,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn linear_fit_exact() {
+        let xs = [40.0, 60.0, 80.0, 100.0, 120.0];
+        let ys: Vec<f64> = xs.iter().map(|x| 0.83 * x + 7.07).collect();
+        let (a, b) = linear_fit(&xs, &ys);
+        assert!((a - 0.83).abs() < 1e-12);
+        assert!((b - 7.07).abs() < 1e-10);
+    }
+
+    #[test]
+    fn linear_fit_noisy() {
+        let mut rng = Pcg64::seeded(1);
+        let xs: Vec<f64> = (0..500).map(|_| rng.uniform(40.0, 120.0)).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 0.94 * x + 0.17 + rng.gauss(0.0, 1.0)).collect();
+        let (a, b) = linear_fit(&xs, &ys);
+        assert!((a - 0.94).abs() < 0.01, "a={a}");
+        assert!((b - 0.17).abs() < 1.0, "b={b}");
+    }
+
+    #[test]
+    #[should_panic(expected = "degenerate")]
+    fn linear_fit_degenerate() {
+        linear_fit(&[1.0, 1.0], &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn solve_3x3() {
+        // A = [[2,1,0],[1,3,1],[0,1,2]], x = [1,2,3] → b = [4,10,8]
+        let mut a = vec![2.0, 1.0, 0.0, 1.0, 3.0, 1.0, 0.0, 1.0, 2.0];
+        let mut b = vec![4.0, 10.0, 8.0];
+        let x = solve(&mut a, &mut b, 3).unwrap();
+        for (got, want) in x.iter().zip([1.0, 2.0, 3.0]) {
+            assert!((got - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn solve_singular_none() {
+        let mut a = vec![1.0, 2.0, 2.0, 4.0];
+        let mut b = vec![1.0, 2.0];
+        assert!(solve(&mut a, &mut b, 2).is_none());
+    }
+
+    #[test]
+    fn lm_fits_exponential_saturation() {
+        // The exact model family of the paper's static characteristic.
+        let truth = [25.6, 0.047, 28.5]; // K_L, alpha, beta
+        let powers: Vec<f64> = (0..60).map(|i| 40.0 + i as f64 * 1.2).collect();
+        let obs: Vec<f64> = powers
+            .iter()
+            .map(|&p| truth[0] * (1.0 - (-truth[1] * (p - truth[2])).exp()))
+            .collect();
+        let fit = levenberg_marquardt(
+            vec![10.0, 0.02, 20.0],
+            powers.len(),
+            &LmOptions {
+                lower: Some(vec![1.0, 1e-4, 0.0]),
+                upper: Some(vec![500.0, 1.0, 60.0]),
+                ..Default::default()
+            },
+            |p, out| {
+                for (i, &pw) in powers.iter().enumerate() {
+                    let pred = p[0] * (1.0 - (-p[1] * (pw - p[2])).exp());
+                    out[i] = pred - obs[i];
+                }
+            },
+        );
+        assert!(fit.converged, "{fit:?}");
+        for (got, want) in fit.params.iter().zip(truth) {
+            assert!(
+                (got - want).abs() / want < 1e-3,
+                "params {:?} vs {truth:?}",
+                fit.params
+            );
+        }
+    }
+
+    #[test]
+    fn lm_fits_under_noise() {
+        let mut rng = Pcg64::seeded(2);
+        let truth = [78.5, 0.023, 33.7];
+        let powers: Vec<f64> = (0..300).map(|_| rng.uniform(38.0, 110.0)).collect();
+        let obs: Vec<f64> = powers
+            .iter()
+            .map(|&p| {
+                truth[0] * (1.0 - (-truth[1] * (p - truth[2])).exp()) + rng.gauss(0.0, 2.0)
+            })
+            .collect();
+        let fit = levenberg_marquardt(
+            vec![50.0, 0.05, 25.0],
+            powers.len(),
+            &LmOptions {
+                lower: Some(vec![1.0, 1e-4, 0.0]),
+                upper: Some(vec![500.0, 1.0, 60.0]),
+                ..Default::default()
+            },
+            |p, out| {
+                for (i, &pw) in powers.iter().enumerate() {
+                    out[i] = p[0] * (1.0 - (-p[1] * (pw - p[2])).exp()) - obs[i];
+                }
+            },
+        );
+        for (got, want) in fit.params.iter().zip(truth) {
+            assert!(
+                (got - want).abs() / want < 0.15,
+                "params {:?} vs {truth:?}",
+                fit.params
+            );
+        }
+    }
+
+    #[test]
+    fn lm_respects_bounds() {
+        let obs = [1.0, 2.0, 3.0];
+        let fit = levenberg_marquardt(
+            vec![5.0],
+            3,
+            &LmOptions {
+                lower: Some(vec![4.0]),
+                upper: Some(vec![10.0]),
+                ..Default::default()
+            },
+            |p, out| {
+                for (i, o) in obs.iter().enumerate() {
+                    out[i] = p[0] - o;
+                }
+            },
+        );
+        // Unconstrained optimum is mean=2, but the bound holds at 4.
+        assert!((fit.params[0] - 4.0).abs() < 1e-6, "{:?}", fit.params);
+    }
+
+    #[test]
+    fn lm_handles_already_optimal() {
+        let fit = levenberg_marquardt(vec![2.0], 3, &LmOptions::default(), |p, out| {
+            for (i, o) in [1.0, 2.0, 3.0].iter().enumerate() {
+                out[i] = p[0] - o;
+            }
+        });
+        assert!((fit.params[0] - 2.0).abs() < 1e-9);
+        assert!(fit.converged);
+    }
+}

@@ -1,0 +1,16 @@
+//! System identification (paper §4.3–4.4, Figs. 3–5, Table 2).
+//!
+//! The offline workflow: run open-loop campaigns (excitation signals from
+//! [`signals`]), reduce each run to the [`static_model`] points or the
+//! [`dynamic_model`] sampled traces, and fit with the from-scratch
+//! least-squares machinery in [`lsq`]. Fitted models — never the
+//! simulator's ground truth — parameterize the controller.
+
+pub mod dynamic_model;
+pub mod lsq;
+pub mod signals;
+pub mod static_model;
+
+pub use dynamic_model::{DynamicModel, SampledRun};
+pub use signals::Plan;
+pub use static_model::{StaticModel, StaticPoint};

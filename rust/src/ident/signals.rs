@@ -1,0 +1,167 @@
+//! Excitation signal generators for the identification campaigns.
+//!
+//! * [`staircase`] — the §4.3 system-analysis plan: the cap is gradually
+//!   increased in 20 W steps over the cluster's reasonable range (Fig. 3);
+//! * [`constant`] — the static-characterization plan: one constant cap for
+//!   the whole run (each Fig. 4 point is one such run);
+//! * [`random_steps`] — the §5.1 model-accuracy plan: a piecewise-constant
+//!   signal with random magnitude (40–120 W) and random switching frequency
+//!   (10⁻²–1 Hz) (Fig. 5).
+//!
+//! All generators produce a [`Plan`]: a zero-order-hold powercap schedule
+//! executed open-loop by the coordinator's characterization mode.
+
+use crate::util::rng::Pcg64;
+use crate::util::timeseries::TimeSeries;
+
+/// An open-loop powercap schedule (zero-order hold between points) with a
+/// total duration.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    /// Cap changes: `(time [s], pcap [W])`, starting at t = 0.
+    pub schedule: TimeSeries,
+    /// Total duration of the run [s].
+    pub duration: f64,
+}
+
+impl Plan {
+    /// The cap in force at time `t`.
+    pub fn pcap_at(&self, t: f64) -> f64 {
+        self.schedule
+            .zoh(t)
+            .unwrap_or_else(|| self.schedule.values[0])
+    }
+
+    /// Number of distinct levels.
+    pub fn levels(&self) -> usize {
+        self.schedule.len()
+    }
+}
+
+/// Constant-cap plan (static characterization: one Fig. 4 point per run).
+pub fn constant(pcap: f64, duration: f64) -> Plan {
+    let mut schedule = TimeSeries::new();
+    schedule.push(0.0, pcap);
+    Plan { schedule, duration }
+}
+
+/// §4.3 staircase: from `lo` to `hi` in `step` increments, holding each
+/// level for `hold` seconds (Fig. 3 uses 40→120 W by 20 W).
+pub fn staircase(lo: f64, hi: f64, step: f64, hold: f64) -> Plan {
+    assert!(step > 0.0 && hi >= lo && hold > 0.0);
+    let mut schedule = TimeSeries::new();
+    let mut level = lo;
+    let mut t = 0.0;
+    while level <= hi + 1e-9 {
+        schedule.push(t, level.min(hi));
+        t += hold;
+        level += step;
+    }
+    Plan {
+        schedule,
+        duration: t,
+    }
+}
+
+/// §5.1 random-step excitation: piecewise-constant caps with magnitudes
+/// uniform in `[lo, hi]` and dwell times drawn so switching frequency spans
+/// `[f_min, f_max]` (log-uniform, capturing both slow and fast dynamics).
+pub fn random_steps(
+    lo: f64,
+    hi: f64,
+    f_min: f64,
+    f_max: f64,
+    duration: f64,
+    rng: &mut Pcg64,
+) -> Plan {
+    assert!(hi > lo && f_max > f_min && f_min > 0.0 && duration > 0.0);
+    let mut schedule = TimeSeries::new();
+    let mut t = 0.0;
+    while t < duration {
+        let pcap = rng.uniform(lo, hi);
+        // Log-uniform switching frequency → dwell = 1/f.
+        let logf = rng.uniform(f_min.ln(), f_max.ln());
+        let dwell = 1.0 / logf.exp();
+        schedule.push(t, pcap);
+        t += dwell;
+    }
+    Plan {
+        schedule,
+        duration,
+    }
+}
+
+/// Pseudo-random binary sequence between two levels — a classic
+/// system-identification excitation used by the ablation benches to compare
+/// identification quality across excitation shapes.
+pub fn prbs(lo: f64, hi: f64, bit: f64, duration: f64, rng: &mut Pcg64) -> Plan {
+    assert!(hi > lo && bit > 0.0);
+    let mut schedule = TimeSeries::new();
+    let mut t = 0.0;
+    while t < duration {
+        let level = if rng.next_u32() & 1 == 0 { lo } else { hi };
+        schedule.push(t, level);
+        t += bit;
+    }
+    Plan { schedule, duration }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn staircase_matches_paper_plan() {
+        // 40→120 W by 20 W: five levels.
+        let p = staircase(40.0, 120.0, 20.0, 20.0);
+        assert_eq!(p.levels(), 5);
+        assert_eq!(p.pcap_at(0.0), 40.0);
+        assert_eq!(p.pcap_at(19.9), 40.0);
+        assert_eq!(p.pcap_at(20.0), 60.0);
+        assert_eq!(p.pcap_at(99.0), 120.0);
+        assert_eq!(p.duration, 100.0);
+    }
+
+    #[test]
+    fn constant_plan() {
+        let p = constant(80.0, 300.0);
+        assert_eq!(p.pcap_at(0.0), 80.0);
+        assert_eq!(p.pcap_at(299.0), 80.0);
+        assert_eq!(p.levels(), 1);
+    }
+
+    #[test]
+    fn random_steps_in_ranges() {
+        let mut rng = Pcg64::seeded(1);
+        let p = random_steps(40.0, 120.0, 1e-2, 1.0, 600.0, &mut rng);
+        assert!(p.levels() > 5);
+        for (i, (&t, &v)) in p.schedule.times.iter().zip(&p.schedule.values).enumerate() {
+            assert!((40.0..=120.0).contains(&v), "level {v}");
+            if i > 0 {
+                let dwell = t - p.schedule.times[i - 1];
+                assert!(
+                    (0.99..=101.0).contains(&dwell),
+                    "dwell {dwell} outside [1,100] s"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn random_steps_deterministic() {
+        let mut r1 = Pcg64::seeded(2);
+        let mut r2 = Pcg64::seeded(2);
+        let p1 = random_steps(40.0, 120.0, 1e-2, 1.0, 300.0, &mut r1);
+        let p2 = random_steps(40.0, 120.0, 1e-2, 1.0, 300.0, &mut r2);
+        assert_eq!(p1.schedule, p2.schedule);
+    }
+
+    #[test]
+    fn prbs_two_levels() {
+        let mut rng = Pcg64::seeded(3);
+        let p = prbs(40.0, 120.0, 5.0, 200.0, &mut rng);
+        assert!(p.schedule.values.iter().all(|&v| v == 40.0 || v == 120.0));
+        assert!(p.schedule.values.iter().any(|&v| v == 40.0));
+        assert!(p.schedule.values.iter().any(|&v| v == 120.0));
+    }
+}

@@ -1,0 +1,28 @@
+//! # powerctl — control-theoretic power regulation for HPC nodes
+//!
+//! Reproduction of Cerf et al., *"Sustaining Performance While Reducing
+//! Energy Consumption: A Control Theory Approach"* (Euro-Par 2021): a PI
+//! controller tracks an application-progress setpoint by actuating the RAPL
+//! power cap, saving energy on memory-bound phases with a user-chosen
+//! performance-degradation budget ε.
+//!
+//! The crate is the L3 (Rust) layer of a three-layer stack:
+//!
+//! * **L1** — Pallas STREAM kernels (`python/compile/kernels/`), AOT-lowered,
+//! * **L2** — JAX compute graph (`python/compile/model.py`) → HLO text
+//!   artifacts,
+//! * **L3** — this crate: the NRM-style coordinator, the PI controller, the
+//!   simulated Grid'5000 substrate, the identification pipeline and the
+//!   evaluation harness. Python never runs on the control path.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod control;
+pub mod coordinator;
+pub mod experiments;
+pub mod ident;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;

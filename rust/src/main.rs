@@ -1,0 +1,223 @@
+//! `powerctl` — CLI for the power-regulation reproduction.
+//!
+//! Subcommands map one-to-one onto the paper's experiments (DESIGN.md §5):
+//!
+//! ```text
+//! powerctl clusters                     Table 1
+//! powerctl identify [--full]           Table 2 + Fig. 4 + Fig. 5 (+Pearson)
+//! powerctl characterize [--cluster c]  Fig. 3 staircase
+//! powerctl control --cluster gros --epsilon 0.15
+//!                                      Fig. 6a single closed-loop run
+//! powerctl sweep [--full]              Fig. 6b + Fig. 7 evaluation campaign
+//! powerctl ablation                    design-choice ablations
+//! powerctl live [--iterations n]       live PJRT workload + NRM daemon demo
+//! powerctl all [--full]                everything, in order
+//! ```
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+use powerctl::control::baseline::Policy;
+use powerctl::coordinator::nrm::{NrmDaemon, SimBackend};
+use powerctl::coordinator::transport::InProc;
+use powerctl::experiments::{self, Ctx, Scale};
+use powerctl::sim::cluster::{Cluster, ClusterId};
+use powerctl::sim::clock::WallClock;
+use powerctl::sim::node::NodeSim;
+use powerctl::util::cli::Cli;
+use powerctl::workload::{run_live, LiveConfig};
+
+fn cli() -> Cli {
+    Cli::new("powerctl", "control-theoretic power regulation (Cerf et al., Euro-Par 2021)")
+        .subcommand("clusters", "print Table 1 (simulated cluster specs)")
+        .subcommand("identify", "identification campaign: Table 2, Fig. 4, Fig. 5")
+        .subcommand("characterize", "open-loop staircase: Fig. 3")
+        .subcommand("control", "single closed-loop run: Fig. 6a")
+        .subcommand("sweep", "full evaluation campaign: Fig. 6b + Fig. 7")
+        .subcommand("ablation", "design-choice ablations")
+        .subcommand("replay", "re-fit models + aggregates from saved campaign CSVs")
+        .subcommand("live", "live demo: PJRT workload + NRM daemon + PI")
+        .subcommand("all", "run every experiment in order")
+        .opt("cluster", "cluster: gros|dahu|yeti", Some("gros"))
+        .opt("epsilon", "degradation factor in [0,0.5]", Some("0.15"))
+        .opt("seed", "root RNG seed", Some("42"))
+        .opt("out", "output directory for CSVs", Some("results"))
+        .opt("iterations", "live mode: iterations to run", Some("120"))
+        .opt("artifacts", "artifacts directory (live mode)", Some("artifacts"))
+        .flag("full", "paper-scale campaign sizes (slower)")
+}
+
+fn main() {
+    let args = cli().parse_env();
+    let scale = if args.has_flag("full") { Scale::Full } else { Scale::Fast };
+    let seed = args.get_u64("seed").unwrap_or(42);
+    let ctx = Ctx::new(args.get("out").unwrap_or("results"), seed, scale);
+    std::fs::create_dir_all(&ctx.out_dir).ok();
+
+    let sub = args.subcommand.clone().unwrap_or_else(|| {
+        eprintln!("{}", cli().help_text());
+        std::process::exit(2);
+    });
+
+    match sub.as_str() {
+        "clusters" => print!("{}", experiments::tables::table1()),
+        "identify" => {
+            let (out, idents) = experiments::tables::run(&ctx);
+            print!("{out}");
+            let (f4, _) = experiments::fig4::run(&ctx, &idents);
+            print!("{f4}");
+            let (f5, _) = experiments::fig5::run(&ctx, &idents);
+            print!("{f5}");
+        }
+        "characterize" => {
+            let (out, _) = experiments::fig3::run(&ctx);
+            print!("{out}");
+        }
+        "control" => {
+            let id = parse_cluster(&args);
+            let eps = args.get_f64("epsilon").unwrap_or(0.15);
+            let ident = experiments::identify(&ctx, id);
+            let rec = experiments::fig6::representative_run(&ctx, &ident, eps);
+            println!(
+                "closed loop on {}: ε={eps}, setpoint {:.1} Hz → exec {:.1} s, energy {:.0} J, final cap {:.1} W",
+                id.name(),
+                rec.setpoint,
+                rec.exec_time,
+                rec.energy,
+                rec.pcap.values.last().copied().unwrap_or(f64::NAN)
+            );
+            println!("per-period trace: {}", ctx.path(&format!("fig6a_{}_eps{eps:.2}.csv", id.name())).display());
+        }
+        "sweep" => {
+            let idents = experiments::identify_all(&ctx);
+            let (f6, _) = experiments::fig6::run(&ctx, &idents);
+            print!("{f6}");
+            let (f7, _) = experiments::fig7::run(&ctx, &idents);
+            print!("{f7}");
+        }
+        "ablation" => {
+            let idents = experiments::identify_all(&ctx);
+            print!("{}", experiments::ablation::run(&ctx, &idents));
+        }
+        "replay" => match experiments::replay::run(&ctx.out_dir) {
+            Ok(report) => print!("{report}"),
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(1);
+            }
+        },
+        "live" => run_live_demo(&ctx, &args),
+        "all" => {
+            print!("{}", experiments::tables::table1());
+            let (t2, idents) = experiments::tables::run(&ctx);
+            print!("{t2}");
+            let (f3, _) = experiments::fig3::run(&ctx);
+            print!("{f3}");
+            let (f4, _) = experiments::fig4::run(&ctx, &idents);
+            print!("{f4}");
+            let (f5, _) = experiments::fig5::run(&ctx, &idents);
+            print!("{f5}");
+            let (f6, _) = experiments::fig6::run(&ctx, &idents);
+            print!("{f6}");
+            let (f7, _) = experiments::fig7::run(&ctx, &idents);
+            print!("{f7}");
+            print!("{}", experiments::ablation::run(&ctx, &idents));
+        }
+        other => {
+            eprintln!("unknown subcommand '{other}'\n{}", cli().help_text());
+            std::process::exit(2);
+        }
+    }
+}
+
+fn parse_cluster(args: &powerctl::util::cli::Args) -> ClusterId {
+    let name = args.get("cluster").unwrap_or("gros");
+    ClusterId::parse(name).unwrap_or_else(|| {
+        eprintln!("unknown cluster '{name}' (gros|dahu|yeti)");
+        std::process::exit(2);
+    })
+}
+
+/// Live demo: the real three-layer stack. A workload thread executes the
+/// AOT STREAM artifact via PJRT, paced by the simulated node's sustainable
+/// rate, and heartbeats flow through the in-proc transport into the NRM
+/// daemon, whose PI controller actuates the simulated RAPL cap in real
+/// time.
+fn run_live_demo(ctx: &Ctx, args: &powerctl::util::cli::Args) {
+    let id = parse_cluster(args);
+    let eps = args.get_f64("epsilon").unwrap_or(0.15);
+    let iterations = args.get_u64("iterations").unwrap_or(120);
+    let artifacts = args.get("artifacts").unwrap_or("artifacts").to_string();
+
+    println!("identifying {} (fast campaign)...", id.name());
+    let ident = experiments::identify(ctx, id);
+    let (policy, sp) = experiments::fig6::make_pi(&ident, eps);
+    println!("PI tuned: setpoint {sp:.1} Hz (ε={eps})");
+
+    // Probe the artifacts before spawning (PJRT handles are not Send; the
+    // workload thread builds its own runtime).
+    if let Err(e) = powerctl::runtime::Manifest::load(&artifacts) {
+        eprintln!("cannot load artifacts from '{artifacts}': {e}\nrun `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    let node = NodeSim::new(Cluster::get(id), ctx.seed);
+    let backend = SimBackend::new(node);
+    let rate = backend.rate_handle();
+    let (tx, rx) = InProc::pair();
+    let mut daemon = NrmDaemon::new(
+        rx,
+        Box::new(backend),
+        Box::new(policy) as Box<dyn Policy>,
+        1.0,
+        sp,
+        eps,
+    );
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop_wl = stop.clone();
+    let seed = seed_i32(ctx.seed);
+    let wl = std::thread::spawn(move || {
+        let result = (|| {
+            let runtime = powerctl::runtime::Runtime::new(&artifacts)?;
+            eprintln!("PJRT platform: {}", runtime.platform());
+            let executor = powerctl::runtime::StreamExecutor::new(runtime, seed, true)?;
+            run_live(
+                executor,
+                &tx,
+                rate,
+                &stop_wl,
+                &LiveConfig {
+                    app_id: 1,
+                    iterations,
+                    initial_rate: 25.0,
+                    check_digest: true,
+                },
+            )
+        })();
+        // Whatever happened, unblock the daemon: it must never wait on a
+        // dead workload.
+        stop_wl.store(true, std::sync::atomic::Ordering::Relaxed);
+        result
+    });
+
+    let mut clock = WallClock::new();
+    let rec = daemon.run(&mut clock, &stop, Some(iterations), 600.0);
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let outcome = wl.join().expect("workload thread").expect("workload failed");
+
+    println!(
+        "live run done: {} iterations in {:.1} s ({:.1} Hz), digest OK",
+        outcome.iterations, outcome.wall_time, outcome.rate
+    );
+    let final_prog = rec.progress.values.last().copied().unwrap_or(f64::NAN);
+    let final_cap = rec.pcap.values.last().copied().unwrap_or(f64::NAN);
+    println!("daemon: final progress {final_prog:.1} Hz (setpoint {sp:.1}), final cap {final_cap:.1} W");
+    let path = ctx.path("live_run.csv");
+    let _ = rec.to_table().save(&path);
+    println!("trace: {}", path.display());
+}
+
+fn seed_i32(seed: u64) -> i32 {
+    (seed % i32::MAX as u64) as i32
+}

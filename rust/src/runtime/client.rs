@@ -1,0 +1,234 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
+//! client (the L3↔L2 bridge; see /opt/xla-example/load_hlo for the pattern
+//! and DESIGN.md §8 for why the interchange format is HLO *text*).
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! only place the Rust side touches XLA.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// One loadable entry in the manifest.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub file: String,
+    /// STREAM iterations performed per call (0 for init).
+    pub iters: u64,
+}
+
+/// The artifact manifest written by `python/compile/aot.py`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Elements per STREAM array.
+    pub n: usize,
+    /// Pallas block size used at lowering.
+    pub block: usize,
+    /// STREAM scalar constant.
+    pub scalar: f64,
+    /// Bytes moved per stream_step on an ideal bandwidth-bound machine.
+    pub bytes_per_step: u64,
+    /// Entry name → file + metadata.
+    pub entries: HashMap<String, Entry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`?)"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let get_u64 = |k: &str| {
+            json.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| anyhow!("manifest missing numeric '{k}'"))
+        };
+        let mut entries = HashMap::new();
+        if let Some(Json::Obj(map)) = json.get("entries") {
+            for (name, entry) in map {
+                let file = entry
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry '{name}' missing file"))?;
+                let iters = entry.get("iters").and_then(Json::as_u64).unwrap_or(1);
+                entries.insert(
+                    name.clone(),
+                    Entry {
+                        file: file.to_string(),
+                        iters,
+                    },
+                );
+            }
+        }
+        Ok(Manifest {
+            n: get_u64("n")? as usize,
+            block: get_u64("block")? as usize,
+            scalar: json
+                .get("scalar")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("manifest missing 'scalar'"))?,
+            bytes_per_step: get_u64("bytes_per_step")?,
+            entries,
+        })
+    }
+}
+
+/// A compiled artifact cache over one PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and load the manifest from `dir`.
+    pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            executables: HashMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) the named entry.
+    pub fn load(&mut self, entry: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(entry) {
+            let file = &self
+                .manifest
+                .entries
+                .get(entry)
+                .ok_or_else(|| anyhow!("unknown artifact entry '{entry}'"))?
+                .file;
+            let path = self.dir.join(file);
+            let path_str = path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)
+                .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling '{entry}': {e:?}"))?;
+            self.executables.insert(entry.to_string(), exe);
+        }
+        Ok(&self.executables[entry])
+    }
+
+    /// Execute an entry with literal inputs; returns the flattened tuple of
+    /// output literals (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&mut self, entry: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.load(entry)?;
+        let exe = &self.executables[entry];
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing '{entry}': {e:?}"))?;
+        let literal = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of '{entry}': {e:?}"))?;
+        literal
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of '{entry}': {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(artifacts_dir()).unwrap();
+        assert!(m.n > 0);
+        assert_eq!(m.bytes_per_step, 10 * m.n as u64 * 4);
+        assert!(m.entries.contains_key("stream_step"));
+        assert!(m.entries.contains_key("stream_init"));
+    }
+
+    #[test]
+    fn manifest_missing_dir_errors() {
+        let err = Manifest::load("/nonexistent-dir-xyz").unwrap_err();
+        assert!(err.to_string().contains("manifest.json"));
+    }
+
+    #[test]
+    fn runtime_loads_and_runs_stream_init() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = Runtime::new(artifacts_dir()).unwrap();
+        let out = rt
+            .execute("stream_init", &[xla::Literal::scalar(7i32)])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let a = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(a.len(), rt.manifest.n);
+        // STREAM init: a ≈ 1 (+ seed jitter ≤ 1e-3).
+        assert!(a.iter().all(|&x| (x - 1.0).abs() < 1e-2));
+    }
+
+    #[test]
+    fn stream_step_matches_oracle_semantics() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = Runtime::new(artifacts_dir()).unwrap();
+        let n = rt.manifest.n;
+        let s = rt.manifest.scalar as f32;
+        let a0 = 1.0f32;
+        let out = rt
+            .execute("stream_step", &[xla::Literal::vec1(&vec![a0; n])])
+            .unwrap();
+        assert_eq!(out.len(), 2);
+        let a1 = out[0].to_vec::<f32>().unwrap();
+        // Oracle: c=a; b=s·c; c=a+b; a=b+s·c ⇒ a' = s·a + s·(a + s·a).
+        let expect = s * a0 + s * (a0 + s * a0);
+        assert!(
+            a1.iter().all(|&x| (x - expect).abs() < 1e-3),
+            "a' {} vs {expect}",
+            a1[0]
+        );
+        // Digest = Σa' + 2Σb + 3Σc with b = s·a, c = a + s·a.
+        let digest = out[1].to_vec::<f32>().unwrap()[0];
+        let expect_digest =
+            n as f32 * (expect + 2.0 * s * a0 + 3.0 * (a0 + s * a0));
+        let rel = (digest - expect_digest).abs() / expect_digest.abs();
+        assert!(rel < 1e-3, "digest {digest} vs {expect_digest}");
+    }
+
+    #[test]
+    fn unknown_entry_errors() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = Runtime::new(artifacts_dir()).unwrap();
+        assert!(rt.execute("nope", &[]).is_err());
+    }
+}

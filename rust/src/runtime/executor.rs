@@ -1,0 +1,161 @@
+//! STREAM-step executor: device-resident iteration of the AOT artifact.
+//!
+//! Owns the `a` array state across iterations (STREAM's only loop-carried
+//! array) and validates the checksum digest against the closed-form oracle,
+//! so runtime numeric corruption is caught on the hot path at O(1) cost.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::client::Runtime;
+
+/// Iterates `stream_step` keeping state between calls.
+pub struct StreamExecutor {
+    runtime: Runtime,
+    /// Artifact entry executed per [`Self::step`] call.
+    entry: String,
+    /// STREAM iterations that entry performs per call.
+    iters_per_call: u64,
+    /// Current `a` array (host copy; re-uploaded per step — see §Perf notes
+    /// in EXPERIMENTS.md for the device-residency discussion).
+    state: Vec<f32>,
+    iterations: u64,
+    /// Expected per-element value of `a` (closed form), for digest checks.
+    expected_a: f64,
+    check_digest: bool,
+}
+
+impl StreamExecutor {
+    /// Initialize from the artifact's `stream_init` with `seed`, iterating
+    /// the plain single-iteration `stream_step` entry.
+    pub fn new(runtime: Runtime, seed: i32, check_digest: bool) -> Result<StreamExecutor> {
+        Self::with_entry(runtime, "stream_step", seed, check_digest)
+    }
+
+    /// Initialize with an explicit step entry (e.g. `stream_step_k`, the
+    /// fused multi-iteration §Perf variant that amortizes host↔device
+    /// copies and dispatch over `iters` iterations per call).
+    pub fn with_entry(
+        mut runtime: Runtime,
+        entry: &str,
+        seed: i32,
+        check_digest: bool,
+    ) -> Result<StreamExecutor> {
+        let iters_per_call = runtime
+            .manifest
+            .entries
+            .get(entry)
+            .ok_or_else(|| anyhow!("unknown step entry '{entry}'"))?
+            .iters
+            .max(1);
+        let out = runtime.execute("stream_init", &[xla::Literal::scalar(seed)])?;
+        let state = out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("stream_init output: {e:?}"))?;
+        let expected_a = f64::from(state[0]);
+        Ok(StreamExecutor {
+            runtime,
+            entry: entry.to_string(),
+            iters_per_call,
+            state,
+            iterations: 0,
+            expected_a,
+            check_digest,
+        })
+    }
+
+    /// STREAM iterations performed per [`Self::step`] call.
+    pub fn iters_per_call(&self) -> u64 {
+        self.iters_per_call
+    }
+
+    pub fn n(&self) -> usize {
+        self.runtime.manifest.n
+    }
+
+    pub fn iterations(&self) -> u64 {
+        self.iterations
+    }
+
+    /// Bytes moved per iteration on an ideal bandwidth-bound machine.
+    pub fn bytes_per_step(&self) -> u64 {
+        self.runtime.manifest.bytes_per_step
+    }
+
+    /// Run the step entry (one or `iters_per_call` STREAM iterations).
+    /// Returns the digest.
+    pub fn step(&mut self) -> Result<f64> {
+        let input = xla::Literal::vec1(&self.state);
+        let out = self.runtime.execute(&self.entry, &[input])?;
+        self.state = out[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("stream_step output: {e:?}"))?;
+        let digest = f64::from(
+            out[1]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("digest: {e:?}"))?[0],
+        );
+        self.iterations += self.iters_per_call;
+
+        if self.check_digest {
+            // Closed form per iteration: a' = s·a + s·(a + s·a); b = s·a;
+            // c = a + s·a. With s = √2−1, a' == a, so this telescopes.
+            let s = self.runtime.manifest.scalar;
+            let mut a = self.expected_a;
+            let (mut b, mut c) = (0.0, 0.0);
+            for _ in 0..self.iters_per_call {
+                b = s * a;
+                c = a + b;
+                a = s * a + s * c;
+            }
+            self.expected_a = a;
+            let expect = self.n() as f64 * (a + 2.0 * b + 3.0 * c);
+            let rel = (digest - expect).abs() / expect.abs().max(1e-12);
+            // f32 accumulation over 2^20 elements: generous tolerance.
+            if rel > 1e-2 {
+                return Err(anyhow!(
+                    "digest check failed at iteration {}: {digest} vs {expect}",
+                    self.iterations
+                ));
+            }
+        }
+        Ok(digest)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn executor(check: bool) -> Option<StreamExecutor> {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let rt = Runtime::new(artifacts_dir()).unwrap();
+        Some(StreamExecutor::new(rt, 1, check).unwrap())
+    }
+
+    #[test]
+    fn digest_validates_over_iterations() {
+        // s = √2−1 makes the update norm-preserving, so the digest check
+        // holds for arbitrarily many iterations.
+        let Some(mut ex) = executor(true) else { return };
+        for _ in 0..8 {
+            ex.step().unwrap();
+        }
+        assert_eq!(ex.iterations(), 8);
+    }
+
+    #[test]
+    fn iterations_counted_without_check() {
+        let Some(mut ex) = executor(false) else { return };
+        ex.step().unwrap();
+        ex.step().unwrap();
+        assert_eq!(ex.iterations(), 2);
+    }
+}

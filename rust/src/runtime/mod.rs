@@ -1,0 +1,11 @@
+//! PJRT runtime: the only place L3 touches XLA.
+//!
+//! [`client::Runtime`] loads + compiles + caches the HLO-text artifacts
+//! built by `python/compile/aot.py`; [`executor::StreamExecutor`] iterates
+//! the STREAM step with device state and digest validation.
+
+pub mod client;
+pub mod executor;
+
+pub use client::{Manifest, Runtime};
+pub use executor::StreamExecutor;

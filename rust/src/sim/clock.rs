@@ -1,0 +1,110 @@
+//! Virtual experiment clock.
+//!
+//! All simulated experiments run on a virtual clock so that (a) campaigns
+//! of thousands of runs finish in seconds of wall time, and (b) results are
+//! bit-reproducible — wall-clock jitter never enters the data. The
+//! coordinator is generic over [`Clock`] so the same control loop drives
+//! either the simulator or (on real hardware) the OS clock.
+
+use std::time::{Duration, Instant};
+
+/// A monotonic clock abstraction: seconds since an arbitrary epoch.
+pub trait Clock {
+    fn now(&self) -> f64;
+    /// Advance/wait until `t` (virtual clocks jump; real clocks sleep).
+    fn wait_until(&mut self, t: f64);
+}
+
+/// Discrete-event virtual clock.
+#[derive(Debug, Clone, Default)]
+pub struct VirtualClock {
+    now: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn advance(&mut self, dt: f64) {
+        assert!(dt >= 0.0, "cannot advance clock backwards (dt={dt})");
+        self.now += dt;
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now(&self) -> f64 {
+        self.now
+    }
+
+    fn wait_until(&mut self, t: f64) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+}
+
+/// Real monotonic clock (used by the `serve`/demo paths; never in benches
+/// or reproduced figures).
+#[derive(Debug)]
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> Self {
+        WallClock {
+            epoch: Instant::now(),
+        }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    fn wait_until(&mut self, t: f64) {
+        let now = self.now();
+        if t > now {
+            std::thread::sleep(Duration::from_secs_f64(t - now));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_advances() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(1.5);
+        assert_eq!(c.now(), 1.5);
+        c.wait_until(3.0);
+        assert_eq!(c.now(), 3.0);
+        c.wait_until(2.0); // no going back
+        assert_eq!(c.now(), 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "backwards")]
+    fn negative_advance_panics() {
+        VirtualClock::new().advance(-1.0);
+    }
+
+    #[test]
+    fn wall_clock_monotonic() {
+        let c = WallClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+}

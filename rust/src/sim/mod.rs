@@ -1,0 +1,32 @@
+//! Simulated Grid'5000 substrate.
+//!
+//! The paper's experiments are gated on hardware we do not have (Grid'5000
+//! nodes, Intel RAPL, physical power measurement). Per the substitution rule
+//! (DESIGN.md §2) this module implements the closest synthetic equivalent:
+//!
+//! * [`cluster`] — the three clusters of Table 1 with the paper's Table 2
+//!   parameters as *ground truth*,
+//! * [`rapl`] — the RAPL actuator with its documented inaccuracy
+//!   (`power = a·pcap + b`), clamping and an energy counter,
+//! * [`plant`] — the static power→progress nonlinearity + first-order
+//!   dynamics (Eqs. 2–3),
+//! * [`disturbance`] — socket-scaled noise, sporadic progress-drop events
+//!   (the yeti behaviour of Figs. 3c/6b) and slow thermal drift,
+//! * [`node`] — the composed simulated node exposing exactly the
+//!   sensors/actuators the NRM sees on real hardware,
+//! * [`clock`] — the virtual experiment clock.
+//!
+//! **Honesty rule**: ground-truth parameters never leak outside `sim::`;
+//! the identification pipeline re-derives them from (noisy) simulated
+//! experiments, and the controller is tuned from the fitted values only.
+
+pub mod clock;
+pub mod cluster;
+pub mod disturbance;
+pub mod node;
+pub mod plant;
+pub mod rapl;
+
+pub use clock::VirtualClock;
+pub use cluster::{Cluster, ClusterId};
+pub use node::{NodeSim, NodeSensors};

@@ -1,0 +1,345 @@
+//! The composed simulated node: RAPL actuator + plant + disturbances +
+//! heartbeat emission.
+//!
+//! [`NodeSim`] exposes exactly the interface the NRM sees on real hardware:
+//!
+//! * an actuator: `set_pcap(watts)` (clamped like the sysfs knob);
+//! * sensors: noisy power reading, monotone energy counter;
+//! * the application side effect: a stream of heartbeat timestamps, paced
+//!   by the plant's true progress with two noise components — a slow
+//!   Ornstein–Uhlenbeck modulation (progress variability the median cannot
+//!   average out; scales with socket count) and per-beat interval jitter
+//!   (OS/socket scheduling noise the median is robust to, the reason the
+//!   paper picks the median in Eq. 1).
+//!
+//! The node knows nothing about controllers or experiments; it is a plant
+//! with sensors, stepped on a virtual clock.
+
+use crate::sim::cluster::Cluster;
+use crate::sim::disturbance::{Disturbances, DisturbanceState};
+use crate::sim::plant::Plant;
+use crate::sim::rapl::{EnergyCounter, RaplPackage};
+use crate::util::rng::Pcg64;
+
+/// Sensor snapshot returned by [`NodeSim::step`].
+#[derive(Debug, Clone)]
+pub struct NodeSensors {
+    /// Simulation time at the end of the step [s].
+    pub time: f64,
+    /// Requested (clamped) power cap [W] — per package, as in the paper.
+    pub pcap: f64,
+    /// Measured per-package power [W] (noisy sensor).
+    pub power: f64,
+    /// Node energy counter [J] (sums all packages, noise-free integral).
+    pub energy: f64,
+    /// Heartbeat timestamps emitted during this step.
+    pub heartbeats: Vec<f64>,
+    /// True instantaneous progress [Hz] — for oracle checks only; the
+    /// coordinator must derive progress from `heartbeats` (Eq. 1).
+    pub true_progress: f64,
+    /// Whether a drop event is active (oracle/debug only).
+    pub drop_active: bool,
+}
+
+/// Per-beat interval jitter coefficient of variation. Deliberately includes
+/// occasional heavy-tailed outliers so the median-vs-mean choice in Eq. (1)
+/// is observable in tests.
+const BEAT_JITTER_CV: f64 = 0.08;
+/// Fraction of beats that are extreme stragglers (context switches, page
+/// faults — §2.1's "robust to extreme values" motivation).
+const STRAGGLER_PROB: f64 = 0.01;
+const STRAGGLER_FACTOR: f64 = 8.0;
+/// Correlation time of the OU progress-noise process [s].
+const OU_THETA: f64 = 2.0;
+
+/// The simulated node.
+#[derive(Debug, Clone)]
+pub struct NodeSim {
+    cluster: Cluster,
+    package: RaplPackage,
+    plant: Plant,
+    disturbances: Disturbances,
+    energy: EnergyCounter,
+    rng: Pcg64,
+    time: f64,
+    /// OU state: slow additive progress noise [Hz].
+    ou: f64,
+    /// Work accumulator: fractional heartbeats owed.
+    backlog: f64,
+    /// Time of the last emitted heartbeat.
+    last_beat: f64,
+    /// Total heartbeats emitted since construction.
+    beats: u64,
+    last_dist: DisturbanceState,
+}
+
+impl NodeSim {
+    /// Build a node for `cluster`; `seed` fixes all stochastic behaviour.
+    pub fn new(cluster: Cluster, seed: u64) -> Self {
+        let mut root = Pcg64::new(seed, cluster.id as u64 + 1);
+        let dist_rng = root.split(1);
+        let package = RaplPackage::new(
+            cluster.rapl_a,
+            cluster.rapl_b,
+            (cluster.pcap_min, cluster.pcap_max),
+        );
+        let plant = Plant::new(&cluster);
+        NodeSim {
+            disturbances: Disturbances::new(&cluster, dist_rng),
+            energy: EnergyCounter::new(),
+            rng: root,
+            time: 0.0,
+            ou: 0.0,
+            backlog: 0.0,
+            last_beat: 0.0,
+            beats: 0,
+            last_dist: DisturbanceState::default(),
+            package,
+            plant,
+            cluster,
+        }
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+
+    pub fn time(&self) -> f64 {
+        self.time
+    }
+
+    pub fn beats(&self) -> u64 {
+        self.beats
+    }
+
+    /// Actuator: request a new power cap; returns the clamped value.
+    pub fn set_pcap(&mut self, watts: f64) -> f64 {
+        self.package.set_cap(watts)
+    }
+
+    /// Switch the application phase profile (workload::phases extension).
+    pub fn set_profile(&mut self, profile: crate::sim::plant::PowerProfile) {
+        self.plant.set_profile(profile);
+    }
+
+    pub fn pcap(&self) -> f64 {
+        self.package.cap()
+    }
+
+    /// Advance the node by `dt` seconds with sub-stepping for numerical
+    /// fidelity of the plant ODE and heartbeat timestamps.
+    pub fn step(&mut self, dt: f64) -> NodeSensors {
+        assert!(dt > 0.0, "step must advance time");
+        // Sub-step at ≤50 ms so heartbeat timestamps within the step are
+        // accurate and the RAPL window lag is resolved.
+        let n_sub = (dt / 0.05).ceil().max(1.0) as usize;
+        let h = dt / n_sub as f64;
+        // §Perf: pre-size for the expected beat count (plant rate × dt) —
+        // node.step dominates campaign wall time and repeated Vec growth
+        // showed up in the profile.
+        let expected = (self.plant.progress() * dt) as usize + 4;
+        let mut heartbeats = Vec::with_capacity(expected);
+        let mut power_reading = 0.0;
+        for _ in 0..n_sub {
+            self.time += h;
+            let dist = self.disturbances.step(h);
+            power_reading =
+                self.package
+                    .step(h, dist.drop_active, &mut self.rng, self.cluster.power_noise);
+            let true_power = self.package.true_power();
+            self.energy
+                .accumulate(true_power * self.cluster.sockets as f64, h);
+            let progress = self.plant.step(h, true_power, &dist);
+            self.last_dist = dist;
+
+            // OU progress-noise update (exact discretization).
+            let decay = (-h / OU_THETA).exp();
+            let sigma = self.cluster.progress_noise;
+            self.ou = self.ou * decay + self.rng.gauss(0.0, sigma * (1.0 - decay * decay).sqrt());
+
+            // Heartbeat emission: rate = max(0, progress + ou).
+            let rate = (progress + self.ou).max(0.0);
+            self.backlog += rate * h;
+            while self.backlog >= 1.0 {
+                self.backlog -= 1.0;
+                // Nominal emission time: interpolate within the sub-step.
+                let nominal = self.time - h * (self.backlog / (rate * h).max(1e-12)).min(1.0);
+                // Per-beat jitter: mostly small, occasionally a straggler.
+                let jitter = if self.rng.f64() < STRAGGLER_PROB {
+                    STRAGGLER_FACTOR * self.rng.f64()
+                } else {
+                    self.rng.gauss(0.0, BEAT_JITTER_CV)
+                };
+                let interval = (nominal - self.last_beat).max(1e-9);
+                let t = (self.last_beat + interval * (1.0 + jitter).max(0.05)).min(self.time);
+                let t = t.max(self.last_beat); // keep monotone
+                heartbeats.push(t);
+                self.last_beat = t;
+                self.beats += 1;
+            }
+        }
+        NodeSensors {
+            time: self.time,
+            pcap: self.package.cap(),
+            power: power_reading,
+            energy: self.energy.read(),
+            heartbeats,
+            true_progress: self.plant.progress(),
+            drop_active: self.last_dist.drop_active,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::cluster::{Cluster, ClusterId};
+    use crate::util::stats;
+
+    fn node(id: ClusterId, seed: u64) -> NodeSim {
+        NodeSim::new(Cluster::get(id), seed)
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut a = node(ClusterId::Gros, 7);
+        let mut b = node(ClusterId::Gros, 7);
+        for _ in 0..50 {
+            let sa = a.step(1.0);
+            let sb = b.step(1.0);
+            assert_eq!(sa.power, sb.power);
+            assert_eq!(sa.heartbeats, sb.heartbeats);
+        }
+    }
+
+    #[test]
+    fn heartbeat_rate_tracks_progress() {
+        let mut n = node(ClusterId::Gros, 1);
+        n.set_pcap(120.0);
+        let mut beats = 0usize;
+        let warmup = n.step(5.0); // settle
+        drop(warmup);
+        let t0 = n.time();
+        for _ in 0..60 {
+            beats += n.step(1.0).heartbeats.len();
+        }
+        let rate = beats as f64 / (n.time() - t0);
+        let expect = Cluster::get(ClusterId::Gros).max_progress();
+        assert!(
+            (rate - expect).abs() < 1.5,
+            "rate {rate} vs expected {expect}"
+        );
+    }
+
+    #[test]
+    fn heartbeats_monotone_and_in_step() {
+        let mut n = node(ClusterId::Yeti, 2);
+        let mut last = 0.0;
+        for _ in 0..100 {
+            let s = n.step(1.0);
+            for &t in &s.heartbeats {
+                assert!(t >= last, "non-monotone heartbeat {t} < {last}");
+                assert!(t <= s.time + 1e-9);
+                last = t;
+            }
+        }
+    }
+
+    #[test]
+    fn lower_cap_lower_rate_and_energy() {
+        let run = |cap: f64| {
+            let mut n = node(ClusterId::Dahu, 3);
+            n.set_pcap(cap);
+            n.step(10.0); // settle
+            let e0 = n.step(0.01).energy;
+            let mut beats = 0usize;
+            for _ in 0..60 {
+                beats += n.step(1.0).heartbeats.len();
+            }
+            let e1 = n.step(0.01).energy;
+            (beats, e1 - e0)
+        };
+        let (beats_hi, energy_hi) = run(120.0);
+        let (beats_lo, energy_lo) = run(60.0);
+        assert!(beats_lo < beats_hi, "{beats_lo} !< {beats_hi}");
+        assert!(energy_lo < energy_hi);
+    }
+
+    #[test]
+    fn energy_scales_with_sockets() {
+        let mut g = node(ClusterId::Gros, 4);
+        let mut y = node(ClusterId::Yeti, 4);
+        g.set_pcap(100.0);
+        y.set_pcap(100.0);
+        let eg = g.step(50.0).energy;
+        let ey = y.step(50.0).energy;
+        // yeti has 4 packages vs gros 1; similar per-package power.
+        assert!(ey > 3.0 * eg, "eg={eg} ey={ey}");
+    }
+
+    #[test]
+    fn measured_progress_noise_in_band() {
+        // Aggregating heartbeats with Eq. 1 over 1 s windows must yield a
+        // dispersion comparable to the cluster's progress_noise.
+        for (id, lo, hi) in [
+            // Bands bracket the paper's reported tracking-error dispersions
+            // (gros 1.8, dahu 6.1) — steady-state measurement noise plus
+            // occasional dahu drop events.
+            (ClusterId::Gros, 0.2, 2.5),
+            (ClusterId::Dahu, 0.8, 8.0),
+        ] {
+            let mut n = node(id, 5);
+            n.set_pcap(120.0);
+            n.step(5.0);
+            let mut measured = Vec::new();
+            let mut prev_beat: Option<f64> = None;
+            for _ in 0..240 {
+                let s = n.step(1.0);
+                let mut freqs = Vec::new();
+                for &t in &s.heartbeats {
+                    if let Some(p) = prev_beat {
+                        if t > p {
+                            freqs.push(1.0 / (t - p));
+                        }
+                    }
+                    prev_beat = Some(t);
+                }
+                if !freqs.is_empty() {
+                    measured.push(stats::median(&freqs));
+                }
+            }
+            let sd = stats::stddev(&measured);
+            assert!(
+                (lo..hi).contains(&sd),
+                "{id}: measured progress sd {sd} outside [{lo},{hi})"
+            );
+        }
+    }
+
+    #[test]
+    fn yeti_exhibits_drop_events() {
+        let mut n = node(ClusterId::Yeti, 6);
+        n.set_pcap(120.0);
+        let mut dropped = false;
+        for _ in 0..600 {
+            let s = n.step(1.0);
+            if s.drop_active && s.true_progress < 15.0 {
+                dropped = true;
+                // Measured power collapses during the event (§5.2).
+                assert!(
+                    s.power < 0.8 * Cluster::get(ClusterId::Yeti).expected_power(120.0),
+                    "power did not collapse during drop: {}",
+                    s.power
+                );
+            }
+        }
+        assert!(dropped, "no drop event observed in 600 s on yeti");
+    }
+
+    #[test]
+    fn pcap_actuation_clamped() {
+        let mut n = node(ClusterId::Gros, 8);
+        assert_eq!(n.set_pcap(200.0), 120.0);
+        assert_eq!(n.set_pcap(0.0), 40.0);
+    }
+}

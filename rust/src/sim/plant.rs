@@ -1,0 +1,207 @@
+//! The power→progress plant: static nonlinearity + first-order dynamics.
+//!
+//! Ground truth of the simulated node (paper §4.4):
+//!
+//! * static characteristic
+//!   `progress_ss(power) = K_L · (1 − e^{−α(power − β)})` — the saturating
+//!   curve of Fig. 4a, rooted in the memory-boundedness of STREAM: above
+//!   the knee, DRAM bandwidth (not CPU power) limits progress;
+//! * first-order transient (Eq. 3): a cap change moves progress toward the
+//!   new steady state with time constant τ;
+//! * disturbances: additive socket-scaled noise, drop events that clamp
+//!   progress to ≈10 Hz, and a slow thermal factor on the gain.
+
+use crate::sim::cluster::Cluster;
+use crate::sim::disturbance::DisturbanceState;
+
+/// Power→progress profile of the running application phase.
+///
+/// The paper studies the memory-bound (saturating) profile; §5.2 predicts
+/// compute-bound phases show a "different (simpler)" *linear* profile where
+/// "every power increase should improve performance". The linear profile
+/// backs the `workload::phases` extension exercising the adaptive
+/// controller.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PowerProfile {
+    /// STREAM-like: saturating exponential (the paper's object of study).
+    MemoryBound,
+    /// Linear in power above β, capped by the hardware maximum.
+    ComputeBound,
+}
+
+/// Continuous-state plant integrated on the simulation step.
+#[derive(Debug, Clone)]
+pub struct Plant {
+    k_l: f64,
+    alpha: f64,
+    beta: f64,
+    tau: f64,
+    profile: PowerProfile,
+    /// Current (noise-free) progress [Hz].
+    progress: f64,
+}
+
+impl Plant {
+    pub fn new(cluster: &Cluster) -> Self {
+        Plant {
+            k_l: cluster.k_l,
+            alpha: cluster.alpha,
+            beta: cluster.beta,
+            tau: cluster.tau,
+            profile: PowerProfile::MemoryBound,
+            // Start at the steady state of full power (experiments begin
+            // with the cap at its upper limit, §5.2).
+            progress: cluster.k_l
+                * (1.0 - (-cluster.alpha * (cluster.expected_power(cluster.pcap_max) - cluster.beta)).exp()),
+        }
+    }
+
+    /// Switch the application phase profile (workload::phases extension).
+    pub fn set_profile(&mut self, profile: PowerProfile) {
+        self.profile = profile;
+    }
+
+    pub fn profile(&self) -> PowerProfile {
+        self.profile
+    }
+
+    /// Steady-state progress for a delivered power level.
+    pub fn steady_state(&self, power: f64, thermal_factor: f64) -> f64 {
+        match self.profile {
+            PowerProfile::MemoryBound => {
+                let x = self.alpha * (power - self.beta);
+                (self.k_l * thermal_factor * (1.0 - (-x).exp())).max(0.0)
+            }
+            PowerProfile::ComputeBound => {
+                // Linear above β with the same initial slope K_L·α, capped
+                // at the hardware asymptote: no saturation knee inside the
+                // actuation range.
+                let slope = self.k_l * self.alpha;
+                (slope * (power - self.beta) * thermal_factor)
+                    .clamp(0.0, self.k_l * thermal_factor)
+            }
+        }
+    }
+
+    /// Advance by `dt` under delivered `power` and disturbance `dist`;
+    /// returns the new true progress [Hz].
+    pub fn step(&mut self, dt: f64, power: f64, dist: &DisturbanceState) -> f64 {
+        let target = self
+            .steady_state(power, dist.thermal_factor)
+            .min(dist.progress_ceiling);
+        // Exact discretization of dx/dt = (target - x)/τ over dt — matches
+        // the paper's Eq. (3) ZOH form for constant input.
+        let a = self.tau / (dt + self.tau);
+        self.progress = a * self.progress + (1.0 - a) * target;
+        self.progress
+    }
+
+    pub fn progress(&self) -> f64 {
+        self.progress
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::cluster::{Cluster, ClusterId};
+
+    fn plant(id: ClusterId) -> (Cluster, Plant) {
+        let c = Cluster::get(id);
+        let p = Plant::new(&c);
+        (c, p)
+    }
+
+    #[test]
+    fn starts_at_full_power_steady_state() {
+        let (c, p) = plant(ClusterId::Gros);
+        let expect = c.static_progress(c.pcap_max);
+        assert!((p.progress() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn converges_to_steady_state() {
+        let (c, mut p) = plant(ClusterId::Gros);
+        let power = c.expected_power(60.0);
+        let nominal = DisturbanceState::default();
+        for _ in 0..200 {
+            p.step(0.1, power, &nominal);
+        }
+        let expect = c.static_progress(60.0);
+        assert!(
+            (p.progress() - expect).abs() < 1e-6,
+            "got {} want {expect}",
+            p.progress()
+        );
+    }
+
+    #[test]
+    fn transient_is_first_order_with_tau() {
+        // After exactly τ seconds, a first-order system covers 1−e⁻¹ ≈ 63 %
+        // of a step.
+        let (c, mut p) = plant(ClusterId::Dahu);
+        let nominal = DisturbanceState::default();
+        let from = p.progress();
+        let power = c.expected_power(50.0);
+        let to = c.static_progress(50.0);
+        let dt = 1e-3;
+        let steps = (c.tau / dt).round() as usize;
+        for _ in 0..steps {
+            p.step(dt, power, &nominal);
+        }
+        let covered = (p.progress() - from) / (to - from);
+        assert!(
+            (covered - 0.632).abs() < 0.01,
+            "first-order step response mismatch: covered {covered}"
+        );
+    }
+
+    #[test]
+    fn drop_event_clamps_progress() {
+        let (c, mut p) = plant(ClusterId::Yeti);
+        let dist = DisturbanceState {
+            progress_ceiling: 10.0,
+            drop_active: true,
+            thermal_factor: 1.0,
+        };
+        let power = c.expected_power(c.pcap_max);
+        for _ in 0..300 {
+            p.step(0.1, power, &dist);
+        }
+        assert!((p.progress() - 10.0).abs() < 0.1, "got {}", p.progress());
+    }
+
+    #[test]
+    fn progress_never_negative() {
+        let (_, mut p) = plant(ClusterId::Gros);
+        let nominal = DisturbanceState::default();
+        for _ in 0..100 {
+            // Power far below β.
+            p.step(0.1, 5.0, &nominal);
+        }
+        assert!(p.progress() >= 0.0);
+    }
+
+    #[test]
+    fn compute_bound_profile_is_linear_then_capped() {
+        let (c, mut p) = plant(ClusterId::Gros);
+        p.set_profile(PowerProfile::ComputeBound);
+        let s = |w: f64| p.steady_state(w, 1.0);
+        // Equal power increments → equal progress increments (no knee)...
+        let d1 = s(60.0) - s(50.0);
+        let d2 = s(90.0) - s(80.0);
+        assert!((d1 - d2).abs() < 1e-9, "not linear: {d1} vs {d2}");
+        // ...until the hardware cap.
+        assert!(s(1e4) <= c.k_l + 1e-9);
+    }
+
+    #[test]
+    fn thermal_factor_scales_gain() {
+        let (c, p) = plant(ClusterId::Gros);
+        let power = c.expected_power(100.0);
+        let hot = p.steady_state(power, 0.97);
+        let cold = p.steady_state(power, 1.03);
+        assert!(hot < cold);
+        assert!((cold / hot - 1.03 / 0.97).abs() < 1e-9);
+    }
+}

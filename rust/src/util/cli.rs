@@ -1,0 +1,283 @@
+//! Command-line argument parsing (clap is not in the vendored crate set).
+//!
+//! Supports the subset the `powerctl` binary and examples need:
+//! subcommands, `--flag`, `--key value` / `--key=value`, positional
+//! arguments, typed accessors with defaults, and generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Specification of one option.
+#[derive(Debug, Clone)]
+struct OptSpec {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<&'static str>,
+}
+
+/// A simple declarative CLI: name, description, options, subcommands.
+#[derive(Debug, Clone, Default)]
+pub struct Cli {
+    name: &'static str,
+    about: &'static str,
+    opts: Vec<OptSpec>,
+    subcommands: Vec<(&'static str, &'static str)>,
+}
+
+/// Result of parsing: selected subcommand, option map, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// Parse failure (unknown option, missing value, bad typed value).
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Cli {
+            name,
+            about,
+            ..Default::default()
+        }
+    }
+
+    /// Declare `--name <value>` with an optional default.
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: true,
+            default,
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// Declare a subcommand (first positional token).
+    pub fn subcommand(mut self, name: &'static str, help: &'static str) -> Self {
+        self.subcommands.push((name, help));
+        self
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {} ", self.name, self.about, self.name);
+        if !self.subcommands.is_empty() {
+            s.push_str("<SUBCOMMAND> ");
+        }
+        s.push_str("[OPTIONS]\n");
+        if !self.subcommands.is_empty() {
+            s.push_str("\nSUBCOMMANDS:\n");
+            for (name, help) in &self.subcommands {
+                s.push_str(&format!("  {name:<14} {help}\n"));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let arg = if o.takes_value {
+                    format!("--{} <v>", o.name)
+                } else {
+                    format!("--{}", o.name)
+                };
+                let default = o
+                    .default
+                    .map(|d| format!(" [default: {d}]"))
+                    .unwrap_or_default();
+                s.push_str(&format!("  {arg:<22} {}{}\n", o.help, default));
+            }
+        }
+        s.push_str("  --help                 print this help\n");
+        s
+    }
+
+    /// Parse an argv-style token stream (without the binary name).
+    pub fn parse(&self, argv: &[String]) -> Result<Args, CliError> {
+        let mut args = Args::default();
+        for spec in &self.opts {
+            if let Some(d) = spec.default {
+                args.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.iter().peekable();
+
+        // Subcommand = first non-option token if subcommands are declared.
+        if !self.subcommands.is_empty() {
+            if let Some(tok) = it.peek() {
+                if !tok.starts_with("--") {
+                    let tok = it.next().unwrap();
+                    if !self.subcommands.iter().any(|(n, _)| n == tok) {
+                        return Err(CliError(format!("unknown subcommand '{tok}'")));
+                    }
+                    args.subcommand = Some(tok.clone());
+                }
+            }
+        }
+
+        while let Some(tok) = it.next() {
+            if tok == "--help" {
+                return Err(CliError(self.help_text()));
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline) = match body.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let Some(spec) = self.opts.iter().find(|o| o.name == name) else {
+                    return Err(CliError(format!("unknown option '--{name}'")));
+                };
+                if spec.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .cloned()
+                            .ok_or_else(|| CliError(format!("--{name} needs a value")))?,
+                    };
+                    args.values.insert(name.to_string(), value);
+                } else {
+                    if inline.is_some() {
+                        return Err(CliError(format!("--{name} takes no value")));
+                    }
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse `std::env::args()`, printing help/errors and exiting on failure.
+    pub fn parse_env(&self) -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse(&argv) {
+            Ok(a) => a,
+            Err(CliError(msg)) => {
+                eprintln!("{msg}");
+                std::process::exit(if msg.starts_with(self.name) { 0 } else { 2 });
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        let v = self
+            .get(name)
+            .ok_or_else(|| CliError(format!("missing --{name}")))?;
+        v.parse()
+            .map_err(|_| CliError(format!("--{name}: '{v}' is not a number")))
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        let v = self
+            .get(name)
+            .ok_or_else(|| CliError(format!("missing --{name}")))?;
+        v.parse()
+            .map_err(|_| CliError(format!("--{name}: '{v}' is not an integer")))
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        Ok(self.get_u64(name)? as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("powerctl", "test")
+            .subcommand("control", "closed loop")
+            .subcommand("sweep", "evaluation sweep")
+            .opt("cluster", "cluster name", Some("gros"))
+            .opt("epsilon", "degradation", Some("0.1"))
+            .opt("seed", "rng seed", Some("1"))
+            .flag("verbose", "chatty")
+    }
+
+    fn argv(toks: &[&str]) -> Vec<String> {
+        toks.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_applied() {
+        let a = cli().parse(&argv(&[])).unwrap();
+        assert_eq!(a.get("cluster"), Some("gros"));
+        assert_eq!(a.get_f64("epsilon").unwrap(), 0.1);
+        assert!(a.subcommand.is_none());
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = cli()
+            .parse(&argv(&["control", "--cluster", "yeti", "--epsilon=0.25", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("control"));
+        assert_eq!(a.get("cluster"), Some("yeti"));
+        assert_eq!(a.get_f64("epsilon").unwrap(), 0.25);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        assert!(cli().parse(&argv(&["--nope"])).is_err());
+        assert!(cli().parse(&argv(&["fly"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cli().parse(&argv(&["--cluster"])).is_err());
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = cli().parse(&argv(&["--epsilon", "abc"])).unwrap();
+        assert!(a.get_f64("epsilon").is_err());
+        assert!(a.get_u64("epsilon").is_err());
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cli().parse(&argv(&["sweep", "out.csv"])).unwrap();
+        assert_eq!(a.positional, vec!["out.csv".to_string()]);
+    }
+
+    #[test]
+    fn help_is_error_with_text() {
+        let err = cli().parse(&argv(&["--help"])).unwrap_err();
+        assert!(err.0.contains("SUBCOMMANDS"));
+        assert!(err.0.contains("--cluster"));
+    }
+}

@@ -1,0 +1,268 @@
+//! CSV writer/reader for experiment data interchange.
+//!
+//! Every experiment runner (see `experiments::`) writes its raw samples as
+//! CSV so figures can be regenerated or re-plotted externally; the
+//! identification pipeline can also re-load characterization campaigns from
+//! disk instead of re-simulating them. RFC-4180-style quoting.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// An in-memory CSV table with a header row.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row of already-formatted cells; panics on arity mismatch
+    /// (programming error, not data error).
+    pub fn push<S: Into<String>>(&mut self, row: Vec<S>) {
+        let row: Vec<String> = row.into_iter().map(Into::into).collect();
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "csv row arity {} != header arity {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    /// Append a row of f64 samples formatted with full round-trip precision.
+    pub fn push_f64(&mut self, row: &[f64]) {
+        self.push(row.iter().map(|x| format!("{x}")).collect::<Vec<_>>());
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Index of a column by name.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+
+    /// All values of a column parsed as f64 (non-numeric cells become NaN).
+    pub fn col_f64(&self, name: &str) -> Option<Vec<f64>> {
+        let i = self.col(name)?;
+        Some(
+            self.rows
+                .iter()
+                .map(|r| r[i].parse::<f64>().unwrap_or(f64::NAN))
+                .collect(),
+        )
+    }
+
+    /// Serialize to CSV text.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        write_record(&mut out, &self.header);
+        for row in &self.rows {
+            write_record(&mut out, row);
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn save(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, self.to_csv())
+    }
+
+    /// Parse CSV text (first record is the header).
+    pub fn parse(text: &str) -> Result<Table, String> {
+        let mut records = parse_records(text)?;
+        if records.is_empty() {
+            return Err("empty csv".to_string());
+        }
+        let header = records.remove(0);
+        let arity = header.len();
+        for (i, r) in records.iter().enumerate() {
+            if r.len() != arity {
+                return Err(format!(
+                    "row {} arity {} != header arity {arity}",
+                    i + 1,
+                    r.len()
+                ));
+            }
+        }
+        Ok(Table {
+            header,
+            rows: records,
+        })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> io::Result<Table> {
+        let text = fs::read_to_string(path)?;
+        Table::parse(&text).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))
+    }
+}
+
+fn needs_quoting(cell: &str) -> bool {
+    cell.contains([',', '"', '\n', '\r'])
+}
+
+fn write_record<S: AsRef<str>>(out: &mut String, cells: &[S]) {
+    for (i, cell) in cells.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let cell = cell.as_ref();
+        if needs_quoting(cell) {
+            out.push('"');
+            for ch in cell.chars() {
+                if ch == '"' {
+                    out.push('"');
+                }
+                out.push(ch);
+            }
+            out.push('"');
+        } else {
+            let _ = write!(out, "{cell}");
+        }
+    }
+    out.push('\n');
+}
+
+fn parse_records(text: &str) -> Result<Vec<Vec<String>>, String> {
+    let mut records = Vec::new();
+    let mut record = Vec::new();
+    let mut cell = String::new();
+    let mut chars = text.chars().peekable();
+    let mut in_quotes = false;
+    let mut any = false;
+
+    while let Some(ch) = chars.next() {
+        any = true;
+        if in_quotes {
+            match ch {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        cell.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => cell.push(c),
+            }
+        } else {
+            match ch {
+                '"' => {
+                    if cell.is_empty() {
+                        in_quotes = true;
+                    } else {
+                        return Err("quote inside unquoted cell".to_string());
+                    }
+                }
+                ',' => {
+                    record.push(std::mem::take(&mut cell));
+                }
+                '\n' => {
+                    record.push(std::mem::take(&mut cell));
+                    records.push(std::mem::take(&mut record));
+                }
+                '\r' => {} // tolerate CRLF
+                c => cell.push(c),
+            }
+        }
+    }
+    if in_quotes {
+        return Err("unterminated quoted cell".to_string());
+    }
+    if any && (!cell.is_empty() || !record.is_empty()) {
+        record.push(cell);
+        records.push(record);
+    }
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut t = Table::new(vec!["time_s", "pcap_w", "progress_hz"]);
+        t.push_f64(&[0.0, 120.0, 25.3]);
+        t.push_f64(&[1.0, 100.0, 24.9]);
+        let t2 = Table::parse(&t.to_csv()).unwrap();
+        assert_eq!(t2.header, t.header);
+        assert_eq!(t2.rows, t.rows);
+    }
+
+    #[test]
+    fn quoting_roundtrip() {
+        let mut t = Table::new(vec!["name", "note"]);
+        t.push(vec!["a,b", "say \"hi\"\nline2"]);
+        let t2 = Table::parse(&t.to_csv()).unwrap();
+        assert_eq!(t2.rows[0][0], "a,b");
+        assert_eq!(t2.rows[0][1], "say \"hi\"\nline2");
+    }
+
+    #[test]
+    fn col_access() {
+        let mut t = Table::new(vec!["x", "y"]);
+        t.push_f64(&[1.0, 10.0]);
+        t.push_f64(&[2.0, 20.0]);
+        assert_eq!(t.col_f64("y").unwrap(), vec![10.0, 20.0]);
+        assert!(t.col_f64("z").is_none());
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        assert!(Table::parse("a,b\n1\n").is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn push_arity_panics() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.push(vec!["only-one"]);
+    }
+
+    #[test]
+    fn crlf_tolerated() {
+        let t = Table::parse("a,b\r\n1,2\r\n").unwrap();
+        assert_eq!(t.rows, vec![vec!["1".to_string(), "2".to_string()]]);
+    }
+
+    #[test]
+    fn full_precision_roundtrip() {
+        let mut t = Table::new(vec!["v"]);
+        let x = 0.1234567890123456789;
+        t.push_f64(&[x]);
+        let t2 = Table::parse(&t.to_csv()).unwrap();
+        assert_eq!(t2.col_f64("v").unwrap()[0], x);
+    }
+
+    #[test]
+    fn save_load(){
+        let dir = std::env::temp_dir().join("powerctl_csv_test");
+        let path = dir.join("t.csv");
+        let mut t = Table::new(vec!["a"]);
+        t.push_f64(&[42.0]);
+        t.save(&path).unwrap();
+        let t2 = Table::load(&path).unwrap();
+        assert_eq!(t2.col_f64("a").unwrap(), vec![42.0]);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

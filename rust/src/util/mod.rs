@@ -1,0 +1,15 @@
+//! Hand-rolled substrates.
+//!
+//! The offline build constraint (DESIGN.md §3) leaves only the `xla` crate's
+//! dependency closure available, so the usual ecosystem crates are replaced
+//! by the modules here: [`rng`] (`rand`), [`stats`], [`json`]/[`csv`]
+//! (`serde`), [`cli`] (`clap`), [`check`] (`proptest`), [`timeseries`].
+
+pub mod bench;
+pub mod check;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timeseries;

@@ -1,0 +1,416 @@
+//! Descriptive statistics used by the progress metric (Eq. 1 median), the
+//! identification pipeline (Pearson r, R²) and the evaluation harness
+//! (quantiles, histograms, error distributions).
+
+/// Arithmetic mean; `NaN` on empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance; `NaN` on empty input.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Median without copying caller data more than once. `NaN` on empty input.
+///
+/// This is the aggregator of the paper's Eq. (1): chosen as a central
+/// tendency indicator robust to extreme heartbeat inter-arrival values.
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Linear-interpolated quantile, `q` in `[0, 1]`. `NaN` on empty input.
+pub fn quantile(xs: &[f64], q: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in quantile input"));
+    quantile_sorted(&v, q)
+}
+
+/// Quantile over data the caller has already sorted (hot-path variant that
+/// avoids the copy + sort; see benches/l3_hotpath).
+pub fn quantile_sorted(v: &[f64], q: f64) -> f64 {
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = pos - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// In-place median via quickselect — O(n), allocation-free, used on the
+/// controller hot path where Eq. (1) runs every sampling period.
+pub fn median_inplace(xs: &mut [f64]) -> f64 {
+    let n = xs.len();
+    if n == 0 {
+        return f64::NAN;
+    }
+    if n % 2 == 1 {
+        *select_nth(xs, n / 2)
+    } else {
+        let hi = *select_nth(xs, n / 2);
+        // After partitioning at n/2, the lower half lives in xs[..n/2].
+        let lo = xs[..n / 2]
+            .iter()
+            .copied()
+            .fold(f64::NEG_INFINITY, f64::max);
+        (lo + hi) / 2.0
+    }
+}
+
+fn select_nth(xs: &mut [f64], nth: usize) -> &mut f64 {
+    xs.select_nth_unstable_by(nth, |a, b| a.partial_cmp(b).expect("NaN in median input"))
+        .1
+}
+
+/// Pearson correlation coefficient between two equal-length samples
+/// (paper §4.2: validates progress vs execution-time correlation).
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len(), "pearson: length mismatch");
+    if xs.len() < 2 {
+        return f64::NAN;
+    }
+    let mx = mean(xs);
+    let my = mean(ys);
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        let dx = x - mx;
+        let dy = y - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    if sxx == 0.0 || syy == 0.0 {
+        return f64::NAN;
+    }
+    sxy / (sxx * syy).sqrt()
+}
+
+/// Coefficient of determination R² of predictions vs observations
+/// (paper Fig. 4a reports 0.83 < R² < 0.95 for the static model).
+pub fn r_squared(observed: &[f64], predicted: &[f64]) -> f64 {
+    assert_eq!(observed.len(), predicted.len(), "r_squared: length mismatch");
+    if observed.is_empty() {
+        return f64::NAN;
+    }
+    let m = mean(observed);
+    let ss_res: f64 = observed
+        .iter()
+        .zip(predicted)
+        .map(|(o, p)| (o - p) * (o - p))
+        .sum();
+    let ss_tot: f64 = observed.iter().map(|o| (o - m) * (o - m)).sum();
+    if ss_tot == 0.0 {
+        return f64::NAN;
+    }
+    1.0 - ss_res / ss_tot
+}
+
+/// Root-mean-square error.
+pub fn rmse(observed: &[f64], predicted: &[f64]) -> f64 {
+    assert_eq!(observed.len(), predicted.len(), "rmse: length mismatch");
+    if observed.is_empty() {
+        return f64::NAN;
+    }
+    let s: f64 = observed
+        .iter()
+        .zip(predicted)
+        .map(|(o, p)| (o - p) * (o - p))
+        .sum();
+    (s / observed.len() as f64).sqrt()
+}
+
+/// Fixed-width histogram over `[lo, hi)` with `bins` buckets; values outside
+/// the range clamp to the edge buckets. Used for Fig. 5/6 error
+/// distributions.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
+        assert!(hi > lo && bins > 0);
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0; bins],
+            total: 0,
+        }
+    }
+
+    pub fn from_samples(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Self {
+        let mut h = Self::new(lo, hi, bins);
+        for &x in xs {
+            h.add(x);
+        }
+        h
+    }
+
+    pub fn add(&mut self, x: f64) {
+        let bins = self.counts.len();
+        let idx = if !x.is_finite() || x < self.lo {
+            0
+        } else if x >= self.hi {
+            bins - 1
+        } else {
+            (((x - self.lo) / (self.hi - self.lo)) * bins as f64) as usize
+        };
+        self.counts[idx.min(bins - 1)] += 1;
+        self.total += 1;
+    }
+
+    pub fn bin_center(&self, i: usize) -> f64 {
+        let w = (self.hi - self.lo) / self.counts.len() as f64;
+        self.lo + w * (i as f64 + 0.5)
+    }
+
+    pub fn densities(&self) -> Vec<f64> {
+        if self.total == 0 {
+            return vec![0.0; self.counts.len()];
+        }
+        self.counts
+            .iter()
+            .map(|&c| c as f64 / self.total as f64)
+            .collect()
+    }
+
+    /// Indices of local maxima with at least `min_frac` of the total mass —
+    /// used to detect the yeti error distribution's bimodality (Fig. 6b).
+    pub fn modes(&self, min_frac: f64) -> Vec<usize> {
+        let d = self.densities();
+        let mut modes = Vec::new();
+        for i in 0..d.len() {
+            let left = if i == 0 { 0.0 } else { d[i - 1] };
+            let right = if i + 1 == d.len() { 0.0 } else { d[i + 1] };
+            if d[i] >= min_frac && d[i] >= left && d[i] > right {
+                modes.push(i);
+            }
+        }
+        modes
+    }
+}
+
+/// Streaming mean/variance/min/max accumulator (Welford), used by the NRM
+/// bookkeeping where retaining raw samples would allocate on the hot path.
+#[derive(Debug, Clone, Default)]
+pub struct Running {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Running {
+    pub fn new() -> Self {
+        Running {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+    pub fn stddev(&self) -> f64 {
+        self.variance().sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Running) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let d = other.mean - self.mean;
+        self.mean += d * other.n as f64 / n as f64;
+        self.m2 += other.m2 + d * d * (self.n as f64 * other.n as f64) / n as f64;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_basic() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!(mean(&[]).is_nan());
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+        assert!(median(&[]).is_nan());
+    }
+
+    #[test]
+    fn median_robust_to_outlier() {
+        // The reason the paper picks the median (Eq. 1).
+        assert_eq!(median(&[10.0, 11.0, 12.0, 1e9]), 11.5);
+    }
+
+    #[test]
+    fn median_inplace_matches_sort() {
+        let mut rng = crate::util::rng::Pcg64::seeded(1);
+        for n in [1usize, 2, 3, 10, 11, 100, 101] {
+            let xs: Vec<f64> = (0..n).map(|_| rng.uniform(-5.0, 5.0)).collect();
+            let mut buf = xs.clone();
+            let got = median_inplace(&mut buf);
+            let want = median(&xs);
+            assert!((got - want).abs() < 1e-12, "n={n} got={got} want={want}");
+        }
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+        assert_eq!(quantile(&xs, 0.25), 2.0);
+    }
+
+    #[test]
+    fn pearson_perfect_correlation() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson(&xs, &ys) - 1.0).abs() < 1e-12);
+        let neg: Vec<f64> = ys.iter().map(|y| -y).collect();
+        assert!((pearson(&xs, &neg) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_uncorrelated_noise() {
+        let mut rng = crate::util::rng::Pcg64::seeded(2);
+        let xs: Vec<f64> = (0..10_000).map(|_| rng.normal()).collect();
+        let ys: Vec<f64> = (0..10_000).map(|_| rng.normal()).collect();
+        assert!(pearson(&xs, &ys).abs() < 0.05);
+    }
+
+    #[test]
+    fn r2_perfect_and_mean_model() {
+        let obs = [1.0, 2.0, 3.0];
+        assert!((r_squared(&obs, &obs) - 1.0).abs() < 1e-12);
+        let mean_pred = [2.0, 2.0, 2.0];
+        assert!(r_squared(&obs, &mean_pred).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_counts_and_modes() {
+        let mut xs = vec![0.5; 100];
+        xs.extend(vec![7.5; 40]);
+        let h = Histogram::from_samples(&xs, 0.0, 10.0, 10);
+        assert_eq!(h.counts[0], 100);
+        assert_eq!(h.counts[7], 40);
+        let modes = h.modes(0.05);
+        assert_eq!(modes, vec![0, 7]); // bimodal — the Fig. 6b yeti check
+    }
+
+    #[test]
+    fn histogram_clamps_out_of_range() {
+        let h = Histogram::from_samples(&[-5.0, 15.0], 0.0, 10.0, 10);
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[9], 1);
+    }
+
+    #[test]
+    fn running_matches_batch() {
+        let mut rng = crate::util::rng::Pcg64::seeded(3);
+        let xs: Vec<f64> = (0..1000).map(|_| rng.gauss(5.0, 2.0)).collect();
+        let mut r = Running::new();
+        for &x in &xs {
+            r.add(x);
+        }
+        assert!((r.mean() - mean(&xs)).abs() < 1e-9);
+        assert!((r.variance() - variance(&xs)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn running_merge() {
+        let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
+        let mut a = Running::new();
+        let mut b = Running::new();
+        for &x in &xs[..37] {
+            a.add(x);
+        }
+        for &x in &xs[37..] {
+            b.add(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 100);
+        assert!((a.mean() - mean(&xs)).abs() < 1e-9);
+        assert!((a.variance() - variance(&xs)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rmse_zero_for_identical() {
+        assert_eq!(rmse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+    }
+}

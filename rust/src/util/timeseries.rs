@@ -1,0 +1,243 @@
+//! Sampled-signal container shared by the simulator, the identification
+//! pipeline and the experiment records.
+//!
+//! A [`TimeSeries`] is a monotonically-timestamped sequence of `(t, value)`
+//! samples with helpers for interpolation, zero-order hold, windowed
+//! extraction and resampling — the operations Figs. 3/5/6 need to align the
+//! powercap, power, and progress signals on a common clock.
+
+/// A timestamped scalar signal. Times are in seconds on the experiment's
+/// virtual clock; monotonic non-decreasing order is enforced on `push`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TimeSeries {
+    pub times: Vec<f64>,
+    pub values: Vec<f64>,
+}
+
+impl TimeSeries {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        TimeSeries {
+            times: Vec::with_capacity(n),
+            values: Vec::with_capacity(n),
+        }
+    }
+
+    pub fn from_pairs(pairs: &[(f64, f64)]) -> Self {
+        let mut ts = Self::with_capacity(pairs.len());
+        for &(t, v) in pairs {
+            ts.push(t, v);
+        }
+        ts
+    }
+
+    pub fn push(&mut self, t: f64, v: f64) {
+        if let Some(&last) = self.times.last() {
+            assert!(
+                t >= last,
+                "non-monotonic time: {t} after {last} (timeseries must be ordered)"
+            );
+        }
+        self.times.push(t);
+        self.values.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.times.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.times.is_empty()
+    }
+
+    pub fn first_time(&self) -> Option<f64> {
+        self.times.first().copied()
+    }
+
+    pub fn last_time(&self) -> Option<f64> {
+        self.times.last().copied()
+    }
+
+    pub fn last_value(&self) -> Option<f64> {
+        self.values.last().copied()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (f64, f64)> + '_ {
+        self.times.iter().copied().zip(self.values.iter().copied())
+    }
+
+    /// Index of the last sample with `time <= t` (binary search).
+    fn index_at(&self, t: f64) -> Option<usize> {
+        if self.is_empty() || t < self.times[0] {
+            return None;
+        }
+        let mut lo = 0usize;
+        let mut hi = self.len();
+        while lo + 1 < hi {
+            let mid = (lo + hi) / 2;
+            if self.times[mid] <= t {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        Some(lo)
+    }
+
+    /// Zero-order-hold value at time `t` (the semantics of an actuator
+    /// setting such as a powercap: it holds until changed).
+    pub fn zoh(&self, t: f64) -> Option<f64> {
+        self.index_at(t).map(|i| self.values[i])
+    }
+
+    /// Linear interpolation at time `t`; clamps to the end values outside
+    /// the range (sensor signals such as progress).
+    pub fn lerp(&self, t: f64) -> Option<f64> {
+        if self.is_empty() {
+            return None;
+        }
+        if t <= self.times[0] {
+            return Some(self.values[0]);
+        }
+        if t >= *self.times.last().unwrap() {
+            return Some(*self.values.last().unwrap());
+        }
+        let i = self.index_at(t).unwrap();
+        let (t0, t1) = (self.times[i], self.times[i + 1]);
+        let (v0, v1) = (self.values[i], self.values[i + 1]);
+        if t1 == t0 {
+            return Some(v1);
+        }
+        let w = (t - t0) / (t1 - t0);
+        Some(v0 * (1.0 - w) + v1 * w)
+    }
+
+    /// Samples strictly inside the window `[t0, t1)` — the aggregation
+    /// window of Eq. (1).
+    pub fn window(&self, t0: f64, t1: f64) -> (&[f64], &[f64]) {
+        let start = self.times.partition_point(|&t| t < t0);
+        let end = self.times.partition_point(|&t| t < t1);
+        (&self.times[start..end], &self.values[start..end])
+    }
+
+    /// Resample on a uniform grid with zero-order hold; `None` holes before
+    /// the first sample are filled with the first value.
+    pub fn resample_zoh(&self, t0: f64, t1: f64, dt: f64) -> TimeSeries {
+        assert!(dt > 0.0);
+        let mut out = TimeSeries::new();
+        if self.is_empty() {
+            return out;
+        }
+        let mut t = t0;
+        while t < t1 {
+            let v = self.zoh(t).unwrap_or(self.values[0]);
+            out.push(t, v);
+            t += dt;
+        }
+        out
+    }
+
+    /// Time-weighted integral by trapezoidal rule (energy from power).
+    pub fn integrate(&self) -> f64 {
+        let mut acc = 0.0;
+        for i in 1..self.len() {
+            let dt = self.times[i] - self.times[i - 1];
+            acc += 0.5 * (self.values[i] + self.values[i - 1]) * dt;
+        }
+        acc
+    }
+
+    /// Time-weighted mean over the covered span.
+    pub fn time_mean(&self) -> f64 {
+        if self.len() < 2 {
+            return self.values.first().copied().unwrap_or(f64::NAN);
+        }
+        let span = self.times[self.len() - 1] - self.times[0];
+        if span <= 0.0 {
+            return self.values[0];
+        }
+        self.integrate() / span
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp() -> TimeSeries {
+        TimeSeries::from_pairs(&[(0.0, 0.0), (1.0, 10.0), (2.0, 20.0), (4.0, 20.0)])
+    }
+
+    #[test]
+    fn push_monotonic_enforced() {
+        let mut ts = TimeSeries::new();
+        ts.push(1.0, 5.0);
+        ts.push(1.0, 6.0); // equal ok
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut ts2 = ts.clone();
+            ts2.push(0.5, 0.0);
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn zoh_semantics() {
+        let ts = ramp();
+        assert_eq!(ts.zoh(-0.1), None);
+        assert_eq!(ts.zoh(0.0), Some(0.0));
+        assert_eq!(ts.zoh(0.99), Some(0.0));
+        assert_eq!(ts.zoh(1.0), Some(10.0));
+        assert_eq!(ts.zoh(3.0), Some(20.0));
+        assert_eq!(ts.zoh(100.0), Some(20.0));
+    }
+
+    #[test]
+    fn lerp_semantics() {
+        let ts = ramp();
+        assert_eq!(ts.lerp(0.5), Some(5.0));
+        assert_eq!(ts.lerp(1.5), Some(15.0));
+        assert_eq!(ts.lerp(-1.0), Some(0.0));
+        assert_eq!(ts.lerp(10.0), Some(20.0));
+    }
+
+    #[test]
+    fn window_half_open() {
+        let ts = ramp();
+        let (t, v) = ts.window(1.0, 2.0);
+        assert_eq!(t, &[1.0]);
+        assert_eq!(v, &[10.0]);
+        let (t, _) = ts.window(0.0, 4.0);
+        assert_eq!(t.len(), 3);
+        let (t, _) = ts.window(0.0, 4.1);
+        assert_eq!(t.len(), 4);
+    }
+
+    #[test]
+    fn integrate_trapezoid() {
+        let ts = ramp();
+        // 0..1: avg 5, 1..2: avg 15, 2..4: 20*2 => 5 + 15 + 40 = 60
+        assert!((ts.integrate() - 60.0).abs() < 1e-12);
+        assert!((ts.time_mean() - 15.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn resample_grid() {
+        let ts = ramp();
+        let r = ts.resample_zoh(0.0, 4.0, 0.5);
+        assert_eq!(r.len(), 8);
+        assert_eq!(r.values[1], 0.0); // t=0.5 holds v(0)
+        assert_eq!(r.values[2], 10.0); // t=1.0
+    }
+
+    #[test]
+    fn empty_series() {
+        let ts = TimeSeries::new();
+        assert!(ts.zoh(0.0).is_none());
+        assert!(ts.lerp(0.0).is_none());
+        assert_eq!(ts.integrate(), 0.0);
+        assert!(ts.time_mean().is_nan());
+    }
+}

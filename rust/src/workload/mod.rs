@@ -1,0 +1,11 @@
+//! Instrumented workloads.
+//!
+//! * [`stream`] — the paper's STREAM benchmark: live (PJRT) execution with
+//!   heartbeat instrumentation;
+//! * [`phases`] — multi-phase workloads for the §6 adaptation extension.
+
+pub mod phases;
+pub mod stream;
+
+pub use phases::{Phase, PhaseSchedule};
+pub use stream::{run_live, LiveConfig, LiveOutcome};

@@ -1,0 +1,162 @@
+//! Multi-phase workloads: the §6 generalization discussion made
+//! executable.
+//!
+//! The paper studies the steady memory-bound STREAM profile and predicts
+//! that applications alternating memory- and compute-bound phases need
+//! *adaptation*. This module defines phase schedules and a driver that runs
+//! a policy against a phase-switching simulated node, so the ablation bench
+//! can compare the fixed PI against the gain-scheduled [`AdaptivePi`].
+
+use crate::control::adaptive::AdaptivePi;
+use crate::control::baseline::Policy;
+use crate::coordinator::progress::ProgressAggregator;
+use crate::coordinator::records::RunRecord;
+use crate::sim::cluster::Cluster;
+use crate::sim::node::NodeSim;
+use crate::sim::plant::PowerProfile;
+
+/// A phase: profile + duration.
+#[derive(Debug, Clone, Copy)]
+pub struct Phase {
+    pub profile: PowerProfile,
+    pub duration: f64,
+}
+
+/// A cyclic phase schedule.
+#[derive(Debug, Clone)]
+pub struct PhaseSchedule {
+    pub phases: Vec<Phase>,
+}
+
+impl PhaseSchedule {
+    /// Alternating memory/compute phases of equal length.
+    pub fn alternating(phase_len: f64, cycles: usize) -> Self {
+        let mut phases = Vec::new();
+        for _ in 0..cycles {
+            phases.push(Phase {
+                profile: PowerProfile::MemoryBound,
+                duration: phase_len,
+            });
+            phases.push(Phase {
+                profile: PowerProfile::ComputeBound,
+                duration: phase_len,
+            });
+        }
+        PhaseSchedule { phases }
+    }
+
+    pub fn total_duration(&self) -> f64 {
+        self.phases.iter().map(|p| p.duration).sum()
+    }
+
+    /// Profile in force at time `t` (clamped to the last phase).
+    pub fn profile_at(&self, t: f64) -> PowerProfile {
+        let mut acc = 0.0;
+        for p in &self.phases {
+            acc += p.duration;
+            if t < acc {
+                return p.profile;
+            }
+        }
+        self.phases.last().map(|p| p.profile).unwrap_or(PowerProfile::MemoryBound)
+    }
+}
+
+/// Run a policy against a phase-switching node for the schedule's duration;
+/// `sample_period` as in the evaluation runs.
+pub fn run_phased(
+    cluster: &Cluster,
+    policy: &mut dyn Policy,
+    schedule: &PhaseSchedule,
+    sample_period: f64,
+    seed: u64,
+) -> RunRecord {
+    let mut node = NodeSim::new(cluster.clone(), seed);
+    let mut agg = ProgressAggregator::new();
+    let mut rec = RunRecord {
+        cluster: cluster.id.name().to_string(),
+        policy: policy.name(),
+        seed,
+        epsilon: f64::NAN,
+        setpoint: f64::NAN,
+        ..Default::default()
+    };
+    node.set_pcap(cluster.pcap_max);
+    let periods = (schedule.total_duration() / sample_period).round() as usize;
+    let mut t = 0.0;
+    for _ in 0..periods {
+        node.set_profile(schedule.profile_at(t));
+        let sensors = node.step(sample_period);
+        agg.ingest(&sensors.heartbeats);
+        let progress = agg.sample();
+        t = sensors.time;
+        rec.power.push(t, sensors.power);
+        rec.progress.push(t, progress);
+        rec.true_progress.push(t, sensors.true_progress);
+        let pcap = policy.decide(t, progress);
+        node.set_pcap(pcap);
+        rec.pcap.push(t, pcap);
+        rec.energy = sensors.energy;
+    }
+    rec.exec_time = t;
+    rec.beats = node.beats();
+    rec.completed = true;
+    rec
+}
+
+/// Adapter making [`AdaptivePi`] a [`Policy`].
+pub struct AdaptivePolicy(pub AdaptivePi);
+
+impl Policy for AdaptivePolicy {
+    fn decide(&mut self, t: f64, progress: f64) -> f64 {
+        self.0.step(t, progress)
+    }
+    fn name(&self) -> String {
+        "adaptive-pi".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::baseline::Uncontrolled;
+    use crate::sim::cluster::{Cluster, ClusterId};
+
+    #[test]
+    fn schedule_profiles() {
+        let s = PhaseSchedule::alternating(30.0, 2);
+        assert_eq!(s.phases.len(), 4);
+        assert_eq!(s.total_duration(), 120.0);
+        assert_eq!(s.profile_at(0.0), PowerProfile::MemoryBound);
+        assert_eq!(s.profile_at(31.0), PowerProfile::ComputeBound);
+        assert_eq!(s.profile_at(61.0), PowerProfile::MemoryBound);
+        assert_eq!(s.profile_at(1e9), PowerProfile::ComputeBound);
+    }
+
+    #[test]
+    fn phase_transition_changes_progress() {
+        // Under a fixed mid-range cap, the compute-bound profile yields a
+        // different steady progress than the memory-bound one.
+        let c = Cluster::get(ClusterId::Gros);
+        let schedule = PhaseSchedule::alternating(60.0, 1);
+        let mut pol = crate::control::baseline::StaticCap { pcap: 80.0 };
+        let rec = run_phased(&c, &mut pol, &schedule, 1.0, 1);
+        // Mean true progress in each phase's settled half.
+        let phase1: f64 = rec.true_progress.values[30..55].iter().sum::<f64>() / 25.0;
+        let phase2: f64 = rec.true_progress.values[90..115].iter().sum::<f64>() / 25.0;
+        assert!(
+            (phase1 - phase2).abs() > 1.0,
+            "phases indistinguishable: {phase1} vs {phase2}"
+        );
+    }
+
+    #[test]
+    fn run_phased_records_full_duration() {
+        let c = Cluster::get(ClusterId::Dahu);
+        let schedule = PhaseSchedule::alternating(20.0, 2);
+        let mut pol = Uncontrolled { pcap_max: 120.0 };
+        let rec = run_phased(&c, &mut pol, &schedule, 1.0, 2);
+        assert_eq!(rec.pcap.len(), 80);
+        assert!(rec.energy > 0.0);
+    }
+}

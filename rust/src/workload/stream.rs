@@ -1,0 +1,167 @@
+//! The instrumented STREAM workload (paper §4.1): an iterative application
+//! that reports one heartbeat per loop of the four kernels.
+//!
+//! Two execution modes share the same instrumentation path:
+//!
+//! * [`run_live`] — *live* mode: each iteration executes the real AOT
+//!   artifact through PJRT ([`StreamExecutor`]), paced to the node's
+//!   sustainable rate (published by the NRM backend), and sends a heartbeat
+//!   over a [`BeatSender`]. This is the quickstart/demo path where all
+//!   three layers execute for real.
+//! * campaign mode — the lockstep simulation driver in
+//!   `coordinator::experiment` generates heartbeats directly from the
+//!   plant (thousands of runs in seconds); see DESIGN.md §2.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::transport::BeatSender;
+use crate::runtime::StreamExecutor;
+
+/// Configuration of a live workload run.
+#[derive(Debug, Clone)]
+pub struct LiveConfig {
+    /// Application id in heartbeat messages.
+    pub app_id: u32,
+    /// Iterations to run (10,000 in the paper; demos use fewer).
+    pub iterations: u64,
+    /// Fallback pace [Hz] when the rate handle still reads 0 (startup).
+    pub initial_rate: f64,
+    /// Validate the digest every iteration.
+    pub check_digest: bool,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        LiveConfig {
+            app_id: 1,
+            iterations: 200,
+            initial_rate: 25.0,
+            check_digest: false,
+        }
+    }
+}
+
+/// Outcome of a live run.
+#[derive(Debug, Clone)]
+pub struct LiveOutcome {
+    pub iterations: u64,
+    pub wall_time: f64,
+    /// Mean achieved iteration rate [Hz].
+    pub rate: f64,
+    /// Last digest value (numeric witness of the PJRT path).
+    pub last_digest: f64,
+}
+
+/// Run the instrumented workload: execute `stream_step` via PJRT, emit one
+/// heartbeat per iteration, pace to the published sustainable rate.
+///
+/// `rate_handle` carries f64 bits of the node's current iteration rate
+/// (see `coordinator::nrm::SimBackend::rate_handle`); `stop` aborts early.
+pub fn run_live(
+    mut executor: StreamExecutor,
+    sender: &dyn BeatSender,
+    rate_handle: Arc<AtomicU64>,
+    stop: &AtomicBool,
+    config: &LiveConfig,
+) -> Result<LiveOutcome> {
+    let start = Instant::now();
+    let mut next_deadline = start;
+    let mut last_digest = 0.0;
+    let mut done = 0u64;
+
+    let per_call = executor.iters_per_call();
+    while done < config.iterations && !stop.load(Ordering::Relaxed) {
+        // Pace: the plant (via the NRM backend) dictates the sustainable
+        // rate — the simulated stand-in for "the processor at this cap can
+        // only go this fast".
+        let rate = {
+            let r = f64::from_bits(rate_handle.load(Ordering::Relaxed));
+            if r > 1e-3 {
+                r
+            } else {
+                config.initial_rate
+            }
+        };
+        let now = Instant::now();
+        if next_deadline > now {
+            std::thread::sleep(next_deadline - now);
+        }
+        next_deadline += Duration::from_secs_f64(per_call as f64 / rate);
+
+        last_digest = executor.step()?;
+        done += per_call;
+        // One heartbeat message crediting `per_call` progress units (the
+        // fused artifact still performs that many STREAM iterations).
+        sender.send(config.app_id, per_call as u32)?;
+    }
+
+    let wall = start.elapsed().as_secs_f64();
+    Ok(LiveOutcome {
+        iterations: done,
+        wall_time: wall,
+        rate: done as f64 / wall.max(1e-9),
+        last_digest,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::transport::{BeatReceiver, InProc};
+    use crate::runtime::Runtime;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn live_run_emits_heartbeats_and_paces() {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new(artifacts_dir()).unwrap();
+        let ex = StreamExecutor::new(rt, 3, false).unwrap();
+        let (tx, mut rx) = InProc::pair();
+        let rate = Arc::new(AtomicU64::new(200.0f64.to_bits()));
+        let stop = AtomicBool::new(false);
+        let out = run_live(
+            ex,
+            &tx,
+            rate,
+            &stop,
+            &LiveConfig {
+                iterations: 10,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(out.iterations, 10);
+        assert!(out.last_digest != 0.0);
+        let mut beats = Vec::new();
+        rx.drain(0.0, &mut beats);
+        assert_eq!(beats.len(), 10);
+        // Paced at ≤200 Hz: 10 iterations take ≥ ~45 ms.
+        assert!(out.wall_time > 0.04, "no pacing: {}", out.wall_time);
+    }
+
+    #[test]
+    fn stop_flag_aborts() {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::new(artifacts_dir()).unwrap();
+        let ex = StreamExecutor::new(rt, 4, false).unwrap();
+        let (tx, _rx) = InProc::pair();
+        let rate = Arc::new(AtomicU64::new(1000.0f64.to_bits()));
+        let stop = AtomicBool::new(true); // pre-stopped
+        let out = run_live(ex, &tx, rate, &stop, &LiveConfig::default()).unwrap();
+        assert_eq!(out.iterations, 0);
+    }
+}

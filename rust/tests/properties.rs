@@ -1,0 +1,274 @@
+//! Cross-module property tests (util::check): system-level invariants that
+//! must hold for arbitrary seeds, caps, and measurement sequences.
+
+use powerctl::control::pi::{PiConfig, PiController};
+use powerctl::coordinator::progress::ProgressAggregator;
+use powerctl::experiments::{identify, Ctx, Scale};
+use powerctl::ident::static_model::{StaticModel, StaticPoint};
+use powerctl::ident::DynamicModel;
+use powerctl::sim::cluster::{Cluster, ClusterId};
+use powerctl::sim::node::NodeSim;
+use powerctl::util::check::{check, close};
+use powerctl::util::rng::Pcg64;
+use powerctl::util::stats;
+
+fn model_for(id: ClusterId) -> DynamicModel {
+    let c = Cluster::get(id);
+    let points: Vec<StaticPoint> = (0..50)
+        .map(|i| {
+            let pcap = c.pcap_min + i as f64 * ((c.pcap_max - c.pcap_min) / 49.0);
+            StaticPoint {
+                pcap,
+                power: c.expected_power(pcap),
+                progress: c.static_progress(pcap),
+            }
+        })
+        .collect();
+    DynamicModel {
+        static_model: StaticModel::fit(&points),
+        tau: c.tau,
+        rmse: 0.0,
+    }
+}
+
+#[test]
+fn prop_controller_output_in_actuator_range() {
+    // For ANY ε and ANY measurement sequence, every emitted cap is valid.
+    check(101, 64, |rng| {
+        let eps = rng.uniform(0.0, 0.5);
+        let n = 20 + rng.below(80) as usize;
+        let meas: Vec<f64> = (0..n).map(|_| rng.uniform(-50.0, 500.0)).collect();
+        (eps, meas)
+    }, |(eps, meas)| {
+        let m = model_for(ClusterId::Gros);
+        let cfg = PiConfig::from_model(&m, 10.0, 40.0, 120.0);
+        let mut ctl = PiController::new(m, cfg, *eps);
+        for (i, &p) in meas.iter().enumerate() {
+            let cap = ctl.step(i as f64, p);
+            if !(40.0..=120.0).contains(&cap) || !cap.is_finite() {
+                return Err(format!("cap {cap} out of range at step {i}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_linearization_roundtrip() {
+    // delinearize(linearize(pcap)) == pcap over the actuator range, for
+    // every cluster's fitted model.
+    check(102, 128, |rng| {
+        let id = *rng.choose(&ClusterId::ALL);
+        let pcap = rng.uniform(40.0, 120.0);
+        (id, pcap)
+    }, |(id, pcap)| {
+        let s = model_for(*id).static_model;
+        close(s.delinearize_pcap(s.linearize_pcap(*pcap)), *pcap, 1e-9)
+    });
+}
+
+#[test]
+fn prop_plant_steady_progress_monotone_in_cap() {
+    // More power never slows STREAM down (static characteristic is
+    // nondecreasing), whatever the cluster.
+    check(103, 128, |rng| {
+        let id = *rng.choose(&ClusterId::ALL);
+        let a = rng.uniform(40.0, 120.0);
+        let b = rng.uniform(40.0, 120.0);
+        (id, a.min(b), a.max(b))
+    }, |(id, lo, hi)| {
+        let c = Cluster::get(*id);
+        if c.static_progress(*hi) >= c.static_progress(*lo) - 1e-12 {
+            Ok(())
+        } else {
+            Err(format!("progress({hi}) < progress({lo})"))
+        }
+    });
+}
+
+#[test]
+fn prop_energy_counter_additive_and_monotone() {
+    // Node energy is nondecreasing and consistent across step splits.
+    check(104, 32, |rng| {
+        let seed = rng.next_u64();
+        let cap = rng.uniform(40.0, 120.0);
+        let steps = 5 + rng.below(20) as usize;
+        (seed, cap, steps)
+    }, |(seed, cap, steps)| {
+        let mut node = NodeSim::new(Cluster::get(ClusterId::Dahu), *seed);
+        node.set_pcap(*cap);
+        let mut last = 0.0;
+        for _ in 0..*steps {
+            let s = node.step(0.7);
+            if s.energy < last {
+                return Err(format!("energy decreased: {} -> {}", last, s.energy));
+            }
+            last = s.energy;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_median_between_min_max_and_robust() {
+    check(105, 256, |rng| {
+        let n = 1 + rng.below(200) as usize;
+        let xs: Vec<f64> = (0..n).map(|_| rng.uniform(-1e3, 1e3)).collect();
+        xs
+    }, |xs| {
+        let m = stats::median(xs);
+        let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        if m < lo || m > hi {
+            return Err(format!("median {m} outside [{lo}, {hi}]"));
+        }
+        // Outlier robustness: adding one huge value moves the median by at
+        // most one order statistic.
+        let mut with_outlier = xs.clone();
+        with_outlier.push(1e12);
+        let m2 = stats::median(&with_outlier);
+        if m2 < lo || m2 > hi + (hi - lo) {
+            return Err(format!("median not robust: {m} -> {m2}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_progress_aggregator_matches_direct_median() {
+    // Feeding a batch of beats in one window must equal the median of the
+    // inter-arrival frequencies computed directly.
+    check(106, 64, |rng| {
+        let n = 3 + rng.below(60) as usize;
+        let mut t = 0.0;
+        let beats: Vec<f64> = (0..n)
+            .map(|_| {
+                t += rng.uniform(0.01, 0.5);
+                t
+            })
+            .collect();
+        beats
+    }, |beats| {
+        let mut agg = ProgressAggregator::new();
+        agg.ingest(beats);
+        let got = agg.sample();
+        let freqs: Vec<f64> = beats.windows(2).map(|w| 1.0 / (w[1] - w[0])).collect();
+        close(got, stats::median(&freqs), 1e-9)
+    });
+}
+
+#[test]
+fn prop_lm_recovers_random_saturating_curves() {
+    // The identification pipeline recovers randomly drawn plant parameters
+    // from clean data — LM is not just tuned to the three paper clusters.
+    check(107, 16, |rng| {
+        let k_l = rng.uniform(10.0, 120.0);
+        let alpha = rng.uniform(0.01, 0.08);
+        let beta = rng.uniform(15.0, 38.0);
+        (k_l, alpha, beta)
+    }, |(k_l, alpha, beta)| {
+        let points: Vec<StaticPoint> = (0..60)
+            .map(|i| {
+                let pcap = 40.0 + i as f64 * (80.0 / 59.0);
+                let power = 0.9 * pcap + 2.0;
+                StaticPoint {
+                    pcap,
+                    power,
+                    progress: k_l * (1.0 - (-alpha * (power - beta)).exp()),
+                }
+            })
+            .collect();
+        let m = StaticModel::fit(&points);
+        close(m.k_l, *k_l, 0.05)
+            .and_then(|_| close(m.alpha, *alpha, 0.1))
+            .and_then(|_| close(m.beta, *beta, 0.1))
+    });
+}
+
+#[test]
+fn prop_identified_controller_converges_for_any_epsilon() {
+    // End-to-end: identify once, then for arbitrary ε the closed loop on a
+    // clean plant settles within the tolerance band.
+    let ctx = Ctx::new(std::env::temp_dir().join("powerctl-prop-conv"), 9, Scale::Fast);
+    let ident = identify(&ctx, ClusterId::Gros);
+    let plant = model_for(ClusterId::Gros);
+    check(108, 12, |rng| rng.uniform(0.02, 0.4), |eps| {
+        let cfg = PiConfig::from_model(&ident.model, 10.0, 40.0, 120.0);
+        let mut ctl = PiController::new(ident.model.clone(), cfg, *eps);
+        let mut progress = plant.static_model.predict(120.0);
+        for i in 0..300 {
+            let cap = ctl.step(i as f64, progress);
+            progress = plant.predict_next(progress, cap, 1.0);
+        }
+        let sp = ctl.setpoint();
+        // Allow identification error: settle within 5 % of the setpoint OR
+        // at the rail if the setpoint exceeds the plant's reach.
+        if (progress - sp).abs() <= 0.05 * sp + 0.2 {
+            Ok(())
+        } else {
+            Err(format!("ε={eps}: settled {progress} vs setpoint {sp}"))
+        }
+    });
+    let _ = std::fs::remove_dir_all(std::env::temp_dir().join("powerctl-prop-conv"));
+}
+
+#[test]
+fn prop_run_records_internally_consistent() {
+    // Any closed-loop run's record satisfies basic accounting identities.
+    let ctx = Ctx::new(std::env::temp_dir().join("powerctl-prop-rec"), 10, Scale::Fast);
+    let ident = identify(&ctx, ClusterId::Dahu);
+    let cluster = Cluster::get(ClusterId::Dahu);
+    check(109, 8, |rng| (rng.uniform(0.0, 0.4), rng.next_u64()), |(eps, seed)| {
+        let (mut policy, sp) = powerctl::experiments::fig6::make_pi(&ident, *eps);
+        let rec = powerctl::coordinator::experiment::run_closed_loop(
+            &cluster,
+            &mut policy,
+            sp,
+            *eps,
+            &ctx.run_config(),
+            *seed,
+        );
+        if !rec.completed {
+            return Err("did not complete".into());
+        }
+        if rec.energy <= 0.0 {
+            return Err("no energy recorded".into());
+        }
+        if rec.exec_time <= 0.0 || rec.exec_time > 3_600.0 {
+            return Err(format!("exec_time {}", rec.exec_time));
+        }
+        // Sampled series aligned.
+        if rec.pcap.len() != rec.progress.len() || rec.power.len() != rec.progress.len() {
+            return Err("series length mismatch".into());
+        }
+        // Energy sanity: between min and max possible power draw.
+        let t = rec.pcap.times.last().unwrap() + 1.0;
+        let sockets = cluster.sockets as f64;
+        let pmax = cluster.expected_power(120.0) * sockets * 1.2;
+        if rec.energy > pmax * t {
+            return Err(format!("energy {} exceeds physical bound", rec.energy));
+        }
+        Ok(())
+    });
+    let _ = std::fs::remove_dir_all(std::env::temp_dir().join("powerctl-prop-rec"));
+}
+
+#[test]
+fn prop_rng_split_streams_uncorrelated() {
+    // Campaign seeding soundness: children of a split never collide.
+    check(110, 32, |rng| rng.next_u64(), |seed| {
+        let mut root = Pcg64::seeded(*seed);
+        let mut a = root.split(0);
+        let mut b = root.split(1);
+        let xa: Vec<u64> = (0..32).map(|_| a.next_u64()).collect();
+        let xb: Vec<u64> = (0..32).map(|_| b.next_u64()).collect();
+        if xa == xb {
+            return Err("split streams identical".into());
+        }
+        let collisions = xa.iter().filter(|x| xb.contains(x)).count();
+        if collisions > 0 {
+            return Err(format!("{collisions} collisions"));
+        }
+        Ok(())
+    });
+}
