@@ -4,13 +4,18 @@
 //! * controller step: target ≪ 1 ms (sampling period is 1 s);
 //! * Eq. (1) heartbeat ingestion + median: target ≥ 1 M beats/s;
 //! * simulated node step: dominates campaign wall-time;
-//! * one full closed-loop run (the fig7 unit of work).
+//! * one full closed-loop run (the fig7 unit of work);
+//! * one fleet control period (16 engines + budget allocation), the new
+//!   fleet hot path.
 
 use powerctl::control::baseline::{PiPolicy, Uncontrolled};
+use powerctl::control::budget::{BudgetPolicy, NodeReport, SlackProportional};
 use powerctl::control::pi::{PiConfig, PiController};
+use powerctl::coordinator::engine::{ControlLoop, LockstepBackend};
 use powerctl::coordinator::experiment::{run_closed_loop, RunConfig};
 use powerctl::coordinator::progress::ProgressAggregator;
 use powerctl::experiments::{identify, Ctx, Scale};
+use powerctl::fleet::{BudgetedPolicy, NodePolicySpec, NodeSpec};
 use powerctl::sim::cluster::{Cluster, ClusterId};
 use powerctl::sim::node::NodeSim;
 use powerctl::util::bench::{black_box, section, Bench};
@@ -87,6 +92,60 @@ fn main() {
             let sp = ctl.setpoint();
             let mut p = PiPolicy(ctl);
             black_box(run_closed_loop(&cluster, &mut p, sp, 0.15, &cfg, seed));
+        });
+    }
+
+    section("fleet control period (16 nodes, in-process)");
+    {
+        // One fleet period = 16 engine ticks (node step + Eq. 1 + PI) plus
+        // one budget allocation — the unit of work the fleet coordinator
+        // repeats every simulated second. Engines run in-process here so
+        // the number excludes thread handoff.
+        const NODES: usize = 16;
+        let spec = NodeSpec {
+            cluster: ClusterId::Gros,
+            model: ident.model.clone(),
+            policy: NodePolicySpec::Pi { epsilon: 0.15 },
+        };
+        let share = 95.0;
+        let mut engines: Vec<(ControlLoop<LockstepBackend>, BudgetedPolicy)> = (0..NODES)
+            .map(|i| {
+                let policy = BudgetedPolicy::new(&spec, &cluster, share);
+                let node = NodeSim::new(cluster.clone(), 1000 + i as u64);
+                let mut engine = ControlLoop::new(LockstepBackend::new(node), 1.0);
+                engine.set_initial_pcap(policy.initial_pcap());
+                (engine, policy)
+            })
+            .collect();
+        let mut strategy = SlackProportional::default();
+        let mut now = 0.0;
+        // Cap iterations: every period appends one record row per engine.
+        let capped = Bench {
+            max_iterations: 20_000,
+            ..Bench::default()
+        };
+        capped.run("fleet_period_16_nodes_tick_plus_alloc", || {
+            now += 1.0;
+            let mut reports = Vec::with_capacity(NODES);
+            for (i, (engine, policy)) in engines.iter_mut().enumerate() {
+                let s = engine.tick(now, policy);
+                reports.push(NodeReport {
+                    node_id: i as u32,
+                    limit: policy.limit(),
+                    pcap: s.pcap,
+                    power: s.power,
+                    progress: s.progress,
+                    setpoint: policy.setpoint(),
+                    pcap_min: cluster.pcap_min,
+                    pcap_max: cluster.pcap_max,
+                    done: false,
+                });
+            }
+            let limits = strategy.allocate(now, share * NODES as f64, &reports);
+            for ((_, policy), &l) in engines.iter_mut().zip(&limits) {
+                policy.set_limit(l);
+            }
+            black_box(&limits);
         });
     }
 }

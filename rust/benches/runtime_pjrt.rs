@@ -5,16 +5,29 @@
 //!
 //! Skips (with a message) if `artifacts/` has not been built.
 
+#[cfg(feature = "pjrt")]
 use std::path::PathBuf;
+#[cfg(feature = "pjrt")]
 use std::time::Instant;
 
+#[cfg(feature = "pjrt")]
 use powerctl::runtime::{Runtime, StreamExecutor};
+#[cfg(feature = "pjrt")]
 use powerctl::util::bench::{black_box, section, Bench};
 
+#[cfg(feature = "pjrt")]
 fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
 }
 
+/// Without the `pjrt` feature the stub runtime cannot execute artifacts —
+/// skip instead of panicking on the stub's constructor error.
+#[cfg(not(feature = "pjrt"))]
+fn main() {
+    println!("runtime_pjrt: built without the `pjrt` feature; skipping");
+}
+
+#[cfg(feature = "pjrt")]
 fn main() {
     if !artifacts_dir().join("manifest.json").exists() {
         println!("runtime_pjrt: artifacts/ not built (run `make artifacts`); skipping");

@@ -1,0 +1,396 @@
+//! Cluster-level power-budget allocation (the fleet extension).
+//!
+//! The paper's controller regulates one node against its own ε; at fleet
+//! scale the binding constraint is a *global* power budget (facility feed,
+//! thermal envelope) that must be apportioned across heterogeneous nodes.
+//! Related work (EcoShift-style performance-aware power shifting, Rodero &
+//! Parashar's cross-layer power management) shows the leverage: move watts
+//! from nodes with progress slack to nodes that are pinched.
+//!
+//! A [`BudgetPolicy`] runs **above** the per-node PI loops: each
+//! reallocation epoch it reads one [`NodeReport`] per node (what the node's
+//! own controller measured and actuated — nothing internal to `sim::`) and
+//! returns one cap *ceiling* per node. The node's PI keeps full authority
+//! below its ceiling, so the two layers compose: the budget layer shapes
+//! the feasible region, the PI tracks its setpoint inside it.
+//!
+//! Invariants every implementation upholds (pinned by the tests):
+//! * each ceiling lies within the node's hardware range `[pcap_min, pcap_max]`;
+//! * the ceilings sum to at most `max(budget, Σ pcap_min)` — hardware
+//!   floors win when the budget is infeasibly small;
+//! * finished nodes are parked at their floor (their watts are free).
+
+/// What one node's control loop reports to the budget layer each epoch.
+#[derive(Debug, Clone, Copy)]
+pub struct NodeReport {
+    pub node_id: u32,
+    /// Ceiling currently allotted to this node [W].
+    pub limit: f64,
+    /// Cap the node's own policy actually applied last period [W].
+    pub pcap: f64,
+    /// Measured per-package power [W].
+    pub power: f64,
+    /// Eq. (1) progress [Hz].
+    pub progress: f64,
+    /// The node's progress setpoint [Hz] (NaN for uncontrolled nodes).
+    pub setpoint: f64,
+    /// Hardware actuator range [W].
+    pub pcap_min: f64,
+    pub pcap_max: f64,
+    /// The node's workload has completed.
+    pub done: bool,
+}
+
+impl NodeReport {
+    /// Progress deficit vs the setpoint [Hz]; 0 when tracking or unknown.
+    pub fn deficit(&self) -> f64 {
+        let d = self.setpoint - self.progress;
+        if d.is_finite() {
+            d.max(0.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// The node is held back by its ceiling: it sits at the ceiling while
+    /// still short of its setpoint.
+    pub fn pinched(&self) -> bool {
+        !self.done && self.deficit() > 0.02 * self.setpoint.abs().max(1.0) && self.pcap >= self.limit - 1.0
+    }
+
+    /// Watts of ceiling the node is demonstrably not using.
+    pub fn slack(&self) -> f64 {
+        (self.limit - self.pcap).max(0.0)
+    }
+}
+
+/// A cluster-level budget allocator: one ceiling decision per node per
+/// reallocation epoch.
+pub trait BudgetPolicy: Send {
+    /// Apportion `budget` watts of cap across `reports` (one ceiling per
+    /// report, same order). `t` is the epoch time [s].
+    fn allocate(&mut self, t: f64, budget: f64, reports: &[NodeReport]) -> Vec<f64>;
+
+    /// Human-readable name for records/tables.
+    fn name(&self) -> String;
+}
+
+/// Clamp-and-conserve helper shared by the strategies: clamp each ceiling
+/// to its node's range (floor for finished nodes), then — if the total
+/// still exceeds the budget — scale the excess above the floors down
+/// uniformly.
+fn reconcile(budget: f64, reports: &[NodeReport], mut limits: Vec<f64>) -> Vec<f64> {
+    for (l, r) in limits.iter_mut().zip(reports) {
+        if r.done {
+            *l = r.pcap_min;
+        } else {
+            *l = l.clamp(r.pcap_min, r.pcap_max);
+        }
+    }
+    let floor: f64 = reports.iter().map(|r| r.pcap_min).sum();
+    let total: f64 = limits.iter().sum();
+    if total > budget && total > floor {
+        let scale = ((budget - floor) / (total - floor)).clamp(0.0, 1.0);
+        for (l, r) in limits.iter_mut().zip(reports) {
+            *l = r.pcap_min + (*l - r.pcap_min) * scale;
+        }
+    }
+    limits
+}
+
+/// Null allocator: every node keeps its current ceiling (the
+/// no-reallocation reference — with static node policies this is exactly
+/// the "static uniform caps" deployment). The shared invariants still
+/// apply: ceilings are clamped, finished nodes park at their floor, and an
+/// over-budget hand-in is scaled down like every other strategy.
+#[derive(Debug, Clone, Default)]
+pub struct FrozenLimits;
+
+impl BudgetPolicy for FrozenLimits {
+    fn allocate(&mut self, _t: f64, budget: f64, reports: &[NodeReport]) -> Vec<f64> {
+        let limits = reports.iter().map(|r| r.limit).collect();
+        reconcile(budget, reports, limits)
+    }
+
+    fn name(&self) -> String {
+        "frozen".to_string()
+    }
+}
+
+/// Baseline: split the budget evenly across unfinished nodes, ignoring all
+/// feedback (what a feedback-free operator would deploy).
+#[derive(Debug, Clone, Default)]
+pub struct UniformBudget;
+
+impl BudgetPolicy for UniformBudget {
+    fn allocate(&mut self, _t: f64, budget: f64, reports: &[NodeReport]) -> Vec<f64> {
+        let active = reports.iter().filter(|r| !r.done).count().max(1);
+        let reserved: f64 = reports.iter().filter(|r| r.done).map(|r| r.pcap_min).sum();
+        let share = (budget - reserved).max(0.0) / active as f64;
+        let limits = reports
+            .iter()
+            .map(|r| if r.done { r.pcap_min } else { share })
+            .collect();
+        reconcile(budget, reports, limits)
+    }
+
+    fn name(&self) -> String {
+        "uniform".to_string()
+    }
+}
+
+/// Proportional-to-slack reallocation: every node's ceiling follows what it
+/// demonstrably needs (its applied cap plus a small margin); pinched nodes
+/// bid for more; the pool left over is handed out in proportion to each
+/// pinched node's remaining headroom.
+#[derive(Debug, Clone)]
+pub struct SlackProportional {
+    /// Margin kept above a tracking node's applied cap [W].
+    pub margin: f64,
+    /// Ceiling raise granted to a pinched node per epoch, as a fraction of
+    /// its remaining headroom.
+    pub raise: f64,
+}
+
+impl Default for SlackProportional {
+    fn default() -> Self {
+        SlackProportional {
+            margin: 3.0,
+            raise: 0.5,
+        }
+    }
+}
+
+impl BudgetPolicy for SlackProportional {
+    fn allocate(&mut self, _t: f64, budget: f64, reports: &[NodeReport]) -> Vec<f64> {
+        // Bids: what each node asks for this epoch.
+        let mut limits: Vec<f64> = reports
+            .iter()
+            .map(|r| {
+                if r.done {
+                    r.pcap_min
+                } else if r.pinched() {
+                    r.limit + self.raise * (r.pcap_max - r.limit).max(0.0)
+                } else {
+                    (r.pcap + self.margin).min(r.limit.max(r.pcap_min))
+                }
+            })
+            .collect();
+        // Hand surplus to pinched nodes in proportion to their remaining
+        // headroom (a slack node's PI would not use extra ceiling anyway).
+        let surplus = budget - limits.iter().sum::<f64>();
+        if surplus > 0.0 {
+            let headroom: f64 = reports
+                .iter()
+                .zip(&limits)
+                .filter(|(r, _)| r.pinched())
+                .map(|(r, &l)| (r.pcap_max - l).max(0.0))
+                .sum();
+            if headroom > 1e-9 {
+                for (r, l) in reports.iter().zip(limits.iter_mut()) {
+                    if r.pinched() {
+                        *l += surplus * (r.pcap_max - *l).max(0.0) / headroom;
+                    }
+                }
+            }
+        }
+        reconcile(budget, reports, limits)
+    }
+
+    fn name(&self) -> String {
+        "slack-proportional".to_string()
+    }
+}
+
+/// Greedy repack: floors first, then top nodes up to their demonstrated
+/// demand in order of progress deficit (the most-starved node first), then
+/// spend any remaining pool on headroom in the same order.
+#[derive(Debug, Clone)]
+pub struct GreedyRepack {
+    /// Margin kept above a tracking node's applied cap [W].
+    pub margin: f64,
+}
+
+impl Default for GreedyRepack {
+    fn default() -> Self {
+        GreedyRepack { margin: 3.0 }
+    }
+}
+
+impl BudgetPolicy for GreedyRepack {
+    fn allocate(&mut self, _t: f64, budget: f64, reports: &[NodeReport]) -> Vec<f64> {
+        let n = reports.len();
+        let mut limits: Vec<f64> = reports.iter().map(|r| r.pcap_min).collect();
+        let mut pool = budget - limits.iter().sum::<f64>();
+
+        let mut order: Vec<usize> = (0..n).filter(|&i| !reports[i].done).collect();
+        order.sort_by(|&a, &b| {
+            reports[b]
+                .deficit()
+                .partial_cmp(&reports[a].deficit())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+
+        // Pass 1: demonstrated demand (pinched nodes ask for the rail).
+        for &i in &order {
+            if pool <= 0.0 {
+                break;
+            }
+            let r = &reports[i];
+            let desired = if r.pinched() {
+                r.pcap_max
+            } else {
+                (r.pcap + self.margin).clamp(r.pcap_min, r.pcap_max)
+            };
+            let grant = (desired - limits[i]).clamp(0.0, pool);
+            limits[i] += grant;
+            pool -= grant;
+        }
+        // Pass 2: remaining pool buys headroom (future disturbances).
+        for &i in &order {
+            if pool <= 0.0 {
+                break;
+            }
+            let grant = (reports[i].pcap_max - limits[i]).clamp(0.0, pool);
+            limits[i] += grant;
+            pool -= grant;
+        }
+        reconcile(budget, reports, limits)
+    }
+
+    fn name(&self) -> String {
+        "greedy-repack".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(id: u32, limit: f64, pcap: f64, progress: f64, setpoint: f64) -> NodeReport {
+        NodeReport {
+            node_id: id,
+            limit,
+            pcap,
+            power: pcap * 0.9,
+            progress,
+            setpoint,
+            pcap_min: 40.0,
+            pcap_max: 120.0,
+            done: false,
+        }
+    }
+
+    fn strategies() -> Vec<Box<dyn BudgetPolicy>> {
+        vec![
+            Box::new(FrozenLimits),
+            Box::new(UniformBudget),
+            Box::new(SlackProportional::default()),
+            Box::new(GreedyRepack::default()),
+        ]
+    }
+
+    fn mixed_fleet() -> Vec<NodeReport> {
+        vec![
+            // Slack: tracking its setpoint well below its ceiling.
+            report(0, 100.0, 60.0, 21.0, 21.0),
+            // Pinched: at the ceiling, short of its setpoint.
+            report(1, 80.0, 80.0, 45.0, 55.0),
+            // Tracking near its ceiling.
+            report(2, 90.0, 86.0, 33.0, 33.2),
+        ]
+    }
+
+    #[test]
+    fn all_strategies_conserve_budget_and_bounds() {
+        let reports = mixed_fleet();
+        for strat in strategies().iter_mut() {
+            for budget in [150.0, 240.0, 300.0, 400.0] {
+                let limits = strat.allocate(0.0, budget, &reports);
+                assert_eq!(limits.len(), reports.len());
+                let total: f64 = limits.iter().sum();
+                let floor: f64 = reports.iter().map(|r| r.pcap_min).sum();
+                assert!(
+                    total <= budget.max(floor) + 1e-6,
+                    "{}: Σ{total} > budget {budget}",
+                    strat.name()
+                );
+                for (l, r) in limits.iter().zip(&reports) {
+                    assert!(
+                        (r.pcap_min - 1e-9..=r.pcap_max + 1e-9).contains(l),
+                        "{}: limit {l} outside [{}, {}]",
+                        strat.name(),
+                        r.pcap_min,
+                        r.pcap_max
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_splits_evenly() {
+        let reports = mixed_fleet();
+        let limits = UniformBudget.allocate(0.0, 270.0, &reports);
+        for l in &limits {
+            assert!((l - 90.0).abs() < 1e-9, "{limits:?}");
+        }
+    }
+
+    #[test]
+    fn slack_moves_watts_to_pinched_node() {
+        let reports = mixed_fleet();
+        let limits = SlackProportional::default().allocate(0.0, 270.0, &reports);
+        // The slack node's ceiling shrinks toward its demonstrated need…
+        assert!(limits[0] < 70.0, "slack kept its ceiling: {limits:?}");
+        // …and the pinched node's ceiling rises above its old one.
+        assert!(limits[1] > 85.0, "pinched not helped: {limits:?}");
+    }
+
+    #[test]
+    fn greedy_prioritizes_largest_deficit() {
+        let mut reports = mixed_fleet();
+        reports.push(report(3, 80.0, 80.0, 30.0, 70.0)); // starving hardest
+        let limits = GreedyRepack::default().allocate(0.0, 330.0, &reports);
+        assert!(
+            limits[3] >= limits[1],
+            "worst deficit not served first: {limits:?}"
+        );
+        assert!(limits[3] > 100.0, "starving node not topped up: {limits:?}");
+    }
+
+    #[test]
+    fn done_nodes_park_at_floor() {
+        let mut reports = mixed_fleet();
+        reports[0].done = true;
+        for strat in strategies().iter_mut() {
+            let limits = strat.allocate(0.0, 280.0, &reports);
+            assert_eq!(limits[0], 40.0, "{}: {limits:?}", strat.name());
+        }
+    }
+
+    #[test]
+    fn infeasible_budget_falls_back_to_floors() {
+        let reports = mixed_fleet();
+        for strat in strategies().iter_mut() {
+            let limits = strat.allocate(0.0, 50.0, &reports);
+            for (l, r) in limits.iter().zip(&reports) {
+                assert!((l - r.pcap_min).abs() < 1e-6, "{}: {limits:?}", strat.name());
+            }
+        }
+    }
+
+    #[test]
+    fn frozen_limits_never_move() {
+        let reports = mixed_fleet();
+        let limits = FrozenLimits.allocate(5.0, 1e9, &reports);
+        assert_eq!(limits, vec![100.0, 80.0, 90.0]);
+    }
+
+    #[test]
+    fn nan_setpoint_never_pinched() {
+        let r = report(0, 80.0, 80.0, 20.0, f64::NAN);
+        assert!(!r.pinched());
+        assert_eq!(r.deficit(), 0.0);
+    }
+}

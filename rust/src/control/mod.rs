@@ -6,13 +6,17 @@
 //! * [`adaptive`] — gain-scheduled extension for phase transitions (the
 //!   §6 future-work direction, exercised by the phases workload);
 //! * [`baseline`] — uncontrolled and static-cap policies for the
-//!   evaluation's comparisons.
+//!   evaluation's comparisons;
+//! * [`budget`] — cluster-level power-budget allocation across node-local
+//!   loops (the fleet extension).
 
 pub mod adaptive;
 pub mod antiwindup;
 pub mod baseline;
+pub mod budget;
 pub mod pi;
 
 pub use adaptive::AdaptivePi;
 pub use baseline::{Policy, StaticCap, Uncontrolled};
+pub use budget::{BudgetPolicy, GreedyRepack, NodeReport, SlackProportional, UniformBudget};
 pub use pi::{PiConfig, PiController};

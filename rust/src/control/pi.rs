@@ -111,6 +111,25 @@ impl PiController {
         self.epsilon = epsilon;
     }
 
+    /// Narrow/restore the actuator range at runtime (the fleet budget
+    /// allocator moves each node's ceiling). Going through the config keeps
+    /// the clamp *inside* the controller, so the stored linearized command
+    /// tracks the achievable cap and the anti-windup invariant holds under
+    /// a moving ceiling exactly as under actuator saturation.
+    pub fn set_cap_range(&mut self, pcap_min: f64, pcap_max: f64) {
+        assert!(
+            pcap_max > pcap_min && pcap_min > 0.0,
+            "invalid cap range [{pcap_min}, {pcap_max}]"
+        );
+        self.config.pcap_min = pcap_min;
+        self.config.pcap_max = pcap_max;
+        // Re-assert the invariant for the stored state: if the ceiling
+        // dropped below the last command, pull the state down with it.
+        let lo = self.model.static_model.linearize_pcap(pcap_min);
+        let hi = self.model.static_model.linearize_pcap(pcap_max);
+        self.prev_pcap_l = self.prev_pcap_l.clamp(lo.min(hi), lo.max(hi));
+    }
+
     /// One control period: measured `progress` at time `t` → new power cap
     /// [W], already clamped to the actuator range.
     pub fn step(&mut self, t: f64, progress: f64) -> f64 {
@@ -315,5 +334,37 @@ pub mod tests {
     #[should_panic(expected = "out of range")]
     fn invalid_epsilon_panics() {
         controller(ClusterId::Gros, 0.95);
+    }
+
+    #[test]
+    fn moving_ceiling_clamps_and_recovers() {
+        // Fleet budget actuation: lower the ceiling mid-run, outputs obey
+        // it without windup; restore it, the loop re-converges.
+        let mut ctl = controller(ClusterId::Gros, 0.0); // wants full cap
+        let plant = fitted_model(ClusterId::Gros);
+        let mut progress = plant.static_model.predict(120.0);
+        let mut t = 0.0;
+        for _ in 0..50 {
+            let cap = ctl.step(t, progress);
+            progress = plant.predict_next(progress, cap, 1.0);
+            t += 1.0;
+        }
+        ctl.set_cap_range(40.0, 80.0);
+        for _ in 0..100 {
+            let cap = ctl.step(t, progress);
+            assert!((40.0..=80.0).contains(&cap), "ceiling violated: {cap}");
+            progress = plant.predict_next(progress, cap, 1.0);
+            t += 1.0;
+        }
+        ctl.set_cap_range(40.0, 120.0);
+        let mut cap = 0.0;
+        for _ in 0..200 {
+            cap = ctl.step(t, progress);
+            progress = plant.predict_next(progress, cap, 1.0);
+            t += 1.0;
+        }
+        // ε = 0: the controller must climb back toward the rail quickly
+        // after the ceiling lifts (no residual windup from the clamp).
+        assert!(cap > 110.0, "did not recover after ceiling lift: {cap}");
     }
 }

@@ -1,0 +1,513 @@
+//! The unified control-period engine.
+//!
+//! Every control scenario in this crate — the live NRM daemon, the lockstep
+//! open-/closed-loop campaign drivers, and the fleet workers — runs the same
+//! synchronous loop at a fixed period:
+//!
+//! ```text
+//! sense (beats + power) → aggregate progress (Eq. 1) → policy → actuate → record
+//! ```
+//!
+//! [`ControlLoop`] implements that loop **once**, parameterized over
+//!
+//! * a [`Clock`](crate::sim::clock::Clock) (virtual for campaigns, wall for
+//!   the live daemon) via [`ControlLoop::run`],
+//! * a [`NodeBackend`] — where heartbeats and power samples come from and
+//!   where the cap lands (simulated node in lockstep, transport + RAPL on
+//!   the live path),
+//! * a [`Policy`](crate::control::baseline::Policy) — PI, baselines, or an
+//!   open-loop [`Plan`](crate::ident::signals::Plan) via [`PlanPolicy`].
+//!
+//! `NrmDaemon` and `run_open_loop`/`run_closed_loop` are thin adapters over
+//! this engine (construction + scalar summary fields only); the fleet
+//! coordinator runs one engine per node on worker threads.
+//!
+//! Recording convention: each period's row is stamped at the period-end
+//! sample time `t` and stores the cap **decided at `t`** (in force for the
+//! next period). The final row of a terminated run stores the cap still in
+//! force. For open-loop plans this pairs `pcaps[i]` with the transition
+//! `progress[i] → progress[i+1]`, exactly the convention
+//! [`DynamicModel::fit`](crate::ident::dynamic_model::DynamicModel::fit)
+//! assumes.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::control::baseline::Policy;
+use crate::coordinator::progress::ProgressAggregator;
+use crate::coordinator::records::RunRecord;
+use crate::ident::signals::Plan;
+use crate::sim::clock::Clock;
+use crate::sim::node::NodeSim;
+
+/// Sensor snapshot for one control period.
+#[derive(Debug, Clone, Copy)]
+pub struct PeriodSensors {
+    /// Sample time at the period end [s].
+    pub time: f64,
+    /// Measured per-package power [W] (NaN when unavailable).
+    pub power: f64,
+    /// Node energy counter [J].
+    pub energy: f64,
+    /// Oracle true progress [Hz]; NaN on live paths (no oracle).
+    pub true_progress: f64,
+}
+
+/// Node backend: what the engine monitors and actuates each period. On real
+/// hardware this wraps the RAPL sysfs knobs plus the heartbeat transport;
+/// in lockstep simulation it wraps the simulated node directly.
+pub trait NodeBackend: Send {
+    /// Apply a power cap; returns the clamped value.
+    fn set_pcap(&mut self, watts: f64) -> f64;
+
+    /// The cap currently in force [W].
+    fn pcap(&self) -> f64;
+
+    /// Advance to `now`, appending the heartbeat timestamps observed during
+    /// the elapsed period to `beats`, and return the sensor snapshot.
+    /// Must be side-effect free when `now` does not advance time.
+    fn advance(&mut self, now: f64, beats: &mut Vec<f64>) -> PeriodSensors;
+
+    /// Current sustainable application iteration rate [Hz] (sim oracle;
+    /// used only for live workload pacing, never fed to the controller).
+    fn target_rate(&self) -> f64 {
+        f64::NAN
+    }
+}
+
+impl<T: NodeBackend + ?Sized> NodeBackend for Box<T> {
+    fn set_pcap(&mut self, watts: f64) -> f64 {
+        (**self).set_pcap(watts)
+    }
+    fn pcap(&self) -> f64 {
+        (**self).pcap()
+    }
+    fn advance(&mut self, now: f64, beats: &mut Vec<f64>) -> PeriodSensors {
+        (**self).advance(now, beats)
+    }
+    fn target_rate(&self) -> f64 {
+        (**self).target_rate()
+    }
+}
+
+/// One bookkeeping row per control period.
+#[derive(Debug, Clone, Copy)]
+pub struct PeriodRecord {
+    pub time: f64,
+    /// Cap decided this period (in force for the next one) [W].
+    pub pcap: f64,
+    pub power: f64,
+    pub progress: f64,
+    /// Oracle progress (NaN on live paths).
+    pub true_progress: f64,
+    pub beats_total: u64,
+}
+
+/// [`NodeBackend`] over the simulated node for lockstep campaign drivers:
+/// heartbeats come straight out of [`NodeSim::step`] with exact timestamps.
+pub struct LockstepBackend {
+    node: NodeSim,
+    last_time: f64,
+}
+
+impl LockstepBackend {
+    pub fn new(node: NodeSim) -> Self {
+        LockstepBackend {
+            last_time: node.time(),
+            node,
+        }
+    }
+
+    pub fn node(&self) -> &NodeSim {
+        &self.node
+    }
+
+    pub fn node_mut(&mut self) -> &mut NodeSim {
+        &mut self.node
+    }
+}
+
+impl NodeBackend for LockstepBackend {
+    fn set_pcap(&mut self, watts: f64) -> f64 {
+        self.node.set_pcap(watts)
+    }
+
+    fn pcap(&self) -> f64 {
+        self.node.pcap()
+    }
+
+    fn advance(&mut self, now: f64, beats: &mut Vec<f64>) -> PeriodSensors {
+        let dt = now - self.last_time;
+        if dt <= 0.0 {
+            // Non-monotonic tick: report state without mutating the node.
+            return PeriodSensors {
+                time: now,
+                power: f64::NAN,
+                energy: self.node.energy(),
+                true_progress: f64::NAN,
+            };
+        }
+        self.last_time = now;
+        let s = self.node.step(dt);
+        beats.extend_from_slice(&s.heartbeats);
+        PeriodSensors {
+            // Report the driver's clock, not the node's sub-step
+            // accumulated time: the clock is the authority and stays free
+            // of float drift at period boundaries (plan ZOH edges).
+            time: now,
+            power: s.power,
+            energy: s.energy,
+            true_progress: s.true_progress,
+        }
+    }
+}
+
+/// Adapter running an open-loop [`Plan`] through the engine: a "policy"
+/// that ignores progress and replays the schedule (characterization mode).
+pub struct PlanPolicy<'a>(pub &'a Plan);
+
+impl Policy for PlanPolicy<'_> {
+    fn decide(&mut self, t: f64, _progress: f64) -> f64 {
+        self.0.pcap_at(t)
+    }
+    fn name(&self) -> String {
+        "plan".to_string()
+    }
+}
+
+/// The engine: one instance drives one node's control loop.
+pub struct ControlLoop<B: NodeBackend> {
+    backend: B,
+    /// Control period [s].
+    pub period: f64,
+    node_id: u32,
+    aggregator: ProgressAggregator,
+    beat_buf: Vec<f64>,
+    samples: Vec<PeriodRecord>,
+    /// Stop once this many progress units have been observed.
+    quota: Option<u64>,
+    /// Hard stop: run time (relative to `run_start`) [s].
+    max_time: f64,
+    run_start: f64,
+    /// Exact timestamp at which the quota-th beat arrived.
+    finish_time: Option<f64>,
+    timed_out: bool,
+    last_energy: f64,
+}
+
+impl<B: NodeBackend> ControlLoop<B> {
+    pub fn new(backend: B, period: f64) -> Self {
+        assert!(period > 0.0, "control period must be positive");
+        ControlLoop {
+            backend,
+            period,
+            node_id: 0,
+            aggregator: ProgressAggregator::new(),
+            beat_buf: Vec::new(),
+            samples: Vec::new(),
+            quota: None,
+            max_time: f64::INFINITY,
+            run_start: 0.0,
+            finish_time: None,
+            timed_out: false,
+            last_energy: 0.0,
+        }
+    }
+
+    /// Tag this loop's records with a node id (fleet bookkeeping).
+    pub fn set_node_id(&mut self, id: u32) {
+        self.node_id = id;
+    }
+
+    pub fn set_quota(&mut self, quota: Option<u64>) {
+        self.quota = quota;
+    }
+
+    pub fn set_max_time(&mut self, max_time: f64) {
+        self.max_time = max_time;
+    }
+
+    /// Apply the starting cap (§5.2: experiments start at the upper limit).
+    pub fn set_initial_pcap(&mut self, watts: f64) -> f64 {
+        self.backend.set_pcap(watts)
+    }
+
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    pub fn backend_mut(&mut self) -> &mut B {
+        &mut self.backend
+    }
+
+    /// Quota reached (exact heartbeat timestamp) — `None` while running.
+    pub fn finish_time(&self) -> Option<f64> {
+        self.finish_time
+    }
+
+    pub fn timed_out(&self) -> bool {
+        self.timed_out
+    }
+
+    /// The loop reached a terminal condition (quota or timeout).
+    pub fn finished(&self) -> bool {
+        self.finish_time.is_some() || self.timed_out
+    }
+
+    pub fn samples(&self) -> &[PeriodRecord] {
+        &self.samples
+    }
+
+    pub fn total_beats(&self) -> u64 {
+        self.aggregator.total_beats()
+    }
+
+    pub fn last_energy(&self) -> f64 {
+        self.last_energy
+    }
+
+    /// One control period ending at `now`: sense → Eq. (1) → policy →
+    /// actuate → record. Once the loop is [`finished`](Self::finished), the
+    /// policy is no longer consulted and the cap in force is recorded.
+    pub fn tick(&mut self, now: f64, policy: &mut dyn Policy) -> PeriodRecord {
+        self.beat_buf.clear();
+        let sensors = self.backend.advance(now, &mut self.beat_buf);
+        if sensors.energy.is_finite() {
+            self.last_energy = sensors.energy;
+        }
+
+        // Completion: record the exact timestamp of the quota-th beat from
+        // the heartbeat stream (not the period boundary).
+        if self.finish_time.is_none() {
+            if let Some(q) = self.quota {
+                let before = self.aggregator.total_beats();
+                if before + self.beat_buf.len() as u64 >= q {
+                    let need = q.saturating_sub(before) as usize;
+                    self.finish_time = if need == 0 {
+                        Some(sensors.time)
+                    } else {
+                        self.beat_buf.get(need - 1).copied().or(Some(sensors.time))
+                    };
+                }
+            }
+        }
+
+        self.aggregator.ingest(&self.beat_buf);
+        let progress = self.aggregator.sample();
+        if sensors.time - self.run_start >= self.max_time {
+            self.timed_out = true;
+        }
+
+        let pcap = if self.finished() {
+            self.backend.pcap()
+        } else {
+            self.backend.set_pcap(policy.decide(sensors.time, progress))
+        };
+
+        let rec = PeriodRecord {
+            time: sensors.time,
+            pcap,
+            power: sensors.power,
+            progress,
+            true_progress: sensors.true_progress,
+            beats_total: self.aggregator.total_beats(),
+        };
+        self.samples.push(rec);
+        rec
+    }
+
+    /// Drive ticks from `clock` until the loop finishes or `stop` is set.
+    ///
+    /// Termination state is per-call: a daemon that timed out (or filled a
+    /// quota) on a previous `run` resumes actuating when run again —
+    /// matching the pre-engine `NrmDaemon::run`, which derived the timeout
+    /// fresh each call.
+    pub fn run(&mut self, clock: &mut dyn Clock, policy: &mut dyn Policy, stop: Option<&AtomicBool>) {
+        self.timed_out = false;
+        self.finish_time = None;
+        self.run_start = clock.now();
+        let mut next = self.run_start + self.period;
+        loop {
+            clock.wait_until(next);
+            self.tick(clock.now(), policy);
+            next += self.period;
+            let stopped = stop.is_some_and(|s| s.load(Ordering::Relaxed));
+            if stopped || self.finished() {
+                break;
+            }
+        }
+    }
+
+    /// Export the per-period series as a [`RunRecord`]. Scalar summary
+    /// fields carry engine defaults (`exec_time` = last sample time,
+    /// `completed` = quota reached); adapters override them for their own
+    /// termination semantics.
+    pub fn record(&self) -> RunRecord {
+        let mut rec = RunRecord {
+            node_id: self.node_id,
+            beats: self.aggregator.total_beats(),
+            energy: self.last_energy,
+            completed: self.finish_time.is_some(),
+            epsilon: f64::NAN,
+            setpoint: f64::NAN,
+            ..Default::default()
+        };
+        for s in &self.samples {
+            rec.pcap.push(s.time, s.pcap);
+            rec.power.push(s.time, s.power);
+            rec.progress.push(s.time, s.progress);
+            // Push even when NaN (live path / stalled tick): the series
+            // must stay row-aligned with the others for to_table().
+            rec.true_progress.push(s.time, s.true_progress);
+        }
+        rec.exec_time = self.samples.last().map(|s| s.time).unwrap_or(0.0);
+        rec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::baseline::{StaticCap, Uncontrolled};
+    use crate::ident::signals;
+    use crate::sim::clock::VirtualClock;
+
+    /// Scripted backend: emits beats at a fixed rate, constant power. Beat
+    /// timestamps are computed by index (`k / rate`), not accumulated, so
+    /// period boundaries stay float-exact in the assertions below.
+    struct ScriptBackend {
+        rate: f64,
+        pcap: f64,
+        last: f64,
+        emitted: u64,
+        energy: f64,
+    }
+
+    impl ScriptBackend {
+        fn new(rate: f64) -> Self {
+            ScriptBackend {
+                rate,
+                pcap: 120.0,
+                last: 0.0,
+                emitted: 0,
+                energy: 0.0,
+            }
+        }
+    }
+
+    impl NodeBackend for ScriptBackend {
+        fn set_pcap(&mut self, watts: f64) -> f64 {
+            self.pcap = watts.clamp(40.0, 120.0);
+            self.pcap
+        }
+        fn pcap(&self) -> f64 {
+            self.pcap
+        }
+        fn advance(&mut self, now: f64, beats: &mut Vec<f64>) -> PeriodSensors {
+            let dt = now - self.last;
+            if dt > 0.0 {
+                loop {
+                    let t = (self.emitted + 1) as f64 / self.rate;
+                    if t > now + 1e-9 {
+                        break;
+                    }
+                    beats.push(t);
+                    self.emitted += 1;
+                }
+                self.last = now;
+                self.energy += self.pcap * dt;
+            }
+            PeriodSensors {
+                time: now,
+                power: self.pcap * 0.9,
+                energy: self.energy,
+                true_progress: self.rate,
+            }
+        }
+    }
+
+    #[test]
+    fn steady_rate_measured_and_recorded() {
+        let mut engine = ControlLoop::new(ScriptBackend::new(20.0), 1.0);
+        let mut policy = Uncontrolled { pcap_max: 120.0 };
+        for i in 1..=10 {
+            engine.tick(i as f64, &mut policy);
+        }
+        let s = engine.samples().last().unwrap();
+        assert!((s.progress - 20.0).abs() < 1e-9, "progress {}", s.progress);
+        assert_eq!(s.pcap, 120.0);
+        assert_eq!(engine.total_beats(), 200);
+        let rec = engine.record();
+        assert_eq!(rec.pcap.len(), 10);
+        assert_eq!(rec.beats, 200);
+        assert!(rec.energy > 0.0);
+    }
+
+    #[test]
+    fn quota_finish_uses_exact_beat_timestamp() {
+        // 20 Hz, quota 30: the 30th beat lands at t = 1.5 inside period 2.
+        let mut engine = ControlLoop::new(ScriptBackend::new(20.0), 1.0);
+        engine.set_quota(Some(30));
+        let mut policy = Uncontrolled { pcap_max: 120.0 };
+        engine.tick(1.0, &mut policy);
+        assert!(engine.finish_time().is_none());
+        engine.tick(2.0, &mut policy);
+        let ft = engine.finish_time().expect("quota reached");
+        assert!((ft - 1.5).abs() < 1e-9, "finish {ft}");
+        assert!(engine.finished());
+    }
+
+    #[test]
+    fn finished_loop_stops_actuating() {
+        let mut engine = ControlLoop::new(ScriptBackend::new(10.0), 1.0);
+        engine.set_quota(Some(5));
+        let mut policy = StaticCap { pcap: 60.0 };
+        engine.tick(1.0, &mut policy); // quota hit; cap NOT re-decided
+        let s = engine.samples()[0];
+        assert_eq!(s.pcap, 120.0, "final row records the cap in force");
+    }
+
+    #[test]
+    fn timeout_flags_engine() {
+        let mut engine = ControlLoop::new(ScriptBackend::new(10.0), 1.0);
+        engine.set_max_time(3.0);
+        let mut policy = Uncontrolled { pcap_max: 120.0 };
+        let mut clock = VirtualClock::new();
+        engine.run(&mut clock, &mut policy, None);
+        assert!(engine.timed_out());
+        assert!(engine.finish_time().is_none());
+        assert_eq!(engine.samples().last().unwrap().time, 3.0);
+    }
+
+    #[test]
+    fn run_respects_stop_flag() {
+        let mut engine = ControlLoop::new(ScriptBackend::new(10.0), 1.0);
+        let mut policy = Uncontrolled { pcap_max: 120.0 };
+        let mut clock = VirtualClock::new();
+        let stop = AtomicBool::new(true); // pre-stopped: exactly one tick
+        engine.run(&mut clock, &mut policy, Some(&stop));
+        assert_eq!(engine.samples().len(), 1);
+    }
+
+    #[test]
+    fn plan_policy_replays_schedule() {
+        let plan = signals::staircase(40.0, 120.0, 40.0, 10.0);
+        let mut policy = PlanPolicy(&plan);
+        assert_eq!(policy.decide(0.0, f64::NAN), 40.0);
+        assert_eq!(policy.decide(10.0, f64::NAN), 80.0);
+        assert_eq!(policy.decide(25.0, f64::NAN), 120.0);
+        assert_eq!(policy.name(), "plan");
+    }
+
+    #[test]
+    fn non_monotonic_tick_is_side_effect_free() {
+        let mut engine = ControlLoop::new(ScriptBackend::new(10.0), 1.0);
+        let mut policy = Uncontrolled { pcap_max: 120.0 };
+        engine.tick(1.0, &mut policy);
+        let beats_before = engine.total_beats();
+        let energy_before = engine.last_energy();
+        let s = engine.tick(1.0, &mut policy); // same timestamp again
+        assert_eq!(engine.total_beats(), beats_before);
+        assert_eq!(engine.last_energy(), energy_before);
+        assert!(s.power.is_nan());
+    }
+}

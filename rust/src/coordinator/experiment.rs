@@ -3,15 +3,20 @@
 //! control loop, with repetition and splittable seeding.
 //!
 //! This is the §4.1 "characterization vs evaluation" distinction made
-//! executable: the same sampling loop either replays a predefined
-//! [`Plan`] (open loop) or lets a [`Policy`] react to the Eq. (1) progress
-//! signal (closed loop).
+//! executable, as two thin adapters over the shared
+//! [`ControlLoop`](crate::coordinator::engine::ControlLoop) engine: the
+//! same sense → Eq. (1) → policy → actuate → record period either replays a
+//! predefined [`Plan`] (open loop, via
+//! [`PlanPolicy`](crate::coordinator::engine::PlanPolicy)) or lets a
+//! [`Policy`] react to the progress signal (closed loop). The adapters only
+//! construct the engine and fill the scalar summary fields.
 
 use crate::control::baseline::Policy;
-use crate::coordinator::progress::ProgressAggregator;
+use crate::coordinator::engine::{ControlLoop, LockstepBackend, PlanPolicy};
 use crate::coordinator::records::RunRecord;
 use crate::ident::signals::Plan;
 use crate::sim::cluster::Cluster;
+use crate::sim::clock::VirtualClock;
 use crate::sim::node::NodeSim;
 
 /// Common run parameters.
@@ -37,38 +42,27 @@ impl Default for RunConfig {
     }
 }
 
+fn lockstep_engine(cluster: &Cluster, config: &RunConfig, seed: u64) -> ControlLoop<LockstepBackend> {
+    let node = NodeSim::new(cluster.clone(), seed);
+    ControlLoop::new(LockstepBackend::new(node), config.sample_period)
+}
+
 /// Execute an open-loop plan (characterization mode): the resource manager
 /// follows the schedule; the benchmark runs for the plan's duration.
 pub fn run_open_loop(cluster: &Cluster, plan: &Plan, config: &RunConfig, seed: u64) -> RunRecord {
-    let mut node = NodeSim::new(cluster.clone(), seed);
-    let mut agg = ProgressAggregator::new();
-    let mut rec = RunRecord {
-        cluster: cluster.id.name().to_string(),
-        policy: "plan".to_string(),
-        seed,
-        epsilon: f64::NAN,
-        setpoint: f64::NAN,
-        ..Default::default()
-    };
-
-    node.set_pcap(plan.pcap_at(0.0));
-    let mut t = 0.0;
+    let mut engine = lockstep_engine(cluster, config, seed);
+    engine.set_initial_pcap(plan.pcap_at(0.0));
+    let mut policy = PlanPolicy(plan);
     let periods = (plan.duration / config.sample_period).round() as usize;
+    let mut t = 0.0;
     for _ in 0..periods {
-        let pcap = plan.pcap_at(t);
-        node.set_pcap(pcap);
-        let sensors = node.step(config.sample_period);
-        agg.ingest(&sensors.heartbeats);
-        let progress = agg.sample();
-        t = sensors.time;
-        rec.pcap.push(t, pcap);
-        rec.power.push(t, sensors.power);
-        rec.progress.push(t, progress);
-        rec.true_progress.push(t, sensors.true_progress);
+        t += config.sample_period;
+        engine.tick(t, &mut policy);
     }
-    rec.exec_time = t;
-    rec.energy = node.step(1e-6).energy;
-    rec.beats = node.beats();
+    let mut rec = engine.record();
+    rec.cluster = cluster.id.name().to_string();
+    rec.policy = "plan".to_string();
+    rec.seed = seed;
     rec.completed = true;
     rec
 }
@@ -84,47 +78,23 @@ pub fn run_closed_loop(
     config: &RunConfig,
     seed: u64,
 ) -> RunRecord {
-    let mut node = NodeSim::new(cluster.clone(), seed);
-    let mut agg = ProgressAggregator::new();
-    let mut rec = RunRecord {
-        cluster: cluster.id.name().to_string(),
-        policy: policy.name(),
-        seed,
-        epsilon,
-        setpoint,
-        ..Default::default()
-    };
-
+    let mut engine = lockstep_engine(cluster, config, seed);
     // §5.2: "The initial powercap is set at its upper limit."
-    node.set_pcap(cluster.pcap_max);
-    let mut finish_time = None;
-    loop {
-        let sensors = node.step(config.sample_period);
-        // Record the exact completion timestamp from the heartbeat stream.
-        if finish_time.is_none() && node.beats() >= config.total_beats {
-            let overshoot = (node.beats() - config.total_beats) as usize;
-            let idx = sensors.heartbeats.len().saturating_sub(overshoot + 1);
-            finish_time = sensors.heartbeats.get(idx).copied().or(Some(sensors.time));
-        }
-        agg.ingest(&sensors.heartbeats);
-        let progress = agg.sample();
-        let t = sensors.time;
-        rec.power.push(t, sensors.power);
-        rec.progress.push(t, progress);
-        rec.true_progress.push(t, sensors.true_progress);
+    engine.set_initial_pcap(cluster.pcap_max);
+    engine.set_quota(Some(config.total_beats));
+    engine.set_max_time(config.max_time);
+    let mut clock = VirtualClock::new();
+    engine.run(&mut clock, policy, None);
 
-        if finish_time.is_some() || t >= config.max_time {
-            rec.pcap.push(t, node.pcap());
-            rec.energy = sensors.energy;
-            break;
-        }
-        let pcap = policy.decide(t, progress);
-        node.set_pcap(pcap);
-        rec.pcap.push(t, pcap);
-    }
-    rec.completed = finish_time.is_some();
-    rec.exec_time = finish_time.unwrap_or(config.max_time);
-    rec.beats = node.beats().min(config.total_beats);
+    let mut rec = engine.record();
+    rec.cluster = cluster.id.name().to_string();
+    rec.policy = policy.name();
+    rec.seed = seed;
+    rec.epsilon = epsilon;
+    rec.setpoint = setpoint;
+    rec.completed = engine.finish_time().is_some();
+    rec.exec_time = engine.finish_time().unwrap_or(config.max_time);
+    rec.beats = engine.total_beats().min(config.total_beats);
     rec
 }
 
@@ -178,6 +148,20 @@ mod tests {
         assert!(late > early * 1.5, "staircase effect missing: {early} → {late}");
         assert!(rec.energy > 0.0);
         assert!(rec.beats > 0);
+    }
+
+    #[test]
+    fn open_loop_pcap_pairs_with_next_transition() {
+        // Engine recording convention: the cap recorded at row i is the one
+        // in force during (t_i, t_{i+1}] — the pairing DynamicModel::fit
+        // assumes.
+        let c = Cluster::get(ClusterId::Gros);
+        let plan = signals::staircase(40.0, 120.0, 40.0, 10.0); // 3 levels
+        let rec = run_open_loop(&c, &plan, &short_config(), 2);
+        // Row at t = 10 (index 9) already carries the second level.
+        assert_eq!(rec.pcap.times[9], 10.0);
+        assert_eq!(rec.pcap.values[9], 80.0);
+        assert_eq!(rec.pcap.values[8], 40.0);
     }
 
     #[test]
@@ -254,5 +238,31 @@ mod tests {
         // exec_time is a heartbeat timestamp, not a period boundary: it
         // should not be an integer multiple of the period (almost surely).
         assert!((rec.exec_time.fract()).abs() > 1e-9);
+    }
+
+    #[test]
+    fn adapter_matches_hand_driven_engine() {
+        // The adapter adds nothing to the engine: driving the engine by
+        // hand with the same configuration reproduces the record exactly.
+        let c = Cluster::get(ClusterId::Gros);
+        let cfg = short_config();
+        let mut p1 = Uncontrolled { pcap_max: 120.0 };
+        let via_adapter = run_closed_loop(&c, &mut p1, f64::NAN, 0.0, &cfg, 6);
+
+        let mut engine = super::lockstep_engine(&c, &cfg, 6);
+        engine.set_initial_pcap(c.pcap_max);
+        engine.set_quota(Some(cfg.total_beats));
+        engine.set_max_time(cfg.max_time);
+        let mut p2 = Uncontrolled { pcap_max: 120.0 };
+        let mut t = 0.0;
+        while !engine.finished() {
+            t += cfg.sample_period;
+            engine.tick(t, &mut p2);
+        }
+        let by_hand = engine.record();
+        assert_eq!(via_adapter.progress.values, by_hand.progress.values);
+        assert_eq!(via_adapter.power.values, by_hand.power.values);
+        assert_eq!(via_adapter.pcap.values, by_hand.pcap.values);
+        assert_eq!(via_adapter.energy, by_hand.energy);
     }
 }

@@ -2,18 +2,23 @@
 //!
 //! * [`transport`] — heartbeat delivery (in-proc channel, Unix socket);
 //! * [`progress`] — the Eq. (1) median-heartrate progress metric;
-//! * [`nrm`] — the daemon: monitoring/actuation bookkeeping + synchronous
-//!   control loop (the live path);
+//! * [`engine`] — the **single** control-period engine (sense → Eq. (1) →
+//!   policy → actuate → record), parameterized over clock, node backend
+//!   and policy; every scenario below is an adapter over it;
+//! * [`nrm`] — the daemon: transport + monitoring/actuation bookkeeping
+//!   (the live path);
 //! * [`experiment`] — lockstep open-/closed-loop experiment drivers over
 //!   the simulated node (the campaign path);
 //! * [`records`] — run records with CSV/JSON export.
 
+pub mod engine;
 pub mod experiment;
 pub mod nrm;
 pub mod progress;
 pub mod records;
 pub mod transport;
 
+pub use engine::{ControlLoop, LockstepBackend, NodeBackend, PeriodRecord, PlanPolicy};
 pub use experiment::{run_closed_loop, run_open_loop, RunConfig};
 pub use progress::ProgressAggregator;
 pub use records::RunRecord;

@@ -6,38 +6,34 @@
 //! (c) runs a synchronous control loop at a fixed period — here the Eq. (4)
 //! PI (or any [`Policy`]).
 //!
-//! The daemon is clock-agnostic: [`NrmDaemon::tick`] performs one control
-//! period given "now"; [`NrmDaemon::run`] drives ticks from any
-//! [`Clock`] until a stop flag or a beat quota is reached. Simulated
-//! experiments use the lockstep driver in `experiment.rs` instead; the
-//! daemon is the *live* path (quickstart example: PJRT workload thread +
-//! Unix socket + wall clock).
+//! The daemon is a thin adapter over the shared
+//! [`ControlLoop`](crate::coordinator::engine::ControlLoop) engine: it
+//! wires a [`BeatReceiver`] and a [`NodeBackend`] into a
+//! [`TransportBackend`] and delegates every control period to the engine.
+//! [`NrmDaemon::tick`] performs one period given "now"; [`NrmDaemon::run`]
+//! drives ticks from any [`Clock`] until a stop flag or a beat quota is
+//! reached. Simulated experiments use the lockstep drivers in
+//! `experiment.rs` (same engine); the daemon is the *live* path
+//! (quickstart example: PJRT workload thread + Unix socket + wall clock).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::control::baseline::Policy;
-use crate::coordinator::progress::ProgressAggregator;
+use crate::coordinator::engine::{ControlLoop, NodeBackend, PeriodRecord, PeriodSensors};
 use crate::coordinator::records::RunRecord;
 use crate::coordinator::transport::{BeatReceiver, Heartbeat};
 use crate::sim::clock::Clock;
 use crate::sim::node::NodeSim;
 
-/// Node backend: what the daemon monitors and actuates. On real hardware
-/// this would wrap the RAPL sysfs knobs; here it wraps the simulated node,
-/// which additionally publishes the plant's current progress rate so a live
-/// workload can pace itself (the simulated "speed of the machine").
-pub trait NodeBackend: Send {
-    /// Apply a power cap; returns the clamped value.
-    fn set_pcap(&mut self, watts: f64) -> f64;
-    /// Advance to `now` and return `(measured power [W], energy [J])`.
-    fn sample(&mut self, now: f64) -> (f64, f64);
-    /// Current sustainable application iteration rate [Hz] (sim oracle;
-    /// used only for workload pacing, never fed to the controller).
-    fn target_rate(&self) -> f64;
-}
+/// One bookkeeping sample per control period (the engine's record row).
+pub type NrmSample = PeriodRecord;
 
-/// [`NodeBackend`] over the simulated node.
+/// [`NodeBackend`] over the simulated node for the live path: power/energy
+/// sensing and RAPL actuation, plus the published sustainable rate a live
+/// workload polls to pace itself (the simulated "speed of the machine").
+/// The node's own heartbeats are discarded — on this path progress arrives
+/// from the instrumented application through the transport.
 pub struct SimBackend {
     node: NodeSim,
     last_time: f64,
@@ -64,16 +60,35 @@ impl NodeBackend for SimBackend {
         self.node.set_pcap(watts)
     }
 
-    fn sample(&mut self, now: f64) -> (f64, f64) {
+    fn pcap(&self) -> f64 {
+        self.node.pcap()
+    }
+
+    fn advance(&mut self, now: f64, _beats: &mut Vec<f64>) -> PeriodSensors {
         let dt = now - self.last_time;
         if dt <= 0.0 {
-            return (f64::NAN, self.node.step(1e-9).energy);
+            // Non-monotonic clock read: report state without stepping the
+            // node (the energy counter must not advance on a zero-length
+            // period).
+            return PeriodSensors {
+                time: now,
+                power: f64::NAN,
+                energy: self.node.energy(),
+                true_progress: f64::NAN,
+            };
         }
         self.last_time = now;
         let s = self.node.step(dt);
         self.rate
             .store(s.true_progress.to_bits(), Ordering::Relaxed);
-        (s.power, s.energy)
+        PeriodSensors {
+            time: now,
+            power: s.power,
+            energy: s.energy,
+            // No oracle on the live path: the application's beats are the
+            // only progress signal the daemon may use.
+            true_progress: f64::NAN,
+        }
     }
 
     fn target_rate(&self) -> f64 {
@@ -81,32 +96,73 @@ impl NodeBackend for SimBackend {
     }
 }
 
-/// One bookkeeping sample per control period.
-#[derive(Debug, Clone, Copy)]
-pub struct NrmSample {
-    pub time: f64,
-    pub pcap: f64,
-    pub power: f64,
-    pub progress: f64,
-    pub beats_total: u64,
+/// [`NodeBackend`] that layers a heartbeat transport over an inner backend:
+/// each period it drains the receiver, reconstructs per-beat times by even
+/// spacing across the period (the transport stamps a common receive time;
+/// the real NRM's socket batching has the same quantization), and delegates
+/// power/actuation to the inner backend.
+pub struct TransportBackend<R, B> {
+    receiver: R,
+    inner: B,
+    period: f64,
+    msg_buf: Vec<Heartbeat>,
+}
+
+impl<R: BeatReceiver + Send, B: NodeBackend> TransportBackend<R, B> {
+    pub fn new(receiver: R, inner: B, period: f64) -> Self {
+        TransportBackend {
+            receiver,
+            inner,
+            period,
+            msg_buf: Vec::new(),
+        }
+    }
+
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+}
+
+impl<R: BeatReceiver + Send, B: NodeBackend> NodeBackend for TransportBackend<R, B> {
+    fn set_pcap(&mut self, watts: f64) -> f64 {
+        self.inner.set_pcap(watts)
+    }
+
+    fn pcap(&self) -> f64 {
+        self.inner.pcap()
+    }
+
+    fn advance(&mut self, now: f64, beats: &mut Vec<f64>) -> PeriodSensors {
+        self.msg_buf.clear();
+        self.receiver.drain(now, &mut self.msg_buf);
+        let n = self.msg_buf.len();
+        if n > 0 {
+            let t0 = now - self.period;
+            for (i, beat) in self.msg_buf.iter().enumerate() {
+                let t = t0 + self.period * (i as f64 + 1.0) / n as f64;
+                // Each beat may carry several progress units.
+                for _ in 0..beat.units.max(1) {
+                    beats.push(t);
+                }
+            }
+        }
+        self.inner.advance(now, beats)
+    }
+
+    fn target_rate(&self) -> f64 {
+        self.inner.target_rate()
+    }
 }
 
 /// The daemon.
-pub struct NrmDaemon<R: BeatReceiver> {
-    receiver: R,
-    backend: Box<dyn NodeBackend>,
+pub struct NrmDaemon<R: BeatReceiver + Send> {
+    engine: ControlLoop<TransportBackend<R, Box<dyn NodeBackend>>>,
     policy: Box<dyn Policy>,
-    /// Control period [s].
-    pub period: f64,
-    aggregator: ProgressAggregator,
-    samples: Vec<NrmSample>,
-    beat_buf: Vec<Heartbeat>,
-    pcap: f64,
     setpoint: f64,
     epsilon: f64,
 }
 
-impl<R: BeatReceiver> NrmDaemon<R> {
+impl<R: BeatReceiver + Send> NrmDaemon<R> {
     pub fn new(
         receiver: R,
         backend: Box<dyn NodeBackend>,
@@ -115,57 +171,26 @@ impl<R: BeatReceiver> NrmDaemon<R> {
         setpoint: f64,
         epsilon: f64,
     ) -> Self {
+        let transport = TransportBackend::new(receiver, backend, period);
         NrmDaemon {
-            receiver,
-            backend,
+            engine: ControlLoop::new(transport, period),
             policy,
-            period,
-            aggregator: ProgressAggregator::new(),
-            samples: Vec::new(),
-            beat_buf: Vec::new(),
-            pcap: f64::NAN,
             setpoint,
             epsilon,
         }
     }
 
+    /// Control period [s]. Fixed at construction: the engine and the beat
+    /// re-stamping both derive from it, so it is deliberately not a
+    /// mutable field.
+    pub fn period(&self) -> f64 {
+        self.engine.period
+    }
+
     /// One control period at time `now`: drain beats → Eq. (1) → policy →
     /// actuate. Returns the sample recorded.
     pub fn tick(&mut self, now: f64) -> NrmSample {
-        self.beat_buf.clear();
-        self.receiver.drain(now, &mut self.beat_buf);
-        // Transport stamps a common receive time; reconstruct per-beat
-        // times by even spacing across the period for Eq. (1). (The sim
-        // lockstep driver keeps exact per-beat times; the live path accepts
-        // this quantization, mirroring the real NRM's socket batching.)
-        let n = self.beat_buf.len();
-        if n > 0 {
-            let t0 = now - self.period;
-            let mut stamped: Vec<f64> = (0..n)
-                .map(|i| t0 + self.period * (i as f64 + 1.0) / n as f64)
-                .collect();
-            // Each beat may carry several progress units.
-            let mut expanded = Vec::with_capacity(n);
-            for (beat, t) in self.beat_buf.iter().zip(&mut stamped) {
-                for _ in 0..beat.units.max(1) {
-                    expanded.push(*t);
-                }
-            }
-            self.aggregator.ingest(&expanded);
-        }
-        let progress = self.aggregator.sample();
-        let (power, _energy) = self.backend.sample(now);
-        let pcap = self.policy.decide(now, progress);
-        self.pcap = self.backend.set_pcap(pcap);
-        let sample = NrmSample {
-            time: now,
-            pcap: self.pcap,
-            power,
-            progress,
-            beats_total: self.aggregator.total_beats(),
-        };
-        self.samples.push(sample);
-        sample
+        self.engine.tick(now, self.policy.as_mut())
     }
 
     /// Drive ticks from `clock` until `stop` is set or `beat_quota` beats
@@ -177,49 +202,30 @@ impl<R: BeatReceiver> NrmDaemon<R> {
         beat_quota: Option<u64>,
         max_time: f64,
     ) -> RunRecord {
-        let start = clock.now();
-        let mut next = start + self.period;
-        loop {
-            clock.wait_until(next);
-            let s = self.tick(clock.now());
-            next += self.period;
-            let quota_done = beat_quota.is_some_and(|q| s.beats_total >= q);
-            if stop.load(Ordering::Relaxed) || quota_done || s.time - start >= max_time {
-                break;
-            }
-        }
+        self.engine.set_quota(beat_quota);
+        self.engine.set_max_time(max_time);
+        self.engine.run(clock, self.policy.as_mut(), Some(stop));
         self.record()
     }
 
-    /// Export bookkeeping as a [`RunRecord`].
+    /// Export bookkeeping as a [`RunRecord`]. The daemon is a service, not
+    /// a benchmark: `exec_time` is the last sample time and `completed` is
+    /// always true (quota/timeout are service stops, not failures).
     pub fn record(&self) -> RunRecord {
-        let mut rec = RunRecord {
-            cluster: String::new(),
-            policy: self.policy.name(),
-            seed: 0,
-            epsilon: self.epsilon,
-            setpoint: self.setpoint,
-            beats: self.aggregator.total_beats(),
-            completed: true,
-            ..Default::default()
-        };
-        for s in &self.samples {
-            rec.pcap.push(s.time, s.pcap);
-            rec.power.push(s.time, s.power);
-            rec.progress.push(s.time, s.progress);
-        }
-        rec.exec_time = self.samples.last().map(|s| s.time).unwrap_or(0.0);
-        let (_, energy) = (rec.power.time_mean(), 0.0);
-        let _ = energy;
+        let mut rec = self.engine.record();
+        rec.policy = self.policy.name();
+        rec.epsilon = self.epsilon;
+        rec.setpoint = self.setpoint;
+        rec.completed = true;
         rec
     }
 
     pub fn samples(&self) -> &[NrmSample] {
-        &self.samples
+        self.engine.samples()
     }
 
     pub fn backend(&self) -> &dyn NodeBackend {
-        self.backend.as_ref()
+        self.engine.backend().inner().as_ref()
     }
 }
 
@@ -360,5 +366,33 @@ mod tests {
         let rec = d.record();
         assert_eq!(rec.pcap.len(), 10);
         assert_eq!(rec.policy, "uncontrolled");
+        assert!(rec.completed);
+    }
+
+    #[test]
+    fn daemon_energy_counter_monotone_under_repeated_now() {
+        // The satellite fix: a non-advancing clock read must not mutate the
+        // node's energy counter.
+        let (tx, rx) = InProc::pair();
+        let mut d = NrmDaemon::new(
+            rx,
+            Box::new(sim_backend(ClusterId::Gros, 6)),
+            Box::new(Uncontrolled { pcap_max: 120.0 }),
+            1.0,
+            f64::NAN,
+            f64::NAN,
+        );
+        tx.send(1, 1).unwrap();
+        d.tick(1.0);
+        let rec1 = d.record();
+        let e1 = rec1.energy;
+        // Stalled clock: tick repeatedly at the same timestamp.
+        for _ in 0..5 {
+            d.tick(1.0);
+        }
+        let rec2 = d.record();
+        assert_eq!(rec2.energy, e1, "energy advanced on a stalled clock");
+        // Power reads NaN on the stalled periods.
+        assert!(d.samples()[3].power.is_nan());
     }
 }

@@ -12,6 +12,8 @@ pub struct RunRecord {
     pub cluster: String,
     /// Policy name ("uncontrolled", "pi-eps0.15", "plan:staircase", ...).
     pub policy: String,
+    /// Node id within a fleet (0 for single-node runs).
+    pub node_id: u32,
     /// Root RNG seed of the run.
     pub seed: u64,
     /// Requested degradation ε (NaN for open-loop runs).
@@ -67,6 +69,7 @@ impl RunRecord {
         let mut j = Json::obj();
         j.set("cluster", self.cluster.as_str())
             .set("policy", self.policy.as_str())
+            .set("node_id", self.node_id)
             .set("seed", self.seed)
             .set("epsilon", self.epsilon)
             .set("setpoint_hz", self.setpoint)

@@ -48,6 +48,13 @@ impl Scale {
             Scale::Full => 10_000,
         }
     }
+    /// Fleet size for the fleet-budget campaign.
+    pub fn fleet_nodes(self) -> usize {
+        match self {
+            Scale::Fast => 8,
+            Scale::Full => 16,
+        }
+    }
     /// Degradation levels ε — paper: twelve in [0.01, 0.5].
     pub fn epsilons(self) -> Vec<f64> {
         match self {

@@ -18,6 +18,7 @@ use crate::experiments::common::{Ctx, Identified};
 use crate::experiments::fig6::make_pi;
 use crate::sim::cluster::Cluster;
 use crate::util::csv::Table;
+use crate::util::parallel::par_map;
 use crate::util::rng::Pcg64;
 use crate::util::stats;
 
@@ -50,14 +51,21 @@ pub fn run_cluster(ctx: &Ctx, ident: &Identified) -> Fig7Summary {
 
     let mut csv = Table::new(vec!["epsilon", "rep", "exec_time_s", "energy_j", "completed"]);
 
+    // Repetitions are independent: pre-draw the seeds in sequential order
+    // (identical bytes to the serial campaign), then fan the runs out
+    // across all cores.
+    let draw_seeds = |rng: &mut Pcg64| (0..reps).map(|_| rng.next_u64()).collect::<Vec<u64>>();
+
     // Baseline ε = 0: uncontrolled full-cap execution.
-    let mut base_times = Vec::new();
-    let mut base_energies = Vec::new();
-    for r in 0..reps {
+    let base_recs = par_map(draw_seeds(&mut rng), |seed| {
         let mut policy = Uncontrolled {
             pcap_max: cluster.pcap_max,
         };
-        let rec = run_closed_loop(&cluster, &mut policy, f64::NAN, 0.0, &cfg, rng.next_u64());
+        run_closed_loop(&cluster, &mut policy, f64::NAN, 0.0, &cfg, seed)
+    });
+    let mut base_times = Vec::new();
+    let mut base_energies = Vec::new();
+    for (r, rec) in base_recs.iter().enumerate() {
         csv.push_f64(&[0.0, r as f64, rec.exec_time, rec.energy, rec.completed as u64 as f64]);
         base_times.push(rec.exec_time);
         base_energies.push(rec.energy);
@@ -67,11 +75,13 @@ pub fn run_cluster(ctx: &Ctx, ident: &Identified) -> Fig7Summary {
 
     let mut points = Vec::new();
     for &eps in &ctx.scale.epsilons() {
+        let recs = par_map(draw_seeds(&mut rng), |seed| {
+            let (mut policy, sp) = make_pi(ident, eps);
+            run_closed_loop(&cluster, &mut policy, sp, eps, &cfg, seed)
+        });
         let mut times = Vec::new();
         let mut energies = Vec::new();
-        for r in 0..reps {
-            let (mut policy, sp) = make_pi(ident, eps);
-            let rec = run_closed_loop(&cluster, &mut policy, sp, eps, &cfg, rng.next_u64());
+        for (r, rec) in recs.iter().enumerate() {
             csv.push_f64(&[eps, r as f64, rec.exec_time, rec.energy, rec.completed as u64 as f64]);
             times.push(rec.exec_time);
             energies.push(rec.energy);

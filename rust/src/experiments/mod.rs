@@ -9,6 +9,7 @@
 //! | [`fig6`]  | Fig. 6a representative run, 6b error distributions |
 //! | [`fig7`]  | Fig. 7 time/energy Pareto sweep                    |
 //! | [`ablation`] | design-choice ablations (median/mean, excitation shape, adaptive PI) |
+//! | [`fleet`] | fleet-budget campaign: energy vs ε across budget strategies |
 //!
 //! Every runner writes its raw data as CSV under the context's output
 //! directory and returns a printed summary with the paper-shape checks.
@@ -20,6 +21,7 @@ pub mod fig4;
 pub mod fig5;
 pub mod fig6;
 pub mod fig7;
+pub mod fleet;
 pub mod replay;
 pub mod tables;
 

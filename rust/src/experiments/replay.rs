@@ -9,9 +9,9 @@
 
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::err;
 use crate::ident::static_model::{StaticModel, StaticPoint};
+use crate::util::error::{Context, Result};
 use crate::util::csv::Table;
 use crate::util::stats;
 
@@ -19,11 +19,11 @@ use crate::util::stats;
 pub fn refit_static(dir: &Path, cluster: &str) -> Result<StaticModel> {
     let path = dir.join(format!("fig4_{cluster}.csv"));
     let t = Table::load(&path).with_context(|| format!("loading {path:?}"))?;
-    let pcap = t.col_f64("pcap_w").ok_or_else(|| anyhow!("missing pcap_w"))?;
-    let power = t.col_f64("power_w").ok_or_else(|| anyhow!("missing power_w"))?;
+    let pcap = t.col_f64("pcap_w").ok_or_else(|| err!("missing pcap_w"))?;
+    let power = t.col_f64("power_w").ok_or_else(|| err!("missing power_w"))?;
     let progress = t
         .col_f64("progress_hz")
-        .ok_or_else(|| anyhow!("missing progress_hz"))?;
+        .ok_or_else(|| err!("missing progress_hz"))?;
     let points: Vec<StaticPoint> = pcap
         .iter()
         .zip(&power)
@@ -42,11 +42,11 @@ pub fn refit_static(dir: &Path, cluster: &str) -> Result<StaticModel> {
 pub fn reaggregate_fig7(dir: &Path, cluster: &str) -> Result<Vec<(f64, f64, f64, f64, f64)>> {
     let path = dir.join(format!("fig7_{cluster}.csv"));
     let t = Table::load(&path).with_context(|| format!("loading {path:?}"))?;
-    let eps = t.col_f64("epsilon").ok_or_else(|| anyhow!("missing epsilon"))?;
+    let eps = t.col_f64("epsilon").ok_or_else(|| err!("missing epsilon"))?;
     let time = t
         .col_f64("exec_time_s")
-        .ok_or_else(|| anyhow!("missing exec_time_s"))?;
-    let energy = t.col_f64("energy_j").ok_or_else(|| anyhow!("missing energy_j"))?;
+        .ok_or_else(|| err!("missing exec_time_s"))?;
+    let energy = t.col_f64("energy_j").ok_or_else(|| err!("missing energy_j"))?;
 
     let mut levels: Vec<f64> = eps.clone();
     levels.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -70,7 +70,7 @@ pub fn reaggregate_fig7(dir: &Path, cluster: &str) -> Result<Vec<(f64, f64, f64,
 
     let (bt, be) = agg(0.0);
     if !bt.is_finite() {
-        return Err(anyhow!("no ε=0 baseline rows in {path:?}"));
+        return Err(err!("no ε=0 baseline rows in {path:?}"));
     }
     Ok(levels
         .into_iter()
@@ -103,7 +103,7 @@ pub fn run(dir: &Path) -> Result<String> {
         }
     }
     if found == 0 {
-        return Err(anyhow!(
+        return Err(err!(
             "no campaign CSVs found in {} (run `powerctl identify`/`sweep` first)",
             dir.display()
         ));

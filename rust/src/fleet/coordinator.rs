@@ -1,0 +1,292 @@
+//! The fleet coordinator: N node control loops on worker threads under one
+//! global power budget, re-apportioned periodically by a [`BudgetPolicy`].
+//!
+//! Two nested control layers:
+//!
+//! * **node layer** (period `period`, one [`ControlLoop`] per node): the
+//!   paper's PI tracks each node's ε-setpoint inside its ceiling;
+//! * **budget layer** (period `realloc_every × period`): the
+//!   [`BudgetPolicy`] reads every node's [`NodeReport`] and moves ceiling
+//!   watts from slack-rich to pinched nodes, conserving the global budget.
+//!
+//! All nodes advance in lockstep on the shared virtual clock, so a fleet
+//! run is bit-reproducible for a given seed no matter how the OS schedules
+//! the worker threads.
+//!
+//! [`ControlLoop`]: crate::coordinator::engine::ControlLoop
+
+use std::sync::mpsc;
+
+use crate::control::budget::{BudgetPolicy, NodeReport};
+use crate::coordinator::records::RunRecord;
+use crate::fleet::node::{spawn_worker, Cmd, NodeSpec, WorkerConfig, WorkerHandle};
+use crate::util::rng::Pcg64;
+
+/// Fleet run parameters.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Global power-cap budget shared by all nodes [W].
+    pub budget: f64,
+    /// Node control period [s].
+    pub period: f64,
+    /// Budget reallocation epoch, in node periods.
+    pub realloc_every: u64,
+    /// Per-node workload length [heartbeats].
+    pub total_beats: u64,
+    /// Hard stop [s].
+    pub max_time: f64,
+    /// Root seed; node i simulates with an independent split stream.
+    pub seed: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            budget: 8.0 * 95.0,
+            period: 1.0,
+            realloc_every: 5,
+            total_beats: 1_500,
+            max_time: 600.0,
+            seed: 42,
+        }
+    }
+}
+
+/// Everything one fleet run produces.
+#[derive(Debug, Clone)]
+pub struct FleetOutcome {
+    /// Budget strategy name.
+    pub strategy: String,
+    /// Per-node run records (`node_id` set, one per spec, input order).
+    pub records: Vec<RunRecord>,
+    /// Ceiling trace: `(epoch time, per-node ceilings)` per reallocation.
+    pub limits_trace: Vec<(f64, Vec<f64>)>,
+    /// Total fleet energy [J].
+    pub total_energy: f64,
+    /// Makespan: when the last node finished (or `max_time`) [s].
+    pub makespan: f64,
+    /// Every node completed its workload before the hard stop.
+    pub completed: bool,
+}
+
+/// The sim seed node `i` runs under for a fleet rooted at `root` — exposed
+/// so campaigns can run paired per-node baselines on identical noise.
+pub fn node_seed(root: u64, i: usize) -> u64 {
+    let mut seeder = Pcg64::new(root, 0xF1EE7);
+    seeder.split(i as u64).next_u64()
+}
+
+/// Run `specs` as a fleet under `strategy`. Blocks until every node
+/// completes its workload or `config.max_time` elapses.
+pub fn run_fleet(
+    specs: &[NodeSpec],
+    strategy: &mut dyn BudgetPolicy,
+    config: &FleetConfig,
+) -> FleetOutcome {
+    assert!(!specs.is_empty(), "fleet needs at least one node");
+    let n = specs.len();
+    let initial_limit = config.budget / n as f64;
+    let worker_cfg = WorkerConfig {
+        period: config.period,
+        total_beats: config.total_beats,
+        max_time: config.max_time,
+    };
+
+    let (reply_tx, reply_rx) = mpsc::channel();
+    let workers: Vec<WorkerHandle> = specs
+        .iter()
+        .enumerate()
+        .map(|(i, spec)| {
+            let seed = node_seed(config.seed, i);
+            spawn_worker(
+                i as u32,
+                spec.clone(),
+                initial_limit,
+                worker_cfg,
+                seed,
+                reply_tx.clone(),
+            )
+        })
+        .collect();
+    drop(reply_tx);
+
+    let mut reports: Vec<Option<NodeReport>> = vec![None; n];
+    let mut limits_trace = Vec::new();
+    let mut now = 0.0;
+    let mut period_idx: u64 = 0;
+    let max_periods = (config.max_time / config.period).ceil() as u64 + 1;
+
+    loop {
+        period_idx += 1;
+        now += config.period;
+        // A worker only disappears by panicking; count the live ones so the
+        // reply loop expects exactly that many, and surface the panic at
+        // join below rather than deadlocking here.
+        let mut ticked = 0usize;
+        for w in &workers {
+            if w.cmd.send(Cmd::Tick { now }).is_ok() {
+                ticked += 1;
+            }
+        }
+        let mut worker_lost = ticked < n;
+        let mut all_done = true;
+        for _ in 0..ticked {
+            // A bounded wait turns a worker that dies mid-period (send
+            // succeeded, reply never comes) into a clean stop instead of a
+            // hang; 60 s of wall time per simulated period is orders of
+            // magnitude beyond normal.
+            match reply_rx.recv_timeout(std::time::Duration::from_secs(60)) {
+                Ok(reply) => {
+                    all_done &= reply.report.done;
+                    reports[reply.report.node_id as usize] = Some(reply.report);
+                }
+                Err(_) => {
+                    worker_lost = true;
+                    break;
+                }
+            }
+        }
+        if worker_lost {
+            break; // join() below re-raises the worker's panic
+        }
+        if all_done || period_idx >= max_periods {
+            break;
+        }
+        if period_idx % config.realloc_every == 0 {
+            let snapshot: Vec<NodeReport> = reports
+                .iter()
+                .map(|r| r.expect("missing node report"))
+                .collect();
+            let limits = strategy.allocate(now, config.budget, &snapshot);
+            debug_assert_eq!(limits.len(), n);
+            for (w, (&limit, old)) in workers.iter().zip(limits.iter().zip(&snapshot)) {
+                if (limit - old.limit).abs() > 1e-9 {
+                    let _ = w.cmd.send(Cmd::SetLimit { watts: limit });
+                }
+            }
+            limits_trace.push((now, limits));
+        }
+    }
+
+    let mut records = Vec::with_capacity(n);
+    for w in workers {
+        let _ = w.cmd.send(Cmd::Stop);
+        records.push(w.join.join().expect("fleet worker panicked"));
+    }
+    records.sort_by_key(|r| r.node_id);
+
+    let total_energy = records.iter().map(|r| r.energy).sum();
+    let makespan = records.iter().fold(0.0f64, |m, r| m.max(r.exec_time));
+    let completed = records.iter().all(|r| r.completed);
+    FleetOutcome {
+        strategy: strategy.name(),
+        records,
+        limits_trace,
+        total_energy,
+        makespan,
+        completed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::budget::{SlackProportional, UniformBudget};
+    use crate::fleet::node::tests::fitted;
+    use crate::fleet::node::NodePolicySpec;
+    use crate::sim::cluster::ClusterId;
+
+    fn specs(n: usize, epsilon: f64) -> Vec<NodeSpec> {
+        let order = [ClusterId::Gros, ClusterId::Dahu, ClusterId::Yeti];
+        (0..n)
+            .map(|i| {
+                let cluster = order[i % order.len()];
+                NodeSpec {
+                    cluster,
+                    model: fitted(cluster),
+                    policy: NodePolicySpec::Pi { epsilon },
+                }
+            })
+            .collect()
+    }
+
+    fn config(n: usize) -> FleetConfig {
+        FleetConfig {
+            budget: 100.0 * n as f64,
+            total_beats: 600,
+            max_time: 300.0,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fleet_completes_and_tags_nodes() {
+        let specs = specs(4, 0.15);
+        let cfg = config(4);
+        let out = run_fleet(&specs, &mut SlackProportional::default(), &cfg);
+        assert!(out.completed, "fleet did not finish: makespan {}", out.makespan);
+        assert_eq!(out.records.len(), 4);
+        for (i, r) in out.records.iter().enumerate() {
+            assert_eq!(r.node_id, i as u32);
+            assert!(r.completed, "node {i} incomplete");
+            assert_eq!(r.beats, 600);
+            assert!(r.energy > 0.0);
+        }
+        // Heterogeneous: at least two distinct cluster names.
+        let mut names: Vec<&str> = out.records.iter().map(|r| r.cluster.as_str()).collect();
+        names.dedup();
+        assert!(names.len() >= 2);
+        assert!(out.total_energy > 0.0);
+        assert!(out.makespan > 0.0 && out.makespan <= cfg.max_time);
+    }
+
+    #[test]
+    fn budget_conserved_on_every_epoch() {
+        let specs = specs(5, 0.15);
+        let mut cfg = config(5);
+        cfg.budget = 5.0 * 85.0; // tight enough that allocation matters
+        let out = run_fleet(&specs, &mut SlackProportional::default(), &cfg);
+        assert!(!out.limits_trace.is_empty(), "no reallocation epochs ran");
+        for (t, limits) in &out.limits_trace {
+            let total: f64 = limits.iter().sum();
+            assert!(
+                total <= cfg.budget + 1e-6,
+                "budget violated at t={t}: Σ={total} > {}",
+                cfg.budget
+            );
+            for &l in limits {
+                assert!((40.0..=120.0).contains(&l), "ceiling {l} out of range");
+            }
+        }
+    }
+
+    #[test]
+    fn fleet_is_deterministic_despite_threads() {
+        let specs = specs(4, 0.1);
+        let cfg = config(4);
+        let a = run_fleet(&specs, &mut UniformBudget, &cfg);
+        let b = run_fleet(&specs, &mut UniformBudget, &cfg);
+        assert_eq!(a.total_energy, b.total_energy);
+        assert_eq!(a.makespan, b.makespan);
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            assert_eq!(ra.progress.values, rb.progress.values);
+            assert_eq!(ra.pcap.values, rb.pcap.values);
+        }
+    }
+
+    #[test]
+    fn max_time_bounds_a_starved_fleet() {
+        // A budget at the hardware floor cannot finish the workload in
+        // time; the fleet must stop at max_time and say so.
+        let specs = specs(3, 0.15);
+        let cfg = FleetConfig {
+            budget: 3.0 * 40.0,
+            total_beats: 1_000_000,
+            max_time: 30.0,
+            ..Default::default()
+        };
+        let out = run_fleet(&specs, &mut UniformBudget, &cfg);
+        assert!(!out.completed);
+        assert!(out.makespan <= cfg.max_time + 1e-9);
+    }
+}

@@ -1,0 +1,25 @@
+//! Fleet-scale power-budget control.
+//!
+//! The paper regulates one node; its framing — "dynamically adjust power
+//! across compute elements to save energy" — points at fleets. This module
+//! scales the reproduced machinery to N heterogeneous simulated nodes
+//! (drawn from the three Table 1 clusters) under a *global* power budget:
+//!
+//! * [`node`] — one worker thread per node, each running its own PI loop on
+//!   the shared [`ControlLoop`](crate::coordinator::engine::ControlLoop)
+//!   engine below a movable budget ceiling;
+//! * [`coordinator`] — the lockstep fleet driver plus the reallocation
+//!   epoch loop feeding a
+//!   [`BudgetPolicy`](crate::control::budget::BudgetPolicy).
+//!
+//! The layering mirrors the single-node honesty rule: the budget layer only
+//! sees what node controllers measured ([`NodeReport`]s), never simulator
+//! ground truth.
+//!
+//! [`NodeReport`]: crate::control::budget::NodeReport
+
+pub mod coordinator;
+pub mod node;
+
+pub use coordinator::{run_fleet, FleetConfig, FleetOutcome};
+pub use node::{BudgetedPolicy, NodePolicySpec, NodeSpec};

@@ -1,0 +1,332 @@
+//! Fleet node workers: one thread per simulated node, each running its own
+//! [`ControlLoop`] engine (the same engine as the daemon and the campaign
+//! drivers) under a budget ceiling set by the coordinator.
+//!
+//! Protocol: the coordinator broadcasts lockstep [`Cmd::Tick`] commands (so
+//! results are bit-reproducible regardless of thread scheduling — every
+//! node's virtual clock advances in step) and occasional [`Cmd::SetLimit`]
+//! updates; each tick the worker replies with a [`NodeReport`] for the
+//! budget layer. On [`Cmd::Stop`] the worker returns its full [`RunRecord`]
+//! through its join handle.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use crate::control::baseline::Policy;
+use crate::control::budget::NodeReport;
+use crate::control::pi::{PiConfig, PiController};
+use crate::coordinator::engine::{ControlLoop, LockstepBackend};
+use crate::coordinator::records::RunRecord;
+use crate::ident::DynamicModel;
+use crate::sim::cluster::{Cluster, ClusterId};
+use crate::sim::node::NodeSim;
+
+/// How a fleet node regulates itself below its ceiling.
+#[derive(Debug, Clone)]
+pub enum NodePolicySpec {
+    /// The paper's PI at the given ε, tuned from the node's fitted model;
+    /// the budget ceiling narrows its actuator range at runtime.
+    Pi { epsilon: f64 },
+    /// Feedback-free baseline: the cap is pinned at the ceiling (what a
+    /// static uniform-split deployment does).
+    Static,
+}
+
+/// One node of the fleet: which Table 1 cluster it is, the *fitted* model
+/// its controller is tuned from (never sim ground truth), and its policy.
+#[derive(Debug, Clone)]
+pub struct NodeSpec {
+    pub cluster: ClusterId,
+    pub model: DynamicModel,
+    pub policy: NodePolicySpec,
+}
+
+/// The node-local policy with a movable budget ceiling.
+pub struct BudgetedPolicy {
+    kind: Kind,
+    limit: f64,
+    hw_min: f64,
+    hw_max: f64,
+    setpoint: f64,
+    epsilon: f64,
+}
+
+enum Kind {
+    Pi(PiController),
+    Static,
+}
+
+impl BudgetedPolicy {
+    pub fn new(spec: &NodeSpec, cluster: &Cluster, initial_limit: f64) -> Self {
+        let (hw_min, hw_max) = (cluster.pcap_min, cluster.pcap_max);
+        let limit = initial_limit.clamp(hw_min, hw_max);
+        match spec.policy {
+            NodePolicySpec::Pi { epsilon } => {
+                let cfg = PiConfig::from_model(&spec.model, 10.0, hw_min, hw_max);
+                let mut ctl = PiController::new(spec.model.clone(), cfg, epsilon);
+                let setpoint = ctl.setpoint();
+                ctl.set_cap_range(hw_min, ceiling(limit, hw_min, hw_max));
+                BudgetedPolicy {
+                    kind: Kind::Pi(ctl),
+                    limit,
+                    hw_min,
+                    hw_max,
+                    setpoint,
+                    epsilon,
+                }
+            }
+            NodePolicySpec::Static => BudgetedPolicy {
+                kind: Kind::Static,
+                limit,
+                hw_min,
+                hw_max,
+                setpoint: f64::NAN,
+                epsilon: f64::NAN,
+            },
+        }
+    }
+
+    pub fn set_limit(&mut self, watts: f64) {
+        self.limit = watts.clamp(self.hw_min, self.hw_max);
+        if let Kind::Pi(ctl) = &mut self.kind {
+            ctl.set_cap_range(self.hw_min, ceiling(self.limit, self.hw_min, self.hw_max));
+        }
+    }
+
+    pub fn limit(&self) -> f64 {
+        self.limit
+    }
+
+    pub fn setpoint(&self) -> f64 {
+        self.setpoint
+    }
+
+    pub fn epsilon(&self) -> f64 {
+        self.epsilon
+    }
+
+    /// Cap to apply before the first period (§5.2: the upper limit — here
+    /// the node's ceiling).
+    pub fn initial_pcap(&self) -> f64 {
+        self.limit
+    }
+}
+
+/// Keep the PI's actuator interval non-degenerate when the ceiling sits at
+/// the hardware floor.
+fn ceiling(limit: f64, hw_min: f64, hw_max: f64) -> f64 {
+    limit.clamp(hw_min + 0.1, hw_max)
+}
+
+impl Policy for BudgetedPolicy {
+    fn decide(&mut self, t: f64, progress: f64) -> f64 {
+        match &mut self.kind {
+            Kind::Pi(ctl) => ctl.step(t, progress),
+            Kind::Static => self.limit,
+        }
+    }
+
+    fn name(&self) -> String {
+        match &self.kind {
+            Kind::Pi(_) => format!("fleet-pi-eps{:.2}", self.epsilon),
+            Kind::Static => "fleet-static".to_string(),
+        }
+    }
+}
+
+/// Coordinator → worker commands.
+pub(crate) enum Cmd {
+    /// Advance the node's loop to virtual time `now` and report.
+    Tick { now: f64 },
+    /// New budget ceiling [W].
+    SetLimit { watts: f64 },
+    /// Finish: return the run record through the join handle.
+    Stop,
+}
+
+/// Worker → coordinator reply, one per tick.
+pub(crate) struct Reply {
+    pub report: NodeReport,
+}
+
+/// Handle to a spawned node worker.
+pub(crate) struct WorkerHandle {
+    pub cmd: mpsc::Sender<Cmd>,
+    pub join: JoinHandle<RunRecord>,
+}
+
+/// Per-worker run parameters (the coordinator's config, flattened).
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct WorkerConfig {
+    pub period: f64,
+    pub total_beats: u64,
+    pub max_time: f64,
+}
+
+pub(crate) fn spawn_worker(
+    node_id: u32,
+    spec: NodeSpec,
+    initial_limit: f64,
+    cfg: WorkerConfig,
+    seed: u64,
+    reply_tx: mpsc::Sender<Reply>,
+) -> WorkerHandle {
+    let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
+    let join = std::thread::spawn(move || {
+        let cluster = Cluster::get(spec.cluster);
+        let mut policy = BudgetedPolicy::new(&spec, &cluster, initial_limit);
+        let node = NodeSim::new(cluster.clone(), seed);
+        let mut engine = ControlLoop::new(LockstepBackend::new(node), cfg.period);
+        engine.set_node_id(node_id);
+        engine.set_quota(Some(cfg.total_beats));
+        engine.set_max_time(cfg.max_time);
+        engine.set_initial_pcap(policy.initial_pcap());
+
+        while let Ok(cmd) = cmd_rx.recv() {
+            match cmd {
+                Cmd::SetLimit { watts } => policy.set_limit(watts),
+                Cmd::Stop => break,
+                Cmd::Tick { now } => {
+                    if !engine.finished() {
+                        engine.tick(now, &mut policy);
+                    }
+                    let last = engine.samples().last();
+                    let report = NodeReport {
+                        node_id,
+                        limit: policy.limit(),
+                        pcap: last.map(|s| s.pcap).unwrap_or(policy.initial_pcap()),
+                        power: last.map(|s| s.power).unwrap_or(f64::NAN),
+                        progress: last.map(|s| s.progress).unwrap_or(0.0),
+                        setpoint: policy.setpoint(),
+                        pcap_min: cluster.pcap_min,
+                        pcap_max: cluster.pcap_max,
+                        done: engine.finished(),
+                    };
+                    if reply_tx.send(Reply { report }).is_err() {
+                        break; // coordinator gone
+                    }
+                }
+            }
+        }
+
+        let mut rec = engine.record();
+        rec.cluster = cluster.id.name().to_string();
+        rec.policy = policy.name();
+        rec.seed = seed;
+        rec.epsilon = policy.epsilon();
+        rec.setpoint = policy.setpoint();
+        rec.completed = engine.finish_time().is_some();
+        // Same finalization convention as run_closed_loop: a timeout
+        // reports exactly max_time (the timeout tick itself can land past
+        // it when max_time is not a period multiple); a coordinator stop
+        // reports the last sample time.
+        rec.exec_time = match engine.finish_time() {
+            Some(t) => t,
+            None if engine.timed_out() => cfg.max_time,
+            None => engine.samples().last().map(|s| s.time).unwrap_or(0.0),
+        };
+        rec.beats = engine.total_beats().min(cfg.total_beats);
+        rec
+    });
+    WorkerHandle { cmd: cmd_tx, join }
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::ident::static_model::{StaticModel, StaticPoint};
+
+    pub(crate) fn fitted(id: ClusterId) -> DynamicModel {
+        let c = Cluster::get(id);
+        let points: Vec<StaticPoint> = (0..60)
+            .map(|i| {
+                let pcap = c.pcap_min + i as f64 * ((c.pcap_max - c.pcap_min) / 59.0);
+                StaticPoint {
+                    pcap,
+                    power: c.expected_power(pcap),
+                    progress: c.static_progress(pcap),
+                }
+            })
+            .collect();
+        DynamicModel {
+            static_model: StaticModel::fit(&points),
+            tau: c.tau,
+            rmse: 0.0,
+        }
+    }
+
+    #[test]
+    fn budgeted_pi_obeys_ceiling() {
+        let spec = NodeSpec {
+            cluster: ClusterId::Gros,
+            model: fitted(ClusterId::Gros),
+            policy: NodePolicySpec::Pi { epsilon: 0.0 },
+        };
+        let c = Cluster::get(ClusterId::Gros);
+        let mut p = BudgetedPolicy::new(&spec, &c, 75.0);
+        for i in 0..100 {
+            // ε = 0 wants the rail; the ceiling must win.
+            let cap = p.decide(i as f64, 10.0);
+            assert!(cap <= 75.0 + 1e-9, "ceiling violated: {cap}");
+            assert!(cap >= c.pcap_min);
+        }
+        p.set_limit(110.0);
+        let mut max_seen = 0.0f64;
+        for i in 100..300 {
+            max_seen = max_seen.max(p.decide(i as f64, 10.0));
+        }
+        assert!(max_seen > 100.0, "ceiling lift ignored: {max_seen}");
+        assert!(max_seen <= 110.0 + 1e-9);
+    }
+
+    #[test]
+    fn static_spec_pins_limit() {
+        let spec = NodeSpec {
+            cluster: ClusterId::Dahu,
+            model: fitted(ClusterId::Dahu),
+            policy: NodePolicySpec::Static,
+        };
+        let c = Cluster::get(ClusterId::Dahu);
+        let mut p = BudgetedPolicy::new(&spec, &c, 90.0);
+        assert_eq!(p.decide(1.0, 33.0), 90.0);
+        p.set_limit(70.0);
+        assert_eq!(p.decide(2.0, 33.0), 70.0);
+        assert!(p.setpoint().is_nan());
+    }
+
+    #[test]
+    fn worker_runs_to_completion_over_protocol() {
+        let spec = NodeSpec {
+            cluster: ClusterId::Gros,
+            model: fitted(ClusterId::Gros),
+            policy: NodePolicySpec::Pi { epsilon: 0.15 },
+        };
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let cfg = WorkerConfig {
+            period: 1.0,
+            total_beats: 400,
+            max_time: 200.0,
+        };
+        let h = spawn_worker(3, spec, 120.0, cfg, 42, reply_tx);
+        let mut now = 0.0;
+        let mut done = false;
+        for _ in 0..200 {
+            now += 1.0;
+            h.cmd.send(Cmd::Tick { now }).unwrap();
+            let r = reply_rx.recv().unwrap();
+            assert_eq!(r.report.node_id, 3);
+            if r.report.done {
+                done = true;
+                break;
+            }
+        }
+        assert!(done, "worker never completed its workload");
+        h.cmd.send(Cmd::Stop).unwrap();
+        let rec = h.join.join().unwrap();
+        assert!(rec.completed);
+        assert_eq!(rec.node_id, 3);
+        assert_eq!(rec.beats, 400);
+        assert!(rec.energy > 0.0);
+        assert_eq!(rec.cluster, "gros");
+    }
+}

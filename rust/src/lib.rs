@@ -11,16 +11,20 @@
 //! * **L1** — Pallas STREAM kernels (`python/compile/kernels/`), AOT-lowered,
 //! * **L2** — JAX compute graph (`python/compile/model.py`) → HLO text
 //!   artifacts,
-//! * **L3** — this crate: the NRM-style coordinator, the PI controller, the
-//!   simulated Grid'5000 substrate, the identification pipeline and the
-//!   evaluation harness. Python never runs on the control path.
+//! * **L3** — this crate: the NRM-style coordinator built around a single
+//!   [`ControlLoop`](coordinator::engine::ControlLoop) engine, the PI
+//!   controller, the simulated Grid'5000 substrate, the identification
+//!   pipeline, the evaluation harness, and the [`fleet`] layer that scales
+//!   the loop to N nodes under one global power budget. Python never runs
+//!   on the control path.
 //!
-//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `DESIGN.md` (repo root) for the system inventory and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
 
 pub mod control;
 pub mod coordinator;
 pub mod experiments;
+pub mod fleet;
 pub mod ident;
 pub mod runtime;
 pub mod sim;

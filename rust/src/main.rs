@@ -9,6 +9,7 @@
 //! powerctl control --cluster gros --epsilon 0.15
 //!                                      Fig. 6a single closed-loop run
 //! powerctl sweep [--full]              Fig. 6b + Fig. 7 evaluation campaign
+//! powerctl fleet [--full]              fleet-budget campaign (energy vs ε per strategy)
 //! powerctl ablation                    design-choice ablations
 //! powerctl live [--iterations n]       live PJRT workload + NRM daemon demo
 //! powerctl all [--full]                everything, in order
@@ -34,6 +35,7 @@ fn cli() -> Cli {
         .subcommand("characterize", "open-loop staircase: Fig. 3")
         .subcommand("control", "single closed-loop run: Fig. 6a")
         .subcommand("sweep", "full evaluation campaign: Fig. 6b + Fig. 7")
+        .subcommand("fleet", "fleet-budget campaign: N nodes under one global power budget")
         .subcommand("ablation", "design-choice ablations")
         .subcommand("replay", "re-fit models + aggregates from saved campaign CSVs")
         .subcommand("live", "live demo: PJRT workload + NRM daemon + PI")
@@ -95,6 +97,12 @@ fn main() {
             let (f7, _) = experiments::fig7::run(&ctx, &idents);
             print!("{f7}");
         }
+        "fleet" => {
+            let idents = experiments::identify_all(&ctx);
+            let (out, _) = experiments::fleet::run(&ctx, &idents);
+            print!("{out}");
+            println!("raw points: {}", ctx.path("fleet.csv").display());
+        }
         "ablation" => {
             let idents = experiments::identify_all(&ctx);
             print!("{}", experiments::ablation::run(&ctx, &idents));
@@ -121,6 +129,8 @@ fn main() {
             print!("{f6}");
             let (f7, _) = experiments::fig7::run(&ctx, &idents);
             print!("{f7}");
+            let (fl, _) = experiments::fleet::run(&ctx, &idents);
+            print!("{fl}");
             print!("{}", experiments::ablation::run(&ctx, &idents));
         }
         other => {
@@ -144,6 +154,14 @@ fn parse_cluster(args: &powerctl::util::cli::Args) -> ClusterId {
 /// daemon, whose PI controller actuates the simulated RAPL cap in real
 /// time.
 fn run_live_demo(ctx: &Ctx, args: &powerctl::util::cli::Args) {
+    if cfg!(not(feature = "pjrt")) {
+        eprintln!(
+            "live mode executes the AOT STREAM artifact through PJRT, which this binary \
+             was built without: add the vendored `xla` crate to rust/Cargo.toml, then \
+             rebuild with `cargo run --features pjrt -- live` (DESIGN.md §3)"
+        );
+        std::process::exit(1);
+    }
     let id = parse_cluster(args);
     let eps = args.get_f64("epsilon").unwrap_or(0.15);
     let iterations = args.get_u64("iterations").unwrap_or(120);

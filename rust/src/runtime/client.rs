@@ -3,78 +3,15 @@
 //! and DESIGN.md §8 for why the interchange format is HLO *text*).
 //!
 //! Python runs only at build time (`make artifacts`); this module is the
-//! only place the Rust side touches XLA.
+//! only place the Rust side touches XLA. Compiled only with the `pjrt`
+//! feature (the `xla` crate is outside the offline vendored set).
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
-
-use crate::util::json::Json;
-
-/// One loadable entry in the manifest.
-#[derive(Debug, Clone)]
-pub struct Entry {
-    pub file: String,
-    /// STREAM iterations performed per call (0 for init).
-    pub iters: u64,
-}
-
-/// The artifact manifest written by `python/compile/aot.py`.
-#[derive(Debug, Clone)]
-pub struct Manifest {
-    /// Elements per STREAM array.
-    pub n: usize,
-    /// Pallas block size used at lowering.
-    pub block: usize,
-    /// STREAM scalar constant.
-    pub scalar: f64,
-    /// Bytes moved per stream_step on an ideal bandwidth-bound machine.
-    pub bytes_per_step: u64,
-    /// Entry name → file + metadata.
-    pub entries: HashMap<String, Entry>,
-}
-
-impl Manifest {
-    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
-        let path = dir.as_ref().join("manifest.json");
-        let text = std::fs::read_to_string(&path)
-            .with_context(|| format!("reading {path:?} (run `make artifacts`?)"))?;
-        let json = Json::parse(&text).map_err(|e| anyhow!("manifest: {e}"))?;
-        let get_u64 = |k: &str| {
-            json.get(k)
-                .and_then(Json::as_u64)
-                .ok_or_else(|| anyhow!("manifest missing numeric '{k}'"))
-        };
-        let mut entries = HashMap::new();
-        if let Some(Json::Obj(map)) = json.get("entries") {
-            for (name, entry) in map {
-                let file = entry
-                    .get("file")
-                    .and_then(Json::as_str)
-                    .ok_or_else(|| anyhow!("entry '{name}' missing file"))?;
-                let iters = entry.get("iters").and_then(Json::as_u64).unwrap_or(1);
-                entries.insert(
-                    name.clone(),
-                    Entry {
-                        file: file.to_string(),
-                        iters,
-                    },
-                );
-            }
-        }
-        Ok(Manifest {
-            n: get_u64("n")? as usize,
-            block: get_u64("block")? as usize,
-            scalar: json
-                .get("scalar")
-                .and_then(Json::as_f64)
-                .ok_or_else(|| anyhow!("manifest missing 'scalar'"))?,
-            bytes_per_step: get_u64("bytes_per_step")?,
-            entries,
-        })
-    }
-}
+use crate::err;
+use crate::runtime::manifest::Manifest;
+use crate::util::error::Result;
 
 /// A compiled artifact cache over one PJRT client.
 pub struct Runtime {
@@ -89,7 +26,7 @@ impl Runtime {
     pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| err!("pjrt cpu client: {e:?}"))?;
         Ok(Runtime {
             client,
             dir,
@@ -109,19 +46,19 @@ impl Runtime {
                 .manifest
                 .entries
                 .get(entry)
-                .ok_or_else(|| anyhow!("unknown artifact entry '{entry}'"))?
+                .ok_or_else(|| err!("unknown artifact entry '{entry}'"))?
                 .file;
             let path = self.dir.join(file);
             let path_str = path
                 .to_str()
-                .ok_or_else(|| anyhow!("non-utf8 artifact path"))?;
+                .ok_or_else(|| err!("non-utf8 artifact path"))?;
             let proto = xla::HloModuleProto::from_text_file(path_str)
-                .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+                .map_err(|e| err!("parsing {path:?}: {e:?}"))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = self
                 .client
                 .compile(&comp)
-                .map_err(|e| anyhow!("compiling '{entry}': {e:?}"))?;
+                .map_err(|e| err!("compiling '{entry}': {e:?}"))?;
             self.executables.insert(entry.to_string(), exe);
         }
         Ok(&self.executables[entry])
@@ -134,13 +71,13 @@ impl Runtime {
         let exe = &self.executables[entry];
         let result = exe
             .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("executing '{entry}': {e:?}"))?;
+            .map_err(|e| err!("executing '{entry}': {e:?}"))?;
         let literal = result[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("fetching result of '{entry}': {e:?}"))?;
+            .map_err(|e| err!("fetching result of '{entry}': {e:?}"))?;
         literal
             .to_tuple()
-            .map_err(|e| anyhow!("untupling result of '{entry}': {e:?}"))
+            .map_err(|e| err!("untupling result of '{entry}': {e:?}"))
     }
 }
 
@@ -167,12 +104,6 @@ mod tests {
         assert_eq!(m.bytes_per_step, 10 * m.n as u64 * 4);
         assert!(m.entries.contains_key("stream_step"));
         assert!(m.entries.contains_key("stream_init"));
-    }
-
-    #[test]
-    fn manifest_missing_dir_errors() {
-        let err = Manifest::load("/nonexistent-dir-xyz").unwrap_err();
-        assert!(err.to_string().contains("manifest.json"));
     }
 
     #[test]

@@ -4,9 +4,9 @@
 //! array) and validates the checksum digest against the closed-form oracle,
 //! so runtime numeric corruption is caught on the hot path at O(1) cost.
 
-use anyhow::{anyhow, Result};
-
+use crate::err;
 use crate::runtime::client::Runtime;
+use crate::util::error::Result;
 
 /// Iterates `stream_step` keeping state between calls.
 pub struct StreamExecutor {
@@ -44,13 +44,13 @@ impl StreamExecutor {
             .manifest
             .entries
             .get(entry)
-            .ok_or_else(|| anyhow!("unknown step entry '{entry}'"))?
+            .ok_or_else(|| err!("unknown step entry '{entry}'"))?
             .iters
             .max(1);
         let out = runtime.execute("stream_init", &[xla::Literal::scalar(seed)])?;
         let state = out[0]
             .to_vec::<f32>()
-            .map_err(|e| anyhow!("stream_init output: {e:?}"))?;
+            .map_err(|e| err!("stream_init output: {e:?}"))?;
         let expected_a = f64::from(state[0]);
         Ok(StreamExecutor {
             runtime,
@@ -88,11 +88,11 @@ impl StreamExecutor {
         let out = self.runtime.execute(&self.entry, &[input])?;
         self.state = out[0]
             .to_vec::<f32>()
-            .map_err(|e| anyhow!("stream_step output: {e:?}"))?;
+            .map_err(|e| err!("stream_step output: {e:?}"))?;
         let digest = f64::from(
             out[1]
                 .to_vec::<f32>()
-                .map_err(|e| anyhow!("digest: {e:?}"))?[0],
+                .map_err(|e| err!("digest: {e:?}"))?[0],
         );
         self.iterations += self.iters_per_call;
 
@@ -112,7 +112,7 @@ impl StreamExecutor {
             let rel = (digest - expect).abs() / expect.abs().max(1e-12);
             // f32 accumulation over 2^20 elements: generous tolerance.
             if rel > 1e-2 {
-                return Err(anyhow!(
+                return Err(err!(
                     "digest check failed at iteration {}: {digest} vs {expect}",
                     self.iterations
                 ));

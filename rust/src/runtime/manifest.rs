@@ -1,0 +1,115 @@
+//! The artifact manifest written by `python/compile/aot.py` — parsed here
+//! so both the real PJRT runtime and the stub can validate artifacts.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::err;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+/// One loadable entry in the manifest.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub file: String,
+    /// STREAM iterations performed per call (0 for init).
+    pub iters: u64,
+}
+
+/// The artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Elements per STREAM array.
+    pub n: usize,
+    /// Pallas block size used at lowering.
+    pub block: usize,
+    /// STREAM scalar constant.
+    pub scalar: f64,
+    /// Bytes moved per stream_step on an ideal bandwidth-bound machine.
+    pub bytes_per_step: u64,
+    /// Entry name → file + metadata.
+    pub entries: HashMap<String, Entry>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let path = dir.as_ref().join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`?)"))?;
+        let json = Json::parse(&text).map_err(|e| err!("manifest: {e}"))?;
+        let get_u64 = |k: &str| {
+            json.get(k)
+                .and_then(Json::as_u64)
+                .ok_or_else(|| err!("manifest missing numeric '{k}'"))
+        };
+        let mut entries = HashMap::new();
+        if let Some(Json::Obj(map)) = json.get("entries") {
+            for (name, entry) in map {
+                let file = entry
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| err!("entry '{name}' missing file"))?;
+                let iters = entry.get("iters").and_then(Json::as_u64).unwrap_or(1);
+                entries.insert(
+                    name.clone(),
+                    Entry {
+                        file: file.to_string(),
+                        iters,
+                    },
+                );
+            }
+        }
+        Ok(Manifest {
+            n: get_u64("n")? as usize,
+            block: get_u64("block")? as usize,
+            scalar: json
+                .get("scalar")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| err!("manifest missing 'scalar'"))?,
+            bytes_per_step: get_u64("bytes_per_step")?,
+            entries,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_dir_errors_with_hint() {
+        let err = Manifest::load("/nonexistent-dir-xyz").unwrap_err();
+        assert!(err.to_string().contains("manifest.json"));
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("powerctl-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"n": 16, "block": 8, "scalar": 0.41421356,
+                "bytes_per_step": 640,
+                "entries": {"stream_step": {"file": "s.hlo.txt", "iters": 1},
+                            "stream_init": {"file": "i.hlo.txt", "iters": 0}}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.n, 16);
+        assert_eq!(m.block, 8);
+        assert_eq!(m.bytes_per_step, 640);
+        assert_eq!(m.entries["stream_step"].file, "s.hlo.txt");
+        assert_eq!(m.entries["stream_init"].iters, 0);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn malformed_manifest_rejected() {
+        let dir = std::env::temp_dir().join("powerctl-manifest-bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"n": 16}"#).unwrap();
+        let e = Manifest::load(&dir).unwrap_err();
+        assert!(e.to_string().contains("missing"), "{e}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,11 +1,30 @@
 //! PJRT runtime: the only place L3 touches XLA.
 //!
-//! [`client::Runtime`] loads + compiles + caches the HLO-text artifacts
-//! built by `python/compile/aot.py`; [`executor::StreamExecutor`] iterates
-//! the STREAM step with device state and digest validation.
+//! [`manifest`] parses the artifact manifest built by
+//! `python/compile/aot.py` (always available). The execution half is
+//! feature-gated: with `--features pjrt` (requires the vendored `xla`
+//! crate), [`client::Runtime`] loads + compiles + caches the HLO-text
+//! artifacts and [`executor::StreamExecutor`] iterates the STREAM step with
+//! device state and digest validation; without it, [`stub`] provides the
+//! same API surface returning "feature missing" errors, so the offline
+//! default build (`cargo build`) needs no external crates at all.
 
+pub mod manifest;
+
+#[cfg(feature = "pjrt")]
 pub mod client;
+#[cfg(feature = "pjrt")]
 pub mod executor;
 
-pub use client::{Manifest, Runtime};
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
+
+pub use manifest::{Entry, Manifest};
+
+#[cfg(feature = "pjrt")]
+pub use client::Runtime;
+#[cfg(feature = "pjrt")]
 pub use executor::StreamExecutor;
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Runtime, StreamExecutor};

@@ -112,6 +112,12 @@ impl NodeSim {
         self.beats
     }
 
+    /// Current energy-counter reading [J] — a pure sensor read; unlike
+    /// [`NodeSim::step`] it never advances the simulation.
+    pub fn energy(&self) -> f64 {
+        self.energy.read()
+    }
+
     /// Actuator: request a new power cap; returns the clamped value.
     pub fn set_pcap(&mut self, watts: f64) -> f64 {
         self.package.set_cap(watts)
@@ -334,6 +340,19 @@ mod tests {
             }
         }
         assert!(dropped, "no drop event observed in 600 s on yeti");
+    }
+
+    #[test]
+    fn energy_read_is_side_effect_free() {
+        let mut n = node(ClusterId::Gros, 9);
+        n.set_pcap(100.0);
+        let s = n.step(2.0);
+        assert_eq!(n.energy(), s.energy);
+        for _ in 0..10 {
+            let _ = n.energy();
+        }
+        assert_eq!(n.energy(), s.energy, "energy read mutated the counter");
+        assert_eq!(n.time(), s.time);
     }
 
     #[test]

@@ -1,0 +1,96 @@
+//! Minimal error type for the fallible runtime/IO paths.
+//!
+//! `anyhow` is not in the vendored crate set (offline build, DESIGN.md §3),
+//! so this module provides the small subset the crate needs: a string-backed
+//! error, a `Result` alias defaulting to it, a [`Context`] extension trait
+//! mirroring `anyhow::Context`, and the [`crate::err!`] macro mirroring
+//! `anyhow!`.
+//!
+//! Like `anyhow::Error`, [`Error`] deliberately does **not** implement
+//! `std::error::Error`: that keeps the blanket `From<E: std::error::Error>`
+//! conversion (what makes `?` work on `io::Error` etc.) coherent with the
+//! reflexive `From<Error> for Error`.
+
+use std::fmt;
+
+/// A string-backed error carrying its full context chain.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+/// Crate-wide result alias (the `anyhow::Result` shape).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error(e.to_string())
+    }
+}
+
+/// Attach context to a failure, like `anyhow::Context`.
+pub trait Context<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", msg.into())))
+    }
+
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f().into())))
+    }
+}
+
+/// Construct an [`Error`] from a format string (the `anyhow!` shape).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> std::result::Result<(), std::io::Error> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            io_fail()?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e = io_fail().context("loading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "loading manifest: gone");
+        let e = io_fail().with_context(|| format!("try {}", 2)).unwrap_err();
+        assert!(e.to_string().starts_with("try 2: "));
+    }
+
+    #[test]
+    fn err_macro_formats() {
+        let e = crate::err!("bad value {} in {}", 7, "field");
+        assert_eq!(e.to_string(), "bad value 7 in field");
+    }
+}

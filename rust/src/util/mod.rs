@@ -3,13 +3,16 @@
 //! The offline build constraint (DESIGN.md §3) leaves only the `xla` crate's
 //! dependency closure available, so the usual ecosystem crates are replaced
 //! by the modules here: [`rng`] (`rand`), [`stats`], [`json`]/[`csv`]
-//! (`serde`), [`cli`] (`clap`), [`check`] (`proptest`), [`timeseries`].
+//! (`serde`), [`cli`] (`clap`), [`check`] (`proptest`), [`error`]
+//! (`anyhow`), [`parallel`] (`rayon`), [`timeseries`].
 
 pub mod bench;
 pub mod check;
 pub mod cli;
 pub mod csv;
+pub mod error;
 pub mod json;
+pub mod parallel;
 pub mod rng;
 pub mod stats;
 pub mod timeseries;

@@ -1,0 +1,107 @@
+//! Deterministic fork/join parallelism for campaign sweeps.
+//!
+//! Evaluation campaigns (fig7, the fleet sweeps) are embarrassingly
+//! parallel: every run is seeded independently and writes nothing shared.
+//! `rayon` is not in the vendored crate set, so [`par_map`] provides the one
+//! primitive the sweeps need: map a function over owned items on all cores,
+//! returning results **in input order** (determinism rule: parallelism must
+//! never change bytes, only wall time).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use (the machine's parallelism).
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Map `f` over `items` on up to [`default_threads`] threads, preserving
+/// input order in the output. Falls back to a sequential loop for a single
+/// item or a single core. Panics in `f` propagate to the caller.
+pub fn par_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let threads = default_threads().min(items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+
+    let n = items.len();
+    // Work queue: each slot is taken exactly once, tagged with its index so
+    // results land back in input order regardless of scheduling.
+    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|x| Mutex::new(Some(x))).collect();
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(threads);
+        for _ in 0..threads {
+            handles.push(scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = slots[i].lock().unwrap().take().expect("slot taken twice");
+                let r = f(item);
+                *results[i].lock().unwrap() = Some(r);
+            }));
+        }
+        for h in handles {
+            h.join().expect("par_map worker panicked");
+        }
+    });
+
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("par_map slot not filled"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let xs: Vec<u64> = (0..257).collect();
+        let ys = par_map(xs.clone(), |x| x * 3 + 1);
+        assert_eq!(ys, xs.iter().map(|x| x * 3 + 1).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert_eq!(par_map(Vec::<u32>::new(), |x| x), Vec::<u32>::new());
+        assert_eq!(par_map(vec![9], |x| x + 1), vec![10]);
+    }
+
+    #[test]
+    fn matches_sequential_on_nontrivial_work() {
+        // Same bytes as the sequential map — the determinism contract.
+        let seeds: Vec<u64> = (0..32).collect();
+        let seq: Vec<u64> = seeds
+            .iter()
+            .map(|&s| {
+                let mut r = crate::util::rng::Pcg64::seeded(s);
+                (0..100).map(|_| r.next_u64()).fold(0u64, u64::wrapping_add)
+            })
+            .collect();
+        let par = par_map(seeds, |s| {
+            let mut r = crate::util::rng::Pcg64::seeded(s);
+            (0..100).map(|_| r.next_u64()).fold(0u64, u64::wrapping_add)
+        });
+        assert_eq!(seq, par);
+    }
+
+    #[test]
+    fn uses_threads_without_deadlock() {
+        // Just exercise the scoped-thread path with more items than cores.
+        let out = par_map((0..1000u32).collect::<Vec<_>>(), |x| x % 7);
+        assert_eq!(out.len(), 1000);
+        assert_eq!(out[13], 6);
+    }
+}

@@ -1,0 +1,189 @@
+//! Property tests for `util::json`: value → text → value round-trips over
+//! randomly generated documents (nested containers, escape-heavy strings,
+//! number edge cases), plus rejection of malformed input.
+
+use std::collections::BTreeMap;
+
+use powerctl::util::check::{check, Verdict};
+use powerctl::util::json::Json;
+use powerctl::util::rng::Pcg64;
+
+/// Characters that exercise every escape path in the writer/parser.
+const STRING_PALETTE: &[char] = &[
+    'a', 'Z', '0', ' ', '"', '\\', '\n', '\r', '\t', '\u{8}', '\u{c}', '\u{1}', '\u{1f}', '/',
+    'é', '∀', '😀', '\u{7f}', 'µ',
+];
+
+fn random_string(rng: &mut Pcg64) -> String {
+    let len = rng.below(12) as usize;
+    (0..len)
+        .map(|_| *rng.choose(STRING_PALETTE))
+        .collect()
+}
+
+fn random_number(rng: &mut Pcg64) -> f64 {
+    match rng.below(8) {
+        0 => 0.0,
+        1 => -0.0,
+        2 => rng.below(2_000_000) as f64 - 1_000_000.0, // integral
+        3 => 1e15 + rng.below(1_000_000) as f64,        // beyond the i64 fast path
+        4 => f64::MAX * (rng.f64() - 0.5),
+        5 => 5e-324 * (1.0 + rng.below(100) as f64),    // subnormals
+        _ => loop {
+            // Uniform over bit patterns, rejecting non-finite values (JSON
+            // cannot represent them).
+            let x = f64::from_bits(rng.next_u64());
+            if x.is_finite() {
+                break x;
+            }
+        },
+    }
+}
+
+fn random_json(rng: &mut Pcg64, depth: u32) -> Json {
+    let top = if depth == 0 { 4 } else { 6 };
+    match rng.below(top) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.f64() < 0.5),
+        2 => Json::Num(random_number(rng)),
+        3 => Json::Str(random_string(rng)),
+        4 => {
+            let n = rng.below(5) as usize;
+            Json::Arr((0..n).map(|_| random_json(rng, depth - 1)).collect())
+        }
+        _ => {
+            let n = rng.below(5) as usize;
+            let mut m = BTreeMap::new();
+            for _ in 0..n {
+                m.insert(random_string(rng), random_json(rng, depth - 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+#[test]
+fn prop_compact_roundtrip() {
+    check(7001, 300, |rng| random_json(rng, 4), |v| {
+        let text = v.dump();
+        match Json::parse(&text) {
+            Ok(back) if back == *v => Verdict::Pass,
+            Ok(back) => Verdict::Fail(format!("{back:?} != original (text: {text})")),
+            Err(e) => Verdict::Fail(format!("reparse failed: {e} (text: {text})")),
+        }
+    });
+}
+
+#[test]
+fn prop_pretty_roundtrip() {
+    check(7002, 200, |rng| random_json(rng, 3), |v| {
+        match Json::parse(&v.pretty()) {
+            Ok(back) if back == *v => Verdict::Pass,
+            Ok(_) => Verdict::Fail("pretty reparse differs".to_string()),
+            Err(e) => Verdict::Fail(format!("pretty reparse failed: {e}")),
+        }
+    });
+}
+
+#[test]
+fn prop_numbers_roundtrip_exactly() {
+    check(7003, 2000, |rng| random_number(rng), |&x| {
+        let v = Json::Num(x);
+        match Json::parse(&v.dump()) {
+            // -0.0 == 0.0 under PartialEq, which is the contract we need.
+            Ok(Json::Num(y)) if y == x => Verdict::Pass,
+            Ok(other) => Verdict::Fail(format!("{x} → {other:?}")),
+            Err(e) => Verdict::Fail(format!("{x}: {e}")),
+        }
+    });
+}
+
+#[test]
+fn prop_escape_heavy_strings_roundtrip() {
+    check(7004, 500, |rng| random_string(rng), |s| {
+        let v = Json::Str(s.clone());
+        match Json::parse(&v.dump()) {
+            Ok(Json::Str(back)) if back == *s => Verdict::Pass,
+            Ok(other) => Verdict::Fail(format!("{s:?} → {other:?}")),
+            Err(e) => Verdict::Fail(format!("{s:?}: {e}")),
+        }
+    });
+}
+
+#[test]
+fn prop_container_prefixes_rejected() {
+    // Every strict prefix of a serialized container is malformed: the
+    // parser must reject it rather than return a partial value.
+    check(7005, 100, |rng| {
+        let v = loop {
+            let v = random_json(rng, 3);
+            if matches!(v, Json::Arr(_) | Json::Obj(_)) {
+                break v;
+            }
+        };
+        let text = v.dump();
+        let cut = 1 + rng.below((text.len() - 1) as u64) as usize;
+        (text, cut)
+    }, |(text, cut)| {
+        // Cut on a char boundary (multi-byte palette chars).
+        let mut cut = *cut;
+        while !text.is_char_boundary(cut) {
+            cut -= 1;
+        }
+        if cut == 0 {
+            return Verdict::Discard;
+        }
+        let prefix = &text[..cut];
+        match Json::parse(prefix) {
+            Err(_) => Verdict::Pass,
+            Ok(v) => Verdict::Fail(format!("prefix {prefix:?} parsed as {v:?}")),
+        }
+    });
+}
+
+#[test]
+fn malformed_documents_rejected() {
+    for text in [
+        "",
+        "  ",
+        "{",
+        "}",
+        "[1,",
+        "[1 2]",
+        "{\"a\" 1}",
+        "{\"a\":}",
+        "{a:1}",
+        "tru",
+        "nul",
+        "falsey",
+        "1 2",
+        "\"unterminated",
+        "\"bad \\q escape\"",
+        "\"trunc \\u12",
+        "[1,]2",
+        "{\"a\":1}}",
+        "--1",
+        "+1",
+        "01x",
+    ] {
+        assert!(Json::parse(text).is_err(), "accepted malformed: {text:?}");
+    }
+}
+
+#[test]
+fn deep_nesting_roundtrips() {
+    let mut v = Json::Num(1.0);
+    for i in 0..64 {
+        if i % 2 == 0 {
+            v = Json::Arr(vec![v]);
+        } else {
+            let mut m = BTreeMap::new();
+            m.insert("k".to_string(), v);
+            v = Json::Obj(m);
+        }
+    }
+    let back = Json::parse(&v.dump()).unwrap();
+    assert_eq!(back, v);
+    let back = Json::parse(&v.pretty()).unwrap();
+    assert_eq!(back, v);
+}
