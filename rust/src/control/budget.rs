@@ -67,9 +67,20 @@ impl NodeReport {
 /// A cluster-level budget allocator: one ceiling decision per node per
 /// reallocation epoch.
 pub trait BudgetPolicy: Send {
-    /// Apportion `budget` watts of cap across `reports` (one ceiling per
-    /// report, same order). `t` is the epoch time [s].
-    fn allocate(&mut self, t: f64, budget: f64, reports: &[NodeReport]) -> Vec<f64>;
+    /// Apportion `budget` watts of cap across `reports`, writing one
+    /// ceiling per report (same order) into the caller-provided `limits`
+    /// buffer (`limits.len() == reports.len()`). `t` is the epoch time [s].
+    /// Implementations reuse internal scratch, so a steady-state budget
+    /// epoch allocates nothing.
+    fn allocate_into(&mut self, t: f64, budget: f64, reports: &[NodeReport], limits: &mut [f64]);
+
+    /// Allocating convenience wrapper around
+    /// [`allocate_into`](BudgetPolicy::allocate_into).
+    fn allocate(&mut self, t: f64, budget: f64, reports: &[NodeReport]) -> Vec<f64> {
+        let mut limits = vec![0.0; reports.len()];
+        self.allocate_into(t, budget, reports, &mut limits);
+        limits
+    }
 
     /// Human-readable name for records/tables.
     fn name(&self) -> String;
@@ -79,7 +90,7 @@ pub trait BudgetPolicy: Send {
 /// to its node's range (floor for finished nodes), then — if the total
 /// still exceeds the budget — scale the excess above the floors down
 /// uniformly.
-fn reconcile(budget: f64, reports: &[NodeReport], mut limits: Vec<f64>) -> Vec<f64> {
+fn reconcile(budget: f64, reports: &[NodeReport], limits: &mut [f64]) {
     for (l, r) in limits.iter_mut().zip(reports) {
         if r.done {
             *l = r.pcap_min;
@@ -95,7 +106,6 @@ fn reconcile(budget: f64, reports: &[NodeReport], mut limits: Vec<f64>) -> Vec<f
             *l = r.pcap_min + (*l - r.pcap_min) * scale;
         }
     }
-    limits
 }
 
 /// Null allocator: every node keeps its current ceiling (the
@@ -107,9 +117,12 @@ fn reconcile(budget: f64, reports: &[NodeReport], mut limits: Vec<f64>) -> Vec<f
 pub struct FrozenLimits;
 
 impl BudgetPolicy for FrozenLimits {
-    fn allocate(&mut self, _t: f64, budget: f64, reports: &[NodeReport]) -> Vec<f64> {
-        let limits = reports.iter().map(|r| r.limit).collect();
-        reconcile(budget, reports, limits)
+    fn allocate_into(&mut self, _t: f64, budget: f64, reports: &[NodeReport], limits: &mut [f64]) {
+        debug_assert_eq!(limits.len(), reports.len());
+        for (l, r) in limits.iter_mut().zip(reports) {
+            *l = r.limit;
+        }
+        reconcile(budget, reports, limits);
     }
 
     fn name(&self) -> String {
@@ -123,15 +136,15 @@ impl BudgetPolicy for FrozenLimits {
 pub struct UniformBudget;
 
 impl BudgetPolicy for UniformBudget {
-    fn allocate(&mut self, _t: f64, budget: f64, reports: &[NodeReport]) -> Vec<f64> {
+    fn allocate_into(&mut self, _t: f64, budget: f64, reports: &[NodeReport], limits: &mut [f64]) {
+        debug_assert_eq!(limits.len(), reports.len());
         let active = reports.iter().filter(|r| !r.done).count().max(1);
         let reserved: f64 = reports.iter().filter(|r| r.done).map(|r| r.pcap_min).sum();
         let share = (budget - reserved).max(0.0) / active as f64;
-        let limits = reports
-            .iter()
-            .map(|r| if r.done { r.pcap_min } else { share })
-            .collect();
-        reconcile(budget, reports, limits)
+        for (l, r) in limits.iter_mut().zip(reports) {
+            *l = if r.done { r.pcap_min } else { share };
+        }
+        reconcile(budget, reports, limits);
     }
 
     fn name(&self) -> String {
@@ -162,27 +175,25 @@ impl Default for SlackProportional {
 }
 
 impl BudgetPolicy for SlackProportional {
-    fn allocate(&mut self, _t: f64, budget: f64, reports: &[NodeReport]) -> Vec<f64> {
+    fn allocate_into(&mut self, _t: f64, budget: f64, reports: &[NodeReport], limits: &mut [f64]) {
+        debug_assert_eq!(limits.len(), reports.len());
         // Bids: what each node asks for this epoch.
-        let mut limits: Vec<f64> = reports
-            .iter()
-            .map(|r| {
-                if r.done {
-                    r.pcap_min
-                } else if r.pinched() {
-                    r.limit + self.raise * (r.pcap_max - r.limit).max(0.0)
-                } else {
-                    (r.pcap + self.margin).min(r.limit.max(r.pcap_min))
-                }
-            })
-            .collect();
+        for (l, r) in limits.iter_mut().zip(reports) {
+            *l = if r.done {
+                r.pcap_min
+            } else if r.pinched() {
+                r.limit + self.raise * (r.pcap_max - r.limit).max(0.0)
+            } else {
+                (r.pcap + self.margin).min(r.limit.max(r.pcap_min))
+            };
+        }
         // Hand surplus to pinched nodes in proportion to their remaining
         // headroom (a slack node's PI would not use extra ceiling anyway).
         let surplus = budget - limits.iter().sum::<f64>();
         if surplus > 0.0 {
             let headroom: f64 = reports
                 .iter()
-                .zip(&limits)
+                .zip(limits.iter())
                 .filter(|(r, _)| r.pinched())
                 .map(|(r, &l)| (r.pcap_max - l).max(0.0))
                 .sum();
@@ -194,7 +205,7 @@ impl BudgetPolicy for SlackProportional {
                 }
             }
         }
-        reconcile(budget, reports, limits)
+        reconcile(budget, reports, limits);
     }
 
     fn name(&self) -> String {
@@ -209,22 +220,44 @@ impl BudgetPolicy for SlackProportional {
 pub struct GreedyRepack {
     /// Margin kept above a tracking node's applied cap [W].
     pub margin: f64,
+    /// Reusable deficit-order scratch (hot path: one budget epoch per
+    /// `realloc_every` fleet periods must not allocate).
+    order: Vec<usize>,
 }
 
 impl Default for GreedyRepack {
     fn default() -> Self {
-        GreedyRepack { margin: 3.0 }
+        GreedyRepack {
+            margin: 3.0,
+            order: Vec::new(),
+        }
+    }
+}
+
+impl GreedyRepack {
+    pub fn with_margin(margin: f64) -> Self {
+        GreedyRepack {
+            margin,
+            order: Vec::new(),
+        }
     }
 }
 
 impl BudgetPolicy for GreedyRepack {
-    fn allocate(&mut self, _t: f64, budget: f64, reports: &[NodeReport]) -> Vec<f64> {
+    fn allocate_into(&mut self, _t: f64, budget: f64, reports: &[NodeReport], limits: &mut [f64]) {
         let n = reports.len();
-        let mut limits: Vec<f64> = reports.iter().map(|r| r.pcap_min).collect();
+        debug_assert_eq!(limits.len(), n);
+        for (l, r) in limits.iter_mut().zip(reports) {
+            *l = r.pcap_min;
+        }
         let mut pool = budget - limits.iter().sum::<f64>();
 
-        let mut order: Vec<usize> = (0..n).filter(|&i| !reports[i].done).collect();
-        order.sort_by(|&a, &b| {
+        self.order.clear();
+        self.order.extend((0..n).filter(|&i| !reports[i].done));
+        // Unstable sort: allocation-free, and deterministic for a given
+        // input (ties broken by the fixed partition scheme, identically on
+        // every executor path).
+        self.order.sort_unstable_by(|&a, &b| {
             reports[b]
                 .deficit()
                 .partial_cmp(&reports[a].deficit())
@@ -232,7 +265,7 @@ impl BudgetPolicy for GreedyRepack {
         });
 
         // Pass 1: demonstrated demand (pinched nodes ask for the rail).
-        for &i in &order {
+        for &i in &self.order {
             if pool <= 0.0 {
                 break;
             }
@@ -247,7 +280,7 @@ impl BudgetPolicy for GreedyRepack {
             pool -= grant;
         }
         // Pass 2: remaining pool buys headroom (future disturbances).
-        for &i in &order {
+        for &i in &self.order {
             if pool <= 0.0 {
                 break;
             }
@@ -255,7 +288,7 @@ impl BudgetPolicy for GreedyRepack {
             limits[i] += grant;
             pool -= grant;
         }
-        reconcile(budget, reports, limits)
+        reconcile(budget, reports, limits);
     }
 
     fn name(&self) -> String {
@@ -385,6 +418,19 @@ mod tests {
         let reports = mixed_fleet();
         let limits = FrozenLimits.allocate(5.0, 1e9, &reports);
         assert_eq!(limits, vec![100.0, 80.0, 90.0]);
+    }
+
+    #[test]
+    fn allocate_into_matches_allocate_with_reused_buffer() {
+        let reports = mixed_fleet();
+        for strat in strategies().iter_mut() {
+            let mut buf = vec![f64::NAN; reports.len()]; // stale garbage
+            for budget in [150.0, 240.0, 300.0] {
+                let fresh = strat.allocate(0.0, budget, &reports);
+                strat.allocate_into(0.0, budget, &reports, &mut buf);
+                assert_eq!(fresh, buf, "{} at budget {budget}", strat.name());
+            }
+        }
     }
 
     #[test]

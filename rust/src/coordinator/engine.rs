@@ -147,8 +147,9 @@ impl NodeBackend for LockstepBackend {
             };
         }
         self.last_time = now;
-        let s = self.node.step(dt);
-        beats.extend_from_slice(&s.heartbeats);
+        // Heartbeats land straight in the engine's reusable buffer: the
+        // lockstep tick path allocates nothing in steady state.
+        let s = self.node.step_into(dt, beats);
         PeriodSensors {
             // Report the driver's clock, not the node's sub-step
             // accumulated time: the clock is the authority and stays free
@@ -216,6 +217,16 @@ impl<B: NodeBackend> ControlLoop<B> {
     /// Tag this loop's records with a node id (fleet bookkeeping).
     pub fn set_node_id(&mut self, id: u32) {
         self.node_id = id;
+    }
+
+    pub fn node_id(&self) -> u32 {
+        self.node_id
+    }
+
+    /// Pre-size the per-period sample log so the steady-state tick path
+    /// never grows a `Vec` (the sample push is the one per-tick append).
+    pub fn reserve_samples(&mut self, periods: usize) {
+        self.samples.reserve(periods.saturating_sub(self.samples.len()));
     }
 
     pub fn set_quota(&mut self, quota: Option<u64>) {

@@ -38,6 +38,9 @@ pub struct SimBackend {
     node: NodeSim,
     last_time: f64,
     rate: Arc<AtomicU64>,
+    /// Reusable sink for the node's own (discarded) heartbeats, so the
+    /// live-path tick allocates nothing in steady state.
+    discard: Vec<f64>,
 }
 
 impl SimBackend {
@@ -46,6 +49,7 @@ impl SimBackend {
             rate: Arc::new(AtomicU64::new(0f64.to_bits())),
             last_time: node.time(),
             node,
+            discard: Vec::new(),
         }
     }
 
@@ -78,7 +82,8 @@ impl NodeBackend for SimBackend {
             };
         }
         self.last_time = now;
-        let s = self.node.step(dt);
+        self.discard.clear();
+        let s = self.node.step_into(dt, &mut self.discard);
         self.rate
             .store(s.true_progress.to_bits(), Ordering::Relaxed);
         PeriodSensors {

@@ -64,6 +64,37 @@ impl RunRecord {
         t
     }
 
+    /// Full-fidelity JSON export: every scalar plus the four per-period
+    /// series. Two runs are byte-identical iff their `to_json().dump()`
+    /// strings are equal — the oracle `tests/fleet_equivalence.rs` uses to
+    /// prove the sharded executor reproduces the legacy fleet protocol.
+    /// (Non-finite values serialize as `null`, like the rest of
+    /// `util::json`.)
+    pub fn to_json(&self) -> Json {
+        fn series(s: &TimeSeries) -> Json {
+            let mut j = Json::obj();
+            j.set("times", s.times.as_slice())
+                .set("values", s.values.as_slice());
+            j
+        }
+        let mut j = Json::obj();
+        j.set("cluster", self.cluster.as_str())
+            .set("policy", self.policy.as_str())
+            .set("node_id", self.node_id)
+            .set("seed", self.seed)
+            .set("epsilon", self.epsilon)
+            .set("setpoint_hz", self.setpoint)
+            .set("exec_time_s", self.exec_time)
+            .set("energy_j", self.energy)
+            .set("beats", self.beats)
+            .set("completed", self.completed)
+            .set("pcap", series(&self.pcap))
+            .set("power", series(&self.power))
+            .set("progress", series(&self.progress))
+            .set("true_progress", series(&self.true_progress));
+        j
+    }
+
     /// Scalar summary (one Fig. 7 point).
     pub fn summary(&self) -> Json {
         let mut j = Json::obj();
@@ -138,6 +169,21 @@ mod tests {
         assert_eq!(j.get("cluster").unwrap().as_str(), Some("gros"));
         assert_eq!(j.get("exec_time_s").unwrap().as_f64(), Some(120.5));
         assert_eq!(j.get("beats").unwrap().as_u64(), Some(3000));
+    }
+
+    #[test]
+    fn to_json_round_trips_and_discriminates() {
+        let r = record();
+        let j = r.to_json();
+        let back = Json::parse(&j.dump()).unwrap();
+        assert_eq!(back, j);
+        assert_eq!(j.get("beats").unwrap().as_u64(), Some(3000));
+        assert_eq!(j.get_path(&["pcap", "values"]).unwrap().as_arr().unwrap().len(), 5);
+        // Any bit of difference must show in the dump (the equivalence
+        // oracle relies on this).
+        let mut r2 = r.clone();
+        r2.progress.values[3] += 1e-12;
+        assert_ne!(r2.to_json().dump(), r.to_json().dump());
     }
 
     #[test]

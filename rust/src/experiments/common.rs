@@ -48,11 +48,14 @@ impl Scale {
             Scale::Full => 10_000,
         }
     }
-    /// Fleet size for the fleet-budget campaign.
+    /// Fleet size for the fleet-budget campaign. The sharded executor
+    /// makes paper-scale fleets cheap: `Full` drives 256 nodes (the
+    /// ROADMAP's thousands-of-nodes trajectory; see `l3_hotpath` for the
+    /// 1024-node throughput point).
     pub fn fleet_nodes(self) -> usize {
         match self {
             Scale::Fast => 8,
-            Scale::Full => 16,
+            Scale::Full => 256,
         }
     }
     /// Degradation levels ε — paper: twelve in [0.01, 0.5].

@@ -49,6 +49,10 @@ pub struct FleetPoint {
     /// Per-node slowdowns, fleet order.
     pub slowdowns: Vec<f64>,
     pub completed: bool,
+    /// Node-ticks driven by the executor (periods × nodes).
+    pub node_ticks: u64,
+    /// Wall-clock seconds of the drive loop (throughput denominator).
+    pub wall_seconds: f64,
 }
 
 /// Build an `n`-node heterogeneous fleet, round-robin over the three
@@ -101,6 +105,11 @@ fn fleet_config(ctx: &Ctx, n: usize) -> FleetConfig {
         total_beats: ctx.scale.total_beats(),
         max_time: 3_600.0,
         seed: ctx.seed ^ 0xF1EE,
+        // The sweep itself fans points out over all cores (par_map), so
+        // each fleet runs on a single-thread pool: no core oversubscription
+        // and the recorded wall_s/node-ticks per point stay meaningful.
+        // Canonical executor-scaling numbers come from `l3_hotpath`.
+        threads: Some(1),
     }
 }
 
@@ -167,6 +176,8 @@ pub fn run_point(
         mean_slowdown: stats::mean(&slowdowns),
         slowdowns,
         completed: out.completed,
+        node_ticks: out.node_ticks,
+        wall_seconds: out.wall_seconds,
     }
 }
 
@@ -202,6 +213,8 @@ pub fn run(ctx: &Ctx, idents: &[Identified]) -> (String, Vec<FleetPoint>) {
         "max_slowdown",
         "mean_slowdown",
         "completed",
+        "node_ticks",
+        "wall_s",
     ]);
     for p in &points {
         csv.push(vec![
@@ -212,6 +225,8 @@ pub fn run(ctx: &Ctx, idents: &[Identified]) -> (String, Vec<FleetPoint>) {
             format!("{}", p.max_slowdown),
             format!("{}", p.mean_slowdown),
             format!("{}", p.completed as u8),
+            format!("{}", p.node_ticks),
+            format!("{}", p.wall_seconds),
         ]);
     }
     let _ = csv.save(ctx.path("fleet.csv"));
@@ -253,6 +268,17 @@ pub fn run(ctx: &Ctx, idents: &[Identified]) -> (String, Vec<FleetPoint>) {
                 100.0 * p.max_slowdown,
             ));
         }
+    }
+    // Aggregate per-run executor throughput (fleets run single-threaded
+    // inside the parallel sweep, so per-point wall time is undistorted;
+    // canonical multi-thread scaling numbers come from `l3_hotpath`).
+    let ticks: u64 = points.iter().map(|p| p.node_ticks).sum();
+    let wall: f64 = points.iter().map(|p| p.wall_seconds).sum();
+    if wall > 0.0 {
+        out.push_str(&format!(
+            "executor throughput: {:.0} node-ticks/s per fleet thread ({ticks} node-ticks, {wall:.2} s summed wall)\n",
+            ticks as f64 / wall
+        ));
     }
     (out, points)
 }

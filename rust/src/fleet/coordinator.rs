@@ -1,5 +1,5 @@
-//! The fleet coordinator: N node control loops on worker threads under one
-//! global power budget, re-apportioned periodically by a [`BudgetPolicy`].
+//! The fleet coordinator: N node control loops under one global power
+//! budget, re-apportioned periodically by a [`BudgetPolicy`].
 //!
 //! Two nested control layers:
 //!
@@ -9,17 +9,31 @@
 //!   [`BudgetPolicy`] reads every node's [`NodeReport`] and moves ceiling
 //!   watts from slack-rich to pinched nodes, conserving the global budget.
 //!
+//! Two execution paths drive the same protocol:
+//!
+//! * [`run_fleet`] — the **sharded executor** (default): engines live in
+//!   contiguous shards ticked in place by a persistent worker pool, one
+//!   fork/join per control period ([`ShardedExecutor`]). This is the fast
+//!   path — no per-node threads, no channels, no steady-state allocation.
+//! * [`run_fleet_threaded`] — the legacy one-thread-per-node mpsc
+//!   protocol, kept as a compatibility mode, an oracle for the
+//!   byte-equivalence tests, and the baseline the `l3_hotpath` bench
+//!   measures the executor against.
+//!
 //! All nodes advance in lockstep on the shared virtual clock, so a fleet
-//! run is bit-reproducible for a given seed no matter how the OS schedules
-//! the worker threads.
+//! run is bit-reproducible for a given seed no matter which path executes
+//! it or how the OS schedules threads (`tests/fleet_equivalence.rs`).
 //!
 //! [`ControlLoop`]: crate::coordinator::engine::ControlLoop
 
 use std::sync::mpsc;
+use std::time::Instant;
 
 use crate::control::budget::{BudgetPolicy, NodeReport};
 use crate::coordinator::records::RunRecord;
+use crate::fleet::executor::ShardedExecutor;
 use crate::fleet::node::{spawn_worker, Cmd, NodeSpec, WorkerConfig, WorkerHandle};
+use crate::util::parallel::default_threads;
 use crate::util::rng::Pcg64;
 
 /// Fleet run parameters.
@@ -37,6 +51,10 @@ pub struct FleetConfig {
     pub max_time: f64,
     /// Root seed; node i simulates with an independent split stream.
     pub seed: u64,
+    /// Worker threads for the sharded executor (`None` = all cores;
+    /// `Some(1)` forces a single-thread pool — used by the equivalence
+    /// tests). Ignored by [`run_fleet_threaded`].
+    pub threads: Option<usize>,
 }
 
 impl Default for FleetConfig {
@@ -48,6 +66,7 @@ impl Default for FleetConfig {
             total_beats: 1_500,
             max_time: 600.0,
             seed: 42,
+            threads: None,
         }
     }
 }
@@ -67,6 +86,10 @@ pub struct FleetOutcome {
     pub makespan: f64,
     /// Every node completed its workload before the hard stop.
     pub completed: bool,
+    /// Node-ticks driven (periods × nodes) — the throughput numerator.
+    pub node_ticks: u64,
+    /// Wall-clock time of the drive loop [s] — the throughput denominator.
+    pub wall_seconds: f64,
 }
 
 /// The sim seed node `i` runs under for a fleet rooted at `root` — exposed
@@ -76,8 +99,39 @@ pub fn node_seed(root: u64, i: usize) -> u64 {
     seeder.split(i as u64).next_u64()
 }
 
-/// Run `specs` as a fleet under `strategy`. Blocks until every node
-/// completes its workload or `config.max_time` elapses.
+fn worker_config(config: &FleetConfig) -> WorkerConfig {
+    WorkerConfig {
+        period: config.period,
+        total_beats: config.total_beats,
+        max_time: config.max_time,
+    }
+}
+
+fn summarize(
+    strategy: &dyn BudgetPolicy,
+    records: Vec<RunRecord>,
+    limits_trace: Vec<(f64, Vec<f64>)>,
+    node_ticks: u64,
+    wall_seconds: f64,
+) -> FleetOutcome {
+    let total_energy = records.iter().map(|r| r.energy).sum();
+    let makespan = records.iter().fold(0.0f64, |m, r| m.max(r.exec_time));
+    let completed = records.iter().all(|r| r.completed);
+    FleetOutcome {
+        strategy: strategy.name(),
+        records,
+        limits_trace,
+        total_energy,
+        makespan,
+        completed,
+        node_ticks,
+        wall_seconds,
+    }
+}
+
+/// Run `specs` as a fleet under `strategy` on the sharded executor.
+/// Blocks until every node completes its workload or `config.max_time`
+/// elapses. Byte-identical records to [`run_fleet_threaded`].
 pub fn run_fleet(
     specs: &[NodeSpec],
     strategy: &mut dyn BudgetPolicy,
@@ -86,11 +140,48 @@ pub fn run_fleet(
     assert!(!specs.is_empty(), "fleet needs at least one node");
     let n = specs.len();
     let initial_limit = config.budget / n as f64;
-    let worker_cfg = WorkerConfig {
-        period: config.period,
-        total_beats: config.total_beats,
-        max_time: config.max_time,
-    };
+    let seeds: Vec<u64> = (0..n).map(|i| node_seed(config.seed, i)).collect();
+    let threads = config.threads.unwrap_or_else(default_threads).clamp(1, n);
+    let mut exec = ShardedExecutor::new(specs, initial_limit, worker_config(config), &seeds, threads);
+
+    let mut limits = vec![0.0; n];
+    let mut limits_trace = Vec::new();
+    let mut now = 0.0;
+    let mut period_idx: u64 = 0;
+    let max_periods = (config.max_time / config.period).ceil() as u64 + 1;
+
+    let t0 = Instant::now();
+    loop {
+        period_idx += 1;
+        now += config.period;
+        let all_done = exec.tick(now);
+        if all_done || period_idx >= max_periods {
+            break;
+        }
+        if period_idx % config.realloc_every == 0 {
+            strategy.allocate_into(now, config.budget, exec.reports(), &mut limits);
+            exec.set_limits(&limits);
+            limits_trace.push((now, limits.clone()));
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let records = exec.into_records();
+    summarize(strategy, records, limits_trace, period_idx * n as u64, wall)
+}
+
+/// Run `specs` as a fleet under `strategy` on the legacy
+/// one-thread-per-node mpsc protocol (compatibility mode / equivalence
+/// oracle / bench baseline). Byte-identical records to [`run_fleet`].
+pub fn run_fleet_threaded(
+    specs: &[NodeSpec],
+    strategy: &mut dyn BudgetPolicy,
+    config: &FleetConfig,
+) -> FleetOutcome {
+    assert!(!specs.is_empty(), "fleet needs at least one node");
+    let n = specs.len();
+    let initial_limit = config.budget / n as f64;
+    let worker_cfg = worker_config(config);
 
     let (reply_tx, reply_rx) = mpsc::channel();
     let workers: Vec<WorkerHandle> = specs
@@ -116,6 +207,7 @@ pub fn run_fleet(
     let mut period_idx: u64 = 0;
     let max_periods = (config.max_time / config.period).ceil() as u64 + 1;
 
+    let t0 = Instant::now();
     loop {
         period_idx += 1;
         now += config.period;
@@ -167,6 +259,7 @@ pub fn run_fleet(
             limits_trace.push((now, limits));
         }
     }
+    let wall = t0.elapsed().as_secs_f64();
 
     let mut records = Vec::with_capacity(n);
     for w in workers {
@@ -174,18 +267,7 @@ pub fn run_fleet(
         records.push(w.join.join().expect("fleet worker panicked"));
     }
     records.sort_by_key(|r| r.node_id);
-
-    let total_energy = records.iter().map(|r| r.energy).sum();
-    let makespan = records.iter().fold(0.0f64, |m, r| m.max(r.exec_time));
-    let completed = records.iter().all(|r| r.completed);
-    FleetOutcome {
-        strategy: strategy.name(),
-        records,
-        limits_trace,
-        total_energy,
-        makespan,
-        completed,
-    }
+    summarize(strategy, records, limits_trace, period_idx * n as u64, wall)
 }
 
 #[cfg(test)]
@@ -238,6 +320,9 @@ mod tests {
         assert!(names.len() >= 2);
         assert!(out.total_energy > 0.0);
         assert!(out.makespan > 0.0 && out.makespan <= cfg.max_time);
+        // Throughput accounting is populated.
+        assert!(out.node_ticks >= 4);
+        assert!(out.wall_seconds > 0.0);
     }
 
     #[test]
@@ -271,6 +356,26 @@ mod tests {
         for (ra, rb) in a.records.iter().zip(&b.records) {
             assert_eq!(ra.progress.values, rb.progress.values);
             assert_eq!(ra.pcap.values, rb.pcap.values);
+        }
+    }
+
+    #[test]
+    fn sharded_matches_threaded_protocol() {
+        // The full 32-node, 3-strategy, byte-level check lives in
+        // tests/fleet_equivalence.rs; this is the fast in-tree guard.
+        let specs = specs(4, 0.15);
+        let mut cfg = config(4);
+        cfg.budget = 4.0 * 85.0; // tight: reallocation actually moves watts
+        let a = run_fleet(&specs, &mut SlackProportional::default(), &cfg);
+        let b = run_fleet_threaded(&specs, &mut SlackProportional::default(), &cfg);
+        assert_eq!(a.limits_trace, b.limits_trace);
+        for (ra, rb) in a.records.iter().zip(&b.records) {
+            assert_eq!(ra.progress.values, rb.progress.values);
+            assert_eq!(ra.pcap.values, rb.pcap.values);
+            assert_eq!(ra.power.values, rb.power.values);
+            assert_eq!(ra.energy, rb.energy);
+            assert_eq!(ra.exec_time, rb.exec_time);
+            assert_eq!(ra.beats, rb.beats);
         }
     }
 

@@ -1,0 +1,277 @@
+//! The sharded fleet executor: N node control loops ticked in place by a
+//! persistent worker pool — no per-node threads, no channels, no per-tick
+//! sends, no steady-state allocation.
+//!
+//! Layout: node engines live in one contiguous `Vec<NodeCell>`, split into
+//! contiguous shards of `ceil(n / threads)` cells. Each control period is a
+//! **single fork/join**: [`WorkerPool::par_chunks_mut`] hands every worker
+//! disjoint `&mut` shards, the worker ticks each engine in place and stamps
+//! the cell's [`NodeReport`]; after the join the coordinator reads the
+//! contiguous report buffer and (on reallocation epochs) writes new
+//! ceilings back. That is the entire protocol.
+//!
+//! Determinism argument (why this is byte-identical to the legacy
+//! one-thread-per-node mpsc protocol in `fleet::node`):
+//!
+//! * node physics are independent between budget epochs — engine `i` only
+//!   reads its own RNG stream, plant and policy, so the tick order across
+//!   nodes cannot influence any node's bytes;
+//! * reports are stamped per cell and copied into the report buffer in
+//!   node order, so the budget policy sees the same snapshot in the same
+//!   order as the legacy coordinator assembled from its reply channel;
+//! * ceilings are applied through the same `> 1e-9` change guard the
+//!   legacy coordinator used before sending `Cmd::SetLimit`;
+//! * records are finalized by the same `fleet::node::finalize_record`.
+//!
+//! Shard claim order (which worker ticks which shard first) therefore only
+//! moves wall time, never bytes — pinned by `tests/fleet_equivalence.rs`.
+
+use crate::control::budget::NodeReport;
+use crate::coordinator::engine::{ControlLoop, LockstepBackend};
+use crate::coordinator::records::RunRecord;
+use crate::fleet::node::{finalize_record, node_report, BudgetedPolicy, NodeSpec, WorkerConfig};
+use crate::sim::cluster::Cluster;
+use crate::sim::node::NodeSim;
+use crate::util::parallel::WorkerPool;
+
+/// Cap on pre-reserved sample rows per node (`max_time / period` can be
+/// huge for open-horizon runs; beyond this the sample log simply grows).
+const MAX_RESERVED_ROWS: usize = 4096;
+
+/// One node's in-place state: engine + budgeted policy + metadata. The
+/// report is stamped here by the owning worker each tick and mirrored into
+/// the executor's contiguous buffer after the join.
+struct NodeCell {
+    engine: ControlLoop<LockstepBackend>,
+    policy: BudgetedPolicy,
+    cluster: Cluster,
+    seed: u64,
+    report: NodeReport,
+}
+
+impl NodeCell {
+    /// One control period ending at `now`, in place.
+    fn tick(&mut self, now: f64) {
+        if !self.engine.finished() {
+            self.engine.tick(now, &mut self.policy);
+        }
+        self.report = node_report(self.engine.node_id(), &self.engine, &self.policy, &self.cluster);
+    }
+}
+
+/// The sharded executor. Owns every node engine plus the worker pool that
+/// ticks them; the fleet coordinator drives it one period at a time.
+pub struct ShardedExecutor {
+    pool: WorkerPool,
+    cells: Vec<NodeCell>,
+    /// Contiguous per-node reports, node order — handed to the budget
+    /// layer as `&[NodeReport]` without any per-epoch allocation.
+    reports: Vec<NodeReport>,
+    /// Shard size: contiguous cells ticked by one worker per fork/join.
+    shard: usize,
+    cfg: WorkerConfig,
+}
+
+impl ShardedExecutor {
+    /// Build `specs.len()` node engines (node `i` seeded with `seeds[i]`
+    /// and capped at `initial_limit`) sharded over `threads` pool workers.
+    pub fn new(
+        specs: &[NodeSpec],
+        initial_limit: f64,
+        cfg: WorkerConfig,
+        seeds: &[u64],
+        threads: usize,
+    ) -> Self {
+        assert!(!specs.is_empty(), "executor needs at least one node");
+        assert_eq!(specs.len(), seeds.len(), "one seed per node spec");
+        let n = specs.len();
+        // §Perf: the sample log push is the one per-tick append; pre-size
+        // it so the steady-state tick path never grows a Vec.
+        let rows_f = (cfg.max_time / cfg.period).ceil() + 2.0;
+        let rows = if rows_f.is_finite() && rows_f > 0.0 {
+            (rows_f as usize).min(MAX_RESERVED_ROWS)
+        } else {
+            0
+        };
+        let cells: Vec<NodeCell> = specs
+            .iter()
+            .zip(seeds)
+            .enumerate()
+            .map(|(i, (spec, &seed))| {
+                let cluster = Cluster::get(spec.cluster);
+                let policy = BudgetedPolicy::new(spec, &cluster, initial_limit);
+                let node = NodeSim::new(cluster.clone(), seed);
+                let mut engine = ControlLoop::new(LockstepBackend::new(node), cfg.period);
+                engine.set_node_id(i as u32);
+                engine.set_quota(Some(cfg.total_beats));
+                engine.set_max_time(cfg.max_time);
+                engine.set_initial_pcap(policy.initial_pcap());
+                engine.reserve_samples(rows);
+                let report = node_report(i as u32, &engine, &policy, &cluster);
+                NodeCell {
+                    engine,
+                    policy,
+                    cluster,
+                    seed,
+                    report,
+                }
+            })
+            .collect();
+        let reports = cells.iter().map(|c| c.report).collect();
+        let threads = threads.clamp(1, n);
+        ShardedExecutor {
+            pool: WorkerPool::new(threads),
+            cells,
+            reports,
+            shard: n.div_ceil(threads),
+            cfg,
+        }
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// One lockstep control period for every node — a single fork/join
+    /// over the shards. Returns `true` once every node has finished
+    /// (quota or timeout).
+    pub fn tick(&mut self, now: f64) -> bool {
+        self.pool
+            .par_chunks_mut(&mut self.cells, self.shard, |_start, shard| {
+                for cell in shard {
+                    cell.tick(now);
+                }
+            });
+        // Mirror into the contiguous buffer the budget layer reads (node
+        // order, same bytes the legacy reply loop assembled).
+        let mut all_done = true;
+        for (slot, cell) in self.reports.iter_mut().zip(&self.cells) {
+            *slot = cell.report;
+            all_done &= cell.report.done;
+        }
+        all_done
+    }
+
+    /// The per-node reports stamped by the most recent [`tick`](Self::tick).
+    pub fn reports(&self) -> &[NodeReport] {
+        &self.reports
+    }
+
+    /// Apply the budget layer's ceilings (one per node, node order). Keeps
+    /// the legacy protocol's "only apply changed limits" guard so records
+    /// stay byte-identical with the per-node-thread path.
+    pub fn set_limits(&mut self, limits: &[f64]) {
+        debug_assert_eq!(limits.len(), self.cells.len());
+        for (cell, &limit) in self.cells.iter_mut().zip(limits) {
+            if (limit - cell.report.limit).abs() > 1e-9 {
+                cell.policy.set_limit(limit);
+            }
+        }
+    }
+
+    /// Tear down the pool and finalize one [`RunRecord`] per node (node
+    /// order), exactly as the legacy worker join path does.
+    pub fn into_records(self) -> Vec<RunRecord> {
+        let ShardedExecutor { cells, cfg, .. } = self;
+        cells
+            .into_iter()
+            .map(|c| finalize_record(&c.engine, &c.policy, &c.cluster, c.seed, cfg))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::node::tests::fitted;
+    use crate::fleet::node::NodePolicySpec;
+    use crate::sim::cluster::ClusterId;
+
+    fn specs(n: usize) -> Vec<NodeSpec> {
+        (0..n)
+            .map(|_| NodeSpec {
+                cluster: ClusterId::Gros,
+                model: fitted(ClusterId::Gros),
+                policy: NodePolicySpec::Pi { epsilon: 0.15 },
+            })
+            .collect()
+    }
+
+    fn cfg() -> WorkerConfig {
+        WorkerConfig {
+            period: 1.0,
+            total_beats: 300,
+            max_time: 120.0,
+        }
+    }
+
+    #[test]
+    fn ticks_to_completion_and_finalizes() {
+        let seeds: Vec<u64> = (0..6).map(|i| 100 + i).collect();
+        let mut exec = ShardedExecutor::new(&specs(6), 95.0, cfg(), &seeds, 3);
+        assert_eq!(exec.num_nodes(), 6);
+        let mut now = 0.0;
+        let mut done = false;
+        for _ in 0..120 {
+            now += 1.0;
+            if exec.tick(now) {
+                done = true;
+                break;
+            }
+        }
+        assert!(done, "fleet never completed");
+        assert!(exec.reports().iter().all(|r| r.done));
+        let records = exec.into_records();
+        assert_eq!(records.len(), 6);
+        for (i, r) in records.iter().enumerate() {
+            assert_eq!(r.node_id, i as u32);
+            assert!(r.completed, "node {i} incomplete");
+            assert_eq!(r.beats, 300);
+            assert_eq!(r.seed, 100 + i as u64);
+            assert!(r.energy > 0.0);
+        }
+    }
+
+    #[test]
+    fn thread_count_never_changes_bytes() {
+        let n = 5;
+        let seeds: Vec<u64> = (0..n as u64).map(|i| 7 * i + 1).collect();
+        let run = |threads: usize| {
+            let mut exec = ShardedExecutor::new(&specs(n), 90.0, cfg(), &seeds, threads);
+            let mut now = 0.0;
+            for _ in 0..40 {
+                now += 1.0;
+                if exec.tick(now) {
+                    break;
+                }
+            }
+            exec.into_records()
+        };
+        let a = run(1);
+        let b = run(4);
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.progress.values, rb.progress.values);
+            assert_eq!(ra.pcap.values, rb.pcap.values);
+            assert_eq!(ra.energy, rb.energy);
+        }
+    }
+
+    #[test]
+    fn set_limits_respects_change_guard() {
+        let seeds = [42u64];
+        let mut exec = ShardedExecutor::new(&specs(1), 95.0, cfg(), &seeds, 1);
+        exec.tick(1.0);
+        let before = exec.reports()[0].limit;
+        // An unchanged limit must be a no-op; a changed one must land.
+        exec.set_limits(&[before]);
+        exec.tick(2.0);
+        assert_eq!(exec.reports()[0].limit, before);
+        exec.set_limits(&[before - 20.0]);
+        exec.tick(3.0);
+        assert!((exec.reports()[0].limit - (before - 20.0)).abs() < 1e-9);
+    }
+}

@@ -5,11 +5,16 @@
 //! scales the reproduced machinery to N heterogeneous simulated nodes
 //! (drawn from the three Table 1 clusters) under a *global* power budget:
 //!
-//! * [`node`] — one worker thread per node, each running its own PI loop on
-//!   the shared [`ControlLoop`](crate::coordinator::engine::ControlLoop)
-//!   engine below a movable budget ceiling;
-//! * [`coordinator`] — the lockstep fleet driver plus the reallocation
-//!   epoch loop feeding a
+//! * [`node`] — the per-node building blocks: [`BudgetedPolicy`] (a PI
+//!   below a movable ceiling), the shared report/record finalization, and
+//!   the legacy one-thread-per-node worker protocol;
+//! * [`executor`] — the sharded fleet executor: engines owned in
+//!   contiguous shards, ticked in place by a persistent
+//!   [`WorkerPool`](crate::util::parallel::WorkerPool) with one fork/join
+//!   per control period (the default, allocation-free fast path);
+//! * [`coordinator`] — the lockstep fleet drivers ([`run_fleet`] on the
+//!   executor, [`run_fleet_threaded`] on the legacy protocol) plus the
+//!   reallocation epoch loop feeding a
 //!   [`BudgetPolicy`](crate::control::budget::BudgetPolicy).
 //!
 //! The layering mirrors the single-node honesty rule: the budget layer only
@@ -19,7 +24,9 @@
 //! [`NodeReport`]: crate::control::budget::NodeReport
 
 pub mod coordinator;
+pub mod executor;
 pub mod node;
 
-pub use coordinator::{run_fleet, FleetConfig, FleetOutcome};
-pub use node::{BudgetedPolicy, NodePolicySpec, NodeSpec};
+pub use coordinator::{run_fleet, run_fleet_threaded, FleetConfig, FleetOutcome};
+pub use executor::ShardedExecutor;
+pub use node::{BudgetedPolicy, NodePolicySpec, NodeSpec, WorkerConfig};

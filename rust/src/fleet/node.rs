@@ -1,13 +1,18 @@
-//! Fleet node workers: one thread per simulated node, each running its own
-//! [`ControlLoop`] engine (the same engine as the daemon and the campaign
-//! drivers) under a budget ceiling set by the coordinator.
+//! Per-node fleet building blocks: the [`BudgetedPolicy`] (a PI below a
+//! movable budget ceiling), the report/record finalization shared by both
+//! fleet execution paths, and the **legacy** one-thread-per-node worker
+//! protocol.
 //!
-//! Protocol: the coordinator broadcasts lockstep [`Cmd::Tick`] commands (so
-//! results are bit-reproducible regardless of thread scheduling — every
-//! node's virtual clock advances in step) and occasional [`Cmd::SetLimit`]
-//! updates; each tick the worker replies with a [`NodeReport`] for the
-//! budget layer. On [`Cmd::Stop`] the worker returns its full [`RunRecord`]
-//! through its join handle.
+//! Legacy protocol: the coordinator broadcasts lockstep [`Cmd::Tick`]
+//! commands (so results are bit-reproducible regardless of thread
+//! scheduling — every node's virtual clock advances in step) and
+//! occasional [`Cmd::SetLimit`] updates; each tick the worker replies with
+//! a [`NodeReport`] for the budget layer. On [`Cmd::Stop`] the worker
+//! returns its full [`RunRecord`] through its join handle. The default
+//! path is the sharded executor in [`crate::fleet::executor`], which drives
+//! the same engines in place — `node_report`/`finalize_record` here are the
+//! single source of truth both paths share, so their outputs stay
+//! byte-identical.
 
 use std::sync::mpsc;
 use std::thread::JoinHandle;
@@ -17,9 +22,35 @@ use crate::control::budget::NodeReport;
 use crate::control::pi::{PiConfig, PiController};
 use crate::coordinator::engine::{ControlLoop, LockstepBackend};
 use crate::coordinator::records::RunRecord;
+use crate::ident::static_model::{StaticModel, StaticPoint};
 use crate::ident::DynamicModel;
 use crate::sim::cluster::{Cluster, ClusterId};
 use crate::sim::node::NodeSim;
+
+/// The exact fitted model a perfect (noise-free) identification campaign
+/// would produce for `id` — test/bench support shared by the fleet unit
+/// tests and the executor-equivalence integration test, so both fit the
+/// same model. Hidden from docs: real experiments must keep identifying
+/// from noisy campaigns (the honesty rule, DESIGN.md §2).
+#[doc(hidden)]
+pub fn noise_free_model(id: ClusterId) -> DynamicModel {
+    let c = Cluster::get(id);
+    let points: Vec<StaticPoint> = (0..60)
+        .map(|i| {
+            let pcap = c.pcap_min + i as f64 * ((c.pcap_max - c.pcap_min) / 59.0);
+            StaticPoint {
+                pcap,
+                power: c.expected_power(pcap),
+                progress: c.static_progress(pcap),
+            }
+        })
+        .collect();
+    DynamicModel {
+        static_model: StaticModel::fit(&points),
+        tau: c.tau,
+        rmse: 0.0,
+    }
+}
 
 /// How a fleet node regulates itself below its ceiling.
 #[derive(Debug, Clone)]
@@ -155,12 +186,65 @@ pub(crate) struct WorkerHandle {
     pub join: JoinHandle<RunRecord>,
 }
 
-/// Per-worker run parameters (the coordinator's config, flattened).
+/// Per-node run parameters (the coordinator's config, flattened). Shared
+/// by the legacy per-node-thread protocol and the sharded executor.
 #[derive(Debug, Clone, Copy)]
-pub(crate) struct WorkerConfig {
+pub struct WorkerConfig {
     pub period: f64,
     pub total_beats: u64,
     pub max_time: f64,
+}
+
+/// Build the per-tick report the budget layer sees. One function used by
+/// both fleet execution paths, so their reports are byte-identical.
+pub(crate) fn node_report(
+    node_id: u32,
+    engine: &ControlLoop<LockstepBackend>,
+    policy: &BudgetedPolicy,
+    cluster: &Cluster,
+) -> NodeReport {
+    let last = engine.samples().last();
+    NodeReport {
+        node_id,
+        limit: policy.limit(),
+        pcap: last.map(|s| s.pcap).unwrap_or(policy.initial_pcap()),
+        power: last.map(|s| s.power).unwrap_or(f64::NAN),
+        progress: last.map(|s| s.progress).unwrap_or(0.0),
+        setpoint: policy.setpoint(),
+        pcap_min: cluster.pcap_min,
+        pcap_max: cluster.pcap_max,
+        done: engine.finished(),
+    }
+}
+
+/// Finalize a node's [`RunRecord`] after the drive loop stops. One function
+/// used by both fleet execution paths, so their records are byte-identical.
+///
+/// Termination convention (same as `run_closed_loop`): a timeout reports
+/// exactly `max_time` (the timeout tick itself can land past it when
+/// `max_time` is not a period multiple); a coordinator stop reports the
+/// last sample time.
+pub(crate) fn finalize_record(
+    engine: &ControlLoop<LockstepBackend>,
+    policy: &BudgetedPolicy,
+    cluster: &Cluster,
+    seed: u64,
+    cfg: WorkerConfig,
+) -> RunRecord {
+    let mut rec = engine.record();
+    rec.cluster = cluster.id.name().to_string();
+    rec.policy = policy.name();
+    rec.seed = seed;
+    rec.epsilon = policy.epsilon();
+    rec.setpoint = policy.setpoint();
+    rec.completed = engine.finish_time().is_some();
+    rec.exec_time = match engine.finish_time() {
+        Some(t) => t,
+        None if engine.timed_out() => cfg.max_time,
+        None => engine.samples().last().map(|s| s.time).unwrap_or(0.0),
+    };
+    rec.beats = engine.total_beats().min(cfg.total_beats);
+    rec
 }
 
 pub(crate) fn spawn_worker(
@@ -190,18 +274,7 @@ pub(crate) fn spawn_worker(
                     if !engine.finished() {
                         engine.tick(now, &mut policy);
                     }
-                    let last = engine.samples().last();
-                    let report = NodeReport {
-                        node_id,
-                        limit: policy.limit(),
-                        pcap: last.map(|s| s.pcap).unwrap_or(policy.initial_pcap()),
-                        power: last.map(|s| s.power).unwrap_or(f64::NAN),
-                        progress: last.map(|s| s.progress).unwrap_or(0.0),
-                        setpoint: policy.setpoint(),
-                        pcap_min: cluster.pcap_min,
-                        pcap_max: cluster.pcap_max,
-                        done: engine.finished(),
-                    };
+                    let report = node_report(node_id, &engine, &policy, &cluster);
                     if reply_tx.send(Reply { report }).is_err() {
                         break; // coordinator gone
                     }
@@ -209,24 +282,7 @@ pub(crate) fn spawn_worker(
             }
         }
 
-        let mut rec = engine.record();
-        rec.cluster = cluster.id.name().to_string();
-        rec.policy = policy.name();
-        rec.seed = seed;
-        rec.epsilon = policy.epsilon();
-        rec.setpoint = policy.setpoint();
-        rec.completed = engine.finish_time().is_some();
-        // Same finalization convention as run_closed_loop: a timeout
-        // reports exactly max_time (the timeout tick itself can land past
-        // it when max_time is not a period multiple); a coordinator stop
-        // reports the last sample time.
-        rec.exec_time = match engine.finish_time() {
-            Some(t) => t,
-            None if engine.timed_out() => cfg.max_time,
-            None => engine.samples().last().map(|s| s.time).unwrap_or(0.0),
-        };
-        rec.beats = engine.total_beats().min(cfg.total_beats);
-        rec
+        finalize_record(&engine, &policy, &cluster, seed, cfg)
     });
     WorkerHandle { cmd: cmd_tx, join }
 }
@@ -234,25 +290,9 @@ pub(crate) fn spawn_worker(
 #[cfg(test)]
 pub(crate) mod tests {
     use super::*;
-    use crate::ident::static_model::{StaticModel, StaticPoint};
 
     pub(crate) fn fitted(id: ClusterId) -> DynamicModel {
-        let c = Cluster::get(id);
-        let points: Vec<StaticPoint> = (0..60)
-            .map(|i| {
-                let pcap = c.pcap_min + i as f64 * ((c.pcap_max - c.pcap_min) / 59.0);
-                StaticPoint {
-                    pcap,
-                    power: c.expected_power(pcap),
-                    progress: c.static_progress(pcap),
-                }
-            })
-            .collect();
-        DynamicModel {
-            static_model: StaticModel::fit(&points),
-            tau: c.tau,
-            rmse: 0.0,
-        }
+        noise_free_model(id)
     }
 
     #[test]

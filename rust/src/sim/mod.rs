@@ -29,4 +29,4 @@ pub mod rapl;
 
 pub use clock::VirtualClock;
 pub use cluster::{Cluster, ClusterId};
-pub use node::{NodeSim, NodeSensors};
+pub use node::{NodeSensors, NodeSim, StepSensors};

@@ -41,6 +41,25 @@ pub struct NodeSensors {
     pub drop_active: bool,
 }
 
+/// Sensor snapshot returned by [`NodeSim::step_into`]: identical to
+/// [`NodeSensors`] except heartbeats land in the caller's reusable buffer —
+/// the allocation-free variant the control hot path uses.
+#[derive(Debug, Clone, Copy)]
+pub struct StepSensors {
+    /// Simulation time at the end of the step [s].
+    pub time: f64,
+    /// Requested (clamped) power cap [W].
+    pub pcap: f64,
+    /// Measured per-package power [W] (noisy sensor).
+    pub power: f64,
+    /// Node energy counter [J].
+    pub energy: f64,
+    /// True instantaneous progress [Hz] (oracle only).
+    pub true_progress: f64,
+    /// Whether a drop event is active (oracle/debug only).
+    pub drop_active: bool,
+}
+
 /// Per-beat interval jitter coefficient of variation. Deliberately includes
 /// occasional heavy-tailed outliers so the median-vs-mean choice in Eq. (1)
 /// is observable in tests.
@@ -133,18 +152,38 @@ impl NodeSim {
     }
 
     /// Advance the node by `dt` seconds with sub-stepping for numerical
-    /// fidelity of the plant ODE and heartbeat timestamps.
+    /// fidelity of the plant ODE and heartbeat timestamps. Convenience
+    /// wrapper over [`NodeSim::step_into`] that allocates a fresh heartbeat
+    /// vector per call; the control hot path uses `step_into` directly with
+    /// a reused buffer.
     pub fn step(&mut self, dt: f64) -> NodeSensors {
-        assert!(dt > 0.0, "step must advance time");
-        // Sub-step at ≤50 ms so heartbeat timestamps within the step are
-        // accurate and the RAPL window lag is resolved.
-        let n_sub = (dt / 0.05).ceil().max(1.0) as usize;
-        let h = dt / n_sub as f64;
         // §Perf: pre-size for the expected beat count (plant rate × dt) —
         // node.step dominates campaign wall time and repeated Vec growth
         // showed up in the profile.
         let expected = (self.plant.progress() * dt) as usize + 4;
         let mut heartbeats = Vec::with_capacity(expected);
+        let s = self.step_into(dt, &mut heartbeats);
+        NodeSensors {
+            time: s.time,
+            pcap: s.pcap,
+            power: s.power,
+            energy: s.energy,
+            heartbeats,
+            true_progress: s.true_progress,
+            drop_active: s.drop_active,
+        }
+    }
+
+    /// Advance the node by `dt` seconds, appending the heartbeat timestamps
+    /// emitted during the step to `beats` (the caller's reusable buffer —
+    /// this path performs no allocation once the buffer has reached its
+    /// high-water capacity).
+    pub fn step_into(&mut self, dt: f64, beats: &mut Vec<f64>) -> StepSensors {
+        assert!(dt > 0.0, "step must advance time");
+        // Sub-step at ≤50 ms so heartbeat timestamps within the step are
+        // accurate and the RAPL window lag is resolved.
+        let n_sub = (dt / 0.05).ceil().max(1.0) as usize;
+        let h = dt / n_sub as f64;
         let mut power_reading = 0.0;
         for _ in 0..n_sub {
             self.time += h;
@@ -179,17 +218,16 @@ impl NodeSim {
                 let interval = (nominal - self.last_beat).max(1e-9);
                 let t = (self.last_beat + interval * (1.0 + jitter).max(0.05)).min(self.time);
                 let t = t.max(self.last_beat); // keep monotone
-                heartbeats.push(t);
+                beats.push(t);
                 self.last_beat = t;
                 self.beats += 1;
             }
         }
-        NodeSensors {
+        StepSensors {
             time: self.time,
             pcap: self.package.cap(),
             power: power_reading,
             energy: self.energy.read(),
-            heartbeats,
             true_progress: self.plant.progress(),
             drop_active: self.last_dist.drop_active,
         }
@@ -353,6 +391,23 @@ mod tests {
         }
         assert_eq!(n.energy(), s.energy, "energy read mutated the counter");
         assert_eq!(n.time(), s.time);
+    }
+
+    #[test]
+    fn step_into_matches_step_and_appends() {
+        let mut a = node(ClusterId::Dahu, 11);
+        let mut b = node(ClusterId::Dahu, 11);
+        let mut buf = vec![-1.0]; // pre-existing content must be preserved
+        for i in 0..30 {
+            let sa = a.step(1.0);
+            let mark = buf.len();
+            let sb = b.step_into(1.0, &mut buf);
+            assert_eq!(sa.power, sb.power);
+            assert_eq!(sa.energy, sb.energy);
+            assert_eq!(sa.time, sb.time);
+            assert_eq!(sa.heartbeats, buf[mark..], "step {i}");
+        }
+        assert_eq!(buf[0], -1.0, "step_into clobbered the caller's buffer");
     }
 
     #[test]

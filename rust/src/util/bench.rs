@@ -13,8 +13,17 @@
 use std::hint::black_box as std_black_box;
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
+
 pub fn black_box<T>(x: T) -> T {
     std_black_box(x)
+}
+
+/// True when the CI smoke mode is active (`POWERCTL_BENCH_SMOKE=1`): bench
+/// binaries shrink iteration counts and fleet sizes so the whole suite
+/// finishes in seconds while still exercising every code path.
+pub fn smoke() -> bool {
+    std::env::var_os("POWERCTL_BENCH_SMOKE").is_some()
 }
 
 /// Result of one benchmark.
@@ -84,11 +93,30 @@ impl Default for Bench {
 impl Bench {
     /// For slow (seconds-long) end-to-end benches: no warmup, few iters.
     pub fn endtoend() -> Self {
+        if smoke() {
+            return Bench {
+                warmup: Duration::ZERO,
+                measure: Duration::from_millis(200),
+                max_iterations: 2,
+            };
+        }
         Bench {
             warmup: Duration::ZERO,
             measure: Duration::from_secs(2),
             max_iterations: 5,
         }
+    }
+
+    /// The default config, capped down hard under CI smoke mode.
+    pub fn scaled() -> Self {
+        if smoke() {
+            return Bench {
+                warmup: Duration::from_millis(20),
+                measure: Duration::from_millis(100),
+                max_iterations: 500,
+            };
+        }
+        Bench::default()
     }
 
     /// Run `f` repeatedly, print one report line, return the stats.
@@ -140,6 +168,54 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Accumulates bench results into the machine-readable CI artifact
+/// (`BENCH_l3.json`): one entry per bench (`name`, `mean_ns`,
+/// `ops_per_sec`) plus free-form derived metrics (`name`, `value`) such as
+/// node-ticks/s or steady-state allocation counts.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    entries: Vec<Json>,
+}
+
+impl Report {
+    pub fn new() -> Self {
+        Report::default()
+    }
+
+    /// Record one bench result.
+    pub fn add(&mut self, r: &BenchResult) {
+        let mut j = Json::obj();
+        j.set("name", r.name.as_str())
+            .set("mean_ns", r.mean.as_nanos() as f64)
+            .set("ops_per_sec", r.ops_per_sec());
+        self.entries.push(j);
+    }
+
+    /// Record a derived scalar metric.
+    pub fn add_metric(&mut self, name: &str, value: f64) {
+        let mut j = Json::obj();
+        j.set("name", name).set("value", value);
+        self.entries.push(j);
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.entries.clone())
+    }
+
+    /// Write the report as pretty JSON.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().pretty())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,6 +241,30 @@ mod tests {
         let b = Bench::endtoend();
         let r = b.run("sleepy", || std::thread::sleep(Duration::from_millis(1)));
         assert!(r.iterations <= 5);
+    }
+
+    #[test]
+    fn report_is_valid_parseable_json() {
+        let b = Bench {
+            warmup: Duration::ZERO,
+            measure: Duration::from_millis(10),
+            max_iterations: 100,
+        };
+        let mut report = Report::new();
+        let r = b.run("tiny", || {
+            black_box(1 + 1);
+        });
+        report.add(&r);
+        report.add_metric("node_ticks_per_s", 1.25e6);
+        assert_eq!(report.len(), 2);
+        let parsed = Json::parse(&report.to_json().pretty()).unwrap();
+        let arr = parsed.as_arr().unwrap();
+        assert_eq!(arr[0].get("name").unwrap().as_str(), Some("tiny"));
+        assert!(arr[0].get("mean_ns").unwrap().as_f64().unwrap() >= 0.0);
+        // ops_per_sec may serialize as null for a 0 ns mean (infinite
+        // rate); it must still be present.
+        assert!(arr[0].get("ops_per_sec").is_some());
+        assert_eq!(arr[1].get("value").unwrap().as_f64(), Some(1.25e6));
     }
 
     #[test]

@@ -1,20 +1,283 @@
-//! Deterministic fork/join parallelism for campaign sweeps.
+//! Deterministic fork/join parallelism: a persistent [`WorkerPool`] plus
+//! the one-shot [`par_map`] built on it.
 //!
 //! Evaluation campaigns (fig7, the fleet sweeps) are embarrassingly
 //! parallel: every run is seeded independently and writes nothing shared.
-//! `rayon` is not in the vendored crate set, so [`par_map`] provides the one
-//! primitive the sweeps need: map a function over owned items on all cores,
-//! returning results **in input order** (determinism rule: parallelism must
-//! never change bytes, only wall time).
+//! The fleet executor is *periodically* parallel: the same node shards are
+//! ticked once per simulated second, so re-spawning OS threads every period
+//! would dominate the hot path. `rayon` is not in the vendored crate set,
+//! so this module provides the two primitives those callers need:
+//!
+//! * [`WorkerPool`] — a persistent pool with a fork/join
+//!   [`broadcast`](WorkerPool::broadcast) and a
+//!   [`par_chunks_mut`](WorkerPool::par_chunks_mut) that hands disjoint
+//!   `&mut` chunks of one slice to the workers (no channels, no per-item
+//!   locks, no allocation per call);
+//! * [`par_map`] — map a function over owned items on all cores, returning
+//!   results **in input order**.
+//!
+//! Determinism rule: parallelism must never change bytes, only wall time.
+//! Both primitives uphold it structurally — workers touch disjoint state
+//! claimed through an atomic index, so results cannot depend on scheduling.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
 
 /// Number of worker threads to use (the machine's parallelism).
 pub fn default_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
+}
+
+/// Type-erased `&&(dyn Fn(usize) + Sync)`: the thin `data` pointer points
+/// at the fat reference living on the broadcasting caller's stack.
+#[derive(Clone, Copy)]
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+}
+
+// SAFETY: the pointee is a `&(dyn Fn + Sync)` whose referent is Sync, and
+// `broadcast` keeps it alive until every worker has finished the call.
+unsafe impl Send for Job {}
+
+unsafe fn call_erased(data: *const (), index: usize) {
+    // SAFETY: `data` was produced in `broadcast` from
+    // `&f as *const &(dyn Fn(usize) + Sync)`; the reference it points at
+    // outlives the call (see `broadcast`).
+    let f = unsafe { *(data as *const &(dyn Fn(usize) + Sync)) };
+    f(index);
+}
+
+/// Current job slot, guarded by `PoolState::job`.
+struct JobCell {
+    /// Bumped once per broadcast; workers run the job when it advances.
+    generation: u64,
+    job: Option<Job>,
+    shutdown: bool,
+}
+
+/// Join-side state, guarded by `PoolState::sync`.
+struct SyncState {
+    /// Workers still running the current generation.
+    active: usize,
+    /// First worker panic of the current generation (re-raised at join).
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+struct PoolState {
+    job: Mutex<JobCell>,
+    start: Condvar,
+    sync: Mutex<SyncState>,
+    done: Condvar,
+}
+
+/// A persistent fork/join worker pool. One broadcast wakes every worker
+/// exactly once and returns when all of them have finished — the only
+/// synchronization is two mutex/condvar pairs, so a steady-state fork/join
+/// allocates nothing.
+pub struct WorkerPool {
+    state: Arc<PoolState>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+fn worker_loop(state: &PoolState, index: usize) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut cell = state.job.lock().unwrap();
+            loop {
+                if cell.shutdown {
+                    return;
+                }
+                if cell.generation != seen {
+                    seen = cell.generation;
+                    break cell.job.expect("pool generation advanced without a job");
+                }
+                cell = state.start.wait(cell).unwrap();
+            }
+        };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // SAFETY: `broadcast` does not return until every worker has
+            // finished this generation, so the closure behind `job.data`
+            // is still alive here.
+            unsafe { (job.call)(job.data, index) }
+        }));
+        let mut sync = state.sync.lock().unwrap();
+        if let Err(payload) = result {
+            if sync.panic.is_none() {
+                sync.panic = Some(payload);
+            }
+        }
+        sync.active -= 1;
+        if sync.active == 0 {
+            state.done.notify_all();
+        }
+    }
+}
+
+impl WorkerPool {
+    /// Spawn a pool of `threads` persistent workers (at least one).
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let state = Arc::new(PoolState {
+            job: Mutex::new(JobCell {
+                generation: 0,
+                job: None,
+                shutdown: false,
+            }),
+            start: Condvar::new(),
+            sync: Mutex::new(SyncState {
+                active: 0,
+                panic: None,
+            }),
+            done: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let st = state.clone();
+                std::thread::spawn(move || worker_loop(&st, i))
+            })
+            .collect();
+        WorkerPool { state, workers }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Fork/join: run `f(worker_index)` once on every worker and return
+    /// when all have finished. A panic in any worker is re-raised here
+    /// after the join (the pool itself stays usable).
+    pub fn broadcast(&mut self, f: &(dyn Fn(usize) + Sync)) {
+        let n = self.workers.len();
+        {
+            let mut sync = self.state.sync.lock().unwrap();
+            debug_assert_eq!(sync.active, 0, "overlapping broadcast");
+            sync.active = n;
+        }
+        {
+            let mut cell = self.state.job.lock().unwrap();
+            cell.generation = cell.generation.wrapping_add(1);
+            cell.job = Some(Job {
+                data: &f as *const &(dyn Fn(usize) + Sync) as *const (),
+                call: call_erased,
+            });
+            self.state.start.notify_all();
+        }
+        let panic = {
+            let mut sync = self.state.sync.lock().unwrap();
+            while sync.active > 0 {
+                sync = self.state.done.wait(sync).unwrap();
+            }
+            sync.panic.take()
+        };
+        // Drop the (now dangling-to-be) job pointer before returning.
+        self.state.job.lock().unwrap().job = None;
+        if let Some(payload) = panic {
+            std::panic::resume_unwind(payload);
+        }
+    }
+
+    /// Process `items` in contiguous chunks of (at most) `chunk` elements:
+    /// workers claim chunk indices through an atomic counter and receive
+    /// disjoint `&mut` sub-slices — `f(start_index, chunk_slice)`. Every
+    /// element is visited exactly once; no per-call allocation.
+    pub fn par_chunks_mut<T, F>(&mut self, items: &mut [T], chunk: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        let n = items.len();
+        if n == 0 {
+            return;
+        }
+        let chunk = chunk.max(1);
+        let n_chunks = n.div_ceil(chunk);
+        let next = AtomicUsize::new(0);
+        let base = SendPtr(items.as_mut_ptr());
+        self.broadcast(&|_worker| loop {
+            let ci = next.fetch_add(1, Ordering::Relaxed);
+            if ci >= n_chunks {
+                break;
+            }
+            let start = ci * chunk;
+            let len = chunk.min(n - start);
+            // SAFETY: chunk indices are claimed exactly once, so these
+            // sub-slices are disjoint across workers, and `broadcast`
+            // joins every worker before the borrow of `items` ends.
+            let slice = unsafe { std::slice::from_raw_parts_mut(base.get().add(start), len) };
+            f(start, slice);
+        });
+    }
+
+    /// Order-preserving parallel map over owned items (the engine behind
+    /// [`par_map`]). Indices are claimed through an atomic counter; each
+    /// item is taken from and each result written to its own slot through
+    /// disjoint `&mut` access — no per-item locks.
+    pub fn map_vec<T, R, F>(&mut self, items: Vec<T>, f: &F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(T) -> R + Sync,
+    {
+        let n = items.len();
+        let mut slots: Vec<Option<T>> = items.into_iter().map(Some).collect();
+        let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let next = AtomicUsize::new(0);
+        let src = SendPtr(slots.as_mut_ptr());
+        let dst = SendPtr(results.as_mut_ptr());
+        self.broadcast(&|_worker| loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= n {
+                break;
+            }
+            // SAFETY: each index is claimed exactly once via `next`, so
+            // slot accesses are disjoint across workers, and `broadcast`
+            // joins before `slots`/`results` are touched again. Taking in
+            // place (not `ptr::read`) keeps every slot valid if `f`
+            // panics mid-run.
+            let item = unsafe { (*src.get().add(i)).take().expect("slot claimed twice") };
+            let r = f(item);
+            unsafe {
+                *dst.get().add(i) = Some(r);
+            }
+        });
+        results
+            .into_iter()
+            .map(|r| r.expect("par_map slot not filled"))
+            .collect()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut cell = self.state.job.lock().unwrap();
+            cell.shutdown = true;
+            self.state.start.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Raw-pointer wrapper asserting that cross-thread access is externally
+/// synchronized (disjoint index claims bounded by a fork/join).
+struct SendPtr<T>(*mut T);
+
+// SAFETY: every use above guarantees disjoint access plus a join barrier
+// before the pointee is reused.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    fn get(&self) -> *mut T {
+        self.0
+    }
 }
 
 /// Map `f` over `items` on up to [`default_threads`] threads, preserving
@@ -30,36 +293,7 @@ where
     if threads <= 1 || items.len() <= 1 {
         return items.into_iter().map(f).collect();
     }
-
-    let n = items.len();
-    // Work queue: each slot is taken exactly once, tagged with its index so
-    // results land back in input order regardless of scheduling.
-    let slots: Vec<Mutex<Option<T>>> = items.into_iter().map(|x| Mutex::new(Some(x))).collect();
-    let next = AtomicUsize::new(0);
-    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
-
-    std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(threads);
-        for _ in 0..threads {
-            handles.push(scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let item = slots[i].lock().unwrap().take().expect("slot taken twice");
-                let r = f(item);
-                *results[i].lock().unwrap() = Some(r);
-            }));
-        }
-        for h in handles {
-            h.join().expect("par_map worker panicked");
-        }
-    });
-
-    results
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("par_map slot not filled"))
-        .collect()
+    WorkerPool::new(threads).map_vec(items, &f)
 }
 
 #[cfg(test)]
@@ -99,9 +333,75 @@ mod tests {
 
     #[test]
     fn uses_threads_without_deadlock() {
-        // Just exercise the scoped-thread path with more items than cores.
+        // Just exercise the pool path with more items than cores.
         let out = par_map((0..1000u32).collect::<Vec<_>>(), |x| x % 7);
         assert_eq!(out.len(), 1000);
         assert_eq!(out[13], 6);
+    }
+
+    #[test]
+    fn pool_broadcast_runs_every_worker_and_is_reusable() {
+        let mut pool = WorkerPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        for _ in 0..10 {
+            let hits: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(0)).collect();
+            pool.broadcast(&|w| {
+                hits[w].fetch_add(1, Ordering::Relaxed);
+            });
+            for h in &hits {
+                assert_eq!(h.load(Ordering::Relaxed), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_visits_every_element_once() {
+        let mut pool = WorkerPool::new(3);
+        for (n, chunk) in [(103usize, 10usize), (7, 100), (64, 1), (1, 1), (0, 4)] {
+            let mut xs: Vec<u64> = (0..n as u64).collect();
+            pool.par_chunks_mut(&mut xs, chunk, |start, sl| {
+                for (off, x) in sl.iter_mut().enumerate() {
+                    assert_eq!(*x, (start + off) as u64, "wrong slice offset");
+                    *x += 1000;
+                }
+            });
+            assert!(
+                xs.iter().enumerate().all(|(i, &x)| x == i as u64 + 1000),
+                "n={n} chunk={chunk}: {xs:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_works() {
+        let mut pool = WorkerPool::new(1);
+        let mut xs = vec![1u32; 50];
+        pool.par_chunks_mut(&mut xs, 8, |_, sl| {
+            for x in sl {
+                *x *= 2;
+            }
+        });
+        assert!(xs.iter().all(|&x| x == 2));
+        let ys = pool.map_vec(vec![1, 2, 3], &|x: i32| x * x);
+        assert_eq!(ys, vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn pool_survives_worker_panic() {
+        let mut pool = WorkerPool::new(2);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.broadcast(&|w| {
+                if w == 0 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err(), "worker panic was swallowed");
+        // The pool stays usable after a panicked generation.
+        let done = AtomicUsize::new(0);
+        pool.broadcast(&|_| {
+            done.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(done.load(Ordering::Relaxed), 2);
     }
 }

@@ -330,6 +330,39 @@ mod tests {
     }
 
     #[test]
+    fn prop_median_inplace_matches_sort_based() {
+        // Property: the quickselect median equals the sort-based one on
+        // random, duplicate-heavy, and constant (NaN-free) inputs — the
+        // hot-path replacement must be a pure optimization.
+        use crate::util::check::{check, Verdict};
+        check(
+            4242,
+            600,
+            |rng| {
+                let n = 1 + rng.below(64) as usize;
+                match rng.below(3) {
+                    // Duplicate-heavy: few distinct values, many ties.
+                    0 => (0..n).map(|_| rng.below(6) as f64).collect::<Vec<f64>>(),
+                    // All-equal degenerate input.
+                    1 => vec![rng.uniform(-10.0, 10.0); n],
+                    // Continuous random input.
+                    _ => (0..n).map(|_| rng.uniform(-1e3, 1e3)).collect(),
+                }
+            },
+            |xs| {
+                let mut buf = xs.clone();
+                let got = median_inplace(&mut buf);
+                let want = median(xs);
+                if (got - want).abs() < 1e-12 {
+                    Verdict::Pass
+                } else {
+                    Verdict::Fail(format!("median_inplace {got} != sort median {want}: {xs:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
     fn quantiles() {
         let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
         assert_eq!(quantile(&xs, 0.0), 1.0);
