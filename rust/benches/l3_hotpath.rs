@@ -24,11 +24,14 @@ use powerctl::coordinator::engine::{ControlLoop, LockstepBackend};
 use powerctl::coordinator::experiment::{run_closed_loop, RunConfig};
 use powerctl::coordinator::progress::ProgressAggregator;
 use powerctl::experiments::{identify, Ctx, Scale};
+use powerctl::control::node_budget::{ideal_device_model, DeviceCtl, DeviceSplitSpec, NodeBudgetController};
+use powerctl::coordinator::hetero::HeteroBackend;
 use powerctl::fleet::coordinator::node_seed;
 use powerctl::fleet::{
-    run_fleet, run_fleet_threaded, BudgetedPolicy, FleetConfig, NodePolicySpec, NodeSpec,
-    ShardedExecutor, WorkerConfig,
+    run_fleet, run_fleet_threaded, BudgetedPolicy, FleetConfig, NodeHardware, NodePolicySpec,
+    NodeSpec, ShardedExecutor, WorkerConfig,
 };
+use powerctl::sim::device::DeviceSpec;
 use powerctl::sim::cluster::{Cluster, ClusterId};
 use powerctl::sim::node::NodeSim;
 use powerctl::util::bench::{black_box, section, smoke, Bench, Report};
@@ -72,6 +75,7 @@ fn gros_specs(ident: &powerctl::experiments::Identified, n: usize, epsilon: f64)
             cluster: ClusterId::Gros,
             model: ident.model.clone(),
             policy: NodePolicySpec::Pi { epsilon },
+            hardware: NodeHardware::SingleCpu,
         })
         .collect()
 }
@@ -176,6 +180,7 @@ fn main() {
             cluster: ClusterId::Gros,
             model: ident.model.clone(),
             policy: NodePolicySpec::Pi { epsilon: 0.15 },
+            hardware: NodeHardware::SingleCpu,
         };
         let share = 95.0;
         let mut engines: Vec<(ControlLoop<LockstepBackend>, BudgetedPolicy)> = (0..NODES)
@@ -323,6 +328,71 @@ fn main() {
         assert_eq!(
             delta, 0,
             "steady-state fleet tick path allocated {delta} times"
+        );
+    }
+
+    section("hierarchical node tick (CPU+GPU device loop)");
+    {
+        // One hierarchical control period = device physics for both
+        // devices, per-device Eq. (1), the device-split budget epoch and
+        // two device PIs — the unit of work a hetero node repeats every
+        // simulated second. After warmup (trace logs pre-reserved, sinks
+        // and aggregator scratch at their high-water marks) the loop must
+        // allocate nothing.
+        let cluster = Cluster::get(ClusterId::Gros);
+        let cpu = DeviceSpec::cpu(&cluster);
+        let gpu = DeviceSpec::gpu();
+        let node = powerctl::sim::node::NodeSim::hetero(cluster.clone(), &[cpu.clone(), gpu.clone()], 42);
+        let ctl = NodeBudgetController::new(
+            DeviceSplitSpec::SlackShift.build(),
+            vec![
+                DeviceCtl::pi(&cpu, ideal_device_model(&cpu), 0.15, cpu.cap_max),
+                DeviceCtl::pi(&gpu, ideal_device_model(&gpu), 0.15, gpu.cap_max),
+            ],
+        );
+        let mut backend = HeteroBackend::new(node, ctl);
+        // Bound total ticks so the pre-reserved logs cover warmup, the
+        // timed section and the allocation-counted section.
+        let iters: u64 = if smoke() { 500 } else { 20_000 };
+        let counted: u64 = if smoke() { 200 } else { 2_000 };
+        let rows = 200 + iters as usize + counted as usize + 64;
+        backend.reserve_traces(rows);
+        let mut engine = ControlLoop::new(backend, 1.0);
+        engine.reserve_samples(rows);
+        let budget = 0.7 * (cpu.cap_max + gpu.cap_max);
+        engine.set_initial_pcap(budget);
+        let mut policy = powerctl::control::baseline::StaticCap { pcap: budget };
+        let mut now = 0.0;
+        // Warmup to high-water marks (sinks, aggregator scratch, beat buf).
+        for _ in 0..200 {
+            now += 1.0;
+            engine.tick(now, &mut policy);
+        }
+        let capped = Bench {
+            warmup: std::time::Duration::ZERO,
+            max_iterations: iters,
+            ..Bench::scaled()
+        };
+        let r = capped.run("hetero_node_tick_cpu_gpu_split_plus_pis", || {
+            now += 1.0;
+            black_box(engine.tick(now, &mut policy));
+        });
+        report.add(&r);
+        // Allocation check around a plain loop — Bench::run itself
+        // allocates (sample log, sort, report strings), so the counter
+        // must bracket only engine ticks (same pattern as the fleet
+        // steady-state section above).
+        let before = allocations();
+        for _ in 0..counted {
+            now += 1.0;
+            engine.tick(now, &mut policy);
+        }
+        let delta = allocations() - before;
+        println!("  allocations over {counted} steady-state hetero periods: {delta}");
+        report.add_metric("hetero_steady_state_allocations", delta as f64);
+        assert_eq!(
+            delta, 0,
+            "steady-state hierarchical tick path allocated {delta} times"
         );
     }
 

@@ -34,6 +34,7 @@ pub struct GainEstimator {
 }
 
 impl GainEstimator {
+    /// Estimator with an initial gain guess and exponential forgetting factor.
     pub fn new(initial_gain: f64, forgetting: f64) -> Self {
         assert!(initial_gain > 0.0);
         assert!((0.5..1.0).contains(&forgetting));
@@ -44,6 +45,7 @@ impl GainEstimator {
         }
     }
 
+    /// Current gain estimate [Hz per linearized-cap unit].
     pub fn gain(&self) -> f64 {
         self.k_hat
     }
@@ -80,6 +82,7 @@ pub struct AdaptivePi {
 }
 
 impl AdaptivePi {
+    /// Gain-scheduled PI from a fitted model (pole placement at `tau_obj`).
     pub fn new(model: DynamicModel, tau_obj: f64, epsilon: f64, pcap_min: f64, pcap_max: f64) -> Self {
         assert!((0.0..=0.9).contains(&epsilon));
         let k0 = model.static_model.k_l;
@@ -118,10 +121,12 @@ impl AdaptivePi {
         self.estimator.gain() * shape
     }
 
+    /// The progress setpoint `(1 - eps)*progress_max` [Hz].
     pub fn setpoint(&self) -> f64 {
         (1.0 - self.epsilon) * self.progress_max()
     }
 
+    /// The online gain estimate currently scheduling the PI.
     pub fn estimated_gain(&self) -> f64 {
         self.estimator.gain()
     }

@@ -18,6 +18,7 @@ pub trait Policy {
 /// reference for Fig. 7's "baseline execution").
 #[derive(Debug, Clone)]
 pub struct Uncontrolled {
+    /// The hardware maximum cap the policy pins [W].
     pub pcap_max: f64,
 }
 
@@ -34,6 +35,7 @@ impl Policy for Uncontrolled {
 /// so it cannot react to phases or disturbances.
 #[derive(Debug, Clone)]
 pub struct StaticCap {
+    /// The fixed cap chosen at job start [W].
     pub pcap: f64,
 }
 

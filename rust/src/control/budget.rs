@@ -23,6 +23,7 @@
 /// What one node's control loop reports to the budget layer each epoch.
 #[derive(Debug, Clone, Copy)]
 pub struct NodeReport {
+    /// Fleet-assigned node index (device index at node scope).
     pub node_id: u32,
     /// Ceiling currently allotted to this node [W].
     pub limit: f64,
@@ -36,6 +37,7 @@ pub struct NodeReport {
     pub setpoint: f64,
     /// Hardware actuator range [W].
     pub pcap_min: f64,
+    /// Upper end of the hardware actuator range [W].
     pub pcap_max: f64,
     /// The node's workload has completed.
     pub done: bool,
@@ -76,6 +78,25 @@ pub trait BudgetPolicy: Send {
 
     /// Allocating convenience wrapper around
     /// [`allocate_into`](BudgetPolicy::allocate_into).
+    ///
+    /// Every strategy upholds the shared invariants: ceilings stay inside
+    /// each node's hardware range and conserve the budget (hardware floors
+    /// win when the budget is infeasibly small).
+    ///
+    /// ```
+    /// use powerctl::control::budget::{BudgetPolicy, NodeReport, UniformBudget};
+    ///
+    /// let report = |node_id| NodeReport {
+    ///     node_id, limit: 100.0, pcap: 80.0, power: 72.0,
+    ///     progress: 21.0, setpoint: 21.0,
+    ///     pcap_min: 40.0, pcap_max: 120.0, done: false,
+    /// };
+    /// let reports = [report(0), report(1), report(2)];
+    /// let limits = UniformBudget.allocate(0.0, 270.0, &reports);
+    /// // An even split of 270 W over three identical nodes: 90 W each.
+    /// assert!(limits.iter().all(|&l| (l - 90.0).abs() < 1e-9));
+    /// assert!(limits.iter().sum::<f64>() <= 270.0 + 1e-9);
+    /// ```
     fn allocate(&mut self, t: f64, budget: f64, reports: &[NodeReport]) -> Vec<f64> {
         let mut limits = vec![0.0; reports.len()];
         self.allocate_into(t, budget, reports, &mut limits);
@@ -235,6 +256,7 @@ impl Default for GreedyRepack {
 }
 
 impl GreedyRepack {
+    /// Greedy repack keeping `margin` watts above demonstrated demand.
     pub fn with_margin(margin: f64) -> Self {
         GreedyRepack {
             margin,

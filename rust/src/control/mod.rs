@@ -8,15 +8,19 @@
 //! * [`baseline`] — uncontrolled and static-cap policies for the
 //!   evaluation's comparisons;
 //! * [`budget`] — cluster-level power-budget allocation across node-local
-//!   loops (the fleet extension).
+//!   loops (the fleet extension);
+//! * [`node_budget`] — the same budgeting shapes one level down: splitting
+//!   a node's cap across its devices (the hierarchical CPU+GPU extension).
 
 pub mod adaptive;
 pub mod antiwindup;
 pub mod baseline;
 pub mod budget;
+pub mod node_budget;
 pub mod pi;
 
 pub use adaptive::AdaptivePi;
 pub use baseline::{Policy, StaticCap, Uncontrolled};
 pub use budget::{BudgetPolicy, GreedyRepack, NodeReport, SlackProportional, UniformBudget};
+pub use node_budget::{DeviceCtl, DeviceMeasurement, DeviceSplitSpec, NodeBudgetController};
 pub use pi::{PiConfig, PiController};

@@ -1,0 +1,469 @@
+//! Node-level power budgeting across devices — the inner loop of the
+//! hierarchical (device → node → fleet) control stack.
+//!
+//! A heterogeneous node (CPU + GPU, …) receives **one** cap from the layer
+//! above — its fleet ceiling, or a fixed node budget — and must split it
+//! across devices whose marginal Hz/W differ and change with the workload
+//! phase (EcoShift's observation: shifting watts between CPU and GPU under
+//! a single node constraint beats any static split). This module reuses
+//! the fleet's [`BudgetPolicy`] shapes one level down:
+//!
+//! * each device runs its own controller below a movable *device ceiling*
+//!   ([`DeviceCtl`]: the paper's PI against a per-device ε-setpoint, or a
+//!   static pin — the device-scope mirror of `fleet::BudgetedPolicy`);
+//! * each period the [`NodeBudgetController`] assembles one device-scoped
+//!   [`NodeReport`] per device (measured cap, power, Eq. (1) progress —
+//!   never simulator ground truth) and lets a [`BudgetPolicy`] apportion
+//!   the node cap into device ceilings;
+//! * the same invariants hold as at fleet scope: ceilings within hardware
+//!   ranges, Σ ceilings ≤ max(node cap, Σ floors).
+//!
+//! The whole decision path is allocation-free (`decide_into` reuses
+//! per-controller scratch), so the hierarchical tick stays on the zero-
+//! allocation hot path pinned by `benches/l3_hotpath.rs`.
+
+use crate::control::budget::{BudgetPolicy, GreedyRepack, NodeReport, SlackProportional, UniformBudget};
+use crate::control::pi::{PiConfig, PiController};
+use crate::ident::static_model::{StaticModel, StaticPoint};
+use crate::ident::DynamicModel;
+use crate::sim::device::DeviceSpec;
+
+/// The exact fitted model a perfect (noise-free) identification campaign
+/// would produce for a device: 60 stratified points of the analytic
+/// characteristic, fitted by the same two-stage pipeline real campaigns
+/// use. Campaigns that care about identification error must still identify
+/// from noisy runs (the honesty rule, DESIGN.md §2) — this shortcut exists
+/// for device controllers whose identification is not the object of study.
+pub fn ideal_device_model(spec: &DeviceSpec) -> DynamicModel {
+    let points: Vec<StaticPoint> = (0..60)
+        .map(|i| {
+            let pcap = spec.cap_min + i as f64 * ((spec.cap_max - spec.cap_min) / 59.0);
+            StaticPoint {
+                pcap,
+                power: spec.expected_power(pcap),
+                progress: spec.static_progress(pcap),
+            }
+        })
+        .collect();
+    DynamicModel {
+        static_model: StaticModel::fit(&points),
+        tau: spec.tau,
+        rmse: 0.0,
+    }
+}
+
+/// Which [`BudgetPolicy`] shape splits the node cap across devices.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceSplitSpec {
+    /// Even split across devices (feedback-free reference).
+    Even,
+    /// Slack-proportional shifting: ceilings follow demonstrated need,
+    /// surplus flows to pinched devices (the EcoShift-style policy).
+    SlackShift,
+    /// Greedy repack: floors first, then top-up in deficit order.
+    GreedyRepack,
+}
+
+impl DeviceSplitSpec {
+    /// Every split strategy, campaign order.
+    pub const ALL: [DeviceSplitSpec; 3] = [
+        DeviceSplitSpec::Even,
+        DeviceSplitSpec::SlackShift,
+        DeviceSplitSpec::GreedyRepack,
+    ];
+
+    /// Campaign/CLI name of the strategy.
+    pub fn name(self) -> &'static str {
+        match self {
+            DeviceSplitSpec::Even => "even",
+            DeviceSplitSpec::SlackShift => "slack-shift",
+            DeviceSplitSpec::GreedyRepack => "greedy-repack",
+        }
+    }
+
+    /// Parse a campaign/CLI name.
+    pub fn parse(s: &str) -> Option<DeviceSplitSpec> {
+        DeviceSplitSpec::ALL.into_iter().find(|d| d.name() == s)
+    }
+
+    /// Instantiate the underlying [`BudgetPolicy`].
+    pub fn build(self) -> Box<dyn BudgetPolicy> {
+        match self {
+            DeviceSplitSpec::Even => Box::new(UniformBudget),
+            DeviceSplitSpec::SlackShift => Box::new(SlackProportional::default()),
+            DeviceSplitSpec::GreedyRepack => Box::new(GreedyRepack::default()),
+        }
+    }
+}
+
+impl std::fmt::Display for DeviceSplitSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One device's controller below a movable device ceiling — the
+/// device-scope mirror of the fleet's `BudgetedPolicy`: a PI tracking the
+/// device's ε-setpoint (tuned from a *fitted* device model), or a static
+/// pin at the ceiling.
+pub struct DeviceCtl {
+    ctl: Option<PiController>,
+    limit: f64,
+    hw_min: f64,
+    hw_max: f64,
+    setpoint: f64,
+    epsilon: f64,
+}
+
+impl DeviceCtl {
+    /// PI device controller at `epsilon`, tuned from `model` (pole
+    /// placement, τ_obj = 10 s as in the paper), starting below
+    /// `initial_limit`.
+    pub fn pi(spec: &DeviceSpec, model: DynamicModel, epsilon: f64, initial_limit: f64) -> Self {
+        let (hw_min, hw_max) = (spec.cap_min, spec.cap_max);
+        let limit = initial_limit.clamp(hw_min, hw_max);
+        let cfg = PiConfig::from_model(&model, 10.0, hw_min, hw_max);
+        let mut ctl = PiController::new(model, cfg, epsilon);
+        let setpoint = ctl.setpoint();
+        ctl.set_cap_range(hw_min, ceiling(limit, hw_min, hw_max));
+        DeviceCtl {
+            ctl: Some(ctl),
+            limit,
+            hw_min,
+            hw_max,
+            setpoint,
+            epsilon,
+        }
+    }
+
+    /// Feedback-free device controller: the cap is pinned at the ceiling.
+    pub fn pinned(spec: &DeviceSpec, initial_limit: f64) -> Self {
+        let (hw_min, hw_max) = (spec.cap_min, spec.cap_max);
+        DeviceCtl {
+            ctl: None,
+            limit: initial_limit.clamp(hw_min, hw_max),
+            hw_min,
+            hw_max,
+            setpoint: f64::NAN,
+            epsilon: f64::NAN,
+        }
+    }
+
+    /// Move the device ceiling; the PI's actuator range follows it, so the
+    /// ceiling gets the same anti-windup treatment as hardware saturation.
+    pub fn set_limit(&mut self, watts: f64) {
+        self.limit = watts.clamp(self.hw_min, self.hw_max);
+        if let Some(ctl) = &mut self.ctl {
+            ctl.set_cap_range(self.hw_min, ceiling(self.limit, self.hw_min, self.hw_max));
+        }
+    }
+
+    /// The device ceiling currently in force [W].
+    pub fn limit(&self) -> f64 {
+        self.limit
+    }
+
+    /// The device's progress setpoint [Hz] (NaN for pinned devices).
+    pub fn setpoint(&self) -> f64 {
+        self.setpoint
+    }
+
+    /// The device's ε (NaN for pinned devices).
+    pub fn epsilon(&self) -> f64 {
+        self.epsilon
+    }
+
+    /// Hardware cap range [W].
+    pub fn cap_range(&self) -> (f64, f64) {
+        (self.hw_min, self.hw_max)
+    }
+
+    /// One control period: measured device `progress` at `t` → device cap
+    /// [W], clamped below the ceiling.
+    pub fn decide(&mut self, t: f64, progress: f64) -> f64 {
+        match &mut self.ctl {
+            Some(ctl) => ctl.step(t, progress),
+            None => self.limit,
+        }
+    }
+}
+
+/// Keep the PI's actuator interval non-degenerate when the ceiling sits at
+/// the hardware floor (same guard as the fleet layer).
+fn ceiling(limit: f64, hw_min: f64, hw_max: f64) -> f64 {
+    limit.clamp(hw_min + 0.1, hw_max)
+}
+
+/// What the node layer measured about one device last period — the only
+/// signals the split may use (the honesty rule one level down: measured
+/// caps, power and Eq. (1) progress; never simulator ground truth).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DeviceMeasurement {
+    /// Cap the device controller applied last period [W].
+    pub pcap: f64,
+    /// Measured device power [W].
+    pub power: f64,
+    /// Per-device Eq. (1) progress [Hz].
+    pub progress: f64,
+}
+
+/// The per-node inner budget loop: splits the node cap into device
+/// ceilings with a [`BudgetPolicy`] over device-scoped reports, then lets
+/// each [`DeviceCtl`] decide its cap below its ceiling.
+pub struct NodeBudgetController {
+    split: Box<dyn BudgetPolicy>,
+    devices: Vec<DeviceCtl>,
+    /// Device-scoped report scratch (`node_id` holds the device index).
+    reports: Vec<NodeReport>,
+    /// Ceiling scratch written by the split policy.
+    limits: Vec<f64>,
+}
+
+impl NodeBudgetController {
+    /// Build from a split policy and one controller per device.
+    pub fn new(split: Box<dyn BudgetPolicy>, devices: Vec<DeviceCtl>) -> Self {
+        assert!(!devices.is_empty(), "node budget needs at least one device");
+        let n = devices.len();
+        let reports = devices
+            .iter()
+            .enumerate()
+            .map(|(i, d)| NodeReport {
+                node_id: i as u32,
+                limit: d.limit(),
+                pcap: d.limit(),
+                power: f64::NAN,
+                progress: 0.0,
+                setpoint: d.setpoint(),
+                pcap_min: d.cap_range().0,
+                pcap_max: d.cap_range().1,
+                done: false,
+            })
+            .collect();
+        NodeBudgetController {
+            split,
+            devices,
+            reports,
+            limits: vec![0.0; n],
+        }
+    }
+
+    /// Number of devices under this controller.
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// True when the controller manages no devices (never constructed so).
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// The device controllers, device order.
+    pub fn devices(&self) -> &[DeviceCtl] {
+        &self.devices
+    }
+
+    /// The split strategy's human-readable name.
+    pub fn split_name(&self) -> String {
+        self.split.name()
+    }
+
+    /// Sum of the device hardware ranges: the node-level cap range the
+    /// outer layer budgets against.
+    pub fn cap_range(&self) -> (f64, f64) {
+        let lo = self.devices.iter().map(|d| d.cap_range().0).sum();
+        let hi = self.devices.iter().map(|d| d.cap_range().1).sum();
+        (lo, hi)
+    }
+
+    /// Pre-measurement placement: split `node_cap` across devices in
+    /// proportion to their hardware maxima (every device starts at its
+    /// share's rail, §5.2's "initial powercap at the upper limit" one level
+    /// down) and pin each ceiling there. Writes the initial device caps
+    /// into `caps`.
+    pub fn initial_into(&mut self, node_cap: f64, caps: &mut [f64]) {
+        debug_assert_eq!(caps.len(), self.devices.len());
+        let total_max: f64 = self.devices.iter().map(|d| d.cap_range().1).sum();
+        for (d, cap) in self.devices.iter_mut().zip(caps.iter_mut()) {
+            let share = node_cap * d.cap_range().1 / total_max;
+            d.set_limit(share);
+            *cap = d.limit();
+        }
+    }
+
+    /// One inner epoch at time `t`: apportion `node_cap` into device
+    /// ceilings from last period's measurements, then let every device
+    /// controller decide its cap below its new ceiling. Writes one cap per
+    /// device into `caps`; allocation-free (scratch reuse throughout).
+    pub fn decide_into(
+        &mut self,
+        t: f64,
+        node_cap: f64,
+        meas: &[DeviceMeasurement],
+        caps: &mut [f64],
+    ) {
+        let n = self.devices.len();
+        debug_assert_eq!(meas.len(), n);
+        debug_assert_eq!(caps.len(), n);
+        for (i, (d, m)) in self.devices.iter().zip(meas).enumerate() {
+            self.reports[i] = NodeReport {
+                node_id: i as u32,
+                limit: d.limit(),
+                pcap: m.pcap,
+                power: m.power,
+                progress: m.progress,
+                setpoint: d.setpoint(),
+                pcap_min: d.cap_range().0,
+                pcap_max: d.cap_range().1,
+                done: false,
+            };
+        }
+        self.split
+            .allocate_into(t, node_cap, &self.reports, &mut self.limits);
+        for ((d, m), (&limit, cap)) in self
+            .devices
+            .iter_mut()
+            .zip(meas)
+            .zip(self.limits.iter().zip(caps.iter_mut()))
+        {
+            d.set_limit(limit);
+            *cap = d.decide(t, m.progress);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::cluster::{Cluster, ClusterId};
+
+    fn cpu_gpu() -> (DeviceSpec, DeviceSpec) {
+        (DeviceSpec::cpu(&Cluster::get(ClusterId::Gros)), DeviceSpec::gpu())
+    }
+
+    fn controller(split: DeviceSplitSpec, epsilon: f64) -> NodeBudgetController {
+        let (cpu, gpu) = cpu_gpu();
+        let devices = vec![
+            DeviceCtl::pi(&cpu, ideal_device_model(&cpu), epsilon, cpu.cap_max),
+            DeviceCtl::pi(&gpu, ideal_device_model(&gpu), epsilon, gpu.cap_max),
+        ];
+        NodeBudgetController::new(split.build(), devices)
+    }
+
+    #[test]
+    fn ideal_model_recovers_device_truth() {
+        let g = DeviceSpec::gpu();
+        let m = ideal_device_model(&g);
+        assert!((m.static_model.k_l - g.k_l).abs() / g.k_l < 1e-3);
+        assert!((m.static_model.a - g.cap_a).abs() < 1e-6);
+        assert!(m.static_model.r_squared > 0.999);
+        assert_eq!(m.tau, g.tau);
+    }
+
+    #[test]
+    fn split_spec_roundtrip() {
+        for s in DeviceSplitSpec::ALL {
+            assert_eq!(DeviceSplitSpec::parse(s.name()), Some(s));
+        }
+        assert_eq!(DeviceSplitSpec::parse("nope"), None);
+        assert_eq!(format!("{}", DeviceSplitSpec::SlackShift), "slack-shift");
+    }
+
+    #[test]
+    fn ceilings_respect_node_cap_and_ranges() {
+        let (cpu, gpu) = cpu_gpu();
+        for split in DeviceSplitSpec::ALL {
+            let mut ctl = controller(split, 0.15);
+            let mut caps = vec![0.0; 2];
+            ctl.initial_into(300.0, &mut caps);
+            let meas = [
+                DeviceMeasurement {
+                    pcap: caps[0],
+                    power: caps[0] * 0.9,
+                    progress: 10.0,
+                },
+                DeviceMeasurement {
+                    pcap: caps[1],
+                    power: caps[1] * 0.9,
+                    progress: 40.0,
+                },
+            ];
+            for t in 1..50 {
+                ctl.decide_into(t as f64, 300.0, &meas, &mut caps);
+                let limits: Vec<f64> = ctl.devices().iter().map(|d| d.limit()).collect();
+                let total: f64 = limits.iter().sum();
+                let floor = cpu.cap_min + gpu.cap_min;
+                assert!(
+                    total <= 300.0f64.max(floor) + 1e-6,
+                    "{split}: Σ ceilings {total} over node cap"
+                );
+                assert!(caps[0] <= limits[0] + 1e-9 && caps[0] >= cpu.cap_min - 1e-9);
+                assert!(caps[1] <= limits[1] + 1e-9 && caps[1] >= gpu.cap_min - 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn slack_shift_moves_watts_to_pinched_device() {
+        let mut ctl = controller(DeviceSplitSpec::SlackShift, 0.1);
+        let mut caps = vec![0.0; 2];
+        ctl.initial_into(260.0, &mut caps);
+        // CPU tracking with slack; GPU pinched at its ceiling, far short.
+        let gpu_sp = ctl.devices()[1].setpoint();
+        let cpu_sp = ctl.devices()[0].setpoint();
+        for t in 1..80 {
+            let meas = [
+                DeviceMeasurement {
+                    pcap: 55.0,
+                    power: 50.0,
+                    progress: cpu_sp,
+                },
+                DeviceMeasurement {
+                    pcap: ctl.devices()[1].limit(),
+                    power: ctl.devices()[1].limit() * 0.9,
+                    progress: 0.5 * gpu_sp,
+                },
+            ];
+            ctl.decide_into(t as f64, 260.0, &meas, &mut caps);
+        }
+        let cpu_limit = ctl.devices()[0].limit();
+        let gpu_limit = ctl.devices()[1].limit();
+        assert!(
+            gpu_limit > 180.0,
+            "pinched GPU not granted watts: {gpu_limit}"
+        );
+        assert!(cpu_limit < 80.0, "slack CPU kept its ceiling: {cpu_limit}");
+    }
+
+    #[test]
+    fn single_device_even_split_reduces_to_clamp() {
+        // The degenerate single-device case the equivalence test leans on:
+        // the device ceiling is exactly the clamped node cap and a pinned
+        // device applies it verbatim.
+        let cpu = DeviceSpec::cpu(&Cluster::get(ClusterId::Gros));
+        let mut ctl = NodeBudgetController::new(
+            DeviceSplitSpec::Even.build(),
+            vec![DeviceCtl::pinned(&cpu, cpu.cap_max)],
+        );
+        let mut caps = vec![0.0];
+        let meas = [DeviceMeasurement {
+            pcap: 120.0,
+            power: 100.0,
+            progress: 20.0,
+        }];
+        for (t, want) in [(1.0, 90.0), (2.0, 30.0), (3.0, 500.0)] {
+            ctl.decide_into(t, want, &meas, &mut caps);
+            assert_eq!(caps[0], want.clamp(cpu.cap_min, cpu.cap_max));
+        }
+    }
+
+    #[test]
+    fn pinned_device_has_nan_setpoint() {
+        let g = DeviceSpec::gpu();
+        let mut d = DeviceCtl::pinned(&g, 250.0);
+        assert!(d.setpoint().is_nan());
+        assert!(d.epsilon().is_nan());
+        assert_eq!(d.decide(1.0, 100.0), 250.0);
+        d.set_limit(150.0);
+        assert_eq!(d.decide(2.0, 100.0), 150.0);
+    }
+}

@@ -30,12 +30,36 @@ pub struct PiConfig {
     pub progress_max: f64,
     /// Actuator range [W].
     pub pcap_min: f64,
+    /// Upper end of the actuator range [W].
     pub pcap_max: f64,
 }
 
 impl PiConfig {
     /// Pole-placement tuning from a fitted model (paper §4.5). The paper
     /// uses τ_obj = 10 s (> 10·τ): non-aggressive, no oscillation.
+    ///
+    /// The gains follow directly from the fitted `(K_L, τ)` and the desired
+    /// closed-loop time constant: `K_P = τ/(K_L·τ_obj)`,
+    /// `K_I = 1/(K_L·τ_obj)`.
+    ///
+    /// ```
+    /// use powerctl::control::pi::PiConfig;
+    /// use powerctl::ident::{DynamicModel, StaticModel};
+    ///
+    /// let model = DynamicModel {
+    ///     static_model: StaticModel {
+    ///         a: 0.83, b: 7.07, alpha: 0.047, beta: 28.5, k_l: 25.6,
+    ///         r_squared: 1.0,
+    ///     },
+    ///     tau: 1.0 / 3.0,
+    ///     rmse: 0.0,
+    /// };
+    /// let cfg = PiConfig::from_model(&model, 10.0, 40.0, 120.0);
+    /// assert!((cfg.k_p - model.tau / (25.6 * 10.0)).abs() < 1e-15);
+    /// assert!((cfg.k_i - 1.0 / (25.6 * 10.0)).abs() < 1e-15);
+    /// // The setpoint reference is the model's progress at the max cap.
+    /// assert!((cfg.progress_max - model.static_model.predict(120.0)).abs() < 1e-12);
+    /// ```
     pub fn from_model(model: &DynamicModel, tau_obj: f64, pcap_min: f64, pcap_max: f64) -> Self {
         assert!(tau_obj > 0.0 && pcap_max > pcap_min);
         let k_l = model.static_model.k_l;
@@ -86,10 +110,12 @@ impl PiController {
         (1.0 - self.epsilon) * self.config.progress_max
     }
 
+    /// The degradation budget eps the controller was built with.
     pub fn epsilon(&self) -> f64 {
         self.epsilon
     }
 
+    /// The gains/references the controller runs with.
     pub fn config(&self) -> &PiConfig {
         &self.config
     }

@@ -34,7 +34,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 
 use crate::control::baseline::Policy;
 use crate::coordinator::progress::ProgressAggregator;
-use crate::coordinator::records::RunRecord;
+use crate::coordinator::records::{DeviceTrace, RunRecord};
 use crate::ident::signals::Plan;
 use crate::sim::clock::Clock;
 use crate::sim::node::NodeSim;
@@ -72,6 +72,20 @@ pub trait NodeBackend: Send {
     fn target_rate(&self) -> f64 {
         f64::NAN
     }
+
+    /// Hook called by [`ControlLoop::tick`] once per control period, after
+    /// the period's cap decision has been applied. Hierarchical backends
+    /// use it to stamp their per-device trace rows (same recording
+    /// convention as the node row: the cap *decided* this period);
+    /// single-plant backends ignore it.
+    fn note_period(&mut self, _now: f64) {}
+
+    /// Per-device traces recorded so far. Empty for single-plant backends
+    /// (the node series is the device series), so classic records stay
+    /// byte-identical.
+    fn device_traces(&self) -> Vec<DeviceTrace> {
+        Vec::new()
+    }
 }
 
 impl<T: NodeBackend + ?Sized> NodeBackend for Box<T> {
@@ -87,18 +101,28 @@ impl<T: NodeBackend + ?Sized> NodeBackend for Box<T> {
     fn target_rate(&self) -> f64 {
         (**self).target_rate()
     }
+    fn note_period(&mut self, now: f64) {
+        (**self).note_period(now)
+    }
+    fn device_traces(&self) -> Vec<DeviceTrace> {
+        (**self).device_traces()
+    }
 }
 
 /// One bookkeeping row per control period.
 #[derive(Debug, Clone, Copy)]
 pub struct PeriodRecord {
+    /// Sample time at the period end [s].
     pub time: f64,
     /// Cap decided this period (in force for the next one) [W].
     pub pcap: f64,
+    /// Measured power this period [W].
     pub power: f64,
+    /// Eq. (1) progress measured this period [Hz].
     pub progress: f64,
     /// Oracle progress (NaN on live paths).
     pub true_progress: f64,
+    /// Cumulative heartbeats observed up to this period.
     pub beats_total: u64,
 }
 
@@ -110,6 +134,7 @@ pub struct LockstepBackend {
 }
 
 impl LockstepBackend {
+    /// Wrap a simulated node for lockstep driving.
     pub fn new(node: NodeSim) -> Self {
         LockstepBackend {
             last_time: node.time(),
@@ -117,10 +142,12 @@ impl LockstepBackend {
         }
     }
 
+    /// The wrapped simulated node.
     pub fn node(&self) -> &NodeSim {
         &self.node
     }
 
+    /// Mutable access to the wrapped node (profile switches, oracle reads).
     pub fn node_mut(&mut self) -> &mut NodeSim {
         &mut self.node
     }
@@ -196,6 +223,7 @@ pub struct ControlLoop<B: NodeBackend> {
 }
 
 impl<B: NodeBackend> ControlLoop<B> {
+    /// Engine over `backend`, ticking every `period` seconds.
     pub fn new(backend: B, period: f64) -> Self {
         assert!(period > 0.0, "control period must be positive");
         ControlLoop {
@@ -219,6 +247,7 @@ impl<B: NodeBackend> ControlLoop<B> {
         self.node_id = id;
     }
 
+    /// The node id stamped on this loop's records.
     pub fn node_id(&self) -> u32 {
         self.node_id
     }
@@ -229,10 +258,12 @@ impl<B: NodeBackend> ControlLoop<B> {
         self.samples.reserve(periods.saturating_sub(self.samples.len()));
     }
 
+    /// Stop once this many heartbeats have been observed (`None`: no quota).
     pub fn set_quota(&mut self, quota: Option<u64>) {
         self.quota = quota;
     }
 
+    /// Hard stop: run time relative to the run start [s].
     pub fn set_max_time(&mut self, max_time: f64) {
         self.max_time = max_time;
     }
@@ -242,10 +273,12 @@ impl<B: NodeBackend> ControlLoop<B> {
         self.backend.set_pcap(watts)
     }
 
+    /// The node backend the engine monitors and actuates.
     pub fn backend(&self) -> &B {
         &self.backend
     }
 
+    /// Mutable access to the backend (device profiles, live pacing).
     pub fn backend_mut(&mut self) -> &mut B {
         &mut self.backend
     }
@@ -255,6 +288,7 @@ impl<B: NodeBackend> ControlLoop<B> {
         self.finish_time
     }
 
+    /// The loop hit `max_time` before filling its quota.
     pub fn timed_out(&self) -> bool {
         self.timed_out
     }
@@ -264,14 +298,17 @@ impl<B: NodeBackend> ControlLoop<B> {
         self.finish_time.is_some() || self.timed_out
     }
 
+    /// Per-period bookkeeping rows recorded so far.
     pub fn samples(&self) -> &[PeriodRecord] {
         &self.samples
     }
 
+    /// Total heartbeats ingested by the Eq. (1) aggregator.
     pub fn total_beats(&self) -> u64 {
         self.aggregator.total_beats()
     }
 
+    /// Most recent finite energy-counter reading [J].
     pub fn last_energy(&self) -> f64 {
         self.last_energy
     }
@@ -313,6 +350,9 @@ impl<B: NodeBackend> ControlLoop<B> {
         } else {
             self.backend.set_pcap(policy.decide(sensors.time, progress))
         };
+        // Hierarchical backends stamp their per-device rows here, so device
+        // series stay row-aligned with the node series below.
+        self.backend.note_period(sensors.time);
 
         let rec = PeriodRecord {
             time: sensors.time,
@@ -370,6 +410,7 @@ impl<B: NodeBackend> ControlLoop<B> {
             // must stay row-aligned with the others for to_table().
             rec.true_progress.push(s.time, s.true_progress);
         }
+        rec.devices = self.backend.device_traces();
         rec.exec_time = self.samples.last().map(|s| s.time).unwrap_or(0.0);
         rec
     }

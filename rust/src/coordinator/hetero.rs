@@ -1,0 +1,343 @@
+//! The hierarchical node backend: a multi-device [`NodeSim`] behind the
+//! [`NodeBackend`] interface, with the device-split inner loop inside.
+//!
+//! Layering (DESIGN.md "Hierarchical control"):
+//!
+//! ```text
+//! fleet budget  ──ceiling──▶  node policy  ──node cap──▶  HeteroBackend
+//!                                                          │  split (BudgetPolicy over device reports)
+//!                                                          ├─▶ device ceiling → device PI → device cap
+//!                                                          └─▶ device ceiling → device PI → device cap
+//! ```
+//!
+//! The engine above sees an ordinary node: `advance` returns merged
+//! heartbeats (all devices, time order) and node-level sensors; `set_pcap`
+//! takes **one** node cap. Inside `set_pcap`, the
+//! [`NodeBudgetController`] apportions that cap into per-device ceilings
+//! from last period's *measured* per-device progress (Eq. (1) on each
+//! device's own heartbeat stream — the honesty rule one level down), and
+//! each device controller decides its cap below its ceiling. The value
+//! returned — and therefore recorded in the node row — is the **actuated**
+//! node cap: the sum of the device caps placed, which is how the outer
+//! budget layer observes intra-node slack.
+//!
+//! Degenerate case: with exactly **one** device the backend reduces to the
+//! classic single-plant path bit for bit (same beats, sensors, caps) and
+//! records **no** device traces — the node series is the device series —
+//! so single-device records stay byte-identical to the pre-hierarchy
+//! format (`tests/hetero_equivalence.rs`).
+
+use crate::control::node_budget::{DeviceMeasurement, NodeBudgetController};
+use crate::coordinator::engine::{NodeBackend, PeriodSensors};
+use crate::coordinator::progress::ProgressAggregator;
+use crate::coordinator::records::DeviceTrace;
+use crate::sim::node::{merge_sorted, NodeSim};
+
+/// [`NodeBackend`] over a multi-device simulated node with the device-split
+/// inner loop inside. See the module docs for the control layering.
+pub struct HeteroBackend {
+    node: NodeSim,
+    ctl: NodeBudgetController,
+    /// Actuated node cap: Σ device caps currently placed [W].
+    actuated: f64,
+    /// Node-level hardware cap range (Σ device ranges) [W].
+    cap_min: f64,
+    cap_max: f64,
+    last_time: f64,
+    /// The inner loop has measurements to act on (first `advance` done).
+    primed: bool,
+    /// Per-device beat sinks (reused each period).
+    sinks: Vec<Vec<f64>>,
+    /// Merge-cursor scratch for the beat merge.
+    merge_idx: Vec<usize>,
+    /// Per-device Eq. (1) aggregators.
+    aggs: Vec<ProgressAggregator>,
+    /// Last period's per-device measurements (inner-loop input).
+    meas: Vec<DeviceMeasurement>,
+    /// Device-cap scratch written by the inner loop.
+    caps: Vec<f64>,
+    /// Per-device recorded series (empty for single-device nodes).
+    traces: Vec<DeviceTrace>,
+}
+
+impl HeteroBackend {
+    /// Wrap `node` with the inner budget loop `ctl` (one device controller
+    /// per node device, same order).
+    pub fn new(node: NodeSim, ctl: NodeBudgetController) -> Self {
+        let n = node.device_count();
+        assert_eq!(n, ctl.len(), "one device controller per device");
+        let (cap_min, cap_max) = ctl.cap_range();
+        let meas: Vec<DeviceMeasurement> = node
+            .devices()
+            .iter()
+            .map(|d| DeviceMeasurement {
+                pcap: d.sensors().pcap,
+                power: f64::NAN,
+                progress: 0.0,
+            })
+            .collect();
+        let traces = if n == 1 {
+            Vec::new()
+        } else {
+            node.devices()
+                .iter()
+                .map(|d| DeviceTrace {
+                    kind: d.spec().kind.name().to_string(),
+                    ..Default::default()
+                })
+                .collect()
+        };
+        let actuated = node.total_pcap();
+        HeteroBackend {
+            ctl,
+            actuated,
+            cap_min,
+            cap_max,
+            last_time: node.time(),
+            primed: false,
+            sinks: vec![Vec::new(); n],
+            merge_idx: vec![0; n],
+            aggs: vec![ProgressAggregator::new(); n],
+            meas,
+            caps: vec![0.0; n],
+            traces,
+            node,
+        }
+    }
+
+    /// The wrapped node (device sensors, oracle reads).
+    pub fn node(&self) -> &NodeSim {
+        &self.node
+    }
+
+    /// Mutable access to the wrapped node (campaign drivers switch device
+    /// phase profiles between periods).
+    pub fn node_mut(&mut self) -> &mut NodeSim {
+        &mut self.node
+    }
+
+    /// The inner budget controller (ceilings, setpoints).
+    pub fn controller(&self) -> &NodeBudgetController {
+        &self.ctl
+    }
+
+    /// Pre-size the per-device trace logs for `rows` periods so the
+    /// steady-state tick path never grows a `Vec` (hot-path discipline,
+    /// same as [`ControlLoop::reserve_samples`]).
+    ///
+    /// [`ControlLoop::reserve_samples`]: crate::coordinator::engine::ControlLoop::reserve_samples
+    pub fn reserve_traces(&mut self, rows: usize) {
+        for t in &mut self.traces {
+            t.pcap.reserve(rows);
+            t.power.reserve(rows);
+            t.progress.reserve(rows);
+        }
+    }
+
+    /// Per-device Eq. (1) progress measured last period [Hz].
+    pub fn device_progress(&self, i: usize) -> f64 {
+        self.meas[i].progress
+    }
+
+    fn apply_caps(&mut self) -> f64 {
+        let mut total = 0.0;
+        for (i, &cap) in self.caps.iter().enumerate() {
+            total += self.node.device_mut(i).set_pcap(cap);
+        }
+        // Single-device reduction: the actuated cap IS the device cap —
+        // bit-identical to the classic backend's `set_pcap` return.
+        if self.caps.len() == 1 {
+            total = self.node.pcap();
+        }
+        self.actuated = total;
+        total
+    }
+}
+
+impl NodeBackend for HeteroBackend {
+    /// Apply a node-level cap: run the inner split, actuate every device,
+    /// and return the actuated node cap (Σ device caps — ≤ the request;
+    /// the outer layer reads intra-node slack from the difference).
+    fn set_pcap(&mut self, watts: f64) -> f64 {
+        let node_cap = watts.clamp(self.cap_min, self.cap_max);
+        if self.primed {
+            self.ctl
+                .decide_into(self.last_time, node_cap, &self.meas, &mut self.caps);
+        } else {
+            // Before the first measurement there is no progress signal to
+            // split on: place ceilings ∝ device maxima (§5.2's "initial
+            // powercap at the upper limit", one level down).
+            self.ctl.initial_into(node_cap, &mut self.caps);
+        }
+        self.apply_caps()
+    }
+
+    fn pcap(&self) -> f64 {
+        self.actuated
+    }
+
+    fn advance(&mut self, now: f64, beats: &mut Vec<f64>) -> PeriodSensors {
+        let dt = now - self.last_time;
+        if dt <= 0.0 {
+            // Non-monotonic tick: report state without mutating the node
+            // (same contract as the classic lockstep backend).
+            return PeriodSensors {
+                time: now,
+                power: f64::NAN,
+                energy: self.node.energy(),
+                true_progress: f64::NAN,
+            };
+        }
+        self.last_time = now;
+        for s in &mut self.sinks {
+            s.clear();
+        }
+        let s = self.node.step_devices_into(dt, &mut self.sinks);
+        self.merge_idx.fill(0);
+        merge_sorted(&self.sinks, &mut self.merge_idx, beats);
+        for ((agg, sink), (m, dev)) in self
+            .aggs
+            .iter_mut()
+            .zip(&self.sinks)
+            .zip(self.meas.iter_mut().zip(self.node.devices()))
+        {
+            agg.ingest(sink);
+            let sensors = dev.sensors();
+            *m = DeviceMeasurement {
+                pcap: sensors.pcap,
+                power: sensors.power,
+                progress: agg.sample(),
+            };
+        }
+        self.primed = true;
+        PeriodSensors {
+            // The driver's clock is the authority (see LockstepBackend).
+            time: now,
+            power: s.power,
+            energy: s.energy,
+            true_progress: s.true_progress,
+        }
+    }
+
+    /// Stamp one row per device: the cap decided this period (the engine
+    /// calls this right after the cap decision), the measured device power
+    /// and the per-device Eq. (1) progress. No-op for single-device nodes
+    /// (their node series is the device series).
+    fn note_period(&mut self, now: f64) {
+        for ((trace, m), dev) in self
+            .traces
+            .iter_mut()
+            .zip(&self.meas)
+            .zip(self.node.devices())
+        {
+            trace.pcap.push(now, dev.sensors().pcap);
+            trace.power.push(now, m.power);
+            trace.progress.push(now, m.progress);
+        }
+    }
+
+    fn device_traces(&self) -> Vec<DeviceTrace> {
+        self.traces.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::baseline::{StaticCap, Uncontrolled};
+    use crate::control::node_budget::{ideal_device_model, DeviceCtl, DeviceSplitSpec};
+    use crate::coordinator::engine::ControlLoop;
+    use crate::sim::cluster::{Cluster, ClusterId};
+    use crate::sim::device::DeviceSpec;
+
+    fn cpu_gpu_backend(split: DeviceSplitSpec, epsilon: f64, seed: u64) -> HeteroBackend {
+        let cluster = Cluster::get(ClusterId::Gros);
+        let cpu = DeviceSpec::cpu(&cluster);
+        let gpu = DeviceSpec::gpu();
+        let node = NodeSim::hetero(cluster, &[cpu.clone(), gpu.clone()], seed);
+        let ctl = NodeBudgetController::new(
+            split.build(),
+            vec![
+                DeviceCtl::pi(&cpu, ideal_device_model(&cpu), epsilon, cpu.cap_max),
+                DeviceCtl::pi(&gpu, ideal_device_model(&gpu), epsilon, gpu.cap_max),
+            ],
+        );
+        HeteroBackend::new(node, ctl)
+    }
+
+    #[test]
+    fn engine_drives_hetero_node_and_records_devices() {
+        let mut engine = ControlLoop::new(cpu_gpu_backend(DeviceSplitSpec::SlackShift, 0.15, 5), 1.0);
+        let budget = 0.7 * (120.0 + 400.0);
+        engine.set_initial_pcap(budget);
+        let mut policy = StaticCap { pcap: budget };
+        for i in 1..=60 {
+            engine.tick(i as f64, &mut policy);
+        }
+        let rec = engine.record();
+        assert_eq!(rec.pcap.len(), 60);
+        assert_eq!(rec.devices.len(), 2);
+        assert_eq!(rec.devices[0].kind, "cpu");
+        assert_eq!(rec.devices[1].kind, "gpu");
+        for d in &rec.devices {
+            assert_eq!(d.pcap.len(), 60, "{} trace rows", d.kind);
+            assert_eq!(d.progress.len(), 60);
+        }
+        // Actuated node cap never exceeds the requested budget, and the
+        // device caps explain it.
+        for i in 0..60 {
+            let total = rec.devices[0].pcap.values[i] + rec.devices[1].pcap.values[i];
+            assert!((total - rec.pcap.values[i]).abs() < 1e-9, "row {i}");
+            assert!(rec.pcap.values[i] <= budget + 1e-9);
+        }
+        assert!(rec.energy > 0.0);
+        assert!(rec.beats > 0);
+    }
+
+    #[test]
+    fn hetero_backend_deterministic() {
+        let run = |seed: u64| {
+            let mut engine = ControlLoop::new(cpu_gpu_backend(DeviceSplitSpec::GreedyRepack, 0.1, seed), 1.0);
+            engine.set_initial_pcap(350.0);
+            let mut policy = StaticCap { pcap: 350.0 };
+            for i in 1..=40 {
+                engine.tick(i as f64, &mut policy);
+            }
+            engine.record()
+        };
+        let a = run(9);
+        let b = run(9);
+        assert_eq!(a.to_json().dump(), b.to_json().dump());
+        let c = run(10);
+        assert_ne!(a.to_json().dump(), c.to_json().dump());
+    }
+
+    #[test]
+    fn non_monotonic_tick_is_side_effect_free() {
+        let mut engine = ControlLoop::new(cpu_gpu_backend(DeviceSplitSpec::Even, 0.15, 7), 1.0);
+        engine.set_initial_pcap(400.0);
+        let mut policy = Uncontrolled { pcap_max: 400.0 };
+        engine.tick(1.0, &mut policy);
+        let beats = engine.total_beats();
+        let s = engine.tick(1.0, &mut policy); // same timestamp again
+        assert_eq!(engine.total_beats(), beats);
+        assert!(s.power.is_nan());
+    }
+
+    #[test]
+    fn per_device_progress_tracks_device_rates() {
+        let mut backend = cpu_gpu_backend(DeviceSplitSpec::Even, 0.0, 11);
+        let mut beats = Vec::new();
+        for i in 1..=30 {
+            backend.advance(i as f64, &mut beats);
+        }
+        // ε = 0 at full caps: CPU ≈ its max rate, GPU ≈ its (higher) max.
+        let cpu = backend.device_progress(0);
+        let gpu = backend.device_progress(1);
+        let cpu_max = Cluster::get(ClusterId::Gros).max_progress();
+        let gpu_max = DeviceSpec::gpu().max_progress();
+        assert!((cpu - cpu_max).abs() < 0.25 * cpu_max, "cpu {cpu} vs {cpu_max}");
+        assert!((gpu - gpu_max).abs() < 0.25 * gpu_max, "gpu {gpu} vs {gpu_max}");
+        assert!(gpu > cpu);
+    }
+}

@@ -9,10 +9,13 @@
 //!   (the live path);
 //! * [`experiment`] — lockstep open-/closed-loop experiment drivers over
 //!   the simulated node (the campaign path);
+//! * [`hetero`] — the hierarchical backend: a multi-device node with the
+//!   device-split inner loop inside, behind the same engine interface;
 //! * [`records`] — run records with CSV/JSON export.
 
 pub mod engine;
 pub mod experiment;
+pub mod hetero;
 pub mod nrm;
 pub mod progress;
 pub mod records;
@@ -20,5 +23,6 @@ pub mod transport;
 
 pub use engine::{ControlLoop, LockstepBackend, NodeBackend, PeriodRecord, PlanPolicy};
 pub use experiment::{run_closed_loop, run_open_loop, RunConfig};
+pub use hetero::HeteroBackend;
 pub use progress::ProgressAggregator;
-pub use records::RunRecord;
+pub use records::{DeviceTrace, RunRecord};

@@ -44,6 +44,7 @@ pub struct SimBackend {
 }
 
 impl SimBackend {
+    /// Live monitoring/actuation shim over a simulated node.
     pub fn new(node: NodeSim) -> Self {
         SimBackend {
             rate: Arc::new(AtomicU64::new(0f64.to_bits())),
@@ -114,6 +115,8 @@ pub struct TransportBackend<R, B> {
 }
 
 impl<R: BeatReceiver + Send, B: NodeBackend> TransportBackend<R, B> {
+    /// Layer `receiver` heartbeat delivery over `inner`, re-stamping batched
+    /// beats across `period`.
     pub fn new(receiver: R, inner: B, period: f64) -> Self {
         TransportBackend {
             receiver,
@@ -123,6 +126,7 @@ impl<R: BeatReceiver + Send, B: NodeBackend> TransportBackend<R, B> {
         }
     }
 
+    /// The wrapped inner backend.
     pub fn inner(&self) -> &B {
         &self.inner
     }
@@ -157,6 +161,14 @@ impl<R: BeatReceiver + Send, B: NodeBackend> NodeBackend for TransportBackend<R,
     fn target_rate(&self) -> f64 {
         self.inner.target_rate()
     }
+
+    fn note_period(&mut self, now: f64) {
+        self.inner.note_period(now)
+    }
+
+    fn device_traces(&self) -> Vec<crate::coordinator::records::DeviceTrace> {
+        self.inner.device_traces()
+    }
 }
 
 /// The daemon.
@@ -168,6 +180,8 @@ pub struct NrmDaemon<R: BeatReceiver + Send> {
 }
 
 impl<R: BeatReceiver + Send> NrmDaemon<R> {
+    /// Daemon over a heartbeat receiver, node backend and policy, sampling
+    /// every `period` seconds toward `setpoint` at degradation `epsilon`.
     pub fn new(
         receiver: R,
         backend: Box<dyn NodeBackend>,
@@ -225,10 +239,12 @@ impl<R: BeatReceiver + Send> NrmDaemon<R> {
         rec
     }
 
+    /// Per-period daemon samples recorded so far.
     pub fn samples(&self) -> &[NrmSample] {
         self.engine.samples()
     }
 
+    /// The node backend the daemon actuates.
     pub fn backend(&self) -> &dyn NodeBackend {
         self.engine.backend().inner().as_ref()
     }

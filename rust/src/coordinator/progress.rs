@@ -27,6 +27,7 @@ pub struct ProgressAggregator {
 }
 
 impl ProgressAggregator {
+    /// Empty aggregator (no beats seen yet).
     pub fn new() -> Self {
         Self::default()
     }
@@ -67,6 +68,7 @@ impl ProgressAggregator {
         self.freqs.len()
     }
 
+    /// Total beats ever ingested.
     pub fn total_beats(&self) -> u64 {
         self.total_beats
     }

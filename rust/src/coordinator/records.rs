@@ -5,6 +5,41 @@ use crate::util::csv::Table;
 use crate::util::json::Json;
 use crate::util::timeseries::TimeSeries;
 
+/// Per-device series of a hierarchical (multi-device) run: one row per
+/// control period, aligned with the node-level series of the owning
+/// [`RunRecord`]. Single-device runs carry no device traces — the node
+/// series *is* the device series — which keeps their exports byte-identical
+/// to the pre-hierarchy format.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceTrace {
+    /// Device kind label ("cpu", "gpu", …).
+    pub kind: String,
+    /// Device cap decided each period [W].
+    pub pcap: TimeSeries,
+    /// Measured device power each period [W].
+    pub power: TimeSeries,
+    /// Per-device Eq. (1) progress each period [Hz].
+    pub progress: TimeSeries,
+}
+
+impl DeviceTrace {
+    /// JSON object with the device kind and the three per-period series.
+    pub fn to_json(&self) -> Json {
+        fn series(s: &TimeSeries) -> Json {
+            let mut j = Json::obj();
+            j.set("times", s.times.as_slice())
+                .set("values", s.values.as_slice());
+            j
+        }
+        let mut j = Json::obj();
+        j.set("kind", self.kind.as_str())
+            .set("pcap", series(&self.pcap))
+            .set("power", series(&self.power))
+            .set("progress", series(&self.progress));
+        j
+    }
+}
+
 /// Complete record of a single benchmark execution under some policy.
 #[derive(Debug, Clone, Default)]
 pub struct RunRecord {
@@ -22,10 +57,15 @@ pub struct RunRecord {
     pub setpoint: f64,
     /// Sampled signals, one row per control period.
     pub pcap: TimeSeries,
+    /// Measured power each period [W].
     pub power: TimeSeries,
+    /// Eq. (1) progress each period [Hz].
     pub progress: TimeSeries,
     /// Oracle true progress (sim only; empty on real hardware).
     pub true_progress: TimeSeries,
+    /// Per-device series (hierarchical multi-device runs only; empty — and
+    /// absent from every export — for single-device runs).
+    pub devices: Vec<DeviceTrace>,
     /// Total benchmark execution time [s].
     pub exec_time: f64,
     /// Total energy consumed [J].
@@ -38,14 +78,21 @@ pub struct RunRecord {
 
 impl RunRecord {
     /// Per-period samples as a CSV table (`fig3`/`fig5`/`fig6a` format).
+    /// Hierarchical runs append three columns per device
+    /// (`dev<i>_<kind>_{pcap_w,power_w,progress_hz}`), row-aligned with the
+    /// node-level series; single-device runs keep the classic five columns.
     pub fn to_table(&self) -> Table {
-        let mut t = Table::new(vec![
-            "time_s",
-            "pcap_w",
-            "power_w",
-            "progress_hz",
-            "true_progress_hz",
-        ]);
+        let mut header: Vec<String> = ["time_s", "pcap_w", "power_w", "progress_hz", "true_progress_hz"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        for (i, d) in self.devices.iter().enumerate() {
+            for col in ["pcap_w", "power_w", "progress_hz"] {
+                header.push(format!("dev{i}_{}_{col}", d.kind));
+            }
+        }
+        let mut t = Table::new(header);
+        let mut row = Vec::with_capacity(5 + 3 * self.devices.len());
         for i in 0..self.pcap.len() {
             let tp = self
                 .true_progress
@@ -53,13 +100,20 @@ impl RunRecord {
                 .get(i)
                 .copied()
                 .unwrap_or(f64::NAN);
-            t.push_f64(&[
+            row.clear();
+            row.extend_from_slice(&[
                 self.pcap.times[i],
                 self.pcap.values[i],
                 self.power.values.get(i).copied().unwrap_or(f64::NAN),
                 self.progress.values.get(i).copied().unwrap_or(f64::NAN),
                 tp,
             ]);
+            for d in &self.devices {
+                row.push(d.pcap.values.get(i).copied().unwrap_or(f64::NAN));
+                row.push(d.power.values.get(i).copied().unwrap_or(f64::NAN));
+                row.push(d.progress.values.get(i).copied().unwrap_or(f64::NAN));
+            }
+            t.push_f64(&row);
         }
         t
     }
@@ -92,6 +146,13 @@ impl RunRecord {
             .set("power", series(&self.power))
             .set("progress", series(&self.progress))
             .set("true_progress", series(&self.true_progress));
+        // Hierarchical runs only: the key is absent for single-device runs,
+        // keeping their JSON byte-identical to the pre-hierarchy format
+        // (the equivalence oracle depends on this).
+        if !self.devices.is_empty() {
+            let devs: Vec<Json> = self.devices.iter().map(|d| d.to_json()).collect();
+            j.set("devices", Json::Arr(devs));
+        }
         j
     }
 
@@ -199,5 +260,50 @@ mod tests {
         let mut r = record();
         r.setpoint = f64::NAN;
         assert!(r.tracking_errors().is_empty());
+    }
+
+    fn hetero_record() -> RunRecord {
+        let mut r = record();
+        for kind in ["cpu", "gpu"] {
+            let mut d = DeviceTrace {
+                kind: kind.into(),
+                ..Default::default()
+            };
+            for i in 0..5 {
+                let t = i as f64;
+                d.pcap.push(t, 60.0 + i as f64);
+                d.power.push(t, 55.0 + i as f64);
+                d.progress.push(t, 12.0 + i as f64 * 0.25);
+            }
+            r.devices.push(d);
+        }
+        r
+    }
+
+    #[test]
+    fn device_columns_appended_to_table() {
+        let t = hetero_record().to_table();
+        assert_eq!(t.header.len(), 5 + 2 * 3);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.col_f64("dev0_cpu_pcap_w").unwrap()[0], 60.0);
+        assert_eq!(t.col_f64("dev1_gpu_progress_hz").unwrap()[4], 13.0);
+    }
+
+    #[test]
+    fn devices_key_only_when_present() {
+        // Single-device exports must stay byte-identical to the
+        // pre-hierarchy format: no "devices" key.
+        let plain = record().to_json();
+        assert!(plain.get("devices").is_none());
+        let hetero = hetero_record().to_json();
+        let devs = hetero.get("devices").unwrap().as_arr().unwrap();
+        assert_eq!(devs.len(), 2);
+        assert_eq!(devs[0].get("kind").unwrap().as_str(), Some("cpu"));
+        // And the round trip discriminates device bytes too.
+        let back = Json::parse(&hetero.dump()).unwrap();
+        assert_eq!(back, hetero);
+        let mut r2 = hetero_record();
+        r2.devices[1].power.values[2] += 1e-12;
+        assert_ne!(r2.to_json().dump(), hetero.dump());
     }
 }

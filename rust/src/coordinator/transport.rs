@@ -48,10 +48,13 @@ pub trait BeatReceiver {
 /// In-process channel transport.
 pub struct InProc;
 
+/// Sending half of the in-process heartbeat channel.
 pub struct InProcSender(mpsc::Sender<(u32, u32)>);
+/// Receiving half of the in-process heartbeat channel.
 pub struct InProcReceiver(mpsc::Receiver<(u32, u32)>);
 
 impl InProc {
+    /// Connected sender/receiver pair (the in-proc transport).
     pub fn pair() -> (InProcSender, InProcReceiver) {
         let (tx, rx) = mpsc::channel();
         (InProcSender(tx), InProcReceiver(rx))
@@ -111,11 +114,13 @@ pub fn decode_beat(msg: &str) -> Option<(u32, u32)> {
 /// Unix-datagram transport bound to a filesystem path.
 pub struct UnixSocket;
 
+/// Heartbeat sender over a Unix datagram socket (the NRM wire path).
 pub struct UnixSocketSender {
     sock: UnixDatagram,
     path: PathBuf,
 }
 
+/// Heartbeat receiver over a Unix datagram socket.
 pub struct UnixSocketReceiver {
     sock: UnixDatagram,
     path: PathBuf,

@@ -142,6 +142,7 @@ pub fn adaptive_ablation(ctx: &Ctx, ident: &Identified) -> (f64, f64) {
     (rms_of(&rec_fixed), rms_of(&rec_adapt))
 }
 
+/// Run every ablation and return the printed report.
 pub fn run(ctx: &Ctx, idents: &[Identified]) -> String {
     let mut out = String::from("Ablations\n");
     if let Some(gros) = idents.iter().find(|i| i.cluster.name() == "gros") {

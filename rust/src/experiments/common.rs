@@ -15,7 +15,9 @@ use crate::util::rng::Pcg64;
 /// integration tests and smoke runs quick.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Scale {
+    /// Quick sizes for tests and smoke runs.
     Fast,
+    /// Paper-scale campaign sizes.
     Full,
 }
 
@@ -72,12 +74,16 @@ impl Scale {
 /// Experiment context.
 #[derive(Debug, Clone)]
 pub struct Ctx {
+    /// Output directory for CSV/JSON artifacts.
     pub out_dir: PathBuf,
+    /// Root RNG seed every campaign derives from.
     pub seed: u64,
+    /// Campaign size preset.
     pub scale: Scale,
 }
 
 impl Ctx {
+    /// Context writing under `out_dir`, seeded with `seed`, at `scale`.
     pub fn new(out_dir: impl Into<PathBuf>, seed: u64, scale: Scale) -> Self {
         Ctx {
             out_dir: out_dir.into(),
@@ -86,10 +92,12 @@ impl Ctx {
         }
     }
 
+    /// Path of an artifact file under the output directory.
     pub fn path(&self, name: &str) -> PathBuf {
         self.out_dir.join(name)
     }
 
+    /// The standard closed-loop run configuration at this scale.
     pub fn run_config(&self) -> RunConfig {
         RunConfig {
             sample_period: 1.0,
@@ -103,13 +111,16 @@ impl Ctx {
 /// Table 2 reports plus the Pearson check of §4.2.
 #[derive(Debug, Clone)]
 pub struct Identified {
+    /// Which cluster was identified.
     pub cluster: ClusterId,
+    /// The fitted static+dynamic model (Table 2).
     pub model: DynamicModel,
     /// (pcap, mean power, mean progress, exec time) per static run.
     pub static_runs: Vec<(f64, f64, f64, f64)>,
     /// Pearson r between mean progress and execution time (negative) and
     /// between mean progress and throughput 1/T (positive).
     pub pearson_time: f64,
+    /// Pearson r between mean progress and throughput 1/T (positive).
     pub pearson_throughput: f64,
 }
 

@@ -19,6 +19,7 @@ use crate::util::stats;
 /// Per-cluster shape summary extracted from the staircase run.
 #[derive(Debug, Clone)]
 pub struct Fig3Summary {
+    /// Which cluster the staircase ran on.
     pub cluster: ClusterId,
     /// Mean progress at each staircase level [Hz].
     pub level_progress: Vec<f64>,
@@ -31,6 +32,7 @@ pub struct Fig3Summary {
 /// Hold each level for this long (the paper's Fig. 3 spans ~100 s).
 const HOLD_S: f64 = 20.0;
 
+/// One staircase characterization run on `id` (one Fig. 3 panel).
 pub fn run_cluster(ctx: &Ctx, id: ClusterId) -> (RunRecord, Fig3Summary) {
     let cluster = Cluster::get(id);
     let plan = signals::staircase(cluster.pcap_min, cluster.pcap_max, 20.0, HOLD_S);
@@ -74,6 +76,7 @@ pub fn run_cluster(ctx: &Ctx, id: ClusterId) -> (RunRecord, Fig3Summary) {
     )
 }
 
+/// All three Fig. 3 panels + the printed shape checks.
 pub fn run(ctx: &Ctx) -> (String, Vec<Fig3Summary>) {
     let mut out = String::from("Fig. 3 — staircase time view (per-level settled means)\n");
     let mut summaries = Vec::new();

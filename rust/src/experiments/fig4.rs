@@ -10,14 +10,19 @@ use crate::util::csv::Table;
 use crate::util::stats;
 
 #[derive(Debug, Clone)]
+/// Shape checks of one cluster's static fit (Fig. 4).
 pub struct Fig4Summary {
+    /// Which cluster was fitted.
     pub cluster: crate::sim::cluster::ClusterId,
+    /// R^2 of the static progress fit.
     pub r_squared: f64,
     /// R² of the linear fit through the origin in linearized coordinates.
     pub linear_r_squared: f64,
+    /// Fitted asymptotic progress K_L [Hz].
     pub k_l: f64,
 }
 
+/// Write one cluster's static-characteristic CSV and summarize the fit.
 pub fn run_cluster(ctx: &Ctx, ident: &Identified) -> Fig4Summary {
     let s = &ident.model.static_model;
     // Fig. 4a CSV: one row per static run + model prediction.
@@ -50,6 +55,7 @@ pub fn run_cluster(ctx: &Ctx, ident: &Identified) -> Fig4Summary {
     }
 }
 
+/// All clusters + the printed Fig. 4 shape checks.
 pub fn run(ctx: &Ctx, idents: &[Identified]) -> (String, Vec<Fig4Summary>) {
     let mut out = String::from("Fig. 4 — static characteristic (fit quality)\n");
     let mut summaries = Vec::new();

@@ -12,14 +12,21 @@ use crate::sim::cluster::{Cluster, ClusterId};
 use crate::util::csv::Table;
 
 #[derive(Debug, Clone)]
+/// Dynamic-model validation stats for one cluster (Fig. 5).
 pub struct Fig5Summary {
+    /// Which cluster was validated.
     pub cluster: ClusterId,
+    /// Mean one-step prediction error [Hz].
     pub error_mean: f64,
+    /// Std-dev of the prediction error [Hz].
     pub error_std: f64,
+    /// Smallest prediction error [Hz].
     pub error_min: f64,
+    /// Largest prediction error [Hz].
     pub error_max: f64,
 }
 
+/// Validate one cluster's fitted dynamics on a fresh excitation run.
 pub fn run_cluster(ctx: &Ctx, ident: &Identified) -> Fig5Summary {
     let cluster = Cluster::get(ident.cluster);
     // Fresh validation runs (not the ones τ was fitted on).
@@ -48,6 +55,7 @@ pub fn run_cluster(ctx: &Ctx, ident: &Identified) -> Fig5Summary {
     }
 }
 
+/// All clusters + the printed Fig. 5 shape checks.
 pub fn run(ctx: &Ctx, idents: &[Identified]) -> (String, Vec<Fig5Summary>) {
     let mut out = String::from("Fig. 5 — dynamic model accuracy (validation campaign)\n");
     let mut summaries = Vec::new();

@@ -54,9 +54,13 @@ pub fn representative_run(ctx: &Ctx, ident: &Identified, epsilon: f64) -> RunRec
 }
 
 #[derive(Debug, Clone)]
+/// Tracking-error distribution stats for one cluster (Fig. 6b).
 pub struct Fig6bSummary {
+    /// Which cluster the closed loop ran on.
     pub cluster: crate::sim::cluster::ClusterId,
+    /// Mean tracking error [Hz].
     pub error_mean: f64,
+    /// Tracking-error dispersion [Hz].
     pub error_std: f64,
     /// Centers [Hz] of detected modes in the error histogram.
     pub mode_centers: Vec<f64>,
@@ -101,6 +105,7 @@ pub fn error_distribution(ctx: &Ctx, ident: &Identified) -> Fig6bSummary {
     }
 }
 
+/// Fig. 6a representative runs + Fig. 6b error distributions.
 pub fn run(ctx: &Ctx, idents: &[Identified]) -> (String, Vec<Fig6bSummary>) {
     let mut out = String::from("Fig. 6 — controlled-system evaluation\n");
     // (a) representative gros run at ε = 0.15.

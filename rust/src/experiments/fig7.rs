@@ -25,9 +25,11 @@ use crate::util::stats;
 /// Mean (time, energy) per ε for one cluster, with the baseline.
 #[derive(Debug, Clone)]
 pub struct Fig7Summary {
+    /// Which cluster was swept.
     pub cluster: crate::sim::cluster::ClusterId,
     /// Baseline (ε=0) mean execution time [s] and energy [J].
     pub base_time: f64,
+    /// Uncontrolled baseline energy [J].
     pub base_energy: f64,
     /// Per-ε: (ε, mean time, mean energy, Δtime %, Δenergy %).
     pub points: Vec<(f64, f64, f64, f64, f64)>,
@@ -43,6 +45,7 @@ impl Fig7Summary {
     }
 }
 
+/// The eps sweep for one cluster (one Fig. 7 panel).
 pub fn run_cluster(ctx: &Ctx, ident: &Identified) -> Fig7Summary {
     let cluster = Cluster::get(ident.cluster);
     let cfg = ctx.run_config();
@@ -121,6 +124,7 @@ pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
     front
 }
 
+/// All clusters + the printed headline trade-off checks.
 pub fn run(ctx: &Ctx, idents: &[Identified]) -> (String, Vec<Fig7Summary>) {
     let mut out = String::from("Fig. 7 — time/energy trade-off per degradation level\n");
     let mut summaries = Vec::new();

@@ -36,7 +36,9 @@ pub const BUDGET_PER_NODE: f64 = 95.0;
 /// One (ε, strategy) campaign point.
 #[derive(Debug, Clone)]
 pub struct FleetPoint {
+    /// Budget strategy name.
     pub strategy: String,
+    /// Per-node degradation budget eps.
     pub epsilon: f64,
     /// Total fleet energy [J].
     pub energy: f64,
@@ -48,6 +50,7 @@ pub struct FleetPoint {
     pub mean_slowdown: f64,
     /// Per-node slowdowns, fleet order.
     pub slowdowns: Vec<f64>,
+    /// Every node completed before the hard stop.
     pub completed: bool,
     /// Node-ticks driven by the executor (periods × nodes).
     pub node_ticks: u64,
@@ -71,6 +74,7 @@ pub fn heterogeneous_specs(idents: &[Identified], n: usize, policy: NodePolicySp
                 cluster,
                 model: ident.model.clone(),
                 policy: policy.clone(),
+                hardware: crate::fleet::NodeHardware::SingleCpu,
             }
         })
         .collect()
@@ -90,6 +94,7 @@ pub fn make_strategy(name: &str) -> Box<dyn BudgetPolicy> {
     }
 }
 
+/// Budget strategies the campaign compares, table order.
 pub const STRATEGIES: [&str; 4] = [
     "static-uniform",
     "uniform",

@@ -1,0 +1,401 @@
+//! Heterogeneous-node campaign: CPU+GPU under one node power budget,
+//! energy vs ε per device-split strategy.
+//!
+//! The scenario the related work motivates (EcoShift: shift watts between
+//! CPU and GPU under a single node constraint): a gros-hosted node carries
+//! the paper's memory-bound CPU plus a GPU whose workload alternates
+//! between *offload* phases (compute-bound: every watt buys progress) and
+//! in-between phases (memory/DMA-bound: the GPU saturates early and extra
+//! watts are waste). The node cap is fixed well below the combined device
+//! maxima, so the inner split decides who gets the watts each period.
+//!
+//! For each (ε, split strategy) the campaign runs the workload to a fixed
+//! merged-heartbeat quota and reports energy, execution time and mean
+//! device caps against a paired full-cap baseline (same seed). A second
+//! part runs a small **three-level** fleet (fleet budget → node ceilings →
+//! device caps) of CPU+GPU nodes to pin the full hierarchy end to end.
+//!
+//! Artifacts: `hetero.csv` + machine-readable `hetero.json` (the
+//! acceptance surface of `powerctl hetero`), plus the printed table.
+
+use crate::control::baseline::{Policy, StaticCap, Uncontrolled};
+use crate::control::budget::SlackProportional;
+use crate::control::node_budget::{
+    ideal_device_model, DeviceCtl, DeviceSplitSpec, NodeBudgetController,
+};
+use crate::coordinator::engine::ControlLoop;
+use crate::coordinator::hetero::HeteroBackend;
+use crate::coordinator::records::RunRecord;
+use crate::experiments::common::Ctx;
+use crate::fleet::{run_fleet, FleetConfig, NodeHardware, NodePolicySpec, NodeSpec};
+use crate::sim::cluster::{Cluster, ClusterId};
+use crate::sim::device::DeviceSpec;
+use crate::sim::node::NodeSim;
+use crate::util::csv::Table;
+use crate::util::json::Json;
+use crate::workload::phases::PhaseSchedule;
+
+/// Node budget as a fraction of the combined device maxima — tight enough
+/// that the split matters, loose enough that the quota completes.
+pub const BUDGET_FRACTION: f64 = 0.62;
+
+/// Seconds per workload phase (offload ↔ in-between).
+pub const PHASE_LEN: f64 = 25.0;
+
+/// One (ε, split) campaign point.
+#[derive(Debug, Clone)]
+pub struct HeteroPoint {
+    /// Device-split strategy name.
+    pub strategy: String,
+    /// Per-device PI degradation budget ε.
+    pub epsilon: f64,
+    /// Node energy for the whole workload [J].
+    pub energy: f64,
+    /// Quota completion time [s].
+    pub exec_time: f64,
+    /// Slowdown vs the paired full-cap baseline (fraction).
+    pub slowdown: f64,
+    /// Time-mean CPU cap [W].
+    pub mean_cpu_cap: f64,
+    /// Time-mean GPU cap [W].
+    pub mean_gpu_cap: f64,
+    /// The workload completed before the hard stop.
+    pub completed: bool,
+}
+
+/// The campaign's hardware: the hosting cluster's CPU plus the GPU preset.
+pub fn devices(cluster: &Cluster) -> (DeviceSpec, DeviceSpec) {
+    (DeviceSpec::cpu(cluster), DeviceSpec::gpu())
+}
+
+/// Combined device rails [W]: Σ `cap_max` over the campaign's devices —
+/// the single source the budget, the JSON and the printed header derive
+/// from (so a preset change cannot desynchronize them).
+pub fn combined_cap_max() -> f64 {
+    let (cpu, gpu) = devices(&Cluster::get(ClusterId::Gros));
+    cpu.cap_max + gpu.cap_max
+}
+
+/// The campaign's fixed node budget [W].
+pub fn node_budget_w() -> f64 {
+    BUDGET_FRACTION * combined_cap_max()
+}
+
+/// The GPU's phase schedule: in-between (memory/DMA-bound) alternating
+/// with offload (compute-bound) phases, long enough for any run.
+pub fn gpu_schedule() -> PhaseSchedule {
+    PhaseSchedule::alternating(PHASE_LEN, 200)
+}
+
+/// Quota for the hetero workload [merged heartbeats]: the scale's
+/// benchmark length doubled, since the two devices beat concurrently.
+fn quota(ctx: &Ctx) -> u64 {
+    2 * ctx.scale.total_beats()
+}
+
+/// Drive one hetero node to quota. `split_eps` selects the device policy:
+/// `Some((split, ε))` runs per-device PIs under that split; `None` is the
+/// full-cap baseline (devices pinned at their rails). Returns the finished
+/// [`RunRecord`] (device traces included).
+pub fn run_hetero_node(ctx: &Ctx, split_eps: Option<(DeviceSplitSpec, f64)>, seed: u64) -> RunRecord {
+    let cluster = Cluster::get(ClusterId::Gros);
+    let (cpu, gpu) = devices(&cluster);
+    let cap_sum = cpu.cap_max + gpu.cap_max;
+    let node = NodeSim::hetero(cluster.clone(), &[cpu.clone(), gpu.clone()], seed);
+
+    let (ctl, node_cap, mut policy): (NodeBudgetController, f64, Box<dyn Policy>) = match split_eps
+    {
+        Some((split, epsilon)) => {
+            let ctl = NodeBudgetController::new(
+                split.build(),
+                vec![
+                    DeviceCtl::pi(&cpu, ideal_device_model(&cpu), epsilon, cpu.cap_max),
+                    DeviceCtl::pi(&gpu, ideal_device_model(&gpu), epsilon, gpu.cap_max),
+                ],
+            );
+            let budget = BUDGET_FRACTION * cap_sum;
+            (ctl, budget, Box::new(StaticCap { pcap: budget }))
+        }
+        None => {
+            let ctl = NodeBudgetController::new(
+                DeviceSplitSpec::Even.build(),
+                vec![
+                    DeviceCtl::pinned(&cpu, cpu.cap_max),
+                    DeviceCtl::pinned(&gpu, gpu.cap_max),
+                ],
+            );
+            (ctl, cap_sum, Box::new(Uncontrolled { pcap_max: cap_sum }))
+        }
+    };
+
+    let mut engine = ControlLoop::new(HeteroBackend::new(node, ctl), 1.0);
+    engine.set_quota(Some(quota(ctx)));
+    engine.set_max_time(600.0);
+    engine.set_initial_pcap(node_cap);
+
+    let schedule = gpu_schedule();
+    let mut now = 0.0;
+    while !engine.finished() {
+        // The GPU's phase profile switches on the schedule; the CPU stays
+        // memory-bound (the paper's STREAM workload) throughout.
+        let profile = schedule.profile_at(now);
+        engine
+            .backend_mut()
+            .node_mut()
+            .device_mut(1)
+            .set_profile(profile);
+        now += 1.0;
+        engine.tick(now, policy.as_mut());
+    }
+
+    let mut rec = engine.record();
+    rec.cluster = cluster.id.name().to_string();
+    rec.policy = match split_eps {
+        Some((split, epsilon)) => format!("hetero-{}-eps{epsilon:.2}", split.name()),
+        None => "hetero-fullcap".to_string(),
+    };
+    rec.seed = seed;
+    rec.epsilon = split_eps.map(|(_, e)| e).unwrap_or(f64::NAN);
+    rec.setpoint = f64::NAN;
+    rec.completed = engine.finish_time().is_some();
+    rec.exec_time = match engine.finish_time() {
+        Some(t) => t,
+        None => 600.0,
+    };
+    rec.beats = engine.total_beats().min(quota(ctx));
+    rec
+}
+
+/// Degradation levels swept by the hetero campaign.
+pub fn hetero_epsilons() -> Vec<f64> {
+    vec![0.05, 0.15, 0.3]
+}
+
+/// Reduce a run against its paired baseline.
+fn to_point(rec: &RunRecord, epsilon: f64, strategy: &str, baseline_exec: f64) -> HeteroPoint {
+    HeteroPoint {
+        strategy: strategy.to_string(),
+        epsilon,
+        energy: rec.energy,
+        exec_time: rec.exec_time,
+        slowdown: rec.exec_time / baseline_exec - 1.0,
+        mean_cpu_cap: rec.devices[0].pcap.time_mean(),
+        mean_gpu_cap: rec.devices[1].pcap.time_mean(),
+        completed: rec.completed,
+    }
+}
+
+/// Three-level fleet demo: N CPU+GPU nodes, slack-proportional outer
+/// budget over slack-shift inner splits. Returns (energy, makespan,
+/// completed).
+pub fn run_hetero_fleet(ctx: &Ctx, n: usize, epsilon: f64) -> (f64, f64, bool) {
+    let cluster = Cluster::get(ClusterId::Gros);
+    let specs: Vec<NodeSpec> = (0..n)
+        .map(|_| NodeSpec {
+            cluster: ClusterId::Gros,
+            model: crate::fleet::node::noise_free_model(ClusterId::Gros),
+            policy: NodePolicySpec::Static,
+            hardware: NodeHardware::cpu_gpu(&cluster, DeviceSplitSpec::SlackShift, epsilon),
+        })
+        .collect();
+    let cfg = FleetConfig {
+        budget: n as f64 * node_budget_w(),
+        total_beats: quota(ctx),
+        max_time: 600.0,
+        seed: ctx.seed ^ 0x6E7E,
+        threads: Some(1),
+        ..Default::default()
+    };
+    let out = run_fleet(&specs, &mut SlackProportional::default(), &cfg);
+    (out.total_energy, out.makespan, out.completed)
+}
+
+/// The full campaign: baseline + ε sweep × split strategies + the
+/// three-level fleet demo; writes `hetero.csv` and `hetero.json`.
+pub fn run(ctx: &Ctx) -> (String, Vec<HeteroPoint>) {
+    let seed = ctx.seed ^ 0xE7E0;
+    let baseline = run_hetero_node(ctx, None, seed);
+
+    // All (ε, split) points are independent and share one paired seed:
+    // fan them out over all cores (order-preserving par_map, same bytes as
+    // the sequential sweep — the fig7/fleet campaign convention).
+    let pairs: Vec<(f64, DeviceSplitSpec)> = hetero_epsilons()
+        .into_iter()
+        .flat_map(|eps| DeviceSplitSpec::ALL.into_iter().map(move |s| (eps, s)))
+        .collect();
+    let baseline_exec = baseline.exec_time;
+    let points: Vec<HeteroPoint> = crate::util::parallel::par_map(pairs, |(eps, split)| {
+        let rec = run_hetero_node(ctx, Some((split, eps)), seed);
+        to_point(&rec, eps, split.name(), baseline_exec)
+    });
+    let fleet_nodes = 4;
+    let (fleet_energy, fleet_makespan, fleet_completed) = run_hetero_fleet(ctx, fleet_nodes, 0.15);
+
+    // CSV.
+    let mut csv = Table::new(vec![
+        "epsilon",
+        "strategy",
+        "energy_j",
+        "exec_s",
+        "slowdown",
+        "mean_cpu_cap_w",
+        "mean_gpu_cap_w",
+        "completed",
+    ]);
+    for p in &points {
+        csv.push(vec![
+            format!("{}", p.epsilon),
+            p.strategy.clone(),
+            format!("{}", p.energy),
+            format!("{}", p.exec_time),
+            format!("{}", p.slowdown),
+            format!("{}", p.mean_cpu_cap),
+            format!("{}", p.mean_gpu_cap),
+            format!("{}", p.completed as u8),
+        ]);
+    }
+    let _ = csv.save(ctx.path("hetero.csv"));
+
+    // Machine-readable campaign JSON (the `powerctl hetero` acceptance
+    // surface): baseline + every point + the three-level fleet demo.
+    let mut j = Json::obj();
+    let mut base = Json::obj();
+    base.set("energy_j", baseline.energy)
+        .set("exec_s", baseline.exec_time)
+        .set("completed", baseline.completed);
+    let pts: Vec<Json> = points
+        .iter()
+        .map(|p| {
+            let mut o = Json::obj();
+            o.set("strategy", p.strategy.as_str())
+                .set("epsilon", p.epsilon)
+                .set("energy_j", p.energy)
+                .set("exec_s", p.exec_time)
+                .set("slowdown", p.slowdown)
+                .set("mean_cpu_cap_w", p.mean_cpu_cap)
+                .set("mean_gpu_cap_w", p.mean_gpu_cap)
+                .set("completed", p.completed);
+            o
+        })
+        .collect();
+    let mut fleet = Json::obj();
+    fleet
+        .set("nodes", fleet_nodes as u64)
+        .set("outer_strategy", "slack-proportional")
+        .set("inner_strategy", "slack-shift")
+        .set("epsilon", 0.15)
+        .set("energy_j", fleet_energy)
+        .set("makespan_s", fleet_makespan)
+        .set("completed", fleet_completed);
+    j.set("budget_w", node_budget_w())
+        .set("phase_len_s", PHASE_LEN)
+        .set("baseline", base)
+        .set("points", Json::Arr(pts))
+        .set("fleet", fleet);
+    let _ = std::fs::write(ctx.path("hetero.json"), j.pretty());
+
+    // Printed table.
+    let mut out = format!(
+        "Hetero campaign — gros CPU + GPU, node budget {:.0} W ({}% of combined rails), \
+         {}s offload phases\n\
+         baseline (full caps): E {:.0} J, T {:.1} s\n\
+         {:>5} {:<14} {:>10} {:>8} {:>7} {:>9} {:>9}\n",
+        node_budget_w(),
+        (BUDGET_FRACTION * 100.0) as u32,
+        PHASE_LEN,
+        baseline.energy,
+        baseline.exec_time,
+        "eps",
+        "split",
+        "E[J]",
+        "T[s]",
+        "ΔE%",
+        "cpu[W]",
+        "gpu[W]",
+    );
+    for p in &points {
+        out.push_str(&format!(
+            "{:>5.2} {:<14} {:>10.0} {:>8.1} {:>+6.1}% {:>9.1} {:>9.1}\n",
+            p.epsilon,
+            p.strategy,
+            p.energy,
+            p.exec_time,
+            100.0 * (1.0 - p.energy / baseline.energy),
+            p.mean_cpu_cap,
+            p.mean_gpu_cap,
+        ));
+    }
+    out.push_str(&format!(
+        "three-level fleet ({fleet_nodes} CPU+GPU nodes, slack-proportional → slack-shift): \
+         E {fleet_energy:.0} J, makespan {fleet_makespan:.1} s, completed {fleet_completed}\n"
+    ));
+    (out, points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::common::Scale;
+    use crate::sim::plant::PowerProfile;
+
+    fn ctx(tag: &str) -> Ctx {
+        Ctx::new(
+            std::env::temp_dir().join(format!("powerctl-hetero-{tag}")),
+            33,
+            Scale::Fast,
+        )
+    }
+
+    #[test]
+    fn gpu_offload_schedule_alternates() {
+        let s = gpu_schedule();
+        assert_eq!(s.profile_at(0.0), PowerProfile::MemoryBound);
+        assert_eq!(s.profile_at(PHASE_LEN + 1.0), PowerProfile::ComputeBound);
+    }
+
+    #[test]
+    fn feedback_splits_save_energy_vs_fullcap_baseline() {
+        let ctx = ctx("accept");
+        let seed = ctx.seed ^ 0xE7E0;
+        let baseline = run_hetero_node(&ctx, None, seed);
+        assert!(baseline.completed, "baseline must complete");
+        let slack = run_hetero_node(&ctx, Some((DeviceSplitSpec::SlackShift, 0.15)), seed);
+        assert!(slack.completed, "slack-shift run must complete");
+        assert!(
+            slack.energy < baseline.energy,
+            "no energy saved: {} vs baseline {}",
+            slack.energy,
+            baseline.energy
+        );
+        // The budget is conserved: actuated node cap within the budget.
+        let budget = node_budget_w();
+        for &cap in &slack.pcap.values {
+            assert!(cap <= budget + 1e-9, "cap {cap} over budget {budget}");
+        }
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    }
+
+    #[test]
+    fn campaign_emits_json_with_all_strategies() {
+        let ctx = ctx("json");
+        let (out, points) = run(&ctx);
+        assert_eq!(points.len(), hetero_epsilons().len() * DeviceSplitSpec::ALL.len());
+        assert!(out.contains("slack-shift"));
+        assert!(ctx.path("hetero.csv").exists());
+        let text = std::fs::read_to_string(ctx.path("hetero.json")).unwrap();
+        let j = Json::parse(&text).unwrap();
+        let pts = j.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), points.len());
+        // ≥2 device-split strategies compared, machine-readably.
+        let mut names: Vec<&str> = pts
+            .iter()
+            .filter_map(|p| p.get("strategy").and_then(|s| s.as_str()))
+            .collect();
+        names.sort_unstable();
+        names.dedup();
+        assert!(names.len() >= 2, "strategies in JSON: {names:?}");
+        assert!(j.get("baseline").is_some());
+        assert!(j.get_path(&["fleet", "completed"]).is_some());
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    }
+}

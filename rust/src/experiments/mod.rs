@@ -10,6 +10,7 @@
 //! | [`fig7`]  | Fig. 7 time/energy Pareto sweep                    |
 //! | [`ablation`] | design-choice ablations (median/mean, excitation shape, adaptive PI) |
 //! | [`fleet`] | fleet-budget campaign: energy vs ε across budget strategies |
+//! | [`hetero`] | heterogeneous-node campaign: CPU+GPU device-split strategies |
 //!
 //! Every runner writes its raw data as CSV under the context's output
 //! directory and returns a printed summary with the paper-shape checks.
@@ -22,6 +23,7 @@ pub mod fig5;
 pub mod fig6;
 pub mod fig7;
 pub mod fleet;
+pub mod hetero;
 pub mod replay;
 pub mod tables;
 

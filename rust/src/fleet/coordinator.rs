@@ -274,9 +274,10 @@ pub fn run_fleet_threaded(
 mod tests {
     use super::*;
     use crate::control::budget::{SlackProportional, UniformBudget};
+    use crate::control::node_budget::DeviceSplitSpec;
     use crate::fleet::node::tests::fitted;
-    use crate::fleet::node::NodePolicySpec;
-    use crate::sim::cluster::ClusterId;
+    use crate::fleet::node::{NodeHardware, NodePolicySpec};
+    use crate::sim::cluster::{Cluster, ClusterId};
 
     fn specs(n: usize, epsilon: f64) -> Vec<NodeSpec> {
         let order = [ClusterId::Gros, ClusterId::Dahu, ClusterId::Yeti];
@@ -287,6 +288,7 @@ mod tests {
                     cluster,
                     model: fitted(cluster),
                     policy: NodePolicySpec::Pi { epsilon },
+                    hardware: NodeHardware::SingleCpu,
                 }
             })
             .collect()
@@ -376,6 +378,52 @@ mod tests {
             assert_eq!(ra.energy, rb.energy);
             assert_eq!(ra.exec_time, rb.exec_time);
             assert_eq!(ra.beats, rb.beats);
+        }
+    }
+
+    #[test]
+    fn three_level_fleet_budget_reaches_devices() {
+        // Full hierarchy: fleet budget → node ceilings → device caps. A
+        // 3-node CPU+GPU fleet under a tight global budget must complete,
+        // conserve the budget at every epoch, and produce per-device
+        // traces whose caps explain each node's actuated cap.
+        let cluster = Cluster::get(ClusterId::Gros);
+        let specs: Vec<NodeSpec> = (0..3)
+            .map(|_| NodeSpec {
+                cluster: ClusterId::Gros,
+                model: fitted(ClusterId::Gros),
+                policy: NodePolicySpec::Static,
+                hardware: NodeHardware::cpu_gpu(&cluster, DeviceSplitSpec::SlackShift, 0.15),
+            })
+            .collect();
+        let cfg = FleetConfig {
+            budget: 3.0 * 360.0, // < 3 × 520 W: reallocation has to matter
+            total_beats: 900,
+            max_time: 300.0,
+            ..Default::default()
+        };
+        let out = run_fleet(&specs, &mut SlackProportional::default(), &cfg);
+        assert!(out.completed, "hetero fleet did not finish");
+        for (t, limits) in &out.limits_trace {
+            let total: f64 = limits.iter().sum();
+            assert!(total <= cfg.budget + 1e-6, "budget violated at t={t}");
+            for &l in limits {
+                assert!((140.0..=520.0).contains(&l), "node ceiling {l} out of range");
+            }
+        }
+        for r in &out.records {
+            assert_eq!(r.devices.len(), 2, "node {} device traces", r.node_id);
+            // Device caps sum to the node's actuated cap, row by row.
+            for i in 0..r.pcap.len() {
+                let total = r.devices[0].pcap.values[i] + r.devices[1].pcap.values[i];
+                assert!(
+                    (total - r.pcap.values[i]).abs() < 1e-9,
+                    "node {} row {i}: {} vs {}",
+                    r.node_id,
+                    total,
+                    r.pcap.values[i]
+                );
+            }
         }
     }
 

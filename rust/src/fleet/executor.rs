@@ -27,11 +27,12 @@
 //! moves wall time, never bytes — pinned by `tests/fleet_equivalence.rs`.
 
 use crate::control::budget::NodeReport;
-use crate::coordinator::engine::{ControlLoop, LockstepBackend};
+use crate::coordinator::engine::ControlLoop;
 use crate::coordinator::records::RunRecord;
-use crate::fleet::node::{finalize_record, node_report, BudgetedPolicy, NodeSpec, WorkerConfig};
+use crate::fleet::node::{
+    build_node, finalize_record, node_report, BudgetedPolicy, FleetBackend, NodeSpec, WorkerConfig,
+};
 use crate::sim::cluster::Cluster;
-use crate::sim::node::NodeSim;
 use crate::util::parallel::WorkerPool;
 
 /// Cap on pre-reserved sample rows per node (`max_time / period` can be
@@ -42,7 +43,7 @@ const MAX_RESERVED_ROWS: usize = 4096;
 /// report is stamped here by the owning worker each tick and mirrored into
 /// the executor's contiguous buffer after the join.
 struct NodeCell {
-    engine: ControlLoop<LockstepBackend>,
+    engine: ControlLoop<FleetBackend>,
     policy: BudgetedPolicy,
     cluster: Cluster,
     seed: u64,
@@ -55,7 +56,7 @@ impl NodeCell {
         if !self.engine.finished() {
             self.engine.tick(now, &mut self.policy);
         }
-        self.report = node_report(self.engine.node_id(), &self.engine, &self.policy, &self.cluster);
+        self.report = node_report(self.engine.node_id(), &self.engine, &self.policy);
     }
 }
 
@@ -99,15 +100,8 @@ impl ShardedExecutor {
             .enumerate()
             .map(|(i, (spec, &seed))| {
                 let cluster = Cluster::get(spec.cluster);
-                let policy = BudgetedPolicy::new(spec, &cluster, initial_limit);
-                let node = NodeSim::new(cluster.clone(), seed);
-                let mut engine = ControlLoop::new(LockstepBackend::new(node), cfg.period);
-                engine.set_node_id(i as u32);
-                engine.set_quota(Some(cfg.total_beats));
-                engine.set_max_time(cfg.max_time);
-                engine.set_initial_pcap(policy.initial_pcap());
-                engine.reserve_samples(rows);
-                let report = node_report(i as u32, &engine, &policy, &cluster);
+                let (engine, policy) = build_node(i as u32, spec, &cluster, initial_limit, cfg, seed, rows);
+                let report = node_report(i as u32, &engine, &policy);
                 NodeCell {
                     engine,
                     policy,
@@ -128,10 +122,12 @@ impl ShardedExecutor {
         }
     }
 
+    /// Number of node engines owned by the executor.
     pub fn num_nodes(&self) -> usize {
         self.cells.len()
     }
 
+    /// Worker threads in the persistent pool.
     pub fn threads(&self) -> usize {
         self.pool.threads()
     }
@@ -187,8 +183,9 @@ impl ShardedExecutor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::control::node_budget::DeviceSplitSpec;
     use crate::fleet::node::tests::fitted;
-    use crate::fleet::node::NodePolicySpec;
+    use crate::fleet::node::{NodeHardware, NodePolicySpec};
     use crate::sim::cluster::ClusterId;
 
     fn specs(n: usize) -> Vec<NodeSpec> {
@@ -197,6 +194,7 @@ mod tests {
                 cluster: ClusterId::Gros,
                 model: fitted(ClusterId::Gros),
                 policy: NodePolicySpec::Pi { epsilon: 0.15 },
+                hardware: NodeHardware::SingleCpu,
             })
             .collect()
     }
@@ -258,6 +256,38 @@ mod tests {
             assert_eq!(ra.pcap.values, rb.pcap.values);
             assert_eq!(ra.energy, rb.energy);
         }
+    }
+
+    #[test]
+    fn mixed_fleet_ticks_hetero_and_classic_nodes() {
+        // Three-level check at executor scope: a fleet mixing classic and
+        // CPU+GPU nodes runs to completion; hetero records carry device
+        // traces, classic ones stay trace-free.
+        let cluster = Cluster::get(ClusterId::Gros);
+        let mut specs = specs(2);
+        specs.push(NodeSpec {
+            cluster: ClusterId::Gros,
+            model: fitted(ClusterId::Gros),
+            policy: NodePolicySpec::Static,
+            hardware: NodeHardware::cpu_gpu(&cluster, DeviceSplitSpec::SlackShift, 0.15),
+        });
+        let seeds = [5u64, 6, 7];
+        let mut exec = ShardedExecutor::new(&specs, 95.0, cfg(), &seeds, 2);
+        let mut now = 0.0;
+        for _ in 0..120 {
+            now += 1.0;
+            if exec.tick(now) {
+                break;
+            }
+        }
+        // The hetero node reports its summed device range.
+        let r = exec.reports()[2];
+        assert_eq!(r.pcap_min, 140.0);
+        assert_eq!(r.pcap_max, 520.0);
+        let records = exec.into_records();
+        assert!(records[0].devices.is_empty());
+        assert!(records[1].devices.is_empty());
+        assert_eq!(records[2].devices.len(), 2);
     }
 
     #[test]

@@ -19,7 +19,9 @@
 //!
 //! The layering mirrors the single-node honesty rule: the budget layer only
 //! sees what node controllers measured ([`NodeReport`]s), never simulator
-//! ground truth.
+//! ground truth. Nodes themselves may be hierarchical
+//! ([`NodeHardware::Hetero`]): the fleet ceiling lands on the node, whose
+//! inner loop splits it across devices — three control levels end to end.
 //!
 //! [`NodeReport`]: crate::control::budget::NodeReport
 
@@ -29,4 +31,4 @@ pub mod node;
 
 pub use coordinator::{run_fleet, run_fleet_threaded, FleetConfig, FleetOutcome};
 pub use executor::ShardedExecutor;
-pub use node::{BudgetedPolicy, NodePolicySpec, NodeSpec, WorkerConfig};
+pub use node::{BudgetedPolicy, FleetBackend, NodeHardware, NodePolicySpec, NodeSpec, WorkerConfig};

@@ -19,13 +19,15 @@ use std::thread::JoinHandle;
 
 use crate::control::baseline::Policy;
 use crate::control::budget::NodeReport;
+use crate::control::node_budget::{ideal_device_model, DeviceCtl, DeviceSplitSpec, NodeBudgetController};
 use crate::control::pi::{PiConfig, PiController};
-use crate::coordinator::engine::{ControlLoop, LockstepBackend};
-use crate::coordinator::records::RunRecord;
-use crate::ident::static_model::{StaticModel, StaticPoint};
-use crate::ident::DynamicModel;
+use crate::coordinator::engine::{ControlLoop, LockstepBackend, NodeBackend, PeriodSensors};
+use crate::coordinator::hetero::HeteroBackend;
+use crate::coordinator::records::{DeviceTrace, RunRecord};
 use crate::sim::cluster::{Cluster, ClusterId};
+use crate::sim::device::DeviceSpec;
 use crate::sim::node::NodeSim;
+use crate::ident::DynamicModel;
 
 /// The exact fitted model a perfect (noise-free) identification campaign
 /// would produce for `id` — test/bench support shared by the fleet unit
@@ -34,22 +36,7 @@ use crate::sim::node::NodeSim;
 /// from noisy campaigns (the honesty rule, DESIGN.md §2).
 #[doc(hidden)]
 pub fn noise_free_model(id: ClusterId) -> DynamicModel {
-    let c = Cluster::get(id);
-    let points: Vec<StaticPoint> = (0..60)
-        .map(|i| {
-            let pcap = c.pcap_min + i as f64 * ((c.pcap_max - c.pcap_min) / 59.0);
-            StaticPoint {
-                pcap,
-                power: c.expected_power(pcap),
-                progress: c.static_progress(pcap),
-            }
-        })
-        .collect();
-    DynamicModel {
-        static_model: StaticModel::fit(&points),
-        tau: c.tau,
-        rmse: 0.0,
-    }
+    ideal_device_model(&DeviceSpec::cpu(&Cluster::get(id)))
 }
 
 /// How a fleet node regulates itself below its ceiling.
@@ -63,13 +50,118 @@ pub enum NodePolicySpec {
     Static,
 }
 
-/// One node of the fleet: which Table 1 cluster it is, the *fitted* model
-/// its controller is tuned from (never sim ground truth), and its policy.
+/// What hardware a fleet node simulates — the third control level.
+#[derive(Debug, Clone)]
+pub enum NodeHardware {
+    /// The paper's single-processor node: one CPU device carrying the
+    /// cluster's physics. Classic path, byte-identical records.
+    SingleCpu,
+    /// A heterogeneous node: the listed devices behind a
+    /// [`HeteroBackend`], whose inner loop splits the node cap across
+    /// devices each period. Pair it with [`NodePolicySpec::Static`] — the
+    /// feedback runs per device (this variant's `epsilon`), and a
+    /// node-level PI over the merged progress signal is rejected at
+    /// construction.
+    Hetero {
+        /// The node's devices (CPU first by convention).
+        devices: Vec<DeviceSpec>,
+        /// Which [`BudgetPolicy`](crate::control::budget::BudgetPolicy)
+        /// shape apportions the node cap into device ceilings.
+        split: DeviceSplitSpec,
+        /// ε of each device's own PI (tuned from its ideal fitted model).
+        epsilon: f64,
+    },
+}
+
+impl NodeHardware {
+    /// CPU (from `cluster`) + GPU preset under `split`, device PIs at
+    /// `epsilon` — the EcoShift-style node.
+    pub fn cpu_gpu(cluster: &Cluster, split: DeviceSplitSpec, epsilon: f64) -> NodeHardware {
+        NodeHardware::Hetero {
+            devices: vec![DeviceSpec::cpu(cluster), DeviceSpec::gpu()],
+            split,
+            epsilon,
+        }
+    }
+
+    /// Node-level hardware cap range [W] (the hosting cluster's range for
+    /// single-CPU nodes; Σ device ranges for hetero nodes).
+    pub fn cap_range(&self, cluster: &Cluster) -> (f64, f64) {
+        match self {
+            NodeHardware::SingleCpu => (cluster.pcap_min, cluster.pcap_max),
+            NodeHardware::Hetero { devices, .. } => devices
+                .iter()
+                .fold((0.0, 0.0), |(lo, hi), d| (lo + d.cap_min, hi + d.cap_max)),
+        }
+    }
+}
+
+/// One node of the fleet: which Table 1 cluster hosts it, the *fitted*
+/// model its node-level controller is tuned from (never sim ground truth),
+/// its node policy, and the hardware it simulates.
 #[derive(Debug, Clone)]
 pub struct NodeSpec {
+    /// Hosting Table 1 cluster (names the record; CPU physics).
     pub cluster: ClusterId,
+    /// Fitted node-level model the node policy is tuned from.
     pub model: DynamicModel,
+    /// Node-level policy below the fleet ceiling.
     pub policy: NodePolicySpec,
+    /// Hardware the node simulates (single CPU or a device set).
+    pub hardware: NodeHardware,
+}
+
+/// The node backend a fleet engine drives: the classic single-plant
+/// lockstep backend, or the hierarchical multi-device backend. A concrete
+/// enum (not a trait object) keeps the executor's cells allocation-free
+/// and `Send` without boxing.
+pub enum FleetBackend {
+    /// Single-device node (the paper's path).
+    Classic(LockstepBackend),
+    /// Multi-device node with the device-split inner loop inside.
+    Hetero(HeteroBackend),
+}
+
+impl FleetBackend {
+    /// Pre-size per-device trace logs (no-op for classic nodes).
+    pub fn reserve_rows(&mut self, rows: usize) {
+        if let FleetBackend::Hetero(h) = self {
+            h.reserve_traces(rows);
+        }
+    }
+}
+
+impl NodeBackend for FleetBackend {
+    fn set_pcap(&mut self, watts: f64) -> f64 {
+        match self {
+            FleetBackend::Classic(b) => b.set_pcap(watts),
+            FleetBackend::Hetero(b) => b.set_pcap(watts),
+        }
+    }
+    fn pcap(&self) -> f64 {
+        match self {
+            FleetBackend::Classic(b) => b.pcap(),
+            FleetBackend::Hetero(b) => b.pcap(),
+        }
+    }
+    fn advance(&mut self, now: f64, beats: &mut Vec<f64>) -> PeriodSensors {
+        match self {
+            FleetBackend::Classic(b) => b.advance(now, beats),
+            FleetBackend::Hetero(b) => b.advance(now, beats),
+        }
+    }
+    fn note_period(&mut self, now: f64) {
+        match self {
+            FleetBackend::Classic(b) => b.note_period(now),
+            FleetBackend::Hetero(b) => b.note_period(now),
+        }
+    }
+    fn device_traces(&self) -> Vec<DeviceTrace> {
+        match self {
+            FleetBackend::Classic(b) => b.device_traces(),
+            FleetBackend::Hetero(b) => b.device_traces(),
+        }
+    }
 }
 
 /// The node-local policy with a movable budget ceiling.
@@ -88,8 +180,16 @@ enum Kind {
 }
 
 impl BudgetedPolicy {
+    /// Node policy with the hosting cluster's hardware range (the classic
+    /// single-CPU case; hetero nodes go through
+    /// [`BudgetedPolicy::with_range`] with their summed device range).
     pub fn new(spec: &NodeSpec, cluster: &Cluster, initial_limit: f64) -> Self {
-        let (hw_min, hw_max) = (cluster.pcap_min, cluster.pcap_max);
+        BudgetedPolicy::with_range(spec, (cluster.pcap_min, cluster.pcap_max), initial_limit)
+    }
+
+    /// Node policy with an explicit node-level cap range [W].
+    pub fn with_range(spec: &NodeSpec, range: (f64, f64), initial_limit: f64) -> Self {
+        let (hw_min, hw_max) = range;
         let limit = initial_limit.clamp(hw_min, hw_max);
         match spec.policy {
             NodePolicySpec::Pi { epsilon } => {
@@ -117,6 +217,7 @@ impl BudgetedPolicy {
         }
     }
 
+    /// Move the node ceiling; the PI's actuator range follows it.
     pub fn set_limit(&mut self, watts: f64) {
         self.limit = watts.clamp(self.hw_min, self.hw_max);
         if let Kind::Pi(ctl) = &mut self.kind {
@@ -124,14 +225,22 @@ impl BudgetedPolicy {
         }
     }
 
+    /// The ceiling currently in force [W].
     pub fn limit(&self) -> f64 {
         self.limit
     }
 
+    /// Node-level hardware cap range [W].
+    pub fn hw_range(&self) -> (f64, f64) {
+        (self.hw_min, self.hw_max)
+    }
+
+    /// The node's progress setpoint [Hz] (NaN for static nodes).
     pub fn setpoint(&self) -> f64 {
         self.setpoint
     }
 
+    /// The node's eps (NaN for static nodes).
     pub fn epsilon(&self) -> f64 {
         self.epsilon
     }
@@ -177,12 +286,15 @@ pub(crate) enum Cmd {
 
 /// Worker → coordinator reply, one per tick.
 pub(crate) struct Reply {
+    /// The tick's report for the budget layer.
     pub report: NodeReport,
 }
 
 /// Handle to a spawned node worker.
 pub(crate) struct WorkerHandle {
+    /// Command channel into the worker.
     pub cmd: mpsc::Sender<Cmd>,
+    /// Join handle returning the final record.
     pub join: JoinHandle<RunRecord>,
 }
 
@@ -190,20 +302,77 @@ pub(crate) struct WorkerHandle {
 /// by the legacy per-node-thread protocol and the sharded executor.
 #[derive(Debug, Clone, Copy)]
 pub struct WorkerConfig {
+    /// Node control period [s].
     pub period: f64,
+    /// Per-node workload length [heartbeats].
     pub total_beats: u64,
+    /// Hard stop [s].
     pub max_time: f64,
+}
+
+/// Build one fleet node engine + its budgeted node policy: the single
+/// construction path both executors share (classic and hetero hardware),
+/// so their nodes are configured byte-identically.
+pub(crate) fn build_node(
+    node_id: u32,
+    spec: &NodeSpec,
+    cluster: &Cluster,
+    initial_limit: f64,
+    cfg: WorkerConfig,
+    seed: u64,
+    reserve_rows: usize,
+) -> (ControlLoop<FleetBackend>, BudgetedPolicy) {
+    // A hetero node's feedback lives in the device layer: a node-level PI
+    // would be tuned from a single-device fitted model yet fed the merged
+    // multi-device progress signal, so its setpoint is meaningless and it
+    // pins the node cap at a rail. Reject the combination loudly.
+    assert!(
+        matches!(spec.hardware, NodeHardware::SingleCpu)
+            || matches!(spec.policy, NodePolicySpec::Static),
+        "hetero fleet nodes must use NodePolicySpec::Static: their PI control runs \
+         per device inside the node (NodeHardware::Hetero's `epsilon`), not at node scope"
+    );
+    let range = spec.hardware.cap_range(cluster);
+    let policy = BudgetedPolicy::with_range(spec, range, initial_limit);
+    let backend = match &spec.hardware {
+        NodeHardware::SingleCpu => {
+            FleetBackend::Classic(LockstepBackend::new(NodeSim::new(cluster.clone(), seed)))
+        }
+        NodeHardware::Hetero {
+            devices,
+            split,
+            epsilon,
+        } => {
+            let node = NodeSim::hetero(cluster.clone(), devices, seed);
+            let ctls: Vec<DeviceCtl> = devices
+                .iter()
+                .map(|d| DeviceCtl::pi(d, ideal_device_model(d), *epsilon, d.cap_max))
+                .collect();
+            FleetBackend::Hetero(HeteroBackend::new(
+                node,
+                NodeBudgetController::new(split.build(), ctls),
+            ))
+        }
+    };
+    let mut engine = ControlLoop::new(backend, cfg.period);
+    engine.set_node_id(node_id);
+    engine.set_quota(Some(cfg.total_beats));
+    engine.set_max_time(cfg.max_time);
+    engine.set_initial_pcap(policy.initial_pcap());
+    engine.reserve_samples(reserve_rows);
+    engine.backend_mut().reserve_rows(reserve_rows);
+    (engine, policy)
 }
 
 /// Build the per-tick report the budget layer sees. One function used by
 /// both fleet execution paths, so their reports are byte-identical.
 pub(crate) fn node_report(
     node_id: u32,
-    engine: &ControlLoop<LockstepBackend>,
+    engine: &ControlLoop<FleetBackend>,
     policy: &BudgetedPolicy,
-    cluster: &Cluster,
 ) -> NodeReport {
     let last = engine.samples().last();
+    let (pcap_min, pcap_max) = policy.hw_range();
     NodeReport {
         node_id,
         limit: policy.limit(),
@@ -211,8 +380,8 @@ pub(crate) fn node_report(
         power: last.map(|s| s.power).unwrap_or(f64::NAN),
         progress: last.map(|s| s.progress).unwrap_or(0.0),
         setpoint: policy.setpoint(),
-        pcap_min: cluster.pcap_min,
-        pcap_max: cluster.pcap_max,
+        pcap_min,
+        pcap_max,
         done: engine.finished(),
     }
 }
@@ -225,7 +394,7 @@ pub(crate) fn node_report(
 /// `max_time` is not a period multiple); a coordinator stop reports the
 /// last sample time.
 pub(crate) fn finalize_record(
-    engine: &ControlLoop<LockstepBackend>,
+    engine: &ControlLoop<FleetBackend>,
     policy: &BudgetedPolicy,
     cluster: &Cluster,
     seed: u64,
@@ -258,13 +427,7 @@ pub(crate) fn spawn_worker(
     let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
     let join = std::thread::spawn(move || {
         let cluster = Cluster::get(spec.cluster);
-        let mut policy = BudgetedPolicy::new(&spec, &cluster, initial_limit);
-        let node = NodeSim::new(cluster.clone(), seed);
-        let mut engine = ControlLoop::new(LockstepBackend::new(node), cfg.period);
-        engine.set_node_id(node_id);
-        engine.set_quota(Some(cfg.total_beats));
-        engine.set_max_time(cfg.max_time);
-        engine.set_initial_pcap(policy.initial_pcap());
+        let (mut engine, mut policy) = build_node(node_id, &spec, &cluster, initial_limit, cfg, seed, 0);
 
         while let Ok(cmd) = cmd_rx.recv() {
             match cmd {
@@ -274,7 +437,7 @@ pub(crate) fn spawn_worker(
                     if !engine.finished() {
                         engine.tick(now, &mut policy);
                     }
-                    let report = node_report(node_id, &engine, &policy, &cluster);
+                    let report = node_report(node_id, &engine, &policy);
                     if reply_tx.send(Reply { report }).is_err() {
                         break; // coordinator gone
                     }
@@ -301,6 +464,7 @@ pub(crate) mod tests {
             cluster: ClusterId::Gros,
             model: fitted(ClusterId::Gros),
             policy: NodePolicySpec::Pi { epsilon: 0.0 },
+            hardware: NodeHardware::SingleCpu,
         };
         let c = Cluster::get(ClusterId::Gros);
         let mut p = BudgetedPolicy::new(&spec, &c, 75.0);
@@ -325,6 +489,7 @@ pub(crate) mod tests {
             cluster: ClusterId::Dahu,
             model: fitted(ClusterId::Dahu),
             policy: NodePolicySpec::Static,
+            hardware: NodeHardware::SingleCpu,
         };
         let c = Cluster::get(ClusterId::Dahu);
         let mut p = BudgetedPolicy::new(&spec, &c, 90.0);
@@ -340,6 +505,7 @@ pub(crate) mod tests {
             cluster: ClusterId::Gros,
             model: fitted(ClusterId::Gros),
             policy: NodePolicySpec::Pi { epsilon: 0.15 },
+            hardware: NodeHardware::SingleCpu,
         };
         let (reply_tx, reply_rx) = mpsc::channel();
         let cfg = WorkerConfig {
@@ -368,5 +534,39 @@ pub(crate) mod tests {
         assert_eq!(rec.beats, 400);
         assert!(rec.energy > 0.0);
         assert_eq!(rec.cluster, "gros");
+        assert!(rec.devices.is_empty(), "single-CPU node must not carry device traces");
+    }
+
+    #[test]
+    fn hetero_node_reports_summed_range_and_device_traces() {
+        let cluster = Cluster::get(ClusterId::Gros);
+        let spec = NodeSpec {
+            cluster: ClusterId::Gros,
+            model: fitted(ClusterId::Gros),
+            policy: NodePolicySpec::Static,
+            hardware: NodeHardware::cpu_gpu(&cluster, DeviceSplitSpec::SlackShift, 0.15),
+        };
+        let cfg = WorkerConfig {
+            period: 1.0,
+            total_beats: 2_000,
+            max_time: 120.0,
+        };
+        let (mut engine, mut policy) = build_node(0, &spec, &cluster, 380.0, cfg, 77, 0);
+        let mut now = 0.0;
+        while !engine.finished() && now < cfg.max_time {
+            now += 1.0;
+            engine.tick(now, &mut policy);
+        }
+        let report = node_report(0, &engine, &policy);
+        assert_eq!(report.pcap_min, 40.0 + 100.0);
+        assert_eq!(report.pcap_max, 120.0 + 400.0);
+        // Static node policy keeps the ceiling at 380 W; the inner loop may
+        // actuate less (intra-node slack), never more.
+        assert!(report.pcap <= 380.0 + 1e-9, "actuated {}", report.pcap);
+        let rec = finalize_record(&engine, &policy, &cluster, 77, cfg);
+        assert_eq!(rec.devices.len(), 2);
+        assert_eq!(rec.devices[0].kind, "cpu");
+        assert_eq!(rec.devices[1].kind, "gpu");
+        assert!(rec.completed, "hetero node did not finish its quota");
     }
 }

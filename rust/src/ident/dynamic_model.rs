@@ -16,22 +16,28 @@ use crate::util::stats;
 /// (the coordinator's records, one row per control period).
 #[derive(Debug, Clone, Default)]
 pub struct SampledRun {
+    /// Sample times [s].
     pub times: Vec<f64>,
+    /// Cap in force over each transition [W].
     pub pcaps: Vec<f64>,
+    /// Measured progress at each sample [Hz].
     pub progress: Vec<f64>,
 }
 
 impl SampledRun {
+    /// Append one sampled (time, cap, progress) row.
     pub fn push(&mut self, t: f64, pcap: f64, progress: f64) {
         self.times.push(t);
         self.pcaps.push(pcap);
         self.progress.push(progress);
     }
 
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.times.len()
     }
 
+    /// True when no samples were recorded.
     pub fn is_empty(&self) -> bool {
         self.times.is_empty()
     }
@@ -40,6 +46,7 @@ impl SampledRun {
 /// The fitted first-order model.
 #[derive(Debug, Clone)]
 pub struct DynamicModel {
+    /// The fitted static characteristic (stage 1).
     pub static_model: StaticModel,
     /// Time constant τ [s].
     pub tau: f64,

@@ -91,6 +91,7 @@ pub fn solve(a: &mut [f64], b: &mut [f64], n: usize) -> Option<Vec<f64>> {
 /// Options for [`levenberg_marquardt`].
 #[derive(Debug, Clone)]
 pub struct LmOptions {
+    /// Iteration budget of the LM loop.
     pub max_iterations: usize,
     /// Stop when the relative SSR improvement falls below this.
     pub tolerance: f64,
@@ -98,6 +99,7 @@ pub struct LmOptions {
     pub lambda0: f64,
     /// Optional per-parameter lower/upper bounds (projected after each step).
     pub lower: Option<Vec<f64>>,
+    /// Optional per-parameter upper bounds.
     pub upper: Option<Vec<f64>>,
 }
 

@@ -47,6 +47,17 @@ pub fn constant(pcap: f64, duration: f64) -> Plan {
 
 /// §4.3 staircase: from `lo` to `hi` in `step` increments, holding each
 /// level for `hold` seconds (Fig. 3 uses 40→120 W by 20 W).
+///
+/// ```
+/// use powerctl::ident::signals::staircase;
+///
+/// // The paper's Fig. 3 plan: five 20 W levels held 20 s each.
+/// let plan = staircase(40.0, 120.0, 20.0, 20.0);
+/// assert_eq!(plan.levels(), 5);
+/// assert_eq!(plan.pcap_at(0.0), 40.0);   // first level…
+/// assert_eq!(plan.pcap_at(20.0), 60.0);  // …steps up at each hold boundary
+/// assert_eq!(plan.duration, 100.0);
+/// ```
 pub fn staircase(lo: f64, hi: f64, step: f64, hold: f64) -> Plan {
     assert!(step > 0.0 && hi >= lo && hold > 0.0);
     let mut schedule = TimeSeries::new();

@@ -106,6 +106,29 @@ impl StaticModel {
 
     /// Eq. (2): linearized powercap
     /// `pcap_L = −e^{−α(a·pcap + b − β)}` ∈ (−∞, 0).
+    ///
+    /// The point of the linearization (Fig. 4b): in the transformed
+    /// coordinates the saturating plant is exactly linear,
+    /// `progress_L = K_L · pcap_L`, and
+    /// [`delinearize_pcap`](Self::delinearize_pcap) inverts the transform.
+    ///
+    /// ```
+    /// use powerctl::ident::StaticModel;
+    ///
+    /// let m = StaticModel {
+    ///     a: 0.83, b: 7.07, alpha: 0.047, beta: 28.5, k_l: 25.6,
+    ///     r_squared: 1.0,
+    /// };
+    /// for pcap in [40.0, 87.3, 120.0] {
+    ///     // Linearity in the transformed coordinates…
+    ///     let lhs = m.linearize_progress(m.predict(pcap));
+    ///     let rhs = m.k_l * m.linearize_pcap(pcap);
+    ///     assert!((lhs - rhs).abs() < 1e-9);
+    ///     // …and the inverse recovers the physical cap.
+    ///     let back = m.delinearize_pcap(m.linearize_pcap(pcap));
+    ///     assert!((back - pcap).abs() < 1e-9);
+    /// }
+    /// ```
     pub fn linearize_pcap(&self, pcap: f64) -> f64 {
         -(-self.alpha * (self.power(pcap) - self.beta)).exp()
     }

@@ -18,8 +18,19 @@
 //!   the loop to N nodes under one global power budget. Python never runs
 //!   on the control path.
 //!
-//! See `DESIGN.md` (repo root) for the system inventory and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! Control is **hierarchical** (device → node → fleet): a node may carry
+//! several devices (CPU + GPU — [`sim::device`]), each under its own PI
+//! below a movable ceiling; the node splits its cap across devices
+//! ([`control::node_budget`] behind
+//! [`HeteroBackend`](coordinator::hetero::HeteroBackend)), and the fleet
+//! splits the global budget across nodes ([`control::budget`]). A
+//! single-device node collapses to the paper's loop, byte for byte.
+//!
+//! See `README.md` for the quickstart and subcommand map, `DESIGN.md` for
+//! the system inventory, `EXPERIMENTS.md` for paper-vs-measured results,
+//! and `docs/API.md` for the committed API reference.
+
+#![warn(missing_docs)]
 
 pub mod control;
 pub mod coordinator;

@@ -10,6 +10,7 @@
 //!                                      Fig. 6a single closed-loop run
 //! powerctl sweep [--full]              Fig. 6b + Fig. 7 evaluation campaign
 //! powerctl fleet [--full]              fleet-budget campaign (energy vs ε per strategy)
+//! powerctl hetero                      CPU+GPU node campaign (device-split strategies)
 //! powerctl ablation                    design-choice ablations
 //! powerctl live [--iterations n]       live PJRT workload + NRM daemon demo
 //! powerctl all [--full]                everything, in order
@@ -36,6 +37,7 @@ fn cli() -> Cli {
         .subcommand("control", "single closed-loop run: Fig. 6a")
         .subcommand("sweep", "full evaluation campaign: Fig. 6b + Fig. 7")
         .subcommand("fleet", "fleet-budget campaign: N nodes under one global power budget")
+        .subcommand("hetero", "heterogeneous-node campaign: CPU+GPU device-split strategies")
         .subcommand("ablation", "design-choice ablations")
         .subcommand("replay", "re-fit models + aggregates from saved campaign CSVs")
         .subcommand("live", "live demo: PJRT workload + NRM daemon + PI")
@@ -103,6 +105,15 @@ fn main() {
             print!("{out}");
             println!("raw points: {}", ctx.path("fleet.csv").display());
         }
+        "hetero" => {
+            let (out, _) = experiments::hetero::run(&ctx);
+            print!("{out}");
+            println!(
+                "raw points: {} / machine-readable: {}",
+                ctx.path("hetero.csv").display(),
+                ctx.path("hetero.json").display()
+            );
+        }
         "ablation" => {
             let idents = experiments::identify_all(&ctx);
             print!("{}", experiments::ablation::run(&ctx, &idents));
@@ -131,6 +142,8 @@ fn main() {
             print!("{f7}");
             let (fl, _) = experiments::fleet::run(&ctx, &idents);
             print!("{fl}");
+            let (ht, _) = experiments::hetero::run(&ctx);
+            print!("{ht}");
             print!("{}", experiments::ablation::run(&ctx, &idents));
         }
         other => {

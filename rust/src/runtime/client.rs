@@ -17,6 +17,7 @@ use crate::util::error::Result;
 pub struct Runtime {
     client: xla::PjRtClient,
     dir: PathBuf,
+    /// The artifact manifest the runtime loaded.
     pub manifest: Manifest,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
 }
@@ -35,6 +36,7 @@ impl Runtime {
         })
     }
 
+    /// Name of the PJRT platform backing the runtime.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

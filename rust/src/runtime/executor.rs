@@ -68,10 +68,12 @@ impl StreamExecutor {
         self.iters_per_call
     }
 
+    /// STREAM vector length of the loaded artifact.
     pub fn n(&self) -> usize {
         self.runtime.manifest.n
     }
 
+    /// Kernel iterations executed so far.
     pub fn iterations(&self) -> u64 {
         self.iterations
     }

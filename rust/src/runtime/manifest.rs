@@ -11,6 +11,7 @@ use crate::util::json::Json;
 /// One loadable entry in the manifest.
 #[derive(Debug, Clone)]
 pub struct Entry {
+    /// HLO text filename relative to the artifact dir.
     pub file: String,
     /// STREAM iterations performed per call (0 for init).
     pub iters: u64,
@@ -32,6 +33,7 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Load and validate `manifest.json` from an artifact directory.
     pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
         let path = dir.as_ref().join("manifest.json");
         let text = std::fs::read_to_string(&path)

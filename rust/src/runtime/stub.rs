@@ -24,6 +24,7 @@ fn unavailable(what: &str) -> crate::util::error::Error {
 
 /// Stub of the PJRT artifact cache.
 pub struct Runtime {
+    /// The artifact manifest the runtime loaded.
     pub manifest: Manifest,
     dir: PathBuf,
 }
@@ -36,10 +37,12 @@ impl Runtime {
         Err(unavailable("loading XLA artifacts"))
     }
 
+    /// Stub platform name (no PJRT linked).
     pub fn platform(&self) -> String {
         "pjrt-stub".to_string()
     }
 
+    /// Stub load: always fails (build with `--features pjrt`).
     pub fn load(&mut self, _entry: &str) -> Result<()> {
         Err(unavailable("compiling an artifact"))
     }
@@ -56,10 +59,12 @@ pub struct StreamExecutor {
 }
 
 impl StreamExecutor {
+    /// Stub constructor mirroring the PJRT executor's signature.
     pub fn new(runtime: Runtime, seed: i32, check_digest: bool) -> Result<StreamExecutor> {
         Self::with_entry(runtime, "stream_step", seed, check_digest)
     }
 
+    /// Stub constructor with an explicit manifest entry.
     pub fn with_entry(
         runtime: Runtime,
         _entry: &str,
@@ -71,22 +76,27 @@ impl StreamExecutor {
         Err(unavailable("executing the STREAM artifact"))
     }
 
+    /// Kernel iterations per `step` call.
     pub fn iters_per_call(&self) -> u64 {
         1
     }
 
+    /// STREAM vector length of the loaded artifact.
     pub fn n(&self) -> usize {
         self.runtime.manifest.n
     }
 
+    /// Kernel iterations executed so far.
     pub fn iterations(&self) -> u64 {
         0
     }
 
+    /// Bytes moved per step (STREAM accounting).
     pub fn bytes_per_step(&self) -> u64 {
         self.runtime.manifest.bytes_per_step
     }
 
+    /// Stub step: always fails (build with `--features pjrt`).
     pub fn step(&mut self) -> Result<f64> {
         Err(unavailable("executing the STREAM artifact"))
     }

@@ -22,10 +22,12 @@ pub struct VirtualClock {
 }
 
 impl VirtualClock {
+    /// Virtual clock starting at t = 0.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Advance the virtual time by `dt` seconds.
     pub fn advance(&mut self, dt: f64) {
         assert!(dt >= 0.0, "cannot advance clock backwards (dt={dt})");
         self.now += dt;
@@ -52,6 +54,7 @@ pub struct WallClock {
 }
 
 impl WallClock {
+    /// Wall clock anchored at construction time.
     pub fn new() -> Self {
         WallClock {
             epoch: Instant::now(),

@@ -16,14 +16,19 @@
 /// Identifier for one of the three reproduced clusters.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum ClusterId {
+    /// Single-socket Xeon Gold 5220 (Nancy).
     Gros,
+    /// Dual-socket Xeon Gold 6130 (Grenoble).
     Dahu,
+    /// Quad-socket Xeon Gold 6130 (Grenoble).
     Yeti,
 }
 
 impl ClusterId {
+    /// The three reproduced clusters, Table 1 order.
     pub const ALL: [ClusterId; 3] = [ClusterId::Gros, ClusterId::Dahu, ClusterId::Yeti];
 
+    /// Lowercase cluster name as used in records.
     pub fn name(self) -> &'static str {
         match self {
             ClusterId::Gros => "gros",
@@ -32,6 +37,7 @@ impl ClusterId {
         }
     }
 
+    /// Parse a (case-insensitive) cluster name.
     pub fn parse(s: &str) -> Option<ClusterId> {
         match s.to_ascii_lowercase().as_str() {
             "gros" => Some(ClusterId::Gros),
@@ -52,11 +58,16 @@ impl std::fmt::Display for ClusterId {
 /// simulated node. See module docs for the provenance of the noise block.
 #[derive(Debug, Clone)]
 pub struct Cluster {
+    /// Which cluster this is.
     pub id: ClusterId,
     // --- Table 1 ---
+    /// CPU model string (Table 1).
     pub cpu: &'static str,
+    /// Cores per CPU (Table 1).
     pub cores_per_cpu: u32,
+    /// CPU sockets = RAPL packages (Table 1).
     pub sockets: u32,
+    /// RAM size [GiB] (Table 1).
     pub ram_gib: u32,
     // --- Table 2 (ground truth for sim, target for ident) ---
     /// RAPL actuator slope: `power = a·pcap + b`.
@@ -72,7 +83,9 @@ pub struct Cluster {
     /// First-order time constant τ [s].
     pub tau: f64,
     // --- Actuation range (paper §4.3: "reasonable power range") ---
+    /// Lower end of the reasonable actuation range [W].
     pub pcap_min: f64,
+    /// Upper end of the reasonable actuation range [W].
     pub pcap_max: f64,
     // --- Noise & disturbances (qualitative→quantitative, module docs) ---
     /// Std-dev of the progress measurement noise [Hz].
@@ -88,6 +101,7 @@ pub struct Cluster {
 }
 
 impl Cluster {
+    /// Ground-truth parameter set for `id`.
     pub fn get(id: ClusterId) -> Cluster {
         match id {
             ClusterId::Gros => Cluster {
@@ -153,6 +167,7 @@ impl Cluster {
         }
     }
 
+    /// All three clusters, Table 1 order.
     pub fn all() -> Vec<Cluster> {
         ClusterId::ALL.iter().map(|&id| Cluster::get(id)).collect()
     }

@@ -1,0 +1,412 @@
+//! Power-managed devices: the building block of a heterogeneous node.
+//!
+//! The paper caps a single homogeneous processor; its §6 and the related
+//! work (EcoShift's CPU↔GPU power shifting, Rodero & Parashar's cross-layer
+//! stack) point at nodes whose power constraint spans *several* devices,
+//! each with its own static/dynamic power→progress characteristic, cap
+//! actuator and heartbeat stream. [`DeviceSpec`] captures exactly that
+//! per-device physics; [`Device`] is the simulated instance a multi-device
+//! [`NodeSim`](crate::sim::node::NodeSim) composes.
+//!
+//! A CPU device built from a Table 1 cluster
+//! ([`DeviceSpec::cpu`]) reproduces today's single-plant node bit for bit:
+//! same RNG streams, same arithmetic, same heartbeat timestamps — the
+//! equivalence `tests/hetero_equivalence.rs` pins.
+
+use crate::sim::cluster::Cluster;
+use crate::sim::disturbance::{DisturbanceState, Disturbances};
+use crate::sim::plant::{Plant, PowerProfile};
+use crate::sim::rapl::{EnergyCounter, RaplPackage};
+use crate::util::rng::Pcg64;
+
+/// Per-beat interval jitter coefficient of variation. Deliberately includes
+/// occasional heavy-tailed outliers so the median-vs-mean choice in Eq. (1)
+/// is observable in tests.
+const BEAT_JITTER_CV: f64 = 0.08;
+/// Fraction of beats that are extreme stragglers (context switches, page
+/// faults — §2.1's "robust to extreme values" motivation).
+const STRAGGLER_PROB: f64 = 0.01;
+/// Straggler delay multiplier relative to the nominal interval.
+const STRAGGLER_FACTOR: f64 = 8.0;
+/// Correlation time of the OU progress-noise process [s].
+const OU_THETA: f64 = 2.0;
+
+/// What kind of device a [`DeviceSpec`] describes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    /// A CPU package set (the paper's object of study).
+    Cpu,
+    /// A discrete accelerator with its own power cap (EcoShift's second
+    /// plant; nvidia-smi-style cap actuator).
+    Gpu,
+}
+
+impl DeviceKind {
+    /// Short lowercase label used in records and tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            DeviceKind::Cpu => "cpu",
+            DeviceKind::Gpu => "gpu",
+        }
+    }
+}
+
+impl std::fmt::Display for DeviceKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Ground-truth physics of one device: actuator accuracy, cap range, the
+/// saturating power→progress characteristic, first-order dynamics, and the
+/// noise/disturbance statistics. The device-level analogue of [`Cluster`].
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    /// What the device is (labels records; selects nothing by itself).
+    pub kind: DeviceKind,
+    /// Cap-actuator accuracy slope: `power = cap_a·pcap + cap_b`.
+    pub cap_a: f64,
+    /// Cap-actuator accuracy offset [W].
+    pub cap_b: f64,
+    /// Valid cap range [W].
+    pub cap_min: f64,
+    /// Upper end of the valid cap range [W].
+    pub cap_max: f64,
+    /// Exponential shape [1/W] of the static power→progress characteristic.
+    pub alpha: f64,
+    /// Power offset β [W]: power below which progress vanishes.
+    pub beta: f64,
+    /// Linear gain K_L [Hz]: asymptotic (max) progress.
+    pub k_l: f64,
+    /// First-order time constant τ [s].
+    pub tau: f64,
+    /// Identical packages sharing the cap (energy multiplier).
+    pub packages: u32,
+    /// Std-dev of the progress measurement noise [Hz].
+    pub progress_noise: f64,
+    /// Std-dev of the power measurement noise [W].
+    pub power_noise: f64,
+    /// Poisson rate [1/s] of sporadic progress-drop events.
+    pub drop_rate: f64,
+    /// Mean duration [s] of a drop event.
+    pub drop_duration: f64,
+    /// Progress level [Hz] during a drop event.
+    pub drop_level: f64,
+    /// RNG stream id: fixes the device's noise streams for a node seed.
+    pub stream: u64,
+}
+
+impl DeviceSpec {
+    /// The CPU device of a Table 1 cluster. A node composed of exactly this
+    /// device is bit-identical to the classic single-plant
+    /// [`NodeSim`](crate::sim::node::NodeSim) (same RNG stream id, same
+    /// physics, same arithmetic).
+    pub fn cpu(cluster: &Cluster) -> Self {
+        DeviceSpec {
+            kind: DeviceKind::Cpu,
+            cap_a: cluster.rapl_a,
+            cap_b: cluster.rapl_b,
+            cap_min: cluster.pcap_min,
+            cap_max: cluster.pcap_max,
+            alpha: cluster.alpha,
+            beta: cluster.beta,
+            k_l: cluster.k_l,
+            tau: cluster.tau,
+            packages: cluster.sockets,
+            progress_noise: cluster.progress_noise,
+            power_noise: cluster.power_noise,
+            drop_rate: cluster.drop_rate,
+            drop_duration: cluster.drop_duration,
+            drop_level: cluster.drop_level,
+            // The classic NodeSim seeded its root stream with
+            // `cluster.id + 1`; keeping that id is what makes the
+            // single-device refactor byte-identical.
+            stream: cluster.id as u64 + 1,
+        }
+    }
+
+    /// A datacenter-accelerator preset (A100-class envelope): 100–400 W cap
+    /// range, an accurate cap actuator, a high asymptotic rate with a knee
+    /// well inside the range, and fast dynamics. Parameters are synthetic —
+    /// chosen like the cluster noise block, to match the *qualitative*
+    /// behaviour the related work describes (power shifting pays off when
+    /// the accelerator's marginal Hz/W beats the CPU's).
+    pub fn gpu() -> Self {
+        DeviceSpec {
+            kind: DeviceKind::Gpu,
+            cap_a: 0.96,
+            cap_b: 4.0,
+            cap_min: 100.0,
+            cap_max: 400.0,
+            alpha: 0.012,
+            beta: 80.0,
+            k_l: 120.0,
+            tau: 0.2,
+            packages: 1,
+            progress_noise: 2.4,
+            power_noise: 2.0,
+            drop_rate: 0.0,
+            drop_duration: 0.0,
+            drop_level: 0.0,
+            // Distinct stream family from the three cluster CPUs (1..=3).
+            stream: 0x60,
+        }
+    }
+
+    /// Mean delivered power for a requested cap (actuator accuracy line).
+    pub fn expected_power(&self, pcap: f64) -> f64 {
+        self.cap_a * pcap + self.cap_b
+    }
+
+    /// Noise-free static characteristic
+    /// `progress = K_L · (1 − e^{−α(power(pcap) − β)})`.
+    pub fn static_progress(&self, pcap: f64) -> f64 {
+        self.k_l * (1.0 - (-self.alpha * (self.expected_power(pcap) - self.beta)).exp())
+    }
+
+    /// Maximum steady-state progress (at `cap_max`).
+    pub fn max_progress(&self) -> f64 {
+        self.static_progress(self.cap_max)
+    }
+}
+
+/// Sensor snapshot of one device inside a multi-device node.
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceSensors {
+    /// Requested (clamped) device cap [W].
+    pub pcap: f64,
+    /// Last measured device power [W] (noisy sensor; NaN before any step).
+    pub power: f64,
+    /// True instantaneous device progress [Hz] (oracle only).
+    pub true_progress: f64,
+    /// Heartbeats this device has emitted since construction.
+    pub beats: u64,
+}
+
+/// One simulated device: cap actuator + plant + disturbances + heartbeat
+/// emission, stepped by the owning node on the shared virtual clock. The
+/// per-sub-step body is *exactly* the classic single-plant node's, so a
+/// one-device node reproduces the pre-refactor bytes.
+#[derive(Debug, Clone)]
+pub struct Device {
+    spec: DeviceSpec,
+    package: RaplPackage,
+    plant: Plant,
+    disturbances: Disturbances,
+    rng: Pcg64,
+    /// OU state: slow additive progress noise [Hz].
+    ou: f64,
+    /// Work accumulator: fractional heartbeats owed.
+    backlog: f64,
+    /// Time of the last emitted heartbeat.
+    last_beat: f64,
+    /// Total heartbeats emitted since construction.
+    beats: u64,
+    /// Last measured (noisy) power reading [W].
+    last_power: f64,
+    last_dist: DisturbanceState,
+}
+
+impl Device {
+    /// Build a device for `spec`; `seed` plus the spec's `stream` fix all
+    /// stochastic behaviour. The stream derivation (root on `spec.stream`,
+    /// disturbances on `root.split(1)`) mirrors the classic node exactly.
+    pub fn new(spec: DeviceSpec, seed: u64) -> Self {
+        let mut root = Pcg64::new(seed, spec.stream);
+        let dist_rng = root.split(1);
+        let package = RaplPackage::new(spec.cap_a, spec.cap_b, (spec.cap_min, spec.cap_max));
+        let plant = Plant::from_params(
+            spec.k_l,
+            spec.alpha,
+            spec.beta,
+            spec.tau,
+            spec.expected_power(spec.cap_max),
+        );
+        let disturbances = Disturbances::from_params(
+            spec.drop_rate,
+            spec.drop_duration,
+            spec.drop_level,
+            0.002 * (spec.packages as f64).sqrt(),
+            dist_rng,
+        );
+        Device {
+            spec,
+            package,
+            plant,
+            disturbances,
+            rng: root,
+            ou: 0.0,
+            backlog: 0.0,
+            last_beat: 0.0,
+            beats: 0,
+            last_power: f64::NAN,
+            last_dist: DisturbanceState::default(),
+        }
+    }
+
+    /// The device's ground-truth spec.
+    pub fn spec(&self) -> &DeviceSpec {
+        &self.spec
+    }
+
+    /// Actuator: request a new device cap; returns the clamped value.
+    pub fn set_pcap(&mut self, watts: f64) -> f64 {
+        self.package.set_cap(watts)
+    }
+
+    /// The cap currently in force [W].
+    pub fn pcap(&self) -> f64 {
+        self.package.cap()
+    }
+
+    /// Switch the device's application phase profile.
+    pub fn set_profile(&mut self, profile: PowerProfile) {
+        self.plant.set_profile(profile);
+    }
+
+    /// True instantaneous progress [Hz] (oracle only).
+    pub fn true_progress(&self) -> f64 {
+        self.plant.progress()
+    }
+
+    /// Heartbeats emitted since construction.
+    pub fn beats(&self) -> u64 {
+        self.beats
+    }
+
+    /// Whether a drop event was active at the end of the last sub-step.
+    pub fn drop_active(&self) -> bool {
+        self.last_dist.drop_active
+    }
+
+    /// Current sensor snapshot (no simulation side effects).
+    pub fn sensors(&self) -> DeviceSensors {
+        DeviceSensors {
+            pcap: self.package.cap(),
+            power: self.last_power,
+            true_progress: self.plant.progress(),
+            beats: self.beats,
+        }
+    }
+
+    /// Advance one sub-step of `h` seconds ending at node time `now`,
+    /// appending emitted heartbeat timestamps to `beats` and accumulating
+    /// delivered energy into the node-level `energy` counter. Returns the
+    /// noisy power reading. The body is the classic node's sub-step,
+    /// verbatim — any change here breaks the single-device equivalence.
+    pub(crate) fn substep(
+        &mut self,
+        h: f64,
+        now: f64,
+        beats: &mut Vec<f64>,
+        energy: &mut EnergyCounter,
+    ) -> f64 {
+        let dist = self.disturbances.step(h);
+        let power_reading =
+            self.package
+                .step(h, dist.drop_active, &mut self.rng, self.spec.power_noise);
+        let true_power = self.package.true_power();
+        energy.accumulate(true_power * self.spec.packages as f64, h);
+        let progress = self.plant.step(h, true_power, &dist);
+        self.last_dist = dist;
+
+        // OU progress-noise update (exact discretization).
+        let decay = (-h / OU_THETA).exp();
+        let sigma = self.spec.progress_noise;
+        self.ou = self.ou * decay + self.rng.gauss(0.0, sigma * (1.0 - decay * decay).sqrt());
+
+        // Heartbeat emission: rate = max(0, progress + ou).
+        let rate = (progress + self.ou).max(0.0);
+        self.backlog += rate * h;
+        while self.backlog >= 1.0 {
+            self.backlog -= 1.0;
+            // Nominal emission time: interpolate within the sub-step.
+            let nominal = now - h * (self.backlog / (rate * h).max(1e-12)).min(1.0);
+            // Per-beat jitter: mostly small, occasionally a straggler.
+            let jitter = if self.rng.f64() < STRAGGLER_PROB {
+                STRAGGLER_FACTOR * self.rng.f64()
+            } else {
+                self.rng.gauss(0.0, BEAT_JITTER_CV)
+            };
+            let interval = (nominal - self.last_beat).max(1e-9);
+            let t = (self.last_beat + interval * (1.0 + jitter).max(0.05)).min(now);
+            let t = t.max(self.last_beat); // keep monotone
+            beats.push(t);
+            self.last_beat = t;
+            self.beats += 1;
+        }
+        self.last_power = power_reading;
+        power_reading
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::cluster::ClusterId;
+
+    #[test]
+    fn cpu_spec_mirrors_cluster() {
+        let c = Cluster::get(ClusterId::Dahu);
+        let s = DeviceSpec::cpu(&c);
+        assert_eq!(s.kind, DeviceKind::Cpu);
+        assert_eq!(s.cap_a, c.rapl_a);
+        assert_eq!(s.cap_min, c.pcap_min);
+        assert_eq!(s.packages, c.sockets);
+        assert_eq!(s.stream, c.id as u64 + 1);
+        assert_eq!(s.static_progress(80.0), c.static_progress(80.0));
+    }
+
+    #[test]
+    fn gpu_preset_is_plausible() {
+        let g = DeviceSpec::gpu();
+        assert_eq!(g.kind, DeviceKind::Gpu);
+        assert!(g.cap_max > g.cap_min);
+        // Knee inside the actuation range: marginal gain shrinks.
+        let lo = g.static_progress(180.0) - g.static_progress(140.0);
+        let hi = g.static_progress(400.0) - g.static_progress(360.0);
+        assert!(lo > hi, "no saturation: {lo} vs {hi}");
+        assert!(g.max_progress() < g.k_l);
+    }
+
+    #[test]
+    fn device_is_deterministic() {
+        let spec = DeviceSpec::gpu();
+        let mut a = Device::new(spec.clone(), 9);
+        let mut b = Device::new(spec, 9);
+        let (mut ea, mut eb) = (EnergyCounter::new(), EnergyCounter::new());
+        let (mut ba, mut bb) = (Vec::new(), Vec::new());
+        let mut now = 0.0;
+        for _ in 0..200 {
+            now += 0.05;
+            let pa = a.substep(0.05, now, &mut ba, &mut ea);
+            let pb = b.substep(0.05, now, &mut bb, &mut eb);
+            assert_eq!(pa, pb);
+        }
+        assert_eq!(ba, bb);
+        assert_eq!(ea.read(), eb.read());
+    }
+
+    #[test]
+    fn gpu_beats_track_its_rate() {
+        let mut d = Device::new(DeviceSpec::gpu(), 3);
+        d.set_pcap(400.0);
+        let mut e = EnergyCounter::new();
+        let mut beats = Vec::new();
+        let mut now = 0.0;
+        for _ in 0..1200 {
+            now += 0.05;
+            d.substep(0.05, now, &mut beats, &mut e);
+        }
+        let rate = beats.len() as f64 / now;
+        let expect = DeviceSpec::gpu().max_progress();
+        assert!((rate - expect).abs() < 0.1 * expect, "rate {rate} vs {expect}");
+        assert!(e.read() > 0.0);
+    }
+
+    #[test]
+    fn kind_names() {
+        assert_eq!(DeviceKind::Cpu.name(), "cpu");
+        assert_eq!(format!("{}", DeviceKind::Gpu), "gpu");
+    }
+}

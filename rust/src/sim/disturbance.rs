@@ -50,16 +50,36 @@ pub struct Disturbances {
 }
 
 impl Disturbances {
+    /// Disturbance generator with a cluster's Table 1/§5.2 parameters.
     pub fn new(cluster: &Cluster, rng: Pcg64) -> Self {
+        // Thermal drift magnitude grows mildly with socket count: more
+        // packages, more thermal diversity (§5.2 hypothesis).
+        Disturbances::from_params(
+            cluster.drop_rate,
+            cluster.drop_duration,
+            cluster.drop_level,
+            0.002 * (cluster.sockets as f64).sqrt(),
+            rng,
+        )
+    }
+
+    /// Disturbance generator from explicit parameters — the device-level
+    /// constructor used by heterogeneous nodes (a GPU has its own event
+    /// statistics, not a Table 1 cluster's).
+    pub fn from_params(
+        drop_rate: f64,
+        drop_duration: f64,
+        drop_level: f64,
+        thermal_step: f64,
+        rng: Pcg64,
+    ) -> Self {
         Disturbances {
-            drop_rate: cluster.drop_rate,
-            drop_duration: cluster.drop_duration,
-            drop_level: cluster.drop_level,
+            drop_rate,
+            drop_duration,
+            drop_level,
             active_left: 0.0,
             thermal: 1.0,
-            // Thermal drift magnitude grows mildly with socket count: more
-            // packages, more thermal diversity (§5.2 hypothesis).
-            thermal_step: 0.002 * (cluster.sockets as f64).sqrt(),
+            thermal_step,
             rng,
         }
     }

@@ -12,8 +12,10 @@
 //!   dynamics (Eqs. 2–3),
 //! * [`disturbance`] — socket-scaled noise, sporadic progress-drop events
 //!   (the yeti behaviour of Figs. 3c/6b) and slow thermal drift,
-//! * [`node`] — the composed simulated node exposing exactly the
-//!   sensors/actuators the NRM sees on real hardware,
+//! * [`device`] — one power-managed device (CPU package set, GPU): the
+//!   per-device physics a heterogeneous node composes,
+//! * [`node`] — the composed simulated node (one or more devices) exposing
+//!   exactly the sensors/actuators the NRM sees on real hardware,
 //! * [`clock`] — the virtual experiment clock.
 //!
 //! **Honesty rule**: ground-truth parameters never leak outside `sim::`;
@@ -22,6 +24,7 @@
 
 pub mod clock;
 pub mod cluster;
+pub mod device;
 pub mod disturbance;
 pub mod node;
 pub mod plant;
@@ -29,4 +32,5 @@ pub mod rapl;
 
 pub use clock::VirtualClock;
 pub use cluster::{Cluster, ClusterId};
+pub use device::{Device, DeviceKind, DeviceSensors, DeviceSpec};
 pub use node::{NodeSensors, NodeSim, StepSensors};

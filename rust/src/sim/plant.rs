@@ -42,17 +42,32 @@ pub struct Plant {
 }
 
 impl Plant {
+    /// Plant with a cluster's Table 2 ground-truth parameters.
     pub fn new(cluster: &Cluster) -> Self {
+        Plant::from_params(
+            cluster.k_l,
+            cluster.alpha,
+            cluster.beta,
+            cluster.tau,
+            cluster.expected_power(cluster.pcap_max),
+        )
+    }
+
+    /// Plant from explicit physics — the device-level constructor the
+    /// heterogeneous-node extension uses (a GPU is a plant with its own
+    /// characteristic, not a Table 1 cluster). `initial_power` is the
+    /// delivered power the plant starts in steady state with (experiments
+    /// begin with every cap at its upper limit, §5.2).
+    pub fn from_params(k_l: f64, alpha: f64, beta: f64, tau: f64, initial_power: f64) -> Self {
         Plant {
-            k_l: cluster.k_l,
-            alpha: cluster.alpha,
-            beta: cluster.beta,
-            tau: cluster.tau,
+            k_l,
+            alpha,
+            beta,
+            tau,
             profile: PowerProfile::MemoryBound,
             // Start at the steady state of full power (experiments begin
             // with the cap at its upper limit, §5.2).
-            progress: cluster.k_l
-                * (1.0 - (-cluster.alpha * (cluster.expected_power(cluster.pcap_max) - cluster.beta)).exp()),
+            progress: k_l * (1.0 - (-alpha * (initial_power - beta)).exp()),
         }
     }
 
@@ -61,6 +76,7 @@ impl Plant {
         self.profile = profile;
     }
 
+    /// The phase profile currently in force.
     pub fn profile(&self) -> PowerProfile {
         self.profile
     }
@@ -96,6 +112,7 @@ impl Plant {
         self.progress
     }
 
+    /// Current (noise-free) progress [Hz].
     pub fn progress(&self) -> f64 {
         self.progress
     }

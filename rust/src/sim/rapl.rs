@@ -34,6 +34,7 @@ pub struct RaplPackage {
 }
 
 impl RaplPackage {
+    /// Package with accuracy line `power = a*pcap + b` over `cap_range`.
     pub fn new(a: f64, b: f64, cap_range: (f64, f64)) -> Self {
         let cap = cap_range.1;
         RaplPackage {
@@ -52,6 +53,7 @@ impl RaplPackage {
         self.cap
     }
 
+    /// The cap currently in force [W].
     pub fn cap(&self) -> f64 {
         self.cap
     }
@@ -90,10 +92,12 @@ pub struct EnergyCounter {
 }
 
 impl EnergyCounter {
+    /// Counter starting at 0 J.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Integrate `watts` over `dt` seconds.
     pub fn accumulate(&mut self, watts: f64, dt: f64) {
         debug_assert!(dt >= 0.0);
         self.joules += watts * dt;

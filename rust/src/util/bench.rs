@@ -15,6 +15,7 @@ use std::time::{Duration, Instant};
 
 use crate::util::json::Json;
 
+/// Optimization barrier (the `std::hint::black_box` shape).
 pub fn black_box<T>(x: T) -> T {
     std_black_box(x)
 }
@@ -29,14 +30,20 @@ pub fn smoke() -> bool {
 /// Result of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name.
     pub name: String,
+    /// Measured iterations.
     pub iterations: u64,
+    /// Mean time per iteration.
     pub mean: Duration,
+    /// Median time per iteration.
     pub p50: Duration,
+    /// 99th-percentile time per iteration.
     pub p99: Duration,
 }
 
 impl BenchResult {
+    /// Iterations per second implied by the mean.
     pub fn ops_per_sec(&self) -> f64 {
         if self.mean.as_secs_f64() == 0.0 {
             f64::INFINITY
@@ -178,6 +185,7 @@ pub struct Report {
 }
 
 impl Report {
+    /// Empty report.
     pub fn new() -> Self {
         Report::default()
     }
@@ -198,14 +206,17 @@ impl Report {
         self.entries.push(j);
     }
 
+    /// Number of entries recorded.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// True when nothing was recorded.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
 
+    /// The report as a JSON object (the BENCH_l3.json shape).
     pub fn to_json(&self) -> Json {
         Json::Arr(self.entries.clone())
     }

@@ -13,6 +13,7 @@ pub const DEFAULT_CASES: usize = 256;
 
 /// Outcome of a property over one case.
 pub enum Verdict {
+    /// The property held for this case.
     Pass,
     /// Failure with a human-readable reason.
     Fail(String),

@@ -28,9 +28,11 @@ pub struct Cli {
 /// Result of parsing: selected subcommand, option map, positionals.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// Selected subcommand, if any.
     pub subcommand: Option<String>,
     values: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Positional (non-option) arguments, order preserved.
     pub positional: Vec<String>,
 }
 
@@ -46,6 +48,7 @@ impl fmt::Display for CliError {
 impl std::error::Error for CliError {}
 
 impl Cli {
+    /// CLI named `name` with a one-line description.
     pub fn new(name: &'static str, about: &'static str) -> Self {
         Cli {
             name,
@@ -82,6 +85,7 @@ impl Cli {
         self
     }
 
+    /// Generated `--help` text.
     pub fn help_text(&self) -> String {
         let mut s = format!("{} — {}\n\nUSAGE:\n  {} ", self.name, self.about, self.name);
         if !self.subcommands.is_empty() {
@@ -184,14 +188,17 @@ impl Cli {
 }
 
 impl Args {
+    /// Raw value of `--name` (default applied).
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
     }
 
+    /// True when the boolean `--name` flag was passed.
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Value of `--name` parsed as f64.
     pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
         let v = self
             .get(name)
@@ -200,6 +207,7 @@ impl Args {
             .map_err(|_| CliError(format!("--{name}: '{v}' is not a number")))
     }
 
+    /// Value of `--name` parsed as u64.
     pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
         let v = self
             .get(name)
@@ -208,6 +216,7 @@ impl Args {
             .map_err(|_| CliError(format!("--{name}: '{v}' is not an integer")))
     }
 
+    /// Value of `--name` parsed as usize.
     pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
         Ok(self.get_u64(name)? as usize)
     }

@@ -13,11 +13,14 @@ use std::path::Path;
 /// An in-memory CSV table with a header row.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
+    /// Column names.
     pub header: Vec<String>,
+    /// Data rows (each the header's arity).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Empty table with the given header.
     pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
         Table {
             header: header.into_iter().map(Into::into).collect(),
@@ -44,10 +47,12 @@ impl Table {
         self.push(row.iter().map(|x| format!("{x}")).collect::<Vec<_>>());
     }
 
+    /// Number of data rows.
     pub fn len(&self) -> usize {
         self.rows.len()
     }
 
+    /// True when the table has no data rows.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }
@@ -110,6 +115,7 @@ impl Table {
         })
     }
 
+    /// Read and parse a CSV file.
     pub fn load(path: impl AsRef<Path>) -> io::Result<Table> {
         let text = fs::read_to_string(path)?;
         Table::parse(&text).map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))

@@ -18,6 +18,7 @@ use std::fmt;
 pub struct Error(String);
 
 impl Error {
+    /// Error from a plain message.
     pub fn msg(msg: impl Into<String>) -> Error {
         Error(msg.into())
     }

@@ -12,15 +12,22 @@ use std::fmt;
 /// deterministically ordered (stable diffs of experiment records).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (finite f64; non-finite serializes as null).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Arr(Vec<Json>),
+    /// JSON object (BTreeMap: deterministic key order).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Empty JSON object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
@@ -36,6 +43,7 @@ impl Json {
         self
     }
 
+    /// Member lookup on objects (`None` otherwise).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -52,6 +60,7 @@ impl Json {
         Some(cur)
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -59,6 +68,7 @@ impl Json {
         }
     }
 
+    /// Non-negative integral value, if exactly representable.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().and_then(|x| {
             if x >= 0.0 && x.fract() == 0.0 {
@@ -69,6 +79,7 @@ impl Json {
         })
     }
 
+    /// String value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -76,6 +87,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -83,6 +95,7 @@ impl Json {
         }
     }
 
+    /// Array items, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -203,7 +216,9 @@ fn write_str(out: &mut String, s: &str) {
 /// Parse error with byte offset context.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
+    /// Byte offset of the parse failure.
     pub pos: usize,
+    /// Human-readable parse failure reason.
     pub msg: String,
 }
 

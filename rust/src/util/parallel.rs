@@ -144,6 +144,7 @@ impl WorkerPool {
         WorkerPool { state, workers }
     }
 
+    /// Number of persistent workers in the pool.
     pub fn threads(&self) -> usize {
         self.workers.len()
     }

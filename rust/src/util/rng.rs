@@ -45,6 +45,7 @@ impl Pcg64 {
     }
 
     #[inline]
+    /// Next 32-bit output of the generator.
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
@@ -54,6 +55,7 @@ impl Pcg64 {
     }
 
     #[inline]
+    /// Next 64 bits (two concatenated 32-bit outputs).
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64
     }

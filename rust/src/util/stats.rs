@@ -149,13 +149,18 @@ pub fn rmse(observed: &[f64], predicted: &[f64]) -> f64 {
 /// distributions.
 #[derive(Debug, Clone)]
 pub struct Histogram {
+    /// Lower edge of the histogram range.
     pub lo: f64,
+    /// Upper edge of the histogram range.
     pub hi: f64,
+    /// Per-bin sample counts.
     pub counts: Vec<u64>,
+    /// Total samples added (including out-of-range).
     pub total: u64,
 }
 
 impl Histogram {
+    /// Empty histogram over `[lo, hi)` with `bins` bins.
     pub fn new(lo: f64, hi: f64, bins: usize) -> Self {
         assert!(hi > lo && bins > 0);
         Histogram {
@@ -166,6 +171,7 @@ impl Histogram {
         }
     }
 
+    /// Histogram of `xs` over `[lo, hi)`.
     pub fn from_samples(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Self {
         let mut h = Self::new(lo, hi, bins);
         for &x in xs {
@@ -174,6 +180,7 @@ impl Histogram {
         h
     }
 
+    /// Add one sample (out-of-range samples only count toward `total`).
     pub fn add(&mut self, x: f64) {
         let bins = self.counts.len();
         let idx = if !x.is_finite() || x < self.lo {
@@ -187,11 +194,13 @@ impl Histogram {
         self.total += 1;
     }
 
+    /// Center value of bin `i`.
     pub fn bin_center(&self, i: usize) -> f64 {
         let w = (self.hi - self.lo) / self.counts.len() as f64;
         self.lo + w * (i as f64 + 0.5)
     }
 
+    /// Normalized per-bin densities (integrates to ~1).
     pub fn densities(&self) -> Vec<f64> {
         if self.total == 0 {
             return vec![0.0; self.counts.len()];
@@ -230,6 +239,7 @@ pub struct Running {
 }
 
 impl Running {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Running {
             n: 0,
@@ -240,6 +250,7 @@ impl Running {
         }
     }
 
+    /// Fold one sample into the running moments.
     pub fn add(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -249,9 +260,11 @@ impl Running {
         self.max = self.max.max(x);
     }
 
+    /// Samples folded in so far.
     pub fn count(&self) -> u64 {
         self.n
     }
+    /// Running mean (NaN before any sample).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             f64::NAN
@@ -259,6 +272,7 @@ impl Running {
             self.mean
         }
     }
+    /// Unbiased running variance.
     pub fn variance(&self) -> f64 {
         if self.n == 0 {
             f64::NAN
@@ -266,16 +280,20 @@ impl Running {
             self.m2 / self.n as f64
         }
     }
+    /// Square root of the running variance.
     pub fn stddev(&self) -> f64 {
         self.variance().sqrt()
     }
+    /// Smallest sample seen.
     pub fn min(&self) -> f64 {
         self.min
     }
+    /// Largest sample seen.
     pub fn max(&self) -> f64 {
         self.max
     }
 
+    /// Fold another accumulator's moments into this one.
     pub fn merge(&mut self, other: &Running) {
         if other.n == 0 {
             return;

@@ -10,15 +10,19 @@
 /// virtual clock; monotonic non-decreasing order is enforced on `push`.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct TimeSeries {
+    /// Sample times [s], monotone non-decreasing.
     pub times: Vec<f64>,
+    /// Sample values, row-aligned with `times`.
     pub values: Vec<f64>,
 }
 
 impl TimeSeries {
+    /// Empty series.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Empty series pre-sized for `n` samples.
     pub fn with_capacity(n: usize) -> Self {
         TimeSeries {
             times: Vec::with_capacity(n),
@@ -26,6 +30,7 @@ impl TimeSeries {
         }
     }
 
+    /// Series from `(time, value)` pairs (must be time-ordered).
     pub fn from_pairs(pairs: &[(f64, f64)]) -> Self {
         let mut ts = Self::with_capacity(pairs.len());
         for &(t, v) in pairs {
@@ -34,6 +39,14 @@ impl TimeSeries {
         ts
     }
 
+    /// Pre-size for `n` *additional* samples (hot-path logs pre-reserve so
+    /// steady-state pushes never grow the vectors).
+    pub fn reserve(&mut self, n: usize) {
+        self.times.reserve(n);
+        self.values.reserve(n);
+    }
+
+    /// Append a sample; panics if `t` precedes the last time.
     pub fn push(&mut self, t: f64, v: f64) {
         if let Some(&last) = self.times.last() {
             assert!(
@@ -45,26 +58,32 @@ impl TimeSeries {
         self.values.push(v);
     }
 
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.times.len()
     }
 
+    /// True when the series has no samples.
     pub fn is_empty(&self) -> bool {
         self.times.is_empty()
     }
 
+    /// Time of the first sample.
     pub fn first_time(&self) -> Option<f64> {
         self.times.first().copied()
     }
 
+    /// Time of the last sample.
     pub fn last_time(&self) -> Option<f64> {
         self.times.last().copied()
     }
 
+    /// Value of the last sample.
     pub fn last_value(&self) -> Option<f64> {
         self.values.last().copied()
     }
 
+    /// Iterate `(time, value)` pairs in order.
     pub fn iter(&self) -> impl Iterator<Item = (f64, f64)> + '_ {
         self.times.iter().copied().zip(self.values.iter().copied())
     }

@@ -18,13 +18,16 @@ use crate::sim::plant::PowerProfile;
 /// A phase: profile + duration.
 #[derive(Debug, Clone, Copy)]
 pub struct Phase {
+    /// Power->progress profile during the phase.
     pub profile: PowerProfile,
+    /// Phase length [s].
     pub duration: f64,
 }
 
 /// A cyclic phase schedule.
 #[derive(Debug, Clone)]
 pub struct PhaseSchedule {
+    /// The phases, schedule order.
     pub phases: Vec<Phase>,
 }
 
@@ -45,6 +48,7 @@ impl PhaseSchedule {
         PhaseSchedule { phases }
     }
 
+    /// Sum of all phase durations [s].
     pub fn total_duration(&self) -> f64 {
         self.phases.iter().map(|p| p.duration).sum()
     }
@@ -158,5 +162,76 @@ mod tests {
         let rec = run_phased(&c, &mut pol, &schedule, 1.0, 2);
         assert_eq!(rec.pcap.len(), 80);
         assert!(rec.energy > 0.0);
+    }
+
+    #[test]
+    fn zero_duration_phase_is_skipped() {
+        // A zero-length phase occupies no time: the profile in force at its
+        // start time is the next phase's.
+        let s = PhaseSchedule {
+            phases: vec![
+                Phase {
+                    profile: PowerProfile::MemoryBound,
+                    duration: 0.0,
+                },
+                Phase {
+                    profile: PowerProfile::ComputeBound,
+                    duration: 10.0,
+                },
+            ],
+        };
+        assert_eq!(s.total_duration(), 10.0);
+        assert_eq!(s.profile_at(0.0), PowerProfile::ComputeBound);
+        assert_eq!(s.profile_at(9.9), PowerProfile::ComputeBound);
+        // Past the end: clamped to the last phase.
+        assert_eq!(s.profile_at(10.0), PowerProfile::ComputeBound);
+    }
+
+    #[test]
+    fn single_phase_schedule_is_constant() {
+        let s = PhaseSchedule {
+            phases: vec![Phase {
+                profile: PowerProfile::ComputeBound,
+                duration: 30.0,
+            }],
+        };
+        for t in [0.0, 15.0, 29.9, 30.0, 1e6] {
+            assert_eq!(s.profile_at(t), PowerProfile::ComputeBound, "t={t}");
+        }
+        let c = Cluster::get(ClusterId::Gros);
+        let mut pol = Uncontrolled { pcap_max: 120.0 };
+        let rec = run_phased(&c, &mut pol, &s, 1.0, 5);
+        assert_eq!(rec.pcap.len(), 30);
+        assert!(rec.completed);
+    }
+
+    #[test]
+    fn schedule_shorter_than_one_period_yields_empty_record() {
+        // total 0.4 s at a 1 s control period: zero periods round off; the
+        // driver must return an empty (but well-formed) record, not panic.
+        let s = PhaseSchedule {
+            phases: vec![Phase {
+                profile: PowerProfile::MemoryBound,
+                duration: 0.4,
+            }],
+        };
+        let c = Cluster::get(ClusterId::Gros);
+        let mut pol = Uncontrolled { pcap_max: 120.0 };
+        let rec = run_phased(&c, &mut pol, &s, 1.0, 6);
+        assert_eq!(rec.pcap.len(), 0);
+        assert_eq!(rec.exec_time, 0.0);
+        assert_eq!(rec.beats, 0);
+        assert!(rec.completed);
+    }
+
+    #[test]
+    fn empty_schedule_defaults_to_memory_bound() {
+        let s = PhaseSchedule { phases: Vec::new() };
+        assert_eq!(s.total_duration(), 0.0);
+        assert_eq!(s.profile_at(0.0), PowerProfile::MemoryBound);
+        let c = Cluster::get(ClusterId::Gros);
+        let mut pol = Uncontrolled { pcap_max: 120.0 };
+        let rec = run_phased(&c, &mut pol, &s, 1.0, 7);
+        assert!(rec.pcap.is_empty());
     }
 }

@@ -47,7 +47,9 @@ impl Default for LiveConfig {
 /// Outcome of a live run.
 #[derive(Debug, Clone)]
 pub struct LiveOutcome {
+    /// Iterations the workload completed.
     pub iterations: u64,
+    /// Wall-clock run time [s].
     pub wall_time: f64,
     /// Mean achieved iteration rate [Hz].
     pub rate: f64,

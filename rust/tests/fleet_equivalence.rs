@@ -8,7 +8,9 @@
 
 use powerctl::control::budget::{BudgetPolicy, GreedyRepack, SlackProportional, UniformBudget};
 use powerctl::fleet::node::noise_free_model;
-use powerctl::fleet::{run_fleet, run_fleet_threaded, FleetConfig, FleetOutcome, NodePolicySpec, NodeSpec};
+use powerctl::fleet::{
+    run_fleet, run_fleet_threaded, FleetConfig, FleetOutcome, NodeHardware, NodePolicySpec, NodeSpec,
+};
 use powerctl::sim::cluster::ClusterId;
 
 /// 32 nodes over two clusters (alternating gros/dahu), PI at ε = 0.15.
@@ -25,6 +27,7 @@ fn specs() -> Vec<NodeSpec> {
             cluster: order[i % 2],
             model: models[i % 2].clone(),
             policy: NodePolicySpec::Pi { epsilon: 0.15 },
+            hardware: NodeHardware::SingleCpu,
         })
         .collect()
 }
@@ -109,4 +112,48 @@ fn sharded_executor_is_reproducible_across_invocations() {
     let a = run_fleet(&specs, strategy("slack-proportional").as_mut(), &cfg);
     let b = run_fleet(&specs, strategy("slack-proportional").as_mut(), &cfg);
     assert_eq!(record_bytes(&a), record_bytes(&b));
+}
+
+#[test]
+fn hetero_fleet_paths_are_byte_identical() {
+    // The determinism contract holds for hierarchical nodes too: an
+    // 8-node CPU+GPU fleet (device traces included in the JSON) must be
+    // byte-identical across the sharded all-core, forced single-thread and
+    // legacy per-node-thread paths.
+    use powerctl::control::node_budget::DeviceSplitSpec;
+    use powerctl::sim::cluster::Cluster;
+
+    let cluster = Cluster::get(ClusterId::Gros);
+    let specs: Vec<NodeSpec> = (0..8)
+        .map(|_| NodeSpec {
+            cluster: ClusterId::Gros,
+            model: noise_free_model(ClusterId::Gros),
+            policy: NodePolicySpec::Static,
+            hardware: NodeHardware::cpu_gpu(&cluster, DeviceSplitSpec::SlackShift, 0.15),
+        })
+        .collect();
+    let base = FleetConfig {
+        budget: 8.0 * 360.0,
+        period: 1.0,
+        realloc_every: 5,
+        total_beats: 600,
+        max_time: 120.0,
+        seed: 11,
+        threads: None,
+    };
+    let sharded = run_fleet(&specs, strategy("slack-proportional").as_mut(), &base);
+    let single_cfg = FleetConfig {
+        threads: Some(1),
+        ..base.clone()
+    };
+    let single = run_fleet(&specs, strategy("slack-proportional").as_mut(), &single_cfg);
+    let legacy = run_fleet_threaded(&specs, strategy("slack-proportional").as_mut(), &base);
+
+    for r in &sharded.records {
+        assert_eq!(r.devices.len(), 2, "node {} missing device traces", r.node_id);
+    }
+    let a = record_bytes(&sharded);
+    assert!(a == record_bytes(&single), "hetero: sharded != single-thread");
+    assert!(a == record_bytes(&legacy), "hetero: sharded != legacy");
+    assert_eq!(sharded.limits_trace, legacy.limits_trace);
 }

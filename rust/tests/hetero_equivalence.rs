@@ -1,0 +1,173 @@
+//! Single-device equivalence: the multi-device refactor must be invisible
+//! for the paper's single-processor node.
+//!
+//! Two independent pins:
+//!
+//! 1. **Sim layer** — `NodeSim::new` (now a one-CPU-device composition)
+//!    produces the same heartbeats/sensors as an explicit one-device
+//!    `NodeSim::hetero`, and the classic campaign adapters on top of it
+//!    reproduce the pre-refactor records (`tests/pipeline.rs` and the fleet
+//!    equivalence suite cover those paths at scale).
+//! 2. **Control layer** — a run driven through the *hierarchical* path
+//!    (`HeteroBackend` + degenerate one-device split) emits `RunRecord`
+//!    JSON **byte-identical** to the classic `run_closed_loop` path: same
+//!    series, same scalars, no `devices` key. The hierarchy collapses
+//!    cleanly; refactoring under it is safe.
+
+use powerctl::control::baseline::{PiPolicy, Policy, Uncontrolled};
+use powerctl::control::node_budget::{DeviceCtl, DeviceSplitSpec, NodeBudgetController};
+use powerctl::control::pi::{PiConfig, PiController};
+use powerctl::coordinator::engine::ControlLoop;
+use powerctl::coordinator::experiment::{run_closed_loop, RunConfig};
+use powerctl::coordinator::hetero::HeteroBackend;
+use powerctl::coordinator::records::RunRecord;
+use powerctl::fleet::node::noise_free_model;
+use powerctl::sim::cluster::{Cluster, ClusterId};
+use powerctl::sim::device::DeviceSpec;
+use powerctl::sim::node::NodeSim;
+
+fn config() -> RunConfig {
+    RunConfig {
+        sample_period: 1.0,
+        total_beats: 1_200,
+        max_time: 600.0,
+    }
+}
+
+/// Drive one single-device node through the hierarchical path with the
+/// given outer policy; mirror `run_closed_loop`'s scalar finalization.
+fn run_hetero_single(
+    id: ClusterId,
+    policy: &mut dyn Policy,
+    setpoint: f64,
+    epsilon: f64,
+    cfg: &RunConfig,
+    seed: u64,
+) -> RunRecord {
+    let cluster = Cluster::get(id);
+    let cpu = DeviceSpec::cpu(&cluster);
+    let node = NodeSim::hetero(cluster.clone(), &[cpu.clone()], seed);
+    // Degenerate inner loop: an even split over one pinned device reduces
+    // to "device cap = clamped node cap" — exactly the classic actuator.
+    let ctl = NodeBudgetController::new(
+        DeviceSplitSpec::Even.build(),
+        vec![DeviceCtl::pinned(&cpu, cpu.cap_max)],
+    );
+    let mut engine = ControlLoop::new(HeteroBackend::new(node, ctl), cfg.sample_period);
+    engine.set_initial_pcap(cluster.pcap_max);
+    engine.set_quota(Some(cfg.total_beats));
+    engine.set_max_time(cfg.max_time);
+    let mut clock = powerctl::sim::VirtualClock::new();
+    engine.run(&mut clock, policy, None);
+
+    let mut rec = engine.record();
+    rec.cluster = cluster.id.name().to_string();
+    rec.policy = policy.name();
+    rec.seed = seed;
+    rec.epsilon = epsilon;
+    rec.setpoint = setpoint;
+    rec.completed = engine.finish_time().is_some();
+    rec.exec_time = engine.finish_time().unwrap_or(cfg.max_time);
+    rec.beats = engine.total_beats().min(cfg.total_beats);
+    rec
+}
+
+#[test]
+fn hierarchical_single_device_run_is_byte_identical_uncontrolled() {
+    let cfg = config();
+    for (id, seed) in [(ClusterId::Gros, 3u64), (ClusterId::Dahu, 4), (ClusterId::Yeti, 5)] {
+        let cluster = Cluster::get(id);
+        let mut p1 = Uncontrolled { pcap_max: cluster.pcap_max };
+        let classic = run_closed_loop(&cluster, &mut p1, f64::NAN, 0.0, &cfg, seed);
+        let mut p2 = Uncontrolled { pcap_max: cluster.pcap_max };
+        let hetero = run_hetero_single(id, &mut p2, f64::NAN, 0.0, &cfg, seed);
+        assert!(
+            classic.to_json().dump() == hetero.to_json().dump(),
+            "{id}: hierarchical single-device record differs from classic"
+        );
+        assert!(classic.devices.is_empty() && hetero.devices.is_empty());
+    }
+}
+
+#[test]
+fn hierarchical_single_device_run_is_byte_identical_under_pi() {
+    // The discriminating case: a *feedback* policy means any divergence in
+    // measured progress or applied caps compounds — byte equality proves
+    // the whole sense → Eq. (1) → PI → actuate chain is untouched.
+    let cfg = config();
+    let id = ClusterId::Gros;
+    let cluster = Cluster::get(id);
+    let model = noise_free_model(id);
+    let make_pi = || {
+        let pic = PiConfig::from_model(&model, 10.0, cluster.pcap_min, cluster.pcap_max);
+        PiController::new(model.clone(), pic, 0.15)
+    };
+    let sp = make_pi().setpoint();
+
+    let mut p1 = PiPolicy(make_pi());
+    let classic = run_closed_loop(&cluster, &mut p1, sp, 0.15, &cfg, 42);
+    let mut p2 = PiPolicy(make_pi());
+    let hetero = run_hetero_single(id, &mut p2, sp, 0.15, &cfg, 42);
+
+    assert!(classic.completed, "closed loop must complete");
+    assert!(
+        classic.to_json().dump() == hetero.to_json().dump(),
+        "hierarchical single-device PI record differs from classic"
+    );
+}
+
+#[test]
+fn sim_layer_single_device_composition_is_invisible() {
+    // NodeSim::new == one-CPU NodeSim::hetero, step for step.
+    for id in [ClusterId::Gros, ClusterId::Dahu, ClusterId::Yeti] {
+        let cluster = Cluster::get(id);
+        let mut classic = NodeSim::new(cluster.clone(), 77);
+        let mut composed = NodeSim::hetero(cluster.clone(), &[DeviceSpec::cpu(&cluster)], 77);
+        classic.set_pcap(90.0);
+        composed.set_pcap(90.0);
+        for _ in 0..60 {
+            let a = classic.step(1.0);
+            let b = composed.step(1.0);
+            assert_eq!(a.power, b.power, "{id}");
+            assert_eq!(a.energy, b.energy, "{id}");
+            assert_eq!(a.pcap, b.pcap, "{id}");
+            assert_eq!(a.heartbeats, b.heartbeats, "{id}");
+        }
+    }
+}
+
+#[test]
+fn multi_device_records_are_deterministic_and_discriminated() {
+    // The non-degenerate hierarchy: same seed → same bytes; different seed
+    // → different bytes (the JSON oracle has discriminating power over
+    // device traces too).
+    use powerctl::control::baseline::StaticCap;
+    use powerctl::control::node_budget::ideal_device_model;
+
+    let run = |seed: u64| {
+        let cluster = Cluster::get(ClusterId::Gros);
+        let cpu = DeviceSpec::cpu(&cluster);
+        let gpu = DeviceSpec::gpu();
+        let node = NodeSim::hetero(cluster, &[cpu.clone(), gpu.clone()], seed);
+        let ctl = NodeBudgetController::new(
+            DeviceSplitSpec::SlackShift.build(),
+            vec![
+                DeviceCtl::pi(&cpu, ideal_device_model(&cpu), 0.15, cpu.cap_max),
+                DeviceCtl::pi(&gpu, ideal_device_model(&gpu), 0.15, gpu.cap_max),
+            ],
+        );
+        let mut engine = ControlLoop::new(HeteroBackend::new(node, ctl), 1.0);
+        engine.set_initial_pcap(360.0);
+        let mut policy = StaticCap { pcap: 360.0 };
+        for i in 1..=50 {
+            engine.tick(i as f64, &mut policy);
+        }
+        engine.record()
+    };
+    let a = run(1);
+    let b = run(1);
+    let c = run(2);
+    assert_eq!(a.devices.len(), 2);
+    assert_eq!(a.to_json().dump(), b.to_json().dump());
+    assert_ne!(a.to_json().dump(), c.to_json().dump());
+}

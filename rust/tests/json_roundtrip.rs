@@ -171,6 +171,69 @@ fn malformed_documents_rejected() {
 }
 
 #[test]
+fn hetero_run_record_roundtrips() {
+    // A RunRecord with per-device traces (the hierarchical-node export)
+    // must round-trip through the JSON layer value-exactly, and the
+    // "devices" key must appear iff traces are present.
+    use powerctl::coordinator::records::{DeviceTrace, RunRecord};
+
+    let mut rng = Pcg64::seeded(7100);
+    let mut rec = RunRecord {
+        cluster: "gros".into(),
+        policy: "hetero-slack-shift-eps0.15".into(),
+        node_id: 2,
+        seed: 99,
+        epsilon: 0.15,
+        setpoint: f64::NAN, // non-finite scalars serialize as null
+        exec_time: 87.3,
+        energy: 12_345.6,
+        beats: 2_600,
+        completed: true,
+        ..Default::default()
+    };
+    for kind in ["cpu", "gpu"] {
+        let mut d = DeviceTrace {
+            kind: kind.into(),
+            ..Default::default()
+        };
+        for i in 0..40 {
+            let t = i as f64;
+            rec_push(&mut d.pcap, t, rng.uniform(40.0, 400.0));
+            rec_push(&mut d.power, t, rng.uniform(30.0, 390.0));
+            rec_push(&mut d.progress, t, rng.uniform(0.0, 120.0));
+        }
+        rec.devices.push(d);
+    }
+    for i in 0..40 {
+        let t = i as f64;
+        rec_push(&mut rec.pcap, t, rng.uniform(140.0, 520.0));
+        rec_push(&mut rec.power, t, rng.uniform(100.0, 500.0));
+        rec_push(&mut rec.progress, t, rng.uniform(0.0, 140.0));
+        rec_push(&mut rec.true_progress, t, f64::NAN);
+    }
+
+    let j = rec.to_json();
+    let back = Json::parse(&j.dump()).unwrap();
+    assert_eq!(back, j);
+    let back_pretty = Json::parse(&j.pretty()).unwrap();
+    assert_eq!(back_pretty, j);
+    let devs = back.get("devices").unwrap().as_arr().unwrap();
+    assert_eq!(devs.len(), 2);
+    assert_eq!(
+        devs[1].get_path(&["pcap", "values"]).unwrap().as_arr().unwrap().len(),
+        40
+    );
+
+    // Single-device records must not grow the key (byte-compat contract).
+    rec.devices.clear();
+    assert!(rec.to_json().get("devices").is_none());
+}
+
+fn rec_push(ts: &mut powerctl::util::timeseries::TimeSeries, t: f64, v: f64) {
+    ts.push(t, v);
+}
+
+#[test]
 fn deep_nesting_roundtrips() {
     let mut v = Json::Num(1.0);
     for i in 0..64 {

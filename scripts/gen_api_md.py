@@ -1,0 +1,190 @@
+#!/usr/bin/env python3
+"""Generate docs/API.md from the crate's module headers and public items.
+
+A lightweight stand-in for a rustdoc-JSON walker (the offline toolchain has
+no nightly rustdoc): it parses `rust/src/**/*.rs` textually, collecting each
+module's `//!` header and every public item (`pub fn/struct/enum/trait/
+const/type`) together with the first line of its `///` doc comment.
+
+Usage:
+    python3 scripts/gen_api_md.py                 # rewrite docs/API.md
+    python3 scripts/gen_api_md.py --check-missing # list undocumented pub items
+
+`--check-missing` exits non-zero if any public item lacks a doc comment —
+the textual analogue of `#![warn(missing_docs)]`, usable without a Rust
+toolchain. (Heuristic: `#[doc(hidden)]` items and trait impl blocks are
+skipped, like the real lint.)
+"""
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SRC = ROOT / "rust" / "src"
+OUT = ROOT / "docs" / "API.md"
+
+ITEM_RE = re.compile(
+    r"^(?P<indent>\s*)pub(?:\(crate\)|\(super\))?\s+"
+    r"(?P<kw>fn|struct|enum|trait|const|type|use|mod)\s+"
+    r"(?P<name>[A-Za-z_][A-Za-z0-9_]*)"
+)
+
+
+def module_name(path: Path) -> str:
+    rel = path.relative_to(SRC)
+    parts = list(rel.with_suffix("").parts)
+    if parts[-1] in ("mod", "lib"):
+        parts = parts[:-1]
+    return "::".join(["powerctl"] + parts) if parts else "powerctl"
+
+
+def parse_file(path: Path, args_check_fields: bool = True):
+    """Return (module_doc_first_paragraph, items, missing).
+
+    items: list of (kind, name, signature, doc_first_line, is_crate_private)
+    missing: list of (line_no, kind, name) public items without docs.
+    """
+    lines = path.read_text().splitlines()
+    # Module header: leading //! block.
+    header = []
+    for ln in lines:
+        s = ln.strip()
+        if s.startswith("//!"):
+            header.append(s[3:].lstrip())
+        elif s == "" and header:
+            break
+        elif not s.startswith("//!") and s != "":
+            break
+    items, missing = [], []
+    in_test_mod = False
+    depth_at_test = 0
+    depth = 0
+    pending_doc = False
+    pending_hidden = False
+    for i, ln in enumerate(lines):
+        s = ln.strip()
+        if re.match(r"#\[cfg\(test\)\]", s):
+            in_test_mod = True
+            depth_at_test = depth
+        depth += ln.count("{") - ln.count("}")
+        if in_test_mod and depth <= depth_at_test and "}" in ln:
+            in_test_mod = False
+            pending_doc = pending_hidden = False
+            continue
+        if in_test_mod:
+            continue
+        if s.startswith("///"):
+            pending_doc = True
+            continue
+        if s.startswith("#[doc(hidden)"):
+            pending_hidden = True
+            continue
+        if s.startswith("#[") or s.startswith("//"):
+            continue
+        # Public struct fields (missing_docs covers them too). Heuristic:
+        # indented `pub name:` lines outside test modules.
+        fm = re.match(r"^\s+pub\s+(?P<fname>[a-z_][A-Za-z0-9_]*)\s*:", ln)
+        if fm and args_check_fields and not pending_doc and not pending_hidden:
+            missing.append((i + 1, "field", fm.group("fname")))
+        m = ITEM_RE.match(ln)
+        if m:
+            kw, name = m.group("kw"), m.group("name")
+            private = "pub(" in ln.split(name)[0]
+            if kw not in ("use", "mod") and not private:
+                sig = s.rstrip("{;").strip()
+                doc = "" if not pending_doc else _doc_first_line(lines, i)
+                if pending_hidden:
+                    pass  # skipped from API.md and from the missing check
+                else:
+                    items.append((kw, name, sig, doc))
+                    if not pending_doc:
+                        missing.append((i + 1, kw, name))
+        if s != "":
+            pending_doc = False
+            pending_hidden = False
+    return " ".join(header).strip(), items, missing
+
+
+def _doc_first_line(lines, item_idx):
+    """First sentence of the /// block immediately above lines[item_idx]."""
+    j = item_idx - 1
+    block = []
+    while j >= 0:
+        s = lines[j].strip()
+        if s.startswith("///"):
+            block.append(s[3:].strip())
+            j -= 1
+        elif s.startswith("#["):
+            j -= 1
+        else:
+            break
+    block.reverse()
+    for b in block:
+        if b:
+            return b
+    return ""
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--check-missing", action="store_true")
+    args = ap.parse_args()
+
+    files = sorted(SRC.rglob("*.rs"))
+    any_missing = False
+    sections = []
+    for path in files:
+        header, items, missing = parse_file(path)
+        if args.check_missing:
+            for line_no, kw, name in missing:
+                print(f"{path.relative_to(ROOT)}:{line_no}: undocumented pub {kw} {name}")
+                any_missing = True
+            continue
+        if not items and not header:
+            continue
+        sections.append((module_name(path), path, header, items))
+
+    if args.check_missing:
+        sys.exit(1 if any_missing else 0)
+
+    out = [
+        "# powerctl — API reference",
+        "",
+        "Generated from module headers and public-item doc comments:",
+        "",
+        "```",
+        "python3 scripts/gen_api_md.py",
+        "```",
+        "",
+        "Regenerate after any public-API change (CI's `cargo doc --no-deps`",
+        "job catches rustdoc breakage; this file is the committed, greppable",
+        "summary). See [DESIGN.md](../DESIGN.md) for the architecture and",
+        "[README.md](../README.md) for the quickstart.",
+        "",
+    ]
+    for mod, path, header, items in sections:
+        rel = path.relative_to(ROOT)
+        out.append(f"## `{mod}`")
+        out.append("")
+        out.append(f"*Source: `{rel}`*")
+        out.append("")
+        if header:
+            out.append(header)
+            out.append("")
+        if items:
+            out.append("| item | summary |")
+            out.append("|------|---------|")
+            for kw, name, sig, doc in items:
+                doc = doc.replace("|", "\\|")
+                sig = sig.replace("|", "\\|")
+                out.append(f"| `{sig}` | {doc} |")
+            out.append("")
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text("\n".join(out) + "\n")
+    print(f"wrote {OUT.relative_to(ROOT)} ({len(sections)} modules)")
+
+
+if __name__ == "__main__":
+    main()
