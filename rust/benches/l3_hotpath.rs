@@ -28,8 +28,8 @@ use powerctl::control::node_budget::{ideal_device_model, DeviceCtl, DeviceSplitS
 use powerctl::coordinator::hetero::HeteroBackend;
 use powerctl::fleet::coordinator::node_seed;
 use powerctl::fleet::{
-    run_fleet, run_fleet_threaded, BudgetedPolicy, FleetConfig, NodeHardware, NodePolicySpec,
-    NodeSpec, ShardedExecutor, WorkerConfig,
+    run_fleet, run_fleet_threaded, run_fleet_with_path, BudgetedPolicy, FleetConfig, NodeHardware,
+    NodePolicySpec, NodeSpec, ShardedExecutor, SimPath, WorkerConfig,
 };
 use powerctl::sim::device::DeviceSpec;
 use powerctl::sim::cluster::{Cluster, ClusterId};
@@ -141,6 +141,28 @@ fn main() {
             black_box(node.step_into(1.0, &mut beats));
         });
         report.add(&r);
+        // Classic scalar baseline for the same 20-sub-step period.
+        let mut classic = NodeSim::new(cluster.clone(), 7);
+        classic.set_classic_stepping(true);
+        classic.set_pcap(100.0);
+        let rc = fast.run("node_step_into_1s_classic_stepping", || {
+            beats.clear();
+            black_box(classic.step_into(1.0, &mut beats));
+        });
+        report.add(&rc);
+        // Steady-state kernel tick must be allocation-free: the bench loop
+        // above drove every buffer (beat sink, SoA arrays, consts memo) to
+        // its high-water capacity.
+        let counted = if smoke() { 200u64 } else { 2_000 };
+        let before = allocations();
+        for _ in 0..counted {
+            beats.clear();
+            black_box(node.step_into(1.0, &mut beats));
+        }
+        let delta = allocations() - before;
+        println!("  allocations over {counted} steady-state kernel node steps: {delta}");
+        report.add_metric("node_kernel_steady_state_allocations", delta as f64);
+        assert_eq!(delta, 0, "kernel node tick allocated {delta} times");
     }
 
     section("end-to-end closed-loop runs");
@@ -281,6 +303,98 @@ fn main() {
         let speedup = sharded_at_baseline / tps_threaded;
         println!("  → sharded executor speedup at {baseline_nodes} nodes: {speedup:.1}×");
         report.add_metric(&format!("fleet_sharded_speedup_{baseline_nodes}"), speedup);
+    }
+
+    section("batched kernel vs classic stepping (node-ticks/s)");
+    {
+        // The tentpole number: fleet throughput with the shard-major SoA
+        // kernel (one kernel invocation per shard per period, hoisted
+        // sub-step invariants) against the classic per-node scalar loops
+        // on the SAME sharded executor — isolating the stepping path from
+        // the execution mechanism. Identical records by construction;
+        // asserted below before any throughput is reported, and the CI
+        // gate greps BENCH_l3.json for the equivalence metric so the case
+        // cannot silently be skipped.
+        let drive = |n: usize, periods: f64, path: SimPath| -> (f64, u64) {
+            let cfg = FleetConfig {
+                budget: 95.0 * n as f64,
+                period: 1.0,
+                realloc_every: 5,
+                total_beats: u64::MAX,
+                max_time: periods,
+                seed: 42,
+                threads: None,
+            };
+            let specs = gros_specs(&ident, n, 0.15);
+            let mut strategy = SlackProportional::default();
+            let out = run_fleet_with_path(&specs, &mut strategy, &cfg, path);
+            (out.node_ticks as f64 / out.wall_seconds, out.node_ticks)
+        };
+
+        // Equivalence case first: a mixed fleet (classic single-CPU nodes
+        // plus a hierarchical CPU+GPU node) under a tight budget, compared
+        // byte-for-byte across the two stepping paths.
+        {
+            let mut specs = gros_specs(&ident, 5, 0.15);
+            specs.push(NodeSpec {
+                cluster: ClusterId::Gros,
+                model: ident.model.clone(),
+                policy: NodePolicySpec::Static,
+                hardware: NodeHardware::cpu_gpu(&cluster, DeviceSplitSpec::SlackShift, 0.15),
+            });
+            let cfg = FleetConfig {
+                budget: 90.0 * 5.0 + 360.0,
+                period: 1.0,
+                realloc_every: 5,
+                total_beats: 400,
+                max_time: 60.0,
+                seed: 7,
+                threads: None,
+            };
+            let to_bytes = |out: &powerctl::fleet::FleetOutcome| {
+                out.records
+                    .iter()
+                    .map(|r| r.to_json().dump())
+                    .collect::<Vec<_>>()
+                    .join("\n")
+            };
+            let batched = run_fleet_with_path(
+                &specs,
+                &mut SlackProportional::default(),
+                &cfg,
+                SimPath::Batched,
+            );
+            let classic = run_fleet_with_path(
+                &specs,
+                &mut SlackProportional::default(),
+                &cfg,
+                SimPath::Classic,
+            );
+            assert_eq!(
+                to_bytes(&batched),
+                to_bytes(&classic),
+                "kernel records diverge from classic records"
+            );
+            println!("  kernel-vs-classic equivalence: byte-identical on a 6-node mixed fleet");
+            report.add_metric("kernel_vs_classic_identical", 1.0);
+        }
+
+        let sizes: &[usize] = if smoke() { &[16, 64, 256] } else { &[16, 256, 1024] };
+        for &n in sizes {
+            let periods = if smoke() { 20.0 } else { 120.0 };
+            let (kernel_tps, ticks) = drive(n, periods, SimPath::Batched);
+            let (classic_tps, _) = drive(n, periods, SimPath::Classic);
+            println!(
+                "  {n:>5} nodes: kernel {kernel_tps:>12.0} node-ticks/s | classic {classic_tps:>12.0} node-ticks/s | {:.2}× ({ticks} ticks)",
+                kernel_tps / classic_tps
+            );
+            report.add_metric(&format!("fleet_kernel_node_ticks_per_s_{n}"), kernel_tps);
+            report.add_metric(&format!("fleet_classic_node_ticks_per_s_{n}"), classic_tps);
+            report.add_metric(
+                &format!("fleet_kernel_speedup_{n}"),
+                kernel_tps / classic_tps,
+            );
+        }
     }
 
     section("steady-state allocation check (sharded tick path)");

@@ -151,6 +151,12 @@ impl LockstepBackend {
     pub fn node_mut(&mut self) -> &mut NodeSim {
         &mut self.node
     }
+
+    /// Virtual time of the last `advance` — the shard-staging executor
+    /// reads it to pre-compute the exact `dt` this backend will step.
+    pub(crate) fn last_time(&self) -> f64 {
+        self.last_time
+    }
 }
 
 impl NodeBackend for LockstepBackend {

@@ -121,6 +121,12 @@ impl HeteroBackend {
         &self.ctl
     }
 
+    /// Virtual time of the last `advance` — the shard-staging executor
+    /// reads it to pre-compute the exact `dt` this backend will step.
+    pub(crate) fn last_time(&self) -> f64 {
+        self.last_time
+    }
+
     /// Pre-size the per-device trace logs for `rows` periods so the
     /// steady-state tick path never grows a `Vec` (hot-path discipline,
     /// same as [`ControlLoop::reserve_samples`]).

@@ -33,6 +33,7 @@ use crate::control::budget::{BudgetPolicy, NodeReport};
 use crate::coordinator::records::RunRecord;
 use crate::fleet::executor::ShardedExecutor;
 use crate::fleet::node::{spawn_worker, Cmd, NodeSpec, WorkerConfig, WorkerHandle};
+use crate::sim::kernel::SimPath;
 use crate::util::parallel::default_threads;
 use crate::util::rng::Pcg64;
 
@@ -129,20 +130,42 @@ fn summarize(
     }
 }
 
-/// Run `specs` as a fleet under `strategy` on the sharded executor.
-/// Blocks until every node completes its workload or `config.max_time`
-/// elapses. Byte-identical records to [`run_fleet_threaded`].
+/// Run `specs` as a fleet under `strategy` on the sharded executor with
+/// the batched shard-kernel stepping path. Blocks until every node
+/// completes its workload or `config.max_time` elapses. Byte-identical
+/// records to [`run_fleet_threaded`] and to [`run_fleet_with_path`] on
+/// [`SimPath::Classic`].
 pub fn run_fleet(
     specs: &[NodeSpec],
     strategy: &mut dyn BudgetPolicy,
     config: &FleetConfig,
+) -> FleetOutcome {
+    run_fleet_with_path(specs, strategy, config, SimPath::Batched)
+}
+
+/// [`run_fleet`] with an explicit simulation stepping path —
+/// [`SimPath::Classic`] drives the per-node scalar loops instead of the
+/// batched shard kernel (the equivalence oracle and the `l3_hotpath`
+/// bench baseline; the records are byte-identical either way).
+pub fn run_fleet_with_path(
+    specs: &[NodeSpec],
+    strategy: &mut dyn BudgetPolicy,
+    config: &FleetConfig,
+    path: SimPath,
 ) -> FleetOutcome {
     assert!(!specs.is_empty(), "fleet needs at least one node");
     let n = specs.len();
     let initial_limit = config.budget / n as f64;
     let seeds: Vec<u64> = (0..n).map(|i| node_seed(config.seed, i)).collect();
     let threads = config.threads.unwrap_or_else(default_threads).clamp(1, n);
-    let mut exec = ShardedExecutor::new(specs, initial_limit, worker_config(config), &seeds, threads);
+    let mut exec = ShardedExecutor::with_path(
+        specs,
+        initial_limit,
+        worker_config(config),
+        &seeds,
+        threads,
+        path,
+    );
 
     let mut limits = vec![0.0; n];
     let mut limits_trace = Vec::new();

@@ -5,9 +5,13 @@
 //! Layout: node engines live in one contiguous `Vec<NodeCell>`, split into
 //! contiguous shards of `ceil(n / threads)` cells. Each control period is a
 //! **single fork/join**: [`WorkerPool::par_chunks_mut`] hands every worker
-//! disjoint `&mut` shards, the worker ticks each engine in place and stamps
-//! the cell's [`NodeReport`]; after the join the coordinator reads the
-//! contiguous report buffer and (on reallocation epochs) writes new
+//! disjoint `&mut` shards, the worker first drives **one batched-kernel
+//! invocation** ([`ShardKernel`]) that steps every device of every
+//! unfinished node in its shard through the period (struct-of-arrays,
+//! hoisted sub-step invariants), then ticks each engine in place — the
+//! engines consume the staged physics instead of re-simulating — and
+//! stamps the cell's [`NodeReport`]; after the join the coordinator reads
+//! the contiguous report buffer and (on reallocation epochs) writes new
 //! ceilings back. That is the entire protocol.
 //!
 //! Determinism argument (why this is byte-identical to the legacy
@@ -26,6 +30,8 @@
 //! Shard claim order (which worker ticks which shard first) therefore only
 //! moves wall time, never bytes — pinned by `tests/fleet_equivalence.rs`.
 
+use std::sync::Mutex;
+
 use crate::control::budget::NodeReport;
 use crate::coordinator::engine::ControlLoop;
 use crate::coordinator::records::RunRecord;
@@ -33,6 +39,7 @@ use crate::fleet::node::{
     build_node, finalize_record, node_report, BudgetedPolicy, FleetBackend, NodeSpec, WorkerConfig,
 };
 use crate::sim::cluster::Cluster;
+use crate::sim::kernel::{ShardKernel, SimPath};
 use crate::util::parallel::WorkerPool;
 
 /// Cap on pre-reserved sample rows per node (`max_time / period` can be
@@ -71,17 +78,39 @@ pub struct ShardedExecutor {
     /// Shard size: contiguous cells ticked by one worker per fork/join.
     shard: usize,
     cfg: WorkerConfig,
+    /// One batched stepping kernel per shard: the owning worker pre-steps
+    /// all devices of its shard through the control period in a single
+    /// kernel invocation before ticking the engines. Mutex-wrapped so the
+    /// pool closure stays `Sync`; each shard index is claimed by exactly
+    /// one worker per fork/join, so the locks are never contended.
+    kernels: Vec<Mutex<ShardKernel>>,
+    path: SimPath,
 }
 
 impl ShardedExecutor {
     /// Build `specs.len()` node engines (node `i` seeded with `seeds[i]`
-    /// and capped at `initial_limit`) sharded over `threads` pool workers.
+    /// and capped at `initial_limit`) sharded over `threads` pool workers,
+    /// stepping node physics on the batched shard kernel.
     pub fn new(
         specs: &[NodeSpec],
         initial_limit: f64,
         cfg: WorkerConfig,
         seeds: &[u64],
         threads: usize,
+    ) -> Self {
+        ShardedExecutor::with_path(specs, initial_limit, cfg, seeds, threads, SimPath::Batched)
+    }
+
+    /// [`new`](Self::new) with an explicit stepping path —
+    /// [`SimPath::Classic`] keeps the per-node scalar loops (byte-identical
+    /// oracle / bench baseline).
+    pub fn with_path(
+        specs: &[NodeSpec],
+        initial_limit: f64,
+        cfg: WorkerConfig,
+        seeds: &[u64],
+        threads: usize,
+        path: SimPath,
     ) -> Self {
         assert!(!specs.is_empty(), "executor needs at least one node");
         assert_eq!(specs.len(), seeds.len(), "one seed per node spec");
@@ -94,7 +123,7 @@ impl ShardedExecutor {
         } else {
             0
         };
-        let cells: Vec<NodeCell> = specs
+        let mut cells: Vec<NodeCell> = specs
             .iter()
             .zip(seeds)
             .enumerate()
@@ -111,14 +140,25 @@ impl ShardedExecutor {
                 }
             })
             .collect();
+        if path == SimPath::Classic {
+            for cell in &mut cells {
+                cell.engine.backend_mut().sim_node().0.set_classic_stepping(true);
+            }
+        }
         let reports = cells.iter().map(|c| c.report).collect();
         let threads = threads.clamp(1, n);
+        let shard = n.div_ceil(threads);
+        let kernels = (0..n.div_ceil(shard))
+            .map(|_| Mutex::new(ShardKernel::new()))
+            .collect();
         ShardedExecutor {
             pool: WorkerPool::new(threads),
             cells,
             reports,
-            shard: n.div_ceil(threads),
+            shard,
             cfg,
+            kernels,
+            path,
         }
     }
 
@@ -133,12 +173,23 @@ impl ShardedExecutor {
     }
 
     /// One lockstep control period for every node — a single fork/join
-    /// over the shards. Returns `true` once every node has finished
-    /// (quota or timeout).
+    /// over the shards, each worker running **one batched-kernel
+    /// invocation** that steps every device of its shard through the
+    /// period before the engine ticks consume the staged results. Returns
+    /// `true` once every node has finished (quota or timeout).
     pub fn tick(&mut self, now: f64) -> bool {
+        let shard = self.shard;
+        let kernels = &self.kernels;
+        let batched = self.path == SimPath::Batched;
         self.pool
-            .par_chunks_mut(&mut self.cells, self.shard, |_start, shard| {
-                for cell in shard {
+            .par_chunks_mut(&mut self.cells, shard, |start, cells| {
+                if batched {
+                    let mut kernel = kernels[start / shard]
+                        .lock()
+                        .expect("shard kernel poisoned");
+                    stage_shard(&mut kernel, cells, now);
+                }
+                for cell in cells {
                     cell.tick(now);
                 }
             });
@@ -177,6 +228,32 @@ impl ShardedExecutor {
             .into_iter()
             .map(|c| finalize_record(&c.engine, &c.policy, &c.cluster, c.seed, cfg))
             .collect()
+    }
+}
+
+/// Pre-step every unfinished node of `cells` through the control period
+/// ending at `now` with one batched-kernel invocation. Each staged node's
+/// engine tick then consumes the staged sensors/beats instead of
+/// re-simulating. Selection is deterministic: exactly the nodes whose
+/// engine is unfinished (the same predicate `NodeCell::tick` uses) and
+/// whose `dt` matches the shard's — anything refused simply steps through
+/// its own node kernel inside the engine tick, byte-identically.
+fn stage_shard(kernel: &mut ShardKernel, cells: &mut [NodeCell], now: f64) {
+    kernel.stage_begin();
+    for (i, cell) in cells.iter_mut().enumerate() {
+        if cell.engine.finished() {
+            continue;
+        }
+        let (node, last_time) = cell.engine.backend_mut().sim_node();
+        // The exact dt the backend's `advance(now, ..)` will compute.
+        let dt = now - last_time;
+        kernel.stage_node(i as u32, dt, node);
+    }
+    kernel.stage_run();
+    for i in 0..kernel.staged_count() {
+        let ci = kernel.staged_cell(i) as usize;
+        let (node, _) = cells[ci].engine.backend_mut().sim_node();
+        kernel.unstage_node(i, node);
     }
 }
 
@@ -288,6 +365,29 @@ mod tests {
         assert!(records[0].devices.is_empty());
         assert!(records[1].devices.is_empty());
         assert_eq!(records[2].devices.len(), 2);
+    }
+
+    #[test]
+    fn classic_path_matches_batched_bytes() {
+        // In-tree guard for the full kernel-vs-classic suite in
+        // tests/kernel_equivalence.rs: same records either way.
+        let seeds: Vec<u64> = (0..5).map(|i| 30 + i).collect();
+        let run = |path: SimPath| {
+            let mut exec = ShardedExecutor::with_path(&specs(5), 90.0, cfg(), &seeds, 2, path);
+            let mut now = 0.0;
+            for _ in 0..60 {
+                now += 1.0;
+                if exec.tick(now) {
+                    break;
+                }
+            }
+            exec.into_records()
+        };
+        let a = run(SimPath::Batched);
+        let b = run(SimPath::Classic);
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.to_json().dump(), rb.to_json().dump());
+        }
     }
 
     #[test]

@@ -129,6 +129,23 @@ impl FleetBackend {
             h.reserve_traces(rows);
         }
     }
+
+    /// The simulated node behind this backend plus the virtual time of its
+    /// last `advance` — the shard-staging executor uses the pair to
+    /// pre-step the node through exactly the `dt` the backend will
+    /// compute, and to flip classic-stepping mode on.
+    pub(crate) fn sim_node(&mut self) -> (&mut NodeSim, f64) {
+        match self {
+            FleetBackend::Classic(b) => {
+                let t = b.last_time();
+                (b.node_mut(), t)
+            }
+            FleetBackend::Hetero(b) => {
+                let t = b.last_time();
+                (b.node_mut(), t)
+            }
+        }
+    }
 }
 
 impl NodeBackend for FleetBackend {

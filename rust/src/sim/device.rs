@@ -22,14 +22,14 @@ use crate::util::rng::Pcg64;
 /// Per-beat interval jitter coefficient of variation. Deliberately includes
 /// occasional heavy-tailed outliers so the median-vs-mean choice in Eq. (1)
 /// is observable in tests.
-const BEAT_JITTER_CV: f64 = 0.08;
+pub(crate) const BEAT_JITTER_CV: f64 = 0.08;
 /// Fraction of beats that are extreme stragglers (context switches, page
 /// faults — §2.1's "robust to extreme values" motivation).
-const STRAGGLER_PROB: f64 = 0.01;
+pub(crate) const STRAGGLER_PROB: f64 = 0.01;
 /// Straggler delay multiplier relative to the nominal interval.
-const STRAGGLER_FACTOR: f64 = 8.0;
+pub(crate) const STRAGGLER_FACTOR: f64 = 8.0;
 /// Correlation time of the OU progress-noise process [s].
-const OU_THETA: f64 = 2.0;
+pub(crate) const OU_THETA: f64 = 2.0;
 
 /// What kind of device a [`DeviceSpec`] describes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -189,22 +189,26 @@ pub struct DeviceSensors {
 /// one-device node reproduces the pre-refactor bytes.
 #[derive(Debug, Clone)]
 pub struct Device {
-    spec: DeviceSpec,
-    package: RaplPackage,
-    plant: Plant,
-    disturbances: Disturbances,
-    rng: Pcg64,
+    // Fields are crate-visible so the batched simulation kernel
+    // (`sim::kernel`) can gather/scatter the hot state into its
+    // struct-of-arrays layout; outside the crate the accessors below are
+    // the only surface.
+    pub(crate) spec: DeviceSpec,
+    pub(crate) package: RaplPackage,
+    pub(crate) plant: Plant,
+    pub(crate) disturbances: Disturbances,
+    pub(crate) rng: Pcg64,
     /// OU state: slow additive progress noise [Hz].
-    ou: f64,
+    pub(crate) ou: f64,
     /// Work accumulator: fractional heartbeats owed.
-    backlog: f64,
+    pub(crate) backlog: f64,
     /// Time of the last emitted heartbeat.
-    last_beat: f64,
+    pub(crate) last_beat: f64,
     /// Total heartbeats emitted since construction.
-    beats: u64,
+    pub(crate) beats: u64,
     /// Last measured (noisy) power reading [W].
-    last_power: f64,
-    last_dist: DisturbanceState,
+    pub(crate) last_power: f64,
+    pub(crate) last_dist: DisturbanceState,
 }
 
 impl Device {
@@ -292,8 +296,13 @@ impl Device {
     /// Advance one sub-step of `h` seconds ending at node time `now`,
     /// appending emitted heartbeat timestamps to `beats` and accumulating
     /// delivered energy into the node-level `energy` counter. Returns the
-    /// noisy power reading. The body is the classic node's sub-step,
-    /// verbatim — any change here breaks the single-device equivalence.
+    /// noisy power reading.
+    ///
+    /// The body lives in [`crate::sim::kernel::substep_device`] — the
+    /// *one* sub-step implementation shared by this classic per-struct
+    /// path and the batched struct-of-arrays kernel, so the two paths are
+    /// byte-identical by construction. This wrapper rebuilds the hoisted
+    /// invariants per call; the kernel builds them once per `(h, spec)`.
     pub(crate) fn substep(
         &mut self,
         h: f64,
@@ -301,42 +310,25 @@ impl Device {
         beats: &mut Vec<f64>,
         energy: &mut EnergyCounter,
     ) -> f64 {
-        let dist = self.disturbances.step(h);
-        let power_reading =
-            self.package
-                .step(h, dist.drop_active, &mut self.rng, self.spec.power_noise);
-        let true_power = self.package.true_power();
-        energy.accumulate(true_power * self.spec.packages as f64, h);
-        let progress = self.plant.step(h, true_power, &dist);
-        self.last_dist = dist;
-
-        // OU progress-noise update (exact discretization).
-        let decay = (-h / OU_THETA).exp();
-        let sigma = self.spec.progress_noise;
-        self.ou = self.ou * decay + self.rng.gauss(0.0, sigma * (1.0 - decay * decay).sqrt());
-
-        // Heartbeat emission: rate = max(0, progress + ou).
-        let rate = (progress + self.ou).max(0.0);
-        self.backlog += rate * h;
-        while self.backlog >= 1.0 {
-            self.backlog -= 1.0;
-            // Nominal emission time: interpolate within the sub-step.
-            let nominal = now - h * (self.backlog / (rate * h).max(1e-12)).min(1.0);
-            // Per-beat jitter: mostly small, occasionally a straggler.
-            let jitter = if self.rng.f64() < STRAGGLER_PROB {
-                STRAGGLER_FACTOR * self.rng.f64()
-            } else {
-                self.rng.gauss(0.0, BEAT_JITTER_CV)
-            };
-            let interval = (nominal - self.last_beat).max(1e-9);
-            let t = (self.last_beat + interval * (1.0 + jitter).max(0.05)).min(now);
-            let t = t.max(self.last_beat); // keep monotone
-            beats.push(t);
-            self.last_beat = t;
-            self.beats += 1;
-        }
-        self.last_power = power_reading;
-        power_reading
+        let consts = crate::sim::kernel::SubstepConsts::for_device(self, h);
+        let nominal = self.package.target();
+        crate::sim::kernel::substep_device(
+            &consts,
+            nominal,
+            now,
+            &mut self.rng,
+            &mut self.disturbances,
+            &mut self.package,
+            &mut self.plant,
+            &mut self.ou,
+            &mut self.backlog,
+            &mut self.last_beat,
+            &mut self.beats,
+            &mut self.last_power,
+            &mut self.last_dist,
+            beats,
+            energy,
+        )
     }
 }
 

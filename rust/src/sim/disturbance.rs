@@ -86,17 +86,40 @@ impl Disturbances {
 
     /// Advance by `dt` seconds and return the state to apply.
     pub fn step(&mut self, dt: f64) -> DisturbanceState {
+        let consts = self.consts(dt);
+        self.step_hoisted(dt, &consts)
+    }
+
+    /// The sub-step invariants of [`step`](Self::step) for a fixed `dt`:
+    /// the Poisson mean and its Knuth threshold `e^{-λ}`, the event
+    /// duration rate and the thermal-walk σ. The simulation kernel builds
+    /// these once per `(dt, spec)` instead of once per sub-step.
+    pub(crate) fn consts(&self, dt: f64) -> DistConsts {
+        let lambda = self.drop_rate * dt;
+        DistConsts {
+            lambda,
+            knuth_l: (-lambda).exp(),
+            exp_rate: 1.0 / self.drop_duration.max(1e-9),
+            thermal_sigma: self.thermal_step * dt.sqrt(),
+        }
+    }
+
+    /// [`step`](Self::step) with the `dt`-invariants precomputed — the one
+    /// body both the classic per-device loop and the batched kernel run.
+    /// `c` must come from [`consts`](Self::consts) with the same `dt`; the
+    /// RNG draw sequence is then identical to the unhoisted form.
+    pub(crate) fn step_hoisted(&mut self, dt: f64, c: &DistConsts) -> DisturbanceState {
         // Drop-event lifecycle.
         if self.active_left > 0.0 {
             self.active_left -= dt;
         } else if self.drop_rate > 0.0 {
-            let arrivals = self.rng.poisson(self.drop_rate * dt);
+            let arrivals = self.rng.poisson_hoisted(c.lambda, c.knuth_l);
             if arrivals > 0 {
-                self.active_left = self.rng.exponential(1.0 / self.drop_duration.max(1e-9));
+                self.active_left = self.rng.exponential(c.exp_rate);
             }
         }
         // Thermal drift: bounded random walk in [0.97, 1.03].
-        self.thermal += self.rng.gauss(0.0, self.thermal_step * dt.sqrt());
+        self.thermal += self.rng.gauss(0.0, c.thermal_sigma);
         self.thermal = self.thermal.clamp(0.97, 1.03);
 
         let drop_active = self.active_left > 0.0;
@@ -111,6 +134,20 @@ impl Disturbances {
             thermal_factor: self.thermal,
         }
     }
+}
+
+/// Per-`(dt, spec)` invariants of [`Disturbances::step`], hoisted out of
+/// the sub-step loop by the batched simulation kernel.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct DistConsts {
+    /// Poisson mean `drop_rate · dt` of event arrivals per sub-step.
+    pub lambda: f64,
+    /// Knuth threshold `e^{-λ}` for the small-λ Poisson sampler.
+    pub knuth_l: f64,
+    /// Rate `1 / max(drop_duration, 1e-9)` of the event-length exponential.
+    pub exp_rate: f64,
+    /// Thermal random-walk σ for one sub-step: `thermal_step · √dt`.
+    pub thermal_sigma: f64,
 }
 
 #[cfg(test)]

@@ -1,0 +1,583 @@
+//! The batched simulation kernel: shard-major, struct-of-arrays device
+//! stepping with hoisted sub-step invariants.
+//!
+//! The fleet hot path simulates `nodes × devices × sub-steps` device
+//! updates per control period. The classic layout walks one node at a
+//! time, one sub-step at a time, recomputing every `exp`/`sqrt` whose
+//! arguments only depend on `(h, spec)` — `e^{-h/θ}` for the OU noise,
+//! the Poisson threshold `e^{-λh}`, the RAPL window factor, the plant
+//! smoothing factor — twenty times per device per period, while bouncing
+//! between node structs that are cold in cache. This module flips both
+//! axes:
+//!
+//! * **Invariant hoisting** — [`SubstepConsts`] precomputes every
+//!   per-sub-step invariant once per `(h, spec)`; a `NodeSim`-owned kernel
+//!   memoizes the table across control periods while `h` is unchanged.
+//! * **Struct-of-arrays** — [`ShardKernel`] flattens the hot per-device
+//!   state (plant, OU state, backlog, last beat, cap/actuator state, RNG,
+//!   disturbance state) into contiguous arrays keyed by a [`DeviceSlot`]
+//!   index, and steps **all devices of a shard** through a control period
+//!   in one call: one pass over the arrays per sub-step instead of one
+//!   pass over sub-steps per node.
+//!
+//! **Equivalence argument.** There is exactly one sub-step body,
+//! `substep_device`; the classic per-struct path (`Device::substep`) and
+//! the batched path both call it, so they are byte-identical *by
+//! construction*. Hoisting
+//! itself cannot change bytes: each hoisted value is the same IEEE-754
+//! expression the unhoisted code evaluated, computed once instead of per
+//! sub-step, and every RNG draw goes through the same distribution
+//! helpers in the same order. Per-device heartbeat sinks and the
+//! node-order energy accumulation preserve the classic merge and float
+//! summation orders. Pinned by `tests/kernel_equivalence.rs`,
+//! `tests/fleet_equivalence.rs` and `tests/hetero_equivalence.rs`, plus
+//! the `l3_hotpath` kernel-vs-classic case CI refuses to skip.
+
+use crate::sim::device::{
+    Device, BEAT_JITTER_CV, OU_THETA, STRAGGLER_FACTOR, STRAGGLER_PROB,
+};
+use crate::sim::disturbance::{DistConsts, DisturbanceState, Disturbances};
+use crate::sim::node::{substeps, NodeSim};
+use crate::sim::plant::Plant;
+use crate::sim::rapl::{EnergyCounter, RaplPackage};
+use crate::util::rng::Pcg64;
+
+/// Which simulation stepping path a driver uses.
+///
+/// The batched kernel is the default everywhere; the classic path is kept
+/// as the equivalence oracle and the baseline the `l3_hotpath` bench
+/// measures the kernel against. The two produce byte-identical records —
+/// the choice only moves wall time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimPath {
+    /// Shard-major struct-of-arrays kernel stepping (default).
+    Batched,
+    /// Classic per-node, per-device struct stepping (oracle/bench mode).
+    Classic,
+}
+
+/// Index of one device in a [`ShardKernel`]'s struct-of-arrays state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct DeviceSlot(pub u32);
+
+/// Every per-sub-step invariant of one device for a fixed sub-step length
+/// `h`: the values the classic loop recomputed every sub-step whose inputs
+/// only depend on `(h, spec)`. Built once per `(h, spec)` — see the module
+/// docs for why hoisting preserves bytes.
+#[derive(Debug, Clone, Copy)]
+pub struct SubstepConsts {
+    /// Sub-step length [s].
+    pub(crate) h: f64,
+    /// Disturbance-process invariants (Poisson threshold, thermal σ, …).
+    pub(crate) dist: DistConsts,
+    /// RAPL window-lag smoothing factor `h / (h + window)`.
+    pub(crate) rapl_alpha: f64,
+    /// Plant Eq. (3) smoothing factor `τ / (h + τ)`.
+    pub(crate) plant_a: f64,
+    /// OU decay `e^{-h/θ}`.
+    pub(crate) ou_decay: f64,
+    /// OU innovation σ: `progress_noise · √(1 − decay²)`.
+    pub(crate) ou_sigma: f64,
+    /// Power-sensor noise σ [W].
+    pub(crate) power_noise: f64,
+    /// Package count as f64 (node-energy multiplier).
+    pub(crate) packages: f64,
+}
+
+impl SubstepConsts {
+    /// Hoist `dev`'s sub-step invariants for sub-step length `h`.
+    pub(crate) fn for_device(dev: &Device, h: f64) -> Self {
+        let decay = (-h / OU_THETA).exp();
+        let sigma = dev.spec.progress_noise;
+        SubstepConsts {
+            h,
+            dist: dev.disturbances.consts(h),
+            rapl_alpha: dev.package.alpha(h),
+            plant_a: dev.plant.smoothing(h),
+            ou_decay: decay,
+            ou_sigma: sigma * (1.0 - decay * decay).sqrt(),
+            power_noise: dev.spec.power_noise,
+            packages: dev.spec.packages as f64,
+        }
+    }
+}
+
+/// THE device sub-step: disturbances → RAPL actuator → energy → plant →
+/// OU progress noise → heartbeat emission, ending at node time `now`.
+/// `nominal` is the period-invariant RAPL target `a·cap + b`. Returns the
+/// noisy power reading.
+///
+/// This is the single implementation both stepping paths run (classic via
+/// [`Device::substep`](crate::sim::device::Device), batched via
+/// [`ShardKernel`]); it is the pre-kernel classic sub-step body verbatim,
+/// with the `(h, spec)`-invariant subexpressions replaced by their
+/// precomputed [`SubstepConsts`] values. Any change here changes the
+/// simulation for every path at once — the equivalence suites only pin
+/// the paths against *each other*.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn substep_device(
+    c: &SubstepConsts,
+    nominal: f64,
+    now: f64,
+    rng: &mut Pcg64,
+    disturbances: &mut Disturbances,
+    package: &mut RaplPackage,
+    plant: &mut Plant,
+    ou: &mut f64,
+    backlog: &mut f64,
+    last_beat: &mut f64,
+    beats_emitted: &mut u64,
+    last_power: &mut f64,
+    last_dist: &mut DisturbanceState,
+    sink: &mut Vec<f64>,
+    energy: &mut EnergyCounter,
+) -> f64 {
+    let h = c.h;
+    let dist = disturbances.step_hoisted(h, &c.dist);
+    let power_reading =
+        package.step_hoisted(c.rapl_alpha, nominal, dist.drop_active, rng, c.power_noise);
+    let true_power = package.true_power();
+    energy.accumulate(true_power * c.packages, h);
+    let progress = plant.step_hoisted(c.plant_a, true_power, &dist);
+    *last_dist = dist;
+
+    // OU progress-noise update (exact discretization).
+    *ou = *ou * c.ou_decay + rng.gauss(0.0, c.ou_sigma);
+
+    // Heartbeat emission: rate = max(0, progress + ou).
+    let rate = (progress + *ou).max(0.0);
+    *backlog += rate * h;
+    while *backlog >= 1.0 {
+        *backlog -= 1.0;
+        // Nominal emission time: interpolate within the sub-step.
+        let nominal_t = now - h * (*backlog / (rate * h).max(1e-12)).min(1.0);
+        // Per-beat jitter: mostly small, occasionally a straggler.
+        let jitter = if rng.f64() < STRAGGLER_PROB {
+            STRAGGLER_FACTOR * rng.f64()
+        } else {
+            rng.gauss(0.0, BEAT_JITTER_CV)
+        };
+        let interval = (nominal_t - *last_beat).max(1e-9);
+        let t = (*last_beat + interval * (1.0 + jitter).max(0.05)).min(now);
+        let t = t.max(*last_beat); // keep monotone
+        sink.push(t);
+        *last_beat = t;
+        *beats_emitted += 1;
+    }
+    *last_power = power_reading;
+    power_reading
+}
+
+/// The shard-major struct-of-arrays stepping engine.
+///
+/// Two uses, same arrays:
+///
+/// * every [`NodeSim`] owns one and delegates its `step_into` /
+///   `step_devices_into` to it (the per-node batched path, with the
+///   [`SubstepConsts`] table memoized across periods while `h` holds);
+/// * the sharded fleet executor owns one **per shard** and pre-steps all
+///   devices of all unfinished nodes in the shard through the control
+///   period in a single invocation (`stage_*`), leaving each node a
+///   staged result its engine tick then consumes without re-simulating.
+///
+/// All buffers are persistent: after the first period every gather,
+/// run and scatter operates inside previously-reached capacity — the
+/// steady-state tick path performs no allocation (asserted by the
+/// `l3_hotpath` counting-allocator checks).
+#[derive(Debug, Clone, Default)]
+pub struct ShardKernel {
+    /// Sub-step length and count of the current invocation.
+    h: f64,
+    n_sub: usize,
+    /// Control-period dt of the current staging (staged-consumption key).
+    dt: f64,
+    /// `h` the memoized consts table was built for (NaN: invalid).
+    memo_h: f64,
+    /// Consts-table memoization across `step_node` calls. Only safe when
+    /// the kernel steps the *same* node every call (the memo key is just
+    /// `(h, device count)`), so it is enabled exclusively through the
+    /// crate-private [`ShardKernel::with_memo`] used by `NodeSim`-owned
+    /// kernels; a [`ShardKernel::new`] kernel rebuilds per call.
+    memo_enabled: bool,
+    // ---- per-slot struct-of-arrays state, keyed by DeviceSlot ----
+    consts: Vec<SubstepConsts>,
+    /// Period-invariant RAPL target `a·cap + b` per slot.
+    nominal: Vec<f64>,
+    rngs: Vec<Pcg64>,
+    dists: Vec<Disturbances>,
+    packages: Vec<RaplPackage>,
+    plants: Vec<Plant>,
+    ou: Vec<f64>,
+    backlog: Vec<f64>,
+    last_beat: Vec<f64>,
+    last_power: Vec<f64>,
+    beats_emitted: Vec<u64>,
+    last_dist: Vec<DisturbanceState>,
+    // ---- per-node arrays (gather order) ----
+    node_first: Vec<DeviceSlot>,
+    node_len: Vec<u32>,
+    times: Vec<f64>,
+    energies: Vec<EnergyCounter>,
+    // ---- staging bookkeeping ----
+    /// Per-slot heartbeat sinks (buffers borrowed from the staged nodes).
+    sinks: Vec<Vec<f64>>,
+    /// Cell index of each staged node, load order.
+    loaded: Vec<u32>,
+}
+
+impl ShardKernel {
+    /// Fresh kernel with empty (capacity-free) buffers. Rebuilds the
+    /// consts table on every [`step_node`](Self::step_node) call, so one
+    /// kernel may step different nodes.
+    pub fn new() -> Self {
+        ShardKernel {
+            memo_h: f64::NAN,
+            ..Default::default()
+        }
+    }
+
+    /// Kernel that memoizes the consts table across `step_node` calls
+    /// while `h` holds — only for owners that step the **same** node
+    /// every call (`NodeSim`'s embedded kernel).
+    pub(crate) fn with_memo() -> Self {
+        ShardKernel {
+            memo_enabled: true,
+            ..ShardKernel::new()
+        }
+    }
+
+    /// Number of device slots currently loaded.
+    pub fn slots(&self) -> usize {
+        self.rngs.len()
+    }
+
+    /// Drop the gathered per-slot/per-node state (keeps capacity and the
+    /// memoized consts table).
+    fn clear_state(&mut self) {
+        self.rngs.clear();
+        self.dists.clear();
+        self.packages.clear();
+        self.plants.clear();
+        self.ou.clear();
+        self.backlog.clear();
+        self.last_beat.clear();
+        self.last_power.clear();
+        self.beats_emitted.clear();
+        self.last_dist.clear();
+        self.nominal.clear();
+        self.node_first.clear();
+        self.node_len.clear();
+        self.times.clear();
+        self.energies.clear();
+    }
+
+    /// Gather one node's hot state into the arrays (appends one node and
+    /// `node.devices` slots; consts are handled by the caller).
+    fn gather_state(&mut self, node: &NodeSim) {
+        let first = DeviceSlot(self.rngs.len() as u32);
+        for dev in &node.devices {
+            self.nominal.push(dev.package.target());
+            self.rngs.push(dev.rng.clone());
+            self.dists.push(dev.disturbances.clone());
+            self.packages.push(dev.package.clone());
+            self.plants.push(dev.plant.clone());
+            self.ou.push(dev.ou);
+            self.backlog.push(dev.backlog);
+            self.last_beat.push(dev.last_beat);
+            self.last_power.push(dev.last_power);
+            self.beats_emitted.push(dev.beats);
+            self.last_dist.push(dev.last_dist);
+        }
+        self.node_first.push(first);
+        self.node_len.push(node.devices.len() as u32);
+        self.times.push(node.time);
+        self.energies.push(node.energy.clone());
+    }
+
+    /// Scatter node `j`'s state back from the arrays.
+    fn scatter_state(&mut self, j: usize, node: &mut NodeSim) {
+        let first = self.node_first[j].0 as usize;
+        debug_assert_eq!(self.node_len[j] as usize, node.devices.len());
+        for (i, dev) in node.devices.iter_mut().enumerate() {
+            let s = first + i;
+            dev.rng = self.rngs[s].clone();
+            dev.disturbances = self.dists[s].clone();
+            dev.package = self.packages[s].clone();
+            dev.plant = self.plants[s].clone();
+            dev.ou = self.ou[s];
+            dev.backlog = self.backlog[s];
+            dev.last_beat = self.last_beat[s];
+            dev.last_power = self.last_power[s];
+            dev.beats = self.beats_emitted[s];
+            dev.last_dist = self.last_dist[s];
+        }
+        node.time = self.times[j];
+        node.energy = self.energies[j].clone();
+    }
+
+    /// The shard-major drive: for each sub-step, one pass over every
+    /// loaded slot (node-major slot order), accumulating each node's
+    /// energy in classic device order and appending heartbeats to
+    /// `sinks[slot]`. Nodes are mutually independent, so batching them
+    /// cannot change any node's bytes.
+    fn run(&mut self, sinks: &mut [Vec<f64>]) {
+        debug_assert_eq!(sinks.len(), self.rngs.len());
+        debug_assert_eq!(self.consts.len(), self.rngs.len());
+        for _ in 0..self.n_sub {
+            for j in 0..self.times.len() {
+                self.times[j] += self.h;
+                let now = self.times[j];
+                let first = self.node_first[j].0 as usize;
+                let len = self.node_len[j] as usize;
+                let energy = &mut self.energies[j];
+                for s in first..first + len {
+                    substep_device(
+                        &self.consts[s],
+                        self.nominal[s],
+                        now,
+                        &mut self.rngs[s],
+                        &mut self.dists[s],
+                        &mut self.packages[s],
+                        &mut self.plants[s],
+                        &mut self.ou[s],
+                        &mut self.backlog[s],
+                        &mut self.last_beat[s],
+                        &mut self.beats_emitted[s],
+                        &mut self.last_power[s],
+                        &mut self.last_dist[s],
+                        &mut sinks[s],
+                        energy,
+                    );
+                }
+            }
+        }
+    }
+
+    /// Step one node's devices through a control period of `dt` seconds,
+    /// appending device `i`'s heartbeats to `sinks[i]` (one sink per
+    /// device; panics on a mismatch or `dt ≤ 0`) — the batched engine
+    /// behind `NodeSim::step_into`/`step_devices_into`, usable directly
+    /// by external drivers that batch their own nodes. A
+    /// [`new`](Self::new) kernel rebuilds the hoisted consts each call
+    /// (different nodes may share it); `NodeSim`-owned kernels memoize
+    /// the table across periods through a crate-private constructor.
+    pub fn step_node(&mut self, node: &mut NodeSim, dt: f64, sinks: &mut [Vec<f64>]) {
+        assert!(dt > 0.0, "step must advance time");
+        assert_eq!(sinks.len(), node.devices.len(), "one sink per device");
+        let (n_sub, h) = substeps(dt);
+        self.n_sub = n_sub;
+        self.h = h;
+        if !(self.memo_enabled && self.memo_h == h && self.consts.len() == node.devices.len()) {
+            self.consts.clear();
+            for dev in &node.devices {
+                self.consts.push(SubstepConsts::for_device(dev, h));
+            }
+            self.memo_h = h;
+        }
+        self.clear_state();
+        self.gather_state(node);
+        self.run(sinks);
+        self.scatter_state(0, node);
+    }
+
+    /// Begin a shard staging pass: reset the arrays and the load list.
+    /// The consts table is rebuilt per staging — the set of unfinished
+    /// nodes shrinks over the run, so slots do not map stably.
+    pub(crate) fn stage_begin(&mut self) {
+        self.memo_h = f64::NAN;
+        self.dt = f64::NAN;
+        self.consts.clear();
+        self.clear_state();
+        self.sinks.clear();
+        self.loaded.clear();
+    }
+
+    /// Gather `node` (belonging to executor cell `cell`) into the staging
+    /// pass. The first staged node fixes the period `dt`; a node whose
+    /// `dt` differs bit-for-bit is refused (returns `false`) and will be
+    /// stepped by its own engine tick instead — byte-identical either way.
+    pub(crate) fn stage_node(&mut self, cell: u32, dt: f64, node: &mut NodeSim) -> bool {
+        debug_assert!(
+            node.staged.is_none(),
+            "node staged twice without consuming the first pre-step"
+        );
+        if !dt.is_finite() || dt <= 0.0 {
+            return false;
+        }
+        if self.loaded.is_empty() {
+            let (n_sub, h) = substeps(dt);
+            self.n_sub = n_sub;
+            self.h = h;
+            self.dt = dt;
+        } else if dt != self.dt {
+            return false;
+        }
+        for dev in &node.devices {
+            self.consts.push(SubstepConsts::for_device(dev, self.h));
+        }
+        self.gather_state(node);
+        // Borrow the node's per-device scratch buffers as this staging's
+        // sinks; they return (carrying the beats) at unstage.
+        for sink in &mut node.scratch {
+            let mut b = std::mem::take(sink);
+            b.clear();
+            self.sinks.push(b);
+        }
+        self.loaded.push(cell);
+        true
+    }
+
+    /// Run the staged shard through the control period: the single kernel
+    /// invocation per shard per period.
+    pub(crate) fn stage_run(&mut self) {
+        if self.loaded.is_empty() {
+            return;
+        }
+        let mut sinks = std::mem::take(&mut self.sinks);
+        self.run(&mut sinks);
+        self.sinks = sinks;
+    }
+
+    /// Number of nodes gathered by the current staging pass.
+    pub(crate) fn staged_count(&self) -> usize {
+        self.loaded.len()
+    }
+
+    /// Executor cell index of staged node `i` (load order).
+    pub(crate) fn staged_cell(&self, i: usize) -> u32 {
+        self.loaded[i]
+    }
+
+    /// Scatter staged node `i`'s state and heartbeat sinks back and mark
+    /// it staged-for-`dt`: its next `step_into`/`step_devices_into` call
+    /// consumes the result instead of re-simulating.
+    pub(crate) fn unstage_node(&mut self, i: usize, node: &mut NodeSim) {
+        self.scatter_state(i, node);
+        let first = self.node_first[i].0 as usize;
+        for (d, sink) in node.scratch.iter_mut().enumerate() {
+            *sink = std::mem::take(&mut self.sinks[first + d]);
+        }
+        node.staged = Some(self.dt);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::cluster::{Cluster, ClusterId};
+    use crate::sim::device::DeviceSpec;
+
+    #[test]
+    fn consts_match_unhoisted_expressions() {
+        let cluster = Cluster::get(ClusterId::Yeti);
+        let dev = Device::new(DeviceSpec::cpu(&cluster), 3);
+        let h = 0.05;
+        let c = SubstepConsts::for_device(&dev, h);
+        assert_eq!(c.h, h);
+        let decay = (-h / OU_THETA).exp();
+        assert_eq!(c.ou_decay, decay);
+        assert_eq!(
+            c.ou_sigma,
+            cluster.progress_noise * (1.0 - decay * decay).sqrt()
+        );
+        assert_eq!(c.dist.lambda, cluster.drop_rate * h);
+        assert_eq!(c.dist.knuth_l, (-(cluster.drop_rate * h)).exp());
+        assert_eq!(c.packages, cluster.sockets as f64);
+    }
+
+    #[test]
+    fn step_node_matches_scalar_substeps() {
+        // The kernel path on one node must reproduce the classic loop
+        // bit for bit (same body, SoA layout).
+        let cluster = Cluster::get(ClusterId::Dahu);
+        let specs = [DeviceSpec::cpu(&cluster), DeviceSpec::gpu()];
+        let mut a = NodeSim::hetero(cluster.clone(), &specs, 17);
+        let mut b = NodeSim::hetero(cluster.clone(), &specs, 17);
+        b.set_classic_stepping(true);
+        let mut sa = vec![Vec::new(), Vec::new()];
+        let mut sb = vec![Vec::new(), Vec::new()];
+        for _ in 0..50 {
+            for s in sa.iter_mut().chain(sb.iter_mut()) {
+                s.clear();
+            }
+            let ra = a.step_devices_into(1.0, &mut sa);
+            let rb = b.step_devices_into(1.0, &mut sb);
+            assert_eq!(ra.power, rb.power);
+            assert_eq!(ra.energy, rb.energy);
+            assert_eq!(ra.time, rb.time);
+            assert_eq!(sa, sb);
+        }
+        assert_eq!(a.beats(), b.beats());
+    }
+
+    #[test]
+    fn staging_matches_direct_stepping() {
+        // stage/unstage through a shard kernel + staged consumption must
+        // equal a direct step_into on an identical node.
+        let cluster = Cluster::get(ClusterId::Gros);
+        let mut direct = NodeSim::new(cluster.clone(), 9);
+        let mut staged = NodeSim::new(cluster.clone(), 9);
+        let mut k = ShardKernel::new();
+        let mut ba = Vec::new();
+        let mut bb = Vec::new();
+        for _ in 0..30 {
+            ba.clear();
+            bb.clear();
+            let ra = direct.step_into(1.0, &mut ba);
+            k.stage_begin();
+            assert!(k.stage_node(0, 1.0, &mut staged));
+            k.stage_run();
+            assert_eq!(k.staged_count(), 1);
+            assert_eq!(k.staged_cell(0), 0);
+            k.unstage_node(0, &mut staged);
+            let rb = staged.step_into(1.0, &mut bb);
+            assert_eq!(ra.power, rb.power);
+            assert_eq!(ra.energy, rb.energy);
+            assert_eq!(ba, bb);
+        }
+    }
+
+    #[test]
+    fn fresh_kernel_rebuilds_consts_across_different_nodes() {
+        // A ShardKernel::new() kernel shared by nodes with different
+        // physics must not leak one node's hoisted consts into the other
+        // (only NodeSim-owned kernels memoize, via with_memo()).
+        let mut gros = NodeSim::new(Cluster::get(ClusterId::Gros), 4);
+        let mut yeti = NodeSim::new(Cluster::get(ClusterId::Yeti), 4);
+        let mut ref_gros = NodeSim::new(Cluster::get(ClusterId::Gros), 4);
+        let mut ref_yeti = NodeSim::new(Cluster::get(ClusterId::Yeti), 4);
+        let mut k = ShardKernel::new();
+        let (mut a, mut b, mut c, mut d) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        for _ in 0..20 {
+            a.clear();
+            b.clear();
+            c.clear();
+            d.clear();
+            k.step_node(&mut gros, 1.0, std::slice::from_mut(&mut a));
+            k.step_node(&mut yeti, 1.0, std::slice::from_mut(&mut b));
+            ref_gros.step_into(1.0, &mut c);
+            ref_yeti.step_into(1.0, &mut d);
+            assert_eq!(a, c, "gros beats diverge");
+            assert_eq!(b, d, "yeti beats diverge");
+        }
+        assert_eq!(gros.energy(), ref_gros.energy());
+        assert_eq!(yeti.energy(), ref_yeti.energy());
+    }
+
+    #[test]
+    fn stage_refuses_mismatched_dt_and_nonpositive_dt() {
+        let cluster = Cluster::get(ClusterId::Gros);
+        let mut n1 = NodeSim::new(cluster.clone(), 1);
+        let mut n2 = NodeSim::new(cluster.clone(), 2);
+        let mut k = ShardKernel::new();
+        k.stage_begin();
+        assert!(!k.stage_node(0, 0.0, &mut n1));
+        assert!(k.stage_node(0, 1.0, &mut n1));
+        assert!(!k.stage_node(1, 0.5, &mut n2), "mismatched dt accepted");
+        k.stage_run();
+        assert_eq!(k.staged_count(), 1);
+        k.unstage_node(0, &mut n1);
+        let mut beats = Vec::new();
+        n1.step_into(1.0, &mut beats); // consumes without panicking
+    }
+}

@@ -16,6 +16,9 @@
 //!   per-device physics a heterogeneous node composes,
 //! * [`node`] — the composed simulated node (one or more devices) exposing
 //!   exactly the sensors/actuators the NRM sees on real hardware,
+//! * [`kernel`] — the batched shard-major struct-of-arrays stepping engine
+//!   with hoisted sub-step invariants (the hot path behind `node` and the
+//!   fleet executor; byte-identical to the classic per-device loop),
 //! * [`clock`] — the virtual experiment clock.
 //!
 //! **Honesty rule**: ground-truth parameters never leak outside `sim::`;
@@ -26,6 +29,7 @@ pub mod clock;
 pub mod cluster;
 pub mod device;
 pub mod disturbance;
+pub mod kernel;
 pub mod node;
 pub mod plant;
 pub mod rapl;
@@ -33,4 +37,5 @@ pub mod rapl;
 pub use clock::VirtualClock;
 pub use cluster::{Cluster, ClusterId};
 pub use device::{Device, DeviceKind, DeviceSensors, DeviceSpec};
+pub use kernel::{ShardKernel, SimPath};
 pub use node::{NodeSensors, NodeSim, StepSensors};

@@ -21,6 +21,7 @@
 
 use crate::sim::cluster::Cluster;
 use crate::sim::device::{Device, DeviceSpec};
+use crate::sim::kernel::ShardKernel;
 use crate::sim::rapl::EnergyCounter;
 
 /// Sensor snapshot returned by [`NodeSim::step`].
@@ -70,13 +71,27 @@ pub struct StepSensors {
 #[derive(Debug, Clone)]
 pub struct NodeSim {
     cluster: Cluster,
-    devices: Vec<Device>,
-    energy: EnergyCounter,
-    time: f64,
-    /// Per-device beat scratch for the merged multi-device step path.
-    scratch: Vec<Vec<f64>>,
+    // Crate-visible so the batched kernel (`sim::kernel`) can gather and
+    // scatter the hot state; the public accessors below are the only
+    // surface outside the crate.
+    pub(crate) devices: Vec<Device>,
+    pub(crate) energy: EnergyCounter,
+    pub(crate) time: f64,
+    /// Per-device beat scratch for the merged multi-device step path and
+    /// for shard-staged results awaiting consumption.
+    pub(crate) scratch: Vec<Vec<f64>>,
     /// Merge-cursor scratch (multi-device step path).
     merge_idx: Vec<usize>,
+    /// This node's own batched stepping kernel (non-staged path).
+    kernel: ShardKernel,
+    /// `Some(dt)` when a shard-level kernel pre-stepped this node through
+    /// a `dt`-second period: state is already advanced and the heartbeats
+    /// sit in `scratch`, waiting for the next `step_into`/
+    /// `step_devices_into` call (which must pass the identical `dt`).
+    pub(crate) staged: Option<f64>,
+    /// Classic per-device scalar stepping instead of the batched kernel
+    /// (oracle/bench mode; byte-identical by construction).
+    classic: bool,
 }
 
 impl NodeSim {
@@ -102,7 +117,18 @@ impl NodeSim {
             time: 0.0,
             scratch: vec![Vec::new(); n],
             merge_idx: vec![0; n],
+            kernel: ShardKernel::with_memo(),
+            staged: None,
+            classic: false,
         }
+    }
+
+    /// Switch this node to classic per-device scalar stepping (`true`)
+    /// instead of the default batched kernel. The two paths run the same
+    /// sub-step body and are byte-identical — this knob exists as the
+    /// equivalence oracle and the `l3_hotpath` bench baseline.
+    pub fn set_classic_stepping(&mut self, classic: bool) {
+        self.classic = classic;
     }
 
     /// The hosting cluster (Table 1 metadata; device 0's physics for
@@ -219,19 +245,51 @@ impl NodeSim {
         }
     }
 
+    /// Consume a shard-staged pre-step: verify the caller's `dt` is the
+    /// staged one and clear the marker. The heartbeats are in `scratch`;
+    /// state (time, energy, devices) is already advanced.
+    fn consume_staged(&mut self, dt: f64) {
+        let staged = self.staged.take().expect("no staged step to consume");
+        assert!(
+            staged == dt,
+            "staged dt {staged} != step dt {dt}: executor and backend disagree on the period"
+        );
+    }
+
     /// Advance the node by `dt` seconds, appending the heartbeat timestamps
     /// emitted during the step — all devices merged in time order — to
     /// `beats` (the caller's reusable buffer — this path performs no
     /// allocation once the buffers have reached their high-water capacity).
+    ///
+    /// Runs on the batched kernel (`sim::kernel`) unless
+    /// [`set_classic_stepping`](Self::set_classic_stepping) selected the
+    /// classic scalar loop; consumes a shard-staged pre-step if one is
+    /// pending. All paths are byte-identical.
     pub fn step_into(&mut self, dt: f64, beats: &mut Vec<f64>) -> StepSensors {
+        assert!(dt > 0.0, "step must advance time");
+        if self.staged.is_some() {
+            self.consume_staged(dt);
+            if self.devices.len() == 1 {
+                beats.extend_from_slice(&self.scratch[0]);
+            } else {
+                self.merge_idx.fill(0);
+                merge_sorted(&self.scratch, &mut self.merge_idx, beats);
+            }
+            return self.snapshot();
+        }
         if self.devices.len() == 1 {
             // Single-device fast path: beats land straight in the caller's
             // buffer, exactly like the pre-refactor single-plant node.
-            assert!(dt > 0.0, "step must advance time");
-            let (n_sub, h) = substeps(dt);
-            for _ in 0..n_sub {
-                self.time += h;
-                self.devices[0].substep(h, self.time, beats, &mut self.energy);
+            if self.classic {
+                let (n_sub, h) = substeps(dt);
+                for _ in 0..n_sub {
+                    self.time += h;
+                    self.devices[0].substep(h, self.time, beats, &mut self.energy);
+                }
+            } else {
+                let mut kernel = std::mem::take(&mut self.kernel);
+                kernel.step_node(self, dt, std::slice::from_mut(beats));
+                self.kernel = kernel;
             }
             return self.snapshot();
         }
@@ -250,25 +308,40 @@ impl NodeSim {
     /// timestamps to its own sink (`sinks[i]` for device `i`) — the
     /// hierarchical control path needs per-device attribution to compute
     /// per-device Eq. (1) progress. Allocation-free once sinks reach their
-    /// high-water capacity.
+    /// high-water capacity. Same stepping-path selection as
+    /// [`step_into`](Self::step_into).
     pub fn step_devices_into(&mut self, dt: f64, sinks: &mut [Vec<f64>]) -> StepSensors {
         assert!(dt > 0.0, "step must advance time");
         assert_eq!(sinks.len(), self.devices.len(), "one sink per device");
-        // Sub-step at ≤50 ms so heartbeat timestamps within the step are
-        // accurate and the cap-actuator window lag is resolved.
-        let (n_sub, h) = substeps(dt);
-        for _ in 0..n_sub {
-            self.time += h;
-            for (dev, sink) in self.devices.iter_mut().zip(sinks.iter_mut()) {
-                dev.substep(h, self.time, sink, &mut self.energy);
+        if self.staged.is_some() {
+            self.consume_staged(dt);
+            for (sink, buf) in sinks.iter_mut().zip(&self.scratch) {
+                sink.extend_from_slice(buf);
             }
+            return self.snapshot();
         }
+        if self.classic {
+            // Sub-step at ≤50 ms so heartbeat timestamps within the step
+            // are accurate and the cap-actuator window lag is resolved.
+            let (n_sub, h) = substeps(dt);
+            for _ in 0..n_sub {
+                self.time += h;
+                for (dev, sink) in self.devices.iter_mut().zip(sinks.iter_mut()) {
+                    dev.substep(h, self.time, sink, &mut self.energy);
+                }
+            }
+            return self.snapshot();
+        }
+        let mut kernel = std::mem::take(&mut self.kernel);
+        kernel.step_node(self, dt, sinks);
+        self.kernel = kernel;
         self.snapshot()
     }
 }
 
 /// Sub-step count and length for a node step of `dt` seconds (≤50 ms).
-fn substeps(dt: f64) -> (usize, f64) {
+/// Shared with the batched kernel so both paths sub-step identically.
+pub(crate) fn substeps(dt: f64) -> (usize, f64) {
     let n_sub = (dt / 0.05).ceil().max(1.0) as usize;
     (n_sub, dt / n_sub as f64)
 }

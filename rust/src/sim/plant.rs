@@ -102,12 +102,25 @@ impl Plant {
     /// Advance by `dt` under delivered `power` and disturbance `dist`;
     /// returns the new true progress [Hz].
     pub fn step(&mut self, dt: f64, power: f64, dist: &DisturbanceState) -> f64 {
+        let a = self.smoothing(dt);
+        self.step_hoisted(a, power, dist)
+    }
+
+    /// Exact-discretization smoothing factor `τ / (dt + τ)` of Eq. (3) —
+    /// a sub-step invariant the batched kernel hoists out of the loop.
+    pub(crate) fn smoothing(&self, dt: f64) -> f64 {
+        self.tau / (dt + self.tau)
+    }
+
+    /// [`step`](Self::step) with the smoothing factor precomputed — the
+    /// one body both the classic per-device loop and the batched kernel
+    /// run. `a` must come from [`smoothing`](Self::smoothing).
+    pub(crate) fn step_hoisted(&mut self, a: f64, power: f64, dist: &DisturbanceState) -> f64 {
         let target = self
             .steady_state(power, dist.thermal_factor)
             .min(dist.progress_ceiling);
         // Exact discretization of dx/dt = (target - x)/τ over dt — matches
         // the paper's Eq. (3) ZOH form for constant input.
-        let a = self.tau / (dt + self.tau);
         self.progress = a * self.progress + (1.0 - a) * target;
         self.progress
     }

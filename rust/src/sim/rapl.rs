@@ -62,14 +62,43 @@ impl RaplPackage {
     /// pcap↔power gap during disturbance events (paper §5.2 observes the
     /// yeti drops coincide with a wider gap).
     pub fn step(&mut self, dt: f64, degraded: bool, rng: &mut Pcg64, power_noise: f64) -> f64 {
-        let mut target = self.a * self.cap + self.b;
+        let nominal = self.target();
+        let alpha = self.alpha(dt);
+        self.step_hoisted(alpha, nominal, degraded, rng, power_noise)
+    }
+
+    /// Window-lag smoothing factor `dt / (dt + window)` — a sub-step
+    /// invariant the batched kernel hoists out of the loop.
+    pub(crate) fn alpha(&self, dt: f64) -> f64 {
+        dt / (dt + self.window)
+    }
+
+    /// Nominal delivered-power target `a·cap + b` for the cap currently in
+    /// force — invariant within a control period (the cap only moves
+    /// between periods), so the kernel computes it once per period.
+    pub(crate) fn target(&self) -> f64 {
+        self.a * self.cap + self.b
+    }
+
+    /// [`step`](Self::step) with the smoothing factor and nominal target
+    /// precomputed — the one body both the classic per-device loop and the
+    /// batched kernel run. `alpha`/`nominal` must come from
+    /// [`alpha`](Self::alpha)/[`target`](Self::target).
+    pub(crate) fn step_hoisted(
+        &mut self,
+        alpha: f64,
+        nominal: f64,
+        degraded: bool,
+        rng: &mut Pcg64,
+        power_noise: f64,
+    ) -> f64 {
+        let mut target = nominal;
         if degraded {
             // During a drop event the package draws markedly less than the
             // cap allows (the workload is stalled, §5.2).
             target *= 0.55;
         }
         // First-order approach to the RAPL window average.
-        let alpha = dt / (dt + self.window);
         self.power += alpha * (target - self.power);
         // Measurement noise belongs to the *sensor*; returned here so the
         // node can expose a noisy reading while keeping the true power for

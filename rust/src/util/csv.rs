@@ -10,13 +10,21 @@ use std::fs;
 use std::io;
 use std::path::Path;
 
-/// An in-memory CSV table with a header row.
+/// An in-memory CSV table with a header row. Construct through
+/// [`Table::new`]/[`Table::parse`]/[`Table::load`] — the struct carries a
+/// private formatting scratch, so external literal construction is not
+/// possible.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
     /// Column names.
     pub header: Vec<String>,
     /// Data rows (each the header's arity).
     pub rows: Vec<Vec<String>>,
+    /// Reusable row-formatting buffer: every [`push_f64`](Self::push_f64)
+    /// formats all its cells through this one `String` instead of one
+    /// `format!` allocation per cell (§Perf — campaign writers push
+    /// hundreds of thousands of sample rows).
+    rowbuf: String,
 }
 
 impl Table {
@@ -25,6 +33,7 @@ impl Table {
         Table {
             header: header.into_iter().map(Into::into).collect(),
             rows: Vec::new(),
+            rowbuf: String::new(),
         }
     }
 
@@ -42,9 +51,30 @@ impl Table {
         self.rows.push(row);
     }
 
-    /// Append a row of f64 samples formatted with full round-trip precision.
+    /// Append a row of f64 samples formatted with full round-trip
+    /// precision. Cells are written through the table's single reusable
+    /// row buffer, so the only per-cell allocation is the exact-sized
+    /// stored `String` (no `format!` temporaries). Manual ryu-style f64
+    /// formatting is deliberately deferred until std formatting actually
+    /// shows up in a bench profile (`l3_hotpath` currently doesn't touch
+    /// this path).
     pub fn push_f64(&mut self, row: &[f64]) {
-        self.push(row.iter().map(|x| format!("{x}")).collect::<Vec<_>>());
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "csv row arity {} != header arity {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rowbuf.clear();
+        let mut cells = Vec::with_capacity(row.len());
+        let mut start = 0;
+        for x in row {
+            let _ = write!(self.rowbuf, "{x}");
+            cells.push(String::from(&self.rowbuf[start..]));
+            start = self.rowbuf.len();
+        }
+        self.rows.push(cells);
     }
 
     /// Number of data rows.
@@ -75,7 +105,16 @@ impl Table {
 
     /// Serialize to CSV text.
     pub fn to_csv(&self) -> String {
-        let mut out = String::new();
+        // §Perf: pre-size the output buffer (cells + separators) so large
+        // campaign tables serialize without repeated reallocation.
+        let bytes: usize = self
+            .rows
+            .iter()
+            .flatten()
+            .chain(self.header.iter())
+            .map(|c| c.len() + 1)
+            .sum();
+        let mut out = String::with_capacity(bytes + self.rows.len() + 1);
         write_record(&mut out, &self.header);
         for row in &self.rows {
             write_record(&mut out, row);
@@ -112,6 +151,7 @@ impl Table {
         Ok(Table {
             header,
             rows: records,
+            rowbuf: String::new(),
         })
     }
 

@@ -1,0 +1,180 @@
+//! Kernel-vs-classic equivalence: the batched shard-major SoA stepping
+//! kernel must produce **byte-identical** `RunRecord` JSON to the classic
+//! per-node scalar loops, for every fleet shape we can throw at it.
+//!
+//! Together with `tests/fleet_equivalence.rs` (sharded vs legacy executor)
+//! and `tests/hetero_equivalence.rs` (hierarchy collapse), this pins the
+//! full determinism contract: neither the execution mechanism nor the
+//! stepping layout may change bytes — only wall time.
+
+use powerctl::control::budget::{BudgetPolicy, GreedyRepack, SlackProportional, UniformBudget};
+use powerctl::control::node_budget::DeviceSplitSpec;
+use powerctl::fleet::node::noise_free_model;
+use powerctl::fleet::{
+    run_fleet_with_path, FleetConfig, FleetOutcome, NodeHardware, NodePolicySpec, NodeSpec, SimPath,
+};
+use powerctl::sim::cluster::{Cluster, ClusterId};
+use powerctl::sim::device::DeviceSpec;
+use powerctl::sim::node::NodeSim;
+use powerctl::util::rng::Pcg64;
+
+fn record_bytes(out: &FleetOutcome) -> String {
+    out.records
+        .iter()
+        .map(|r| r.to_json().dump())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+fn strategy(name: &str) -> Box<dyn BudgetPolicy> {
+    match name {
+        "uniform" => Box::new(UniformBudget),
+        "slack-proportional" => Box::new(SlackProportional::default()),
+        "greedy-repack" => Box::new(GreedyRepack::default()),
+        other => panic!("unknown strategy {other}"),
+    }
+}
+
+#[test]
+fn node_kernel_matches_classic_on_every_cluster() {
+    // Sim-layer pin: one node stepped by its own batched kernel emits the
+    // same sensors and heartbeat bytes as classic scalar stepping.
+    for id in [ClusterId::Gros, ClusterId::Dahu, ClusterId::Yeti] {
+        let cluster = Cluster::get(id);
+        let mut kernel = NodeSim::new(cluster.clone(), 5);
+        let mut classic = NodeSim::new(cluster.clone(), 5);
+        classic.set_classic_stepping(true);
+        kernel.set_pcap(90.0);
+        classic.set_pcap(90.0);
+        let mut ba = Vec::new();
+        let mut bb = Vec::new();
+        for i in 0..120 {
+            ba.clear();
+            bb.clear();
+            let sa = kernel.step_into(1.0, &mut ba);
+            let sb = classic.step_into(1.0, &mut bb);
+            assert_eq!(sa.power, sb.power, "{id} step {i}: power");
+            assert_eq!(sa.energy, sb.energy, "{id} step {i}: energy");
+            assert_eq!(sa.time, sb.time, "{id} step {i}: time");
+            assert_eq!(sa.true_progress, sb.true_progress, "{id} step {i}");
+            assert_eq!(ba, bb, "{id} step {i}: heartbeats");
+        }
+        assert_eq!(kernel.beats(), classic.beats(), "{id}: beat totals");
+    }
+}
+
+#[test]
+fn hetero_node_kernel_matches_classic_per_device_sinks() {
+    // Per-device attribution path: kernel vs classic stepping of a
+    // CPU+GPU node through step_devices_into, including odd periods that
+    // exercise the sub-step rounding.
+    let cluster = Cluster::get(ClusterId::Yeti);
+    let specs = [DeviceSpec::cpu(&cluster), DeviceSpec::gpu()];
+    let mut kernel = NodeSim::hetero(cluster.clone(), &specs, 31);
+    let mut classic = NodeSim::hetero(cluster.clone(), &specs, 31);
+    classic.set_classic_stepping(true);
+    let mut sa = vec![Vec::new(), Vec::new()];
+    let mut sb = vec![Vec::new(), Vec::new()];
+    for i in 0..80 {
+        for s in sa.iter_mut().chain(sb.iter_mut()) {
+            s.clear();
+        }
+        let dt = if i % 3 == 0 { 0.73 } else { 1.0 };
+        let ra = kernel.step_devices_into(dt, &mut sa);
+        let rb = classic.step_devices_into(dt, &mut sb);
+        assert_eq!(ra.power, rb.power, "step {i}");
+        assert_eq!(ra.energy, rb.energy, "step {i}");
+        assert_eq!(sa, sb, "step {i}: per-device heartbeats");
+    }
+}
+
+/// Draw a random fleet (mixed single-CPU and CPU+GPU hetero nodes over the
+/// three clusters) plus a config with a tight-ish budget so reallocation
+/// epochs actually move watts.
+fn random_fleet(rng: &mut Pcg64) -> (Vec<NodeSpec>, FleetConfig) {
+    let clusters = [ClusterId::Gros, ClusterId::Dahu, ClusterId::Yeti];
+    let n = 2 + rng.below(6) as usize;
+    let mut budget = 0.0;
+    let specs: Vec<NodeSpec> = (0..n)
+        .map(|_| {
+            let id = *rng.choose(&clusters);
+            let cluster = Cluster::get(id);
+            let hetero = rng.f64() < 0.4;
+            if hetero {
+                budget += 0.7 * (cluster.pcap_max + 400.0);
+                NodeSpec {
+                    cluster: id,
+                    model: noise_free_model(id),
+                    policy: NodePolicySpec::Static,
+                    hardware: NodeHardware::cpu_gpu(
+                        &cluster,
+                        *rng.choose(&[
+                            DeviceSplitSpec::Even,
+                            DeviceSplitSpec::SlackShift,
+                            DeviceSplitSpec::GreedyRepack,
+                        ]),
+                        rng.uniform(0.05, 0.3),
+                    ),
+                }
+            } else {
+                budget += rng.uniform(0.7, 0.95) * cluster.pcap_max;
+                NodeSpec {
+                    cluster: id,
+                    model: noise_free_model(id),
+                    policy: NodePolicySpec::Pi {
+                        epsilon: rng.uniform(0.0, 0.3),
+                    },
+                    hardware: NodeHardware::SingleCpu,
+                }
+            }
+        })
+        .collect();
+    let cfg = FleetConfig {
+        budget,
+        period: 1.0,
+        realloc_every: 1 + rng.below(5),
+        total_beats: 200 + rng.below(300),
+        max_time: 90.0,
+        seed: rng.next_u64(),
+        threads: None,
+    };
+    (specs, cfg)
+}
+
+#[test]
+fn random_fleets_kernel_and_classic_records_byte_identical() {
+    // Property test (satellite): across random fleet configs — mixed
+    // single-device and hetero nodes, all three budget policies — the
+    // kernel path's RunRecord::to_json must equal the classic path's,
+    // byte for byte.
+    let mut rng = Pcg64::seeded(0xC0FFEE);
+    for case in 0..4 {
+        let (specs, cfg) = random_fleet(&mut rng);
+        for name in ["uniform", "slack-proportional", "greedy-repack"] {
+            let batched =
+                run_fleet_with_path(&specs, strategy(name).as_mut(), &cfg, SimPath::Batched);
+            let classic =
+                run_fleet_with_path(&specs, strategy(name).as_mut(), &cfg, SimPath::Classic);
+            assert_eq!(
+                record_bytes(&batched),
+                record_bytes(&classic),
+                "case {case} strategy {name}: kernel != classic ({} nodes, seed {})",
+                specs.len(),
+                cfg.seed
+            );
+            assert_eq!(
+                batched.limits_trace, classic.limits_trace,
+                "case {case} strategy {name}: ceiling traces diverge"
+            );
+        }
+    }
+}
+
+#[test]
+fn kernel_path_is_reproducible_across_invocations() {
+    let mut rng = Pcg64::seeded(77);
+    let (specs, cfg) = random_fleet(&mut rng);
+    let a = run_fleet_with_path(&specs, strategy("uniform").as_mut(), &cfg, SimPath::Batched);
+    let b = run_fleet_with_path(&specs, strategy("uniform").as_mut(), &cfg, SimPath::Batched);
+    assert_eq!(record_bytes(&a), record_bytes(&b));
+}
