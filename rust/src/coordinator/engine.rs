@@ -152,7 +152,7 @@ impl LockstepBackend {
         &mut self.node
     }
 
-    /// Virtual time of the last `advance` — the shard-staging executor
+    /// Virtual time of the last `advance` — the resident-shard executor
     /// reads it to pre-compute the exact `dt` this backend will step.
     pub(crate) fn last_time(&self) -> f64 {
         self.last_time

@@ -12,9 +12,12 @@
 //! Two execution paths drive the same protocol:
 //!
 //! * [`run_fleet`] — the **sharded executor** (default): engines live in
-//!   contiguous shards ticked in place by a persistent worker pool, one
-//!   fork/join per control period ([`ShardedExecutor`]). This is the fast
-//!   path — no per-node threads, no channels, no steady-state allocation.
+//!   cost-weighted shards whose hot simulation state is resident in
+//!   per-shard SoA kernels, ticked in place by a persistent worker pool
+//!   with one fork/join per control period and measured-load rebalancing
+//!   ([`ShardedExecutor`]). This is the fast path — no per-node threads,
+//!   no channels, no locks, no per-period state copies, no steady-state
+//!   allocation.
 //! * [`run_fleet_threaded`] — the legacy one-thread-per-node mpsc
 //!   protocol, kept as a compatibility mode, an oracle for the
 //!   byte-equivalence tests, and the baseline the `l3_hotpath` bench

@@ -1,36 +1,49 @@
 //! The sharded fleet executor: N node control loops ticked in place by a
-//! persistent worker pool — no per-node threads, no channels, no per-tick
-//! sends, no steady-state allocation.
+//! persistent worker pool — no per-node threads, no channels, no locks,
+//! no per-period state copies, no steady-state allocation.
 //!
-//! Layout: node engines live in one contiguous `Vec<NodeCell>`, split into
-//! contiguous shards of `ceil(n / threads)` cells. Each control period is a
-//! **single fork/join**: [`WorkerPool::par_chunks_mut`] hands every worker
-//! disjoint `&mut` shards, the worker first drives **one batched-kernel
-//! invocation** ([`ShardKernel`]) that steps every device of every
-//! unfinished node in its shard through the period (struct-of-arrays,
-//! hoisted sub-step invariants), then ticks each engine in place — the
-//! engines consume the staged physics instead of re-simulating — and
-//! stamps the cell's [`NodeReport`]; after the join the coordinator reads
-//! the contiguous report buffer and (on reallocation epochs) writes new
-//! ceilings back. That is the entire protocol.
+//! Layout: node engines live in [`Shard`]s, each owning a contiguous run
+//! of nodes **and** the resident [`ShardKernel`] that is the authoritative
+//! home of those nodes' hot simulation state (SoA arrays adopted once at
+//! construction — the `Device` structs inside the engines become stale
+//! views rematerialized only on demand). Shards are partitioned
+//! cost-weighted (device counts, GPU devices weighted) so mixed
+//! CPU / CPU+GPU fleets start balanced, and the partition is **rebalanced
+//! from measured per-shard tick times** so they stay balanced as nodes
+//! finish or physics costs drift.
+//!
+//! Each control period is a **single fork/join**:
+//! [`WorkerPool::par_chunks_mut`] hands every worker disjoint `&mut`
+//! shards (no `Mutex` — ownership is structural); the worker runs one
+//! resident-kernel invocation that steps every device of every unfinished
+//! node in the shard through the period, then ticks each engine in place
+//! — the engines consume the staged physics instead of re-simulating —
+//! and writes the shard's [`NodeReport`]s straight into the executor's
+//! contiguous node-order report buffer through its disjoint slice. After
+//! the join the only serial work is the O(#shards) done-reduction and, on
+//! reallocation epochs, the coordinator's budget allocation.
 //!
 //! Determinism argument (why this is byte-identical to the legacy
-//! one-thread-per-node mpsc protocol in `fleet::node`):
+//! one-thread-per-node mpsc protocol in `fleet::node` and to classic
+//! scalar stepping):
 //!
 //! * node physics are independent between budget epochs — engine `i` only
-//!   reads its own RNG stream, plant and policy, so the tick order across
-//!   nodes cannot influence any node's bytes;
-//! * reports are stamped per cell and copied into the report buffer in
-//!   node order, so the budget policy sees the same snapshot in the same
-//!   order as the legacy coordinator assembled from its reply channel;
+//!   reads its own RNG streams, plant and policy, so neither the tick
+//!   order across nodes, the shard partition, nor a rebalancing migration
+//!   can influence any node's bytes (migrations are lossless
+//!   scatter/regather copies);
+//! * reports are written per cell into the node-order buffer, so the
+//!   budget policy sees the same snapshot in the same order as the legacy
+//!   coordinator assembled from its reply channel;
 //! * ceilings are applied through the same `> 1e-9` change guard the
 //!   legacy coordinator used before sending `Cmd::SetLimit`;
 //! * records are finalized by the same `fleet::node::finalize_record`.
 //!
-//! Shard claim order (which worker ticks which shard first) therefore only
-//! moves wall time, never bytes — pinned by `tests/fleet_equivalence.rs`.
+//! Shard claim order and the partition itself therefore only move wall
+//! time, never bytes — pinned by `tests/fleet_equivalence.rs` and
+//! `tests/scheduler_determinism.rs`.
 
-use std::sync::Mutex;
+use std::time::Instant;
 
 use crate::control::budget::NodeReport;
 use crate::coordinator::engine::ControlLoop;
@@ -39,22 +52,45 @@ use crate::fleet::node::{
     build_node, finalize_record, node_report, BudgetedPolicy, FleetBackend, NodeSpec, WorkerConfig,
 };
 use crate::sim::cluster::Cluster;
+use crate::sim::device::DeviceKind;
 use crate::sim::kernel::{ShardKernel, SimPath};
-use crate::util::parallel::WorkerPool;
+use crate::util::parallel::{SendPtr, WorkerPool};
 
 /// Cap on pre-reserved sample rows per node (`max_time / period` can be
 /// huge for open-horizon runs; beyond this the sample log simply grows).
 const MAX_RESERVED_ROWS: usize = 4096;
 
+/// Static cost weight of a CPU device (one unit of sub-step work).
+const CPU_DEVICE_WEIGHT: f64 = 1.0;
+/// Static cost weight of a GPU device. The sub-step body is
+/// kind-independent in this simulator (a GPU skips the Poisson branch but
+/// pays the same plant/OU/beat arithmetic), so the prior is 1.0; the knob
+/// exists because measured rebalancing refines whatever prior is wrong.
+const GPU_DEVICE_WEIGHT: f64 = 1.0;
+/// Extra weight of a multi-device node: the hierarchical backend's inner
+/// split loop (per-device Eq. 1 + device PIs) runs on top of the physics.
+const HETERO_NODE_OVERHEAD: f64 = 0.5;
+
+/// Default rebalance cadence [periods] (0 disables).
+const DEFAULT_REBALANCE_EVERY: u64 = 32;
+/// Apply a new partition only when the measured max/mean shard cost
+/// imbalance exceeds this factor — migrations regather state and briefly
+/// allocate, so near-balanced fleets must not churn.
+const REBALANCE_THRESHOLD: f64 = 1.25;
+/// EWMA factor for per-shard measured tick times.
+const COST_EWMA_ALPHA: f64 = 0.2;
+
 /// One node's in-place state: engine + budgeted policy + metadata. The
-/// report is stamped here by the owning worker each tick and mirrored into
-/// the executor's contiguous buffer after the join.
+/// report is stamped here by the owning worker each tick and written into
+/// the executor's contiguous buffer before the join.
 struct NodeCell {
     engine: ControlLoop<FleetBackend>,
     policy: BudgetedPolicy,
     cluster: Cluster,
     seed: u64,
     report: NodeReport,
+    /// Static cost prior for the weighted partition (device counts).
+    weight: f64,
 }
 
 impl NodeCell {
@@ -67,30 +103,174 @@ impl NodeCell {
     }
 }
 
+/// A contiguous run of nodes owned by one worker per fork/join, together
+/// with the resident kernel holding their hot simulation state.
+struct Shard {
+    cells: Vec<NodeCell>,
+    kernel: ShardKernel,
+    /// Global node index of `cells[0]` (report-buffer offset).
+    first: usize,
+    /// The kernel is the resident home of the cells' node state
+    /// (batched path; classic-oracle shards keep state in the structs).
+    resident: bool,
+    /// EWMA of measured tick wall time [s] — the rebalancing signal.
+    cost: f64,
+    /// Every cell reported done on the last tick.
+    all_done: bool,
+}
+
+impl Shard {
+    /// One control period for every node of this shard: one resident
+    /// kernel invocation over all unfinished nodes, then the engine ticks
+    /// consuming the staged physics. Runs entirely inside the owning
+    /// worker; the only cross-shard data is the report buffer slice.
+    fn tick(&mut self, now: f64) {
+        let t0 = Instant::now();
+        if self.resident {
+            let mut begun = false;
+            for (j, cell) in self.cells.iter_mut().enumerate() {
+                if cell.engine.finished() {
+                    continue;
+                }
+                let (node, last_time) = cell.engine.backend_mut().sim_node();
+                // The exact dt the backend's `advance(now, ..)` computes.
+                let dt = now - last_time;
+                if !dt.is_finite() || dt <= 0.0 {
+                    // Non-monotonic executor tick: the backends treat it
+                    // as a side-effect-free sensor read; nothing to step.
+                    continue;
+                }
+                if !begun {
+                    self.kernel.period_begin(dt);
+                    begun = true;
+                }
+                self.kernel.period_add(j, node, dt);
+            }
+            if begun {
+                self.kernel.period_run();
+                for (j, cell) in self.cells.iter_mut().enumerate() {
+                    if self.kernel.is_active(j) {
+                        let (node, _) = cell.engine.backend_mut().sim_node();
+                        self.kernel.period_finish(j, node);
+                    }
+                }
+            }
+        }
+        let mut all_done = true;
+        for cell in &mut self.cells {
+            cell.tick(now);
+            all_done &= cell.report.done;
+        }
+        self.all_done = all_done;
+        let elapsed = t0.elapsed().as_secs_f64();
+        self.cost = if self.cost == 0.0 {
+            elapsed
+        } else {
+            (1.0 - COST_EWMA_ALPHA) * self.cost + COST_EWMA_ALPHA * elapsed
+        };
+    }
+
+    /// Adopt every cell's node into the shard kernel (state becomes
+    /// resident; the engine-held structs become views).
+    fn make_resident(&mut self) {
+        for cell in &mut self.cells {
+            let (node, _) = cell.engine.backend_mut().sim_node();
+            self.kernel.adopt(node);
+        }
+        self.resident = true;
+    }
+
+    /// Rematerialize every cell's node (scatter the resident state back
+    /// into the structs) ahead of a migration or finalization.
+    fn release_all(&mut self) {
+        if !self.resident {
+            return;
+        }
+        for (j, cell) in self.cells.iter_mut().enumerate() {
+            let (node, _) = cell.engine.backend_mut().sim_node();
+            self.kernel.release(j, node);
+        }
+        self.resident = false;
+    }
+
+    /// Sum of the cells' static weights, counting finished nodes as free.
+    fn live_weight(&self) -> f64 {
+        self.cells
+            .iter()
+            .map(|c| if c.report.done { 0.0 } else { c.weight })
+            .sum()
+    }
+}
+
+/// Static cost prior of one node: its device weights plus the
+/// hierarchical-backend overhead for multi-device nodes.
+fn node_weight(cell_cluster_devices: &[DeviceKind]) -> f64 {
+    let devices: f64 = cell_cluster_devices
+        .iter()
+        .map(|k| match k {
+            DeviceKind::Gpu => GPU_DEVICE_WEIGHT,
+            _ => CPU_DEVICE_WEIGHT,
+        })
+        .sum();
+    if cell_cluster_devices.len() > 1 {
+        devices + HETERO_NODE_OVERHEAD
+    } else {
+        devices
+    }
+}
+
+/// Contiguous cost-weighted partition: boundary `k` sits at the smallest
+/// prefix whose cost reaches `k/n_shards` of the total, with every shard
+/// guaranteed at least one node. Returns `n_shards + 1` boundaries
+/// (`b[0] = 0`, `b[n_shards] = costs.len()`), written into `out`.
+fn partition_boundaries(costs: &[f64], n_shards: usize, out: &mut Vec<usize>) {
+    let n = costs.len();
+    debug_assert!(n_shards >= 1 && n_shards <= n);
+    let total: f64 = costs.iter().sum();
+    out.clear();
+    out.push(0);
+    let mut prefix = 0.0;
+    let mut i = 0;
+    for k in 1..n_shards {
+        let target = total * k as f64 / n_shards as f64;
+        // Leave enough nodes for the remaining shards to be non-empty.
+        let max_i = n - (n_shards - k);
+        while i < max_i && (prefix < target || i < *out.last().unwrap() + 1) {
+            prefix += costs[i];
+            i += 1;
+        }
+        out.push(i);
+    }
+    out.push(n);
+}
+
 /// The sharded executor. Owns every node engine plus the worker pool that
 /// ticks them; the fleet coordinator drives it one period at a time.
 pub struct ShardedExecutor {
     pool: WorkerPool,
-    cells: Vec<NodeCell>,
+    shards: Vec<Shard>,
     /// Contiguous per-node reports, node order — handed to the budget
-    /// layer as `&[NodeReport]` without any per-epoch allocation.
+    /// layer as `&[NodeReport]` without any per-epoch allocation. Workers
+    /// fill it through disjoint per-shard slices during the fork/join.
     reports: Vec<NodeReport>,
-    /// Shard size: contiguous cells ticked by one worker per fork/join.
-    shard: usize,
     cfg: WorkerConfig,
-    /// One batched stepping kernel per shard: the owning worker pre-steps
-    /// all devices of its shard through the control period in a single
-    /// kernel invocation before ticking the engines. Mutex-wrapped so the
-    /// pool closure stays `Sync`; each shard index is claimed by exactly
-    /// one worker per fork/join, so the locks are never contended.
-    kernels: Vec<Mutex<ShardKernel>>,
     path: SimPath,
+    /// Periods driven so far (rebalance cadence counter).
+    periods: u64,
+    /// Rebalance cadence [periods]; 0 disables measured rebalancing.
+    rebalance_every: u64,
+    /// Pre-allocated per-node cost scratch (rebalance decisions must not
+    /// allocate; only an applied migration may).
+    cost_scratch: Vec<f64>,
+    /// Pre-allocated boundary scratch for the same reason.
+    boundary_scratch: Vec<usize>,
 }
 
 impl ShardedExecutor {
     /// Build `specs.len()` node engines (node `i` seeded with `seeds[i]`
-    /// and capped at `initial_limit`) sharded over `threads` pool workers,
-    /// stepping node physics on the batched shard kernel.
+    /// and capped at `initial_limit`) in cost-weighted shards over
+    /// `threads` pool workers, with the batched resident-kernel stepping
+    /// path.
     pub fn new(
         specs: &[NodeSpec],
         initial_limit: f64,
@@ -103,7 +283,7 @@ impl ShardedExecutor {
 
     /// [`new`](Self::new) with an explicit stepping path —
     /// [`SimPath::Classic`] keeps the per-node scalar loops (byte-identical
-    /// oracle / bench baseline).
+    /// oracle / bench baseline; state stays in the node structs).
     pub fn with_path(
         specs: &[NodeSpec],
         initial_limit: f64,
@@ -129,42 +309,57 @@ impl ShardedExecutor {
             .enumerate()
             .map(|(i, (spec, &seed))| {
                 let cluster = Cluster::get(spec.cluster);
-                let (engine, policy) = build_node(i as u32, spec, &cluster, initial_limit, cfg, seed, rows);
+                let (engine, policy) =
+                    build_node(i as u32, spec, &cluster, initial_limit, cfg, seed, rows);
                 let report = node_report(i as u32, &engine, &policy);
+                let kinds: Vec<DeviceKind> = match &spec.hardware {
+                    crate::fleet::node::NodeHardware::SingleCpu => vec![DeviceKind::Cpu],
+                    crate::fleet::node::NodeHardware::Hetero { devices, .. } => {
+                        devices.iter().map(|d| d.kind).collect()
+                    }
+                };
                 NodeCell {
                     engine,
                     policy,
                     cluster,
                     seed,
                     report,
+                    weight: node_weight(&kinds),
                 }
             })
             .collect();
         if path == SimPath::Classic {
             for cell in &mut cells {
-                cell.engine.backend_mut().sim_node().0.set_classic_stepping(true);
+                cell.engine
+                    .backend_mut()
+                    .sim_node()
+                    .0
+                    .set_classic_stepping(true);
             }
         }
         let reports = cells.iter().map(|c| c.report).collect();
         let threads = threads.clamp(1, n);
-        let shard = n.div_ceil(threads);
-        let kernels = (0..n.div_ceil(shard))
-            .map(|_| Mutex::new(ShardKernel::new()))
-            .collect();
+        let n_shards = threads;
+        let costs: Vec<f64> = cells.iter().map(|c| c.weight).collect();
+        let mut boundaries = Vec::with_capacity(n_shards + 1);
+        partition_boundaries(&costs, n_shards, &mut boundaries);
+        let shards = build_shards(cells, &boundaries, path == SimPath::Batched);
         ShardedExecutor {
             pool: WorkerPool::new(threads),
-            cells,
+            shards,
             reports,
-            shard,
             cfg,
-            kernels,
             path,
+            periods: 0,
+            rebalance_every: DEFAULT_REBALANCE_EVERY,
+            cost_scratch: vec![0.0; n],
+            boundary_scratch: boundaries,
         }
     }
 
     /// Number of node engines owned by the executor.
     pub fn num_nodes(&self) -> usize {
-        self.cells.len()
+        self.reports.len()
     }
 
     /// Worker threads in the persistent pool.
@@ -172,33 +367,46 @@ impl ShardedExecutor {
         self.pool.threads()
     }
 
+    /// Set the measured-rebalance cadence in periods (`0` disables).
+    /// Rebalancing only moves nodes between shards — it is lossless and
+    /// cannot change bytes (`tests/scheduler_determinism.rs`), but an
+    /// applied migration regathers state and allocates, so
+    /// allocation-bracketing benches pin this to `0` for their counted
+    /// window.
+    pub fn set_rebalance_every(&mut self, every: u64) {
+        self.rebalance_every = every;
+    }
+
     /// One lockstep control period for every node — a single fork/join
-    /// over the shards, each worker running **one batched-kernel
-    /// invocation** that steps every device of its shard through the
-    /// period before the engine ticks consume the staged results. Returns
-    /// `true` once every node has finished (quota or timeout).
+    /// over the shards. Each worker runs one resident-kernel invocation
+    /// stepping every device of its shard through the period, ticks the
+    /// engines in place (they consume the staged physics), and writes the
+    /// shard's reports into the node-order buffer. Returns `true` once
+    /// every node has finished (quota or timeout).
     pub fn tick(&mut self, now: f64) -> bool {
-        let shard = self.shard;
-        let kernels = &self.kernels;
-        let batched = self.path == SimPath::Batched;
-        self.pool
-            .par_chunks_mut(&mut self.cells, shard, |start, cells| {
-                if batched {
-                    let mut kernel = kernels[start / shard]
-                        .lock()
-                        .expect("shard kernel poisoned");
-                    stage_shard(&mut kernel, cells, now);
+        let reports = SendPtr::new(self.reports.as_mut_ptr());
+        self.pool.par_chunks_mut(&mut self.shards, 1, |_, shards| {
+            for shard in shards {
+                shard.tick(now);
+                // SAFETY: shards own disjoint, contiguous [first,
+                // first+len) ranges that exactly tile the report buffer,
+                // and `par_chunks_mut` joins every worker before the
+                // buffer is read again.
+                let base = unsafe { reports.get().add(shard.first) };
+                for (i, cell) in shard.cells.iter().enumerate() {
+                    unsafe {
+                        *base.add(i) = cell.report;
+                    }
                 }
-                for cell in cells {
-                    cell.tick(now);
-                }
-            });
-        // Mirror into the contiguous buffer the budget layer reads (node
-        // order, same bytes the legacy reply loop assembled).
-        let mut all_done = true;
-        for (slot, cell) in self.reports.iter_mut().zip(&self.cells) {
-            *slot = cell.report;
-            all_done &= cell.report.done;
+            }
+        });
+        self.periods += 1;
+        // Reduce the done flags BEFORE any rebalance: a migration rebuilds
+        // shards with a cleared flag, and the coordinator must see the
+        // completion of the period that produced it.
+        let all_done = self.shards.iter().all(|s| s.all_done);
+        if !all_done && self.rebalance_every > 0 && self.periods % self.rebalance_every == 0 {
+            self.maybe_rebalance();
         }
         all_done
     }
@@ -212,49 +420,123 @@ impl ShardedExecutor {
     /// the legacy protocol's "only apply changed limits" guard so records
     /// stay byte-identical with the per-node-thread path.
     pub fn set_limits(&mut self, limits: &[f64]) {
-        debug_assert_eq!(limits.len(), self.cells.len());
-        for (cell, &limit) in self.cells.iter_mut().zip(limits) {
-            if (limit - cell.report.limit).abs() > 1e-9 {
-                cell.policy.set_limit(limit);
+        debug_assert_eq!(limits.len(), self.reports.len());
+        for shard in &mut self.shards {
+            for (i, cell) in shard.cells.iter_mut().enumerate() {
+                let limit = limits[shard.first + i];
+                if (limit - cell.report.limit).abs() > 1e-9 {
+                    cell.policy.set_limit(limit);
+                }
             }
         }
     }
 
+    /// Rebalance decision: refine the static weights with the measured
+    /// per-shard tick-time EWMAs (finished nodes count as free), and apply
+    /// a new contiguous partition when the measured imbalance warrants the
+    /// migration. The decision itself is allocation-free (pre-allocated
+    /// scratch); only an applied migration allocates.
+    fn maybe_rebalance(&mut self) {
+        let n_shards = self.shards.len();
+        if n_shards < 2 {
+            return;
+        }
+        let total_cost: f64 = self.shards.iter().map(|s| s.cost).sum();
+        if total_cost <= 0.0 {
+            return;
+        }
+        let max_cost = self.shards.iter().fold(0.0f64, |m, s| m.max(s.cost));
+        let mean_cost = total_cost / n_shards as f64;
+        if max_cost / mean_cost <= REBALANCE_THRESHOLD {
+            return;
+        }
+        // Per-node measured cost: the shard's measured seconds spread over
+        // its live weight (a shard of only finished nodes contributes a
+        // small floor so its nodes remain movable).
+        self.cost_scratch.clear();
+        for shard in &self.shards {
+            let live = shard.live_weight();
+            let scale = if live > 0.0 { shard.cost / live } else { 0.0 };
+            for cell in &shard.cells {
+                let w = if cell.report.done { 0.0 } else { cell.weight };
+                // A tiny floor keeps the partition well-defined when many
+                // nodes have finished (all-zero costs split arbitrarily).
+                self.cost_scratch.push((w * scale).max(1e-12));
+            }
+        }
+        let costs = std::mem::take(&mut self.cost_scratch);
+        let mut boundaries = std::mem::take(&mut self.boundary_scratch);
+        partition_boundaries(&costs, n_shards, &mut boundaries);
+        let changed = self
+            .shards
+            .iter()
+            .enumerate()
+            .any(|(k, s)| boundaries[k] != s.first);
+        if changed {
+            self.apply_partition(&boundaries);
+        }
+        self.cost_scratch = costs;
+        self.boundary_scratch = boundaries;
+    }
+
+    /// Migrate to a new contiguous partition: rematerialize every resident
+    /// node (lossless scatter), move the cells, regather into fresh
+    /// resident kernels. Allocates — called only from rebalance decisions
+    /// that cleared the imbalance threshold, or from tests.
+    fn apply_partition(&mut self, boundaries: &[usize]) {
+        let resident = self.path == SimPath::Batched;
+        for shard in &mut self.shards {
+            shard.release_all();
+        }
+        let mut cells: Vec<NodeCell> = Vec::with_capacity(self.reports.len());
+        for shard in self.shards.drain(..) {
+            cells.extend(shard.cells);
+        }
+        self.shards = build_shards(cells, boundaries, resident);
+    }
+
     /// Tear down the pool and finalize one [`RunRecord`] per node (node
-    /// order), exactly as the legacy worker join path does.
+    /// order), rematerializing the resident simulation state first —
+    /// exactly as the legacy worker join path does.
     pub fn into_records(self) -> Vec<RunRecord> {
-        let ShardedExecutor { cells, cfg, .. } = self;
-        cells
-            .into_iter()
-            .map(|c| finalize_record(&c.engine, &c.policy, &c.cluster, c.seed, cfg))
-            .collect()
+        let ShardedExecutor {
+            mut shards, cfg, ..
+        } = self;
+        let mut records = Vec::with_capacity(shards.iter().map(|s| s.cells.len()).sum());
+        for shard in &mut shards {
+            shard.release_all();
+        }
+        for shard in shards {
+            for c in shard.cells {
+                records.push(finalize_record(&c.engine, &c.policy, &c.cluster, c.seed, cfg));
+            }
+        }
+        records
     }
 }
 
-/// Pre-step every unfinished node of `cells` through the control period
-/// ending at `now` with one batched-kernel invocation. Each staged node's
-/// engine tick then consumes the staged sensors/beats instead of
-/// re-simulating. Selection is deterministic: exactly the nodes whose
-/// engine is unfinished (the same predicate `NodeCell::tick` uses) and
-/// whose `dt` matches the shard's — anything refused simply steps through
-/// its own node kernel inside the engine tick, byte-identically.
-fn stage_shard(kernel: &mut ShardKernel, cells: &mut [NodeCell], now: f64) {
-    kernel.stage_begin();
-    for (i, cell) in cells.iter_mut().enumerate() {
-        if cell.engine.finished() {
-            continue;
+/// Assemble shards from `cells` along contiguous `boundaries`, adopting
+/// the nodes into resident kernels when `resident` (the batched path).
+fn build_shards(cells: Vec<NodeCell>, boundaries: &[usize], resident: bool) -> Vec<Shard> {
+    let mut shards: Vec<Shard> = Vec::with_capacity(boundaries.len().saturating_sub(1));
+    let mut iter = cells.into_iter();
+    for w in boundaries.windows(2) {
+        let (first, end) = (w[0], w[1]);
+        let mut shard = Shard {
+            cells: (&mut iter).take(end - first).collect(),
+            kernel: ShardKernel::new(),
+            first,
+            resident: false,
+            cost: 0.0,
+            all_done: false,
+        };
+        if resident {
+            shard.make_resident();
         }
-        let (node, last_time) = cell.engine.backend_mut().sim_node();
-        // The exact dt the backend's `advance(now, ..)` will compute.
-        let dt = now - last_time;
-        kernel.stage_node(i as u32, dt, node);
+        shards.push(shard);
     }
-    kernel.stage_run();
-    for i in 0..kernel.staged_count() {
-        let ci = kernel.staged_cell(i) as usize;
-        let (node, _) = cells[ci].engine.backend_mut().sim_node();
-        kernel.unstage_node(i, node);
-    }
+    debug_assert!(iter.next().is_none(), "boundaries did not tile the cells");
+    shards
 }
 
 #[cfg(test)]
@@ -403,5 +685,104 @@ mod tests {
         exec.set_limits(&[before - 20.0]);
         exec.tick(3.0);
         assert!((exec.reports()[0].limit - (before - 20.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partition_boundaries_balance_weighted_costs() {
+        let mut out = Vec::new();
+        // Uniform costs split evenly.
+        partition_boundaries(&[1.0; 8], 4, &mut out);
+        assert_eq!(out, vec![0, 2, 4, 6, 8]);
+        // A heavy prefix gets its own shard.
+        partition_boundaries(&[10.0, 1.0, 1.0, 1.0], 2, &mut out);
+        assert_eq!(out, vec![0, 1, 4]);
+        // Hetero-weighted: 2.5-weight nodes up front shift the boundary.
+        partition_boundaries(&[2.5, 2.5, 1.0, 1.0, 1.0], 2, &mut out);
+        assert_eq!(out, vec![0, 2, 5]);
+        // Every shard keeps at least one node even with zero-ish tails.
+        partition_boundaries(&[5.0, 1e-12, 1e-12], 3, &mut out);
+        assert_eq!(out, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn forced_migration_never_changes_bytes() {
+        // Moving nodes between shards mid-run (the rebalancing migration:
+        // release → repartition → re-adopt) must be invisible in the
+        // records. Drive two identical fleets; force a skewed partition on
+        // one of them halfway through.
+        let n = 6;
+        let seeds: Vec<u64> = (0..n as u64).map(|i| 50 + i).collect();
+        let run = |migrate: bool| {
+            let mut exec = ShardedExecutor::new(&specs(n), 90.0, cfg(), &seeds, 3);
+            let mut now = 0.0;
+            for p in 0..60 {
+                now += 1.0;
+                if migrate && p == 20 {
+                    exec.apply_partition(&[0, 1, 2, 6]);
+                }
+                if migrate && p == 35 {
+                    exec.apply_partition(&[0, 2, 4, 6]);
+                }
+                if exec.tick(now) {
+                    break;
+                }
+            }
+            exec.into_records()
+        };
+        let a = run(false);
+        let b = run(true);
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.to_json().dump(), rb.to_json().dump());
+        }
+    }
+
+    #[test]
+    fn measured_rebalance_runs_and_preserves_bytes() {
+        // With an aggressive cadence the decision path runs every period;
+        // whether or not migrations trigger, bytes must match a
+        // rebalance-disabled run.
+        let n = 5;
+        let seeds: Vec<u64> = (0..n as u64).map(|i| 90 + i).collect();
+        let run = |every: u64| {
+            let mut exec = ShardedExecutor::new(&specs(n), 90.0, cfg(), &seeds, 2);
+            exec.set_rebalance_every(every);
+            let mut now = 0.0;
+            for _ in 0..60 {
+                now += 1.0;
+                if exec.tick(now) {
+                    break;
+                }
+            }
+            exec.into_records()
+        };
+        let a = run(0);
+        let b = run(1);
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.to_json().dump(), rb.to_json().dump());
+        }
+    }
+
+    #[test]
+    fn weighted_initial_partition_balances_mixed_fleet() {
+        // 2 hetero (weight 2.5) + 4 single-CPU (weight 1) over 2 shards:
+        // the weighted partition puts the two hetero nodes alone in shard
+        // 0 (cost 5.0) and the four CPU nodes in shard 1 (cost 4.0) —
+        // instead of the naive 3/3 split (6.5 vs 3.0).
+        let cluster = Cluster::get(ClusterId::Gros);
+        let mut specs: Vec<NodeSpec> = (0..2)
+            .map(|_| NodeSpec {
+                cluster: ClusterId::Gros,
+                model: fitted(ClusterId::Gros),
+                policy: NodePolicySpec::Static,
+                hardware: NodeHardware::cpu_gpu(&cluster, DeviceSplitSpec::SlackShift, 0.15),
+            })
+            .collect();
+        specs.extend(self::specs(4));
+        let seeds: Vec<u64> = (0..6).collect();
+        let exec = ShardedExecutor::new(&specs, 300.0, cfg(), &seeds, 2);
+        let firsts: Vec<usize> = exec.shards.iter().map(|s| s.first).collect();
+        assert_eq!(firsts, vec![0, 2], "weighted partition boundary");
+        assert_eq!(exec.shards[0].cells.len(), 2);
+        assert_eq!(exec.shards[1].cells.len(), 4);
     }
 }

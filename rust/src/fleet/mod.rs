@@ -9,7 +9,8 @@
 //!   below a movable ceiling), the shared report/record finalization, and
 //!   the legacy one-thread-per-node worker protocol;
 //! * [`executor`] — the sharded fleet executor: engines owned in
-//!   contiguous shards, ticked in place by a persistent
+//!   cost-weighted, rebalance-aware shards whose hot simulation state is
+//!   *resident* in per-shard SoA kernels, ticked in place by a persistent
 //!   [`WorkerPool`](crate::util::parallel::WorkerPool) with one fork/join
 //!   per control period (the default, allocation-free fast path);
 //! * [`coordinator`] — the lockstep fleet drivers ([`run_fleet`] on the

@@ -131,9 +131,9 @@ impl FleetBackend {
     }
 
     /// The simulated node behind this backend plus the virtual time of its
-    /// last `advance` — the shard-staging executor uses the pair to
-    /// pre-step the node through exactly the `dt` the backend will
-    /// compute, and to flip classic-stepping mode on.
+    /// last `advance` — the resident-shard executor uses the pair to adopt
+    /// the node's hot state, step it through exactly the `dt` the backend
+    /// will compute, and to flip classic-stepping mode on.
     pub(crate) fn sim_node(&mut self) -> (&mut NodeSim, f64) {
         match self {
             FleetBackend::Classic(b) => {

@@ -1,5 +1,6 @@
 //! The batched simulation kernel: shard-major, struct-of-arrays device
-//! stepping with hoisted sub-step invariants.
+//! stepping with hoisted sub-step invariants — and, for the fleet
+//! executor, the **resident home** of hot device state across periods.
 //!
 //! The fleet hot path simulates `nodes × devices × sub-steps` device
 //! updates per control period. The classic layout walks one node at a
@@ -19,6 +20,18 @@
 //!   index, and steps **all devices of a shard** through a control period
 //!   in one call: one pass over the arrays per sub-step instead of one
 //!   pass over sub-steps per node.
+//! * **Resident ownership** (`adopt`/`period_*`/`release`) — the fleet
+//!   executor adopts every node of a shard into the arrays **once**; from
+//!   then on the arrays are the authoritative home of the hot state and
+//!   each control period touches only them. The per-period work shrinks
+//!   to: refresh each device's period-invariant RAPL target from its cap
+//!   (caps are control-plane state that stays in the [`Device`] structs),
+//!   run the sub-steps, and hand each node a staged
+//!   [`StepSensors`](crate::sim::node::StepSensors) + its heartbeat
+//!   buffers. No RNG/plant/disturbance state is copied per period; the
+//!   `Device` structs become stale *views* that are rematerialized
+//!   (scattered) only on demand — classic-oracle mode, shard rebalancing
+//!   migrations, record finalization.
 //!
 //! **Equivalence argument.** There is exactly one sub-step body,
 //! `substep_device`; the classic per-struct path (`Device::substep`) and
@@ -29,15 +42,20 @@
 //! sub-step, and every RNG draw goes through the same distribution
 //! helpers in the same order. Per-device heartbeat sinks and the
 //! node-order energy accumulation preserve the classic merge and float
-//! summation orders. Pinned by `tests/kernel_equivalence.rs`,
-//! `tests/fleet_equivalence.rs` and `tests/hetero_equivalence.rs`, plus
-//! the `l3_hotpath` kernel-vs-classic case CI refuses to skip.
+//! summation orders; the staged sensors replicate
+//! `NodeSim`'s snapshot arithmetic (same single-device special cases,
+//! same left-to-right float sums). Residency adds nothing stochastic:
+//! adopt/release are lossless struct copies, and the resident period
+//! loop is the same sub-step walk over the same arrays. Pinned by
+//! `tests/kernel_equivalence.rs`, `tests/fleet_equivalence.rs`,
+//! `tests/scheduler_determinism.rs` and `tests/hetero_equivalence.rs`,
+//! plus the `l3_hotpath` kernel-vs-classic case CI refuses to skip.
 
 use crate::sim::device::{
     Device, BEAT_JITTER_CV, OU_THETA, STRAGGLER_FACTOR, STRAGGLER_PROB,
 };
 use crate::sim::disturbance::{DistConsts, DisturbanceState, Disturbances};
-use crate::sim::node::{substeps, NodeSim};
+use crate::sim::node::{substeps, NodeSim, StagedStep, StepSensors};
 use crate::sim::plant::Plant;
 use crate::sim::rapl::{EnergyCounter, RaplPackage};
 use crate::util::rng::Pcg64;
@@ -174,22 +192,27 @@ pub(crate) fn substep_device(
 ///
 /// * every [`NodeSim`] owns one and delegates its `step_into` /
 ///   `step_devices_into` to it (the per-node batched path, with the
-///   [`SubstepConsts`] table memoized across periods while `h` holds);
-/// * the sharded fleet executor owns one **per shard** and pre-steps all
-///   devices of all unfinished nodes in the shard through the control
-///   period in a single invocation (`stage_*`), leaving each node a
-///   staged result its engine tick then consumes without re-simulating.
+///   [`SubstepConsts`] table memoized across periods while `h` holds) —
+///   state is gathered and scattered around each call;
+/// * the sharded fleet executor owns one **per shard** and adopts the
+///   shard's nodes into the arrays **once** ([`adopt`](Self::adopt));
+///   from then on the arrays are the *resident* home of the hot state and
+///   each control period (`period_begin`/`period_add`/`period_run`/
+///   `period_finish`) steps every enrolled node in place, leaving each a
+///   staged sensor snapshot + heartbeat buffers its engine tick consumes
+///   without re-simulating. [`release`](Self::release) rematerializes the
+///   `Device` structs on demand.
 ///
-/// All buffers are persistent: after the first period every gather,
-/// run and scatter operates inside previously-reached capacity — the
-/// steady-state tick path performs no allocation (asserted by the
-/// `l3_hotpath` counting-allocator checks).
+/// All buffers are persistent: after the first period every operation
+/// works inside previously-reached capacity — the steady-state tick path
+/// performs no allocation (asserted by the `l3_hotpath`
+/// counting-allocator checks).
 #[derive(Debug, Clone, Default)]
 pub struct ShardKernel {
     /// Sub-step length and count of the current invocation.
     h: f64,
     n_sub: usize,
-    /// Control-period dt of the current staging (staged-consumption key).
+    /// Control-period dt of the current resident period (staged key).
     dt: f64,
     /// `h` the memoized consts table was built for (NaN: invalid).
     memo_h: f64,
@@ -199,6 +222,9 @@ pub struct ShardKernel {
     /// crate-private [`ShardKernel::with_memo`] used by `NodeSim`-owned
     /// kernels; a [`ShardKernel::new`] kernel rebuilds per call.
     memo_enabled: bool,
+    /// The arrays are the resident home of adopted nodes' hot state
+    /// (fleet-executor mode); `step_node` refuses to run on them.
+    resident: bool,
     // ---- per-slot struct-of-arrays state, keyed by DeviceSlot ----
     consts: Vec<SubstepConsts>,
     /// Period-invariant RAPL target `a·cap + b` per slot.
@@ -213,16 +239,21 @@ pub struct ShardKernel {
     last_power: Vec<f64>,
     beats_emitted: Vec<u64>,
     last_dist: Vec<DisturbanceState>,
-    // ---- per-node arrays (gather order) ----
+    // ---- per-node arrays (adopt order) ----
     node_first: Vec<DeviceSlot>,
     node_len: Vec<u32>,
     times: Vec<f64>,
     energies: Vec<EnergyCounter>,
-    // ---- staging bookkeeping ----
-    /// Per-slot heartbeat sinks (buffers borrowed from the staged nodes).
+    /// `h` each resident node's consts slots were built for (NaN: stale).
+    consts_h: Vec<f64>,
+    /// Resident nodes enrolled in the current period (finished nodes stay
+    /// adopted but inactive). Empty in non-resident kernels: `run` then
+    /// treats every gathered node as active.
+    active: Vec<bool>,
+    /// Per-slot heartbeat sinks. In resident mode these are swapped with
+    /// the owning node's scratch buffers every period (pointer swaps, no
+    /// copies), so beats land where the staged-consumption path reads.
     sinks: Vec<Vec<f64>>,
-    /// Cell index of each staged node, load order.
-    loaded: Vec<u32>,
 }
 
 impl ShardKernel {
@@ -269,6 +300,8 @@ impl ShardKernel {
         self.node_len.clear();
         self.times.clear();
         self.energies.clear();
+        self.consts_h.clear();
+        self.active.clear();
     }
 
     /// Gather one node's hot state into the arrays (appends one node and
@@ -295,14 +328,26 @@ impl ShardKernel {
     }
 
     /// Scatter node `j`'s state back from the arrays.
+    ///
+    /// The cap inside the RAPL package is **control-plane** state: on the
+    /// resident path it is actuated on the `Device` view between periods
+    /// (the kernel reads the hoisted `nominal` instead, so the resident
+    /// copy's cap goes stale). The view's cap therefore survives the
+    /// scatter — without this, a rebalancing migration would revert a
+    /// node's power cap to its adopt-time value. On the per-call
+    /// `step_node` path the two caps are always equal (gathered at call
+    /// start, caps only move between calls), so preserving the view's is
+    /// byte-identical there too.
     fn scatter_state(&mut self, j: usize, node: &mut NodeSim) {
         let first = self.node_first[j].0 as usize;
         debug_assert_eq!(self.node_len[j] as usize, node.devices.len());
         for (i, dev) in node.devices.iter_mut().enumerate() {
             let s = first + i;
+            let cap = dev.package.cap();
             dev.rng = self.rngs[s].clone();
             dev.disturbances = self.dists[s].clone();
             dev.package = self.packages[s].clone();
+            dev.package.set_cap(cap);
             dev.plant = self.plants[s].clone();
             dev.ou = self.ou[s];
             dev.backlog = self.backlog[s];
@@ -316,15 +361,21 @@ impl ShardKernel {
     }
 
     /// The shard-major drive: for each sub-step, one pass over every
-    /// loaded slot (node-major slot order), accumulating each node's
+    /// enrolled slot (node-major slot order), accumulating each node's
     /// energy in classic device order and appending heartbeats to
     /// `sinks[slot]`. Nodes are mutually independent, so batching them
-    /// cannot change any node's bytes.
+    /// cannot change any node's bytes. In resident mode `active` marks
+    /// the nodes enrolled in the current period (finished nodes are
+    /// skipped in place); non-resident kernels leave `active` empty and
+    /// step every gathered node.
     fn run(&mut self, sinks: &mut [Vec<f64>]) {
         debug_assert_eq!(sinks.len(), self.rngs.len());
         debug_assert_eq!(self.consts.len(), self.rngs.len());
         for _ in 0..self.n_sub {
             for j in 0..self.times.len() {
+                if !self.active.is_empty() && !self.active[j] {
+                    continue;
+                }
                 self.times[j] += self.h;
                 let now = self.times[j];
                 let first = self.node_first[j].0 as usize;
@@ -364,6 +415,10 @@ impl ShardKernel {
     pub fn step_node(&mut self, node: &mut NodeSim, dt: f64, sinks: &mut [Vec<f64>]) {
         assert!(dt > 0.0, "step must advance time");
         assert_eq!(sinks.len(), node.devices.len(), "one sink per device");
+        assert!(
+            !self.resident,
+            "step_node on a resident kernel: its arrays own other nodes' state"
+        );
         let (n_sub, h) = substeps(dt);
         self.n_sub = n_sub;
         self.h = h;
@@ -380,57 +435,113 @@ impl ShardKernel {
         self.scatter_state(0, node);
     }
 
-    /// Begin a shard staging pass: reset the arrays and the load list.
-    /// The consts table is rebuilt per staging — the set of unfinished
-    /// nodes shrinks over the run, so slots do not map stably.
-    pub(crate) fn stage_begin(&mut self) {
-        self.memo_h = f64::NAN;
-        self.dt = f64::NAN;
-        self.consts.clear();
-        self.clear_state();
-        self.sinks.clear();
-        self.loaded.clear();
+    // ---- resident mode (the fleet executor's ownership inversion) ----
+
+    /// Adopt `node` into the resident arrays: gather its hot state once
+    /// and make the arrays its authoritative home until
+    /// [`release`](Self::release). Returns the node's resident index
+    /// (adopt order). The node's `Device` structs become stale views —
+    /// control-plane state (caps, specs, profiles) stays live in them,
+    /// hot data-plane state lives here.
+    pub(crate) fn adopt(&mut self, node: &mut NodeSim) -> usize {
+        assert!(
+            self.resident || self.slots() == 0,
+            "adopt into a kernel already used for per-call stepping"
+        );
+        debug_assert!(node.staged.is_none() && !node.resident);
+        self.resident = true;
+        let j = self.node_first.len();
+        self.gather_state(node);
+        for dev in &node.devices {
+            // Placeholder consts: `consts_h = NaN` forces a rebuild at the
+            // first `period_add` (the period length is unknown here).
+            self.consts.push(SubstepConsts::for_device(dev, f64::NAN));
+            self.sinks.push(Vec::new());
+        }
+        self.consts_h.push(f64::NAN);
+        self.active.push(false);
+        node.resident = true;
+        j
     }
 
-    /// Gather `node` (belonging to executor cell `cell`) into the staging
-    /// pass. The first staged node fixes the period `dt`; a node whose
-    /// `dt` differs bit-for-bit is refused (returns `false`) and will be
-    /// stepped by its own engine tick instead — byte-identical either way.
-    pub(crate) fn stage_node(&mut self, cell: u32, dt: f64, node: &mut NodeSim) -> bool {
+    /// Scatter resident node `j`'s full hot state back into its `Device`
+    /// structs (rematerialize the views) and end its residency. The
+    /// arrays keep the slots (indices stay stable); the kernel is
+    /// typically dropped or rebuilt afterwards (rebalancing migration,
+    /// record finalization).
+    pub(crate) fn release(&mut self, j: usize, node: &mut NodeSim) {
+        debug_assert!(self.resident, "release on a non-resident kernel");
         debug_assert!(
             node.staged.is_none(),
-            "node staged twice without consuming the first pre-step"
+            "release with an unconsumed staged period"
         );
-        if !dt.is_finite() || dt <= 0.0 {
-            return false;
-        }
-        if self.loaded.is_empty() {
-            let (n_sub, h) = substeps(dt);
-            self.n_sub = n_sub;
-            self.h = h;
-            self.dt = dt;
-        } else if dt != self.dt {
-            return false;
-        }
-        for dev in &node.devices {
-            self.consts.push(SubstepConsts::for_device(dev, self.h));
-        }
-        self.gather_state(node);
-        // Borrow the node's per-device scratch buffers as this staging's
-        // sinks; they return (carrying the beats) at unstage.
-        for sink in &mut node.scratch {
-            let mut b = std::mem::take(sink);
-            b.clear();
-            self.sinks.push(b);
-        }
-        self.loaded.push(cell);
-        true
+        self.scatter_state(j, node);
+        node.resident = false;
     }
 
-    /// Run the staged shard through the control period: the single kernel
-    /// invocation per shard per period.
-    pub(crate) fn stage_run(&mut self) {
-        if self.loaded.is_empty() {
+    /// Begin a resident control period of `dt` seconds: fix the sub-step
+    /// grid and clear the enrollment marks. Panics on a non-positive or
+    /// non-finite `dt` — the lockstep executor never produces one.
+    pub(crate) fn period_begin(&mut self, dt: f64) {
+        debug_assert!(self.resident, "period_begin on a non-resident kernel");
+        assert!(
+            dt.is_finite() && dt > 0.0,
+            "resident period must advance time (dt = {dt})"
+        );
+        let (n_sub, h) = substeps(dt);
+        self.n_sub = n_sub;
+        self.h = h;
+        self.dt = dt;
+        self.active.fill(false);
+    }
+
+    /// Enroll resident node `j` in the current period: refresh its
+    /// period-invariant RAPL targets from the (control-plane) device caps,
+    /// rebuild its hoisted consts if the sub-step length changed, and
+    /// borrow its scratch buffers as heartbeat sinks. `dt` must equal the
+    /// period's bit-for-bit — the fleet is lockstep, so every unfinished
+    /// node ticks with the same `dt`; a mismatch means the executor and a
+    /// backend disagree on the clock and is a bug, not a fallback case.
+    pub(crate) fn period_add(&mut self, j: usize, node: &mut NodeSim, dt: f64) {
+        debug_assert!(node.resident, "period_add on a non-resident node");
+        debug_assert!(
+            node.staged.is_none(),
+            "node enrolled twice without consuming the staged period"
+        );
+        assert!(
+            dt == self.dt,
+            "lockstep violated: node enrolled with dt {dt} in a {} period",
+            self.dt
+        );
+        let first = self.node_first[j].0 as usize;
+        debug_assert_eq!(self.node_len[j] as usize, node.devices.len());
+        if self.consts_h[j] != self.h {
+            for (i, dev) in node.devices.iter().enumerate() {
+                // All consts inputs are immutable physics (spec, window,
+                // τ, rates), so the stale view is a valid source.
+                self.consts[first + i] = SubstepConsts::for_device(dev, self.h);
+            }
+            self.consts_h[j] = self.h;
+        }
+        for (i, dev) in node.devices.iter().enumerate() {
+            self.nominal[first + i] = dev.package.target();
+        }
+        for (d, sink) in node.scratch.iter_mut().enumerate() {
+            sink.clear();
+            std::mem::swap(sink, &mut self.sinks[first + d]);
+        }
+        self.active[j] = true;
+    }
+
+    /// Whether resident node `j` is enrolled in the current period.
+    pub(crate) fn is_active(&self, j: usize) -> bool {
+        self.active[j]
+    }
+
+    /// Run every enrolled node through the period's sub-steps in place:
+    /// the single kernel invocation per shard per control period.
+    pub(crate) fn period_run(&mut self) {
+        if !self.active.iter().any(|&a| a) {
             return;
         }
         let mut sinks = std::mem::take(&mut self.sinks);
@@ -438,26 +549,59 @@ impl ShardKernel {
         self.sinks = sinks;
     }
 
-    /// Number of nodes gathered by the current staging pass.
-    pub(crate) fn staged_count(&self) -> usize {
-        self.loaded.len()
-    }
-
-    /// Executor cell index of staged node `i` (load order).
-    pub(crate) fn staged_cell(&self, i: usize) -> u32 {
-        self.loaded[i]
-    }
-
-    /// Scatter staged node `i`'s state and heartbeat sinks back and mark
-    /// it staged-for-`dt`: its next `step_into`/`step_devices_into` call
-    /// consumes the result instead of re-simulating.
-    pub(crate) fn unstage_node(&mut self, i: usize, node: &mut NodeSim) {
-        self.scatter_state(i, node);
-        let first = self.node_first[i].0 as usize;
-        for (d, sink) in node.scratch.iter_mut().enumerate() {
-            *sink = std::mem::take(&mut self.sinks[first + d]);
+    /// Finish the period for enrolled node `j`: compute its sensor
+    /// snapshot from the resident arrays (same arithmetic as
+    /// `NodeSim`'s snapshot — single-device fast paths, left-to-right
+    /// sums), return its heartbeat buffers, refresh the cheap
+    /// API-visible mirrors on the stale views (last power, beat counts,
+    /// disturbance flags, node time/energy), and mark the node staged:
+    /// its next `step_into`/`step_devices_into` call consumes the result
+    /// instead of re-simulating. The `pcap` field is left NaN — the
+    /// consumer fills it from the control-plane caps at consumption time.
+    pub(crate) fn period_finish(&mut self, j: usize, node: &mut NodeSim) {
+        debug_assert!(self.active[j], "period_finish on an unenrolled node");
+        let first = self.node_first[j].0 as usize;
+        let len = self.node_len[j] as usize;
+        let single = len == 1;
+        let power = if single {
+            self.last_power[first]
+        } else {
+            self.last_power[first..first + len].iter().sum()
+        };
+        let true_progress = if single {
+            self.plants[first].progress()
+        } else {
+            self.plants[first..first + len]
+                .iter()
+                .map(|p| p.progress())
+                .sum()
+        };
+        let drop_active = self.last_dist[first..first + len]
+            .iter()
+            .any(|d| d.drop_active);
+        let sensors = StepSensors {
+            time: self.times[j],
+            pcap: f64::NAN,
+            power,
+            energy: self.energies[j].read(),
+            true_progress,
+            drop_active,
+        };
+        for (i, dev) in node.devices.iter_mut().enumerate() {
+            let s = first + i;
+            dev.last_power = self.last_power[s];
+            dev.last_dist = self.last_dist[s];
+            dev.beats = self.beats_emitted[s];
         }
-        node.staged = Some(self.dt);
+        node.time = self.times[j];
+        node.energy = self.energies[j].clone();
+        for (d, sink) in node.scratch.iter_mut().enumerate() {
+            std::mem::swap(sink, &mut self.sinks[first + d]);
+        }
+        node.staged = Some(StagedStep {
+            dt: self.dt,
+            sensors,
+        });
     }
 }
 
@@ -511,30 +655,173 @@ mod tests {
     }
 
     #[test]
-    fn staging_matches_direct_stepping() {
-        // stage/unstage through a shard kernel + staged consumption must
-        // equal a direct step_into on an identical node.
+    fn resident_periods_match_direct_stepping() {
+        // The resident protocol (adopt once, one period_* cycle per tick,
+        // staged consumption) must equal a direct step_into on an
+        // identical node, byte for byte, across many periods.
         let cluster = Cluster::get(ClusterId::Gros);
         let mut direct = NodeSim::new(cluster.clone(), 9);
-        let mut staged = NodeSim::new(cluster.clone(), 9);
+        let mut res = NodeSim::new(cluster.clone(), 9);
         let mut k = ShardKernel::new();
+        let j = k.adopt(&mut res);
+        assert_eq!(j, 0);
         let mut ba = Vec::new();
         let mut bb = Vec::new();
         for _ in 0..30 {
             ba.clear();
             bb.clear();
             let ra = direct.step_into(1.0, &mut ba);
-            k.stage_begin();
-            assert!(k.stage_node(0, 1.0, &mut staged));
-            k.stage_run();
-            assert_eq!(k.staged_count(), 1);
-            assert_eq!(k.staged_cell(0), 0);
-            k.unstage_node(0, &mut staged);
-            let rb = staged.step_into(1.0, &mut bb);
+            k.period_begin(1.0);
+            k.period_add(0, &mut res, 1.0);
+            assert!(k.is_active(0));
+            k.period_run();
+            k.period_finish(0, &mut res);
+            let rb = res.step_into(1.0, &mut bb);
+            assert_eq!(ra.power, rb.power);
+            assert_eq!(ra.energy, rb.energy);
+            assert_eq!(ra.time, rb.time);
+            assert_eq!(ra.pcap, rb.pcap);
+            assert_eq!(ra.true_progress, rb.true_progress);
+            assert_eq!(ba, bb);
+        }
+        // Release rematerializes the views: direct stepping afterwards
+        // continues the same byte stream.
+        k.release(0, &mut res);
+        for _ in 0..10 {
+            ba.clear();
+            bb.clear();
+            let ra = direct.step_into(1.0, &mut ba);
+            let rb = res.step_into(1.0, &mut bb);
             assert_eq!(ra.power, rb.power);
             assert_eq!(ra.energy, rb.energy);
             assert_eq!(ba, bb);
         }
+    }
+
+    #[test]
+    fn resident_cap_changes_land_next_period() {
+        // Caps are control-plane state: actuating the stale Device view
+        // between periods must shape the next resident period exactly as
+        // it shapes a direct step.
+        let cluster = Cluster::get(ClusterId::Dahu);
+        let mut direct = NodeSim::new(cluster.clone(), 4);
+        let mut res = NodeSim::new(cluster.clone(), 4);
+        let mut k = ShardKernel::new();
+        k.adopt(&mut res);
+        let mut ba = Vec::new();
+        let mut bb = Vec::new();
+        for i in 0..24 {
+            let cap = 60.0 + 10.0 * ((i % 5) as f64);
+            direct.set_pcap(cap);
+            res.set_pcap(cap);
+            ba.clear();
+            bb.clear();
+            let ra = direct.step_into(1.0, &mut ba);
+            k.period_begin(1.0);
+            k.period_add(0, &mut res, 1.0);
+            k.period_run();
+            k.period_finish(0, &mut res);
+            let rb = res.step_into(1.0, &mut bb);
+            assert_eq!(ra.power, rb.power, "period {i}");
+            assert_eq!(ra.pcap, rb.pcap, "period {i}");
+            assert_eq!(ba, bb, "period {i}");
+        }
+    }
+
+    #[test]
+    fn resident_skips_unenrolled_nodes_in_place() {
+        // Two adopted nodes, one enrolled: the enrolled node advances,
+        // the idle one's state and staged status stay untouched.
+        let cluster = Cluster::get(ClusterId::Gros);
+        let mut a = NodeSim::new(cluster.clone(), 1);
+        let mut b = NodeSim::new(cluster.clone(), 2);
+        let mut oracle = NodeSim::new(cluster.clone(), 1);
+        let mut k = ShardKernel::new();
+        k.adopt(&mut a);
+        k.adopt(&mut b);
+        let mut beats = Vec::new();
+        let mut oracle_beats = Vec::new();
+        for _ in 0..10 {
+            beats.clear();
+            oracle_beats.clear();
+            k.period_begin(1.0);
+            k.period_add(0, &mut a, 1.0);
+            k.period_run();
+            assert!(k.is_active(0) && !k.is_active(1));
+            k.period_finish(0, &mut a);
+            let ra = a.step_into(1.0, &mut beats);
+            let ro = oracle.step_into(1.0, &mut oracle_beats);
+            assert_eq!(ra.power, ro.power);
+            assert_eq!(beats, oracle_beats);
+        }
+        // The idle node is still resident and un-staged; releasing it
+        // returns its untouched initial state.
+        k.release(1, &mut b);
+        let mut fresh = NodeSim::new(cluster.clone(), 2);
+        let sb = b.step_into(1.0, &mut beats);
+        let sf = fresh.step_into(1.0, &mut oracle_beats);
+        assert_eq!(sb.power, sf.power);
+        assert_eq!(sb.energy, sf.energy);
+    }
+
+    #[test]
+    fn release_preserves_control_plane_caps() {
+        // Caps actuated on the view between periods must survive a
+        // release (the resident package copy's cap is stale by design) —
+        // the exact scenario of a rebalancing migration after a PI
+        // decision.
+        let cluster = Cluster::get(ClusterId::Gros);
+        let mut twin = NodeSim::new(cluster.clone(), 6);
+        let mut res = NodeSim::new(cluster.clone(), 6);
+        let mut k = ShardKernel::new();
+        k.adopt(&mut res);
+        let (mut ba, mut bb) = (Vec::new(), Vec::new());
+        // One resident period, then a cap change, then release.
+        twin.step_into(1.0, &mut ba);
+        k.period_begin(1.0);
+        k.period_add(0, &mut res, 1.0);
+        k.period_run();
+        k.period_finish(0, &mut res);
+        res.step_into(1.0, &mut bb);
+        twin.set_pcap(77.0);
+        res.set_pcap(77.0);
+        k.release(0, &mut res);
+        assert_eq!(res.pcap(), 77.0, "release reverted the actuated cap");
+        // Post-release stepping continues the twin's byte stream with the
+        // new cap in force.
+        for _ in 0..10 {
+            ba.clear();
+            bb.clear();
+            let ra = twin.step_into(1.0, &mut ba);
+            let rb = res.step_into(1.0, &mut bb);
+            assert_eq!(ra.power, rb.power);
+            assert_eq!(ra.energy, rb.energy);
+            assert_eq!(ba, bb);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "lockstep violated")]
+    fn resident_period_rejects_mismatched_dt() {
+        let cluster = Cluster::get(ClusterId::Gros);
+        let mut a = NodeSim::new(cluster.clone(), 1);
+        let mut b = NodeSim::new(cluster, 2);
+        let mut k = ShardKernel::new();
+        k.adopt(&mut a);
+        k.adopt(&mut b);
+        k.period_begin(1.0);
+        k.period_add(0, &mut a, 1.0);
+        k.period_add(1, &mut b, 0.5); // panics: the fleet is lockstep
+    }
+
+    #[test]
+    #[should_panic(expected = "must advance time")]
+    fn resident_period_rejects_nonpositive_dt() {
+        let cluster = Cluster::get(ClusterId::Gros);
+        let mut a = NodeSim::new(cluster, 1);
+        let mut k = ShardKernel::new();
+        k.adopt(&mut a);
+        k.period_begin(0.0);
     }
 
     #[test]
@@ -564,20 +851,4 @@ mod tests {
         assert_eq!(yeti.energy(), ref_yeti.energy());
     }
 
-    #[test]
-    fn stage_refuses_mismatched_dt_and_nonpositive_dt() {
-        let cluster = Cluster::get(ClusterId::Gros);
-        let mut n1 = NodeSim::new(cluster.clone(), 1);
-        let mut n2 = NodeSim::new(cluster.clone(), 2);
-        let mut k = ShardKernel::new();
-        k.stage_begin();
-        assert!(!k.stage_node(0, 0.0, &mut n1));
-        assert!(k.stage_node(0, 1.0, &mut n1));
-        assert!(!k.stage_node(1, 0.5, &mut n2), "mismatched dt accepted");
-        k.stage_run();
-        assert_eq!(k.staged_count(), 1);
-        k.unstage_node(0, &mut n1);
-        let mut beats = Vec::new();
-        n1.step_into(1.0, &mut beats); // consumes without panicking
-    }
 }

@@ -47,6 +47,21 @@ pub struct NodeSensors {
     pub drop_active: bool,
 }
 
+/// A control period pre-computed for this node by a resident shard kernel
+/// (`sim::kernel`): the sensor snapshot to hand the next
+/// `step_into`/`step_devices_into` caller, keyed by the period length so a
+/// clock disagreement between executor and backend is caught loudly. The
+/// heartbeats sit in the node's `scratch` buffers.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct StagedStep {
+    /// Period length the kernel stepped [s]; the consuming call must ask
+    /// for exactly this dt.
+    pub(crate) dt: f64,
+    /// Pre-computed sensors (`pcap` is NaN until consumption fills it from
+    /// the control-plane device caps).
+    pub(crate) sensors: StepSensors,
+}
+
 /// Sensor snapshot returned by [`NodeSim::step_into`]: identical to
 /// [`NodeSensors`] except heartbeats land in the caller's reusable buffer —
 /// the allocation-free variant the control hot path uses.
@@ -84,11 +99,16 @@ pub struct NodeSim {
     merge_idx: Vec<usize>,
     /// This node's own batched stepping kernel (non-staged path).
     kernel: ShardKernel,
-    /// `Some(dt)` when a shard-level kernel pre-stepped this node through
-    /// a `dt`-second period: state is already advanced and the heartbeats
-    /// sit in `scratch`, waiting for the next `step_into`/
-    /// `step_devices_into` call (which must pass the identical `dt`).
-    pub(crate) staged: Option<f64>,
+    /// `Some` when a resident shard kernel pre-stepped this node through a
+    /// control period: the sensors are pre-computed, the heartbeats sit in
+    /// `scratch`, and the next `step_into`/`step_devices_into` call (which
+    /// must pass the identical `dt`) consumes them instead of simulating.
+    pub(crate) staged: Option<StagedStep>,
+    /// The hot device state lives in a resident shard kernel
+    /// (`sim::kernel`), not in `devices`: the structs are stale views
+    /// (control-plane caps/specs stay live) until the kernel releases
+    /// them. Stepping a resident node without a staged period is a bug.
+    pub(crate) resident: bool,
     /// Classic per-device scalar stepping instead of the batched kernel
     /// (oracle/bench mode; byte-identical by construction).
     classic: bool,
@@ -119,6 +139,7 @@ impl NodeSim {
             merge_idx: vec![0; n],
             kernel: ShardKernel::with_memo(),
             staged: None,
+            resident: false,
             classic: false,
         }
     }
@@ -164,6 +185,12 @@ impl NodeSim {
     }
 
     /// Mutable access to device `i` (per-device actuation: cap, profile).
+    ///
+    /// While the node's hot state is resident in a shard kernel (fleet
+    /// executor), only **control-plane** writes are meaningful here — cap
+    /// actuation (`set_pcap`) is picked up by the kernel at the next
+    /// period; profile switches would land on the stale view (the fleet
+    /// path never switches profiles).
     pub fn device_mut(&mut self, i: usize) -> &mut Device {
         &mut self.devices[i]
     }
@@ -176,8 +203,14 @@ impl NodeSim {
     }
 
     /// Switch device 0's application phase profile (workload::phases
-    /// extension).
+    /// extension). Not supported while the node's hot state is resident
+    /// in a shard kernel (the fleet path does not switch profiles): the
+    /// write would land on the stale view and silently not apply.
     pub fn set_profile(&mut self, profile: crate::sim::plant::PowerProfile) {
+        assert!(
+            !self.resident,
+            "set_profile on a resident node would not reach the kernel state"
+        );
         self.devices[0].set_profile(profile);
     }
 
@@ -246,14 +279,21 @@ impl NodeSim {
     }
 
     /// Consume a shard-staged pre-step: verify the caller's `dt` is the
-    /// staged one and clear the marker. The heartbeats are in `scratch`;
-    /// state (time, energy, devices) is already advanced.
-    fn consume_staged(&mut self, dt: f64) {
+    /// staged one, fill the snapshot's `pcap` from the live control-plane
+    /// caps, and clear the marker. The heartbeats are in `scratch`; the
+    /// authoritative state already advanced inside the resident kernel.
+    fn consume_staged(&mut self, dt: f64) -> StepSensors {
         let staged = self.staged.take().expect("no staged step to consume");
         assert!(
-            staged == dt,
-            "staged dt {staged} != step dt {dt}: executor and backend disagree on the period"
+            staged.dt == dt,
+            "staged dt {} != step dt {dt}: executor and backend disagree on the period",
+            staged.dt
         );
+        let mut s = staged.sensors;
+        // Caps only move between periods, so reading them at consumption
+        // time equals the classic post-step snapshot bit for bit.
+        s.pcap = self.total_pcap();
+        s
     }
 
     /// Advance the node by `dt` seconds, appending the heartbeat timestamps
@@ -268,15 +308,19 @@ impl NodeSim {
     pub fn step_into(&mut self, dt: f64, beats: &mut Vec<f64>) -> StepSensors {
         assert!(dt > 0.0, "step must advance time");
         if self.staged.is_some() {
-            self.consume_staged(dt);
+            let s = self.consume_staged(dt);
             if self.devices.len() == 1 {
                 beats.extend_from_slice(&self.scratch[0]);
             } else {
                 self.merge_idx.fill(0);
                 merge_sorted(&self.scratch, &mut self.merge_idx, beats);
             }
-            return self.snapshot();
+            return s;
         }
+        assert!(
+            !self.resident,
+            "resident node stepped without a staged kernel period"
+        );
         if self.devices.len() == 1 {
             // Single-device fast path: beats land straight in the caller's
             // buffer, exactly like the pre-refactor single-plant node.
@@ -314,12 +358,16 @@ impl NodeSim {
         assert!(dt > 0.0, "step must advance time");
         assert_eq!(sinks.len(), self.devices.len(), "one sink per device");
         if self.staged.is_some() {
-            self.consume_staged(dt);
+            let s = self.consume_staged(dt);
             for (sink, buf) in sinks.iter_mut().zip(&self.scratch) {
                 sink.extend_from_slice(buf);
             }
-            return self.snapshot();
+            return s;
         }
+        assert!(
+            !self.resident,
+            "resident node stepped without a staged kernel period"
+        );
         if self.classic {
             // Sub-step at ≤50 ms so heartbeat timestamps within the step
             // are accurate and the cap-actuator window lag is resolved.

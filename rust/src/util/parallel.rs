@@ -267,16 +267,26 @@ impl Drop for WorkerPool {
 }
 
 /// Raw-pointer wrapper asserting that cross-thread access is externally
-/// synchronized (disjoint index claims bounded by a fork/join).
-struct SendPtr<T>(*mut T);
+/// synchronized (disjoint index claims bounded by a fork/join). Crate-
+/// visible so fork/join callers with structurally disjoint writes — the
+/// fleet executor filling its node-order report buffer through per-shard
+/// slices — can uphold the same contract without per-item locks.
+pub(crate) struct SendPtr<T>(*mut T);
 
-// SAFETY: every use above guarantees disjoint access plus a join barrier
-// before the pointee is reused.
+// SAFETY: every use guarantees disjoint access plus a join barrier before
+// the pointee is reused (the constructor's documented contract).
 unsafe impl<T> Send for SendPtr<T> {}
 unsafe impl<T> Sync for SendPtr<T> {}
 
 impl<T> SendPtr<T> {
-    fn get(&self) -> *mut T {
+    /// Wrap `ptr`. Callers must guarantee all cross-thread accesses
+    /// through the wrapper are disjoint and bounded by a fork/join.
+    pub(crate) fn new(ptr: *mut T) -> Self {
+        SendPtr(ptr)
+    }
+
+    /// The wrapped raw pointer.
+    pub(crate) fn get(&self) -> *mut T {
         self.0
     }
 }

@@ -1,7 +1,11 @@
 //! Executor equivalence: a 32-node, 2-cluster fleet run must produce
-//! **byte-identical** `RunRecord` JSON under (a) the sharded executor on
-//! all cores, (b) a forced single-thread pool, and (c) the legacy
-//! one-thread-per-node mpsc protocol — for every reallocation strategy.
+//! **byte-identical** `RunRecord` JSON under (a) the resident-shard
+//! executor on all cores, (b) a forced single-thread pool, and (c) the
+//! legacy one-thread-per-node mpsc protocol — for every reallocation
+//! strategy. Path (a)/(b) runs long enough (120 periods) to cross the
+//! executor's default rebalance cadence, so the contract covers
+//! measured-load migrations of resident state too (see also
+//! `tests/scheduler_determinism.rs`).
 //!
 //! This is the determinism contract of the fleet layer: the execution
 //! mechanism may only change wall time, never bytes.

@@ -1,11 +1,20 @@
 //! Kernel-vs-classic equivalence: the batched shard-major SoA stepping
-//! kernel must produce **byte-identical** `RunRecord` JSON to the classic
+//! kernel — including the **resident** executor mode, where the kernel
+//! arrays are the persistent home of device state across control periods
+//! — must produce **byte-identical** `RunRecord` JSON to the classic
 //! per-node scalar loops, for every fleet shape we can throw at it.
 //!
-//! Together with `tests/fleet_equivalence.rs` (sharded vs legacy executor)
-//! and `tests/hetero_equivalence.rs` (hierarchy collapse), this pins the
-//! full determinism contract: neither the execution mechanism nor the
-//! stepping layout may change bytes — only wall time.
+//! `SimPath::Batched` through `run_fleet_with_path` exercises the full
+//! resident protocol: adopt-once at construction, one kernel invocation
+//! per shard per period, staged-sensor consumption by the engines, and
+//! (past the default cadence) measured-load rebalancing migrations.
+//!
+//! Together with `tests/fleet_equivalence.rs` (sharded vs legacy
+//! executor), `tests/scheduler_determinism.rs` (worker counts ×
+//! rebalancing) and `tests/hetero_equivalence.rs` (hierarchy collapse),
+//! this pins the full determinism contract: neither the execution
+//! mechanism, the stepping layout, nor state residency may change bytes —
+//! only wall time.
 
 use powerctl::control::budget::{BudgetPolicy, GreedyRepack, SlackProportional, UniformBudget};
 use powerctl::control::node_budget::DeviceSplitSpec;
@@ -177,4 +186,50 @@ fn kernel_path_is_reproducible_across_invocations() {
     let a = run_fleet_with_path(&specs, strategy("uniform").as_mut(), &cfg, SimPath::Batched);
     let b = run_fleet_with_path(&specs, strategy("uniform").as_mut(), &cfg, SimPath::Batched);
     assert_eq!(record_bytes(&a), record_bytes(&b));
+}
+
+#[test]
+fn long_horizon_resident_run_crosses_rebalance_epochs_byte_identical() {
+    // A mixed fleet driven far past the executor's default rebalance
+    // cadence (32 periods): several decision epochs — and possibly
+    // migrations, which regather/readopt every node's resident state —
+    // happen mid-run. The classic path must still match byte for byte.
+    let cluster = Cluster::get(ClusterId::Gros);
+    let mut specs: Vec<NodeSpec> = (0..6)
+        .map(|_| NodeSpec {
+            cluster: ClusterId::Gros,
+            model: noise_free_model(ClusterId::Gros),
+            policy: NodePolicySpec::Pi { epsilon: 0.15 },
+            hardware: NodeHardware::SingleCpu,
+        })
+        .collect();
+    specs.push(NodeSpec {
+        cluster: ClusterId::Gros,
+        model: noise_free_model(ClusterId::Gros),
+        policy: NodePolicySpec::Static,
+        hardware: NodeHardware::cpu_gpu(&cluster, DeviceSplitSpec::SlackShift, 0.15),
+    });
+    let cfg = FleetConfig {
+        budget: 6.0 * 85.0 + 360.0,
+        period: 1.0,
+        realloc_every: 5,
+        total_beats: u64::MAX, // run the whole horizon
+        max_time: 150.0,
+        seed: 13,
+        threads: None,
+    };
+    let batched = run_fleet_with_path(
+        &specs,
+        strategy("slack-proportional").as_mut(),
+        &cfg,
+        SimPath::Batched,
+    );
+    let classic = run_fleet_with_path(
+        &specs,
+        strategy("slack-proportional").as_mut(),
+        &cfg,
+        SimPath::Classic,
+    );
+    assert_eq!(record_bytes(&batched), record_bytes(&classic));
+    assert_eq!(batched.limits_trace, classic.limits_trace);
 }

@@ -1,0 +1,154 @@
+//! Scheduler determinism: the resident-shard executor's *scheduling*
+//! freedom — worker count, cost-weighted partition, measured-load
+//! rebalancing migrations — must never reach the bytes.
+//!
+//! Property (satellite of the resident-executor PR): on random mixed
+//! CPU / CPU+GPU fleets under all three budget policies, with rebalancing
+//! enabled (the default), `RunRecord::to_json` is byte-identical
+//! across worker counts {1, 2, all-cores} and across repeated runs.
+//! Rebalancing decisions feed on *measured wall times* — OS scheduling
+//! noise decides when migrations fire — so repeated runs exercise
+//! different migration histories over identical byte streams; the
+//! property holding is exactly the claim that migrations are lossless.
+
+use powerctl::control::budget::{BudgetPolicy, GreedyRepack, SlackProportional, UniformBudget};
+use powerctl::control::node_budget::DeviceSplitSpec;
+use powerctl::fleet::node::noise_free_model;
+use powerctl::fleet::{
+    run_fleet, FleetConfig, FleetOutcome, NodeHardware, NodePolicySpec, NodeSpec,
+};
+use powerctl::sim::cluster::{Cluster, ClusterId};
+use powerctl::util::rng::Pcg64;
+
+fn record_bytes(out: &FleetOutcome) -> String {
+    out.records
+        .iter()
+        .map(|r| r.to_json().dump())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+fn strategy(name: &str) -> Box<dyn BudgetPolicy> {
+    match name {
+        "uniform" => Box::new(UniformBudget),
+        "slack-proportional" => Box::new(SlackProportional::default()),
+        "greedy-repack" => Box::new(GreedyRepack::default()),
+        other => panic!("unknown strategy {other}"),
+    }
+}
+
+/// Draw a random mixed fleet (single-CPU and CPU+GPU nodes over the three
+/// clusters) and a config whose tight-ish budget makes reallocation epochs
+/// move watts.
+fn random_fleet(rng: &mut Pcg64) -> (Vec<NodeSpec>, FleetConfig) {
+    let clusters = [ClusterId::Gros, ClusterId::Dahu, ClusterId::Yeti];
+    let n = 3 + rng.below(6) as usize;
+    let mut budget = 0.0;
+    let specs: Vec<NodeSpec> = (0..n)
+        .map(|_| {
+            let id = *rng.choose(&clusters);
+            let cluster = Cluster::get(id);
+            if rng.f64() < 0.4 {
+                budget += 0.7 * (cluster.pcap_max + 400.0);
+                NodeSpec {
+                    cluster: id,
+                    model: noise_free_model(id),
+                    policy: NodePolicySpec::Static,
+                    hardware: NodeHardware::cpu_gpu(
+                        &cluster,
+                        *rng.choose(&[
+                            DeviceSplitSpec::Even,
+                            DeviceSplitSpec::SlackShift,
+                            DeviceSplitSpec::GreedyRepack,
+                        ]),
+                        rng.uniform(0.05, 0.3),
+                    ),
+                }
+            } else {
+                budget += rng.uniform(0.7, 0.95) * cluster.pcap_max;
+                NodeSpec {
+                    cluster: id,
+                    model: noise_free_model(id),
+                    policy: NodePolicySpec::Pi {
+                        epsilon: rng.uniform(0.0, 0.3),
+                    },
+                    hardware: NodeHardware::SingleCpu,
+                }
+            }
+        })
+        .collect();
+    let cfg = FleetConfig {
+        budget,
+        period: 1.0,
+        realloc_every: 1 + rng.below(5),
+        total_beats: 200 + rng.below(300),
+        max_time: 90.0,
+        seed: rng.next_u64(),
+        threads: None,
+    };
+    (specs, cfg)
+}
+
+#[test]
+fn worker_count_and_rebalancing_never_change_bytes() {
+    let mut rng = Pcg64::seeded(0x5EED5);
+    for case in 0..3 {
+        let (specs, base) = random_fleet(&mut rng);
+        for name in ["uniform", "slack-proportional", "greedy-repack"] {
+            let run = |threads: Option<usize>| {
+                let cfg = FleetConfig {
+                    threads,
+                    ..base.clone()
+                };
+                run_fleet(&specs, strategy(name).as_mut(), &cfg)
+            };
+            let all_cores = run(None);
+            let one = run(Some(1));
+            let two = run(Some(2));
+            let reference = record_bytes(&all_cores);
+            assert_eq!(
+                reference,
+                record_bytes(&one),
+                "case {case} strategy {name}: all-cores != 1 worker ({} nodes, seed {})",
+                specs.len(),
+                base.seed
+            );
+            assert_eq!(
+                reference,
+                record_bytes(&two),
+                "case {case} strategy {name}: all-cores != 2 workers"
+            );
+            assert_eq!(
+                all_cores.limits_trace, one.limits_trace,
+                "case {case} strategy {name}: ceiling traces diverge (1 worker)"
+            );
+            assert_eq!(
+                all_cores.limits_trace, two.limits_trace,
+                "case {case} strategy {name}: ceiling traces diverge (2 workers)"
+            );
+        }
+    }
+}
+
+#[test]
+fn repeated_runs_with_rebalancing_are_byte_identical() {
+    // Rebalancing migrations fire off measured wall times, so two runs
+    // of the same fleet can migrate at different periods — the bytes
+    // must not notice. Repeat a few times to widen the window for a
+    // divergent migration history.
+    let mut rng = Pcg64::seeded(0xD15EA5E);
+    let (specs, cfg) = random_fleet(&mut rng);
+    let reference = record_bytes(&run_fleet(
+        &specs,
+        strategy("slack-proportional").as_mut(),
+        &cfg,
+    ));
+    for rep in 0..3 {
+        let again = record_bytes(&run_fleet(
+            &specs,
+            strategy("slack-proportional").as_mut(),
+            &cfg,
+        ));
+        assert_eq!(reference, again, "rep {rep}: records drifted across runs");
+    }
+}

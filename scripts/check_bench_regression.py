@@ -1,0 +1,100 @@
+#!/usr/bin/env python3
+"""Fail the bench-smoke job when fleet throughput regresses vs baseline.
+
+Compares the node-ticks/s metrics in a fresh `BENCH_l3.json` against the
+committed `BENCH_baseline.json`. A metric regressing more than the
+tolerance fails the job; metrics absent from the report (smoke runs use
+smaller fleet sizes) or null in the baseline (no toolchain machine has
+populated it yet) are skipped with a notice.
+
+Environment:
+    POWERCTL_BENCH_SKIP_REGRESSION=1   skip entirely (cold machines,
+                                       laptops, containers without the
+                                       baseline's host class)
+    POWERCTL_BENCH_REGRESSION_TOL      fractional tolerance (default 0.20)
+    POWERCTL_BENCH_SMOKE               when set, the default tolerance
+                                       loosens to 0.70: shared CI runners
+                                       vary run to run, so smoke only
+                                       guards against order-of-magnitude
+                                       collapses; the 20 % gate is for the
+                                       dedicated machine the baseline was
+                                       measured on
+
+Usage:
+    python3 scripts/check_bench_regression.py [BENCH_l3.json] [BENCH_baseline.json]
+"""
+
+import json
+import os
+import sys
+
+
+def load_report_metrics(path):
+    """BENCH_l3.json is a list of entries; metric entries have name+value."""
+    with open(path) as f:
+        entries = json.load(f)
+    out = {}
+    for e in entries:
+        if isinstance(e, dict) and "value" in e and "name" in e:
+            out[e["name"]] = e["value"]
+    return out
+
+
+def main():
+    report_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_l3.json"
+    baseline_path = sys.argv[2] if len(sys.argv) > 2 else "BENCH_baseline.json"
+
+    if os.environ.get("POWERCTL_BENCH_SKIP_REGRESSION"):
+        print("bench-regression: skipped (POWERCTL_BENCH_SKIP_REGRESSION set)")
+        return 0
+
+    default_tol = 0.70 if os.environ.get("POWERCTL_BENCH_SMOKE") else 0.20
+    tol = float(os.environ.get("POWERCTL_BENCH_REGRESSION_TOL", default_tol))
+
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    metrics = load_report_metrics(report_path)
+
+    guarded = {
+        k: v
+        for k, v in baseline.items()
+        if not k.startswith("_") and "node_ticks_per_s" in k
+    }
+    if not guarded or all(v is None for v in guarded.values()):
+        print(
+            "bench-regression: baseline unpopulated (all throughput keys "
+            "null) — run the bench on the target machine and fill "
+            f"{baseline_path}; skipping"
+        )
+        return 0
+
+    failures, checked, skipped = [], 0, 0
+    for key, base in sorted(guarded.items()):
+        if base is None:
+            skipped += 1
+            continue
+        if key not in metrics:
+            # Smoke runs use smaller fleet sizes; absent keys are expected.
+            print(f"  note: {key} not in report (smoke sizes?) — skipped")
+            skipped += 1
+            continue
+        new = metrics[key]
+        floor = (1.0 - tol) * base
+        status = "ok" if new >= floor else "REGRESSED"
+        print(f"  {status:>9}: {key} = {new:.0f} vs baseline {base:.0f} (floor {floor:.0f})")
+        checked += 1
+        if new < floor:
+            failures.append(key)
+
+    print(
+        f"bench-regression: {checked} checked, {skipped} skipped, "
+        f"tolerance {tol:.0%}"
+    )
+    if failures:
+        print(f"::error::throughput regressed >{tol:.0%} vs baseline: {failures}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

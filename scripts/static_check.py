@@ -1,0 +1,315 @@
+#!/usr/bin/env python3
+"""Toolchain-free static sanity checks for the Rust crate.
+
+The PR-builder container has no Rust toolchain, so whole-crate structural
+slips (unbalanced braces from a botched edit, a `mod` pointing at a missing
+file, a `use crate::…` path that resolves nowhere) would otherwise only
+surface when the driver runs tier-1 outside the container. This script
+catches that class of error in-process:
+
+1. **Delimiter balance** — a small Rust lexer (line/block comments, string,
+   raw-string, char and lifetime literals stripped) checks that `()`, `[]`
+   and `{}` nest correctly in every `.rs` file.
+2. **Module tree** — every `mod foo;` declaration must resolve to
+   `foo.rs` or `foo/mod.rs` next to the declaring file, and every `.rs`
+   file under `rust/src` must be reachable from `lib.rs`/`main.rs`.
+3. **Crate-path resolution** — every `use crate::a::b::{c, d}` must name a
+   module that exists, and each leaf symbol must appear as a public item
+   (`pub fn/struct/enum/trait/const/type/mod` or a `pub use` re-export)
+   somewhere in that module's file.
+
+These are necessary-but-not-sufficient checks: they cannot type-check, but
+they catch the structural mistakes hand-written patches actually make.
+
+Usage:
+    python3 scripts/static_check.py            # check rust/src + tests + benches
+    python3 scripts/static_check.py --verbose  # per-file progress
+"""
+
+import argparse
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+RUST = ROOT / "rust"
+SRC = RUST / "src"
+
+OPEN = {"(": ")", "[": "]", "{": "}"}
+CLOSE = {v: k for k, v in OPEN.items()}
+
+
+def strip_tokens(text: str) -> str:
+    """Return `text` with comments and string/char literals blanked out
+    (newlines preserved so error positions stay meaningful)."""
+    out = []
+    i, n = 0, len(text)
+    while i < n:
+        c = text[i]
+        nxt = text[i + 1] if i + 1 < n else ""
+        if c == "/" and nxt == "/":
+            j = text.find("\n", i)
+            i = n if j == -1 else j
+            continue
+        if c == "/" and nxt == "*":
+            depth, j = 1, i + 2
+            while j < n and depth:
+                if text.startswith("/*", j):
+                    depth += 1
+                    j += 2
+                elif text.startswith("*/", j):
+                    depth -= 1
+                    j += 2
+                else:
+                    if text[j] == "\n":
+                        out.append("\n")
+                    j += 1
+            i = j
+            continue
+        if c == "r" and re.match(r'r#*"', text[i:]):
+            m = re.match(r'r(#*)"', text[i:])
+            closing = '"' + m.group(1)
+            j = text.find(closing, i + len(m.group(0)))
+            j = n if j == -1 else j + len(closing)
+            out.extend(ch if ch == "\n" else " " for ch in text[i:j])
+            i = j
+            continue
+        if c == '"':
+            j = i + 1
+            while j < n:
+                if text[j] == "\\":
+                    j += 2
+                    continue
+                if text[j] == '"':
+                    j += 1
+                    break
+                j += 1
+            out.extend(ch if ch == "\n" else " " for ch in text[i:j])
+            i = j
+            continue
+        if c == "'":
+            # Lifetime (`'a`) vs char literal (`'a'`, `'\n'`).
+            m = re.match(r"'(\\.|[^'\\])'", text[i:])
+            if m:
+                out.append(" " * len(m.group(0)))
+                i += len(m.group(0))
+                continue
+            out.append(c)
+            i += 1
+            continue
+        out.append(c)
+        i += 1
+    return "".join(out)
+
+
+def check_balance(path: Path, stripped: str):
+    errors = []
+    stack = []
+    line = 1
+    for ch in stripped:
+        if ch == "\n":
+            line += 1
+        elif ch in OPEN:
+            stack.append((ch, line))
+        elif ch in CLOSE:
+            if not stack:
+                errors.append(f"{path}:{line}: unmatched `{ch}`")
+            else:
+                o, oline = stack.pop()
+                if OPEN[o] != ch:
+                    errors.append(
+                        f"{path}:{line}: `{ch}` closes `{o}` opened at line {oline}"
+                    )
+    for o, oline in stack:
+        errors.append(f"{path}:{oline}: `{o}` never closed")
+    return errors
+
+
+MOD_RE = re.compile(r"^\s*(?:pub(?:\([a-z]+\))?\s+)?mod\s+([a-z_][a-z0-9_]*)\s*;", re.M)
+ITEM_RE = re.compile(
+    r"^\s*(?:pub(?:\((?:crate|super)\))?\s+)"
+    r"(?:async\s+)?(?:unsafe\s+)?(?:extern\s+\"[^\"]*\"\s+)?"
+    r"(?:fn|struct|enum|trait|const|static|type|mod|union)\s+"
+    r"([A-Za-z_][A-Za-z0-9_]*)",
+    re.M,
+)
+MACRO_EXPORT_RE = re.compile(r"macro_rules!\s*([A-Za-z_][A-Za-z0-9_]*)")
+PUB_USE_RE = re.compile(r"^\s*pub\s+use\s+([^;]+);", re.M)
+USE_CRATE_RE = re.compile(r"^\s*(?:pub\s+)?use\s+crate::([^;]+);", re.M)
+
+
+def module_file(parts):
+    """Map crate-relative module path parts to the defining file."""
+    if not parts:
+        return SRC / "lib.rs"
+    as_file = SRC.joinpath(*parts).with_suffix(".rs")
+    as_dir = SRC.joinpath(*parts) / "mod.rs"
+    if as_file.exists():
+        return as_file
+    if as_dir.exists():
+        return as_dir
+    # Inline module (`mod name { … }`, e.g. `#[cfg(test)] mod tests`)
+    # declared in the parent module's file: resolve to that file.
+    parent = module_file(parts[:-1])
+    if parent is not None and re.search(
+        rf"^\s*(?:pub(?:\([a-z]+\))?\s+)?mod\s+{parts[-1]}\s*\{{",
+        strip_tokens(parent.read_text()),
+        re.M,
+    ):
+        return parent
+    return None
+
+
+def public_names(text: str):
+    names = set(ITEM_RE.findall(text))
+    names |= set(MACRO_EXPORT_RE.findall(text))
+    for target in PUB_USE_RE.findall(text):
+        # `pub use path::{a, b as c}` re-exports leaf names.
+        inner = re.search(r"\{([^}]*)\}", target)
+        leaves = inner.group(1).split(",") if inner else [target]
+        for leaf in leaves:
+            leaf = leaf.strip()
+            if not leaf:
+                continue
+            if " as " in leaf:
+                leaf = leaf.split(" as ")[-1].strip()
+            else:
+                leaf = leaf.split("::")[-1].strip()
+            if leaf and leaf != "*":
+                names.add(leaf)
+    return names
+
+
+def expand_use_tree(prefix, tree):
+    """Expand `a::b::{c, d::e}` into leaf paths."""
+    tree = tree.strip()
+    m = re.match(r"^(.*?)\{(.*)\}$", tree, re.S)
+    if not m:
+        return [prefix + [p.strip() for p in tree.split("::") if p.strip()]]
+    head = [p for p in m.group(1).strip().strip(":").split("::") if p]
+    inner = m.group(2)
+    paths, depth, cur = [], 0, ""
+    parts = []
+    for ch in inner:
+        if ch == "{":
+            depth += 1
+        elif ch == "}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append(cur)
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        parts.append(cur)
+    for part in parts:
+        paths.extend(expand_use_tree(prefix + head, part))
+    return paths
+
+
+def check_crate_uses(path: Path, stripped: str, cache):
+    errors = []
+    for target in USE_CRATE_RE.findall(stripped):
+        for parts in expand_use_tree([], target):
+            parts = [p for p in parts if p]
+            if not parts:
+                continue
+            leaf = parts[-1]
+            if leaf in ("self", "*"):
+                parts = parts[:-1]
+                leaf = parts[-1] if parts else None
+            if " as " in (leaf or ""):
+                leaf = leaf.split(" as ")[0].strip()
+            # Find the deepest prefix that is a module file; the leaf must
+            # be a public name there (or itself a module).
+            if module_file(parts) is not None:
+                continue  # leaf is a module — fine
+            mod_parts = parts[:-1]
+            f = module_file(mod_parts)
+            if f is None:
+                errors.append(
+                    f"{path}: use crate::{'::'.join(parts)} — module "
+                    f"`{'::'.join(mod_parts) or 'crate root'}` not found"
+                )
+                continue
+            if f not in cache:
+                cache[f] = public_names(strip_tokens(f.read_text()))
+            if f == SRC / "lib.rs" and leaf:
+                # `#[macro_export]` macros live at the crate root no matter
+                # which module defines them.
+                if "macros" not in cache:
+                    cache["macros"] = {
+                        m for g in SRC.rglob("*.rs")
+                        for m in MACRO_EXPORT_RE.findall(g.read_text())
+                    }
+                if leaf in cache["macros"]:
+                    continue
+            if leaf and leaf not in cache[f]:
+                errors.append(
+                    f"{path}: use crate::{'::'.join(parts)} — `{leaf}` not "
+                    f"declared pub in {f.relative_to(ROOT)}"
+                )
+    return errors
+
+
+def check_module_tree():
+    errors = []
+    reachable = set()
+
+    def walk(f: Path):
+        if f in reachable or not f.exists():
+            return
+        reachable.add(f)
+        stripped = strip_tokens(f.read_text())
+        for name in MOD_RE.findall(stripped):
+            base = f.parent if f.name in ("mod.rs", "lib.rs", "main.rs") else f.parent / f.stem
+            child_file = base / f"{name}.rs"
+            child_dir = base / name / "mod.rs"
+            if child_file.exists():
+                walk(child_file)
+            elif child_dir.exists():
+                walk(child_dir)
+            else:
+                errors.append(f"{f}: `mod {name};` resolves to no file")
+
+    for root in (SRC / "lib.rs", SRC / "main.rs"):
+        walk(root)
+    for f in sorted(SRC.rglob("*.rs")):
+        if f not in reachable:
+            errors.append(f"{f}: not reachable from lib.rs/main.rs module tree")
+    return errors
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args()
+
+    files = sorted(
+        list(SRC.rglob("*.rs"))
+        + list((RUST / "tests").glob("*.rs"))
+        + list((RUST / "benches").glob("*.rs"))
+        + list((ROOT / "examples").glob("*.rs"))
+    )
+    errors = []
+    cache = {}
+    for f in files:
+        stripped = strip_tokens(f.read_text())
+        errs = check_balance(f, stripped)
+        errs += check_crate_uses(f, stripped, cache)
+        if args.verbose:
+            print(f"{'FAIL' if errs else 'ok  '} {f.relative_to(ROOT)}")
+        errors.extend(errs)
+    errors.extend(check_module_tree())
+
+    if errors:
+        print(f"\n{len(errors)} static-check error(s):")
+        for e in errors:
+            print(f"  {e}")
+        return 1
+    print(f"static_check: {len(files)} files clean (balance, module tree, crate uses)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
