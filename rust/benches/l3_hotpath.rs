@@ -8,7 +8,12 @@
 //! * one fleet control period (16 engines + budget allocation, in-process);
 //! * **fleet executor scaling**: node-ticks/s of the sharded executor at
 //!   16/256/1024 nodes vs the legacy one-thread-per-node protocol, plus a
-//!   steady-state allocation check (the tick path must not allocate).
+//!   steady-state allocation check (the tick path must not allocate);
+//! * **SIMD vs scalar stepping**: `fleet_simd_*` (lane-exact `F64x4`
+//!   sub-steps, the default) against the scalar-resident oracle and the
+//!   classic loops, with byte-identity asserted first
+//!   (`simd_vs_scalar_identical`), plus per-component OU/plant/RAPL
+//!   microbenches and a one-line NUMA pin-status notice.
 //!
 //! Emits the machine-readable `BENCH_l3.json` (override the path with
 //! `BENCH_L3_JSON`). `POWERCTL_BENCH_SMOKE=1` caps iterations and fleet
@@ -35,7 +40,7 @@ use powerctl::sim::device::DeviceSpec;
 use powerctl::sim::cluster::{Cluster, ClusterId};
 use powerctl::sim::node::NodeSim;
 use powerctl::util::bench::{black_box, section, smoke, Bench, Report};
-use powerctl::util::parallel::default_threads;
+use powerctl::util::parallel::{default_threads, PinStatus};
 
 /// Counting allocator: lets the bench prove the steady-state fleet tick
 /// path performs zero allocations (counts every alloc/realloc on every
@@ -307,18 +312,17 @@ fn main() {
 
     section("resident kernel vs classic stepping (node-ticks/s)");
     {
-        // The tentpole number: fleet throughput with the resident
-        // shard-major SoA kernel (state adopted once, one kernel
-        // invocation per shard per period, no per-period gather/scatter,
-        // hoisted sub-step invariants) against the classic per-node scalar
-        // loops on the SAME sharded executor — isolating the stepping path
-        // from the execution mechanism. The `fleet_kernel_*` keys keep
-        // their PR 4 names so the trajectory tables stay comparable; the
-        // `fleet_resident_*` aliases mark numbers produced by the
-        // resident path (PR 5+). Identical records by construction;
+        // The tentpole numbers: fleet throughput with the resident
+        // shard-major SoA kernel — lane-exact SIMD sub-steps by default
+        // (`fleet_simd_*`), the scalar-resident oracle (`fleet_kernel_*` /
+        // `fleet_resident_*`, keeping their PR 4/5 key names so the
+        // trajectory tables stay comparable) and the classic per-node
+        // loops (`fleet_classic_*`) — all on the SAME sharded executor,
+        // isolating the stepping path from the execution mechanism. All
+        // three paths produce identical record bytes by construction;
         // asserted below before any throughput is reported, and the CI
-        // gate greps BENCH_l3.json for the equivalence metric so the case
-        // cannot silently be skipped.
+        // gate greps BENCH_l3.json for both equivalence metrics so the
+        // case cannot silently be skipped.
         let drive = |n: usize, periods: f64, path: SimPath| -> (f64, u64) {
             let cfg = FleetConfig {
                 budget: 95.0 * n as f64,
@@ -337,7 +341,7 @@ fn main() {
 
         // Equivalence case first: a mixed fleet (classic single-CPU nodes
         // plus a hierarchical CPU+GPU node) under a tight budget, compared
-        // byte-for-byte across the two stepping paths.
+        // byte-for-byte across all three stepping paths.
         {
             let mut specs = gros_specs(&ident, 5, 0.15);
             specs.push(NodeSpec {
@@ -368,6 +372,12 @@ fn main() {
                 &cfg,
                 SimPath::Batched,
             );
+            let scalar = run_fleet_with_path(
+                &specs,
+                &mut SlackProportional::default(),
+                &cfg,
+                SimPath::BatchedScalar,
+            );
             let classic = run_fleet_with_path(
                 &specs,
                 &mut SlackProportional::default(),
@@ -375,23 +385,33 @@ fn main() {
                 SimPath::Classic,
             );
             assert_eq!(
-                to_bytes(&batched),
+                to_bytes(&scalar),
                 to_bytes(&classic),
                 "kernel records diverge from classic records"
             );
-            println!("  kernel-vs-classic equivalence: byte-identical on a 6-node mixed fleet");
+            assert_eq!(
+                to_bytes(&batched),
+                to_bytes(&scalar),
+                "SIMD records diverge from scalar-resident records"
+            );
+            println!(
+                "  kernel-vs-classic + simd-vs-scalar equivalence: byte-identical on a 6-node mixed fleet"
+            );
             report.add_metric("kernel_vs_classic_identical", 1.0);
+            report.add_metric("simd_vs_scalar_identical", 1.0);
         }
 
         let sizes: &[usize] = if smoke() { &[16, 64, 256] } else { &[16, 256, 1024] };
         for &n in sizes {
             let periods = if smoke() { 20.0 } else { 120.0 };
-            let (kernel_tps, ticks) = drive(n, periods, SimPath::Batched);
+            let (simd_tps, ticks) = drive(n, periods, SimPath::Batched);
+            let (kernel_tps, _) = drive(n, periods, SimPath::BatchedScalar);
             let (classic_tps, _) = drive(n, periods, SimPath::Classic);
             println!(
-                "  {n:>5} nodes: kernel {kernel_tps:>12.0} node-ticks/s | classic {classic_tps:>12.0} node-ticks/s | {:.2}× ({ticks} ticks)",
-                kernel_tps / classic_tps
+                "  {n:>5} nodes: simd {simd_tps:>12.0} | scalar-resident {kernel_tps:>12.0} | classic {classic_tps:>12.0} node-ticks/s | simd/scalar {:.2}× ({ticks} ticks)",
+                simd_tps / kernel_tps
             );
+            report.add_metric(&format!("fleet_simd_node_ticks_per_s_{n}"), simd_tps);
             report.add_metric(&format!("fleet_kernel_node_ticks_per_s_{n}"), kernel_tps);
             report.add_metric(&format!("fleet_resident_node_ticks_per_s_{n}"), kernel_tps);
             report.add_metric(&format!("fleet_classic_node_ticks_per_s_{n}"), classic_tps);
@@ -399,7 +419,86 @@ fn main() {
                 &format!("fleet_kernel_speedup_{n}"),
                 kernel_tps / classic_tps,
             );
+            report.add_metric(&format!("fleet_simd_speedup_{n}"), simd_tps / kernel_tps);
         }
+    }
+
+    section("SIMD sub-step components (scalar vs lanes, 1024 devices)");
+    {
+        // Per-component microbench of the three lane-vectorized update
+        // expressions, each written EXACTLY as the kernel computes it —
+        // OU decay (`ou·decay + g`), plant smoothing
+        // (`a·prog + (1−a)·target`) and the RAPL window
+        // (`power + α·(target − power)`) — over a 1024-element SoA array,
+        // scalar loop vs `F64x4` lane loop. Isolates the arithmetic win
+        // from the gather/scatter and RNG costs that the fleet numbers
+        // blend in.
+        use powerctl::sim::simd::{F64x4, LANES};
+        const N: usize = 1024;
+        let mut a: Vec<f64> = (0..N).map(|i| 0.5 + (i as f64) * 1e-3).collect();
+        let b: Vec<f64> = (0..N).map(|i| 0.1 + (i as f64) * 7e-4).collect();
+        let micro = Bench::scaled();
+
+        let r = micro.run("substep_ou_scalar_1024", || {
+            for i in 0..N {
+                a[i] = a[i] * 0.95 + b[i];
+            }
+            black_box(&a);
+        });
+        report.add(&r);
+        let r = micro.run("substep_ou_lanes_1024", || {
+            let decay = F64x4::splat(0.95);
+            let mut i = 0;
+            while i + LANES <= N {
+                let v = F64x4::from_slice(&a[i..i + LANES]) * decay
+                    + F64x4::from_slice(&b[i..i + LANES]);
+                v.write_to(&mut a[i..i + LANES]);
+                i += LANES;
+            }
+            black_box(&a);
+        });
+        report.add(&r);
+
+        let r = micro.run("substep_plant_scalar_1024", || {
+            for i in 0..N {
+                a[i] = 0.8 * a[i] + (1.0 - 0.8) * b[i];
+            }
+            black_box(&a);
+        });
+        report.add(&r);
+        let r = micro.run("substep_plant_lanes_1024", || {
+            let aa = F64x4::splat(0.8);
+            let one_minus = F64x4::splat(1.0) - aa;
+            let mut i = 0;
+            while i + LANES <= N {
+                let v = aa * F64x4::from_slice(&a[i..i + LANES])
+                    + one_minus * F64x4::from_slice(&b[i..i + LANES]);
+                v.write_to(&mut a[i..i + LANES]);
+                i += LANES;
+            }
+            black_box(&a);
+        });
+        report.add(&r);
+
+        let r = micro.run("substep_rapl_scalar_1024", || {
+            for i in 0..N {
+                a[i] += 0.3 * (b[i] - a[i]);
+            }
+            black_box(&a);
+        });
+        report.add(&r);
+        let r = micro.run("substep_rapl_lanes_1024", || {
+            let alpha = F64x4::splat(0.3);
+            let mut i = 0;
+            while i + LANES <= N {
+                let p = F64x4::from_slice(&a[i..i + LANES]);
+                let v = p + alpha * (F64x4::from_slice(&b[i..i + LANES]) - p);
+                v.write_to(&mut a[i..i + LANES]);
+                i += LANES;
+            }
+            black_box(&a);
+        });
+        report.add(&r);
     }
 
     section("steady-state allocation check (full resident control period)");
@@ -424,6 +523,23 @@ fn main() {
         let seeds: Vec<u64> = (0..n).map(|i| node_seed(42, i)).collect();
         let threads = default_threads().min(n);
         let mut exec = ShardedExecutor::new(&specs, 95.0, cfg, &seeds, threads);
+        // NUMA pin notice: printed once per bench run, never a failure —
+        // pinning degrades gracefully on cpusets/containers and can be
+        // disabled outright with POWERCTL_NO_PIN=1.
+        match exec.pin_status() {
+            PinStatus::Pinned { sockets, cores } => {
+                println!("  worker pinning: {cores} cores across {sockets} socket(s)");
+                report.add_metric("numa_pin_sockets", sockets as f64);
+            }
+            PinStatus::Disabled => {
+                println!("  worker pinning: disabled via POWERCTL_NO_PIN");
+                report.add_metric("numa_pin_sockets", 0.0);
+            }
+            PinStatus::Unsupported => {
+                println!("  worker pinning: unsupported on this host (running unpinned)");
+                report.add_metric("numa_pin_sockets", 0.0);
+            }
+        }
         let mut strategy = SlackProportional::default();
         let mut limits = vec![0.0; n];
         let budget = 95.0 * n as f64;
@@ -447,13 +563,49 @@ fn main() {
         }
         let delta = allocations() - before;
         println!(
-            "  allocations over {measured} steady-state periods × {n} nodes \
+            "  allocations over {measured} steady-state SIMD periods × {n} nodes \
              (tick + per-period budget allocate + record append): {delta}"
         );
         report.add_metric("fleet_steady_state_allocations", delta as f64);
         assert_eq!(
             delta, 0,
-            "steady-state resident control period allocated {delta} times"
+            "steady-state SIMD control period allocated {delta} times"
+        );
+
+        // Same check over a shorter window for the scalar-resident oracle
+        // path: forcing scalar sub-steps must not reintroduce allocations
+        // (the lane-range bookkeeping is shared and pre-reserved at adopt).
+        let (warm_s, measured_s) = (50u64, 25u64);
+        let cfg_s = WorkerConfig {
+            period: 1.0,
+            total_beats: u64::MAX,
+            max_time: (warm_s + measured_s + 8) as f64,
+        };
+        let mut exec_s = ShardedExecutor::with_path(
+            &specs,
+            95.0,
+            cfg_s,
+            &seeds,
+            threads,
+            SimPath::BatchedScalar,
+        );
+        let mut now_s = 0.0;
+        for _ in 1..=warm_s {
+            epoch(&mut exec_s, &mut strategy, &mut limits, &mut now_s);
+        }
+        exec_s.set_rebalance_every(0);
+        let before = allocations();
+        for _ in warm_s + 1..=warm_s + measured_s {
+            epoch(&mut exec_s, &mut strategy, &mut limits, &mut now_s);
+        }
+        let delta = allocations() - before;
+        println!(
+            "  allocations over {measured_s} steady-state scalar-resident periods × {n} nodes: {delta}"
+        );
+        report.add_metric("fleet_scalar_steady_state_allocations", delta as f64);
+        assert_eq!(
+            delta, 0,
+            "steady-state scalar-resident control period allocated {delta} times"
         );
     }
 

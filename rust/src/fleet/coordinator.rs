@@ -134,9 +134,10 @@ fn summarize(
 }
 
 /// Run `specs` as a fleet under `strategy` on the sharded executor with
-/// the batched shard-kernel stepping path. Blocks until every node
-/// completes its workload or `config.max_time` elapses. Byte-identical
-/// records to [`run_fleet_threaded`] and to [`run_fleet_with_path`] on
+/// the batched shard-kernel stepping path (lane-exact SIMD sub-steps).
+/// Blocks until every node completes its workload or `config.max_time`
+/// elapses. Byte-identical records to [`run_fleet_threaded`] and to
+/// [`run_fleet_with_path`] on [`SimPath::BatchedScalar`] or
 /// [`SimPath::Classic`].
 pub fn run_fleet(
     specs: &[NodeSpec],
@@ -148,8 +149,10 @@ pub fn run_fleet(
 
 /// [`run_fleet`] with an explicit simulation stepping path —
 /// [`SimPath::Classic`] drives the per-node scalar loops instead of the
-/// batched shard kernel (the equivalence oracle and the `l3_hotpath`
-/// bench baseline; the records are byte-identical either way).
+/// batched shard kernel, [`SimPath::BatchedScalar`] keeps kernel
+/// residency but scalar sub-steps (equivalence oracles and the
+/// `l3_hotpath` bench baselines; the records are byte-identical on every
+/// path).
 pub fn run_fleet_with_path(
     specs: &[NodeSpec],
     strategy: &mut dyn BudgetPolicy,

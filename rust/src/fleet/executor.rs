@@ -12,16 +12,29 @@
 //! from measured per-shard tick times** so they stay balanced as nodes
 //! finish or physics costs drift.
 //!
-//! Each control period is a **single fork/join**:
-//! [`WorkerPool::par_chunks_mut`] hands every worker disjoint `&mut`
-//! shards (no `Mutex` — ownership is structural); the worker runs one
-//! resident-kernel invocation that steps every device of every unfinished
-//! node in the shard through the period, then ticks each engine in place
-//! — the engines consume the staged physics instead of re-simulating —
-//! and writes the shard's [`NodeReport`]s straight into the executor's
+//! Each control period is a **single fork/join**: a
+//! [`WorkerPool::broadcast`] with a *static* worker `w` ↔ shard `w` map
+//! (shard count equals pool width by construction; no `Mutex` — ownership
+//! is structural). The worker runs one resident-kernel invocation that
+//! steps every device of every unfinished node in the shard through the
+//! period — lane-exact SIMD sub-steps by default, the scalar oracle under
+//! [`SimPath::BatchedScalar`] — then ticks each engine in place (the
+//! engines consume the staged physics instead of re-simulating) and
+//! writes the shard's [`NodeReport`]s straight into the executor's
 //! contiguous node-order report buffer through its disjoint slice. After
 //! the join the only serial work is the O(#shards) done-reduction and, on
 //! reallocation epochs, the coordinator's budget allocation.
+//!
+//! **NUMA placement.** The static worker↔shard map is also the memory
+//! map: shards are adopted into their resident kernels *inside a
+//! broadcast on the owning worker* — the pool pins worker `w` to a core
+//! round-robin across sockets ([`crate::util::parallel`]), and the SoA
+//! arrays it allocates there are first-touched on that worker, so the hot
+//! state lives on the socket that steps it every period. Rebalancing
+//! migrations re-adopt through the same broadcast, keeping placement
+//! correct after nodes move. Placement is best-effort (probe once, never
+//! panic, `POWERCTL_NO_PIN=1` opt-out); like everything else in this
+//! module it can only move wall time, never bytes.
 //!
 //! Determinism argument (why this is byte-identical to the legacy
 //! one-thread-per-node mpsc protocol in `fleet::node` and to classic
@@ -54,7 +67,7 @@ use crate::fleet::node::{
 use crate::sim::cluster::Cluster;
 use crate::sim::device::DeviceKind;
 use crate::sim::kernel::{ShardKernel, SimPath};
-use crate::util::parallel::{SendPtr, WorkerPool};
+use crate::util::parallel::{PinStatus, SendPtr, WorkerPool};
 
 /// Cap on pre-reserved sample rows per node (`max_time / period` can be
 /// huge for open-horizon runs; beyond this the sample log simply grows).
@@ -282,8 +295,10 @@ impl ShardedExecutor {
     }
 
     /// [`new`](Self::new) with an explicit stepping path —
-    /// [`SimPath::Classic`] keeps the per-node scalar loops (byte-identical
-    /// oracle / bench baseline; state stays in the node structs).
+    /// [`SimPath::Classic`] keeps the per-node scalar loops (state stays
+    /// in the node structs); [`SimPath::BatchedScalar`] keeps kernel
+    /// residency but forces scalar sub-steps. Both are byte-identical
+    /// oracles / bench baselines for the default SIMD path.
     pub fn with_path(
         specs: &[NodeSpec],
         initial_limit: f64,
@@ -343,8 +358,8 @@ impl ShardedExecutor {
         let costs: Vec<f64> = cells.iter().map(|c| c.weight).collect();
         let mut boundaries = Vec::with_capacity(n_shards + 1);
         partition_boundaries(&costs, n_shards, &mut boundaries);
-        let shards = build_shards(cells, &boundaries, path == SimPath::Batched);
-        ShardedExecutor {
+        let shards = build_shards(cells, &boundaries);
+        let mut exec = ShardedExecutor {
             pool: WorkerPool::new(threads),
             shards,
             reports,
@@ -354,7 +369,37 @@ impl ShardedExecutor {
             rebalance_every: DEFAULT_REBALANCE_EVERY,
             cost_scratch: vec![0.0; n],
             boundary_scratch: boundaries,
+        };
+        exec.adopt_shards();
+        exec
+    }
+
+    /// Adopt every shard's nodes into its resident kernel **on the worker
+    /// that owns the shard** (the same static worker `w` ↔ shard `w` map
+    /// every tick uses): the SoA arrays are allocated — first-touched —
+    /// by the pinned thread that will step them each period, so with the
+    /// kernel's first-touch NUMA policy the hot state lands on the owning
+    /// worker's local socket. Also selects the scalar-oracle sub-step
+    /// mode for [`SimPath::BatchedScalar`] kernels. No-op on the classic
+    /// path (state stays in the node structs).
+    fn adopt_shards(&mut self) {
+        if self.path == SimPath::Classic {
+            return;
         }
+        let scalar = self.path == SimPath::BatchedScalar;
+        let shards = SendPtr::new(self.shards.as_mut_ptr());
+        let n_shards = self.shards.len();
+        self.pool.broadcast(&|w| {
+            if w >= n_shards {
+                return;
+            }
+            // SAFETY: the map is one worker per shard, so shard accesses
+            // are disjoint across workers, and `broadcast` joins every
+            // worker before the executor touches the shards again.
+            let shard = unsafe { &mut *shards.get().add(w) };
+            shard.kernel.set_scalar_stepping(scalar);
+            shard.make_resident();
+        });
     }
 
     /// Number of node engines owned by the executor.
@@ -365,6 +410,12 @@ impl ShardedExecutor {
     /// Worker threads in the persistent pool.
     pub fn threads(&self) -> usize {
         self.pool.threads()
+    }
+
+    /// How the pool placed its workers on CPUs — the NUMA pinning outcome
+    /// decided once at construction (the `l3_hotpath` bench reports it).
+    pub fn pin_status(&self) -> PinStatus {
+        self.pool.pin_status()
     }
 
     /// Set the measured-rebalance cadence in periods (`0` disables).
@@ -378,25 +429,35 @@ impl ShardedExecutor {
     }
 
     /// One lockstep control period for every node — a single fork/join
-    /// over the shards. Each worker runs one resident-kernel invocation
-    /// stepping every device of its shard through the period, ticks the
-    /// engines in place (they consume the staged physics), and writes the
-    /// shard's reports into the node-order buffer. Returns `true` once
-    /// every node has finished (quota or timeout).
+    /// over the shards with the static worker `w` ↔ shard `w` map (the
+    /// worker that first-touched a shard's resident arrays is the one
+    /// that steps them, keeping NUMA placement stable). Each worker runs
+    /// one resident-kernel invocation stepping every device of its shard
+    /// through the period, ticks the engines in place (they consume the
+    /// staged physics), and writes the shard's reports into the
+    /// node-order buffer. Returns `true` once every node has finished
+    /// (quota or timeout).
     pub fn tick(&mut self, now: f64) -> bool {
         let reports = SendPtr::new(self.reports.as_mut_ptr());
-        self.pool.par_chunks_mut(&mut self.shards, 1, |_, shards| {
-            for shard in shards {
-                shard.tick(now);
-                // SAFETY: shards own disjoint, contiguous [first,
-                // first+len) ranges that exactly tile the report buffer,
-                // and `par_chunks_mut` joins every worker before the
-                // buffer is read again.
-                let base = unsafe { reports.get().add(shard.first) };
-                for (i, cell) in shard.cells.iter().enumerate() {
-                    unsafe {
-                        *base.add(i) = cell.report;
-                    }
+        let shards = SendPtr::new(self.shards.as_mut_ptr());
+        let n_shards = self.shards.len();
+        self.pool.broadcast(&|w| {
+            if w >= n_shards {
+                return;
+            }
+            // SAFETY: one worker per shard (static map), so shard access
+            // is disjoint across workers, and `broadcast` joins every
+            // worker before the executor touches the shards again.
+            let shard = unsafe { &mut *shards.get().add(w) };
+            shard.tick(now);
+            // SAFETY: shards own disjoint, contiguous [first,
+            // first+len) ranges that exactly tile the report buffer,
+            // and `broadcast` joins every worker before the buffer is
+            // read again.
+            let base = unsafe { reports.get().add(shard.first) };
+            for (i, cell) in shard.cells.iter().enumerate() {
+                unsafe {
+                    *base.add(i) = cell.report;
                 }
             }
         });
@@ -481,10 +542,11 @@ impl ShardedExecutor {
 
     /// Migrate to a new contiguous partition: rematerialize every resident
     /// node (lossless scatter), move the cells, regather into fresh
-    /// resident kernels. Allocates — called only from rebalance decisions
-    /// that cleared the imbalance threshold, or from tests.
+    /// resident kernels **on the new owning workers** (the re-adopt
+    /// broadcast keeps first-touch NUMA placement migration-aware).
+    /// Allocates — called only from rebalance decisions that cleared the
+    /// imbalance threshold, or from tests.
     fn apply_partition(&mut self, boundaries: &[usize]) {
-        let resident = self.path == SimPath::Batched;
         for shard in &mut self.shards {
             shard.release_all();
         }
@@ -492,7 +554,8 @@ impl ShardedExecutor {
         for shard in self.shards.drain(..) {
             cells.extend(shard.cells);
         }
-        self.shards = build_shards(cells, boundaries, resident);
+        self.shards = build_shards(cells, boundaries);
+        self.adopt_shards();
     }
 
     /// Tear down the pool and finalize one [`RunRecord`] per node (node
@@ -515,25 +578,23 @@ impl ShardedExecutor {
     }
 }
 
-/// Assemble shards from `cells` along contiguous `boundaries`, adopting
-/// the nodes into resident kernels when `resident` (the batched path).
-fn build_shards(cells: Vec<NodeCell>, boundaries: &[usize], resident: bool) -> Vec<Shard> {
+/// Assemble shards from `cells` along contiguous `boundaries`. The shards
+/// come back **unadopted** — `ShardedExecutor::adopt_shards` makes them
+/// resident inside a pool broadcast so each shard's arrays are
+/// first-touched on its owning worker (NUMA placement).
+fn build_shards(cells: Vec<NodeCell>, boundaries: &[usize]) -> Vec<Shard> {
     let mut shards: Vec<Shard> = Vec::with_capacity(boundaries.len().saturating_sub(1));
     let mut iter = cells.into_iter();
     for w in boundaries.windows(2) {
         let (first, end) = (w[0], w[1]);
-        let mut shard = Shard {
+        shards.push(Shard {
             cells: (&mut iter).take(end - first).collect(),
             kernel: ShardKernel::new(),
             first,
             resident: false,
             cost: 0.0,
             all_done: false,
-        };
-        if resident {
-            shard.make_resident();
-        }
-        shards.push(shard);
+        });
     }
     debug_assert!(iter.next().is_none(), "boundaries did not tile the cells");
     shards
@@ -670,6 +731,56 @@ mod tests {
         for (ra, rb) in a.iter().zip(&b) {
             assert_eq!(ra.to_json().dump(), rb.to_json().dump());
         }
+    }
+
+    #[test]
+    fn simd_scalar_and_classic_paths_triangulate_bytes() {
+        // Three-way pin at executor scope: the SIMD resident path, the
+        // scalar resident path and the classic per-struct path must all
+        // produce identical record bytes (a mixed fleet with a hetero
+        // node keeps lane tails and node-boundary lanes in play).
+        let cluster = Cluster::get(ClusterId::Gros);
+        let mut specs = specs(4);
+        specs.push(NodeSpec {
+            cluster: ClusterId::Gros,
+            model: fitted(ClusterId::Gros),
+            policy: NodePolicySpec::Static,
+            hardware: NodeHardware::cpu_gpu(&cluster, DeviceSplitSpec::SlackShift, 0.15),
+        });
+        let seeds: Vec<u64> = (0..5).map(|i| 70 + i).collect();
+        let run = |path: SimPath| {
+            let mut exec = ShardedExecutor::with_path(&specs, 95.0, cfg(), &seeds, 2, path);
+            let mut now = 0.0;
+            for _ in 0..60 {
+                now += 1.0;
+                if exec.tick(now) {
+                    break;
+                }
+            }
+            exec.into_records()
+        };
+        let simd = run(SimPath::Batched);
+        let scalar = run(SimPath::BatchedScalar);
+        let classic = run(SimPath::Classic);
+        for ((rs, rb), rc) in simd.iter().zip(&scalar).zip(&classic) {
+            assert_eq!(rs.to_json().dump(), rb.to_json().dump(), "simd vs scalar");
+            assert_eq!(rs.to_json().dump(), rc.to_json().dump(), "simd vs classic");
+        }
+    }
+
+    #[test]
+    fn pin_status_is_reported_and_harmless() {
+        // Whatever the host supports, construction succeeds, the status
+        // is readable, and ticking works — the fallback contract.
+        let seeds = [1u64, 2];
+        let mut exec = ShardedExecutor::new(&specs(2), 95.0, cfg(), &seeds, 2);
+        match exec.pin_status() {
+            PinStatus::Pinned { sockets, cores } => {
+                assert!(sockets >= 1 && cores >= 1);
+            }
+            PinStatus::Disabled | PinStatus::Unsupported => {}
+        }
+        assert!(!exec.tick(1.0), "two fresh nodes cannot be done after 1 s");
     }
 
     #[test]

@@ -108,8 +108,28 @@ impl Disturbances {
     /// body both the classic per-device loop and the batched kernel run.
     /// `c` must come from [`consts`](Self::consts) with the same `dt`; the
     /// RNG draw sequence is then identical to the unhoisted form.
+    ///
+    /// Composed of the same three phases the kernel's lane path calls
+    /// individually ([`event_phase`](Self::event_phase) → thermal-walk
+    /// apply → [`post_event_state`](Self::post_event_state)), so the split
+    /// and the fused forms are byte-identical by construction; the
+    /// `split_phases_match_fused_step` test pins it.
     pub(crate) fn step_hoisted(&mut self, dt: f64, c: &DistConsts) -> DisturbanceState {
-        // Drop-event lifecycle.
+        let innovation = self.event_phase(dt, c);
+        // Thermal drift: bounded random walk in [0.97, 1.03]. The lane
+        // path runs this exact expression vectorized (add, then clamp).
+        self.thermal = (self.thermal + innovation).clamp(0.97, 1.03);
+        self.post_event_state()
+    }
+
+    /// The branchy half of a sub-step, scalar on both paths: advance the
+    /// drop-event lifecycle (Poisson arrivals, exponential durations) and
+    /// draw the thermal-walk innovation `N(0, σ_thermal)`. Returns the
+    /// innovation for the caller to apply — the vectorized kernel applies
+    /// it lanewise; [`step_hoisted`](Self::step_hoisted) applies it
+    /// inline. Per-device RNG draw order (lifecycle draws, then the
+    /// thermal draw) is identical either way.
+    pub(crate) fn event_phase(&mut self, dt: f64, c: &DistConsts) -> f64 {
         if self.active_left > 0.0 {
             self.active_left -= dt;
         } else if self.drop_rate > 0.0 {
@@ -118,10 +138,23 @@ impl Disturbances {
                 self.active_left = self.rng.exponential(c.exp_rate);
             }
         }
-        // Thermal drift: bounded random walk in [0.97, 1.03].
-        self.thermal += self.rng.gauss(0.0, c.thermal_sigma);
-        self.thermal = self.thermal.clamp(0.97, 1.03);
+        self.rng.gauss(0.0, c.thermal_sigma)
+    }
 
+    /// Current thermal-walk state (for the lane path's gather).
+    pub(crate) fn thermal(&self) -> f64 {
+        self.thermal
+    }
+
+    /// Overwrite the thermal-walk state (the lane path's scatter after the
+    /// vectorized `(thermal + innovation).clamp(0.97, 1.03)` update).
+    pub(crate) fn set_thermal(&mut self, thermal: f64) {
+        self.thermal = thermal;
+    }
+
+    /// The [`DisturbanceState`] after the event and thermal phases of the
+    /// current sub-step — the pure read both paths end a sub-step with.
+    pub(crate) fn post_event_state(&self) -> DisturbanceState {
         let drop_active = self.active_left > 0.0;
         DisturbanceState {
             progress_ceiling: if drop_active {
@@ -209,6 +242,31 @@ mod tests {
         for _ in 0..100_000 {
             let s = d.step(0.1);
             assert!((0.97..=1.03).contains(&s.thermal_factor));
+        }
+    }
+
+    #[test]
+    fn split_phases_match_fused_step() {
+        // The lane path's phase split (event_phase → vector thermal apply
+        // → post_event_state) must reproduce step_hoisted bit for bit —
+        // same draws, same state, same returned snapshot.
+        let c = Cluster::get(ClusterId::Yeti);
+        let mut fused = Disturbances::new(&c, Pcg64::seeded(21));
+        let mut split = Disturbances::new(&c, Pcg64::seeded(21));
+        let dt = 0.05;
+        let consts = fused.consts(dt);
+        for i in 0..20_000 {
+            let a = fused.step_hoisted(dt, &consts);
+            let g = split.event_phase(dt, &consts);
+            let th = (split.thermal() + g).clamp(0.97, 1.03);
+            split.set_thermal(th);
+            let b = split.post_event_state();
+            assert_eq!(a, b, "step {i}");
+            assert_eq!(
+                a.thermal_factor.to_bits(),
+                b.thermal_factor.to_bits(),
+                "step {i}: thermal bits"
+            );
         }
     }
 

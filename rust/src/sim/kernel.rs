@@ -33,23 +33,43 @@
 //!   (scattered) only on demand — classic-oracle mode, shard rebalancing
 //!   migrations, record finalization.
 //!
-//! **Equivalence argument.** There is exactly one sub-step body,
-//! `substep_device`; the classic per-struct path (`Device::substep`) and
-//! the batched path both call it, so they are byte-identical *by
-//! construction*. Hoisting
+//! * **Lane-exact SIMD stepping** ([`run_lanes`](ShardKernel)) — the
+//!   resident sub-step walk processes [`LANES`] device slots per
+//!   iteration with the [`F64x4`] lane type: the OU decay, plant
+//!   smoothing, RAPL window-lag and thermal-walk updates are elementwise
+//!   lane ops over the SoA arrays, while everything branchy or
+//!   transcendental (RNG draws, Poisson/drop lifecycles, the plant's
+//!   `exp`-bearing static curve, heartbeat drain loops) stays on the
+//!   *same scalar code* the classic path runs, as per-slot pre/post
+//!   passes in slot order. Shard tails and unenrolled-node gaps fall
+//!   back to the scalar sub-step body one slot at a time.
+//!
+//! **Equivalence argument.** There is exactly one scalar sub-step body,
+//! `substep_device`; the classic per-struct path (`Device::substep`), the
+//! batched scalar path and every lane-path tail call it, so those are
+//! byte-identical *by construction*. Hoisting
 //! itself cannot change bytes: each hoisted value is the same IEEE-754
 //! expression the unhoisted code evaluated, computed once instead of per
 //! sub-step, and every RNG draw goes through the same distribution
-//! helpers in the same order. Per-device heartbeat sinks and the
+//! helpers in the same order. The lane path adds no arithmetic freedom
+//! either: every lane op is the same scalar `f64` expression applied per
+//! lane (no reassociation, no horizontal reductions, no FMA contraction
+//! — see [`crate::sim::simd`]), devices are mutually independent with
+//! per-device RNG streams (so running phase *k* for four devices before
+//! phase *k+1* reorders work only **across** devices, never within one),
+//! each device's draw order is preserved (lifecycle → thermal → power →
+//! OU → beat draws), and each node's energy accumulation keeps the
+//! classic ascending-slot add order. Per-device heartbeat sinks and the
 //! node-order energy accumulation preserve the classic merge and float
 //! summation orders; the staged sensors replicate
 //! `NodeSim`'s snapshot arithmetic (same single-device special cases,
 //! same left-to-right float sums). Residency adds nothing stochastic:
 //! adopt/release are lossless struct copies, and the resident period
 //! loop is the same sub-step walk over the same arrays. Pinned by
-//! `tests/kernel_equivalence.rs`, `tests/fleet_equivalence.rs`,
+//! `tests/kernel_equivalence.rs` (including SIMD-vs-scalar pins on
+//! non-lane-multiple slot counts), `tests/fleet_equivalence.rs`,
 //! `tests/scheduler_determinism.rs` and `tests/hetero_equivalence.rs`,
-//! plus the `l3_hotpath` kernel-vs-classic case CI refuses to skip.
+//! plus the `l3_hotpath` equivalence cases CI refuses to skip.
 
 use crate::sim::device::{
     Device, BEAT_JITTER_CV, OU_THETA, STRAGGLER_FACTOR, STRAGGLER_PROB,
@@ -58,18 +78,24 @@ use crate::sim::disturbance::{DistConsts, DisturbanceState, Disturbances};
 use crate::sim::node::{substeps, NodeSim, StagedStep, StepSensors};
 use crate::sim::plant::Plant;
 use crate::sim::rapl::{EnergyCounter, RaplPackage};
+use crate::sim::simd::{F64x4, LANES};
 use crate::util::rng::Pcg64;
 
 /// Which simulation stepping path a driver uses.
 ///
-/// The batched kernel is the default everywhere; the classic path is kept
-/// as the equivalence oracle and the baseline the `l3_hotpath` bench
-/// measures the kernel against. The two produce byte-identical records —
+/// The batched kernel is the default everywhere; the other paths are kept
+/// as equivalence oracles and the baselines the `l3_hotpath` bench
+/// measures the kernel against. All paths produce byte-identical records —
 /// the choice only moves wall time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SimPath {
-    /// Shard-major struct-of-arrays kernel stepping (default).
+    /// Shard-major struct-of-arrays kernel stepping with lane-exact SIMD
+    /// sub-steps (default).
     Batched,
+    /// The batched resident kernel restricted to scalar sub-steps — the
+    /// pre-SIMD resident path, kept as the lane-vs-scalar oracle and the
+    /// bench baseline isolating the vectorization win from residency.
+    BatchedScalar,
     /// Classic per-node, per-device struct stepping (oracle/bench mode).
     Classic,
 }
@@ -165,6 +191,27 @@ pub(crate) fn substep_device(
     // Heartbeat emission: rate = max(0, progress + ou).
     let rate = (progress + *ou).max(0.0);
     *backlog += rate * h;
+    drain_beats(now, h, rate, rng, backlog, last_beat, beats_emitted, sink);
+    *last_power = power_reading;
+    power_reading
+}
+
+/// The heartbeat drain loop: emit beats while the backlog holds a whole
+/// one, with per-beat jitter drawn from the device RNG. Factored out of
+/// [`substep_device`] so the lane path's per-slot post-pass runs literally
+/// the same code — beat times, straggler draws and monotonicity clamps
+/// cannot diverge between stepping paths.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn drain_beats(
+    now: f64,
+    h: f64,
+    rate: f64,
+    rng: &mut Pcg64,
+    backlog: &mut f64,
+    last_beat: &mut f64,
+    beats_emitted: &mut u64,
+    sink: &mut Vec<f64>,
+) {
     while *backlog >= 1.0 {
         *backlog -= 1.0;
         // Nominal emission time: interpolate within the sub-step.
@@ -182,8 +229,6 @@ pub(crate) fn substep_device(
         *last_beat = t;
         *beats_emitted += 1;
     }
-    *last_power = power_reading;
-    power_reading
 }
 
 /// The shard-major struct-of-arrays stepping engine.
@@ -239,6 +284,9 @@ pub struct ShardKernel {
     last_power: Vec<f64>,
     beats_emitted: Vec<u64>,
     last_dist: Vec<DisturbanceState>,
+    /// Owning node index per slot — the lane path's map from a slot to its
+    /// node clock and energy counter (a lane may span node boundaries).
+    slot_node: Vec<u32>,
     // ---- per-node arrays (adopt order) ----
     node_first: Vec<DeviceSlot>,
     node_len: Vec<u32>,
@@ -254,6 +302,15 @@ pub struct ShardKernel {
     /// the owning node's scratch buffers every period (pointer swaps, no
     /// copies), so beats land where the staged-consumption path reads.
     sinks: Vec<Vec<f64>>,
+    /// Contiguous slot ranges of the nodes enrolled this invocation —
+    /// rebuilt per `run`, reused capacity (adjacent enrolled nodes merge
+    /// into one range so lanes cross node boundaries).
+    lane_ranges: Vec<(u32, u32)>,
+    /// Restrict `run` to the scalar sub-step body (the
+    /// [`SimPath::BatchedScalar`] oracle mode). Lane and scalar stepping
+    /// are byte-identical; this exists so tests and the `l3_hotpath`
+    /// bench can triangulate SIMD against the pre-SIMD resident path.
+    scalar_only: bool,
 }
 
 impl ShardKernel {
@@ -282,6 +339,13 @@ impl ShardKernel {
         self.rngs.len()
     }
 
+    /// Restrict the sub-step walk to the scalar body — the
+    /// [`SimPath::BatchedScalar`] oracle mode. Byte-identical to lane
+    /// stepping (the equivalence suites pin it); only wall time moves.
+    pub(crate) fn set_scalar_stepping(&mut self, scalar: bool) {
+        self.scalar_only = scalar;
+    }
+
     /// Drop the gathered per-slot/per-node state (keeps capacity and the
     /// memoized consts table).
     fn clear_state(&mut self) {
@@ -296,6 +360,7 @@ impl ShardKernel {
         self.beats_emitted.clear();
         self.last_dist.clear();
         self.nominal.clear();
+        self.slot_node.clear();
         self.node_first.clear();
         self.node_len.clear();
         self.times.clear();
@@ -308,7 +373,9 @@ impl ShardKernel {
     /// `node.devices` slots; consts are handled by the caller).
     fn gather_state(&mut self, node: &NodeSim) {
         let first = DeviceSlot(self.rngs.len() as u32);
+        let j = self.node_first.len() as u32;
         for dev in &node.devices {
+            self.slot_node.push(j);
             self.nominal.push(dev.package.target());
             self.rngs.push(dev.rng.clone());
             self.dists.push(dev.disturbances.clone());
@@ -367,10 +434,23 @@ impl ShardKernel {
     /// cannot change any node's bytes. In resident mode `active` marks
     /// the nodes enrolled in the current period (finished nodes are
     /// skipped in place); non-resident kernels leave `active` empty and
-    /// step every gathered node.
+    /// step every gathered node. Dispatches to the lane-exact SIMD walk
+    /// unless [`set_scalar_stepping`](Self::set_scalar_stepping) forced
+    /// the scalar oracle — both produce identical bytes.
     fn run(&mut self, sinks: &mut [Vec<f64>]) {
         debug_assert_eq!(sinks.len(), self.rngs.len());
         debug_assert_eq!(self.consts.len(), self.rngs.len());
+        debug_assert_eq!(self.slot_node.len(), self.rngs.len());
+        if self.scalar_only {
+            self.run_scalar(sinks);
+        } else {
+            self.run_lanes(sinks);
+        }
+    }
+
+    /// Scalar sub-step walk: node-major, one `substep_device` per slot —
+    /// the pre-SIMD resident path, kept as the lane-vs-scalar oracle.
+    fn run_scalar(&mut self, sinks: &mut [Vec<f64>]) {
         for _ in 0..self.n_sub {
             for j in 0..self.times.len() {
                 if !self.active.is_empty() && !self.active[j] {
@@ -401,6 +481,197 @@ impl ShardKernel {
                     );
                 }
             }
+        }
+    }
+
+    /// Lane-exact SIMD sub-step walk: [`LANES`] slots per iteration over
+    /// the merged slot ranges of the enrolled nodes, with a scalar
+    /// remainder per range. Advances every enrolled node's clock first so
+    /// a lane spanning a node boundary reads each slot's own post-step
+    /// `now`. Byte-identical to [`run_scalar`](Self::run_scalar): see the
+    /// module docs for the argument, `substep_lane` for the phases.
+    fn run_lanes(&mut self, sinks: &mut [Vec<f64>]) {
+        self.build_lane_ranges();
+        for _ in 0..self.n_sub {
+            for j in 0..self.times.len() {
+                if !self.active.is_empty() && !self.active[j] {
+                    continue;
+                }
+                self.times[j] += self.h;
+            }
+            for r in 0..self.lane_ranges.len() {
+                let (start, end) = self.lane_ranges[r];
+                let (mut s, end) = (start as usize, end as usize);
+                while s + LANES <= end {
+                    self.substep_lane(s, sinks);
+                    s += LANES;
+                }
+                while s < end {
+                    self.substep_tail(s, sinks);
+                    s += 1;
+                }
+            }
+        }
+    }
+
+    /// Rebuild the enrolled-slot ranges the lane walk iterates. Adjacent
+    /// enrolled nodes own adjacent slots (adopt order), so their ranges
+    /// merge — lanes cross node boundaries and only enrollment gaps force
+    /// a scalar remainder. Non-resident kernels (empty `active`) step
+    /// every gathered slot as one range.
+    fn build_lane_ranges(&mut self) {
+        self.lane_ranges.clear();
+        if self.active.is_empty() {
+            let n = self.rngs.len() as u32;
+            if n > 0 {
+                self.lane_ranges.push((0, n));
+            }
+            return;
+        }
+        for j in 0..self.active.len() {
+            if !self.active[j] {
+                continue;
+            }
+            let first = self.node_first[j].0;
+            let end = first + self.node_len[j];
+            match self.lane_ranges.last_mut() {
+                Some(last) if last.1 == first => last.1 = end,
+                _ => self.lane_ranges.push((first, end)),
+            }
+        }
+    }
+
+    /// One scalar sub-step for slot `s` — the lane walk's remainder path,
+    /// running the shared [`substep_device`] body verbatim.
+    fn substep_tail(&mut self, s: usize, sinks: &mut [Vec<f64>]) {
+        let j = self.slot_node[s] as usize;
+        substep_device(
+            &self.consts[s],
+            self.nominal[s],
+            self.times[j],
+            &mut self.rngs[s],
+            &mut self.dists[s],
+            &mut self.packages[s],
+            &mut self.plants[s],
+            &mut self.ou[s],
+            &mut self.backlog[s],
+            &mut self.last_beat[s],
+            &mut self.beats_emitted[s],
+            &mut self.last_power[s],
+            &mut self.last_dist[s],
+            &mut sinks[s],
+            &mut self.energies[j],
+        );
+    }
+
+    /// One sub-step for the [`LANES`] slots starting at `s0`, phase-split:
+    /// branchy/transcendental work runs the classic scalar code per slot
+    /// in slot order, the polynomial state updates run lanewise. Every
+    /// lane op applies the exact scalar expression of [`substep_device`]
+    /// per lane, every RNG draw goes through the same distribution helper,
+    /// and each device's draw order is preserved (lifecycle → thermal on
+    /// the disturbance RNG; power noise → OU innovation → beat jitter on
+    /// the device RNG) — phases reorder work across mutually independent
+    /// devices only, so the bytes cannot move.
+    fn substep_lane(&mut self, s0: usize, sinks: &mut [Vec<f64>]) {
+        let h = self.h;
+        // Phase 1 — disturbances. Scalar: drop-event lifecycle + thermal
+        // innovation draw. Lanewise: the bounded thermal walk
+        // `(thermal + g).clamp(0.97, 1.03)`. Scalar: post-event snapshot.
+        let mut therm_g = [0.0; LANES];
+        let mut thermal = [0.0; LANES];
+        for i in 0..LANES {
+            let s = s0 + i;
+            let dc = self.consts[s].dist;
+            therm_g[i] = self.dists[s].event_phase(h, &dc);
+            thermal[i] = self.dists[s].thermal();
+        }
+        let thermal_v = (F64x4(thermal) + F64x4(therm_g)).clamp(0.97, 1.03);
+        let mut drop = [false; LANES];
+        for i in 0..LANES {
+            let s = s0 + i;
+            self.dists[s].set_thermal(thermal_v.0[i]);
+            let st = self.dists[s].post_event_state();
+            drop[i] = st.drop_active;
+            self.last_dist[s] = st;
+        }
+        // Phase 2 — RAPL actuator. Lanewise: degraded-target select and
+        // the window lag `power += alpha·(target − power)`. Scalar: the
+        // sensor-noise draw (same `gauss` call as the scalar body).
+        let mut power = [0.0; LANES];
+        let mut alpha = [0.0; LANES];
+        let mut nominal = [0.0; LANES];
+        for i in 0..LANES {
+            let s = s0 + i;
+            power[i] = self.packages[s].true_power();
+            alpha[i] = self.consts[s].rapl_alpha;
+            nominal[i] = self.nominal[s];
+        }
+        let nominal_v = F64x4(nominal);
+        let target = F64x4::select(drop, nominal_v * F64x4::splat(0.55), nominal_v);
+        let power_v = F64x4(power) + F64x4(alpha) * (target - F64x4(power));
+        let mut noise = [0.0; LANES];
+        for i in 0..LANES {
+            let s = s0 + i;
+            self.packages[s].set_power_raw(power_v.0[i]);
+            noise[i] = self.rngs[s].gauss(0.0, self.consts[s].power_noise);
+        }
+        let reading = power_v + F64x4(noise);
+        // Phase 3 — energy integration, ascending slot order: a node's
+        // slots are contiguous, so its counter sees the classic add order.
+        for i in 0..LANES {
+            let s = s0 + i;
+            let j = self.slot_node[s] as usize;
+            self.energies[j].accumulate(power_v.0[i] * self.consts[s].packages, h);
+        }
+        // Phase 4 — plant. Scalar: the exp-bearing static target (profile
+        // branch included). Lanewise: the Eq. (3) smoothing
+        // `a·progress + (1 − a)·target`.
+        let mut tgt = [0.0; LANES];
+        let mut a = [0.0; LANES];
+        let mut prog = [0.0; LANES];
+        for i in 0..LANES {
+            let s = s0 + i;
+            tgt[i] = self.plants[s].target_hoisted(power_v.0[i], &self.last_dist[s]);
+            a[i] = self.consts[s].plant_a;
+            prog[i] = self.plants[s].progress();
+        }
+        let a_v = F64x4(a);
+        let prog_v = a_v * F64x4(prog) + (F64x4::splat(1.0) - a_v) * F64x4(tgt);
+        for i in 0..LANES {
+            self.plants[s0 + i].set_progress_raw(prog_v.0[i]);
+        }
+        // Phase 5 — OU noise. Scalar: the innovation draw. Lanewise: the
+        // exact-discretization decay `ou·e^{−h/θ} + g`.
+        let mut ou_g = [0.0; LANES];
+        let mut decay = [0.0; LANES];
+        for i in 0..LANES {
+            let s = s0 + i;
+            ou_g[i] = self.rngs[s].gauss(0.0, self.consts[s].ou_sigma);
+            decay[i] = self.consts[s].ou_decay;
+        }
+        let ou_v = F64x4::from_slice(&self.ou[s0..s0 + LANES]) * F64x4(decay) + F64x4(ou_g);
+        ou_v.write_to(&mut self.ou[s0..s0 + LANES]);
+        // Phase 6 — heartbeats. Lanewise: rate clamp and backlog
+        // accumulation. Scalar: the branchy drain loop, via the shared
+        // `drain_beats` body, against each slot's own node clock.
+        let rate = (prog_v + ou_v).max_scalar(0.0);
+        let backlog_v = F64x4::from_slice(&self.backlog[s0..s0 + LANES]) + rate * F64x4::splat(h);
+        backlog_v.write_to(&mut self.backlog[s0..s0 + LANES]);
+        for i in 0..LANES {
+            let s = s0 + i;
+            let now = self.times[self.slot_node[s] as usize];
+            drain_beats(
+                now,
+                h,
+                rate.0[i],
+                &mut self.rngs[s],
+                &mut self.backlog[s],
+                &mut self.last_beat[s],
+                &mut self.beats_emitted[s],
+                &mut sinks[s],
+            );
+            self.last_power[s] = reading.0[i];
         }
     }
 
@@ -460,6 +731,12 @@ impl ShardKernel {
         }
         self.consts_h.push(f64::NAN);
         self.active.push(false);
+        // Worst-case enrollment fragmentation is every other node active:
+        // ⌈nodes/2⌉ ranges. Reserving here keeps the steady-state lane
+        // walk allocation-free however nodes finish (the `l3_hotpath`
+        // counting-allocator checks cover it).
+        self.lane_ranges.clear();
+        self.lane_ranges.reserve(self.node_first.len() / 2 + 1);
         node.resident = true;
         j
     }
@@ -851,4 +1128,124 @@ mod tests {
         assert_eq!(yeti.energy(), ref_yeti.energy());
     }
 
+    #[test]
+    fn lane_step_node_matches_classic_on_wide_node() {
+        // A node with more devices than the lane width pushes step_node
+        // through full lane iterations plus a scalar tail (5 = LANES + 1);
+        // classic per-struct stepping is the oracle.
+        let cluster = Cluster::get(ClusterId::Dahu);
+        let specs = [
+            DeviceSpec::cpu(&cluster),
+            DeviceSpec::gpu(),
+            DeviceSpec::gpu(),
+            DeviceSpec::cpu(&cluster),
+            DeviceSpec::gpu(),
+        ];
+        assert!(specs.len() > LANES);
+        let mut a = NodeSim::hetero(cluster.clone(), &specs, 23);
+        let mut b = NodeSim::hetero(cluster.clone(), &specs, 23);
+        b.set_classic_stepping(true);
+        let mut sa = vec![Vec::new(); specs.len()];
+        let mut sb = vec![Vec::new(); specs.len()];
+        for p in 0..40 {
+            for s in sa.iter_mut().chain(sb.iter_mut()) {
+                s.clear();
+            }
+            let ra = a.step_devices_into(1.0, &mut sa);
+            let rb = b.step_devices_into(1.0, &mut sb);
+            assert_eq!(ra.power, rb.power, "period {p}");
+            assert_eq!(ra.energy, rb.energy, "period {p}");
+            assert_eq!(ra.true_progress, rb.true_progress, "period {p}");
+            assert_eq!(sa, sb, "period {p}");
+        }
+        assert_eq!(a.beats(), b.beats());
+    }
+
+    #[test]
+    fn lane_stepping_matches_scalar_kernel_across_node_boundaries() {
+        // Two resident kernels over identical fleets, one forced to the
+        // scalar oracle: 1+2+3+5 = 11 slots, so lanes span node boundaries
+        // and every run ends in a non-lane-multiple tail. Periodically
+        // un-enrolling a middle node fragments the lane ranges, exercising
+        // the range merge and the per-range remainders.
+        let gros = Cluster::get(ClusterId::Gros);
+        let yeti = Cluster::get(ClusterId::Yeti);
+        let build = || {
+            vec![
+                NodeSim::new(gros.clone(), 1),
+                NodeSim::hetero(
+                    yeti.clone(),
+                    &[DeviceSpec::cpu(&yeti), DeviceSpec::gpu()],
+                    2,
+                ),
+                NodeSim::hetero(
+                    gros.clone(),
+                    &[DeviceSpec::cpu(&gros), DeviceSpec::gpu(), DeviceSpec::gpu()],
+                    3,
+                ),
+                NodeSim::hetero(
+                    yeti.clone(),
+                    &[
+                        DeviceSpec::cpu(&yeti),
+                        DeviceSpec::gpu(),
+                        DeviceSpec::gpu(),
+                        DeviceSpec::gpu(),
+                        DeviceSpec::gpu(),
+                    ],
+                    4,
+                ),
+            ]
+        };
+        let mut lane_nodes = build();
+        let mut scal_nodes = build();
+        let mut kl = ShardKernel::new();
+        let mut ks = ShardKernel::new();
+        ks.set_scalar_stepping(true);
+        for n in lane_nodes.iter_mut() {
+            kl.adopt(n);
+        }
+        for n in scal_nodes.iter_mut() {
+            ks.adopt(n);
+        }
+        let (mut ba, mut bb) = (Vec::new(), Vec::new());
+        for p in 0..30 {
+            kl.period_begin(1.0);
+            ks.period_begin(1.0);
+            let skip = |j: usize| p % 3 == 1 && j == 2;
+            for j in 0..lane_nodes.len() {
+                if skip(j) {
+                    continue;
+                }
+                kl.period_add(j, &mut lane_nodes[j], 1.0);
+                ks.period_add(j, &mut scal_nodes[j], 1.0);
+            }
+            kl.period_run();
+            ks.period_run();
+            for j in 0..lane_nodes.len() {
+                if skip(j) {
+                    continue;
+                }
+                kl.period_finish(j, &mut lane_nodes[j]);
+                ks.period_finish(j, &mut scal_nodes[j]);
+                ba.clear();
+                bb.clear();
+                let ra = lane_nodes[j].step_into(1.0, &mut ba);
+                let rb = scal_nodes[j].step_into(1.0, &mut bb);
+                assert_eq!(ra.power, rb.power, "period {p} node {j}");
+                assert_eq!(ra.energy, rb.energy, "period {p} node {j}");
+                assert_eq!(ra.time, rb.time, "period {p} node {j}");
+                assert_eq!(
+                    ra.true_progress, rb.true_progress,
+                    "period {p} node {j}"
+                );
+                assert_eq!(ba, bb, "period {p} node {j}");
+            }
+        }
+        for j in 0..lane_nodes.len() {
+            kl.release(j, &mut lane_nodes[j]);
+            ks.release(j, &mut scal_nodes[j]);
+            assert_eq!(lane_nodes[j].energy(), scal_nodes[j].energy(), "node {j}");
+            assert_eq!(lane_nodes[j].beats(), scal_nodes[j].beats(), "node {j}");
+        }
+    }
 }

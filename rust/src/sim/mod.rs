@@ -19,6 +19,9 @@
 //! * [`kernel`] — the batched shard-major struct-of-arrays stepping engine
 //!   with hoisted sub-step invariants (the hot path behind `node` and the
 //!   fleet executor; byte-identical to the classic per-device loop),
+//! * [`simd`] — the fixed-width `f64x4` lane type the kernel's vectorized
+//!   stepping path is built on (lane-exact: every op is bit-identical to
+//!   its four scalar applications),
 //! * [`clock`] — the virtual experiment clock.
 //!
 //! **Honesty rule**: ground-truth parameters never leak outside `sim::`;
@@ -33,6 +36,7 @@ pub mod kernel;
 pub mod node;
 pub mod plant;
 pub mod rapl;
+pub mod simd;
 
 pub use clock::VirtualClock;
 pub use cluster::{Cluster, ClusterId};

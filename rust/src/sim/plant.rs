@@ -116,13 +116,30 @@ impl Plant {
     /// one body both the classic per-device loop and the batched kernel
     /// run. `a` must come from [`smoothing`](Self::smoothing).
     pub(crate) fn step_hoisted(&mut self, a: f64, power: f64, dist: &DisturbanceState) -> f64 {
-        let target = self
-            .steady_state(power, dist.thermal_factor)
-            .min(dist.progress_ceiling);
+        let target = self.target_hoisted(power, dist);
         // Exact discretization of dx/dt = (target - x)/τ over dt — matches
         // the paper's Eq. (3) ZOH form for constant input.
         self.progress = a * self.progress + (1.0 - a) * target;
         self.progress
+    }
+
+    /// The Eq. (3) tracking target for one sub-step: the static
+    /// characteristic under the thermal factor, clipped by an active drop
+    /// event's ceiling. Shared by [`step_hoisted`](Self::step_hoisted) and
+    /// the vectorized kernel's scalar pre-pass (the `exp` and the profile
+    /// branch stay scalar on both paths; only the smoothing update below
+    /// is lanewise).
+    pub(crate) fn target_hoisted(&self, power: f64, dist: &DisturbanceState) -> f64 {
+        self.steady_state(power, dist.thermal_factor)
+            .min(dist.progress_ceiling)
+    }
+
+    /// Overwrite the progress state — the vectorized kernel's scatter
+    /// after it runs the smoothing update `a·progress + (1−a)·target`
+    /// lanewise. The value written must be exactly that expression's
+    /// result for the state to stay byte-identical to scalar stepping.
+    pub(crate) fn set_progress_raw(&mut self, progress: f64) {
+        self.progress = progress;
     }
 
     /// Current (noise-free) progress [Hz].

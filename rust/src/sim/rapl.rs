@@ -110,6 +110,16 @@ impl RaplPackage {
     pub fn true_power(&self) -> f64 {
         self.power
     }
+
+    /// Overwrite the delivered-power state — the vectorized kernel's
+    /// scatter after it runs the [`step_hoisted`](Self::step_hoisted)
+    /// window update `power += alpha · (target − power)` lanewise. The
+    /// value written must be exactly that expression's result; sensor
+    /// noise stays out of it (it belongs to the returned reading, never
+    /// the state).
+    pub(crate) fn set_power_raw(&mut self, power: f64) {
+        self.power = power;
+    }
 }
 
 /// Node-level energy counter: integrates true power like the RAPL

@@ -1,0 +1,311 @@
+//! Fixed-width SIMD lanes for the batched simulation kernel.
+//!
+//! [`F64x4`] is a minimal `f64x4`-style value type over `[f64; 4]` — no
+//! external crates, no nightly intrinsics. The point is **not** to hand
+//! the backend explicit vector instructions but to shape the kernel's
+//! sub-step arithmetic as short, fixed-width elementwise loops over
+//! contiguous struct-of-arrays state that LLVM auto-vectorizes, while
+//! keeping a contract the rest of the crate can rely on:
+//!
+//! **Lane-exactness.** Every operation applies the *same scalar `f64`
+//! expression* to each lane independently, in lane order: elementwise
+//! add/sub/mul, per-lane [`f64::min`]/[`f64::max`]/[`f64::clamp`],
+//! per-lane select. There are no horizontal reductions, no
+//! reassociation, and no fused multiply-add — `a * b + c` is written as a
+//! separate multiply and add, which rustc does not contract to FMA — so a
+//! lane computation is IEEE-754 bit-identical to the four scalar
+//! computations it replaces. That is what lets the vectorized kernel path
+//! ([`sim::kernel`](crate::sim::kernel)) pin its `RunRecord` bytes
+//! against the classic per-device scalar oracle
+//! (`tests/kernel_equivalence.rs`), with division of labor:
+//!
+//! * **lane ops** (this module): OU decay, plant smoothing, RAPL window
+//!   lag, thermal walk — branch-free polynomial updates;
+//! * **scalar pre/post passes** (kernel): RNG draws, Poisson/drop-event
+//!   lifecycles, `exp`-bearing plant statics, heartbeat drain loops —
+//!   anything branchy or transcendental stays on the per-device scalar
+//!   code the classic path runs, in the same per-device order.
+//!
+//! The per-lane suite in this module's tests asserts each op bitwise
+//! equals its four scalar applications, including signed zeros, infinities
+//! and NaN payload propagation where the scalar op preserves them.
+
+use std::ops::{Add, Mul, Sub};
+
+/// Number of `f64` lanes per vector — the kernel's stepping width.
+pub const LANES: usize = 4;
+
+/// Four `f64` lanes, operated on elementwise.
+///
+/// The inner array is public so the kernel can gather into / scatter out
+/// of struct-of-arrays state without accessor ceremony; all arithmetic on
+/// whole vectors should go through the lane ops so the lane-exactness
+/// contract (module docs) stays auditable in one place.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct F64x4(pub [f64; 4]);
+
+impl F64x4 {
+    /// All four lanes set to `x`.
+    #[inline]
+    pub fn splat(x: f64) -> Self {
+        F64x4([x; 4])
+    }
+
+    /// Load four lanes from `xs[0..4]` (panics when shorter).
+    #[inline]
+    pub fn from_slice(xs: &[f64]) -> Self {
+        F64x4([xs[0], xs[1], xs[2], xs[3]])
+    }
+
+    /// Store the four lanes into `out[0..4]` (panics when shorter).
+    #[inline]
+    pub fn write_to(self, out: &mut [f64]) {
+        out[..4].copy_from_slice(&self.0);
+    }
+
+    /// Per-lane [`f64::min`] (IEEE minNum semantics: a single NaN lane
+    /// yields the other operand, exactly as the scalar call does).
+    #[inline]
+    pub fn min(self, other: Self) -> Self {
+        let (a, b) = (self.0, other.0);
+        F64x4([
+            a[0].min(b[0]),
+            a[1].min(b[1]),
+            a[2].min(b[2]),
+            a[3].min(b[3]),
+        ])
+    }
+
+    /// Per-lane [`f64::max`].
+    #[inline]
+    pub fn max(self, other: Self) -> Self {
+        let (a, b) = (self.0, other.0);
+        F64x4([
+            a[0].max(b[0]),
+            a[1].max(b[1]),
+            a[2].max(b[2]),
+            a[3].max(b[3]),
+        ])
+    }
+
+    /// Per-lane `f64::max` against a scalar — `x.max(s)` in every lane.
+    #[inline]
+    pub fn max_scalar(self, s: f64) -> Self {
+        let a = self.0;
+        F64x4([a[0].max(s), a[1].max(s), a[2].max(s), a[3].max(s)])
+    }
+
+    /// Per-lane [`f64::clamp`] into `[lo, hi]` (same panic condition as
+    /// the scalar method: `lo > hi` or NaN bounds).
+    #[inline]
+    pub fn clamp(self, lo: f64, hi: f64) -> Self {
+        let a = self.0;
+        F64x4([
+            a[0].clamp(lo, hi),
+            a[1].clamp(lo, hi),
+            a[2].clamp(lo, hi),
+            a[3].clamp(lo, hi),
+        ])
+    }
+
+    /// Per-lane select: lane `i` is `if_true.0[i]` where `mask[i]`, else
+    /// `if_false.0[i]`. Both inputs are fully evaluated (branch-free data
+    /// selection) — callers must ensure the unselected value is safe to
+    /// compute, which for the kernel's pure arithmetic it always is.
+    #[inline]
+    pub fn select(mask: [bool; 4], if_true: Self, if_false: Self) -> Self {
+        let (t, f) = (if_true.0, if_false.0);
+        F64x4([
+            if mask[0] { t[0] } else { f[0] },
+            if mask[1] { t[1] } else { f[1] },
+            if mask[2] { t[2] } else { f[2] },
+            if mask[3] { t[3] } else { f[3] },
+        ])
+    }
+}
+
+impl Add for F64x4 {
+    type Output = F64x4;
+    #[inline]
+    fn add(self, rhs: Self) -> Self {
+        let (a, b) = (self.0, rhs.0);
+        F64x4([a[0] + b[0], a[1] + b[1], a[2] + b[2], a[3] + b[3]])
+    }
+}
+
+impl Sub for F64x4 {
+    type Output = F64x4;
+    #[inline]
+    fn sub(self, rhs: Self) -> Self {
+        let (a, b) = (self.0, rhs.0);
+        F64x4([a[0] - b[0], a[1] - b[1], a[2] - b[2], a[3] - b[3]])
+    }
+}
+
+impl Mul for F64x4 {
+    type Output = F64x4;
+    #[inline]
+    fn mul(self, rhs: Self) -> Self {
+        let (a, b) = (self.0, rhs.0);
+        F64x4([a[0] * b[0], a[1] * b[1], a[2] * b[2], a[3] * b[3]])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Awkward values: signed zeros, subnormals, infinities, NaN, and a
+    /// spread of ordinary magnitudes — bitwise equality below catches any
+    /// lane op that is not the literal scalar op.
+    const AWKWARD: [f64; 12] = [
+        0.0,
+        -0.0,
+        1.0,
+        -1.0,
+        1.5e-308,
+        -2.2250738585072014e-308,
+        1e300,
+        -1e300,
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        f64::NAN,
+        std::f64::consts::PI,
+    ];
+
+    fn lanes_of(i: usize) -> ([f64; 4], [f64; 4]) {
+        let n = AWKWARD.len();
+        let a = [
+            AWKWARD[i % n],
+            AWKWARD[(i + 1) % n],
+            AWKWARD[(i + 5) % n],
+            AWKWARD[(i + 7) % n],
+        ];
+        let b = [
+            AWKWARD[(i + 3) % n],
+            AWKWARD[(i + 4) % n],
+            AWKWARD[(i + 8) % n],
+            AWKWARD[(i + 11) % n],
+        ];
+        (a, b)
+    }
+
+    fn assert_bits_eq(got: [f64; 4], want: [f64; 4], op: &str) {
+        for l in 0..4 {
+            assert_eq!(
+                got[l].to_bits(),
+                want[l].to_bits(),
+                "{op} lane {l}: {} != {}",
+                got[l],
+                want[l]
+            );
+        }
+    }
+
+    #[test]
+    fn add_sub_mul_bitwise_equal_scalar() {
+        for i in 0..AWKWARD.len() {
+            let (a, b) = lanes_of(i);
+            let (va, vb) = (F64x4(a), F64x4(b));
+            assert_bits_eq(
+                (va + vb).0,
+                [a[0] + b[0], a[1] + b[1], a[2] + b[2], a[3] + b[3]],
+                "add",
+            );
+            assert_bits_eq(
+                (va - vb).0,
+                [a[0] - b[0], a[1] - b[1], a[2] - b[2], a[3] - b[3]],
+                "sub",
+            );
+            assert_bits_eq(
+                (va * vb).0,
+                [a[0] * b[0], a[1] * b[1], a[2] * b[2], a[3] * b[3]],
+                "mul",
+            );
+        }
+    }
+
+    #[test]
+    fn min_max_clamp_bitwise_equal_scalar() {
+        for i in 0..AWKWARD.len() {
+            let (a, b) = lanes_of(i);
+            let (va, vb) = (F64x4(a), F64x4(b));
+            assert_bits_eq(
+                va.min(vb).0,
+                [a[0].min(b[0]), a[1].min(b[1]), a[2].min(b[2]), a[3].min(b[3])],
+                "min",
+            );
+            assert_bits_eq(
+                va.max(vb).0,
+                [a[0].max(b[0]), a[1].max(b[1]), a[2].max(b[2]), a[3].max(b[3])],
+                "max",
+            );
+            assert_bits_eq(
+                va.max_scalar(0.0).0,
+                [a[0].max(0.0), a[1].max(0.0), a[2].max(0.0), a[3].max(0.0)],
+                "max_scalar",
+            );
+            assert_bits_eq(
+                va.clamp(0.97, 1.03).0,
+                [
+                    a[0].clamp(0.97, 1.03),
+                    a[1].clamp(0.97, 1.03),
+                    a[2].clamp(0.97, 1.03),
+                    a[3].clamp(0.97, 1.03),
+                ],
+                "clamp",
+            );
+        }
+    }
+
+    #[test]
+    fn no_fma_contraction() {
+        // The kernel's `a*b + c` updates must round twice (mul, then add)
+        // exactly like the scalar source. A value pair where fma and
+        // mul-then-add differ: fma(x, y, z) keeps the low product bits.
+        let x = 1.0 + f64::EPSILON;
+        let y = 1.0 + f64::EPSILON;
+        let z = -1.0;
+        let two_step = x * y + z; // rounds the product first
+        let fused = x.mul_add(y, z);
+        assert_ne!(two_step.to_bits(), fused.to_bits(), "test premise");
+        let v = F64x4::splat(x) * F64x4::splat(y) + F64x4::splat(z);
+        for l in 0..4 {
+            assert_eq!(v.0[l].to_bits(), two_step.to_bits(), "lane {l} fused");
+        }
+    }
+
+    #[test]
+    fn select_is_per_lane() {
+        let t = F64x4([1.0, 2.0, 3.0, 4.0]);
+        let f = F64x4([-1.0, -2.0, -3.0, -4.0]);
+        let got = F64x4::select([true, false, true, false], t, f);
+        assert_eq!(got.0, [1.0, -2.0, 3.0, -4.0]);
+        assert_eq!(F64x4::select([false; 4], t, f).0, f.0);
+        assert_eq!(F64x4::select([true; 4], t, f).0, t.0);
+    }
+
+    #[test]
+    fn splat_load_store_roundtrip() {
+        assert_eq!(F64x4::splat(2.5).0, [2.5; 4]);
+        let xs = [9.0, 8.0, 7.0, 6.0, 5.0];
+        let v = F64x4::from_slice(&xs);
+        assert_eq!(v.0, [9.0, 8.0, 7.0, 6.0]);
+        let mut out = [0.0; 4];
+        v.write_to(&mut out);
+        assert_eq!(out, [9.0, 8.0, 7.0, 6.0]);
+        assert_eq!(LANES, 4);
+    }
+
+    #[test]
+    fn nan_payload_propagates_through_arithmetic() {
+        // Elementwise ops forward the scalar op's NaN behaviour; min/max
+        // follow f64::min/max (non-NaN operand wins).
+        let v = F64x4([f64::NAN, 1.0, f64::NAN, 2.0]) + F64x4::splat(1.0);
+        assert!(v.0[0].is_nan() && v.0[2].is_nan());
+        assert_eq!(v.0[1], 2.0);
+        let m = F64x4([f64::NAN, 5.0, 0.0, f64::NAN]).min(F64x4::splat(3.0));
+        assert_eq!(m.0[1], 3.0);
+        assert_eq!(m.0[0], 3.0, "f64::min(NaN, x) == x");
+    }
+}

@@ -19,6 +19,19 @@
 //! Determinism rule: parallelism must never change bytes, only wall time.
 //! Both primitives uphold it structurally — workers touch disjoint state
 //! claimed through an atomic index, so results cannot depend on scheduling.
+//!
+//! **NUMA-aware placement.** On multi-socket hosts a worker that migrates
+//! sockets mid-campaign pays remote-DRAM latency on every shard array it
+//! owns. [`WorkerPool::new`] therefore pins worker `w` to a core chosen
+//! round-robin **across sockets** (sysfs topology, direct
+//! `sched_setaffinity` syscalls — no libc in the vendored set), so
+//! co-resident shards spread over memory controllers and first-touch
+//! allocations (the executor adopts each shard's arrays *on its owning
+//! worker*) stay local. Placement is best-effort by design: the pool
+//! probes affinity support once at construction and otherwise runs
+//! unpinned — never a panic — and `POWERCTL_NO_PIN=1` force-disables it.
+//! [`WorkerPool::pin_status`] reports what happened; pinning can only
+//! move wall time, never bytes.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -29,6 +42,231 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1)
+}
+
+/// Direct `sched_{set,get}affinity` syscalls — the vendored crate set has
+/// no libc, so the Linux entry points are invoked with inline asm. Only
+/// compiled on (Linux, x86_64|aarch64); everywhere else the sibling
+/// fallback module reports "unsupported" and pins nothing.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod affinity {
+    /// `cpu_set_t` sized for 1024 CPUs (16 × u64), the kernel default.
+    const MASK_WORDS: usize = 16;
+
+    #[cfg(target_arch = "x86_64")]
+    const SYS_SETAFFINITY: usize = 203;
+    #[cfg(target_arch = "x86_64")]
+    const SYS_GETAFFINITY: usize = 204;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_SETAFFINITY: usize = 122;
+    #[cfg(target_arch = "aarch64")]
+    const SYS_GETAFFINITY: usize = 123;
+
+    /// Three-argument raw syscall: returns the kernel's raw result
+    /// (negative errno on failure).
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn syscall3(nr: usize, a1: usize, a2: usize, a3: usize) -> isize {
+        let ret: isize;
+        // SAFETY: `syscall` with the Linux x86_64 ABI — arguments in
+        // rdi/rsi/rdx, number in rax, rcx/r11 clobbered by the kernel.
+        // The callers pass either value arguments or pointers to live
+        // stack buffers of the advertised length.
+        unsafe {
+            core::arch::asm!(
+                "syscall",
+                inlateout("rax") nr as isize => ret,
+                in("rdi") a1,
+                in("rsi") a2,
+                in("rdx") a3,
+                lateout("rcx") _,
+                lateout("r11") _,
+                options(nostack),
+            );
+        }
+        ret
+    }
+
+    /// Three-argument raw syscall (aarch64 `svc 0` ABI).
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn syscall3(nr: usize, a1: usize, a2: usize, a3: usize) -> isize {
+        let ret: isize;
+        // SAFETY: `svc 0` with the Linux aarch64 ABI — arguments in
+        // x0..x2, number in x8, result in x0. Same pointer-validity
+        // contract as the x86_64 twin.
+        unsafe {
+            core::arch::asm!(
+                "svc 0",
+                in("x8") nr,
+                inlateout("x0") a1 as isize => ret,
+                in("x1") a2,
+                in("x2") a3,
+                options(nostack),
+            );
+        }
+        ret
+    }
+
+    /// Whether affinity syscalls work here, probed **read-only** with
+    /// `sched_getaffinity` on the calling thread (pid 0). Sandboxes and
+    /// seccomp profiles that filter the syscalls fail this probe, and the
+    /// pool then never attempts a set.
+    pub(super) fn supported() -> bool {
+        let mut mask = [0u64; MASK_WORDS];
+        let r = unsafe {
+            syscall3(
+                SYS_GETAFFINITY,
+                0,
+                std::mem::size_of_val(&mask),
+                mask.as_mut_ptr() as usize,
+            )
+        };
+        r > 0
+    }
+
+    /// Pin the calling thread to `core`; `false` on any failure (the
+    /// caller degrades to unpinned, never panics).
+    pub(super) fn pin_current_thread(core: usize) -> bool {
+        if core >= MASK_WORDS * 64 {
+            return false;
+        }
+        let mut mask = [0u64; MASK_WORDS];
+        mask[core / 64] = 1u64 << (core % 64);
+        let r = unsafe {
+            syscall3(
+                SYS_SETAFFINITY,
+                0,
+                std::mem::size_of_val(&mask),
+                mask.as_ptr() as usize,
+            )
+        };
+        r == 0
+    }
+}
+
+/// Portability fallback: affinity control is a Linux-only optimization;
+/// everywhere else workers run wherever the scheduler puts them.
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+mod affinity {
+    pub(super) fn supported() -> bool {
+        false
+    }
+
+    pub(super) fn pin_current_thread(_core: usize) -> bool {
+        false
+    }
+}
+
+/// How a [`WorkerPool`] placed its workers on CPUs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PinStatus {
+    /// Workers are pinned to cores chosen round-robin across sockets.
+    Pinned {
+        /// CPU sockets (NUMA domains) the pin cycle interleaves.
+        sockets: usize,
+        /// Distinct cores in the pin cycle.
+        cores: usize,
+    },
+    /// Pinning force-disabled via `POWERCTL_NO_PIN=1`.
+    Disabled,
+    /// Affinity syscalls unavailable (non-Linux target, or a sandbox that
+    /// filters them) — workers run unpinned.
+    Unsupported,
+}
+
+/// The placement decision a pool makes once at construction: a status for
+/// reporting plus the socket-interleaved core cycle worker `w` pins into
+/// (`cores[w % len]`).
+struct PinPlan {
+    status: PinStatus,
+    cores: Vec<usize>,
+}
+
+impl PinPlan {
+    /// Probe the environment and build the plan (escape hatch, syscall
+    /// probe, sysfs topology) — called once per pool.
+    fn detect() -> Self {
+        let disabled = std::env::var_os("POWERCTL_NO_PIN").is_some_and(|v| v == "1");
+        PinPlan::detect_inner(disabled, affinity::supported())
+    }
+
+    /// [`detect`](Self::detect) with the environment probes injected —
+    /// testable without mutating process env or depending on host
+    /// affinity support.
+    fn detect_inner(disabled: bool, supported: bool) -> Self {
+        if disabled {
+            return PinPlan {
+                status: PinStatus::Disabled,
+                cores: Vec::new(),
+            };
+        }
+        if !supported {
+            return PinPlan {
+                status: PinStatus::Unsupported,
+                cores: Vec::new(),
+            };
+        }
+        let sockets = socket_topology();
+        let cores = interleave_sockets(&sockets);
+        if cores.is_empty() {
+            return PinPlan {
+                status: PinStatus::Unsupported,
+                cores: Vec::new(),
+            };
+        }
+        PinPlan {
+            status: PinStatus::Pinned {
+                sockets: sockets.len(),
+                cores: cores.len(),
+            },
+            cores,
+        }
+    }
+
+    /// Core for worker `w`, cycling through the interleaved plan.
+    fn core_for(&self, w: usize) -> Option<usize> {
+        if self.cores.is_empty() {
+            None
+        } else {
+            Some(self.cores[w % self.cores.len()])
+        }
+    }
+}
+
+/// Cores grouped by socket (sysfs `physical_package_id`), sockets in
+/// first-seen order. CPUs whose topology file is unreadable fall into an
+/// implicit package 0, so hosts without the sysfs tree degrade to one
+/// socket — round-robin then just spreads workers over cores.
+fn socket_topology() -> Vec<Vec<usize>> {
+    let mut sockets: Vec<(i64, Vec<usize>)> = Vec::new();
+    for cpu in 0..default_threads() {
+        let path = format!("/sys/devices/system/cpu/cpu{cpu}/topology/physical_package_id");
+        let pkg = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|s| s.trim().parse::<i64>().ok())
+            .unwrap_or(0);
+        match sockets.iter_mut().find(|(id, _)| *id == pkg) {
+            Some((_, cores)) => cores.push(cpu),
+            None => sockets.push((pkg, vec![cpu])),
+        }
+    }
+    sockets.into_iter().map(|(_, cores)| cores).collect()
+}
+
+/// Round-robin interleave of per-socket core lists: `[[0, 1], [2, 3]]` →
+/// `[0, 2, 1, 3]`, so consecutive workers land on alternating sockets and
+/// the shard arrays they first-touch spread across memory controllers.
+/// Uneven sockets keep contributing until exhausted.
+fn interleave_sockets(sockets: &[Vec<usize>]) -> Vec<usize> {
+    let longest = sockets.iter().map(|s| s.len()).max().unwrap_or(0);
+    let mut out = Vec::with_capacity(sockets.iter().map(|s| s.len()).sum());
+    for i in 0..longest {
+        for s in sockets {
+            if let Some(&c) = s.get(i) {
+                out.push(c);
+            }
+        }
+    }
+    out
 }
 
 /// Type-erased `&&(dyn Fn(usize) + Sync)`: the thin `data` pointer points
@@ -81,6 +319,7 @@ struct PoolState {
 pub struct WorkerPool {
     state: Arc<PoolState>,
     workers: Vec<JoinHandle<()>>,
+    pin_status: PinStatus,
 }
 
 fn worker_loop(state: &PoolState, index: usize) {
@@ -119,9 +358,16 @@ fn worker_loop(state: &PoolState, index: usize) {
 }
 
 impl WorkerPool {
-    /// Spawn a pool of `threads` persistent workers (at least one).
+    /// Spawn a pool of `threads` persistent workers (at least one), each
+    /// pinned to a core chosen round-robin across sockets when the host
+    /// supports it (see the module docs; [`pin_status`](Self::pin_status)
+    /// reports the outcome). A worker pins **itself** before entering its
+    /// loop, so everything it later first-touches — notably the shard
+    /// arrays the fleet executor adopts inside worker broadcasts — is
+    /// allocated NUMA-local to where the worker stays.
     pub fn new(threads: usize) -> Self {
         let threads = threads.max(1);
+        let plan = Arc::new(PinPlan::detect());
         let state = Arc::new(PoolState {
             job: Mutex::new(JobCell {
                 generation: 0,
@@ -138,15 +384,33 @@ impl WorkerPool {
         let workers = (0..threads)
             .map(|i| {
                 let st = state.clone();
-                std::thread::spawn(move || worker_loop(&st, i))
+                let pl = plan.clone();
+                std::thread::spawn(move || {
+                    if let Some(core) = pl.core_for(i) {
+                        // Best-effort: a failed pin (cpuset shrunk after
+                        // the probe, hotplug) leaves the worker unpinned.
+                        let _ = affinity::pin_current_thread(core);
+                    }
+                    worker_loop(&st, i)
+                })
             })
             .collect();
-        WorkerPool { state, workers }
+        WorkerPool {
+            state,
+            workers,
+            pin_status: plan.status,
+        }
     }
 
     /// Number of persistent workers in the pool.
     pub fn threads(&self) -> usize {
         self.workers.len()
+    }
+
+    /// How this pool's workers were placed on CPUs — decided once at
+    /// construction, never a panic path (the bench report surfaces it).
+    pub fn pin_status(&self) -> PinStatus {
+        self.pin_status
     }
 
     /// Fork/join: run `f(worker_index)` once on every worker and return
@@ -395,6 +659,75 @@ mod tests {
         assert!(xs.iter().all(|&x| x == 2));
         let ys = pool.map_vec(vec![1, 2, 3], &|x: i32| x * x);
         assert_eq!(ys, vec![1, 4, 9]);
+    }
+
+    #[test]
+    fn pin_plan_escape_hatch_and_probe_failure() {
+        let disabled = PinPlan::detect_inner(true, true);
+        assert_eq!(disabled.status, PinStatus::Disabled);
+        assert_eq!(disabled.core_for(0), None);
+        let unsupported = PinPlan::detect_inner(false, false);
+        assert_eq!(unsupported.status, PinStatus::Unsupported);
+        assert_eq!(unsupported.core_for(3), None);
+    }
+
+    #[test]
+    fn pin_plan_on_this_host_is_consistent() {
+        // Whatever the host supports, the plan must be internally
+        // coherent: a Pinned status advertises exactly the cycle length,
+        // the cycle holds distinct maskable cores, and cycling wraps.
+        let plan = PinPlan::detect_inner(false, affinity::supported());
+        match plan.status {
+            PinStatus::Pinned { sockets, cores } => {
+                assert!(sockets >= 1);
+                assert_eq!(cores, plan.cores.len());
+                assert!(cores >= 1 && cores <= default_threads());
+                assert!(plan.cores.iter().all(|&c| c < 1024));
+                let mut sorted = plan.cores.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                assert_eq!(sorted.len(), plan.cores.len(), "duplicate cores");
+                assert_eq!(plan.core_for(0), plan.core_for(plan.cores.len()));
+            }
+            PinStatus::Unsupported => assert!(plan.cores.is_empty()),
+            PinStatus::Disabled => panic!("not disabled here"),
+        }
+    }
+
+    #[test]
+    fn interleave_alternates_sockets() {
+        let two = vec![vec![0, 1], vec![2, 3]];
+        assert_eq!(interleave_sockets(&two), vec![0, 2, 1, 3]);
+        let uneven = vec![vec![0, 1, 2], vec![3]];
+        assert_eq!(interleave_sockets(&uneven), vec![0, 3, 1, 2]);
+        let one = vec![vec![4, 5, 6]];
+        assert_eq!(interleave_sockets(&one), vec![4, 5, 6]);
+        assert!(interleave_sockets(&[]).is_empty());
+    }
+
+    #[test]
+    fn out_of_range_pin_fails_gracefully() {
+        // 1024 CPUs is the mask width; beyond it the pin must refuse, not
+        // corrupt a mask or panic.
+        assert!(!affinity::pin_current_thread(100_000));
+    }
+
+    #[test]
+    fn pinned_pool_still_runs_and_reports_status() {
+        // Construction must succeed whatever the host's affinity support;
+        // the status is readable and the pool functional either way.
+        let mut pool = WorkerPool::new(3);
+        match pool.pin_status() {
+            PinStatus::Pinned { sockets, cores } => {
+                assert!(sockets >= 1 && cores >= 1);
+            }
+            PinStatus::Disabled | PinStatus::Unsupported => {}
+        }
+        let hits = AtomicUsize::new(0);
+        pool.broadcast(&|_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 3);
     }
 
     #[test]

@@ -6,8 +6,14 @@
 //!
 //! `SimPath::Batched` through `run_fleet_with_path` exercises the full
 //! resident protocol: adopt-once at construction, one kernel invocation
-//! per shard per period, staged-sensor consumption by the engines, and
-//! (past the default cadence) measured-load rebalancing migrations.
+//! per shard per period — **lane-exact SIMD sub-steps** — staged-sensor
+//! consumption by the engines, and (past the default cadence)
+//! measured-load rebalancing migrations. `SimPath::BatchedScalar` is the
+//! same resident protocol restricted to scalar sub-steps, so the suite
+//! triangulates three ways: SIMD vs scalar-resident isolates the lane
+//! path, scalar-resident vs classic isolates residency and layout. The
+//! non-lane-multiple cases (1, 3, 5, 7 device slots in one shard) pin the
+//! remainder handling.
 //!
 //! Together with `tests/fleet_equivalence.rs` (sharded vs legacy
 //! executor), `tests/scheduler_determinism.rs` (worker counts ×
@@ -176,6 +182,143 @@ fn random_fleets_kernel_and_classic_records_byte_identical() {
                 "case {case} strategy {name}: ceiling traces diverge"
             );
         }
+    }
+}
+
+/// Fleet with an exact node mix — `singles` single-CPU nodes (1 device
+/// slot each) + `heteros` CPU+GPU nodes (2 slots each) — on ONE worker
+/// thread, so the whole fleet is a single shard and the slot total is
+/// exactly the kernel width the lane walk sees.
+fn fleet_with_shape(rng: &mut Pcg64, singles: usize, heteros: usize) -> (Vec<NodeSpec>, FleetConfig) {
+    let clusters = [ClusterId::Gros, ClusterId::Dahu, ClusterId::Yeti];
+    let mut budget = 0.0;
+    let mut specs = Vec::new();
+    for _ in 0..singles {
+        let id = *rng.choose(&clusters);
+        let cluster = Cluster::get(id);
+        budget += rng.uniform(0.7, 0.95) * cluster.pcap_max;
+        specs.push(NodeSpec {
+            cluster: id,
+            model: noise_free_model(id),
+            policy: NodePolicySpec::Pi {
+                epsilon: rng.uniform(0.0, 0.3),
+            },
+            hardware: NodeHardware::SingleCpu,
+        });
+    }
+    for _ in 0..heteros {
+        let id = *rng.choose(&clusters);
+        let cluster = Cluster::get(id);
+        budget += 0.7 * (cluster.pcap_max + 400.0);
+        specs.push(NodeSpec {
+            cluster: id,
+            model: noise_free_model(id),
+            policy: NodePolicySpec::Static,
+            hardware: NodeHardware::cpu_gpu(
+                &cluster,
+                DeviceSplitSpec::SlackShift,
+                rng.uniform(0.05, 0.3),
+            ),
+        });
+    }
+    let cfg = FleetConfig {
+        budget,
+        period: 1.0,
+        realloc_every: 2,
+        total_beats: 150 + rng.below(150),
+        max_time: 60.0,
+        seed: rng.next_u64(),
+        threads: Some(1),
+    };
+    (specs, cfg)
+}
+
+#[test]
+fn non_lane_multiple_slot_counts_triangulate_paths_byte_identical() {
+    // SIMD property pin (satellite): single-shard fleets with 1, 3
+    // (= lanes − 1), 5 (= lanes + 1) and 7 device slots — never a
+    // multiple of the 4-lane width — must produce byte-identical records
+    // on the SIMD (Batched), scalar-resident (BatchedScalar) and classic
+    // paths. The odd totals force lane walks ending in every tail length.
+    let mut rng = Pcg64::seeded(0x1A9E5);
+    for (case, &(singles, heteros)) in
+        [(1usize, 0usize), (1, 1), (3, 1), (3, 2)].iter().enumerate()
+    {
+        let (specs, cfg) = fleet_with_shape(&mut rng, singles, heteros);
+        for name in ["uniform", "slack-proportional"] {
+            let simd =
+                run_fleet_with_path(&specs, strategy(name).as_mut(), &cfg, SimPath::Batched);
+            let scalar =
+                run_fleet_with_path(&specs, strategy(name).as_mut(), &cfg, SimPath::BatchedScalar);
+            let classic =
+                run_fleet_with_path(&specs, strategy(name).as_mut(), &cfg, SimPath::Classic);
+            let bytes = record_bytes(&simd);
+            assert_eq!(
+                bytes,
+                record_bytes(&scalar),
+                "case {case} ({singles}+{heteros} nodes, {} slots) {name}: simd != scalar-resident",
+                singles + 2 * heteros
+            );
+            assert_eq!(
+                bytes,
+                record_bytes(&classic),
+                "case {case} ({singles}+{heteros} nodes) {name}: simd != classic"
+            );
+            assert_eq!(
+                simd.limits_trace, scalar.limits_trace,
+                "case {case} {name}: ceiling traces diverge"
+            );
+        }
+    }
+}
+
+#[test]
+fn random_fleets_simd_vs_scalar_resident_byte_identical() {
+    // Multi-shard variant: random mixed fleets on the default thread
+    // count, so lanes fragment across shards and rebalancing stays live.
+    // The SIMD and scalar-resident paths share the resident protocol —
+    // any byte difference isolates the lane arithmetic itself.
+    let mut rng = Pcg64::seeded(0xBEEF5);
+    for case in 0..3 {
+        let (specs, cfg) = random_fleet(&mut rng);
+        let simd = run_fleet_with_path(
+            &specs,
+            strategy("greedy-repack").as_mut(),
+            &cfg,
+            SimPath::Batched,
+        );
+        let scalar = run_fleet_with_path(
+            &specs,
+            strategy("greedy-repack").as_mut(),
+            &cfg,
+            SimPath::BatchedScalar,
+        );
+        assert_eq!(
+            record_bytes(&simd),
+            record_bytes(&scalar),
+            "case {case} ({} nodes, seed {})",
+            specs.len(),
+            cfg.seed
+        );
+    }
+}
+
+#[test]
+fn lane_ops_bitwise_equal_scalar_through_public_api() {
+    // Public-API spot check of the lane-exactness contract the kernel
+    // path is built on (the exhaustive per-op suite lives in sim::simd).
+    use powerctl::sim::simd::{F64x4, LANES};
+    assert_eq!(LANES, 4);
+    let a = [0.1, -0.0, 1e300, -7.5];
+    let b = [2.0, 3.5, -1e300, 0.25];
+    let v = F64x4(a) * F64x4(b) + F64x4(a);
+    for i in 0..LANES {
+        assert_eq!(v.0[i].to_bits(), (a[i] * b[i] + a[i]).to_bits(), "lane {i}");
+    }
+    let c = (F64x4(a) - F64x4(b)).clamp(-1.0, 1.0).max_scalar(0.0);
+    for i in 0..LANES {
+        let want = (a[i] - b[i]).clamp(-1.0, 1.0).max(0.0);
+        assert_eq!(c.0[i].to_bits(), want.to_bits(), "lane {i}");
     }
 }
 
