@@ -13,7 +13,13 @@
 //!   sub-steps, the default) against the scalar-resident oracle and the
 //!   classic loops, with byte-identity asserted first
 //!   (`simd_vs_scalar_identical`), plus per-component OU/plant/RAPL
-//!   microbenches and a one-line NUMA pin-status notice.
+//!   microbenches and a one-line NUMA pin-status notice;
+//! * **fault plane**: `fleet_faulty_node_ticks_per_s_256` — the same
+//!   resident path under the 10% sensor-dropout regime — reported only
+//!   after the empty-plan byte-identity contract is asserted in-bench
+//!   (`faults_empty_plan_identical`, grepped by the CI gate), and the
+//!   steady-state allocation check extended over the fault-check branch
+//!   of the no-fault hot path.
 //!
 //! Emits the machine-readable `BENCH_l3.json` (override the path with
 //! `BENCH_L3_JSON`). `POWERCTL_BENCH_SMOKE=1` caps iterations and fleet
@@ -33,10 +39,11 @@ use powerctl::control::node_budget::{ideal_device_model, DeviceCtl, DeviceSplitS
 use powerctl::coordinator::hetero::HeteroBackend;
 use powerctl::fleet::coordinator::node_seed;
 use powerctl::fleet::{
-    run_fleet, run_fleet_threaded, run_fleet_with_path, BudgetedPolicy, FleetConfig, NodeHardware,
-    NodePolicySpec, NodeSpec, ShardedExecutor, SimPath, WorkerConfig,
+    run_fleet, run_fleet_threaded, run_fleet_with_faults, run_fleet_with_path, BudgetedPolicy,
+    FleetConfig, NodeHardware, NodePolicySpec, NodeSpec, ShardedExecutor, SimPath, WorkerConfig,
 };
 use powerctl::sim::device::DeviceSpec;
+use powerctl::sim::faults::{FaultPlan, FaultRegime, NodeSelector};
 use powerctl::sim::cluster::{Cluster, ClusterId};
 use powerctl::sim::node::NodeSim;
 use powerctl::util::bench::{black_box, section, smoke, Bench, Report};
@@ -243,6 +250,7 @@ fn main() {
                     pcap_min: cluster.pcap_min,
                     pcap_max: cluster.pcap_max,
                     done: false,
+                    failed: false,
                 });
             }
             strategy.allocate_into(now, share * NODES as f64, &reports, &mut limits);
@@ -421,6 +429,91 @@ fn main() {
             );
             report.add_metric(&format!("fleet_simd_speedup_{n}"), simd_tps / kernel_tps);
         }
+    }
+
+    section("fault plane (empty-plan identity + 10% sensor-dropout regime)");
+    {
+        // Contract first, throughput second. The empty-plan identity is
+        // asserted here — in the same binary that reports the faulty
+        // throughput — so the `faults_empty_plan_identical` metric the CI
+        // gate greps for cannot appear without the byte-equality having
+        // actually held on this build.
+        let to_bytes = |out: &powerctl::fleet::FleetOutcome| {
+            out.records
+                .iter()
+                .map(|r| r.to_json().dump())
+                .collect::<Vec<_>>()
+                .join("\n")
+        };
+        {
+            let specs = gros_specs(&ident, 8, 0.15);
+            let cfg = FleetConfig {
+                budget: 85.0 * 8.0,
+                period: 1.0,
+                realloc_every: 5,
+                total_beats: 400,
+                max_time: 60.0,
+                seed: 11,
+                threads: None,
+            };
+            let clean = run_fleet_with_path(
+                &specs,
+                &mut SlackProportional::default(),
+                &cfg,
+                SimPath::Batched,
+            );
+            let empty = run_fleet_with_faults(
+                &specs,
+                &mut SlackProportional::default(),
+                &cfg,
+                SimPath::Batched,
+                &FaultPlan::default(),
+            );
+            assert_eq!(
+                to_bytes(&clean),
+                to_bytes(&empty),
+                "empty fault plan perturbed record bytes"
+            );
+            assert_eq!(
+                clean.limits_trace, empty.limits_trace,
+                "empty fault plan perturbed the ceiling trace"
+            );
+            println!("  empty-plan identity: byte-identical on an 8-node fleet");
+            report.add_metric("faults_empty_plan_identical", 1.0);
+        }
+
+        // Throughput under the documented degradation regime: fleet-wide
+        // 10% sensor dropout (telemetry faults only — every node keeps
+        // running, the PI freshness gate does the extra work). Same drive
+        // shape as the clean `fleet_simd_node_ticks_per_s_256` key so the
+        // two are directly comparable.
+        let n = 256;
+        let periods = if smoke() { 20.0 } else { 120.0 };
+        let cfg = FleetConfig {
+            budget: 95.0 * n as f64,
+            period: 1.0,
+            realloc_every: 5,
+            total_beats: u64::MAX,
+            max_time: periods,
+            seed: 42,
+            threads: None,
+        };
+        let specs = gros_specs(&ident, n, 0.15);
+        let plan = FaultPlan::seeded(42).with_rule(
+            NodeSelector::All,
+            FaultRegime {
+                sensor_dropout: 0.10,
+                ..FaultRegime::default()
+            },
+        );
+        let mut strategy = SlackProportional::default();
+        let out = run_fleet_with_faults(&specs, &mut strategy, &cfg, SimPath::Batched, &plan);
+        let tps = out.node_ticks as f64 / out.wall_seconds;
+        println!(
+            "  faulty   {n:>5} nodes: {tps:>12.0} node-ticks/s ({} ticks, 10% sensor dropout)",
+            out.node_ticks
+        );
+        report.add_metric(&format!("fleet_faulty_node_ticks_per_s_{n}"), tps);
     }
 
     section("SIMD sub-step components (scalar vs lanes, 1024 devices)");
@@ -606,6 +699,48 @@ fn main() {
         assert_eq!(
             delta, 0,
             "steady-state scalar-resident control period allocated {delta} times"
+        );
+
+        // Fault-check branch on the no-fault hot path: every period now
+        // begins with a per-cell `begin_period` fault poll before staging.
+        // On an executor built through `with_faults` with an empty plan
+        // that poll must be a zero-allocation no-op — the fault plane may
+        // not tax clean fleets. (`with_path` routes through `with_faults`,
+        // so the two windows above already walk this branch; this window
+        // pins the contract by name.)
+        let (warm_f, measured_f) = (50u64, 25u64);
+        let cfg_f = WorkerConfig {
+            period: 1.0,
+            total_beats: u64::MAX,
+            max_time: (warm_f + measured_f + 8) as f64,
+        };
+        let mut exec_f = ShardedExecutor::with_faults(
+            &specs,
+            95.0,
+            cfg_f,
+            &seeds,
+            threads,
+            SimPath::Batched,
+            &FaultPlan::default(),
+        );
+        let mut now_f = 0.0;
+        for _ in 1..=warm_f {
+            epoch(&mut exec_f, &mut strategy, &mut limits, &mut now_f);
+        }
+        exec_f.set_rebalance_every(0);
+        let before = allocations();
+        for _ in warm_f + 1..=warm_f + measured_f {
+            epoch(&mut exec_f, &mut strategy, &mut limits, &mut now_f);
+        }
+        let delta = allocations() - before;
+        println!(
+            "  allocations over {measured_f} steady-state periods × {n} nodes \
+             with the fault-check branch live (empty plan): {delta}"
+        );
+        report.add_metric("fleet_fault_branch_steady_state_allocations", delta as f64);
+        assert_eq!(
+            delta, 0,
+            "empty-plan fault-check branch allocated {delta} times in steady state"
         );
     }
 

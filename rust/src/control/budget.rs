@@ -18,7 +18,8 @@
 //! * each ceiling lies within the node's hardware range `[pcap_min, pcap_max]`;
 //! * the ceilings sum to at most `max(budget, Σ pcap_min)` — hardware
 //!   floors win when the budget is infeasibly small;
-//! * finished nodes are parked at their floor (their watts are free).
+//! * finished **and failed** nodes are parked at their floor (their watts
+//!   are free — a crashed node's budget is reclaimed on the next epoch).
 
 /// What one node's control loop reports to the budget layer each epoch.
 #[derive(Debug, Clone, Copy)]
@@ -41,6 +42,10 @@ pub struct NodeReport {
     pub pcap_max: f64,
     /// The node's workload has completed.
     pub done: bool,
+    /// The node is failed (crashed, quarantined after a panic, or
+    /// otherwise out of the campaign): the budget layer parks it at its
+    /// floor and excludes it from slack accounting until it reports back.
+    pub failed: bool,
 }
 
 impl NodeReport {
@@ -55,9 +60,18 @@ impl NodeReport {
     }
 
     /// The node is held back by its ceiling: it sits at the ceiling while
-    /// still short of its setpoint.
+    /// still short of its setpoint. A parked node is never pinched — a
+    /// crashed node's stale deficit must not bid for watts.
     pub fn pinched(&self) -> bool {
-        !self.done && self.deficit() > 0.02 * self.setpoint.abs().max(1.0) && self.pcap >= self.limit - 1.0
+        !self.parked()
+            && self.deficit() > 0.02 * self.setpoint.abs().max(1.0)
+            && self.pcap >= self.limit - 1.0
+    }
+
+    /// The node holds no claim on the budget beyond its hardware floor:
+    /// either its workload completed or it failed mid-campaign.
+    pub fn parked(&self) -> bool {
+        self.done || self.failed
     }
 
     /// Watts of ceiling the node is demonstrably not using.
@@ -89,7 +103,7 @@ pub trait BudgetPolicy: Send {
     /// let report = |node_id| NodeReport {
     ///     node_id, limit: 100.0, pcap: 80.0, power: 72.0,
     ///     progress: 21.0, setpoint: 21.0,
-    ///     pcap_min: 40.0, pcap_max: 120.0, done: false,
+    ///     pcap_min: 40.0, pcap_max: 120.0, done: false, failed: false,
     /// };
     /// let reports = [report(0), report(1), report(2)];
     /// let limits = UniformBudget.allocate(0.0, 270.0, &reports);
@@ -108,12 +122,12 @@ pub trait BudgetPolicy: Send {
 }
 
 /// Clamp-and-conserve helper shared by the strategies: clamp each ceiling
-/// to its node's range (floor for finished nodes), then — if the total
-/// still exceeds the budget — scale the excess above the floors down
-/// uniformly.
+/// to its node's range (floor for finished *and failed* nodes), then — if
+/// the total still exceeds the budget — scale the excess above the floors
+/// down uniformly.
 fn reconcile(budget: f64, reports: &[NodeReport], limits: &mut [f64]) {
     for (l, r) in limits.iter_mut().zip(reports) {
-        if r.done {
+        if r.parked() {
             *l = r.pcap_min;
         } else {
             *l = l.clamp(r.pcap_min, r.pcap_max);
@@ -159,11 +173,15 @@ pub struct UniformBudget;
 impl BudgetPolicy for UniformBudget {
     fn allocate_into(&mut self, _t: f64, budget: f64, reports: &[NodeReport], limits: &mut [f64]) {
         debug_assert_eq!(limits.len(), reports.len());
-        let active = reports.iter().filter(|r| !r.done).count().max(1);
-        let reserved: f64 = reports.iter().filter(|r| r.done).map(|r| r.pcap_min).sum();
+        let active = reports.iter().filter(|r| !r.parked()).count().max(1);
+        let reserved: f64 = reports
+            .iter()
+            .filter(|r| r.parked())
+            .map(|r| r.pcap_min)
+            .sum();
         let share = (budget - reserved).max(0.0) / active as f64;
         for (l, r) in limits.iter_mut().zip(reports) {
-            *l = if r.done { r.pcap_min } else { share };
+            *l = if r.parked() { r.pcap_min } else { share };
         }
         reconcile(budget, reports, limits);
     }
@@ -200,7 +218,7 @@ impl BudgetPolicy for SlackProportional {
         debug_assert_eq!(limits.len(), reports.len());
         // Bids: what each node asks for this epoch.
         for (l, r) in limits.iter_mut().zip(reports) {
-            *l = if r.done {
+            *l = if r.parked() {
                 r.pcap_min
             } else if r.pinched() {
                 r.limit + self.raise * (r.pcap_max - r.limit).max(0.0)
@@ -275,7 +293,7 @@ impl BudgetPolicy for GreedyRepack {
         let mut pool = budget - limits.iter().sum::<f64>();
 
         self.order.clear();
-        self.order.extend((0..n).filter(|&i| !reports[i].done));
+        self.order.extend((0..n).filter(|&i| !reports[i].parked()));
         // Unstable sort: allocation-free, and deterministic for a given
         // input (ties broken by the fixed partition scheme, identically on
         // every executor path).
@@ -333,6 +351,7 @@ mod tests {
             pcap_min: 40.0,
             pcap_max: 120.0,
             done: false,
+            failed: false,
         }
     }
 
@@ -422,6 +441,27 @@ mod tests {
             let limits = strat.allocate(0.0, 280.0, &reports);
             assert_eq!(limits[0], 40.0, "{}: {limits:?}", strat.name());
         }
+    }
+
+    #[test]
+    fn failed_nodes_park_at_floor_and_release_watts() {
+        // A node that crashes mid-campaign parks at its floor on the next
+        // epoch; the watts it held flow back to the live nodes.
+        let mut reports = mixed_fleet();
+        reports[0].failed = true; // was holding a 100 W ceiling
+        assert!(!reports[0].pinched(), "failed node must never bid");
+        for strat in strategies().iter_mut() {
+            let limits = strat.allocate(0.0, 280.0, &reports);
+            assert_eq!(limits[0], 40.0, "{}: {limits:?}", strat.name());
+        }
+        // Feedback strategies hand the reclaimed watts to the pinched
+        // survivor within this single epoch.
+        let clean = SlackProportional::default().allocate(0.0, 280.0, &mixed_fleet());
+        let degraded = SlackProportional::default().allocate(0.0, 280.0, &reports);
+        assert!(
+            degraded[1] >= clean[1] - 1e-9,
+            "pinched node lost watts after a crash freed budget: {clean:?} -> {degraded:?}"
+        );
     }
 
     #[test]

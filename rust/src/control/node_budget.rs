@@ -237,6 +237,7 @@ impl NodeBudgetController {
                 pcap_min: d.cap_range().0,
                 pcap_max: d.cap_range().1,
                 done: false,
+                failed: false,
             })
             .collect();
         NodeBudgetController {
@@ -315,6 +316,7 @@ impl NodeBudgetController {
                 pcap_min: d.cap_range().0,
                 pcap_max: d.cap_range().1,
                 done: false,
+                failed: false,
             };
         }
         self.split

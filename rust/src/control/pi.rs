@@ -156,6 +156,36 @@ impl PiController {
         self.prev_pcap_l = self.prev_pcap_l.clamp(lo.min(hi), lo.max(hi));
     }
 
+    /// Bumpless re-engage after a telemetry outage: seed the integrator
+    /// state from the cap actually in force so the first post-recovery
+    /// step continues from reality instead of from a stale command.
+    ///
+    /// Clearing `prev_time` makes the next [`step`](Self::step) use the
+    /// nominal first-sample period (an outage-length `Δt` would multiply
+    /// the integral term by the number of missed periods), and clearing
+    /// `prev_error` drops the stale proportional memory. This is the same
+    /// mechanism as construction, re-anchored at `cap` — the clamp keeps
+    /// the anti-windup invariant (`stored_pcap_l` within the achievable
+    /// range) intact.
+    pub fn reengage(&mut self, cap: f64) {
+        let lo = self.model.static_model.linearize_pcap(self.config.pcap_min);
+        let hi = self.model.static_model.linearize_pcap(self.config.pcap_max);
+        let l = self.model.static_model.linearize_pcap(cap);
+        self.prev_pcap_l = l.clamp(lo.min(hi), lo.max(hi));
+        self.prev_error = 0.0;
+        self.prev_time = None;
+    }
+
+    /// Back-calculation after an actuator fault: the controller asked for
+    /// one cap but the hardware applied `actual`. Storing the linearized
+    /// *applied* cap keeps the incremental update anchored to the real
+    /// plant input — the same anti-windup trick [`step`](Self::step) uses
+    /// for its own clamp, extended to faults the controller didn't choose.
+    pub fn note_actuated(&mut self, actual: f64) {
+        let clamped = actual.clamp(self.config.pcap_min, self.config.pcap_max);
+        self.prev_pcap_l = self.model.static_model.linearize_pcap(clamped);
+    }
+
     /// One control period: measured `progress` at time `t` → new power cap
     /// [W], already clamped to the actuator range.
     pub fn step(&mut self, t: f64, progress: f64) -> f64 {
@@ -360,6 +390,66 @@ pub mod tests {
     #[should_panic(expected = "out of range")]
     fn invalid_epsilon_panics() {
         controller(ClusterId::Gros, 0.95);
+    }
+
+    #[test]
+    fn reengage_is_bumpless() {
+        // Converge, then simulate an outage during which the cap was held,
+        // re-engage at the held cap: the first post-recovery step must not
+        // jump away from it.
+        let mut ctl = controller(ClusterId::Gros, 0.15);
+        let plant = fitted_model(ClusterId::Gros);
+        let mut progress = plant.static_model.predict(120.0);
+        let mut held = 120.0;
+        let mut t = 0.0;
+        for _ in 0..200 {
+            held = ctl.step(t, progress);
+            progress = plant.predict_next(progress, held, 1.0);
+            t += 1.0;
+        }
+        // Outage: 40 periods with no controller updates; plant drifts on.
+        for _ in 0..40 {
+            progress = plant.predict_next(progress, held, 1.0);
+            t += 1.0;
+        }
+        ctl.reengage(held);
+        let cap = ctl.step(t, progress);
+        assert!(
+            (cap - held).abs() < 2.0,
+            "re-engage bumped the cap: {held} -> {cap}"
+        );
+        // State was re-anchored at the held cap (anti-windup invariant).
+        let l = plant.static_model.linearize_pcap(cap);
+        assert!((ctl.stored_pcap_l() - l).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reengage_clamps_into_range() {
+        let mut ctl = controller(ClusterId::Gros, 0.15);
+        ctl.set_cap_range(40.0, 80.0);
+        ctl.reengage(120.0); // held cap above the narrowed ceiling
+        let m = fitted_model(ClusterId::Gros);
+        let hi = m.static_model.linearize_pcap(80.0);
+        let lo = m.static_model.linearize_pcap(40.0);
+        let s = ctl.stored_pcap_l();
+        assert!(s <= lo.max(hi) + 1e-12 && s >= lo.min(hi) - 1e-12);
+    }
+
+    #[test]
+    fn note_actuated_tracks_applied_cap() {
+        // An ignored actuation must re-anchor the stored command at the
+        // cap actually in force, so the next increment builds on reality.
+        let mut ctl = controller(ClusterId::Gros, 0.15);
+        let plant = fitted_model(ClusterId::Gros);
+        let progress = plant.static_model.predict(120.0);
+        let _requested = ctl.step(0.0, progress);
+        let actual = 120.0; // write ignored, previous cap stays in force
+        ctl.note_actuated(actual);
+        let l = plant.static_model.linearize_pcap(actual);
+        assert!((ctl.stored_pcap_l() - l).abs() < 1e-9);
+        // Output still clamped to range afterwards.
+        let next = ctl.step(1.0, progress);
+        assert!((40.0..=120.0).contains(&next));
     }
 
     #[test]

@@ -157,6 +157,15 @@ impl LockstepBackend {
     pub(crate) fn last_time(&self) -> f64 {
         self.last_time
     }
+
+    /// Re-anchor the backend's clock at `now` after an outage (node
+    /// restart): the down time never happened for this node — its next
+    /// `advance` steps exactly one period from `now`, keeping the fleet's
+    /// lockstep `dt` invariant intact.
+    pub(crate) fn resync(&mut self, now: f64) {
+        self.last_time = now;
+        self.node.time = now;
+    }
 }
 
 impl NodeBackend for LockstepBackend {

@@ -127,6 +127,13 @@ impl HeteroBackend {
         self.last_time
     }
 
+    /// Re-anchor the backend's clock at `now` after an outage (node
+    /// restart) — same contract as the classic lockstep backend's resync.
+    pub(crate) fn resync(&mut self, now: f64) {
+        self.last_time = now;
+        self.node.time = now;
+    }
+
     /// Pre-size the per-device trace logs for `rows` periods so the
     /// steady-state tick path never grows a `Vec` (hot-path discipline,
     /// same as [`ControlLoop::reserve_samples`]).

@@ -1,6 +1,7 @@
 //! Run records: everything one experiment run produces, with CSV/JSON
 //! export. These are the raw data behind every reproduced figure.
 
+use crate::sim::faults::FaultEvent;
 use crate::util::csv::Table;
 use crate::util::json::Json;
 use crate::util::timeseries::TimeSeries;
@@ -74,6 +75,10 @@ pub struct RunRecord {
     pub beats: u64,
     /// Whether the workload ran to completion (vs timeout).
     pub completed: bool,
+    /// Fault and degradation events logged during the run (fault-injection
+    /// campaigns only; empty — and absent from every export — for clean
+    /// runs, keeping their JSON byte-identical to the pre-fault format).
+    pub faults: Vec<FaultEvent>,
 }
 
 impl RunRecord {
@@ -152,6 +157,20 @@ impl RunRecord {
         if !self.devices.is_empty() {
             let devs: Vec<Json> = self.devices.iter().map(|d| d.to_json()).collect();
             j.set("devices", Json::Arr(devs));
+        }
+        // Fault-injection campaigns only: same absent-when-empty contract
+        // as the "devices" key, so clean runs keep their exact bytes.
+        if !self.faults.is_empty() {
+            let evs: Vec<Json> = self
+                .faults
+                .iter()
+                .map(|e| {
+                    let mut ev = Json::obj();
+                    ev.set("t", e.t).set("kind", e.kind.as_str());
+                    ev
+                })
+                .collect();
+            j.set("faults", Json::Arr(evs));
         }
         j
     }
@@ -278,6 +297,33 @@ mod tests {
             r.devices.push(d);
         }
         r
+    }
+
+    #[test]
+    fn faults_key_only_when_present() {
+        use crate::sim::faults::FaultEventKind;
+        // Clean runs must stay byte-identical to the pre-fault format: no
+        // "faults" key.
+        let clean = record().to_json();
+        assert!(clean.get("faults").is_none());
+        let mut faulty = record();
+        faulty.faults.push(FaultEvent {
+            t: 3.0,
+            kind: FaultEventKind::SensorDropout,
+        });
+        faulty.faults.push(FaultEvent {
+            t: 9.0,
+            kind: FaultEventKind::Crash,
+        });
+        let j = faulty.to_json();
+        let evs = j.get("faults").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0].get("kind").unwrap().as_str(), Some("sensor_dropout"));
+        assert_eq!(evs[1].get("t").unwrap().as_f64(), Some(9.0));
+        // Round trip discriminates fault bytes too.
+        let back = Json::parse(&j.dump()).unwrap();
+        assert_eq!(back, j);
+        assert_ne!(j.dump(), clean.dump());
     }
 
     #[test]

@@ -17,6 +17,8 @@ use std::os::unix::net::UnixDatagram;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 
+use crate::err;
+
 /// One progress message from an instrumented application.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Heartbeat {
@@ -39,6 +41,15 @@ pub trait BeatSender: Send {
 /// stamping `now` as the receive time.
 pub trait BeatReceiver {
     fn drain(&mut self, now: f64, out: &mut Vec<Heartbeat>);
+
+    /// Frames dropped so far because they could not be decoded (malformed
+    /// wire format, bad UTF-8, transient socket errors). A daemon must
+    /// never die on a bad client frame — it drops the frame, counts it
+    /// here, and keeps serving; this is the observability hook for that
+    /// contract.
+    fn dropped(&self) -> u64 {
+        0
+    }
 }
 
 // --------------------------------------------------------------------------
@@ -96,19 +107,30 @@ pub fn encode_beat(app_id: u32, units: u32) -> String {
     format!("beat {app_id} {units}\n")
 }
 
-/// Parse a datagram; `None` for malformed input (dropped, as a daemon must
-/// never crash on a bad client).
-pub fn decode_beat(msg: &str) -> Option<(u32, u32)> {
+/// Parse a datagram. Malformed input is a recoverable
+/// [`util::error`](crate::util::error) result, never a panic: the
+/// daemon-side receiver drops the frame, counts it
+/// ([`BeatReceiver::dropped`]), and keeps serving.
+pub fn decode_beat(msg: &str) -> crate::util::error::Result<(u32, u32)> {
     let mut parts = msg.trim_end().split(' ');
-    if parts.next()? != "beat" {
-        return None;
+    match parts.next() {
+        Some("beat") => {}
+        other => return Err(err!("heartbeat frame must start with 'beat', got {other:?}")),
     }
-    let app_id = parts.next()?.parse().ok()?;
-    let units = parts.next()?.parse().ok()?;
+    let app_id = parts
+        .next()
+        .ok_or_else(|| err!("heartbeat frame missing app id"))?
+        .parse()
+        .map_err(|e| err!("heartbeat app id: {e}"))?;
+    let units = parts
+        .next()
+        .ok_or_else(|| err!("heartbeat frame missing units"))?
+        .parse()
+        .map_err(|e| err!("heartbeat units: {e}"))?;
     if parts.next().is_some() {
-        return None;
+        return Err(err!("heartbeat frame has trailing fields"));
     }
-    Some((app_id, units))
+    Ok((app_id, units))
 }
 
 /// Unix-datagram transport bound to a filesystem path.
@@ -125,6 +147,7 @@ pub struct UnixSocketReceiver {
     sock: UnixDatagram,
     path: PathBuf,
     buf: [u8; 256],
+    dropped: u64,
 }
 
 impl UnixSocket {
@@ -138,6 +161,7 @@ impl UnixSocket {
             sock,
             path,
             buf: [0; 256],
+            dropped: 0,
         })
     }
 
@@ -164,20 +188,33 @@ impl BeatReceiver for UnixSocketReceiver {
         loop {
             match self.sock.recv(&mut self.buf) {
                 Ok(n) => {
-                    if let Ok(text) = std::str::from_utf8(&self.buf[..n]) {
-                        if let Some((app_id, units)) = decode_beat(text) {
-                            out.push(Heartbeat {
-                                app_id,
-                                units,
-                                time: now,
-                            });
-                        }
+                    let decoded = std::str::from_utf8(&self.buf[..n])
+                        .map_err(|e| err!("heartbeat frame not UTF-8: {e}"))
+                        .and_then(decode_beat);
+                    match decoded {
+                        Ok((app_id, units)) => out.push(Heartbeat {
+                            app_id,
+                            units,
+                            time: now,
+                        }),
+                        // Bad client frame: drop it, count it, keep
+                        // serving — the daemon must never die here.
+                        Err(_) => self.dropped += 1,
                     }
                 }
                 Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
-                Err(_) => break,
+                Err(_) => {
+                    // Transient socket error: count it and yield; the
+                    // next drain retries rather than spinning here.
+                    self.dropped += 1;
+                    break;
+                }
             }
         }
+    }
+
+    fn dropped(&self) -> u64 {
+        self.dropped
     }
 }
 
@@ -224,14 +261,17 @@ mod tests {
 
     #[test]
     fn wire_format_roundtrip() {
-        assert_eq!(decode_beat(&encode_beat(7, 3)), Some((7, 3)));
+        assert_eq!(decode_beat(&encode_beat(7, 3)).unwrap(), (7, 3));
     }
 
     #[test]
-    fn malformed_datagrams_dropped() {
+    fn malformed_datagrams_are_recoverable_errors() {
         for bad in ["", "beat", "beat x 1", "beat 1", "pulse 1 1", "beat 1 2 3"] {
-            assert_eq!(decode_beat(bad), None, "{bad:?}");
+            assert!(decode_beat(bad).is_err(), "{bad:?}");
         }
+        // The errors say what was wrong, for the daemon's logs.
+        let e = decode_beat("pulse 1 1").unwrap_err();
+        assert!(e.to_string().contains("beat"), "{e}");
     }
 
     #[test]
@@ -255,12 +295,15 @@ mod tests {
         let mut rx = UnixSocket::bind(&path).unwrap();
         let raw = UnixDatagram::unbound().unwrap();
         raw.send_to(b"not a beat", &path).unwrap();
+        raw.send_to(&[0xFF, 0xFE, 0x80], &path).unwrap(); // not UTF-8
         let tx = UnixSocket::connect(&path).unwrap();
         tx.send(3, 1).unwrap();
         let mut out = Vec::new();
         rx.drain(0.0, &mut out);
         assert_eq!(out.len(), 1);
         assert_eq!(out[0].app_id, 3);
+        // Both garbage frames were dropped, counted, and service went on.
+        assert_eq!(rx.dropped(), 2);
     }
 
     #[test]

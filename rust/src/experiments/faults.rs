@@ -1,0 +1,304 @@
+//! Fault campaign: graceful degradation under deterministic fault
+//! injection.
+//!
+//! The robustness axis on top of the fleet machinery: the same
+//! heterogeneous fleet is run under a ladder of seeded
+//! [`FaultPlan`](crate::sim::faults::FaultPlan) regimes — sensor dropout,
+//! garbled telemetry, stuck actuators, node crash/restart, permanent node
+//! loss — each paired against the *same fleet on the same seeds* running
+//! fault-free. The campaign reports, per regime, the energy and makespan
+//! deltas vs the paired clean run, how many nodes failed, how many fault
+//! and degradation events the control plane logged, and whether the
+//! surviving nodes still completed their workloads.
+//!
+//! The headline claims this table backs:
+//!
+//! * telemetry faults (dropout/garble) cost energy but never correctness —
+//!   the freshness gate holds the last cap and falls back to the
+//!   performance-safe full ceiling, so every node still completes;
+//! * node loss is contained — survivors complete, and the budget layer
+//!   reclaims the dead node's watts at the next epoch;
+//! * everything is replayable — the same plan over the same fleet is
+//!   byte-identical, so any fault run can be re-examined offline.
+
+use crate::experiments::common::{Ctx, Identified};
+use crate::experiments::fleet::{heterogeneous_specs, make_strategy, BUDGET_PER_NODE};
+use crate::fleet::coordinator::run_fleet_with_faults;
+use crate::fleet::{FleetConfig, FleetOutcome, NodePolicySpec, SimPath};
+use crate::sim::faults::{FaultEventKind, FaultPlan, FaultRegime, NodeSelector};
+use crate::util::csv::Table;
+
+/// Per-node degradation budget ε used by every fault run (mid-sweep value;
+/// the fault axis, not ε, is what this campaign varies).
+pub const FAULT_EPSILON: f64 = 0.15;
+
+/// One fault regime's outcome, paired against the clean reference.
+#[derive(Debug, Clone)]
+pub struct FaultPoint {
+    /// Regime name (see [`regimes`]).
+    pub regime: String,
+    /// Total fleet energy [J].
+    pub energy: f64,
+    /// When the last live node finished [s].
+    pub makespan: f64,
+    /// Energy delta vs the paired clean run (fraction, + is more energy).
+    pub delta_energy: f64,
+    /// Nodes that ended the run failed (crashed without restart or
+    /// quarantined after a panic).
+    pub failed_nodes: usize,
+    /// Every *surviving* node completed its workload.
+    pub survivors_completed: bool,
+    /// Total fault/degradation events logged across the fleet.
+    pub events: usize,
+    /// Fallback-to-full-cap engagements (the degradation ladder's last
+    /// rung actually firing).
+    pub fallbacks: usize,
+}
+
+/// The fault regimes the campaign sweeps, table order. Each is a seeded
+/// plan over the whole fleet; the seed derives from the campaign context
+/// so reruns replay exactly.
+pub fn regimes(seed: u64) -> Vec<(String, FaultPlan)> {
+    let base = |s: u64| FaultPlan::seeded(seed ^ s);
+    vec![
+        ("clean".into(), base(0)),
+        (
+            "dropout-10".into(),
+            base(1).with_rule(
+                NodeSelector::All,
+                FaultRegime {
+                    sensor_dropout: 0.10,
+                    ..FaultRegime::default()
+                },
+            ),
+        ),
+        (
+            "garble-5".into(),
+            base(2).with_rule(
+                NodeSelector::All,
+                FaultRegime {
+                    garble: 0.05,
+                    ..FaultRegime::default()
+                },
+            ),
+        ),
+        (
+            "actuator-stuck-10".into(),
+            base(3).with_rule(
+                NodeSelector::All,
+                FaultRegime {
+                    actuator: crate::sim::faults::ActuatorFault::Ignored,
+                    actuator_prob: 0.10,
+                    ..FaultRegime::default()
+                },
+            ),
+        ),
+        (
+            "crash-restart".into(),
+            base(4).with_rule(
+                NodeSelector::EveryKth { k: 4, offset: 1 },
+                FaultRegime {
+                    crash_prob: 0.002,
+                    restart_after: Some(30.0),
+                    ..FaultRegime::default()
+                },
+            ),
+        ),
+        (
+            "crash-permanent".into(),
+            base(5).with_rule(
+                NodeSelector::Node(0),
+                FaultRegime {
+                    crash_at: Some(40.0),
+                    ..FaultRegime::default()
+                },
+            ),
+        ),
+    ]
+}
+
+fn fleet_config(ctx: &Ctx, n: usize) -> FleetConfig {
+    FleetConfig {
+        budget: BUDGET_PER_NODE * n as f64,
+        period: 1.0,
+        realloc_every: 5,
+        total_beats: ctx.scale.total_beats(),
+        max_time: 3_600.0,
+        // Distinct stream from the fleet campaign so the two never share
+        // node noise by accident.
+        seed: ctx.seed ^ 0xFA17,
+        threads: Some(1),
+    }
+}
+
+/// Run one regime and reduce it against the clean reference outcome.
+fn reduce(regime: &str, out: &FleetOutcome, clean_energy: f64) -> FaultPoint {
+    let failed: Vec<&crate::coordinator::records::RunRecord> = out
+        .records
+        .iter()
+        .filter(|r| {
+            r.faults.iter().any(|e| {
+                e.kind == FaultEventKind::Crash || e.kind == FaultEventKind::Panic
+            }) && !r.completed
+        })
+        .collect();
+    let survivors_completed = out
+        .records
+        .iter()
+        .filter(|r| !failed.iter().any(|f| f.node_id == r.node_id))
+        .all(|r| r.completed);
+    let events: usize = out.records.iter().map(|r| r.faults.len()).sum();
+    let fallbacks = out
+        .records
+        .iter()
+        .flat_map(|r| &r.faults)
+        .filter(|e| e.kind == FaultEventKind::FallbackFullCap)
+        .count();
+    FaultPoint {
+        regime: regime.to_string(),
+        energy: out.total_energy,
+        makespan: out.makespan,
+        delta_energy: out.total_energy / clean_energy - 1.0,
+        failed_nodes: failed.len(),
+        survivors_completed,
+        events,
+        fallbacks,
+    }
+}
+
+/// The full campaign: every fault regime over the same fleet and seeds,
+/// CSV + printed table.
+pub fn run(ctx: &Ctx, idents: &[Identified]) -> (String, Vec<FaultPoint>) {
+    let n = ctx.scale.fleet_nodes();
+    let specs = heterogeneous_specs(idents, n, NodePolicySpec::Pi { epsilon: FAULT_EPSILON });
+    let cfg = fleet_config(ctx, n);
+
+    let mut points = Vec::new();
+    let mut clean_energy = f64::NAN;
+    for (name, plan) in regimes(ctx.seed) {
+        let mut strategy = make_strategy("slack-proportional");
+        let out = run_fleet_with_faults(&specs, strategy.as_mut(), &cfg, SimPath::Batched, &plan);
+        if name == "clean" {
+            clean_energy = out.total_energy;
+        }
+        points.push(reduce(&name, &out, clean_energy));
+    }
+
+    let mut csv = Table::new(vec![
+        "regime",
+        "energy_j",
+        "makespan_s",
+        "delta_energy",
+        "failed_nodes",
+        "survivors_completed",
+        "events",
+        "fallbacks",
+    ]);
+    for p in &points {
+        csv.push(vec![
+            p.regime.clone(),
+            format!("{}", p.energy),
+            format!("{}", p.makespan),
+            format!("{}", p.delta_energy),
+            format!("{}", p.failed_nodes),
+            format!("{}", p.survivors_completed as u8),
+            format!("{}", p.events),
+            format!("{}", p.fallbacks),
+        ]);
+    }
+    let _ = csv.save(ctx.path("faults.csv"));
+
+    let mut out = format!(
+        "Fault campaign — {n} nodes, slack-proportional budget {:.0} W, ε={FAULT_EPSILON}\n\
+         graceful degradation vs the paired fault-free run (same fleet, same seeds):\n\
+         {:<18} {:>10} {:>9} {:>7} {:>7} {:>7} {:>9}\n",
+        BUDGET_PER_NODE * n as f64,
+        "regime",
+        "E[J]",
+        "T[s]",
+        "ΔE%",
+        "failed",
+        "events",
+        "survivors"
+    );
+    for p in &points {
+        out.push_str(&format!(
+            "{:<18} {:>10.0} {:>9.0} {:>+6.1}% {:>7} {:>7} {:>9}\n",
+            p.regime,
+            p.energy,
+            p.makespan,
+            100.0 * p.delta_energy,
+            p.failed_nodes,
+            p.events,
+            if p.survivors_completed { "complete" } else { "DNF" },
+        ));
+    }
+    (out, points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::common::{identify, Scale};
+    use crate::sim::cluster::ClusterId;
+
+    fn ctx(tag: &str) -> Ctx {
+        Ctx::new(
+            std::env::temp_dir().join(format!("powerctl-faults-{tag}")),
+            23,
+            Scale::Fast,
+        )
+    }
+
+    fn idents(ctx: &Ctx) -> Vec<Identified> {
+        ClusterId::ALL.iter().map(|&id| identify(ctx, id)).collect()
+    }
+
+    #[test]
+    fn campaign_produces_table_and_csv() {
+        let ctx = ctx("table");
+        let idents = idents(&ctx);
+        let (out, points) = run(&ctx, &idents);
+        assert_eq!(points.len(), regimes(ctx.seed).len());
+        assert!(out.contains("dropout-10"));
+        assert!(ctx.path("faults.csv").exists());
+        // The clean reference logs no fault events and loses no node.
+        let clean = &points[0];
+        assert_eq!(clean.regime, "clean");
+        assert_eq!(clean.events, 0);
+        assert_eq!(clean.failed_nodes, 0);
+        assert!(clean.survivors_completed);
+        assert!((clean.delta_energy).abs() < 1e-12);
+        // Telemetry faults cost energy/time but never correctness.
+        for p in points.iter().filter(|p| {
+            p.regime == "dropout-10" || p.regime == "garble-5" || p.regime == "actuator-stuck-10"
+        }) {
+            assert_eq!(p.failed_nodes, 0, "{} lost a node", p.regime);
+            assert!(p.survivors_completed, "{} did not complete", p.regime);
+            assert!(p.events > 0, "{} logged no events", p.regime);
+        }
+        // Permanent node loss is contained: the victim fails, the
+        // survivors still finish.
+        let perm = points.iter().find(|p| p.regime == "crash-permanent").unwrap();
+        assert_eq!(perm.failed_nodes, 1);
+        assert!(perm.survivors_completed);
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    }
+
+    #[test]
+    fn campaign_replays_identically() {
+        let ctx_a = ctx("replay-a");
+        let ctx_b = ctx("replay-b");
+        let idents_a = idents(&ctx_a);
+        let idents_b = idents(&ctx_b);
+        let (_, a) = run(&ctx_a, &idents_a);
+        let (_, b) = run(&ctx_b, &idents_b);
+        for (pa, pb) in a.iter().zip(&b) {
+            assert_eq!(pa.regime, pb.regime);
+            assert_eq!(pa.energy, pb.energy, "{} not replayable", pa.regime);
+            assert_eq!(pa.events, pb.events);
+        }
+        let _ = std::fs::remove_dir_all(&ctx_a.out_dir);
+        let _ = std::fs::remove_dir_all(&ctx_b.out_dir);
+    }
+}

@@ -11,12 +11,14 @@
 //! | [`ablation`] | design-choice ablations (median/mean, excitation shape, adaptive PI) |
 //! | [`fleet`] | fleet-budget campaign: energy vs ε across budget strategies |
 //! | [`hetero`] | heterogeneous-node campaign: CPU+GPU device-split strategies |
+//! | [`faults`] | fault campaign: graceful degradation under seeded fault injection |
 //!
 //! Every runner writes its raw data as CSV under the context's output
 //! directory and returns a printed summary with the paper-shape checks.
 
 pub mod ablation;
 pub mod common;
+pub mod faults;
 pub mod fig3;
 pub mod fig4;
 pub mod fig5;

@@ -36,6 +36,7 @@ use crate::control::budget::{BudgetPolicy, NodeReport};
 use crate::coordinator::records::RunRecord;
 use crate::fleet::executor::ShardedExecutor;
 use crate::fleet::node::{spawn_worker, Cmd, NodeSpec, WorkerConfig, WorkerHandle};
+use crate::sim::faults::FaultPlan;
 use crate::sim::kernel::SimPath;
 use crate::util::parallel::default_threads;
 use crate::util::rng::Pcg64;
@@ -159,18 +160,37 @@ pub fn run_fleet_with_path(
     config: &FleetConfig,
     path: SimPath,
 ) -> FleetOutcome {
+    run_fleet_with_faults(specs, strategy, config, path, &FaultPlan::default())
+}
+
+/// [`run_fleet_with_path`] under a seeded [`FaultPlan`]: deterministic
+/// fault injection (sensor dropout, garbled telemetry, actuator faults,
+/// node crash/restart, injected panics) with graceful degradation — the
+/// budget layer parks failed nodes at the floor and reclaims their watts
+/// at the next reallocation epoch, survivors keep lockstep. An empty plan
+/// is byte-identical to [`run_fleet_with_path`]
+/// (`tests/fault_determinism.rs`); a given plan replayed over the same
+/// fleet and seed is byte-identical to itself.
+pub fn run_fleet_with_faults(
+    specs: &[NodeSpec],
+    strategy: &mut dyn BudgetPolicy,
+    config: &FleetConfig,
+    path: SimPath,
+    plan: &FaultPlan,
+) -> FleetOutcome {
     assert!(!specs.is_empty(), "fleet needs at least one node");
     let n = specs.len();
     let initial_limit = config.budget / n as f64;
     let seeds: Vec<u64> = (0..n).map(|i| node_seed(config.seed, i)).collect();
     let threads = config.threads.unwrap_or_else(default_threads).clamp(1, n);
-    let mut exec = ShardedExecutor::with_path(
+    let mut exec = ShardedExecutor::with_faults(
         specs,
         initial_limit,
         worker_config(config),
         &seeds,
         threads,
         path,
+        plan,
     );
 
     let mut limits = vec![0.0; n];
@@ -453,6 +473,56 @@ mod tests {
                     r.pcap.values[i]
                 );
             }
+        }
+    }
+
+    #[test]
+    fn crashed_node_watts_are_reclaimed_within_one_epoch() {
+        use crate::sim::faults::{FaultPlan, FaultRegime, NodeSelector};
+        let specs = specs(4, 0.15);
+        let cfg = FleetConfig {
+            budget: 4.0 * 85.0,
+            total_beats: 600,
+            max_time: 300.0,
+            threads: Some(2),
+            ..Default::default()
+        };
+        let plan = FaultPlan::seeded(11).with_rule(
+            NodeSelector::Node(2),
+            FaultRegime {
+                crash_at: Some(18.0),
+                ..FaultRegime::default()
+            },
+        );
+        let out = run_fleet_with_faults(
+            &specs,
+            &mut UniformBudget,
+            &cfg,
+            SimPath::Batched,
+            &plan,
+        );
+        // The crash fires at t = 18; the first epoch that sees the failed
+        // report is t = 20 — it must already park the node at the floor
+        // and hand its watts to the survivors (uniform: 85 → 100 W).
+        let crash_epoch = out
+            .limits_trace
+            .iter()
+            .position(|(t, _)| *t >= 18.0)
+            .expect("no epoch after the crash");
+        let (_, pre) = &out.limits_trace[crash_epoch - 1];
+        let (_, post) = &out.limits_trace[crash_epoch];
+        assert_eq!(post[2], 40.0, "failed node not parked at the floor");
+        for i in [0usize, 1, 3] {
+            assert!(
+                post[i] > pre[i] + 1.0,
+                "survivor {i} got no reclaimed watts: {} -> {}",
+                pre[i],
+                post[i]
+            );
+        }
+        assert!(!out.records[2].completed, "crashed node cannot complete");
+        for i in [0usize, 1, 3] {
+            assert!(out.records[i].completed, "survivor {i} did not finish");
         }
     }
 

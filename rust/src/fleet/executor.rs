@@ -55,6 +55,21 @@
 //! Shard claim order and the partition itself therefore only move wall
 //! time, never bytes — pinned by `tests/fleet_equivalence.rs` and
 //! `tests/scheduler_determinism.rs`.
+//!
+//! **Fault plane.** [`ShardedExecutor::with_faults`] installs a seeded
+//! [`FaultPlan`](crate::sim::faults::FaultPlan) per node. Each period the
+//! owning worker advances the node's fault schedule *before* staging:
+//! a crash releases the node from the resident kernel (its slot is kept —
+//! the static worker ↔ shard map never changes shape), marks its report
+//! `failed` so the budget layer parks it and reclaims its watts at the
+//! next epoch, and a scheduled restart re-adopts the node into its slot
+//! and resyncs its clock so it rejoins lockstep. A panic escaping a node
+//! engine is caught at the cell boundary
+//! ([`catch_quiet`](crate::util::parallel)) and quarantines just that
+//! node — shard-mates and the pool keep running. An empty plan installs
+//! nothing and is byte-identical to
+//! [`with_path`](ShardedExecutor::with_path) on every stepping path
+//! (`tests/fault_determinism.rs`).
 
 use std::time::Instant;
 
@@ -66,8 +81,9 @@ use crate::fleet::node::{
 };
 use crate::sim::cluster::Cluster;
 use crate::sim::device::DeviceKind;
+use crate::sim::faults::{FaultAction, FaultEventKind, FaultPlan};
 use crate::sim::kernel::{ShardKernel, SimPath};
-use crate::util::parallel::{PinStatus, SendPtr, WorkerPool};
+use crate::util::parallel::{catch_quiet, PinStatus, SendPtr, WorkerPool};
 
 /// Cap on pre-reserved sample rows per node (`max_time / period` can be
 /// huge for open-horizon runs; beyond this the sample log simply grows).
@@ -104,13 +120,37 @@ struct NodeCell {
     report: NodeReport,
     /// Static cost prior for the weighted partition (device counts).
     weight: f64,
+    /// The node is out of lockstep: crashed (fault plan) or quarantined
+    /// after a panic. Down cells are skipped by staging and ticking, keep
+    /// their kernel slot but not their residency, and report `failed`.
+    down: bool,
+    /// A down node that will never restart counts toward fleet
+    /// completion (otherwise the run would spin until `max_time`).
+    permanent: bool,
+    /// Set on the period the fault plan restarts the node: the clock is
+    /// resynced and the node re-adopted this period, ticking resumes on
+    /// the next one (no partial-period step).
+    restarted: bool,
 }
 
 impl NodeCell {
-    /// One control period ending at `now`, in place.
+    /// One control period ending at `now`, in place. A panic escaping the
+    /// engine (or the policy inside it) quarantines the cell instead of
+    /// taking down the worker: the engine is presumed poisoned, so the
+    /// cell goes permanently down, its last stamped report is marked
+    /// `failed` for the budget layer, and the event is logged on the
+    /// node's fault trace.
     fn tick(&mut self, now: f64) {
         if !self.engine.finished() {
-            self.engine.tick(now, &mut self.policy);
+            let engine = &mut self.engine;
+            let policy = &mut self.policy;
+            if catch_quiet(|| engine.tick(now, policy)).is_err() {
+                self.down = true;
+                self.permanent = true;
+                self.report.failed = true;
+                self.policy.note_fault(now, FaultEventKind::Panic);
+                return;
+            }
         }
         self.report = node_report(self.engine.node_id(), &self.engine, &self.policy);
     }
@@ -139,10 +179,50 @@ impl Shard {
     /// worker; the only cross-shard data is the report buffer slice.
     fn tick(&mut self, now: f64) {
         let t0 = Instant::now();
+        // Fault plane: advance each node's schedule before staging, so a
+        // node crashing *this* period never steps and a restarting one is
+        // back in its kernel slot before the next period stages it.
+        for (j, cell) in self.cells.iter_mut().enumerate() {
+            let action = cell.policy.begin_period(now);
+            if cell.permanent {
+                // Quarantined (or permanently crashed): no plan action —
+                // not even a scheduled restart — may revive the poisoned
+                // engine.
+                continue;
+            }
+            match action {
+                FaultAction::Run(_) | FaultAction::Down => {}
+                FaultAction::Crash { permanent } => {
+                    cell.down = true;
+                    cell.permanent = permanent;
+                    cell.report.failed = true;
+                    if self.resident {
+                        let (node, _) = cell.engine.backend_mut().sim_node();
+                        if node.resident {
+                            self.kernel.release(j, node);
+                        }
+                    }
+                }
+                FaultAction::Restart => {
+                    // Resync the clock so the first post-restart period
+                    // steps a plain `period` of physics (no catch-up
+                    // integration over the outage), and re-adopt into the
+                    // slot the node kept while down.
+                    cell.restarted = true;
+                    cell.engine.backend_mut().resync(now);
+                    if self.resident {
+                        let (node, _) = cell.engine.backend_mut().sim_node();
+                        if !node.resident {
+                            self.kernel.readopt(j, node);
+                        }
+                    }
+                }
+            }
+        }
         if self.resident {
             let mut begun = false;
             for (j, cell) in self.cells.iter_mut().enumerate() {
-                if cell.engine.finished() {
+                if cell.engine.finished() || cell.down {
                     continue;
                 }
                 let (node, last_time) = cell.engine.backend_mut().sim_node();
@@ -170,9 +250,33 @@ impl Shard {
             }
         }
         let mut all_done = true;
-        for cell in &mut self.cells {
+        for (j, cell) in self.cells.iter_mut().enumerate() {
+            if cell.down {
+                if cell.restarted {
+                    // Rejoined this period; the engine resumes next tick.
+                    cell.down = false;
+                    cell.restarted = false;
+                    all_done = false;
+                } else {
+                    all_done &= cell.permanent || cell.report.done;
+                }
+                continue;
+            }
             cell.tick(now);
-            all_done &= cell.report.done;
+            if cell.down {
+                // Fresh panic quarantine. The injected panic fires in the
+                // policy, after `advance` consumed the staged physics, so
+                // the slot scatters cleanly; drop any staged leftovers
+                // from an organic mid-advance panic before releasing.
+                if self.resident {
+                    let (node, _) = cell.engine.backend_mut().sim_node();
+                    if node.resident {
+                        node.staged = None;
+                        self.kernel.release(j, node);
+                    }
+                }
+            }
+            all_done &= cell.report.done || cell.permanent;
         }
         self.all_done = all_done;
         let elapsed = t0.elapsed().as_secs_f64();
@@ -186,9 +290,15 @@ impl Shard {
     /// Adopt every cell's node into the shard kernel (state becomes
     /// resident; the engine-held structs become views).
     fn make_resident(&mut self) {
-        for cell in &mut self.cells {
+        for (j, cell) in self.cells.iter_mut().enumerate() {
             let (node, _) = cell.engine.backend_mut().sim_node();
             self.kernel.adopt(node);
+            if cell.down {
+                // A down node keeps its slot (the j ↔ cell map must stay
+                // index-exact) but not its residency: a later restart
+                // re-adopts it into this slot.
+                self.kernel.release(j, node);
+            }
         }
         self.resident = true;
     }
@@ -201,16 +311,19 @@ impl Shard {
         }
         for (j, cell) in self.cells.iter_mut().enumerate() {
             let (node, _) = cell.engine.backend_mut().sim_node();
-            self.kernel.release(j, node);
+            if node.resident {
+                self.kernel.release(j, node);
+            }
         }
         self.resident = false;
     }
 
-    /// Sum of the cells' static weights, counting finished nodes as free.
+    /// Sum of the cells' static weights, counting finished and down
+    /// nodes as free (neither is stepped).
     fn live_weight(&self) -> f64 {
         self.cells
             .iter()
-            .map(|c| if c.report.done { 0.0 } else { c.weight })
+            .map(|c| if c.report.done || c.down { 0.0 } else { c.weight })
             .sum()
     }
 }
@@ -307,6 +420,33 @@ impl ShardedExecutor {
         threads: usize,
         path: SimPath,
     ) -> Self {
+        ShardedExecutor::with_faults(
+            specs,
+            initial_limit,
+            cfg,
+            seeds,
+            threads,
+            path,
+            &FaultPlan::default(),
+        )
+    }
+
+    /// [`with_path`](Self::with_path) plus a seeded [`FaultPlan`]: each
+    /// node whose id matches a non-inert rule gets a deterministic fault
+    /// stream (sensor dropout, garbled telemetry, actuator faults,
+    /// crash/restart, injected panics) derived from `(plan.seed,
+    /// node_id)` only — replaying the same plan over the same fleet is
+    /// byte-identical, and an empty (or all-inert) plan installs nothing
+    /// and leaves the executor byte-identical to a fault-free run.
+    pub fn with_faults(
+        specs: &[NodeSpec],
+        initial_limit: f64,
+        cfg: WorkerConfig,
+        seeds: &[u64],
+        threads: usize,
+        path: SimPath,
+        plan: &FaultPlan,
+    ) -> Self {
         assert!(!specs.is_empty(), "executor needs at least one node");
         assert_eq!(specs.len(), seeds.len(), "one seed per node spec");
         let n = specs.len();
@@ -324,8 +464,11 @@ impl ShardedExecutor {
             .enumerate()
             .map(|(i, (spec, &seed))| {
                 let cluster = Cluster::get(spec.cluster);
-                let (engine, policy) =
+                let (engine, mut policy) =
                     build_node(i as u32, spec, &cluster, initial_limit, cfg, seed, rows);
+                if let Some(nf) = plan.node_faults(i as u32) {
+                    policy.install_faults(nf);
+                }
                 let report = node_report(i as u32, &engine, &policy);
                 let kinds: Vec<DeviceKind> = match &spec.hardware {
                     crate::fleet::node::NodeHardware::SingleCpu => vec![DeviceKind::Cpu],
@@ -340,6 +483,9 @@ impl ShardedExecutor {
                     seed,
                     report,
                     weight: node_weight(&kinds),
+                    down: false,
+                    permanent: false,
+                    restarted: false,
                 }
             })
             .collect();
@@ -519,7 +665,11 @@ impl ShardedExecutor {
             let live = shard.live_weight();
             let scale = if live > 0.0 { shard.cost / live } else { 0.0 };
             for cell in &shard.cells {
-                let w = if cell.report.done { 0.0 } else { cell.weight };
+                let w = if cell.report.done || cell.down {
+                    0.0
+                } else {
+                    cell.weight
+                };
                 // A tiny floor keeps the partition well-defined when many
                 // nodes have finished (all-zero costs split arbitrarily).
                 self.cost_scratch.push((w * scale).max(1e-12));
@@ -895,5 +1045,153 @@ mod tests {
         assert_eq!(firsts, vec![0, 2], "weighted partition boundary");
         assert_eq!(exec.shards[0].cells.len(), 2);
         assert_eq!(exec.shards[1].cells.len(), 4);
+    }
+
+    use crate::sim::faults::{FaultRegime, NodeSelector};
+
+    fn run_with_plan(path: SimPath, plan: &FaultPlan) -> Vec<RunRecord> {
+        let seeds: Vec<u64> = (0..5).map(|i| 400 + i).collect();
+        let mut exec = ShardedExecutor::with_faults(&specs(5), 95.0, cfg(), &seeds, 2, path, plan);
+        let mut now = 0.0;
+        for _ in 0..120 {
+            now += 1.0;
+            if exec.tick(now) {
+                break;
+            }
+        }
+        exec.into_records()
+    }
+
+    #[test]
+    fn empty_fault_plan_is_byte_identical() {
+        // The hard contract of the fault plane: installing nothing leaves
+        // every stepping path byte-identical to the fault-free
+        // constructor (the full path × policy matrix lives in
+        // tests/fault_determinism.rs).
+        let empty = FaultPlan::seeded(9);
+        for path in [SimPath::Batched, SimPath::Classic] {
+            let clean = run_with_plan(path, &FaultPlan::default());
+            let faulty = run_with_plan(path, &empty);
+            for (rc, rf) in clean.iter().zip(&faulty) {
+                assert_eq!(rc.to_json().dump(), rf.to_json().dump(), "{path:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn seeded_fault_plan_replays_identically() {
+        let plan = FaultPlan::seeded(0xD15EA5E).with_rule(
+            NodeSelector::All,
+            FaultRegime {
+                sensor_dropout: 0.1,
+                crash_prob: 0.02,
+                restart_after: Some(5.0),
+                ..FaultRegime::default()
+            },
+        );
+        let a = run_with_plan(SimPath::Batched, &plan);
+        let b = run_with_plan(SimPath::Batched, &plan);
+        for (ra, rb) in a.iter().zip(&b) {
+            assert_eq!(ra.to_json().dump(), rb.to_json().dump());
+        }
+    }
+
+    #[test]
+    fn permanent_crash_quarantines_node_and_spares_shard_mates() {
+        let plan = FaultPlan::seeded(3).with_rule(
+            NodeSelector::Node(1),
+            FaultRegime {
+                crash_at: Some(10.0),
+                ..FaultRegime::default()
+            },
+        );
+        let clean = run_with_plan(SimPath::Batched, &FaultPlan::default());
+        let faulty = run_with_plan(SimPath::Batched, &plan);
+        assert!(!faulty[1].completed, "crashed node cannot complete");
+        assert!(faulty[1]
+            .faults
+            .iter()
+            .any(|e| e.kind == FaultEventKind::Crash));
+        // Limits are static in this harness, so the survivors' physics
+        // are untouched by the crash — byte-for-byte.
+        for i in [0usize, 2, 3, 4] {
+            assert_eq!(
+                clean[i].to_json().dump(),
+                faulty[i].to_json().dump(),
+                "survivor {i} perturbed by node 1's crash"
+            );
+            assert!(faulty[i].completed);
+        }
+    }
+
+    #[test]
+    fn scheduled_restart_rejoins_lockstep() {
+        let plan = FaultPlan::seeded(4).with_rule(
+            NodeSelector::Node(0),
+            FaultRegime {
+                crash_at: Some(10.0),
+                restart_after: Some(4.0),
+                ..FaultRegime::default()
+            },
+        );
+        // Generous horizon: the outage must cost beats, not completion.
+        let cfg = WorkerConfig {
+            period: 1.0,
+            total_beats: 300,
+            max_time: 240.0,
+        };
+        let seeds: Vec<u64> = (0..5).map(|i| 400 + i).collect();
+        let mut exec =
+            ShardedExecutor::with_faults(&specs(5), 95.0, cfg, &seeds, 2, SimPath::Batched, &plan);
+        let mut now = 0.0;
+        for _ in 0..240 {
+            now += 1.0;
+            if exec.tick(now) {
+                break;
+            }
+        }
+        let faulty = exec.into_records();
+        let kinds: Vec<FaultEventKind> = faulty[0].faults.iter().map(|e| e.kind).collect();
+        assert!(kinds.contains(&FaultEventKind::Crash));
+        assert!(kinds.contains(&FaultEventKind::Restart));
+        // The outage costs beats but the node rejoins and still finishes
+        // its quota within the generous max_time.
+        assert!(faulty[0].completed, "restarted node never rejoined");
+        for r in &faulty[1..] {
+            assert!(r.completed);
+        }
+    }
+
+    #[test]
+    fn injected_panic_is_quarantined_not_fatal() {
+        let plan = FaultPlan::seeded(5).with_rule(
+            NodeSelector::Node(2),
+            FaultRegime {
+                panic_at: Some(7.0),
+                ..FaultRegime::default()
+            },
+        );
+        let seeds: Vec<u64> = (0..5).map(|i| 400 + i).collect();
+        let mut exec =
+            ShardedExecutor::with_faults(&specs(5), 95.0, cfg(), &seeds, 2, SimPath::Batched, &plan);
+        let mut now = 0.0;
+        let mut done = false;
+        for _ in 0..120 {
+            now += 1.0;
+            if exec.tick(now) {
+                done = true;
+                break;
+            }
+        }
+        assert!(done, "fleet stuck behind the quarantined node");
+        assert!(exec.reports()[2].failed, "panicked node must report failed");
+        let records = exec.into_records();
+        assert!(records[2]
+            .faults
+            .iter()
+            .any(|e| e.kind == FaultEventKind::Panic));
+        for i in [0usize, 1, 3, 4] {
+            assert!(records[i].completed, "bystander {i} lost to the panic");
+        }
     }
 }

@@ -30,7 +30,10 @@ pub mod coordinator;
 pub mod executor;
 pub mod node;
 
-pub use coordinator::{run_fleet, run_fleet_threaded, run_fleet_with_path, FleetConfig, FleetOutcome};
+pub use coordinator::{
+    run_fleet, run_fleet_threaded, run_fleet_with_faults, run_fleet_with_path, FleetConfig,
+    FleetOutcome,
+};
 pub use executor::ShardedExecutor;
 pub use node::{BudgetedPolicy, FleetBackend, NodeHardware, NodePolicySpec, NodeSpec, WorkerConfig};
 pub use crate::sim::kernel::SimPath;

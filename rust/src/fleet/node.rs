@@ -26,6 +26,10 @@ use crate::coordinator::hetero::HeteroBackend;
 use crate::coordinator::records::{DeviceTrace, RunRecord};
 use crate::sim::cluster::{Cluster, ClusterId};
 use crate::sim::device::DeviceSpec;
+use crate::sim::faults::{
+    ActuatorFault, FaultAction, FaultEvent, FaultEventKind, NodeFaults, PeriodFaults,
+    PLAUSIBLE_PROGRESS_MAX,
+};
 use crate::sim::node::NodeSim;
 use crate::ident::DynamicModel;
 
@@ -146,6 +150,16 @@ impl FleetBackend {
             }
         }
     }
+
+    /// Re-anchor the backend's clock at `now` after a crash outage (node
+    /// restart): the node rejoins the lockstep grid as if the outage never
+    /// happened, so its next tick steps exactly one period.
+    pub(crate) fn resync(&mut self, now: f64) {
+        match self {
+            FleetBackend::Classic(b) => b.resync(now),
+            FleetBackend::Hetero(b) => b.resync(now),
+        }
+    }
 }
 
 impl NodeBackend for FleetBackend {
@@ -182,6 +196,14 @@ impl NodeBackend for FleetBackend {
 }
 
 /// The node-local policy with a movable budget ceiling.
+///
+/// When a fault plan matches the node, the policy additionally runs the
+/// degradation ladder: the injected [`PeriodFaults`] corrupt its sensor
+/// input and actuator output, and a freshness gate protects the PI from
+/// stale/garbled samples (hold-last-cap, then performance-safe full-cap
+/// fallback after `fallback_k` consecutive misses, bumpless re-engage on
+/// recovery). Without a plan the fault state is `None` and
+/// [`Policy::decide`] is exactly the pre-fault code path.
 pub struct BudgetedPolicy {
     kind: Kind,
     limit: f64,
@@ -189,11 +211,27 @@ pub struct BudgetedPolicy {
     hw_max: f64,
     setpoint: f64,
     epsilon: f64,
+    /// Fault-injection + degradation state; `None` (the default) keeps the
+    /// hot path to a single branch and byte-identical behaviour.
+    faults: Option<Box<FaultState>>,
 }
 
 enum Kind {
     Pi(PiController),
     Static,
+}
+
+/// Per-node fault/degradation state (boxed: present only on faulted nodes,
+/// so the clean-path `BudgetedPolicy` stays small and allocation-free).
+struct FaultState {
+    /// The compiled per-node fault schedule + event log.
+    plan: NodeFaults,
+    /// Faults drawn by `begin_period` for the period being decided.
+    pending: PeriodFaults,
+    /// Consecutive stale (dropped/garbled) samples seen by the PI gate.
+    misses: u32,
+    /// Cap actually in force after the last actuation [W].
+    last_cap: f64,
 }
 
 impl BudgetedPolicy {
@@ -221,6 +259,7 @@ impl BudgetedPolicy {
                     hw_max,
                     setpoint,
                     epsilon,
+                    faults: None,
                 }
             }
             NodePolicySpec::Static => BudgetedPolicy {
@@ -230,6 +269,7 @@ impl BudgetedPolicy {
                 hw_max,
                 setpoint: f64::NAN,
                 epsilon: f64::NAN,
+                faults: None,
             },
         }
     }
@@ -267,6 +307,48 @@ impl BudgetedPolicy {
     pub fn initial_pcap(&self) -> f64 {
         self.limit
     }
+
+    /// Arm fault injection on this node: install the compiled per-node
+    /// schedule. Called once at construction by the executor when the
+    /// campaign's [`FaultPlan`](crate::sim::faults::FaultPlan) matches.
+    pub(crate) fn install_faults(&mut self, plan: NodeFaults) {
+        self.faults = Some(Box::new(FaultState {
+            plan,
+            pending: PeriodFaults::default(),
+            misses: 0,
+            last_cap: self.limit,
+        }));
+    }
+
+    /// Advance the node's fault schedule by one period ending at `now` and
+    /// return what the executor must do with the node. Fault-free nodes
+    /// take the `None` branch — one predictable branch, nothing else.
+    pub(crate) fn begin_period(&mut self, now: f64) -> FaultAction {
+        match &mut self.faults {
+            None => FaultAction::Run(PeriodFaults::default()),
+            Some(fs) => {
+                let action = fs.plan.begin_period(now);
+                if let FaultAction::Run(pf) = action {
+                    fs.pending = pf;
+                }
+                action
+            }
+        }
+    }
+
+    /// Log a degradation event on behalf of the executor (panic
+    /// quarantine); no-op for fault-free nodes.
+    pub(crate) fn note_fault(&mut self, t: f64, kind: FaultEventKind) {
+        if let Some(fs) = &mut self.faults {
+            fs.plan.note(t, kind);
+        }
+    }
+
+    /// The accumulated fault/degradation event log (empty when the node
+    /// runs fault-free).
+    pub(crate) fn fault_events(&self) -> &[FaultEvent] {
+        self.faults.as_ref().map_or(&[], |fs| fs.plan.events())
+    }
 }
 
 /// Keep the PI's actuator interval non-degenerate when the ceiling sits at
@@ -277,10 +359,76 @@ fn ceiling(limit: f64, hw_min: f64, hw_max: f64) -> f64 {
 
 impl Policy for BudgetedPolicy {
     fn decide(&mut self, t: f64, progress: f64) -> f64 {
-        match &mut self.kind {
-            Kind::Pi(ctl) => ctl.step(t, progress),
-            Kind::Static => self.limit,
+        let limit = self.limit;
+        let BudgetedPolicy { kind, faults, .. } = self;
+        // Fault-free nodes: the original decide, bit for bit.
+        let Some(fs) = faults.as_deref_mut() else {
+            return match kind {
+                Kind::Pi(ctl) => ctl.step(t, progress),
+                Kind::Static => limit,
+            };
+        };
+
+        let pf = std::mem::take(&mut fs.pending);
+        if pf.panic {
+            panic!("injected node-engine panic (FaultRegime::panic_at)");
         }
+
+        // Sensor side: the freshness gate. A dropped sample arrives never,
+        // a garbled one arrives invalid; both count as a miss. The ladder:
+        // hold the last applied cap for up to `fallback_k − 1` misses
+        // (short outage, state likely still valid), then open to the
+        // performance-safe ceiling (long outage — energy saving is
+        // forfeit, the ε guarantee is not). First fresh sample re-engages
+        // the PI bumplessly from the cap actually in force.
+        let requested = match kind {
+            Kind::Static => limit, // no feedback to protect
+            Kind::Pi(ctl) => {
+                let sample = if pf.dropout {
+                    None
+                } else {
+                    Some(pf.garble.unwrap_or(progress))
+                };
+                let fresh = sample
+                    .is_some_and(|p| p.is_finite() && (0.0..=PLAUSIBLE_PROGRESS_MAX).contains(&p));
+                if fresh {
+                    if fs.misses > 0 {
+                        ctl.reengage(fs.last_cap);
+                        fs.plan.note(t, FaultEventKind::Reengage);
+                        fs.misses = 0;
+                    }
+                    ctl.step(t, sample.unwrap_or(progress))
+                } else {
+                    fs.misses += 1;
+                    if fs.misses >= fs.plan.fallback_k() {
+                        if fs.misses == fs.plan.fallback_k() {
+                            fs.plan.note(t, FaultEventKind::FallbackFullCap);
+                        }
+                        limit
+                    } else {
+                        fs.last_cap
+                    }
+                }
+            }
+        };
+
+        // Actuator side: the hardware may not apply what was requested.
+        let actual = match pf.actuator {
+            ActuatorFault::None => requested,
+            ActuatorFault::Ignored => fs.last_cap,
+            ActuatorFault::Partial(f) => fs.last_cap + f * (requested - fs.last_cap),
+            ActuatorFault::Clamped(w) => requested.min(w),
+        };
+        let actual = actual.clamp(self.hw_min, self.hw_max);
+        if (actual - requested).abs() > 1e-12 {
+            // Back-calculate so the PI's next increment builds on the cap
+            // the plant actually received (anti-windup under faults).
+            if let Kind::Pi(ctl) = kind {
+                ctl.note_actuated(actual);
+            }
+        }
+        fs.last_cap = actual;
+        actual
     }
 
     fn name(&self) -> String {
@@ -400,6 +548,9 @@ pub(crate) fn node_report(
         pcap_min,
         pcap_max,
         done: engine.finished(),
+        // Failure is an executor-level judgement (crash/quarantine); the
+        // executor stamps it on the cell's report after this builder runs.
+        failed: false,
     }
 }
 
@@ -430,6 +581,7 @@ pub(crate) fn finalize_record(
         None => engine.samples().last().map(|s| s.time).unwrap_or(0.0),
     };
     rec.beats = engine.total_beats().min(cfg.total_beats);
+    rec.faults = policy.fault_events().to_vec();
     rec
 }
 
@@ -514,6 +666,137 @@ pub(crate) mod tests {
         p.set_limit(70.0);
         assert_eq!(p.decide(2.0, 33.0), 70.0);
         assert!(p.setpoint().is_nan());
+    }
+
+    #[test]
+    fn freshness_gate_holds_then_falls_back_then_reengages() {
+        use crate::sim::faults::{FaultPlan, FaultRegime, NodeSelector};
+        let spec = NodeSpec {
+            cluster: ClusterId::Gros,
+            model: fitted(ClusterId::Gros),
+            policy: NodePolicySpec::Pi { epsilon: 0.15 },
+            hardware: NodeHardware::SingleCpu,
+        };
+        let c = Cluster::get(ClusterId::Gros);
+        let mut p = BudgetedPolicy::new(&spec, &c, 120.0);
+        let plan = FaultPlan::seeded(3).with_rule(
+            NodeSelector::All,
+            FaultRegime {
+                sensor_dropout: 1.0, // every begin_period drops the sample
+                ..FaultRegime::default()
+            },
+        );
+        p.install_faults(plan.node_faults(0).unwrap());
+
+        // Converge with fresh samples (no begin_period -> no pending
+        // faults): the plant model closes the loop.
+        let plant = fitted(ClusterId::Gros);
+        let mut progress = plant.static_model.predict(120.0);
+        let mut held = 120.0;
+        let mut t = 0.0;
+        for _ in 0..200 {
+            t += 1.0;
+            held = p.decide(t, progress);
+            progress = plant.predict_next(progress, held, 1.0);
+        }
+        assert!(held < 100.0, "did not converge below the rail: {held}");
+
+        // Misses 1 and 2: hold the last applied cap exactly.
+        for _ in 0..2 {
+            t += 1.0;
+            assert!(matches!(p.begin_period(t), FaultAction::Run(pf) if pf.dropout));
+            assert_eq!(p.decide(t, progress), held);
+        }
+        // Miss 3 (= fallback_k): open to the performance-safe ceiling.
+        t += 1.0;
+        p.begin_period(t);
+        assert_eq!(p.decide(t, progress), 120.0);
+
+        // Recovery: fresh sample -> bumpless re-engage from the cap in
+        // force (the full cap), not a jump from stale integrator state.
+        t += 1.0;
+        let cap = p.decide(t, progress);
+        assert!(
+            (cap - 120.0).abs() < 3.0,
+            "re-engage was not bumpless: {cap}"
+        );
+        let kinds: Vec<_> = p.fault_events().iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                FaultEventKind::SensorDropout,
+                FaultEventKind::SensorDropout,
+                FaultEventKind::SensorDropout,
+                FaultEventKind::FallbackFullCap,
+                FaultEventKind::Reengage,
+            ]
+        );
+    }
+
+    #[test]
+    fn garbled_telemetry_is_rejected_like_a_miss() {
+        use crate::sim::faults::{FaultPlan, FaultRegime, NodeSelector};
+        let spec = NodeSpec {
+            cluster: ClusterId::Gros,
+            model: fitted(ClusterId::Gros),
+            policy: NodePolicySpec::Pi { epsilon: 0.15 },
+            hardware: NodeHardware::SingleCpu,
+        };
+        let c = Cluster::get(ClusterId::Gros);
+        let mut p = BudgetedPolicy::new(&spec, &c, 120.0);
+        let plan = FaultPlan::seeded(5).with_rule(
+            NodeSelector::All,
+            FaultRegime {
+                garble: 1.0,
+                ..FaultRegime::default()
+            },
+        );
+        p.install_faults(plan.node_faults(0).unwrap());
+        // Garbled samples (NaN/outlier/negative) must never reach the PI:
+        // the cap holds at the last applied value, never goes wild.
+        let mut caps = Vec::new();
+        for i in 0..2 {
+            let t = (i + 1) as f64;
+            p.begin_period(t);
+            caps.push(p.decide(t, 21.0));
+        }
+        assert!(caps.iter().all(|&cap| (cap - 120.0).abs() < 1e-9), "{caps:?}");
+        assert!(p
+            .fault_events()
+            .iter()
+            .all(|e| e.kind == FaultEventKind::Garbled));
+    }
+
+    #[test]
+    fn ignored_actuation_keeps_previous_cap_in_force() {
+        use crate::sim::faults::{FaultPlan, FaultRegime, NodeSelector};
+        let spec = NodeSpec {
+            cluster: ClusterId::Gros,
+            model: fitted(ClusterId::Gros),
+            policy: NodePolicySpec::Pi { epsilon: 0.15 },
+            hardware: NodeHardware::SingleCpu,
+        };
+        let c = Cluster::get(ClusterId::Gros);
+        let mut p = BudgetedPolicy::new(&spec, &c, 120.0);
+        let plan = FaultPlan::seeded(8).with_rule(
+            NodeSelector::All,
+            FaultRegime {
+                actuator: ActuatorFault::Ignored,
+                actuator_prob: 1.0,
+                ..FaultRegime::default()
+            },
+        );
+        p.install_faults(plan.node_faults(0).unwrap());
+        // The PI wants to cut the cap (progress far above setpoint), but
+        // every write is ignored: the applied cap must stay at the
+        // initial 120 W, period after period.
+        let plant = fitted(ClusterId::Gros);
+        let progress = plant.static_model.predict(120.0);
+        for i in 0..10 {
+            let t = (i + 1) as f64;
+            p.begin_period(t);
+            assert_eq!(p.decide(t, progress), 120.0, "period {i}");
+        }
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! powerctl sweep [--full]              Fig. 6b + Fig. 7 evaluation campaign
 //! powerctl fleet [--full]              fleet-budget campaign (energy vs ε per strategy)
 //! powerctl hetero                      CPU+GPU node campaign (device-split strategies)
+//! powerctl faults                      fault campaign (graceful degradation under injection)
 //! powerctl ablation                    design-choice ablations
 //! powerctl live [--iterations n]       live PJRT workload + NRM daemon demo
 //! powerctl all [--full]                everything, in order
@@ -38,6 +39,7 @@ fn cli() -> Cli {
         .subcommand("sweep", "full evaluation campaign: Fig. 6b + Fig. 7")
         .subcommand("fleet", "fleet-budget campaign: N nodes under one global power budget")
         .subcommand("hetero", "heterogeneous-node campaign: CPU+GPU device-split strategies")
+        .subcommand("faults", "fault campaign: graceful degradation under seeded injection")
         .subcommand("ablation", "design-choice ablations")
         .subcommand("replay", "re-fit models + aggregates from saved campaign CSVs")
         .subcommand("live", "live demo: PJRT workload + NRM daemon + PI")
@@ -114,6 +116,12 @@ fn main() {
                 ctx.path("hetero.json").display()
             );
         }
+        "faults" => {
+            let idents = experiments::identify_all(&ctx);
+            let (out, _) = experiments::faults::run(&ctx, &idents);
+            print!("{out}");
+            println!("raw points: {}", ctx.path("faults.csv").display());
+        }
         "ablation" => {
             let idents = experiments::identify_all(&ctx);
             print!("{}", experiments::ablation::run(&ctx, &idents));
@@ -144,6 +152,8 @@ fn main() {
             print!("{fl}");
             let (ht, _) = experiments::hetero::run(&ctx);
             print!("{ht}");
+            let (fa, _) = experiments::faults::run(&ctx, &idents);
+            print!("{fa}");
             print!("{}", experiments::ablation::run(&ctx, &idents));
         }
         other => {

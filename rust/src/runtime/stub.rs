@@ -42,9 +42,23 @@ impl Runtime {
         "pjrt-stub".to_string()
     }
 
-    /// Stub load: always fails (build with `--features pjrt`).
-    pub fn load(&mut self, _entry: &str) -> Result<()> {
+    /// Stub load: validates the entry against the manifest (a bad request
+    /// is its own recoverable error, not a missing-feature one), then
+    /// fails with the feature hint (build with `--features pjrt`).
+    pub fn load(&mut self, entry: &str) -> Result<()> {
+        self.check_entry(entry)?;
         Err(unavailable("compiling an artifact"))
+    }
+
+    /// Reject entry names the manifest does not define — mirrors the real
+    /// runtime, which fails at HLO-load time with the same shape of error.
+    fn check_entry(&self, entry: &str) -> Result<()> {
+        if !self.manifest.entries.contains_key(entry) {
+            let mut have: Vec<&str> = self.manifest.entries.keys().map(String::as_str).collect();
+            have.sort_unstable();
+            return Err(err!("manifest has no entry '{entry}' (have: {have:?})"));
+        }
+        Ok(())
     }
 
     /// The artifact directory this runtime was opened on.
@@ -64,15 +78,17 @@ impl StreamExecutor {
         Self::with_entry(runtime, "stream_step", seed, check_digest)
     }
 
-    /// Stub constructor with an explicit manifest entry.
+    /// Stub constructor with an explicit manifest entry. Validates the
+    /// entry first so a typo'd entry name reports as such instead of as a
+    /// missing feature (reached only via a hand-built `Runtime`: the stub
+    /// `Runtime::new` never returns `Ok`).
     pub fn with_entry(
         runtime: Runtime,
-        _entry: &str,
+        entry: &str,
         _seed: i32,
         _check_digest: bool,
     ) -> Result<StreamExecutor> {
-        // Unreachable in practice: the stub `Runtime::new` never returns Ok.
-        let _ = runtime;
+        runtime.check_entry(entry)?;
         Err(unavailable("executing the STREAM artifact"))
     }
 
@@ -125,5 +141,25 @@ mod tests {
     fn stub_still_validates_manifest_first() {
         let e = Runtime::new("/nonexistent-artifacts").unwrap_err();
         assert!(e.to_string().contains("manifest.json"), "{e}");
+    }
+
+    #[test]
+    fn unknown_entry_is_its_own_error_not_a_feature_hint() {
+        let dir = std::env::temp_dir().join("powerctl-stub-entry-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"n": 4, "block": 2, "scalar": 0.5, "bytes_per_step": 160,
+                "entries": {"stream_step": {"file": "s.hlo.txt"}}}"#,
+        )
+        .unwrap();
+        let runtime = Runtime {
+            manifest: Manifest::load(&dir).unwrap(),
+            dir: dir.clone(),
+        };
+        let e = StreamExecutor::with_entry(runtime, "no_such_entry", 1, false).unwrap_err();
+        assert!(e.to_string().contains("no_such_entry"), "{e}");
+        assert!(e.to_string().contains("stream_step"), "{e}");
+        let _ = std::fs::remove_dir_all(dir);
     }
 }

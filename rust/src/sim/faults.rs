@@ -1,0 +1,608 @@
+//! Deterministic fault injection for the fleet control plane.
+//!
+//! The paper's closed loop assumes every control period delivers a fresh
+//! progress sample and every `pcap` actuation lands. Real NRM deployments
+//! break both assumptions: sensors drop heartbeats, RAPL writes fail or
+//! clamp, and nodes die mid-campaign. This module injects those failures
+//! *deterministically*: a [`FaultPlan`] is seeded and replayable like every
+//! other source of randomness in the repo (splittable-seed scheme,
+//! DESIGN.md §8), so a faulty campaign is exactly as reproducible as a
+//! clean one.
+//!
+//! The plan compiles, per matched node, into a [`NodeFaults`] state machine
+//! whose [`NodeFaults::begin_period`] is called once per control period
+//! *before* the node steps. It returns a [`FaultAction`]: either the node
+//! runs (with a [`PeriodFaults`] describing which sensor/actuator faults
+//! fire this period), or it is crashed / held down / restarted. Every fault
+//! occurrence is appended to an event log that
+//! [`RunRecord`](crate::coordinator::records::RunRecord) serializes.
+//!
+//! **Byte-identity contract:** an empty or non-matching plan produces *no*
+//! [`NodeFaults`] at all, and a matched-but-inert regime likewise resolves
+//! to `None` — the fault path then costs one `Option` branch per period and
+//! cannot perturb the RNG, the record bytes, or the steady-state
+//! zero-allocation property. Probability draws are made **only** for fault
+//! channels whose probability is strictly positive, in a fixed documented
+//! order, so enabling one channel never shifts another channel's stream.
+
+use crate::util::rng::Pcg64;
+
+/// Stream tag for the per-plan root RNG (all node streams split from it).
+const FAULT_STREAM: u64 = 0xFA_017;
+
+/// Which nodes a fault regime applies to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeSelector {
+    /// Every node in the fleet.
+    All,
+    /// Exactly one node, by fleet index.
+    Node(u32),
+    /// Every `k`-th node starting at `offset` (`id % k == offset`).
+    EveryKth {
+        /// Stride (must be ≥ 1; a stride of 1 is equivalent to `All`).
+        k: u32,
+        /// Residue selecting which congruence class is hit.
+        offset: u32,
+    },
+}
+
+impl NodeSelector {
+    /// Does this selector match fleet node `node_id`?
+    pub fn matches(&self, node_id: u32) -> bool {
+        match *self {
+            NodeSelector::All => true,
+            NodeSelector::Node(id) => node_id == id,
+            NodeSelector::EveryKth { k, offset } => k >= 1 && node_id % k == offset % k.max(1),
+        }
+    }
+}
+
+/// How an injected actuator fault corrupts a `set_pcap` request.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum ActuatorFault {
+    /// No actuator fault (the write lands exactly).
+    #[default]
+    None,
+    /// The write is silently dropped; the previous cap stays in force.
+    Ignored,
+    /// Only a fraction of the requested *change* is applied:
+    /// `actual = prev + f·(requested − prev)` with `f ∈ (0, 1)`.
+    Partial(f64),
+    /// The write is clamped to at most this many watts (a stuck firmware
+    /// limit below the advertised `pcap_max`).
+    Clamped(f64),
+}
+
+/// A per-node fault regime: which fault channels are active and how often
+/// they fire. The default is fully inert (every probability zero, every
+/// schedule empty) — [`FaultPlan::node_faults`] treats an inert regime the
+/// same as no rule at all.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultRegime {
+    /// Per-period probability that the progress sample is dropped
+    /// (missed/stale heartbeat — the consumer sees no fresh sample).
+    pub sensor_dropout: f64,
+    /// Per-period probability that the progress sample is garbled into
+    /// NaN, a huge outlier, or a negative value (one extra draw selects
+    /// which, only when the channel fires).
+    pub garble: f64,
+    /// What an actuator fault does when it fires.
+    pub actuator: ActuatorFault,
+    /// Per-period probability that [`Self::actuator`] fires.
+    pub actuator_prob: f64,
+    /// Deterministic crash time: the node crashes on the first period with
+    /// `now >= crash_at` (fires once; checked before `crash_prob`).
+    pub crash_at: Option<f64>,
+    /// Per-period crash probability (in addition to [`Self::crash_at`]).
+    pub crash_prob: f64,
+    /// If `Some(d)`, a crashed node restarts after being down `d` seconds
+    /// of sim time; if `None`, every crash is permanent.
+    pub restart_after: Option<f64>,
+    /// Deterministic engine-panic time: on the first period with
+    /// `now >= panic_at` the node's *decide* path panics (exercises the
+    /// worker-boundary quarantine, not the graceful crash path).
+    pub panic_at: Option<f64>,
+}
+
+impl Default for FaultRegime {
+    fn default() -> Self {
+        FaultRegime {
+            sensor_dropout: 0.0,
+            garble: 0.0,
+            actuator: ActuatorFault::None,
+            actuator_prob: 0.0,
+            crash_at: None,
+            crash_prob: 0.0,
+            restart_after: None,
+            panic_at: None,
+        }
+    }
+}
+
+impl FaultRegime {
+    /// True when no fault channel can ever fire — the regime is
+    /// indistinguishable from having no rule at all.
+    pub fn is_inert(&self) -> bool {
+        self.sensor_dropout <= 0.0
+            && self.garble <= 0.0
+            && (self.actuator_prob <= 0.0 || self.actuator == ActuatorFault::None)
+            && self.crash_at.is_none()
+            && self.crash_prob <= 0.0
+            && self.panic_at.is_none()
+    }
+}
+
+/// A seeded, replayable fault schedule for a whole fleet.
+///
+/// Rules are checked in order; the **first** selector matching a node
+/// decides its regime. Nodes matching no rule (or a rule with an inert
+/// regime) run entirely fault-free with zero overhead beyond one `Option`
+/// branch per period.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Root seed for all fault randomness (independent of the simulation
+    /// seed, so the same workload can be replayed under different fault
+    /// draws and vice versa).
+    pub seed: u64,
+    /// Consecutive missed/garbled samples after which the PI freshness
+    /// gate abandons hold-last-cap and falls back to the performance-safe
+    /// full cap (degradation ladder, DESIGN.md).
+    pub fallback_k: u32,
+    /// `(selector, regime)` rules, first match wins.
+    pub rules: Vec<(NodeSelector, FaultRegime)>,
+}
+
+impl FaultPlan {
+    /// An empty plan with the given seed and the default fallback window.
+    pub fn seeded(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            fallback_k: DEFAULT_FALLBACK_K,
+            rules: Vec::new(),
+        }
+    }
+
+    /// Append a rule and return the plan (builder style).
+    pub fn with_rule(mut self, selector: NodeSelector, regime: FaultRegime) -> Self {
+        self.rules.push((selector, regime));
+        self
+    }
+
+    /// True when no rule can ever inject a fault on any node.
+    pub fn is_empty(&self) -> bool {
+        self.rules.iter().all(|(_, r)| r.is_inert())
+    }
+
+    /// Compile the plan for one node: `None` when the node matches no rule
+    /// (or only an inert one), otherwise a per-node [`NodeFaults`] state
+    /// machine with its own RNG stream split deterministically from the
+    /// plan seed and the node id — two compilations for the same
+    /// `(plan, node_id)` replay identically.
+    pub fn node_faults(&self, node_id: u32) -> Option<NodeFaults> {
+        let (_, regime) = self
+            .rules
+            .iter()
+            .find(|(sel, _)| sel.matches(node_id))?;
+        if regime.is_inert() {
+            return None;
+        }
+        let mut root = Pcg64::new(self.seed, FAULT_STREAM);
+        let rng = root.split(node_id as u64);
+        Some(NodeFaults {
+            regime: *regime,
+            fallback_k: self.fallback_k.max(1),
+            rng,
+            down_since: None,
+            crash_at_armed: regime.crash_at.is_some(),
+            panic_armed: regime.panic_at.is_some(),
+            events: Vec::new(),
+        })
+    }
+}
+
+/// Default `fallback_k`: three consecutive stale periods before the PI
+/// gives up holding the last cap and opens to full cap.
+pub const DEFAULT_FALLBACK_K: u32 = 3;
+
+/// Progress samples outside `[0, PLAUSIBLE_PROGRESS_MAX]` (or non-finite)
+/// are rejected by the freshness gate as garbled telemetry.
+pub const PLAUSIBLE_PROGRESS_MAX: f64 = 1e9;
+
+/// Garbled-telemetry outlier magnitude (far above any plausible progress).
+const GARBLE_OUTLIER: f64 = 1e12;
+
+/// The sensor/actuator faults that fire for one node in one control
+/// period. `Default` is "nothing fires".
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PeriodFaults {
+    /// The progress sample is dropped (consumer sees no fresh sample).
+    pub dropout: bool,
+    /// The progress sample is replaced by this garbled value.
+    pub garble: Option<f64>,
+    /// Actuator fault in force for this period's `set_pcap`.
+    pub actuator: ActuatorFault,
+    /// The decide path must panic this period (quarantine exercise).
+    pub panic: bool,
+}
+
+/// What the executor must do with a node this period.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultAction {
+    /// Step the node normally, applying the contained period faults.
+    Run(PeriodFaults),
+    /// The node crashes *now*: release it from the resident kernel, mark
+    /// its report failed, stop stepping it.
+    Crash {
+        /// `true` when the regime has no `restart_after` — the node never
+        /// returns and the budget layer reclaims its watts for good.
+        permanent: bool,
+    },
+    /// The node is down and stays down this period (skip it entirely).
+    Down,
+    /// The node comes back this period: resynchronize its clock to `now`,
+    /// re-adopt it into the resident kernel, resume stepping next period.
+    Restart,
+}
+
+/// One logged fault or degradation event (serialized into `RunRecord`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Sim time at which the event fired.
+    pub t: f64,
+    /// What happened.
+    pub kind: FaultEventKind,
+}
+
+/// Taxonomy of fault and degradation events. Injection events come from
+/// the plan; degradation events (`FallbackFullCap`, `Reengage`) are logged
+/// by the consumers when the ladder changes rung.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultEventKind {
+    /// Progress sample dropped (missed heartbeat).
+    SensorDropout,
+    /// Progress sample garbled (NaN / outlier / negative).
+    Garbled,
+    /// `set_pcap` silently ignored.
+    ActuatorIgnored,
+    /// `set_pcap` only partially applied.
+    ActuatorPartial,
+    /// `set_pcap` clamped below the request.
+    ActuatorClamped,
+    /// Node crashed.
+    Crash,
+    /// Node restarted after a crash.
+    Restart,
+    /// Node engine panicked and was quarantined at the worker boundary.
+    Panic,
+    /// PI freshness gate fell back to the performance-safe full cap after
+    /// `fallback_k` consecutive stale samples.
+    FallbackFullCap,
+    /// PI bumplessly re-engaged on the first fresh sample after staleness.
+    Reengage,
+}
+
+impl FaultEventKind {
+    /// Stable string used in `RunRecord` JSON.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FaultEventKind::SensorDropout => "sensor_dropout",
+            FaultEventKind::Garbled => "garbled",
+            FaultEventKind::ActuatorIgnored => "actuator_ignored",
+            FaultEventKind::ActuatorPartial => "actuator_partial",
+            FaultEventKind::ActuatorClamped => "actuator_clamped",
+            FaultEventKind::Crash => "crash",
+            FaultEventKind::Restart => "restart",
+            FaultEventKind::Panic => "panic",
+            FaultEventKind::FallbackFullCap => "fallback_full_cap",
+            FaultEventKind::Reengage => "reengage",
+        }
+    }
+}
+
+/// Per-node fault state machine, compiled from a [`FaultPlan`] rule.
+///
+/// Draw order inside one period is fixed and documented: crash (schedule
+/// then probability), sensor dropout, garble (plus one selector draw only
+/// when it fires), actuator. A channel whose probability is zero consumes
+/// **no** randomness, so regimes compose without shifting each other's
+/// streams.
+#[derive(Debug, Clone)]
+pub struct NodeFaults {
+    regime: FaultRegime,
+    fallback_k: u32,
+    rng: Pcg64,
+    /// Sim time the node went down (None while up).
+    down_since: Option<f64>,
+    /// `crash_at` has not fired yet.
+    crash_at_armed: bool,
+    /// `panic_at` has not fired yet.
+    panic_armed: bool,
+    events: Vec<FaultEvent>,
+}
+
+impl NodeFaults {
+    /// The consecutive-staleness window for the PI freshness gate.
+    pub fn fallback_k(&self) -> u32 {
+        self.fallback_k
+    }
+
+    /// The compiled regime (read-only).
+    pub fn regime(&self) -> &FaultRegime {
+        &self.regime
+    }
+
+    /// Log a degradation event (consumers call this when the ladder moves).
+    pub fn note(&mut self, t: f64, kind: FaultEventKind) {
+        self.events.push(FaultEvent { t, kind });
+    }
+
+    /// The accumulated fault/degradation event log.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Advance the state machine by one control period ending at `now` and
+    /// decide what happens to the node. Called exactly once per period,
+    /// before the node is staged/stepped.
+    pub fn begin_period(&mut self, now: f64) -> FaultAction {
+        // A downed node consumes no randomness: only the restart timer is
+        // checked, so the post-restart draw stream is independent of how
+        // long the outage lasted (in periods).
+        if let Some(t0) = self.down_since {
+            if let Some(d) = self.regime.restart_after {
+                if now - t0 >= d {
+                    self.down_since = None;
+                    self.note(now, FaultEventKind::Restart);
+                    return FaultAction::Restart;
+                }
+            }
+            return FaultAction::Down;
+        }
+
+        // (a) Crash: deterministic schedule first, then the per-period
+        // probability draw (only when the channel is enabled).
+        let mut crash = false;
+        if self.crash_at_armed && now >= self.regime.crash_at.unwrap_or(f64::INFINITY) {
+            self.crash_at_armed = false;
+            crash = true;
+        } else if self.regime.crash_prob > 0.0 && self.rng.f64() < self.regime.crash_prob {
+            crash = true;
+        }
+        if crash {
+            self.down_since = Some(now);
+            self.note(now, FaultEventKind::Crash);
+            return FaultAction::Crash {
+                permanent: self.regime.restart_after.is_none(),
+            };
+        }
+
+        let mut pf = PeriodFaults::default();
+
+        // (b) Sensor dropout.
+        if self.regime.sensor_dropout > 0.0 && self.rng.f64() < self.regime.sensor_dropout {
+            pf.dropout = true;
+            self.note(now, FaultEventKind::SensorDropout);
+        }
+
+        // (c) Garbled telemetry. One extra draw selects the corruption,
+        // made only when the channel fires.
+        if self.regime.garble > 0.0 && self.rng.f64() < self.regime.garble {
+            pf.garble = Some(match self.rng.below(3) {
+                0 => f64::NAN,
+                1 => GARBLE_OUTLIER,
+                _ => -1.0,
+            });
+            self.note(now, FaultEventKind::Garbled);
+        }
+
+        // (d) Actuator fault.
+        if self.regime.actuator_prob > 0.0
+            && self.regime.actuator != ActuatorFault::None
+            && self.rng.f64() < self.regime.actuator_prob
+        {
+            pf.actuator = self.regime.actuator;
+            let kind = match self.regime.actuator {
+                ActuatorFault::Ignored => FaultEventKind::ActuatorIgnored,
+                ActuatorFault::Partial(_) => FaultEventKind::ActuatorPartial,
+                ActuatorFault::Clamped(_) => FaultEventKind::ActuatorClamped,
+                ActuatorFault::None => unreachable!(),
+            };
+            self.note(now, kind);
+        }
+
+        // (e) Scheduled panic (no draw; the Panic event is logged by the
+        // quarantine handler once the unwind is actually caught).
+        if self.panic_armed && now >= self.regime.panic_at.unwrap_or(f64::INFINITY) {
+            self.panic_armed = false;
+            pf.panic = true;
+        }
+
+        FaultAction::Run(pf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dropout_regime(p: f64) -> FaultRegime {
+        FaultRegime {
+            sensor_dropout: p,
+            ..FaultRegime::default()
+        }
+    }
+
+    #[test]
+    fn empty_plan_compiles_to_nothing() {
+        let plan = FaultPlan::default();
+        assert!(plan.is_empty());
+        for id in 0..64 {
+            assert!(plan.node_faults(id).is_none());
+        }
+    }
+
+    #[test]
+    fn inert_regime_is_no_rule() {
+        let plan =
+            FaultPlan::seeded(7).with_rule(NodeSelector::All, FaultRegime::default());
+        assert!(plan.is_empty());
+        assert!(plan.node_faults(0).is_none());
+    }
+
+    #[test]
+    fn selectors_match_expected_nodes() {
+        assert!(NodeSelector::All.matches(5));
+        assert!(NodeSelector::Node(3).matches(3));
+        assert!(!NodeSelector::Node(3).matches(4));
+        let every4 = NodeSelector::EveryKth { k: 4, offset: 1 };
+        assert!(every4.matches(1));
+        assert!(every4.matches(9));
+        assert!(!every4.matches(2));
+    }
+
+    #[test]
+    fn first_matching_rule_wins() {
+        let plan = FaultPlan::seeded(1)
+            .with_rule(NodeSelector::Node(2), dropout_regime(1.0))
+            .with_rule(NodeSelector::All, FaultRegime::default());
+        assert!(plan.node_faults(2).is_some());
+        // Node 0 hits the inert All rule -> None.
+        assert!(plan.node_faults(0).is_none());
+    }
+
+    #[test]
+    fn replay_is_exact() {
+        let plan = FaultPlan::seeded(42).with_rule(
+            NodeSelector::All,
+            FaultRegime {
+                sensor_dropout: 0.3,
+                garble: 0.2,
+                actuator: ActuatorFault::Ignored,
+                actuator_prob: 0.1,
+                crash_prob: 0.01,
+                restart_after: Some(5.0),
+                ..FaultRegime::default()
+            },
+        );
+        let mut a = plan.node_faults(11).unwrap();
+        let mut b = plan.node_faults(11).unwrap();
+        for k in 0..200 {
+            let now = (k + 1) as f64;
+            assert_eq!(a.begin_period(now), b.begin_period(now), "period {k}");
+        }
+        assert_eq!(a.events(), b.events());
+    }
+
+    #[test]
+    fn node_streams_are_independent() {
+        let plan = FaultPlan::seeded(9).with_rule(NodeSelector::All, dropout_regime(0.5));
+        let mut a = plan.node_faults(0).unwrap();
+        let mut b = plan.node_faults(1).unwrap();
+        let mut differs = false;
+        for k in 0..64 {
+            let now = (k + 1) as f64;
+            if a.begin_period(now) != b.begin_period(now) {
+                differs = true;
+            }
+        }
+        assert!(differs, "distinct nodes drew identical fault sequences");
+    }
+
+    #[test]
+    fn scheduled_crash_fires_once_then_restarts() {
+        let regime = FaultRegime {
+            crash_at: Some(10.0),
+            restart_after: Some(3.0),
+            ..FaultRegime::default()
+        };
+        let plan = FaultPlan::seeded(3).with_rule(NodeSelector::Node(0), regime);
+        let mut f = plan.node_faults(0).unwrap();
+        assert!(matches!(f.begin_period(9.0), FaultAction::Run(_)));
+        assert_eq!(
+            f.begin_period(10.0),
+            FaultAction::Crash { permanent: false }
+        );
+        assert_eq!(f.begin_period(11.0), FaultAction::Down);
+        assert_eq!(f.begin_period(12.0), FaultAction::Down);
+        // 13.0 - 10.0 >= 3.0 -> restart, then run normally; the schedule
+        // is spent so no second crash.
+        assert_eq!(f.begin_period(13.0), FaultAction::Restart);
+        for k in 0..50 {
+            assert!(matches!(
+                f.begin_period(14.0 + k as f64),
+                FaultAction::Run(_)
+            ));
+        }
+        let kinds: Vec<_> = f.events().iter().map(|e| e.kind).collect();
+        assert_eq!(kinds, vec![FaultEventKind::Crash, FaultEventKind::Restart]);
+    }
+
+    #[test]
+    fn permanent_crash_never_restarts() {
+        let regime = FaultRegime {
+            crash_at: Some(1.0),
+            ..FaultRegime::default()
+        };
+        let plan = FaultPlan::seeded(3).with_rule(NodeSelector::All, regime);
+        let mut f = plan.node_faults(5).unwrap();
+        assert_eq!(f.begin_period(1.0), FaultAction::Crash { permanent: true });
+        for k in 0..100 {
+            assert_eq!(f.begin_period(2.0 + k as f64), FaultAction::Down);
+        }
+    }
+
+    #[test]
+    fn zero_prob_channels_consume_no_randomness() {
+        // A crash-only schedule makes no draws, so its Run periods carry
+        // no sensor/actuator faults and its behaviour is draw-free: two
+        // instances stay in lockstep however the other channels are set
+        // to zero.
+        let regime = FaultRegime {
+            crash_at: Some(1e9),
+            ..FaultRegime::default()
+        };
+        let plan = FaultPlan::seeded(8).with_rule(NodeSelector::All, regime);
+        let mut f = plan.node_faults(2).unwrap();
+        for k in 0..200 {
+            match f.begin_period(k as f64) {
+                FaultAction::Run(pf) => {
+                    assert!(!pf.dropout && pf.garble.is_none());
+                    assert_eq!(pf.actuator, ActuatorFault::None);
+                    assert!(!pf.panic);
+                }
+                other => panic!("unexpected action {other:?}"),
+            }
+        }
+        assert!(f.events().is_empty());
+    }
+
+    #[test]
+    fn scheduled_panic_fires_once() {
+        let regime = FaultRegime {
+            panic_at: Some(4.0),
+            ..FaultRegime::default()
+        };
+        let plan = FaultPlan::seeded(5).with_rule(NodeSelector::All, regime);
+        let mut f = plan.node_faults(1).unwrap();
+        assert!(matches!(f.begin_period(3.0), FaultAction::Run(pf) if !pf.panic));
+        assert!(matches!(f.begin_period(4.0), FaultAction::Run(pf) if pf.panic));
+        assert!(matches!(f.begin_period(5.0), FaultAction::Run(pf) if !pf.panic));
+    }
+
+    #[test]
+    fn dropout_rate_is_plausible() {
+        let plan = FaultPlan::seeded(21).with_rule(NodeSelector::All, dropout_regime(0.1));
+        let mut f = plan.node_faults(0).unwrap();
+        let mut hits = 0;
+        let n = 5000;
+        for k in 0..n {
+            if let FaultAction::Run(pf) = f.begin_period(k as f64) {
+                if pf.dropout {
+                    hits += 1;
+                }
+            }
+        }
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.1).abs() < 0.02, "rate {rate}");
+    }
+}

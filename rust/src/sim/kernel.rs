@@ -756,6 +756,38 @@ impl ShardKernel {
         node.resident = false;
     }
 
+    /// Re-adopt a previously released node into the slots it already owns
+    /// (the inverse of [`release`](Self::release) — a restart after a
+    /// crash outage). The node's views are re-gathered in place: indices,
+    /// capacities and every other resident node are untouched, so a
+    /// restart costs one state copy and nothing else. The consts memo is
+    /// invalidated so the next [`period_add`](Self::period_add) rebuilds
+    /// the hoisted sub-step constants for this node.
+    pub(crate) fn readopt(&mut self, j: usize, node: &mut NodeSim) {
+        debug_assert!(self.resident, "readopt on a non-resident kernel");
+        debug_assert!(node.staged.is_none() && !node.resident);
+        let first = self.node_first[j].0 as usize;
+        debug_assert_eq!(self.node_len[j] as usize, node.devices.len());
+        for (i, dev) in node.devices.iter().enumerate() {
+            let s = first + i;
+            self.nominal[s] = dev.package.target();
+            self.rngs[s] = dev.rng.clone();
+            self.dists[s] = dev.disturbances.clone();
+            self.packages[s] = dev.package.clone();
+            self.plants[s] = dev.plant.clone();
+            self.ou[s] = dev.ou;
+            self.backlog[s] = dev.backlog;
+            self.last_beat[s] = dev.last_beat;
+            self.last_power[s] = dev.last_power;
+            self.beats_emitted[s] = dev.beats;
+            self.last_dist[s] = dev.last_dist;
+        }
+        self.times[j] = node.time;
+        self.energies[j] = node.energy.clone();
+        self.consts_h[j] = f64::NAN;
+        node.resident = true;
+    }
+
     /// Begin a resident control period of `dt` seconds: fix the sub-step
     /// grid and clear the enrollment marks. Panics on a non-positive or
     /// non-finite `dt` — the lockstep executor never produces one.

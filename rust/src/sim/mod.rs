@@ -22,6 +22,9 @@
 //! * [`simd`] — the fixed-width `f64x4` lane type the kernel's vectorized
 //!   stepping path is built on (lane-exact: every op is bit-identical to
 //!   its four scalar applications),
+//! * [`faults`] — deterministic fault injection (sensor dropout, garbled
+//!   telemetry, actuator faults, crash/restart) driving the control-plane
+//!   degradation ladder; an empty plan is byte-free on every path,
 //! * [`clock`] — the virtual experiment clock.
 //!
 //! **Honesty rule**: ground-truth parameters never leak outside `sim::`;
@@ -32,6 +35,7 @@ pub mod clock;
 pub mod cluster;
 pub mod device;
 pub mod disturbance;
+pub mod faults;
 pub mod kernel;
 pub mod node;
 pub mod plant;
@@ -41,5 +45,9 @@ pub mod simd;
 pub use clock::VirtualClock;
 pub use cluster::{Cluster, ClusterId};
 pub use device::{Device, DeviceKind, DeviceSensors, DeviceSpec};
+pub use faults::{
+    ActuatorFault, FaultAction, FaultEvent, FaultEventKind, FaultPlan, FaultRegime, NodeFaults,
+    NodeSelector, PeriodFaults,
+};
 pub use kernel::{ShardKernel, SimPath};
 pub use node::{NodeSensors, NodeSim, StepSensors};

@@ -34,8 +34,39 @@
 //! move wall time, never bytes.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, Once};
 use std::thread::JoinHandle;
+
+thread_local! {
+    /// Set while `catch_quiet` runs on this thread: the global panic hook
+    /// swallows the default stderr backtrace for panics we intend to catch
+    /// and quarantine (a 1k-node campaign surviving one crashing engine
+    /// must not spray a thousand-line backtrace per period).
+    static SUPPRESS_PANIC_OUTPUT: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Installs the quiet-capable panic hook exactly once, process-wide.
+static QUIET_HOOK: Once = Once::new();
+
+/// `std::panic::catch_unwind` with the default panic output suppressed for
+/// the duration of the call (on this thread only — other threads' panics
+/// still print). Used by the fleet executor to quarantine a panicking node
+/// engine at the worker boundary without flooding stderr; the payload is
+/// still returned so callers can log the failure their own way.
+pub(crate) fn catch_quiet<R>(f: impl FnOnce() -> R) -> std::thread::Result<R> {
+    QUIET_HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            if !SUPPRESS_PANIC_OUTPUT.with(|s| s.get()) {
+                prev(info);
+            }
+        }));
+    });
+    SUPPRESS_PANIC_OUTPUT.with(|s| s.set(true));
+    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+    SUPPRESS_PANIC_OUTPUT.with(|s| s.set(false));
+    r
+}
 
 /// Number of worker threads to use (the machine's parallelism).
 pub fn default_threads() -> usize {
@@ -586,6 +617,16 @@ mod tests {
     fn empty_and_single() {
         assert_eq!(par_map(Vec::<u32>::new(), |x| x), Vec::<u32>::new());
         assert_eq!(par_map(vec![9], |x| x + 1), vec![10]);
+    }
+
+    #[test]
+    fn catch_quiet_returns_ok_and_err() {
+        assert_eq!(catch_quiet(|| 41 + 1).unwrap(), 42);
+        let err = catch_quiet(|| -> u32 { panic!("boom") });
+        assert!(err.is_err());
+        // The hook must be restored to pass-through: a normal closure
+        // afterwards still works and the thread is unpoisoned.
+        assert_eq!(catch_quiet(|| 7).unwrap(), 7);
     }
 
     #[test]
