@@ -19,7 +19,14 @@
 //!   after the empty-plan byte-identity contract is asserted in-bench
 //!   (`faults_empty_plan_identical`, grepped by the CI gate), and the
 //!   steady-state allocation check extended over the fault-check branch
-//!   of the no-fault hot path.
+//!   of the no-fault hot path;
+//! * **coordinator tree**: `fleet_tree_node_ticks_per_s_*` — the same
+//!   drive shape with a depth-3 hierarchical `CoordinatorTree` at the
+//!   budget layer — reported only after the depth-1-vs-flat and
+//!   parallel-vs-serial byte-identity contracts are asserted in-bench
+//!   (`tree_vs_flat_identical`, grepped by the CI gate), plus a
+//!   counting-allocator window over full tree-mode control periods
+//!   (epoch allocation at every level included).
 //!
 //! Emits the machine-readable `BENCH_l3.json` (override the path with
 //! `BENCH_L3_JSON`). `POWERCTL_BENCH_SMOKE=1` caps iterations and fleet
@@ -36,11 +43,13 @@ use powerctl::coordinator::experiment::{run_closed_loop, RunConfig};
 use powerctl::coordinator::progress::ProgressAggregator;
 use powerctl::experiments::{identify, Ctx, Scale};
 use powerctl::control::node_budget::{ideal_device_model, DeviceCtl, DeviceSplitSpec, NodeBudgetController};
+use powerctl::control::tree::{BudgetPolicySpec, CoordinatorTree, TreeSpec};
 use powerctl::coordinator::hetero::HeteroBackend;
 use powerctl::fleet::coordinator::node_seed;
 use powerctl::fleet::{
-    run_fleet, run_fleet_threaded, run_fleet_with_faults, run_fleet_with_path, BudgetedPolicy,
-    FleetConfig, NodeHardware, NodePolicySpec, NodeSpec, ShardedExecutor, SimPath, WorkerConfig,
+    run_fleet, run_fleet_threaded, run_fleet_tree_with_path, run_fleet_with_faults,
+    run_fleet_with_path, BudgetedPolicy, FleetConfig, NodeHardware, NodePolicySpec, NodeSpec,
+    ShardedExecutor, SimPath, WorkerConfig,
 };
 use powerctl::sim::device::DeviceSpec;
 use powerctl::sim::faults::{FaultPlan, FaultRegime, NodeSelector};
@@ -514,6 +523,169 @@ fn main() {
             out.node_ticks
         );
         report.add_metric(&format!("fleet_faulty_node_ticks_per_s_{n}"), tps);
+    }
+
+    section("coordinator tree (depth-1 identity + hierarchical epoch throughput)");
+    {
+        // Contract first, throughput second — same shape as the fault
+        // section. Two identities are asserted in the same binary that
+        // reports the tree throughput, so the `tree_vs_flat_identical`
+        // metric the CI gate greps for cannot appear without both having
+        // held on this build:
+        //  (1) the depth-1 tree is byte-identical to the flat budget
+        //      path (records AND ceiling trace);
+        //  (2) a depth-3 tree on an all-core pool (parallel sub-tree
+        //      passes) is byte-identical to the same tree on a forced
+        //      single-thread pool (serial allocation).
+        let to_bytes = |out: &powerctl::fleet::FleetOutcome| {
+            out.records
+                .iter()
+                .map(|r| r.to_json().dump())
+                .collect::<Vec<_>>()
+                .join("\n")
+        };
+        {
+            let specs = gros_specs(&ident, 8, 0.15);
+            let cfg = FleetConfig {
+                budget: 85.0 * 8.0,
+                period: 1.0,
+                realloc_every: 5,
+                total_beats: 400,
+                max_time: 60.0,
+                seed: 11,
+                threads: None,
+            };
+            let flat = run_fleet_with_path(
+                &specs,
+                &mut SlackProportional::default(),
+                &cfg,
+                SimPath::Batched,
+            );
+            let mut d1 = CoordinatorTree::new(&TreeSpec::flat(
+                BudgetPolicySpec::SlackProportional,
+                specs.len(),
+            ));
+            let depth1 = run_fleet_tree_with_path(&specs, &mut d1, &cfg, SimPath::Batched);
+            assert_eq!(
+                to_bytes(&flat),
+                to_bytes(&depth1),
+                "depth-1 tree records diverge from the flat budget path"
+            );
+            assert_eq!(
+                flat.limits_trace, depth1.limits_trace,
+                "depth-1 tree ceiling trace diverges from the flat budget path"
+            );
+
+            let d3_spec =
+                TreeSpec::balanced(BudgetPolicySpec::SlackProportional, 3, 2, specs.len());
+            let mut d3_par = CoordinatorTree::new(&d3_spec);
+            let parallel = run_fleet_tree_with_path(&specs, &mut d3_par, &cfg, SimPath::Batched);
+            let serial_cfg = FleetConfig {
+                threads: Some(1),
+                ..cfg.clone()
+            };
+            let mut d3_ser = CoordinatorTree::new(&d3_spec);
+            let serial =
+                run_fleet_tree_with_path(&specs, &mut d3_ser, &serial_cfg, SimPath::Batched);
+            assert_eq!(
+                to_bytes(&parallel),
+                to_bytes(&serial),
+                "parallel sub-tree passes diverge from serial tree allocation"
+            );
+            assert_eq!(
+                parallel.limits_trace, serial.limits_trace,
+                "parallel vs serial tree ceiling traces diverge"
+            );
+            println!(
+                "  tree-vs-flat + parallel-vs-serial equivalence: byte-identical on an 8-node fleet"
+            );
+            report.add_metric("tree_vs_flat_identical", 1.0);
+        }
+
+        // Throughput with a depth-3, arity-8 tree at the budget layer —
+        // same drive shape as the flat `fleet_simd_*` keys, so the cost
+        // of hierarchical epochs is directly comparable.
+        let sizes: &[usize] = if smoke() { &[16, 64, 256] } else { &[16, 256, 1024] };
+        for &n in sizes {
+            let periods = if smoke() { 20.0 } else { 120.0 };
+            let cfg = FleetConfig {
+                budget: 95.0 * n as f64,
+                period: 1.0,
+                realloc_every: 5,
+                total_beats: u64::MAX,
+                max_time: periods,
+                seed: 42,
+                threads: None,
+            };
+            let specs = gros_specs(&ident, n, 0.15);
+            let mut tree = CoordinatorTree::new(&TreeSpec::balanced(
+                BudgetPolicySpec::SlackProportional,
+                3,
+                8,
+                n,
+            ));
+            let out = run_fleet_tree_with_path(&specs, &mut tree, &cfg, SimPath::Batched);
+            let tps = out.node_ticks as f64 / out.wall_seconds;
+            println!(
+                "  tree     {n:>5} nodes: {tps:>12.0} node-ticks/s ({} ticks, depth 3, {} interiors, max {} children)",
+                out.node_ticks,
+                tree.interiors().len(),
+                tree.max_children()
+            );
+            report.add_metric(&format!("fleet_tree_node_ticks_per_s_{n}"), tps);
+        }
+
+        // Zero-allocation window over FULL tree-mode control periods:
+        // tick, the hierarchical epoch (upward aggregation, root
+        // allocation, downward re-apportioning at every level — via the
+        // executor's parallel sub-tree passes) and ceiling application.
+        // Tree construction and rebalance migrations may allocate; the
+        // steady state must not (grant trace off — recording clones per
+        // epoch by design).
+        let n = if smoke() { 32 } else { 256 };
+        let (warm, measured) = (50u64, 25u64);
+        let cfg = WorkerConfig {
+            period: 1.0,
+            total_beats: u64::MAX,
+            max_time: (warm + measured + 8) as f64,
+        };
+        let specs = gros_specs(&ident, n, 0.15);
+        let seeds: Vec<u64> = (0..n).map(|i| node_seed(42, i)).collect();
+        let threads = default_threads().min(n);
+        let mut exec = ShardedExecutor::new(&specs, 95.0, cfg, &seeds, threads);
+        let mut tree = CoordinatorTree::new(&TreeSpec::balanced(
+            BudgetPolicySpec::SlackProportional,
+            3,
+            8,
+            n,
+        ));
+        let budget = 95.0 * n as f64;
+        let mut limits = vec![0.0; n];
+        let mut now = 0.0;
+        let mut epoch = |exec: &mut ShardedExecutor, tree: &mut CoordinatorTree| {
+            now += 1.0;
+            exec.tick(now);
+            exec.allocate_tree(tree, now, budget, &mut limits);
+            exec.set_limits(&limits);
+        };
+        for _ in 1..=warm {
+            epoch(&mut exec, &mut tree);
+        }
+        exec.set_rebalance_every(0);
+        let before = allocations();
+        for _ in warm + 1..=warm + measured {
+            epoch(&mut exec, &mut tree);
+        }
+        let delta = allocations() - before;
+        println!(
+            "  allocations over {measured} steady-state tree-mode periods × {n} nodes \
+             (tick + epoch allocation at every level + ceiling application): {delta}"
+        );
+        report.add_metric("fleet_tree_steady_state_allocations", delta as f64);
+        assert_eq!(
+            delta, 0,
+            "steady-state tree-mode control period allocated {delta} times"
+        );
     }
 
     section("SIMD sub-step components (scalar vs lanes, 1024 devices)");

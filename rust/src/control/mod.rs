@@ -10,7 +10,11 @@
 //! * [`budget`] — cluster-level power-budget allocation across node-local
 //!   loops (the fleet extension);
 //! * [`node_budget`] — the same budgeting shapes one level down: splitting
-//!   a node's cap across its devices (the hierarchical CPU+GPU extension).
+//!   a node's cap across its devices (the hierarchical CPU+GPU extension);
+//! * [`tree`] — the budget layer made recursive: a coordinator tree of
+//!   interior [`BudgetPolicy`] allocators (rack → row → datacenter,
+//!   arbitrary depth/arity) whose degenerate depth-1 shape *is* the flat
+//!   fleet path.
 
 pub mod adaptive;
 pub mod antiwindup;
@@ -18,9 +22,11 @@ pub mod baseline;
 pub mod budget;
 pub mod node_budget;
 pub mod pi;
+pub mod tree;
 
 pub use adaptive::AdaptivePi;
 pub use baseline::{Policy, StaticCap, Uncontrolled};
 pub use budget::{BudgetPolicy, GreedyRepack, NodeReport, SlackProportional, UniformBudget};
 pub use node_budget::{DeviceCtl, DeviceMeasurement, DeviceSplitSpec, NodeBudgetController};
 pub use pi::{PiConfig, PiController};
+pub use tree::{BudgetPolicySpec, CoordinatorTree, EpochGrants, InteriorInfo, TreeSpec};

@@ -1,0 +1,920 @@
+//! Hierarchical budget allocation: a coordinator tree of
+//! [`BudgetPolicy`] allocators (rack → row → datacenter, arbitrary depth
+//! and arity).
+//!
+//! The flat budget layer ([`crate::control::budget`]) puts one allocator
+//! in front of every node — its serial section is O(fleet). This module
+//! makes that layer *recursive*: a [`CoordinatorTree`] built from a
+//! [`TreeSpec`] places an interior [`BudgetPolicy`] over every group of
+//! children, exactly the way [`crate::control::node_budget`] places a
+//! split policy over a node's devices. Each epoch:
+//!
+//! * **upward** — every interior aggregates its children's
+//!   [`NodeReport`]s into one group report (sums of limit/pcap/power and
+//!   of the hardware range; setpoint/progress summed over *demanding*
+//!   children only, so a static NaN-setpoint child can never poison the
+//!   group deficit; parked children claim only their floor);
+//! * **root** — the root allocator apportions the global budget across
+//!   its direct children (leaves and/or sub-trees) — the only serial
+//!   section at fleet scope, O(children of the root);
+//! * **downward** — every interior re-apportions the slice it was
+//!   granted across its own children; a leaf's final grant is its node
+//!   ceiling, identical in meaning to the flat layer's output.
+//!
+//! Per level the serial work is O(children of that interior); disjoint
+//! sub-trees share nothing and run in parallel on the fleet executor's
+//! worker pool ([`crate::fleet::executor`]). The flat path is the
+//! *degenerate depth-1 tree*: a root whose children are all leaves calls
+//! its policy on the verbatim leaf reports — the same `allocate_into`
+//! invocation, byte for byte (`tests/tree_equivalence.rs`).
+//!
+//! Failure composes unchanged: a crashed leaf reports `failed`, its
+//! enclosing interior parks it at the hardware floor and its aggregated
+//! claim drops to the floor in the same upward pass, so the reclaimed
+//! watts are visible at *every* level within one epoch
+//! (`tests/fault_determinism.rs`).
+
+use crate::control::budget::{
+    BudgetPolicy, FrozenLimits, GreedyRepack, NodeReport, SlackProportional, UniformBudget,
+};
+
+/// Buildable budget-policy selector — the tree equivalent of
+/// [`crate::control::node_budget::DeviceSplitSpec`]: a [`TreeSpec`] names
+/// the allocator of each interior node, the built [`CoordinatorTree`]
+/// owns the instances.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BudgetPolicySpec {
+    /// [`FrozenLimits`]: every child keeps its current ceiling.
+    Frozen,
+    /// [`UniformBudget`]: even split across unfinished children.
+    Uniform,
+    /// [`SlackProportional`] with default margins.
+    SlackProportional,
+    /// [`GreedyRepack`] with default margins.
+    GreedyRepack,
+}
+
+impl BudgetPolicySpec {
+    /// Every selectable policy, campaign/table order.
+    pub const ALL: [BudgetPolicySpec; 4] = [
+        BudgetPolicySpec::Frozen,
+        BudgetPolicySpec::Uniform,
+        BudgetPolicySpec::SlackProportional,
+        BudgetPolicySpec::GreedyRepack,
+    ];
+
+    /// Instantiate the policy.
+    pub fn build(&self) -> Box<dyn BudgetPolicy> {
+        match self {
+            BudgetPolicySpec::Frozen => Box::new(FrozenLimits),
+            BudgetPolicySpec::Uniform => Box::new(UniformBudget),
+            BudgetPolicySpec::SlackProportional => Box::new(SlackProportional::default()),
+            BudgetPolicySpec::GreedyRepack => Box::new(GreedyRepack::default()),
+        }
+    }
+
+    /// The policy's table name (matches [`BudgetPolicy::name`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            BudgetPolicySpec::Frozen => "frozen",
+            BudgetPolicySpec::Uniform => "uniform",
+            BudgetPolicySpec::SlackProportional => "slack-proportional",
+            BudgetPolicySpec::GreedyRepack => "greedy-repack",
+        }
+    }
+}
+
+/// Shape of a coordinator tree. Leaves are fleet nodes (today's per-node
+/// PI loops), interiors are budget allocators.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TreeSpec {
+    /// `k` leaf nodes, attached *directly* as children of the enclosing
+    /// interior (they are individual children, not one aggregate — this
+    /// is what makes the depth-1 tree literally the flat budget path).
+    Leaves(usize),
+    /// An interior allocator over a group of children (leaves and/or
+    /// deeper interiors).
+    Interior {
+        /// The allocator apportioning this interior's granted budget.
+        policy: BudgetPolicySpec,
+        /// Child groups, fixed order (leaf indices are assigned in
+        /// depth-first spec order).
+        children: Vec<TreeSpec>,
+    },
+}
+
+impl TreeSpec {
+    /// The degenerate depth-1 tree: one root allocator over `n` direct
+    /// leaves — semantically identical to the flat budget layer.
+    pub fn flat(policy: BudgetPolicySpec, n: usize) -> TreeSpec {
+        TreeSpec::Interior {
+            policy,
+            children: vec![TreeSpec::Leaves(n)],
+        }
+    }
+
+    /// A balanced tree of `depth` interior levels with up to `arity`
+    /// children per interior, over `leaves` fleet nodes split as evenly
+    /// as possible (remainders land on the first groups). `depth == 1`
+    /// is [`flat`](TreeSpec::flat); every interior uses `policy`.
+    pub fn balanced(policy: BudgetPolicySpec, depth: usize, arity: usize, leaves: usize) -> TreeSpec {
+        assert!(depth >= 1, "a tree needs at least one interior level");
+        assert!(leaves >= 1, "a tree needs at least one leaf");
+        if depth == 1 {
+            return TreeSpec::flat(policy, leaves);
+        }
+        assert!(arity >= 2, "interior levels need arity >= 2");
+        let groups = arity.min(leaves);
+        let (base, extra) = (leaves / groups, leaves % groups);
+        let children = (0..groups)
+            .map(|g| {
+                let part = base + usize::from(g < extra);
+                TreeSpec::balanced(policy, depth - 1, arity, part)
+            })
+            .collect();
+        TreeSpec::Interior { policy, children }
+    }
+
+    /// Total leaf (fleet node) count under this spec.
+    pub fn leaf_count(&self) -> usize {
+        match self {
+            TreeSpec::Leaves(k) => *k,
+            TreeSpec::Interior { children, .. } => children.iter().map(|c| c.leaf_count()).sum(),
+        }
+    }
+
+    /// Interior levels on the longest root-to-leaf path (a flat tree has
+    /// depth 1; [`TreeSpec::Leaves`] itself contributes none).
+    pub fn depth(&self) -> usize {
+        match self {
+            TreeSpec::Leaves(_) => 0,
+            TreeSpec::Interior { children, .. } => {
+                1 + children.iter().map(|c| c.depth()).max().unwrap_or(0)
+            }
+        }
+    }
+}
+
+/// A child slot of an interior node inside a sub-tree.
+enum Child {
+    /// A fleet node, by global leaf index.
+    Leaf(usize),
+    /// A deeper interior, by index into the owning sub-tree's node list.
+    Node(usize),
+}
+
+/// A child slot of the root.
+enum RootChild {
+    /// A fleet node, by global leaf index.
+    Leaf(usize),
+    /// A whole sub-tree, by index into [`CoordinatorTree::subtrees`].
+    Sub(usize),
+}
+
+/// Scratch report used only to pre-size buffers; overwritten before any
+/// policy reads it.
+fn blank_report() -> NodeReport {
+    NodeReport {
+        node_id: 0,
+        limit: 0.0,
+        pcap: 0.0,
+        power: 0.0,
+        progress: 0.0,
+        setpoint: f64::NAN,
+        pcap_min: 0.0,
+        pcap_max: 0.0,
+        done: false,
+        failed: false,
+    }
+}
+
+/// Aggregate a group of child reports into the one report the *parent*
+/// allocator sees — the contract every level of the tree repeats:
+///
+/// * `limit`/`power` and the hardware range sum over all children;
+/// * a parked child (done or failed) claims only its floor: its `pcap`
+///   contribution is `pcap_min`, so a crashed leaf's reclaimed watts are
+///   visible in the aggregate on the *same* epoch at every level;
+/// * `setpoint`/`progress` sum over *demanding* children only (finite
+///   setpoint, not parked) — a static or parked child can neither poison
+///   nor dilute the group deficit; with no demanding child the aggregate
+///   setpoint is NaN (never pinched, like a static node);
+/// * `done` requires every child done; `failed` marks a group that is
+///   entirely parked but not entirely done, so the parent parks it and
+///   reclaims its watts exactly as the flat layer parks a crashed node.
+fn aggregate(id: u32, reports: &[NodeReport]) -> NodeReport {
+    let mut agg = blank_report();
+    agg.node_id = id;
+    let mut demanding = false;
+    let mut all_done = true;
+    let mut all_parked = true;
+    for r in reports {
+        agg.limit += r.limit;
+        agg.power += r.power;
+        agg.pcap += if r.parked() { r.pcap_min } else { r.pcap };
+        agg.pcap_min += r.pcap_min;
+        agg.pcap_max += r.pcap_max;
+        if r.setpoint.is_finite() && !r.parked() {
+            if !demanding {
+                agg.setpoint = 0.0;
+                demanding = true;
+            }
+            agg.setpoint += r.setpoint;
+            agg.progress += r.progress;
+        }
+        all_done &= r.done;
+        all_parked &= r.parked();
+    }
+    agg.done = all_done;
+    agg.failed = all_parked && !all_done;
+    agg
+}
+
+/// One interior allocator inside a sub-tree, with its pre-allocated
+/// epoch scratch (steady-state epochs allocate nothing).
+struct InteriorNode {
+    policy: Box<dyn BudgetPolicy>,
+    children: Vec<Child>,
+    /// Contiguous global leaf span `(first, count)` per child slot.
+    spans: Vec<(usize, usize)>,
+    /// Gathered child reports, child order (epoch scratch).
+    reports: Vec<NodeReport>,
+    /// Grants to the children, child order (epoch scratch).
+    limits: Vec<f64>,
+    /// The upward pass's aggregate of this whole group.
+    agg: NodeReport,
+    /// Budget granted from above this epoch.
+    granted: f64,
+    /// Distance from the tree root (root = 0).
+    level: usize,
+    /// Global leaf span of the whole group.
+    first_leaf: usize,
+    n_leaves: usize,
+}
+
+/// A top-level sub-tree (one `Interior` child of the root): its interior
+/// nodes in depth-first order (`nodes[0]` is the sub-tree root; children
+/// always carry larger indices than their parent), owning the contiguous
+/// global leaf range `first_leaf .. first_leaf + n_leaves`.
+///
+/// Sub-trees share no state with each other, which is what lets the
+/// fleet executor run the upward and downward passes of different
+/// sub-trees on different workers
+/// ([`ShardedExecutor::allocate_tree`](crate::fleet::ShardedExecutor::allocate_tree)).
+pub(crate) struct Subtree {
+    nodes: Vec<InteriorNode>,
+    first_leaf: usize,
+    n_leaves: usize,
+}
+
+impl Subtree {
+    fn build(spec: &TreeSpec, leaf_counter: &mut usize) -> Subtree {
+        let first_leaf = *leaf_counter;
+        let mut nodes = Vec::new();
+        build_interior(&mut nodes, spec, leaf_counter, 1);
+        Subtree {
+            nodes,
+            first_leaf,
+            n_leaves: *leaf_counter - first_leaf,
+        }
+    }
+
+    /// The upward pass: gather every interior's child reports and fold
+    /// them into the group aggregates, leaves to sub-tree root. Reads
+    /// only this sub-tree's leaf slice of `leaf_reports`; mutates only
+    /// this sub-tree.
+    pub(crate) fn upward(&mut self, leaf_reports: &[NodeReport]) {
+        for i in (0..self.nodes.len()).rev() {
+            for slot in 0..self.nodes[i].children.len() {
+                let r = match self.nodes[i].children[slot] {
+                    Child::Leaf(g) => leaf_reports[g],
+                    Child::Node(k) => self.nodes[k].agg,
+                };
+                self.nodes[i].reports[slot] = r;
+            }
+            let agg = aggregate(i as u32, &self.nodes[i].reports);
+            self.nodes[i].agg = agg;
+        }
+    }
+
+    /// The downward pass: starting from the budget granted by the root
+    /// (see [`set_granted`](Subtree::set_granted)), every interior
+    /// apportions its slice across its children in depth-first order.
+    /// Leaf grants land in `out`, this sub-tree's *local* limit slice
+    /// (`out.len() == n_leaves`, local index = global − `first_leaf`).
+    pub(crate) fn downward(&mut self, t: f64, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.n_leaves);
+        for i in 0..self.nodes.len() {
+            {
+                let node = &mut self.nodes[i];
+                let granted = node.granted;
+                node.policy.allocate_into(t, granted, &node.reports, &mut node.limits);
+            }
+            for slot in 0..self.nodes[i].children.len() {
+                let grant = self.nodes[i].limits[slot];
+                match self.nodes[i].children[slot] {
+                    Child::Leaf(g) => out[g - self.first_leaf] = grant,
+                    Child::Node(k) => self.nodes[k].granted = grant,
+                }
+            }
+        }
+    }
+
+    /// The sub-tree root's aggregate from the last upward pass.
+    pub(crate) fn agg(&self) -> NodeReport {
+        self.nodes[0].agg
+    }
+
+    /// Stage the root's grant ahead of [`downward`](Subtree::downward).
+    pub(crate) fn set_granted(&mut self, budget: f64) {
+        self.nodes[0].granted = budget;
+    }
+
+    /// Global leaf range `[first, end)` owned by this sub-tree.
+    pub(crate) fn leaf_span(&self) -> (usize, usize) {
+        (self.first_leaf, self.first_leaf + self.n_leaves)
+    }
+}
+
+/// Depth-first flattening of an `Interior` spec into `nodes`; returns
+/// the new node's index. Children always land at larger indices than
+/// their parent — the invariant both passes iterate on.
+fn build_interior(
+    nodes: &mut Vec<InteriorNode>,
+    spec: &TreeSpec,
+    leaf_counter: &mut usize,
+    level: usize,
+) -> usize {
+    let TreeSpec::Interior { policy, children } = spec else {
+        unreachable!("build_interior is only called on Interior specs");
+    };
+    assert!(!children.is_empty(), "interior nodes need at least one child");
+    let idx = nodes.len();
+    let first_leaf = *leaf_counter;
+    nodes.push(InteriorNode {
+        policy: policy.build(),
+        children: Vec::new(),
+        spans: Vec::new(),
+        reports: Vec::new(),
+        limits: Vec::new(),
+        agg: blank_report(),
+        granted: 0.0,
+        level,
+        first_leaf,
+        n_leaves: 0,
+    });
+    let mut kids = Vec::new();
+    let mut spans = Vec::new();
+    for child in children {
+        match child {
+            TreeSpec::Leaves(k) => {
+                assert!(*k > 0, "TreeSpec::Leaves(0) names no nodes");
+                for _ in 0..*k {
+                    kids.push(Child::Leaf(*leaf_counter));
+                    spans.push((*leaf_counter, 1));
+                    *leaf_counter += 1;
+                }
+            }
+            interior @ TreeSpec::Interior { .. } => {
+                let first = *leaf_counter;
+                let k = build_interior(nodes, interior, leaf_counter, level + 1);
+                kids.push(Child::Node(k));
+                spans.push((first, *leaf_counter - first));
+            }
+        }
+    }
+    let n = kids.len();
+    let node = &mut nodes[idx];
+    node.children = kids;
+    node.spans = spans;
+    node.reports = vec![blank_report(); n];
+    node.limits = vec![0.0; n];
+    node.n_leaves = *leaf_counter - first_leaf;
+    idx
+}
+
+/// Static description of one interior allocator, tree enumeration order
+/// (root first, then each sub-tree's nodes depth-first) — the order the
+/// per-epoch [grant trace](CoordinatorTree::trace) uses.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InteriorInfo {
+    /// Enumeration index (root = 0).
+    pub id: u32,
+    /// Distance from the root (root = 0).
+    pub level: usize,
+    /// First global leaf index under this interior.
+    pub first_leaf: usize,
+    /// Leaves under this interior.
+    pub n_leaves: usize,
+    /// Direct children — the interior's serial section is O(this).
+    pub children: usize,
+}
+
+/// One reallocation epoch's grants, per interior in enumeration order:
+/// `grants[k][slot]` is what interior `k` granted its `slot`-th child
+/// (a node ceiling for leaf children, a sub-budget for interior ones).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpochGrants {
+    /// Epoch time [s].
+    pub t: f64,
+    /// Per-interior child grants, enumeration order.
+    pub grants: Vec<Vec<f64>>,
+}
+
+/// A built coordinator tree: one [`BudgetPolicy`] per interior over the
+/// shape a [`TreeSpec`] describes. Implements [`BudgetPolicy`] itself —
+/// the fleet drive loop cannot tell a tree from a flat allocator — and
+/// exposes the split upward/root/downward passes the fleet executor
+/// parallelizes over disjoint sub-trees.
+pub struct CoordinatorTree {
+    root_policy: Box<dyn BudgetPolicy>,
+    root_children: Vec<RootChild>,
+    /// Contiguous global leaf span per root child slot.
+    root_spans: Vec<(usize, usize)>,
+    root_reports: Vec<NodeReport>,
+    root_limits: Vec<f64>,
+    subtrees: Vec<Subtree>,
+    /// Enumeration offset of each sub-tree's `nodes[0]`.
+    subtree_offsets: Vec<usize>,
+    interior_info: Vec<InteriorInfo>,
+    n_leaves: usize,
+    depth: usize,
+    name: String,
+    trace_enabled: bool,
+    trace: Vec<EpochGrants>,
+}
+
+impl CoordinatorTree {
+    /// Build the tree for `spec` (whose root must be a
+    /// [`TreeSpec::Interior`]). All epoch scratch is pre-allocated here:
+    /// steady-state epochs allocate nothing (enabling the
+    /// [trace](CoordinatorTree::enable_trace) adds one clone per interior
+    /// per epoch).
+    pub fn new(spec: &TreeSpec) -> CoordinatorTree {
+        let TreeSpec::Interior { policy, children } = spec else {
+            panic!("the tree root must be a TreeSpec::Interior");
+        };
+        assert!(!children.is_empty(), "the tree root needs at least one child");
+        let mut leaf_counter = 0usize;
+        let mut root_children = Vec::new();
+        let mut root_spans = Vec::new();
+        let mut subtrees = Vec::new();
+        for child in children {
+            match child {
+                TreeSpec::Leaves(k) => {
+                    assert!(*k > 0, "TreeSpec::Leaves(0) names no nodes");
+                    for _ in 0..*k {
+                        root_children.push(RootChild::Leaf(leaf_counter));
+                        root_spans.push((leaf_counter, 1));
+                        leaf_counter += 1;
+                    }
+                }
+                interior @ TreeSpec::Interior { .. } => {
+                    let first = leaf_counter;
+                    let sub = Subtree::build(interior, &mut leaf_counter);
+                    root_spans.push((first, leaf_counter - first));
+                    root_children.push(RootChild::Sub(subtrees.len()));
+                    subtrees.push(sub);
+                }
+            }
+        }
+        assert!(leaf_counter > 0, "the tree names no leaves");
+
+        let mut interior_info = vec![InteriorInfo {
+            id: 0,
+            level: 0,
+            first_leaf: 0,
+            n_leaves: leaf_counter,
+            children: root_children.len(),
+        }];
+        let mut subtree_offsets = Vec::with_capacity(subtrees.len());
+        for st in &subtrees {
+            subtree_offsets.push(interior_info.len());
+            for node in &st.nodes {
+                interior_info.push(InteriorInfo {
+                    id: interior_info.len() as u32,
+                    level: node.level,
+                    first_leaf: node.first_leaf,
+                    n_leaves: node.n_leaves,
+                    children: node.children.len(),
+                });
+            }
+        }
+
+        let n_root = root_children.len();
+        CoordinatorTree {
+            root_policy: policy.build(),
+            root_children,
+            root_spans,
+            root_reports: vec![blank_report(); n_root],
+            root_limits: vec![0.0; n_root],
+            subtrees,
+            subtree_offsets,
+            interior_info,
+            n_leaves: leaf_counter,
+            depth: spec.depth(),
+            name: format!("tree-d{}-{}", spec.depth(), policy.name()),
+            trace_enabled: false,
+            trace: Vec::new(),
+        }
+    }
+
+    /// Leaves (fleet nodes) the tree allocates over.
+    pub fn leaves(&self) -> usize {
+        self.n_leaves
+    }
+
+    /// Interior levels on the longest root-to-leaf path (flat = 1).
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Static description of every interior, enumeration order.
+    pub fn interiors(&self) -> &[InteriorInfo] {
+        &self.interior_info
+    }
+
+    /// The widest interior — the serial work at any single level is
+    /// O(this), regardless of fleet size.
+    pub fn max_children(&self) -> usize {
+        self.interior_info.iter().map(|i| i.children).max().unwrap_or(0)
+    }
+
+    /// Record per-interior grants on every epoch (off by default: the
+    /// trace clones each interior's grant vector per epoch, so the
+    /// steady-state zero-allocation property only holds with it off).
+    pub fn enable_trace(&mut self) {
+        self.trace_enabled = true;
+    }
+
+    /// The recorded per-epoch, per-interior grants (empty unless
+    /// [`enable_trace`](CoordinatorTree::enable_trace) was called).
+    pub fn trace(&self) -> &[EpochGrants] {
+        &self.trace
+    }
+
+    /// The `(interior enumeration index, child slot)` chain from the
+    /// root to `leaf` — one entry per level, for asserting per-level
+    /// grant behavior in the trace.
+    pub fn path_to_leaf(&self, leaf: usize) -> Vec<(usize, usize)> {
+        assert!(leaf < self.n_leaves, "leaf {leaf} out of range");
+        let span = |spans: &[(usize, usize)]| {
+            spans
+                .iter()
+                .position(|&(a, n)| leaf >= a && leaf < a + n)
+                .expect("leaf spans tile the tree")
+        };
+        let mut path = Vec::new();
+        let slot = span(&self.root_spans);
+        path.push((0usize, slot));
+        let mut cur = match self.root_children[slot] {
+            RootChild::Leaf(_) => return path,
+            RootChild::Sub(k) => k,
+        };
+        let offset = self.subtree_offsets[cur];
+        let st = &self.subtrees[cur];
+        cur = 0;
+        loop {
+            let node = &st.nodes[cur];
+            let slot = span(&node.spans);
+            path.push((offset + cur, slot));
+            match node.children[slot] {
+                Child::Leaf(_) => return path,
+                Child::Node(k) => cur = k,
+            }
+        }
+    }
+
+    /// Top-level sub-tree count (the parallel width of an epoch).
+    pub(crate) fn subtree_count(&self) -> usize {
+        self.subtrees.len()
+    }
+
+    /// Mutable sub-tree access for the executor's parallel passes.
+    pub(crate) fn subtrees_mut(&mut self) -> &mut [Subtree] {
+        &mut self.subtrees
+    }
+
+    /// The serial root step between the two parallel passes: gather the
+    /// root's child reports (leaf reports verbatim, sub-tree aggregates
+    /// from the upward pass), run the root allocator, write direct-leaf
+    /// grants into `limits` and stage every sub-tree's granted budget.
+    pub(crate) fn root_allocate(
+        &mut self,
+        t: f64,
+        budget: f64,
+        leaf_reports: &[NodeReport],
+        limits: &mut [f64],
+    ) {
+        for slot in 0..self.root_children.len() {
+            self.root_reports[slot] = match self.root_children[slot] {
+                RootChild::Leaf(g) => leaf_reports[g],
+                RootChild::Sub(k) => self.subtrees[k].agg(),
+            };
+        }
+        self.root_policy
+            .allocate_into(t, budget, &self.root_reports, &mut self.root_limits);
+        for slot in 0..self.root_children.len() {
+            let grant = self.root_limits[slot];
+            match self.root_children[slot] {
+                RootChild::Leaf(g) => limits[g] = grant,
+                RootChild::Sub(k) => self.subtrees[k].set_granted(grant),
+            }
+        }
+    }
+
+    /// Append this epoch's grants to the trace (no-op unless enabled).
+    pub(crate) fn record_epoch(&mut self, t: f64) {
+        if !self.trace_enabled {
+            return;
+        }
+        let mut grants = Vec::with_capacity(self.interior_info.len());
+        grants.push(self.root_limits.clone());
+        for st in &self.subtrees {
+            for node in &st.nodes {
+                grants.push(node.limits.clone());
+            }
+        }
+        self.trace.push(EpochGrants { t, grants });
+    }
+}
+
+impl BudgetPolicy for CoordinatorTree {
+    /// One full epoch, serially: upward over every sub-tree, the root
+    /// allocation, downward over every sub-tree. The executor's parallel
+    /// path ([`ShardedExecutor::allocate_tree`]) runs these *same three
+    /// steps* with the sub-tree passes fanned over the worker pool —
+    /// sub-trees share no state, so the float-op order per interior is
+    /// identical and the results are byte-identical
+    /// (`tests/tree_equivalence.rs`).
+    ///
+    /// [`ShardedExecutor::allocate_tree`]: crate::fleet::ShardedExecutor::allocate_tree
+    fn allocate_into(&mut self, t: f64, budget: f64, reports: &[NodeReport], limits: &mut [f64]) {
+        debug_assert_eq!(reports.len(), self.n_leaves, "one report per leaf");
+        debug_assert_eq!(limits.len(), self.n_leaves, "one limit per leaf");
+        for st in &mut self.subtrees {
+            st.upward(reports);
+        }
+        self.root_allocate(t, budget, reports, limits);
+        for st in &mut self.subtrees {
+            let (a, b) = st.leaf_span();
+            st.downward(t, &mut limits[a..b]);
+        }
+        self.record_epoch(t);
+    }
+
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(id: u32, limit: f64, pcap: f64, progress: f64, setpoint: f64) -> NodeReport {
+        NodeReport {
+            node_id: id,
+            limit,
+            pcap,
+            power: pcap * 0.9,
+            progress,
+            setpoint,
+            pcap_min: 40.0,
+            pcap_max: 120.0,
+            done: false,
+            failed: false,
+        }
+    }
+
+    /// 8 nodes: a mix of slack, pinched and tracking, like the flat
+    /// budget suite uses.
+    fn fleet_reports() -> Vec<NodeReport> {
+        (0..8u32)
+            .map(|i| match i % 4 {
+                0 => report(i, 100.0, 60.0, 21.0, 21.0),
+                1 => report(i, 80.0, 80.0, 45.0, 55.0),
+                2 => report(i, 90.0, 86.0, 33.0, 33.2),
+                _ => report(i, 85.0, 70.0, 25.0, 25.5),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn spec_shapes_and_counts() {
+        let flat = TreeSpec::flat(BudgetPolicySpec::Uniform, 12);
+        assert_eq!(flat.leaf_count(), 12);
+        assert_eq!(flat.depth(), 1);
+
+        let b = TreeSpec::balanced(BudgetPolicySpec::Uniform, 3, 2, 8);
+        assert_eq!(b.leaf_count(), 8);
+        assert_eq!(b.depth(), 3);
+
+        // Uneven split: 10 leaves over arity 4 → groups of 3,3,2,2.
+        let u = TreeSpec::balanced(BudgetPolicySpec::Uniform, 2, 4, 10);
+        assert_eq!(u.leaf_count(), 10);
+        let TreeSpec::Interior { children, .. } = &u else { unreachable!() };
+        let sizes: Vec<usize> = children.iter().map(|c| c.leaf_count()).collect();
+        assert_eq!(sizes, vec![3, 3, 2, 2]);
+
+        // More groups than leaves degrades gracefully to one leaf each.
+        let tiny = TreeSpec::balanced(BudgetPolicySpec::Uniform, 2, 8, 3);
+        assert_eq!(tiny.leaf_count(), 3);
+        let TreeSpec::Interior { children, .. } = &tiny else { unreachable!() };
+        assert_eq!(children.len(), 3);
+    }
+
+    #[test]
+    fn depth1_tree_matches_flat_policy_exactly() {
+        // The degenerate tree IS the flat path: identical limits for
+        // every policy, bitwise.
+        let reports = fleet_reports();
+        for spec in BudgetPolicySpec::ALL {
+            let mut tree = CoordinatorTree::new(&TreeSpec::flat(spec, reports.len()));
+            let mut flat = spec.build();
+            for budget in [8.0 * 70.0, 8.0 * 85.0, 8.0 * 110.0] {
+                let a = tree.allocate(3.0, budget, &reports);
+                let b = flat.allocate(3.0, budget, &reports);
+                assert_eq!(a, b, "{} at budget {budget}", spec.name());
+            }
+        }
+    }
+
+    #[test]
+    fn deep_tree_conserves_budget_and_bounds() {
+        let reports = fleet_reports();
+        for spec in BudgetPolicySpec::ALL {
+            let mut tree =
+                CoordinatorTree::new(&TreeSpec::balanced(spec, 3, 2, reports.len()));
+            for budget in [8.0 * 60.0, 8.0 * 85.0, 8.0 * 150.0] {
+                let limits = tree.allocate(1.0, budget, &reports);
+                let total: f64 = limits.iter().sum();
+                let floor: f64 = reports.iter().map(|r| r.pcap_min).sum();
+                assert!(
+                    total <= budget.max(floor) + 1e-6,
+                    "{}: Σ{total} > {budget}",
+                    spec.name()
+                );
+                for (l, r) in limits.iter().zip(&reports) {
+                    assert!(
+                        (r.pcap_min - 1e-9..=r.pcap_max + 1e-9).contains(l),
+                        "{}: {l} outside node range",
+                        spec.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tree_allocation_is_deterministic() {
+        let reports = fleet_reports();
+        let spec = TreeSpec::balanced(BudgetPolicySpec::SlackProportional, 3, 2, 8);
+        let mut a = CoordinatorTree::new(&spec);
+        let mut b = CoordinatorTree::new(&spec);
+        for epoch in 1..=5 {
+            let t = epoch as f64 * 5.0;
+            assert_eq!(
+                a.allocate(t, 8.0 * 85.0, &reports),
+                b.allocate(t, 8.0 * 85.0, &reports)
+            );
+        }
+    }
+
+    #[test]
+    fn aggregate_contract() {
+        // Parked children claim only their floor; demanding sums skip
+        // static (NaN-setpoint) and parked children; an all-parked group
+        // that is not all-done reports failed.
+        let mut rs = vec![
+            report(0, 100.0, 90.0, 20.0, 22.0),
+            report(1, 80.0, 70.0, 30.0, f64::NAN), // static: no demand
+            report(2, 85.0, 85.0, 10.0, 40.0),
+        ];
+        let a = aggregate(7, &rs);
+        assert_eq!(a.node_id, 7);
+        assert_eq!(a.limit, 265.0);
+        assert_eq!(a.pcap, 245.0);
+        assert_eq!(a.pcap_min, 120.0);
+        assert_eq!(a.pcap_max, 360.0);
+        assert_eq!(a.setpoint, 62.0); // 22 + 40, NaN child excluded
+        assert_eq!(a.progress, 30.0); // 20 + 10, NaN child excluded
+        assert!(!a.done && !a.failed);
+
+        rs[2].failed = true; // crashed: parked, claims only the floor
+        let a = aggregate(7, &rs);
+        assert_eq!(a.pcap, 90.0 + 70.0 + 40.0);
+        assert_eq!(a.setpoint, 22.0);
+        assert_eq!(a.progress, 20.0);
+        assert!(!a.failed, "a group with live children is not failed");
+
+        for r in &mut rs {
+            r.failed = true;
+        }
+        let a = aggregate(7, &rs);
+        assert!(a.failed, "an all-parked, not-all-done group is failed");
+        assert!(a.parked());
+        assert!(!a.pinched(), "a parked group must never bid");
+        assert!(a.setpoint.is_nan(), "no demanding children → NaN setpoint");
+
+        for r in &mut rs {
+            r.failed = false;
+            r.done = true;
+        }
+        let a = aggregate(7, &rs);
+        assert!(a.done && !a.failed);
+    }
+
+    #[test]
+    fn reclamation_bubbles_up_within_one_epoch() {
+        // Depth-3, arity-2 over 8 leaves; leaf 5 crashes. At the very
+        // next epoch its enclosing interior parks it at the floor AND
+        // the grants along the whole root→leaf path drop — the watts
+        // are reclaimed at every level in one epoch.
+        let spec = TreeSpec::balanced(BudgetPolicySpec::SlackProportional, 3, 2, 8);
+        let mut tree = CoordinatorTree::new(&spec);
+        tree.enable_trace();
+        let budget = 8.0 * 85.0;
+        let mut rs = fleet_reports();
+        let before = tree.allocate(5.0, budget, &rs);
+        rs[5].failed = true;
+        let after = tree.allocate(10.0, budget, &rs);
+        assert_eq!(after[5], 40.0, "crashed leaf not parked at the floor");
+        let path = tree.path_to_leaf(5);
+        assert_eq!(path.len(), 3, "depth-3 tree has 3 allocators per path");
+        let trace = tree.trace();
+        assert_eq!(trace.len(), 2);
+        for &(interior, slot) in &path {
+            let pre = trace[0].grants[interior][slot];
+            let post = trace[1].grants[interior][slot];
+            assert!(
+                post < pre - 1.0,
+                "interior {interior} slot {slot}: grant {pre} -> {post} did not drop"
+            );
+        }
+        // Sanity: the pre-crash epoch did grant leaf 5 more than floor.
+        assert!(before[5] > 41.0);
+    }
+
+    #[test]
+    fn trace_shape_and_interior_enumeration() {
+        let spec = TreeSpec::balanced(BudgetPolicySpec::Uniform, 3, 2, 8);
+        let mut tree = CoordinatorTree::new(&spec);
+        assert_eq!(tree.leaves(), 8);
+        assert_eq!(tree.depth(), 3);
+        // 1 root + 2 level-1 + 4 level-2 interiors.
+        assert_eq!(tree.interiors().len(), 7);
+        assert_eq!(tree.max_children(), 2);
+        assert_eq!(tree.interiors()[0].level, 0);
+        let levels: Vec<usize> = tree.interiors().iter().map(|i| i.level).collect();
+        assert_eq!(levels.iter().filter(|&&l| l == 1).count(), 2);
+        assert_eq!(levels.iter().filter(|&&l| l == 2).count(), 4);
+
+        // Without enable_trace the trace stays empty.
+        let rs = fleet_reports();
+        tree.allocate(1.0, 8.0 * 85.0, &rs);
+        assert!(tree.trace().is_empty());
+        tree.enable_trace();
+        tree.allocate(2.0, 8.0 * 85.0, &rs);
+        let tr = tree.trace();
+        assert_eq!(tr.len(), 1);
+        assert_eq!(tr[0].grants.len(), 7);
+        for (g, info) in tr[0].grants.iter().zip(tree.interiors()) {
+            assert_eq!(g.len(), info.children);
+        }
+        // Every leaf's path walks levels 0,1,2 in order.
+        for leaf in 0..8 {
+            let path = tree.path_to_leaf(leaf);
+            assert_eq!(path.len(), 3);
+            for (lvl, &(interior, _)) in path.iter().enumerate() {
+                assert_eq!(tree.interiors()[interior].level, lvl);
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_root_children_leaves_and_subtrees() {
+        // A root may mix direct leaves with sub-trees.
+        let spec = TreeSpec::Interior {
+            policy: BudgetPolicySpec::Uniform,
+            children: vec![
+                TreeSpec::Leaves(2),
+                TreeSpec::Interior {
+                    policy: BudgetPolicySpec::Uniform,
+                    children: vec![TreeSpec::Leaves(3)],
+                },
+            ],
+        };
+        let mut tree = CoordinatorTree::new(&spec);
+        assert_eq!(tree.leaves(), 5);
+        assert_eq!(tree.depth(), 2);
+        assert_eq!(tree.interiors().len(), 2);
+        assert_eq!(tree.path_to_leaf(0), vec![(0, 0)]);
+        assert_eq!(tree.path_to_leaf(4).len(), 2);
+        let rs: Vec<NodeReport> = (0..5u32)
+            .map(|i| report(i, 90.0, 80.0, 20.0, 21.0))
+            .collect();
+        let limits = tree.allocate(1.0, 5.0 * 85.0, &rs);
+        assert!(limits.iter().sum::<f64>() <= 5.0 * 85.0 + 1e-6);
+    }
+}

@@ -12,6 +12,7 @@
 //! | [`fleet`] | fleet-budget campaign: energy vs ε across budget strategies |
 //! | [`hetero`] | heterogeneous-node campaign: CPU+GPU device-split strategies |
 //! | [`faults`] | fault campaign: graceful degradation under seeded fault injection |
+//! | [`tree`] | coordinator-tree campaign: depth × arity × policy scaling |
 //!
 //! Every runner writes its raw data as CSV under the context's output
 //! directory and returns a printed summary with the paper-shape checks.
@@ -28,5 +29,6 @@ pub mod fleet;
 pub mod hetero;
 pub mod replay;
 pub mod tables;
+pub mod tree;
 
 pub use common::{identify, identify_all, Ctx, Identified, Scale};

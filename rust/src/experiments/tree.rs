@@ -1,0 +1,287 @@
+//! Coordinator-tree campaign: depth × arity × budget policy scaling.
+//!
+//! The fleet campaign measures *what* reallocation buys; this one
+//! measures *how the allocator itself scales* when the budget layer goes
+//! recursive ([`crate::control::tree`]). For each fleet size it sweeps
+//! tree shapes (flat depth-1 through depth-3, several arities) and the
+//! four interior budget policies, and reports energy/makespan next to
+//! the structural numbers that matter for the north star: interior
+//! count, and the widest interior — the serial section at any level is
+//! O(that), never O(fleet).
+//!
+//! The horizon is deliberately shorter than the paper campaigns: this
+//! sweep characterizes coordination scaling (many fleet runs at up to
+//! 4096 nodes), not energy statistics — those come from `powerctl
+//! fleet`. Points run sequentially with the executor on all cores, so
+//! the epoch's parallel sub-tree passes
+//! ([`ShardedExecutor::allocate_tree`](crate::fleet::ShardedExecutor::allocate_tree))
+//! are actually exercised; every run is bit-reproducible regardless
+//! (`tests/tree_equivalence.rs`).
+
+use crate::control::tree::{BudgetPolicySpec, CoordinatorTree, TreeSpec};
+use crate::experiments::common::{Ctx, Identified};
+use crate::experiments::fleet::{heterogeneous_specs, BUDGET_PER_NODE};
+use crate::fleet::coordinator::run_fleet_tree;
+use crate::fleet::{FleetConfig, NodePolicySpec};
+use crate::util::csv::Table;
+
+/// Per-node degradation budget every tree point runs under (the
+/// mid-range fleet-campaign level; the ε sweep itself is `powerctl
+/// fleet`'s job).
+pub const TREE_EPSILON: f64 = 0.15;
+
+/// One (fleet size, shape, policy) campaign point.
+#[derive(Debug, Clone)]
+pub struct TreePoint {
+    /// Fleet size (tree leaves).
+    pub n: usize,
+    /// Interior levels (1 = the flat degenerate tree).
+    pub depth: usize,
+    /// Interior arity (0 for the flat tree: the root fans to all leaves).
+    pub arity: usize,
+    /// Interior budget policy (every level uses the same one).
+    pub policy: String,
+    /// Interior allocators in the tree.
+    pub interiors: usize,
+    /// Widest interior — per-level serial work is O(this).
+    pub max_children: usize,
+    /// Total fleet energy [J].
+    pub energy: f64,
+    /// When the last node finished [s].
+    pub makespan: f64,
+    /// Every node completed before the hard stop.
+    pub completed: bool,
+    /// Node-ticks driven (periods × nodes).
+    pub node_ticks: u64,
+    /// Wall-clock seconds of the drive loop.
+    pub wall_seconds: f64,
+}
+
+/// Fleet sizes swept per scale. `Full` covers the acceptance point
+/// (4096 nodes under a depth-3 tree); `Fast` keeps tests cheap.
+pub fn tree_sizes(ctx: &Ctx) -> Vec<usize> {
+    if ctx.scale.fleet_nodes() >= 256 {
+        vec![256, 1024, 4096]
+    } else {
+        vec![32]
+    }
+}
+
+/// `(depth, arity)` shapes swept; `(1, 0)` is the flat reference.
+pub fn tree_shapes() -> Vec<(usize, usize)> {
+    vec![(1, 0), (2, 8), (2, 32), (3, 8), (3, 16)]
+}
+
+/// The shortened campaign horizon [heartbeats] (see module docs).
+fn horizon(ctx: &Ctx) -> u64 {
+    (ctx.scale.total_beats() / 4).max(300)
+}
+
+/// Build the [`TreeSpec`] for one campaign shape.
+pub fn shape_spec(policy: BudgetPolicySpec, depth: usize, arity: usize, n: usize) -> TreeSpec {
+    if depth <= 1 {
+        TreeSpec::flat(policy, n)
+    } else {
+        TreeSpec::balanced(policy, depth, arity, n)
+    }
+}
+
+fn tree_config(ctx: &Ctx, n: usize) -> FleetConfig {
+    FleetConfig {
+        budget: BUDGET_PER_NODE * n as f64,
+        period: 1.0,
+        realloc_every: 5,
+        total_beats: horizon(ctx),
+        max_time: 3_600.0,
+        seed: ctx.seed ^ 0x7EE,
+        // All cores per run (points are sequential): the epoch's parallel
+        // sub-tree passes are part of what this campaign exercises.
+        threads: None,
+    }
+}
+
+/// Run one campaign point.
+pub fn run_point(
+    ctx: &Ctx,
+    idents: &[Identified],
+    n: usize,
+    depth: usize,
+    arity: usize,
+    policy: BudgetPolicySpec,
+) -> TreePoint {
+    let specs = heterogeneous_specs(idents, n, NodePolicySpec::Pi { epsilon: TREE_EPSILON });
+    let cfg = tree_config(ctx, n);
+    let mut tree = CoordinatorTree::new(&shape_spec(policy, depth, arity, n));
+    let out = run_fleet_tree(&specs, &mut tree, &cfg);
+    TreePoint {
+        n,
+        depth,
+        arity,
+        policy: policy.name().to_string(),
+        interiors: tree.interiors().len(),
+        max_children: tree.max_children(),
+        energy: out.total_energy,
+        makespan: out.makespan,
+        completed: out.completed,
+        node_ticks: out.node_ticks,
+        wall_seconds: out.wall_seconds,
+    }
+}
+
+/// The full campaign: size × shape × interior policy, CSV + printed table.
+pub fn run(ctx: &Ctx, idents: &[Identified]) -> (String, Vec<TreePoint>) {
+    let mut points = Vec::new();
+    for n in tree_sizes(ctx) {
+        for (depth, arity) in tree_shapes() {
+            for policy in BudgetPolicySpec::ALL {
+                points.push(run_point(ctx, idents, n, depth, arity, policy));
+            }
+        }
+    }
+
+    let mut csv = Table::new(vec![
+        "n",
+        "depth",
+        "arity",
+        "policy",
+        "interiors",
+        "max_children",
+        "energy_j",
+        "makespan_s",
+        "completed",
+        "node_ticks",
+        "wall_s",
+    ]);
+    for p in &points {
+        csv.push(vec![
+            format!("{}", p.n),
+            format!("{}", p.depth),
+            format!("{}", p.arity),
+            p.policy.clone(),
+            format!("{}", p.interiors),
+            format!("{}", p.max_children),
+            format!("{}", p.energy),
+            format!("{}", p.makespan),
+            format!("{}", p.completed as u8),
+            format!("{}", p.node_ticks),
+            format!("{}", p.wall_seconds),
+        ]);
+    }
+    let _ = csv.save(ctx.path("tree.csv"));
+
+    let mut out = format!(
+        "Coordinator-tree campaign — depth × arity × policy at {:.0} W/node, ε = {}\n\
+         per-level serial section is O(max_children), never O(n):\n\
+         {:>6} {:>5} {:>5} {:<20} {:>9} {:>6} {:>11} {:>9}\n",
+        BUDGET_PER_NODE,
+        TREE_EPSILON,
+        "n",
+        "depth",
+        "arity",
+        "policy",
+        "interiors",
+        "maxch",
+        "E[J]",
+        "T[s]"
+    );
+    for p in &points {
+        out.push_str(&format!(
+            "{:>6} {:>5} {:>5} {:<20} {:>9} {:>6} {:>11.0} {:>9.0}{}\n",
+            p.n,
+            p.depth,
+            if p.arity == 0 { p.n } else { p.arity },
+            p.policy,
+            p.interiors,
+            p.max_children,
+            p.energy,
+            p.makespan,
+            if p.completed { "" } else { "  [incomplete]" },
+        ));
+    }
+    let ticks: u64 = points.iter().map(|p| p.node_ticks).sum();
+    let wall: f64 = points.iter().map(|p| p.wall_seconds).sum();
+    if wall > 0.0 {
+        out.push_str(&format!(
+            "executor throughput under tree epochs: {:.0} node-ticks/s ({ticks} node-ticks, {wall:.2} s wall)\n",
+            ticks as f64 / wall
+        ));
+    }
+    (out, points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::common::{identify, Scale};
+    use crate::sim::cluster::ClusterId;
+
+    fn ctx(tag: &str) -> Ctx {
+        Ctx::new(
+            std::env::temp_dir().join(format!("powerctl-tree-{tag}")),
+            23,
+            Scale::Fast,
+        )
+    }
+
+    fn idents(ctx: &Ctx) -> Vec<Identified> {
+        ClusterId::ALL.iter().map(|&id| identify(ctx, id)).collect()
+    }
+
+    #[test]
+    fn campaign_produces_table_and_csv() {
+        let ctx = ctx("table");
+        let idents = idents(&ctx);
+        let (out, points) = run(&ctx, &idents);
+        assert_eq!(
+            points.len(),
+            tree_sizes(&ctx).len() * tree_shapes().len() * BudgetPolicySpec::ALL.len()
+        );
+        assert!(out.contains("slack-proportional"));
+        assert!(ctx.path("tree.csv").exists());
+        for p in &points {
+            assert!(p.completed, "{} d{} a{} incomplete", p.policy, p.depth, p.arity);
+            assert!(p.energy > 0.0);
+            // The structural claim the table prints: interiors stay small
+            // and the widest interior bounds per-level serial work.
+            assert!(p.interiors >= 1);
+            assert!(p.max_children <= p.n);
+            if p.depth >= 2 {
+                assert!(
+                    p.max_children < p.n,
+                    "deep tree with an O(n) interior: {}",
+                    p.max_children
+                );
+            }
+        }
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    }
+
+    #[test]
+    fn campaign_points_replay_identically() {
+        let ctx = ctx("replay");
+        let idents = idents(&ctx);
+        let a = run_point(&ctx, &idents, 32, 3, 8, BudgetPolicySpec::SlackProportional);
+        let b = run_point(&ctx, &idents, 32, 3, 8, BudgetPolicySpec::SlackProportional);
+        assert_eq!(a.energy, b.energy);
+        assert_eq!(a.makespan, b.makespan);
+        assert_eq!(a.node_ticks, b.node_ticks);
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    }
+
+    #[test]
+    fn depth_changes_allocation_but_stays_in_family() {
+        // A deep tree is not the flat allocator — but it must still land
+        // in the same completion/energy regime (same fleet, same ε).
+        let ctx = ctx("depth");
+        let idents = idents(&ctx);
+        let flat = run_point(&ctx, &idents, 32, 1, 0, BudgetPolicySpec::SlackProportional);
+        let deep = run_point(&ctx, &idents, 32, 3, 8, BudgetPolicySpec::SlackProportional);
+        assert!(flat.completed && deep.completed);
+        let ratio = deep.energy / flat.energy;
+        assert!(
+            (0.8..=1.25).contains(&ratio),
+            "depth-3 energy diverged from flat: ratio {ratio:.3}"
+        );
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    }
+}

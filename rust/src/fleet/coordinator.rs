@@ -33,6 +33,7 @@ use std::sync::mpsc;
 use std::time::Instant;
 
 use crate::control::budget::{BudgetPolicy, NodeReport};
+use crate::control::tree::CoordinatorTree;
 use crate::coordinator::records::RunRecord;
 use crate::fleet::executor::ShardedExecutor;
 use crate::fleet::node::{spawn_worker, Cmd, NodeSpec, WorkerConfig, WorkerHandle};
@@ -178,6 +179,76 @@ pub fn run_fleet_with_faults(
     path: SimPath,
     plan: &FaultPlan,
 ) -> FleetOutcome {
+    drive_fleet(specs, EpochAllocator::Flat(strategy), config, path, plan)
+}
+
+/// Run `specs` as a fleet under a hierarchical [`CoordinatorTree`] of
+/// budget allocators on the batched stepping path with no faults. The
+/// tree's leaf count must equal `specs.len()`. A depth-1 tree is the
+/// *same code path* as [`run_fleet`] under the tree's root policy and
+/// produces byte-identical records and `limits_trace`
+/// (`tests/tree_equivalence.rs`); the tree is taken by `&mut` so callers
+/// can read its per-epoch [grant trace](CoordinatorTree::trace) after
+/// the run.
+pub fn run_fleet_tree(
+    specs: &[NodeSpec],
+    tree: &mut CoordinatorTree,
+    config: &FleetConfig,
+) -> FleetOutcome {
+    run_fleet_tree_with_path(specs, tree, config, SimPath::Batched)
+}
+
+/// [`run_fleet_tree`] with an explicit simulation stepping path.
+pub fn run_fleet_tree_with_path(
+    specs: &[NodeSpec],
+    tree: &mut CoordinatorTree,
+    config: &FleetConfig,
+    path: SimPath,
+) -> FleetOutcome {
+    run_fleet_tree_with_faults(specs, tree, config, path, &FaultPlan::default())
+}
+
+/// [`run_fleet_tree_with_path`] under a seeded [`FaultPlan`]. The PR 7
+/// fault plane composes with the tree unchanged: a crashed leaf's
+/// `failed` report parks it at its floor, the upward pass drops its
+/// aggregated claim to the floor, and every allocator on the root→leaf
+/// path reclaims the watts on the *same* reallocation epoch
+/// (`tests/fault_determinism.rs`).
+pub fn run_fleet_tree_with_faults(
+    specs: &[NodeSpec],
+    tree: &mut CoordinatorTree,
+    config: &FleetConfig,
+    path: SimPath,
+    plan: &FaultPlan,
+) -> FleetOutcome {
+    assert_eq!(
+        tree.leaves(),
+        specs.len(),
+        "tree leaf count must match the fleet size"
+    );
+    drive_fleet(specs, EpochAllocator::Tree(tree), config, path, plan)
+}
+
+/// The budget-layer shape driving a fleet run: a flat allocator over all
+/// nodes, or a coordinator tree whose sub-tree passes the executor fans
+/// over its worker pool. One drive loop serves both — the flat path is
+/// not a parallel implementation, just the `Flat` arm.
+enum EpochAllocator<'a> {
+    Flat(&'a mut dyn BudgetPolicy),
+    Tree(&'a mut CoordinatorTree),
+}
+
+/// The single fleet drive loop behind every `run_fleet*` entry point:
+/// tick the sharded executor once per node period, and on reallocation
+/// epochs apportion the global budget through `alloc` and actuate the
+/// resulting per-node ceilings.
+fn drive_fleet(
+    specs: &[NodeSpec],
+    mut alloc: EpochAllocator<'_>,
+    config: &FleetConfig,
+    path: SimPath,
+    plan: &FaultPlan,
+) -> FleetOutcome {
     assert!(!specs.is_empty(), "fleet needs at least one node");
     let n = specs.len();
     let initial_limit = config.budget / n as f64;
@@ -208,7 +279,14 @@ pub fn run_fleet_with_faults(
             break;
         }
         if period_idx % config.realloc_every == 0 {
-            strategy.allocate_into(now, config.budget, exec.reports(), &mut limits);
+            match &mut alloc {
+                EpochAllocator::Flat(strategy) => {
+                    strategy.allocate_into(now, config.budget, exec.reports(), &mut limits);
+                }
+                EpochAllocator::Tree(tree) => {
+                    exec.allocate_tree(tree, now, config.budget, &mut limits);
+                }
+            }
             exec.set_limits(&limits);
             limits_trace.push((now, limits.clone()));
         }
@@ -216,6 +294,10 @@ pub fn run_fleet_with_faults(
     let wall = t0.elapsed().as_secs_f64();
 
     let records = exec.into_records();
+    let strategy: &dyn BudgetPolicy = match &alloc {
+        EpochAllocator::Flat(strategy) => &**strategy,
+        EpochAllocator::Tree(tree) => &**tree,
+    };
     summarize(strategy, records, limits_trace, period_idx * n as u64, wall)
 }
 
@@ -523,6 +605,33 @@ mod tests {
         assert!(!out.records[2].completed, "crashed node cannot complete");
         for i in [0usize, 1, 3] {
             assert!(out.records[i].completed, "survivor {i} did not finish");
+        }
+    }
+
+    #[test]
+    fn tree_fleet_completes_and_conserves_budget_at_the_root() {
+        // The full depth-1-vs-flat byte-identity suite lives in
+        // tests/tree_equivalence.rs; this is the fast in-tree guard that
+        // a deep tree drives a fleet to completion under the shared loop.
+        use crate::control::tree::{BudgetPolicySpec, CoordinatorTree, TreeSpec};
+        let specs = specs(8, 0.15);
+        let mut cfg = config(8);
+        cfg.budget = 8.0 * 85.0;
+        let spec = TreeSpec::balanced(BudgetPolicySpec::SlackProportional, 3, 2, 8);
+        let mut tree = CoordinatorTree::new(&spec);
+        let out = run_fleet_tree(&specs, &mut tree, &cfg);
+        assert!(out.completed, "tree fleet did not finish");
+        assert_eq!(out.strategy, "tree-d3-slack-proportional");
+        assert!(!out.limits_trace.is_empty());
+        for (t, limits) in &out.limits_trace {
+            let total: f64 = limits.iter().sum();
+            assert!(
+                total <= cfg.budget + 1e-6,
+                "budget violated at t={t}: Σ={total}"
+            );
+            for &l in limits {
+                assert!((40.0..=120.0).contains(&l), "ceiling {l} out of range");
+            }
         }
     }
 

@@ -73,7 +73,7 @@
 
 use std::time::Instant;
 
-use crate::control::budget::NodeReport;
+use crate::control::budget::{BudgetPolicy, NodeReport};
 use crate::coordinator::engine::ControlLoop;
 use crate::coordinator::records::RunRecord;
 use crate::fleet::node::{
@@ -636,6 +636,82 @@ impl ShardedExecutor {
                 }
             }
         }
+    }
+
+    /// One reallocation epoch through a hierarchical
+    /// [`CoordinatorTree`](crate::control::tree::CoordinatorTree), with
+    /// the tree's disjoint sub-trees fanned over the worker pool: a
+    /// broadcast runs every sub-tree's upward (aggregation) pass, the
+    /// root allocator runs serially — the only fleet-scope serial
+    /// section, O(children of the root) — and a second broadcast runs
+    /// every sub-tree's downward pass, each writing its own contiguous
+    /// slice of `limits`. Per interior the work is O(children), so the
+    /// serial section per *level* is O(children), not O(fleet).
+    ///
+    /// Trees with fewer than two sub-trees (including the degenerate
+    /// depth-1 flat tree) and single-thread pools take the tree's serial
+    /// [`allocate_into`](crate::control::budget::BudgetPolicy::allocate_into)
+    /// instead. Both routes execute the same three steps with the same
+    /// per-interior float-op order on disjoint state, so they are
+    /// byte-identical (`tests/tree_equivalence.rs`); steady-state epochs
+    /// allocate nothing on either (the `l3_hotpath` counting-allocator
+    /// window covers tree mode).
+    ///
+    /// Like the flat epoch path, this only computes `limits` — the
+    /// caller actuates them via [`set_limits`](Self::set_limits).
+    pub fn allocate_tree(
+        &mut self,
+        tree: &mut crate::control::tree::CoordinatorTree,
+        now: f64,
+        budget: f64,
+        limits: &mut [f64],
+    ) {
+        debug_assert_eq!(limits.len(), self.reports.len());
+        let n_sub = tree.subtree_count();
+        let threads = self.pool.threads();
+        if n_sub < 2 || threads < 2 {
+            tree.allocate_into(now, budget, &self.reports, limits);
+            return;
+        }
+        let reports: &[NodeReport] = &self.reports;
+        {
+            let subs = SendPtr::new(tree.subtrees_mut().as_mut_ptr());
+            self.pool.broadcast(&|w| {
+                // SAFETY: sub-tree j is visited only by worker j % threads
+                // (a static map, like the shard map), sub-trees share no
+                // state, the upward pass only *reads* the shared report
+                // buffer, and `broadcast` joins every worker before the
+                // tree is touched again.
+                let mut j = w;
+                while j < n_sub {
+                    let sub = unsafe { &mut *subs.get().add(j) };
+                    sub.upward(reports);
+                    j += threads;
+                }
+            });
+        }
+        tree.root_allocate(now, budget, reports, limits);
+        {
+            let subs = SendPtr::new(tree.subtrees_mut().as_mut_ptr());
+            let out = SendPtr::new(limits.as_mut_ptr());
+            self.pool.broadcast(&|w| {
+                // SAFETY: same static sub-tree map as above; each
+                // sub-tree's downward pass writes only its own leaf span,
+                // and the spans are disjoint, contiguous ranges that tile
+                // the limit buffer — no two workers touch the same slot,
+                // and `broadcast` joins before `limits` is read again.
+                let mut j = w;
+                while j < n_sub {
+                    let sub = unsafe { &mut *subs.get().add(j) };
+                    let (a, b) = sub.leaf_span();
+                    let slice =
+                        unsafe { std::slice::from_raw_parts_mut(out.get().add(a), b - a) };
+                    sub.downward(now, slice);
+                    j += threads;
+                }
+            });
+        }
+        tree.record_epoch(now);
     }
 
     /// Rebalance decision: refine the static weights with the measured

@@ -14,7 +14,9 @@
 //!   [`WorkerPool`](crate::util::parallel::WorkerPool) with one fork/join
 //!   per control period (the default, allocation-free fast path);
 //! * [`coordinator`] — the lockstep fleet drivers ([`run_fleet`] on the
-//!   executor, [`run_fleet_threaded`] on the legacy protocol) plus the
+//!   executor, [`run_fleet_threaded`] on the legacy protocol,
+//!   [`run_fleet_tree`] under a hierarchical
+//!   [`CoordinatorTree`](crate::control::tree::CoordinatorTree)) plus the
 //!   reallocation epoch loop feeding a
 //!   [`BudgetPolicy`](crate::control::budget::BudgetPolicy).
 //!
@@ -31,7 +33,8 @@ pub mod executor;
 pub mod node;
 
 pub use coordinator::{
-    run_fleet, run_fleet_threaded, run_fleet_with_faults, run_fleet_with_path, FleetConfig,
+    run_fleet, run_fleet_threaded, run_fleet_tree, run_fleet_tree_with_faults,
+    run_fleet_tree_with_path, run_fleet_with_faults, run_fleet_with_path, FleetConfig,
     FleetOutcome,
 };
 pub use executor::ShardedExecutor;

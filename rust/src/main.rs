@@ -12,6 +12,7 @@
 //! powerctl fleet [--full]              fleet-budget campaign (energy vs ε per strategy)
 //! powerctl hetero                      CPU+GPU node campaign (device-split strategies)
 //! powerctl faults                      fault campaign (graceful degradation under injection)
+//! powerctl tree                        coordinator-tree campaign (depth × arity × policy)
 //! powerctl ablation                    design-choice ablations
 //! powerctl live [--iterations n]       live PJRT workload + NRM daemon demo
 //! powerctl all [--full]                everything, in order
@@ -40,6 +41,7 @@ fn cli() -> Cli {
         .subcommand("fleet", "fleet-budget campaign: N nodes under one global power budget")
         .subcommand("hetero", "heterogeneous-node campaign: CPU+GPU device-split strategies")
         .subcommand("faults", "fault campaign: graceful degradation under seeded injection")
+        .subcommand("tree", "coordinator-tree campaign: depth × arity × budget-policy scaling")
         .subcommand("ablation", "design-choice ablations")
         .subcommand("replay", "re-fit models + aggregates from saved campaign CSVs")
         .subcommand("live", "live demo: PJRT workload + NRM daemon + PI")
@@ -122,6 +124,12 @@ fn main() {
             print!("{out}");
             println!("raw points: {}", ctx.path("faults.csv").display());
         }
+        "tree" => {
+            let idents = experiments::identify_all(&ctx);
+            let (out, _) = experiments::tree::run(&ctx, &idents);
+            print!("{out}");
+            println!("raw points: {}", ctx.path("tree.csv").display());
+        }
         "ablation" => {
             let idents = experiments::identify_all(&ctx);
             print!("{}", experiments::ablation::run(&ctx, &idents));
@@ -154,6 +162,8 @@ fn main() {
             print!("{ht}");
             let (fa, _) = experiments::faults::run(&ctx, &idents);
             print!("{fa}");
+            let (tr, _) = experiments::tree::run(&ctx, &idents);
+            print!("{tr}");
             print!("{}", experiments::ablation::run(&ctx, &idents));
         }
         other => {

@@ -14,14 +14,21 @@
 //!    node only — the campaign completes, the node is marked failed, and
 //!    (under frozen ceilings) every other node's record is byte-identical
 //!    to a run where the panic never happened.
+//! 4. Tree composition (PR 8): the fault plane composes with the
+//!    hierarchical coordinator tree unchanged — a crashed leaf's watts
+//!    reclaim within one epoch at *every* level of a depth-3 tree,
+//!    survivors' bytes stay untouched under frozen ceilings, and a
+//!    crash/restart + dropout plan replays byte-identically, grant trace
+//!    included.
 
 use powerctl::control::budget::{
     BudgetPolicy, FrozenLimits, GreedyRepack, SlackProportional, UniformBudget,
 };
+use powerctl::control::tree::{BudgetPolicySpec, CoordinatorTree, TreeSpec};
 use powerctl::fleet::node::noise_free_model;
 use powerctl::fleet::{
-    run_fleet_with_faults, run_fleet_with_path, FleetConfig, FleetOutcome, NodeHardware,
-    NodePolicySpec, NodeSpec, SimPath,
+    run_fleet_tree_with_faults, run_fleet_with_faults, run_fleet_with_path, FleetConfig,
+    FleetOutcome, NodeHardware, NodePolicySpec, NodeSpec, SimPath,
 };
 use powerctl::sim::cluster::ClusterId;
 use powerctl::sim::faults::{FaultEventKind, FaultPlan, FaultRegime, NodeSelector};
@@ -215,4 +222,150 @@ fn panic_isolation_leaves_survivor_bytes_untouched() {
         );
         assert!(faulty.records[i].completed, "survivor {i} did not complete");
     }
+}
+
+/// A crashed leaf under a depth-3 coordinator tree: the first epoch after
+/// the crash parks it at the floor in `limits_trace` AND the grant along
+/// the whole root→leaf path drops at every level — the reclaimed watts
+/// bubble up through all three allocators in the *same* epoch.
+#[test]
+fn tree_reclaims_crashed_watts_at_every_level_within_one_epoch() {
+    let n = 8;
+    let crashed = 5usize;
+    let crash_t = 18.0;
+    let specs = specs(n);
+    let cfg = config(n);
+    let spec = TreeSpec::balanced(BudgetPolicySpec::SlackProportional, 3, 2, n);
+    let mut tree = CoordinatorTree::new(&spec);
+    tree.enable_trace();
+    let plan = FaultPlan::seeded(31).with_rule(
+        NodeSelector::Node(crashed as u32),
+        FaultRegime {
+            crash_at: Some(crash_t),
+            ..FaultRegime::default()
+        },
+    );
+    let out = run_fleet_tree_with_faults(&specs, &mut tree, &cfg, SimPath::Batched, &plan);
+
+    // Leaf-level reclamation, exactly like the flat contract: the first
+    // epoch at/after the crash parks the node at the 40 W floor.
+    let epoch = out
+        .limits_trace
+        .iter()
+        .position(|(t, _)| *t >= crash_t)
+        .expect("no epoch after the crash");
+    assert!(epoch >= 1, "need a pre-crash epoch to compare against");
+    assert_eq!(
+        out.limits_trace[epoch].1[crashed], 40.0,
+        "crashed leaf not parked at the floor"
+    );
+    assert!(
+        !out.records[crashed].completed && out.records[crashed]
+            .faults
+            .iter()
+            .any(|e| e.kind == FaultEventKind::Crash),
+        "crash not visible on the leaf record"
+    );
+
+    // Per-level reclamation: the grant trace records one entry per epoch
+    // (same cadence as limits_trace); along the root→leaf path every
+    // allocator's grant to the crashed side drops on the crash epoch.
+    let trace = tree.trace();
+    assert_eq!(trace.len(), out.limits_trace.len(), "trace cadence");
+    let path = tree.path_to_leaf(crashed);
+    assert_eq!(path.len(), 3, "depth-3 tree has three allocators per path");
+    for &(interior, slot) in &path {
+        let pre = trace[epoch - 1].grants[interior][slot];
+        let post = trace[epoch].grants[interior][slot];
+        assert!(
+            post < pre - 1.0,
+            "interior {interior} slot {slot}: grant {pre:.1} -> {post:.1} did not drop on the crash epoch"
+        );
+    }
+    // Survivors finish with the reclaimed watts.
+    for i in (0..n).filter(|&i| i != crashed) {
+        assert!(out.records[i].completed, "survivor {i} did not complete");
+    }
+}
+
+/// Under an all-frozen depth-3 tree, a crash perturbs nobody else: every
+/// survivor's record is byte-identical to the crash-free tree run.
+#[test]
+fn tree_crash_leaves_survivor_bytes_untouched_under_frozen() {
+    let n = 8;
+    let crashed = 5usize;
+    let specs = specs(n);
+    let cfg = config(n);
+    let spec = TreeSpec::balanced(BudgetPolicySpec::Frozen, 3, 2, n);
+    let plan = FaultPlan::seeded(47).with_rule(
+        NodeSelector::Node(crashed as u32),
+        FaultRegime {
+            crash_at: Some(18.0),
+            ..FaultRegime::default()
+        },
+    );
+    let mut clean_tree = CoordinatorTree::new(&spec);
+    let clean =
+        run_fleet_tree_with_faults(&specs, &mut clean_tree, &cfg, SimPath::Batched, &FaultPlan::default());
+    let mut faulty_tree = CoordinatorTree::new(&spec);
+    let faulty = run_fleet_tree_with_faults(&specs, &mut faulty_tree, &cfg, SimPath::Batched, &plan);
+
+    assert!(!faulty.records[crashed].completed);
+    for i in (0..n).filter(|&i| i != crashed) {
+        assert_eq!(
+            clean.records[i].to_json().dump(),
+            faulty.records[i].to_json().dump(),
+            "node {i}'s bytes perturbed by node {crashed}'s crash through the tree"
+        );
+        assert!(faulty.records[i].completed, "survivor {i} did not complete");
+    }
+}
+
+/// A seeded crash/restart + fleetwide dropout plan under a depth-3 tree
+/// replays byte-identically — records, ceiling trace, and the tree's own
+/// per-interior grant trace.
+#[test]
+fn tree_crash_restart_dropout_plan_is_replay_identical() {
+    let n = 12;
+    let specs = specs(n);
+    let cfg = config(n);
+    let spec = TreeSpec::balanced(BudgetPolicySpec::SlackProportional, 3, 2, n);
+    let plan = FaultPlan::seeded(0x7C4A)
+        .with_rule(
+            NodeSelector::Node(4),
+            FaultRegime {
+                crash_at: Some(20.0),
+                restart_after: Some(30.0),
+                ..FaultRegime::default()
+            },
+        )
+        .with_rule(
+            NodeSelector::All,
+            FaultRegime {
+                sensor_dropout: 0.10,
+                ..FaultRegime::default()
+            },
+        );
+    let run = || {
+        let mut tree = CoordinatorTree::new(&spec);
+        tree.enable_trace();
+        let out = run_fleet_tree_with_faults(&specs, &mut tree, &cfg, SimPath::Batched, &plan);
+        (out, tree)
+    };
+    let (a, a_tree) = run();
+    let (b, b_tree) = run();
+    assert_eq!(record_bytes(&a), record_bytes(&b), "tree replay diverged");
+    assert_eq!(a.limits_trace, b.limits_trace, "ceiling traces diverged");
+    assert_eq!(a_tree.trace(), b_tree.trace(), "grant traces diverged");
+    assert!(
+        a.records[4]
+            .faults
+            .iter()
+            .any(|e| e.kind == FaultEventKind::Crash),
+        "crash not logged on node 4"
+    );
+    assert!(
+        !a_tree.trace().is_empty(),
+        "no grant epochs recorded — the replay check would be vacuous"
+    );
 }

@@ -1,0 +1,208 @@
+//! Coordinator-tree equivalence: the depth-1 tree **is** the flat budget
+//! path — byte-identical `RunRecord` JSON and identical `limits_trace`
+//! for every budget policy on every stepping path — and any tree shape
+//! is deterministic: same bytes across worker counts {1, 2, all} and
+//! across repeated runs (the executor's parallel sub-tree passes may
+//! only change wall time, never bytes).
+//!
+//! This is the depth-equivalence contract that lets the fleet keep one
+//! drive loop: the flat path is the degenerate tree, not a parallel
+//! implementation.
+
+use powerctl::control::tree::{BudgetPolicySpec, CoordinatorTree, TreeSpec};
+use powerctl::fleet::node::noise_free_model;
+use powerctl::fleet::{
+    run_fleet_tree_with_path, run_fleet_with_path, FleetConfig, FleetOutcome, NodeHardware,
+    NodePolicySpec, NodeSpec, SimPath,
+};
+use powerctl::sim::cluster::ClusterId;
+use powerctl::util::rng::Pcg64;
+
+/// 32 nodes over two clusters (alternating gros/dahu), PI at ε = 0.15 —
+/// the same fleet the executor equivalence suite pins.
+fn specs() -> Vec<NodeSpec> {
+    let order = [ClusterId::Gros, ClusterId::Dahu];
+    let models = [
+        noise_free_model(ClusterId::Gros),
+        noise_free_model(ClusterId::Dahu),
+    ];
+    (0..32)
+        .map(|i| NodeSpec {
+            cluster: order[i % 2],
+            model: models[i % 2].clone(),
+            policy: NodePolicySpec::Pi { epsilon: 0.15 },
+            hardware: NodeHardware::SingleCpu,
+        })
+        .collect()
+}
+
+fn config() -> FleetConfig {
+    FleetConfig {
+        // Tight budget: reallocation epochs actually move watts, so the
+        // identity check covers allocation, not just ticking.
+        budget: 32.0 * 85.0,
+        period: 1.0,
+        realloc_every: 5,
+        total_beats: 400,
+        max_time: 120.0,
+        seed: 7,
+        threads: None,
+    }
+}
+
+/// Serialize every record of an outcome to its canonical JSON bytes.
+fn record_bytes(out: &FleetOutcome) -> String {
+    out.records
+        .iter()
+        .map(|r| r.to_json().dump())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[test]
+fn depth1_tree_is_byte_identical_to_flat_path() {
+    // Every budget policy × every stepping path: the flat allocator and
+    // the depth-1 tree built from the same policy spec must agree byte
+    // for byte, records and ceiling trace both.
+    let specs = specs();
+    let base = config();
+    for policy in BudgetPolicySpec::ALL {
+        for path in [SimPath::Batched, SimPath::BatchedScalar, SimPath::Classic] {
+            let mut flat = policy.build();
+            let flat_out = run_fleet_with_path(&specs, flat.as_mut(), &base, path);
+
+            let mut tree = CoordinatorTree::new(&TreeSpec::flat(policy, specs.len()));
+            let tree_out = run_fleet_tree_with_path(&specs, &mut tree, &base, path);
+
+            assert!(
+                record_bytes(&flat_out) == record_bytes(&tree_out),
+                "{} on {path:?}: depth-1 tree records != flat records",
+                policy.name()
+            );
+            assert_eq!(
+                flat_out.limits_trace,
+                tree_out.limits_trace,
+                "{} on {path:?}: ceiling trace diverged",
+                policy.name()
+            );
+            assert!(
+                !flat_out.limits_trace.is_empty(),
+                "{} on {path:?}: no epochs ran — the check would be vacuous",
+                policy.name()
+            );
+        }
+    }
+}
+
+/// A random tree shape over `leaves` nodes: up to `depth` interior
+/// levels, uneven arity (2–4 groups per interior, sizes drawn from the
+/// RNG), with some groups attached as direct leaves of their parent so
+/// paths have uneven length.
+fn random_spec(rng: &mut Pcg64, policy: BudgetPolicySpec, depth: usize, leaves: usize) -> TreeSpec {
+    if depth <= 1 || leaves < 4 {
+        return TreeSpec::flat(policy, leaves);
+    }
+    let groups = (2 + rng.below(3) as usize).min(leaves);
+    let mut sizes = vec![1usize; groups];
+    for _ in 0..(leaves - groups) {
+        let g = rng.below(groups as u64) as usize;
+        sizes[g] += 1;
+    }
+    let children = sizes
+        .iter()
+        .map(|&k| {
+            if rng.below(3) == 0 {
+                TreeSpec::Leaves(k)
+            } else {
+                random_spec(rng, policy, depth - 1, k)
+            }
+        })
+        .collect();
+    TreeSpec::Interior { policy, children }
+}
+
+/// A 24-node fleet where roughly a quarter of the leaves are
+/// hierarchical CPU+GPU nodes (their inner loop splits the fleet ceiling
+/// across devices) and the rest are single-CPU PI nodes.
+fn mixed_specs(rng: &mut Pcg64) -> (Vec<NodeSpec>, f64) {
+    use powerctl::control::node_budget::DeviceSplitSpec;
+    use powerctl::sim::cluster::Cluster;
+
+    let order = [ClusterId::Gros, ClusterId::Dahu, ClusterId::Yeti];
+    let mut budget = 0.0;
+    let specs = (0..24)
+        .map(|i| {
+            if rng.below(4) == 0 {
+                budget += 360.0;
+                let cluster = Cluster::get(ClusterId::Gros);
+                NodeSpec {
+                    cluster: ClusterId::Gros,
+                    model: noise_free_model(ClusterId::Gros),
+                    policy: NodePolicySpec::Static,
+                    hardware: NodeHardware::cpu_gpu(&cluster, DeviceSplitSpec::SlackShift, 0.15),
+                }
+            } else {
+                budget += 85.0;
+                let cluster = order[i % order.len()];
+                NodeSpec {
+                    cluster,
+                    model: noise_free_model(cluster),
+                    policy: NodePolicySpec::Pi { epsilon: 0.15 },
+                    hardware: NodeHardware::SingleCpu,
+                }
+            }
+        })
+        .collect();
+    (specs, budget)
+}
+
+#[test]
+fn random_tree_shapes_are_deterministic_across_worker_counts() {
+    // Property: for random shapes (depth 1–4, uneven arity, hetero
+    // CPU/GPU leaves mixed in), the run is bit-reproducible on worker
+    // pools of 1 (serial allocation), 2 (parallel sub-tree passes) and
+    // all cores — and across repeated runs on the same pool.
+    let mut rng = Pcg64::seeded(0x7EE5);
+    for depth in 1..=4usize {
+        let policy = BudgetPolicySpec::ALL[depth % BudgetPolicySpec::ALL.len()];
+        let (specs, budget) = mixed_specs(&mut rng);
+        let spec = random_spec(&mut rng, policy, depth, specs.len());
+        assert_eq!(spec.leaf_count(), specs.len());
+        let base = FleetConfig {
+            budget,
+            period: 1.0,
+            realloc_every: 5,
+            total_beats: 300,
+            max_time: 120.0,
+            seed: 13 + depth as u64,
+            threads: None,
+        };
+
+        let mut outs = Vec::new();
+        for threads in [Some(1), Some(2), None, None] {
+            let cfg = FleetConfig {
+                threads,
+                ..base.clone()
+            };
+            let mut tree = CoordinatorTree::new(&spec);
+            outs.push(run_fleet_tree_with_path(&specs, &mut tree, &cfg, SimPath::Batched));
+        }
+        let reference = record_bytes(&outs[0]);
+        for (i, out) in outs.iter().enumerate().skip(1) {
+            assert!(
+                record_bytes(out) == reference,
+                "depth {depth} ({}) variant {i}: records diverged across worker counts",
+                policy.name()
+            );
+            assert_eq!(
+                out.limits_trace, outs[0].limits_trace,
+                "depth {depth} ({}) variant {i}: ceiling trace diverged",
+                policy.name()
+            );
+        }
+        assert!(
+            !outs[0].limits_trace.is_empty(),
+            "depth {depth}: no epochs ran — the property would be vacuous"
+        );
+    }
+}
