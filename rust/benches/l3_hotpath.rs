@@ -26,7 +26,12 @@
 //!   parallel-vs-serial byte-identity contracts are asserted in-bench
 //!   (`tree_vs_flat_identical`, grepped by the CI gate), plus a
 //!   counting-allocator window over full tree-mode control periods
-//!   (epoch allocation at every level included).
+//!   (epoch allocation at every level included);
+//! * **checkpoint/restore**: `fleet_checkpoint_overhead_pct_256` — wall
+//!   overhead of a crash-consistent snapshot every 32 periods on the
+//!   256-node drive — reported only after the kill/resume byte-identity
+//!   contract is asserted in-bench under an active fault plan
+//!   (`restore_vs_uninterrupted_identical`, grepped by the CI gate).
 //!
 //! Emits the machine-readable `BENCH_l3.json` (override the path with
 //! `BENCH_L3_JSON`). `POWERCTL_BENCH_SMOKE=1` caps iterations and fleet
@@ -47,9 +52,10 @@ use powerctl::control::tree::{BudgetPolicySpec, CoordinatorTree, TreeSpec};
 use powerctl::coordinator::hetero::HeteroBackend;
 use powerctl::fleet::coordinator::node_seed;
 use powerctl::fleet::{
-    run_fleet, run_fleet_threaded, run_fleet_tree_with_path, run_fleet_with_faults,
-    run_fleet_with_path, BudgetedPolicy, FleetConfig, NodeHardware, NodePolicySpec, NodeSpec,
-    ShardedExecutor, SimPath, WorkerConfig,
+    resume_fleet, run_fleet, run_fleet_killed, run_fleet_threaded, run_fleet_tree_with_path,
+    run_fleet_with_checkpoints, run_fleet_with_faults, run_fleet_with_path, BudgetedPolicy,
+    CheckpointSpec, FleetConfig, NodeHardware, NodePolicySpec, NodeSpec, ShardedExecutor, SimPath,
+    WorkerConfig,
 };
 use powerctl::sim::device::DeviceSpec;
 use powerctl::sim::faults::{FaultPlan, FaultRegime, NodeSelector};
@@ -686,6 +692,135 @@ fn main() {
             delta, 0,
             "steady-state tree-mode control period allocated {delta} times"
         );
+    }
+
+    section("checkpoint/restore (kill-resume identity + snapshot overhead)");
+    {
+        // Contract first, overhead second — same shape as the fault and
+        // tree sections. The kill/resume byte-identity is asserted here,
+        // in the same binary that reports the checkpoint overhead, so the
+        // `restore_vs_uninterrupted_identical` metric the CI gate greps
+        // for cannot appear without the identity having held on this
+        // build. The scenario is deliberately hostile: an ACTIVE
+        // crash/restart fault plan, a kill off the reallocation-epoch
+        // boundary, and the resumed run compared byte-for-byte (records
+        // AND ceiling trace) against the uninterrupted oracle.
+        let to_bytes = |out: &powerctl::fleet::FleetOutcome| {
+            out.records
+                .iter()
+                .map(|r| r.to_json().dump())
+                .collect::<Vec<_>>()
+                .join("\n")
+        };
+        {
+            let specs = gros_specs(&ident, 8, 0.15);
+            let cfg = FleetConfig {
+                budget: 85.0 * 8.0,
+                period: 1.0,
+                realloc_every: 5,
+                total_beats: 400,
+                max_time: 60.0,
+                seed: 11,
+                threads: None,
+            };
+            let plan = FaultPlan::seeded(0x5EED).with_rule(
+                NodeSelector::Node(2),
+                FaultRegime {
+                    crash_at: Some(12.0),
+                    restart_after: Some(15.0),
+                    ..FaultRegime::default()
+                },
+            );
+            let oracle = run_fleet_with_faults(
+                &specs,
+                &mut SlackProportional::default(),
+                &cfg,
+                SimPath::Batched,
+                &plan,
+            );
+            let ckpt = CheckpointSpec {
+                every: 1,
+                path: ctx.path("bench_ckpt.bin"),
+            };
+            let killed = run_fleet_killed(
+                &specs,
+                &mut SlackProportional::default(),
+                &cfg,
+                SimPath::Batched,
+                &plan,
+                &ckpt,
+                17,
+            )
+            .expect("checkpointed drive failed");
+            assert!(killed.is_none(), "kill at period 17 did not fire");
+            let resumed = resume_fleet(
+                &specs,
+                &mut SlackProportional::default(),
+                &cfg,
+                SimPath::Batched,
+                &plan,
+                &ckpt.path,
+            )
+            .expect("resume failed");
+            assert_eq!(
+                to_bytes(&oracle),
+                to_bytes(&resumed),
+                "resumed records diverge from the uninterrupted run"
+            );
+            assert_eq!(
+                oracle.limits_trace, resumed.limits_trace,
+                "resumed ceiling trace diverges from the uninterrupted run"
+            );
+            println!(
+                "  kill@17 + resume under an active crash/restart plan: byte-identical on an 8-node fleet"
+            );
+            report.add_metric("restore_vs_uninterrupted_identical", 1.0);
+            let _ = std::fs::remove_file(&ckpt.path);
+        }
+
+        // Overhead of periodic snapshots on the acceptance-size fleet:
+        // the same 256-node drive with and without a checkpoint every 32
+        // periods (serialize + CRC + atomic tmp/fsync/rename each time).
+        let n = 256;
+        let periods = if smoke() { 20.0 } else { 120.0 };
+        let cfg = FleetConfig {
+            budget: 95.0 * n as f64,
+            period: 1.0,
+            realloc_every: 5,
+            total_beats: u64::MAX,
+            max_time: periods,
+            seed: 42,
+            threads: None,
+        };
+        let specs = gros_specs(&ident, n, 0.15);
+        let plain = run_fleet_with_path(
+            &specs,
+            &mut SlackProportional::default(),
+            &cfg,
+            SimPath::Batched,
+        );
+        let ckpt = CheckpointSpec {
+            every: if smoke() { 8 } else { 32 },
+            path: ctx.path("bench_ckpt_256.bin"),
+        };
+        let with_ckpt = run_fleet_with_checkpoints(
+            &specs,
+            &mut SlackProportional::default(),
+            &cfg,
+            SimPath::Batched,
+            &FaultPlan::default(),
+            &ckpt,
+        )
+        .expect("checkpointed 256-node drive failed");
+        let bytes = std::fs::metadata(&ckpt.path).map(|m| m.len()).unwrap_or(0);
+        let overhead_pct = (with_ckpt.wall_seconds / plain.wall_seconds - 1.0) * 100.0;
+        println!(
+            "  {n:>5} nodes: snapshot every {} periods → {bytes} bytes/file, {overhead_pct:+.1}% wall overhead",
+            ckpt.every
+        );
+        report.add_metric(&format!("fleet_checkpoint_overhead_pct_{n}"), overhead_pct);
+        report.add_metric(&format!("fleet_checkpoint_bytes_{n}"), bytes as f64);
+        let _ = std::fs::remove_file(&ckpt.path);
     }
 
     section("SIMD sub-step components (scalar vs lanes, 1024 devices)");

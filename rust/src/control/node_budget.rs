@@ -27,6 +27,8 @@ use crate::control::pi::{PiConfig, PiController};
 use crate::ident::static_model::{StaticModel, StaticPoint};
 use crate::ident::DynamicModel;
 use crate::sim::device::DeviceSpec;
+use crate::util::error::Result;
+use crate::util::snapshot::{Section, Snapshot};
 
 /// The exact fitted model a perfect (noise-free) identification campaign
 /// would produce for a device: 60 stratified points of the analytic
@@ -185,6 +187,59 @@ impl DeviceCtl {
             Some(ctl) => ctl.step(t, progress),
             None => self.limit,
         }
+    }
+}
+
+impl Snapshot for DeviceCtl {
+    fn save(&self, w: &mut Section) {
+        w.put_f64(self.limit);
+        match &self.ctl {
+            None => w.put_bool(false),
+            Some(ctl) => {
+                w.put_bool(true);
+                ctl.save(w);
+            }
+        }
+    }
+
+    fn restore(&mut self, r: &mut Section) -> Result<()> {
+        self.limit = r.take_f64()?;
+        let has_pi = r.take_bool()?;
+        match (&mut self.ctl, has_pi) {
+            (Some(ctl), true) => ctl.restore(r),
+            (None, false) => Ok(()),
+            (have, _) => Err(crate::err!(
+                "device controller snapshot shape mismatch: snapshot {} a PI, controller {} one",
+                if has_pi { "has" } else { "lacks" },
+                if have.is_some() { "has" } else { "lacks" },
+            )),
+        }
+    }
+}
+
+/// The split policy is semantically stateless and `reports`/`limits` are
+/// per-epoch scratch rewritten before every read — only the per-device
+/// controllers carry state across periods.
+impl Snapshot for NodeBudgetController {
+    fn save(&self, w: &mut Section) {
+        w.put_u64(self.devices.len() as u64);
+        for d in &self.devices {
+            d.save(w);
+        }
+    }
+
+    fn restore(&mut self, r: &mut Section) -> Result<()> {
+        let n = r.take_u64()? as usize;
+        if n != self.devices.len() {
+            return Err(crate::err!(
+                "node budget snapshot has {n} devices, controller has {}",
+                self.devices.len()
+            ));
+        }
+        for d in &mut self.devices {
+            d.restore(r)?;
+        }
+        Ok(())
     }
 }
 

@@ -16,6 +16,8 @@
 //! `antiwindup.rs` for the tests that pin this behaviour).
 
 use crate::ident::DynamicModel;
+use crate::util::error::Result;
+use crate::util::snapshot::{Section, Snapshot};
 
 /// PI gains + references, derived from a fitted [`DynamicModel`].
 #[derive(Debug, Clone)]
@@ -210,6 +212,31 @@ impl PiController {
         self.prev_pcap_l = self.model.static_model.linearize_pcap(clamped);
         self.prev_error = error;
         clamped
+    }
+}
+
+/// Gains and the fitted model are deterministic functions of the rebuilt
+/// configuration; only the integrator memory, the runtime-movable cap
+/// range (the fleet allocator narrows it every epoch) and the runtime-
+/// adjustable ε are live state.
+impl Snapshot for PiController {
+    fn save(&self, w: &mut Section) {
+        w.put_f64(self.config.pcap_min);
+        w.put_f64(self.config.pcap_max);
+        w.put_f64(self.epsilon);
+        w.put_f64(self.prev_error);
+        w.put_f64(self.prev_pcap_l);
+        w.put_opt_f64(self.prev_time);
+    }
+
+    fn restore(&mut self, r: &mut Section) -> Result<()> {
+        self.config.pcap_min = r.take_f64()?;
+        self.config.pcap_max = r.take_f64()?;
+        self.epsilon = r.take_f64()?;
+        self.prev_error = r.take_f64()?;
+        self.prev_pcap_l = r.take_f64()?;
+        self.prev_time = r.take_opt_f64()?;
+        Ok(())
     }
 }
 

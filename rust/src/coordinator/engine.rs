@@ -38,6 +38,8 @@ use crate::coordinator::records::{DeviceTrace, RunRecord};
 use crate::ident::signals::Plan;
 use crate::sim::clock::Clock;
 use crate::sim::node::NodeSim;
+use crate::util::error::Result;
+use crate::util::snapshot::{Section, Snapshot};
 
 /// Sensor snapshot for one control period.
 #[derive(Debug, Clone, Copy)]
@@ -165,6 +167,18 @@ impl LockstepBackend {
     pub(crate) fn resync(&mut self, now: f64) {
         self.last_time = now;
         self.node.time = now;
+    }
+}
+
+impl Snapshot for LockstepBackend {
+    fn save(&self, w: &mut Section) {
+        w.put_f64(self.last_time);
+        self.node.save(w);
+    }
+
+    fn restore(&mut self, r: &mut Section) -> Result<()> {
+        self.last_time = r.take_f64()?;
+        self.node.restore(r)
     }
 }
 
@@ -428,6 +442,54 @@ impl<B: NodeBackend> ControlLoop<B> {
         rec.devices = self.backend.device_traces();
         rec.exec_time = self.samples.last().map(|s| s.time).unwrap_or(0.0);
         rec
+    }
+
+    /// Serialize the loop's own bookkeeping (samples, aggregator, terminal
+    /// flags) for a checkpoint. The backend serializes itself separately —
+    /// the checkpoint writer owns the section layout, so backend bytes and
+    /// loop bytes stay independently versioned.
+    ///
+    /// `quota`, `max_time`, `period` and `node_id` are construction-time
+    /// configuration, rebuilt identically from the run config on resume.
+    pub(crate) fn save_loop_state(&self, w: &mut Section) {
+        w.put_u64(self.samples.len() as u64);
+        for s in &self.samples {
+            w.put_f64(s.time);
+            w.put_f64(s.pcap);
+            w.put_f64(s.power);
+            w.put_f64(s.progress);
+            w.put_f64(s.true_progress);
+            w.put_u64(s.beats_total);
+        }
+        w.put_opt_f64(self.finish_time);
+        w.put_bool(self.timed_out);
+        w.put_f64(self.last_energy);
+        w.put_f64(self.run_start);
+        self.aggregator.save(w);
+    }
+
+    /// Counterpart of [`save_loop_state`](Self::save_loop_state).
+    pub(crate) fn restore_loop_state(&mut self, r: &mut Section) -> Result<()> {
+        let n = r.take_u64()? as usize;
+        self.samples.clear();
+        self.samples.reserve(n);
+        for _ in 0..n {
+            self.samples.push(PeriodRecord {
+                time: r.take_f64()?,
+                pcap: r.take_f64()?,
+                power: r.take_f64()?,
+                progress: r.take_f64()?,
+                true_progress: r.take_f64()?,
+                beats_total: r.take_u64()?,
+            });
+        }
+        self.finish_time = r.take_opt_f64()?;
+        self.timed_out = r.take_bool()?;
+        self.last_energy = r.take_f64()?;
+        self.run_start = r.take_f64()?;
+        self.aggregator.restore(r)?;
+        self.beat_buf.clear();
+        Ok(())
     }
 }
 

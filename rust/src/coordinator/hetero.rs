@@ -32,6 +32,8 @@ use crate::coordinator::engine::{NodeBackend, PeriodSensors};
 use crate::coordinator::progress::ProgressAggregator;
 use crate::coordinator::records::DeviceTrace;
 use crate::sim::node::{merge_sorted, NodeSim};
+use crate::util::error::Result;
+use crate::util::snapshot::{Section, Snapshot};
 
 /// [`NodeBackend`] over a multi-device simulated node with the device-split
 /// inner loop inside. See the module docs for the control layering.
@@ -164,6 +166,69 @@ impl HeteroBackend {
         }
         self.actuated = total;
         total
+    }
+}
+
+impl Snapshot for HeteroBackend {
+    /// Persist everything a resumed run reads: the node, the inner
+    /// controllers, the actuated cap, the clock anchor, the `primed` flag,
+    /// the per-device aggregators and last measurements, and the recorded
+    /// device traces. `cap_min`/`cap_max` are construction-time constants
+    /// (Σ device ranges) and `sinks`/`merge_idx`/`caps` are per-period
+    /// scratch fully rewritten before every read.
+    fn save(&self, w: &mut Section) {
+        self.node.save(w);
+        self.ctl.save(w);
+        w.put_f64(self.actuated);
+        w.put_f64(self.last_time);
+        w.put_bool(self.primed);
+        w.put_u64(self.aggs.len() as u64);
+        for agg in &self.aggs {
+            agg.save(w);
+        }
+        for m in &self.meas {
+            w.put_f64(m.pcap);
+            w.put_f64(m.power);
+            w.put_f64(m.progress);
+        }
+        w.put_u64(self.traces.len() as u64);
+        for t in &self.traces {
+            t.save(w);
+        }
+    }
+
+    fn restore(&mut self, r: &mut Section) -> Result<()> {
+        self.node.restore(r)?;
+        self.ctl.restore(r)?;
+        self.actuated = r.take_f64()?;
+        self.last_time = r.take_f64()?;
+        self.primed = r.take_bool()?;
+        let n = r.take_u64()? as usize;
+        if n != self.aggs.len() {
+            return Err(crate::err!(
+                "hetero snapshot has {n} devices, this backend has {} (spec mismatch)",
+                self.aggs.len()
+            ));
+        }
+        for agg in &mut self.aggs {
+            agg.restore(r)?;
+        }
+        for m in &mut self.meas {
+            m.pcap = r.take_f64()?;
+            m.power = r.take_f64()?;
+            m.progress = r.take_f64()?;
+        }
+        let nt = r.take_u64()? as usize;
+        if nt != self.traces.len() {
+            return Err(crate::err!(
+                "hetero snapshot has {nt} device traces, this backend has {} (spec mismatch)",
+                self.traces.len()
+            ));
+        }
+        for t in &mut self.traces {
+            t.restore(r)?;
+        }
+        Ok(())
     }
 }
 

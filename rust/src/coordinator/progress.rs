@@ -9,6 +9,8 @@
 //! the previous sampling time. The median (not the mean) makes the signal
 //! robust to straggler beats — an explicit design choice in §4.2.
 
+use crate::util::error::Result;
+use crate::util::snapshot::{Section, Snapshot};
 use crate::util::stats;
 
 /// Aggregates raw heartbeat timestamps into the Eq. (1) progress signal.
@@ -76,6 +78,22 @@ impl ProgressAggregator {
     /// Timestamp of the most recent beat.
     pub fn last_beat(&self) -> Option<f64> {
         self.last_beat
+    }
+}
+
+impl Snapshot for ProgressAggregator {
+    fn save(&self, w: &mut Section) {
+        w.put_opt_f64(self.last_beat);
+        w.put_f64s(&self.freqs);
+        w.put_u64(self.total_beats);
+    }
+
+    fn restore(&mut self, r: &mut Section) -> Result<()> {
+        self.last_beat = r.take_opt_f64()?;
+        self.freqs = r.take_f64s()?;
+        self.total_beats = r.take_u64()?;
+        self.scratch.clear();
+        Ok(())
     }
 }
 

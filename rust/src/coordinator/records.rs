@@ -3,7 +3,9 @@
 
 use crate::sim::faults::FaultEvent;
 use crate::util::csv::Table;
+use crate::util::error::Result;
 use crate::util::json::Json;
+use crate::util::snapshot::{Section, Snapshot};
 use crate::util::timeseries::TimeSeries;
 
 /// Per-device series of a hierarchical (multi-device) run: one row per
@@ -38,6 +40,23 @@ impl DeviceTrace {
             .set("power", series(&self.power))
             .set("progress", series(&self.progress));
         j
+    }
+}
+
+impl Snapshot for DeviceTrace {
+    fn save(&self, w: &mut Section) {
+        w.put_str(&self.kind);
+        self.pcap.save(w);
+        self.power.save(w);
+        self.progress.save(w);
+    }
+
+    fn restore(&mut self, r: &mut Section) -> Result<()> {
+        self.kind = r.take_str()?;
+        self.pcap.restore(r)?;
+        self.power.restore(r)?;
+        self.progress.restore(r)?;
+        Ok(())
     }
 }
 

@@ -142,11 +142,33 @@ pub struct UnixSocketSender {
     path: PathBuf,
 }
 
+/// Default maximum accepted datagram length [bytes]. A legitimate beat
+/// frame is under 30 ASCII bytes; anything near this bound is already a
+/// misbehaving client.
+const DEFAULT_MAX_FRAME: usize = 256;
+
+/// Default per-drain frame budget. One drain happens per control period;
+/// a well-behaved node emits a few thousand beats per second at most, so
+/// this bound is far above any legitimate rate while capping the work a
+/// babbling client can force into the daemon's period tick.
+const DEFAULT_DRAIN_BUDGET: usize = 4096;
+
 /// Heartbeat receiver over a Unix datagram socket.
+///
+/// Hardened against hostile or babbling clients: frames longer than the
+/// configured maximum are dropped (never buffered — the receive buffer is
+/// `max_frame + 1` bytes, so an oversized datagram is detected and
+/// discarded, not truncated into a plausible prefix), and each
+/// [`drain`](BeatReceiver::drain) processes at most its frame budget so
+/// one flooding sender can neither grow memory nor starve the control
+/// period tick. Both kinds of rejection count via
+/// [`BeatReceiver::dropped`].
 pub struct UnixSocketReceiver {
     sock: UnixDatagram,
     path: PathBuf,
-    buf: [u8; 256],
+    buf: Vec<u8>,
+    max_frame: usize,
+    drain_budget: usize,
     dropped: u64,
 }
 
@@ -160,7 +182,9 @@ impl UnixSocket {
         Ok(UnixSocketReceiver {
             sock,
             path,
-            buf: [0; 256],
+            buf: vec![0; DEFAULT_MAX_FRAME + 1],
+            max_frame: DEFAULT_MAX_FRAME,
+            drain_budget: DEFAULT_DRAIN_BUDGET,
             dropped: 0,
         })
     }
@@ -175,6 +199,21 @@ impl UnixSocket {
     }
 }
 
+impl UnixSocketReceiver {
+    /// Cap accepted datagram length [bytes]; longer frames are dropped and
+    /// counted, never decoded. Clamped to at least one byte.
+    pub fn set_max_frame(&mut self, bytes: usize) {
+        self.max_frame = bytes.max(1);
+        self.buf = vec![0; self.max_frame + 1];
+    }
+
+    /// Cap frames handled per [`drain`](BeatReceiver::drain) call. Clamped
+    /// to at least one frame so a drain always makes progress.
+    pub fn set_drain_budget(&mut self, frames: usize) {
+        self.drain_budget = frames.max(1);
+    }
+}
+
 impl BeatSender for UnixSocketSender {
     fn send(&self, app_id: u32, units: u32) -> io::Result<()> {
         let msg = encode_beat(app_id, units);
@@ -185,9 +224,31 @@ impl BeatSender for UnixSocketSender {
 
 impl BeatReceiver for UnixSocketReceiver {
     fn drain(&mut self, now: f64, out: &mut Vec<Heartbeat>) {
+        let mut handled = 0usize;
         loop {
+            if handled >= self.drain_budget {
+                // Budget spent: anything still queued is a flood. Pull and
+                // discard up to one more budget's worth so the babble is
+                // *counted*, then yield — total work per drain stays
+                // bounded at 2× budget and the period tick runs on time.
+                for _ in 0..self.drain_budget {
+                    match self.sock.recv(&mut self.buf) {
+                        Ok(_) => self.dropped += 1,
+                        Err(_) => break,
+                    }
+                }
+                break;
+            }
             match self.sock.recv(&mut self.buf) {
                 Ok(n) => {
+                    handled += 1;
+                    if n > self.max_frame {
+                        // Oversized datagram: the buffer is one byte larger
+                        // than the cap precisely so this is detectable.
+                        // Drop it whole — never decode a truncated prefix.
+                        self.dropped += 1;
+                        continue;
+                    }
                     let decoded = std::str::from_utf8(&self.buf[..n])
                         .map_err(|e| err!("heartbeat frame not UTF-8: {e}"))
                         .and_then(decode_beat);
@@ -304,6 +365,48 @@ mod tests {
         assert_eq!(out[0].app_id, 3);
         // Both garbage frames were dropped, counted, and service went on.
         assert_eq!(rx.dropped(), 2);
+    }
+
+    #[test]
+    fn oversized_frames_dropped_whole() {
+        let path = std::env::temp_dir().join(format!("powerctl-big-{}.sock", std::process::id()));
+        let mut rx = UnixSocket::bind(&path).unwrap();
+        rx.set_max_frame(16);
+        let raw = UnixDatagram::unbound().unwrap();
+        // 17 bytes, over the 16-byte cap — and crafted so a naive
+        // truncate-to-buffer would decode as a valid beat.
+        raw.send_to(b"beat 1 2\n        ", &path).unwrap();
+        let tx = UnixSocket::connect(&path).unwrap();
+        tx.send(4, 9).unwrap(); // 10 bytes, fits
+        let mut out = Vec::new();
+        rx.drain(0.0, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!((out[0].app_id, out[0].units), (4, 9));
+        assert_eq!(rx.dropped(), 1);
+    }
+
+    #[test]
+    fn drain_budget_bounds_per_tick_work() {
+        let path = std::env::temp_dir().join(format!("powerctl-bgt-{}.sock", std::process::id()));
+        let mut rx = UnixSocket::bind(&path).unwrap();
+        rx.set_drain_budget(4);
+        let tx = UnixSocket::connect(&path).unwrap();
+        // A babbling client queues 12 frames before one drain.
+        for i in 0..12 {
+            tx.send(1, i).unwrap();
+        }
+        let mut out = Vec::new();
+        rx.drain(0.0, &mut out);
+        // First budget's worth delivered in order; the next budget's worth
+        // drained-and-discarded (counted); the rest left for later.
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[3].units, 3);
+        assert_eq!(rx.dropped(), 4);
+        out.clear();
+        rx.drain(1.0, &mut out);
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].units, 8);
+        assert_eq!(rx.dropped(), 4);
     }
 
     #[test]

@@ -1,0 +1,280 @@
+//! Checkpoint campaign: crash-consistent snapshots with byte-identical
+//! resume.
+//!
+//! The durability axis on top of the fleet machinery: the same
+//! heterogeneous fleet — running under an *active* fault plan, so the
+//! checkpoint has to capture fault-plane state too — is killed at a
+//! deterministic node period, restored from the last on-disk checkpoint,
+//! and driven to completion. The resumed outcome is compared field by
+//! field against the same fleet run uninterrupted on the same seeds.
+//!
+//! The headline claims this table backs:
+//!
+//! * resume is *byte-identical*, not approximately equal — every per-node
+//!   record serializes to the same JSON, every reallocation epoch grants
+//!   the same ceilings, total energy matches to the last bit;
+//! * that identity holds across every stepping path (batched SIMD,
+//!   batched-scalar, classic per-node loops) and across flat and
+//!   hierarchical budget allocation — the checkpoint captures semantic
+//!   state only, so it is portable across execution strategies' homes;
+//! * checkpoints are crash-consistent — written atomically between
+//!   periods, so a kill at any instant leaves a valid file.
+
+use crate::control::tree::{BudgetPolicySpec, CoordinatorTree, TreeSpec};
+use crate::experiments::common::{Ctx, Identified};
+use crate::experiments::fleet::{heterogeneous_specs, make_strategy, BUDGET_PER_NODE};
+use crate::fleet::coordinator::{
+    resume_fleet, resume_fleet_tree, run_fleet_killed, run_fleet_tree_killed,
+    run_fleet_tree_with_faults, run_fleet_with_faults, CheckpointSpec,
+};
+use crate::fleet::{FleetConfig, FleetOutcome, NodePolicySpec, NodeSpec, SimPath};
+use crate::sim::faults::{FaultPlan, FaultRegime, NodeSelector};
+use crate::util::csv::Table;
+
+/// Per-node degradation budget ε used by every checkpoint run (the
+/// durability axis, not ε, is what this campaign varies).
+pub const CKPT_EPSILON: f64 = 0.15;
+
+/// One (stepping path × allocator) configuration's resume outcome, paired
+/// against the uninterrupted oracle on the same seeds.
+#[derive(Debug, Clone)]
+pub struct CheckpointPoint {
+    /// Configuration name, `<path>/<allocator>`.
+    pub config: String,
+    /// Node period the run was killed at (checkpoint written just before).
+    pub kill_period: u64,
+    /// Checkpoint file size [bytes].
+    pub snapshot_bytes: u64,
+    /// Resumed run is byte-identical to the uninterrupted oracle: every
+    /// record's JSON, the full ceilings trace, and total energy all match
+    /// exactly.
+    pub identical: bool,
+    /// Resumed run's total fleet energy [J].
+    pub energy: f64,
+    /// Resumed run's makespan [s].
+    pub makespan: f64,
+}
+
+/// The fault plan active during every checkpoint run: periodic
+/// crash-with-restart on every fourth node, so the snapshot must carry
+/// live fault-plane state (armed restarts, down nodes, event logs) to
+/// reproduce the oracle.
+pub fn campaign_plan(seed: u64) -> FaultPlan {
+    FaultPlan::seeded(seed ^ 0xC4A5).with_rule(
+        NodeSelector::EveryKth { k: 4, offset: 1 },
+        FaultRegime {
+            crash_prob: 0.002,
+            restart_after: Some(30.0),
+            ..FaultRegime::default()
+        },
+    )
+}
+
+fn fleet_config(ctx: &Ctx, n: usize) -> FleetConfig {
+    FleetConfig {
+        budget: BUDGET_PER_NODE * n as f64,
+        period: 1.0,
+        realloc_every: 5,
+        total_beats: ctx.scale.total_beats(),
+        max_time: 3_600.0,
+        // Distinct stream from the fleet/fault campaigns so no two share
+        // node noise by accident.
+        seed: ctx.seed ^ 0xC4EC,
+        threads: Some(1),
+    }
+}
+
+/// Byte-level digest of an outcome: every record's full-fidelity JSON.
+/// Two outcomes are byte-identical iff their digests (plus the ceilings
+/// trace and energy bits) are equal.
+pub fn digest(out: &FleetOutcome) -> String {
+    out.records
+        .iter()
+        .map(|r| r.to_json().dump())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// Bit-exact outcome comparison: records, ceilings trace, and the summary
+/// scalars. This is the oracle both the campaign and
+/// `tests/checkpoint_equivalence.rs` use.
+pub fn outcomes_identical(a: &FleetOutcome, b: &FleetOutcome) -> bool {
+    digest(a) == digest(b)
+        && a.limits_trace.len() == b.limits_trace.len()
+        && a.limits_trace.iter().zip(&b.limits_trace).all(|(x, y)| {
+            x.0.to_bits() == y.0.to_bits()
+                && x.1.len() == y.1.len()
+                && x.1.iter().zip(&y.1).all(|(u, v)| u.to_bits() == v.to_bits())
+        })
+        && a.total_energy.to_bits() == b.total_energy.to_bits()
+        && a.makespan.to_bits() == b.makespan.to_bits()
+        && a.completed == b.completed
+}
+
+/// The (stepping path × allocator) grid the campaign sweeps: all three
+/// stepping paths flat, plus the hierarchical allocator on the default
+/// path. `None` arity means flat epoch allocation.
+fn configs() -> Vec<(&'static str, SimPath, Option<usize>)> {
+    vec![
+        ("batched/flat", SimPath::Batched, None),
+        ("batched-scalar/flat", SimPath::BatchedScalar, None),
+        ("classic/flat", SimPath::Classic, None),
+        ("batched/tree-d3", SimPath::Batched, Some(2)),
+    ]
+}
+
+fn run_config(
+    ctx: &Ctx,
+    specs: &[NodeSpec],
+    cfg: &FleetConfig,
+    plan: &FaultPlan,
+    idx: usize,
+    name: &str,
+    path: SimPath,
+    tree_arity: Option<usize>,
+) -> CheckpointPoint {
+    let n = specs.len();
+    // Kill off the reallocation-epoch boundary (period 7, 14, ... with
+    // realloc_every 5) so resume also proves mid-epoch re-entry.
+    let kill_at = 7 + 7 * idx as u64;
+    let ckpt = CheckpointSpec {
+        every: 1,
+        path: ctx.path(&format!("ckpt_{idx}.bin")),
+    };
+
+    let (oracle, resumed) = match tree_arity {
+        None => {
+            let mut s1 = make_strategy("slack-proportional");
+            let oracle = run_fleet_with_faults(specs, s1.as_mut(), cfg, path, plan);
+            let mut s2 = make_strategy("slack-proportional");
+            let killed = run_fleet_killed(specs, s2.as_mut(), cfg, path, plan, &ckpt, kill_at)
+                .expect("checkpointed drive failed");
+            assert!(killed.is_none(), "kill_at {kill_at} was past the end of the run");
+            let mut s3 = make_strategy("slack-proportional");
+            let resumed = resume_fleet(specs, s3.as_mut(), cfg, path, plan, &ckpt.path)
+                .expect("resume failed");
+            (oracle, resumed)
+        }
+        Some(arity) => {
+            let spec = TreeSpec::balanced(BudgetPolicySpec::SlackProportional, 3, arity, n);
+            let mut t1 = CoordinatorTree::new(&spec);
+            let oracle = run_fleet_tree_with_faults(specs, &mut t1, cfg, path, plan);
+            let mut t2 = CoordinatorTree::new(&spec);
+            let killed =
+                run_fleet_tree_killed(specs, &mut t2, cfg, path, plan, &ckpt, kill_at)
+                    .expect("checkpointed tree drive failed");
+            assert!(killed.is_none(), "kill_at {kill_at} was past the end of the run");
+            let mut t3 = CoordinatorTree::new(&spec);
+            let resumed = resume_fleet_tree(specs, &mut t3, cfg, path, plan, &ckpt.path)
+                .expect("tree resume failed");
+            (oracle, resumed)
+        }
+    };
+
+    let snapshot_bytes = std::fs::metadata(&ckpt.path).map(|m| m.len()).unwrap_or(0);
+    let identical = outcomes_identical(&oracle, &resumed);
+    CheckpointPoint {
+        config: name.to_string(),
+        kill_period: kill_at,
+        snapshot_bytes,
+        identical,
+        energy: resumed.total_energy,
+        makespan: resumed.makespan,
+    }
+}
+
+/// The full campaign: kill + restore on every (path × allocator)
+/// configuration over the same faulty fleet and seeds, CSV + printed
+/// table.
+pub fn run(ctx: &Ctx, idents: &[Identified]) -> (String, Vec<CheckpointPoint>) {
+    let n = ctx.scale.fleet_nodes();
+    let specs = heterogeneous_specs(idents, n, NodePolicySpec::Pi { epsilon: CKPT_EPSILON });
+    let cfg = fleet_config(ctx, n);
+    let plan = campaign_plan(ctx.seed);
+    // Checkpoints land in the output directory; the atomic rename needs it
+    // to exist before the first drive loop runs.
+    std::fs::create_dir_all(&ctx.out_dir).ok();
+
+    let points: Vec<CheckpointPoint> = configs()
+        .iter()
+        .enumerate()
+        .map(|(i, (name, path, arity))| {
+            run_config(ctx, &specs, &cfg, &plan, i, name, *path, *arity)
+        })
+        .collect();
+
+    let mut csv = Table::new(vec![
+        "config",
+        "kill_period",
+        "snapshot_bytes",
+        "identical",
+        "energy_j",
+        "makespan_s",
+    ]);
+    for p in &points {
+        csv.push(vec![
+            p.config.clone(),
+            format!("{}", p.kill_period),
+            format!("{}", p.snapshot_bytes),
+            format!("{}", p.identical as u8),
+            format!("{}", p.energy),
+            format!("{}", p.makespan),
+        ]);
+    }
+    let _ = csv.save(ctx.path("checkpoint.csv"));
+
+    let mut out = format!(
+        "Checkpoint campaign — {n} nodes under an active crash/restart fault plan,\n\
+         killed mid-run and resumed from the last atomic snapshot (ε={CKPT_EPSILON}):\n\
+         {:<20} {:>6} {:>10} {:>10} {:>9} {:>10}\n",
+        "config", "kill@", "bytes", "E[J]", "T[s]", "resume"
+    );
+    for p in &points {
+        out.push_str(&format!(
+            "{:<20} {:>6} {:>10} {:>10.0} {:>9.0} {:>10}\n",
+            p.config,
+            p.kill_period,
+            p.snapshot_bytes,
+            p.energy,
+            p.makespan,
+            if p.identical { "IDENTICAL" } else { "DIVERGED" },
+        ));
+    }
+    (out, points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::common::{identify, Scale};
+    use crate::sim::cluster::ClusterId;
+
+    fn ctx(tag: &str) -> Ctx {
+        Ctx::new(
+            std::env::temp_dir().join(format!("powerctl-ckpt-{tag}")),
+            23,
+            Scale::Fast,
+        )
+    }
+
+    fn idents(ctx: &Ctx) -> Vec<Identified> {
+        ClusterId::ALL.iter().map(|&id| identify(ctx, id)).collect()
+    }
+
+    #[test]
+    fn campaign_every_config_resumes_identical() {
+        let ctx = ctx("table");
+        std::fs::create_dir_all(&ctx.out_dir).unwrap();
+        let idents = idents(&ctx);
+        let (out, points) = run(&ctx, &idents);
+        assert_eq!(points.len(), configs().len());
+        for p in &points {
+            assert!(p.identical, "{} diverged after resume", p.config);
+            assert!(p.snapshot_bytes > 0, "{} wrote no checkpoint", p.config);
+        }
+        assert!(out.contains("batched/tree-d3"));
+        assert!(out.contains("IDENTICAL"));
+        assert!(ctx.path("checkpoint.csv").exists());
+        let _ = std::fs::remove_dir_all(&ctx.out_dir);
+    }
+}

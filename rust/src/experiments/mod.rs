@@ -13,11 +13,13 @@
 //! | [`hetero`] | heterogeneous-node campaign: CPU+GPU device-split strategies |
 //! | [`faults`] | fault campaign: graceful degradation under seeded fault injection |
 //! | [`tree`] | coordinator-tree campaign: depth × arity × policy scaling |
+//! | [`checkpoint`] | checkpoint campaign: kill/resume byte-identity across paths × allocators |
 //!
 //! Every runner writes its raw data as CSV under the context's output
 //! directory and returns a printed summary with the paper-shape checks.
 
 pub mod ablation;
+pub mod checkpoint;
 pub mod common;
 pub mod faults;
 pub mod fig3;

@@ -29,6 +29,7 @@
 //!
 //! [`ControlLoop`]: crate::coordinator::engine::ControlLoop
 
+use std::path::{Path, PathBuf};
 use std::sync::mpsc;
 use std::time::Instant;
 
@@ -39,8 +40,10 @@ use crate::fleet::executor::ShardedExecutor;
 use crate::fleet::node::{spawn_worker, Cmd, NodeSpec, WorkerConfig, WorkerHandle};
 use crate::sim::faults::FaultPlan;
 use crate::sim::kernel::SimPath;
+use crate::util::error::Result;
 use crate::util::parallel::default_threads;
 use crate::util::rng::Pcg64;
+use crate::util::snapshot::{SnapshotReader, SnapshotWriter};
 
 /// Fleet run parameters.
 #[derive(Debug, Clone)]
@@ -96,6 +99,19 @@ pub struct FleetOutcome {
     pub node_ticks: u64,
     /// Wall-clock time of the drive loop [s] — the throughput denominator.
     pub wall_seconds: f64,
+}
+
+/// Periodic checkpointing of a fleet run: every `every` node periods the
+/// drive loop serializes the fleet's complete semantic state into `path`
+/// via an atomic write-then-rename, so a crash at any instant leaves
+/// either the previous checkpoint or the new one intact — never a torn
+/// file. `every = 0` disables checkpointing.
+#[derive(Debug, Clone)]
+pub struct CheckpointSpec {
+    /// Checkpoint cadence [node periods]; 0 disables.
+    pub every: u64,
+    /// Checkpoint file path (a sibling `.tmp` is used during the write).
+    pub path: PathBuf,
 }
 
 /// The sim seed node `i` runs under for a fleet rooted at `root` — exposed
@@ -241,19 +257,174 @@ enum EpochAllocator<'a> {
 /// The single fleet drive loop behind every `run_fleet*` entry point:
 /// tick the sharded executor once per node period, and on reallocation
 /// epochs apportion the global budget through `alloc` and actuate the
-/// resulting per-node ceilings.
+/// resulting per-node ceilings. Checkpoint-free, kill-free, resume-free
+/// callers cannot fail — this wrapper keeps their signatures infallible.
 fn drive_fleet(
+    specs: &[NodeSpec],
+    alloc: EpochAllocator<'_>,
+    config: &FleetConfig,
+    path: SimPath,
+    plan: &FaultPlan,
+) -> FleetOutcome {
+    drive_fleet_ext(specs, alloc, config, path, plan, None, None, None)
+        .expect("checkpoint-free fleet drive cannot fail")
+        .expect("kill-free fleet drive always produces an outcome")
+}
+
+/// Display name of a stepping path, stored in checkpoint `meta` sections
+/// and validated on resume (a resumed run must step the same path — the
+/// paths are byte-identical, but the contract is cheap to check and a
+/// mismatch usually means a config mix-up worth rejecting loudly).
+fn sim_path_name(path: SimPath) -> &'static str {
+    match path {
+        SimPath::Batched => "batched",
+        SimPath::BatchedScalar => "batched-scalar",
+        SimPath::Classic => "classic",
+    }
+}
+
+/// Serialize the drive loop's own state plus the executor's into a
+/// checkpoint file, atomically (tmp + fsync + rename).
+#[allow(clippy::too_many_arguments)]
+fn write_checkpoint(
+    ckpt_path: &Path,
+    exec: &mut ShardedExecutor,
+    config: &FleetConfig,
+    path: SimPath,
+    alloc_kind: &str,
+    now: f64,
+    period_idx: u64,
+    limits: &[f64],
+    limits_trace: &[(f64, Vec<f64>)],
+) -> Result<()> {
+    let mut w = SnapshotWriter::new();
+    let s = w.section("meta");
+    s.put_u64(exec.num_nodes() as u64);
+    s.put_u64(config.seed);
+    s.put_f64(config.budget);
+    s.put_f64(config.period);
+    s.put_u64(config.realloc_every);
+    s.put_u64(config.total_beats);
+    s.put_f64(config.max_time);
+    s.put_str(sim_path_name(path));
+    s.put_str(alloc_kind);
+    let s = w.section("drive");
+    s.put_f64(now);
+    s.put_u64(period_idx);
+    s.put_f64s(limits);
+    s.put_u64(limits_trace.len() as u64);
+    for (t, l) in limits_trace {
+        s.put_f64(*t);
+        s.put_f64s(l);
+    }
+    exec.save_state(&mut w);
+    w.write_atomic(ckpt_path)
+}
+
+/// Validate a checkpoint's `meta` section against the resuming run's
+/// configuration: every mismatch is a config error worth a descriptive
+/// rejection, because resuming under different parameters would produce a
+/// silently divergent (non-byte-identical) run.
+fn validate_meta(
+    r: &mut SnapshotReader,
+    n: usize,
+    config: &FleetConfig,
+    path: SimPath,
+    alloc_kind: &str,
+) -> Result<()> {
+    let s = r.section("meta")?;
+    let ck_n = s.take_u64()? as usize;
+    let ck_seed = s.take_u64()?;
+    let ck_budget = s.take_f64()?;
+    let ck_period = s.take_f64()?;
+    let ck_realloc = s.take_u64()?;
+    let ck_beats = s.take_u64()?;
+    let ck_max_time = s.take_f64()?;
+    let ck_path = s.take_str()?;
+    let ck_alloc = s.take_str()?;
+    s.expect_end()?;
+    if ck_n != n {
+        return Err(crate::err!("checkpoint is for {ck_n} nodes, this fleet has {n}"));
+    }
+    if ck_seed != config.seed {
+        return Err(crate::err!(
+            "checkpoint seed {ck_seed} != configured seed {}",
+            config.seed
+        ));
+    }
+    if ck_budget.to_bits() != config.budget.to_bits() {
+        return Err(crate::err!(
+            "checkpoint budget {ck_budget} W != configured {} W",
+            config.budget
+        ));
+    }
+    if ck_period.to_bits() != config.period.to_bits() {
+        return Err(crate::err!(
+            "checkpoint period {ck_period} s != configured {} s",
+            config.period
+        ));
+    }
+    if ck_realloc != config.realloc_every {
+        return Err(crate::err!(
+            "checkpoint realloc_every {ck_realloc} != configured {}",
+            config.realloc_every
+        ));
+    }
+    if ck_beats != config.total_beats {
+        return Err(crate::err!(
+            "checkpoint total_beats {ck_beats} != configured {}",
+            config.total_beats
+        ));
+    }
+    if ck_max_time.to_bits() != config.max_time.to_bits() {
+        return Err(crate::err!(
+            "checkpoint max_time {ck_max_time} s != configured {} s",
+            config.max_time
+        ));
+    }
+    if ck_path != sim_path_name(path) {
+        return Err(crate::err!(
+            "checkpoint stepped the {ck_path} path, this run uses {}",
+            sim_path_name(path)
+        ));
+    }
+    if ck_alloc != alloc_kind {
+        return Err(crate::err!(
+            "checkpoint ran a {ck_alloc} allocator, this run uses {alloc_kind}"
+        ));
+    }
+    Ok(())
+}
+
+/// The extended drive loop: [`drive_fleet`] plus optional periodic
+/// checkpointing (`ckpt`), an optional deterministic kill after period
+/// `kill_at` (`Ok(None)` — the crash-simulation hook the checkpoint
+/// campaign and tests use), and an optional resume from a checkpoint file
+/// written by an earlier, identically-configured run. A resumed run is
+/// byte-identical to the uninterrupted one: the checkpoint captures every
+/// stateful layer exactly (f64 bit patterns included), and everything not
+/// captured — shard partition, thread count, NUMA placement — is proven
+/// unable to move bytes (`tests/scheduler_determinism.rs`).
+#[allow(clippy::too_many_arguments)]
+fn drive_fleet_ext(
     specs: &[NodeSpec],
     mut alloc: EpochAllocator<'_>,
     config: &FleetConfig,
     path: SimPath,
     plan: &FaultPlan,
-) -> FleetOutcome {
+    ckpt: Option<&CheckpointSpec>,
+    kill_at: Option<u64>,
+    resume: Option<&Path>,
+) -> Result<Option<FleetOutcome>> {
     assert!(!specs.is_empty(), "fleet needs at least one node");
     let n = specs.len();
     let initial_limit = config.budget / n as f64;
     let seeds: Vec<u64> = (0..n).map(|i| node_seed(config.seed, i)).collect();
     let threads = config.threads.unwrap_or_else(default_threads).clamp(1, n);
+    let alloc_kind = match &alloc {
+        EpochAllocator::Flat(_) => "flat",
+        EpochAllocator::Tree(_) => "tree",
+    };
     let mut exec = ShardedExecutor::with_faults(
         specs,
         initial_limit,
@@ -269,6 +440,32 @@ fn drive_fleet(
     let mut now = 0.0;
     let mut period_idx: u64 = 0;
     let max_periods = (config.max_time / config.period).ceil() as u64 + 1;
+
+    if let Some(from) = resume {
+        let mut reader = SnapshotReader::read(from)?;
+        validate_meta(&mut reader, n, config, path, alloc_kind)?;
+        {
+            let s = reader.section("drive")?;
+            now = s.take_f64()?;
+            period_idx = s.take_u64()?;
+            limits = s.take_f64s()?;
+            if limits.len() != n {
+                return Err(crate::err!(
+                    "checkpoint limit vector has {} entries, this fleet has {n}",
+                    limits.len()
+                ));
+            }
+            let epochs = s.take_u64()? as usize;
+            limits_trace.reserve(epochs);
+            for _ in 0..epochs {
+                let t = s.take_f64()?;
+                let l = s.take_f64s()?;
+                limits_trace.push((t, l));
+            }
+            s.expect_end()?;
+        }
+        exec.restore_state(&mut reader)?;
+    }
 
     let t0 = Instant::now();
     loop {
@@ -290,6 +487,28 @@ fn drive_fleet(
             exec.set_limits(&limits);
             limits_trace.push((now, limits.clone()));
         }
+        // Checkpoint after the epoch's ceilings are actuated, so a resume
+        // re-enters the loop at the exact same point in the control
+        // cadence; the kill fires after the write, simulating a crash
+        // whose latest checkpoint survived intact.
+        if let Some(ck) = ckpt {
+            if ck.every > 0 && period_idx % ck.every == 0 {
+                write_checkpoint(
+                    &ck.path,
+                    &mut exec,
+                    config,
+                    path,
+                    alloc_kind,
+                    now,
+                    period_idx,
+                    &limits,
+                    &limits_trace,
+                )?;
+            }
+        }
+        if kill_at == Some(period_idx) {
+            return Ok(None);
+        }
     }
     let wall = t0.elapsed().as_secs_f64();
 
@@ -298,7 +517,175 @@ fn drive_fleet(
         EpochAllocator::Flat(strategy) => &**strategy,
         EpochAllocator::Tree(tree) => &**tree,
     };
-    summarize(strategy, records, limits_trace, period_idx * n as u64, wall)
+    Ok(Some(summarize(
+        strategy,
+        records,
+        limits_trace,
+        period_idx * n as u64,
+        wall,
+    )))
+}
+
+/// [`run_fleet_with_faults`] with periodic crash-consistent checkpoints:
+/// every `ckpt.every` periods the complete fleet state is written to
+/// `ckpt.path` atomically. Fails only on checkpoint I/O errors.
+pub fn run_fleet_with_checkpoints(
+    specs: &[NodeSpec],
+    strategy: &mut dyn BudgetPolicy,
+    config: &FleetConfig,
+    path: SimPath,
+    plan: &FaultPlan,
+    ckpt: &CheckpointSpec,
+) -> Result<FleetOutcome> {
+    drive_fleet_ext(
+        specs,
+        EpochAllocator::Flat(strategy),
+        config,
+        path,
+        plan,
+        Some(ckpt),
+        None,
+        None,
+    )
+    .map(|out| out.expect("kill-free fleet drive always produces an outcome"))
+}
+
+/// [`run_fleet_tree_with_faults`] with periodic crash-consistent
+/// checkpoints — the tree-allocator counterpart of
+/// [`run_fleet_with_checkpoints`].
+pub fn run_fleet_tree_with_checkpoints(
+    specs: &[NodeSpec],
+    tree: &mut CoordinatorTree,
+    config: &FleetConfig,
+    path: SimPath,
+    plan: &FaultPlan,
+    ckpt: &CheckpointSpec,
+) -> Result<FleetOutcome> {
+    assert_eq!(
+        tree.leaves(),
+        specs.len(),
+        "tree leaf count must match the fleet size"
+    );
+    drive_fleet_ext(
+        specs,
+        EpochAllocator::Tree(tree),
+        config,
+        path,
+        plan,
+        Some(ckpt),
+        None,
+        None,
+    )
+    .map(|out| out.expect("kill-free fleet drive always produces an outcome"))
+}
+
+/// Run with checkpoints and kill the drive loop right after period
+/// `kill_at` (simulated coordinator crash; the freshest on-cadence
+/// checkpoint survives on disk). Returns `Ok(None)` when the kill fired,
+/// `Ok(Some(outcome))` when the fleet finished before reaching it.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fleet_killed(
+    specs: &[NodeSpec],
+    strategy: &mut dyn BudgetPolicy,
+    config: &FleetConfig,
+    path: SimPath,
+    plan: &FaultPlan,
+    ckpt: &CheckpointSpec,
+    kill_at: u64,
+) -> Result<Option<FleetOutcome>> {
+    drive_fleet_ext(
+        specs,
+        EpochAllocator::Flat(strategy),
+        config,
+        path,
+        plan,
+        Some(ckpt),
+        Some(kill_at),
+        None,
+    )
+}
+
+/// Tree-allocator counterpart of [`run_fleet_killed`].
+#[allow(clippy::too_many_arguments)]
+pub fn run_fleet_tree_killed(
+    specs: &[NodeSpec],
+    tree: &mut CoordinatorTree,
+    config: &FleetConfig,
+    path: SimPath,
+    plan: &FaultPlan,
+    ckpt: &CheckpointSpec,
+    kill_at: u64,
+) -> Result<Option<FleetOutcome>> {
+    assert_eq!(
+        tree.leaves(),
+        specs.len(),
+        "tree leaf count must match the fleet size"
+    );
+    drive_fleet_ext(
+        specs,
+        EpochAllocator::Tree(tree),
+        config,
+        path,
+        plan,
+        Some(ckpt),
+        Some(kill_at),
+        None,
+    )
+}
+
+/// Resume a fleet run from a checkpoint written by an identically
+/// configured earlier run (same specs, config, stepping path, fault plan
+/// and allocator shape — the checkpoint's `meta` section is validated and
+/// any mismatch rejected). The resumed run's records are byte-identical
+/// to the uninterrupted run's (`tests/checkpoint_equivalence.rs`).
+pub fn resume_fleet(
+    specs: &[NodeSpec],
+    strategy: &mut dyn BudgetPolicy,
+    config: &FleetConfig,
+    path: SimPath,
+    plan: &FaultPlan,
+    from: &Path,
+) -> Result<FleetOutcome> {
+    drive_fleet_ext(
+        specs,
+        EpochAllocator::Flat(strategy),
+        config,
+        path,
+        plan,
+        None,
+        None,
+        Some(from),
+    )
+    .map(|out| out.expect("kill-free fleet drive always produces an outcome"))
+}
+
+/// Tree-allocator counterpart of [`resume_fleet`]. The tree must be
+/// freshly built (its interior state is per-epoch scratch; the drive
+/// trace the checkpoint carries is restored into the outcome).
+pub fn resume_fleet_tree(
+    specs: &[NodeSpec],
+    tree: &mut CoordinatorTree,
+    config: &FleetConfig,
+    path: SimPath,
+    plan: &FaultPlan,
+    from: &Path,
+) -> Result<FleetOutcome> {
+    assert_eq!(
+        tree.leaves(),
+        specs.len(),
+        "tree leaf count must match the fleet size"
+    );
+    drive_fleet_ext(
+        specs,
+        EpochAllocator::Tree(tree),
+        config,
+        path,
+        plan,
+        None,
+        None,
+        Some(from),
+    )
+    .map(|out| out.expect("kill-free fleet drive always produces an outcome"))
 }
 
 /// Run `specs` as a fleet under `strategy` on the legacy

@@ -83,7 +83,9 @@ use crate::sim::cluster::Cluster;
 use crate::sim::device::DeviceKind;
 use crate::sim::faults::{FaultAction, FaultEventKind, FaultPlan};
 use crate::sim::kernel::{ShardKernel, SimPath};
+use crate::util::error::Result;
 use crate::util::parallel::{catch_quiet, PinStatus, SendPtr, WorkerPool};
+use crate::util::snapshot::{Snapshot, SnapshotReader, SnapshotWriter};
 
 /// Cap on pre-reserved sample rows per node (`max_time / period` can be
 /// huge for open-horizon runs; beyond this the sample log simply grows).
@@ -782,6 +784,125 @@ impl ShardedExecutor {
         }
         self.shards = build_shards(cells, boundaries);
         self.adopt_shards();
+    }
+
+    /// Serialize every node's full semantic state into `w` — the
+    /// checkpoint pause point, called between periods (after `tick`
+    /// returns, before the next one). Resident nodes are captured through
+    /// [`ShardKernel::snapshot_node`] — a scatter that leaves residency
+    /// intact, so checkpointing costs one state copy per node and zero
+    /// adopt churn. One `node.<i>` section per node (global node order)
+    /// plus an `exec` section with the period counter; the shard
+    /// partition, thread count and NUMA placement are deliberately NOT
+    /// saved — they can only move wall time, never bytes, so a resumed
+    /// executor is free to rebuild them from its own configuration.
+    pub(crate) fn save_state(&mut self, w: &mut SnapshotWriter) {
+        for shard in &mut self.shards {
+            if !shard.resident {
+                continue;
+            }
+            for (j, cell) in shard.cells.iter_mut().enumerate() {
+                let (node, _) = cell.engine.backend_mut().sim_node();
+                if node.resident {
+                    shard.kernel.snapshot_node(j, node);
+                }
+            }
+        }
+        let s = w.section("exec");
+        s.put_u64(self.periods);
+        s.put_u64(self.reports.len() as u64);
+        for shard in &self.shards {
+            for (i, cell) in shard.cells.iter().enumerate() {
+                let s = w.section(&format!("node.{}", shard.first + i));
+                s.put_bool(cell.down);
+                s.put_bool(cell.permanent);
+                s.put_bool(cell.restarted);
+                s.put_u32(cell.report.node_id);
+                s.put_f64(cell.report.limit);
+                s.put_f64(cell.report.pcap);
+                s.put_f64(cell.report.power);
+                s.put_f64(cell.report.progress);
+                s.put_f64(cell.report.setpoint);
+                s.put_f64(cell.report.pcap_min);
+                s.put_f64(cell.report.pcap_max);
+                s.put_bool(cell.report.done);
+                s.put_bool(cell.report.failed);
+                cell.engine.save_loop_state(s);
+                cell.engine.backend().save(s);
+                cell.policy.save(s);
+            }
+        }
+    }
+
+    /// Restore every node's semantic state from `r` onto a freshly built
+    /// executor (same specs, seeds, config and stepping path as the
+    /// checkpointed run — the caller validates the `meta` section before
+    /// getting here). Each resident node is released, overwritten from its
+    /// snapshot section, and re-adopted into the slot it already owns;
+    /// nodes the snapshot records as down stay out of the kernel, exactly
+    /// as the crash left them. Errors reject the whole restore — a
+    /// partially restored executor is never returned to the caller.
+    pub(crate) fn restore_state(&mut self, r: &mut SnapshotReader) -> Result<()> {
+        let s = r.section("exec")?;
+        let periods = s.take_u64()?;
+        let n = s.take_u64()? as usize;
+        s.expect_end()?;
+        if n != self.reports.len() {
+            return Err(crate::err!(
+                "checkpoint holds {n} nodes, this fleet has {} (config mismatch)",
+                self.reports.len()
+            ));
+        }
+        for shard in &mut self.shards {
+            for (j, cell) in shard.cells.iter_mut().enumerate() {
+                let global = shard.first + j;
+                let s = r.section(&format!("node.{global}"))?;
+                if shard.resident {
+                    let (node, _) = cell.engine.backend_mut().sim_node();
+                    if node.resident {
+                        shard.kernel.release(j, node);
+                    }
+                }
+                cell.down = s.take_bool()?;
+                cell.permanent = s.take_bool()?;
+                cell.restarted = s.take_bool()?;
+                let node_id = s.take_u32()?;
+                if node_id != global as u32 {
+                    return Err(crate::err!(
+                        "checkpoint section node.{global} carries node id {node_id} (corrupt layout)"
+                    ));
+                }
+                cell.report.node_id = node_id;
+                cell.report.limit = s.take_f64()?;
+                cell.report.pcap = s.take_f64()?;
+                cell.report.power = s.take_f64()?;
+                cell.report.progress = s.take_f64()?;
+                cell.report.setpoint = s.take_f64()?;
+                cell.report.pcap_min = s.take_f64()?;
+                cell.report.pcap_max = s.take_f64()?;
+                cell.report.done = s.take_bool()?;
+                cell.report.failed = s.take_bool()?;
+                cell.engine.restore_loop_state(s)?;
+                cell.engine.backend_mut().restore(s)?;
+                cell.policy.restore(s)?;
+                s.expect_end()?;
+                if shard.resident && !cell.down {
+                    let (node, _) = cell.engine.backend_mut().sim_node();
+                    shard.kernel.readopt(j, node);
+                }
+            }
+            shard.all_done = shard
+                .cells
+                .iter()
+                .all(|c| c.report.done || c.permanent);
+        }
+        self.periods = periods;
+        for shard in &self.shards {
+            for (i, cell) in shard.cells.iter().enumerate() {
+                self.reports[shard.first + i] = cell.report;
+            }
+        }
+        Ok(())
     }
 
     /// Tear down the pool and finalize one [`RunRecord`] per node (node

@@ -32,6 +32,8 @@ use crate::sim::faults::{
 };
 use crate::sim::node::NodeSim;
 use crate::ident::DynamicModel;
+use crate::util::error::Result;
+use crate::util::snapshot::{Section, Snapshot};
 
 /// The exact fitted model a perfect (noise-free) identification campaign
 /// would produce for `id` — test/bench support shared by the fleet unit
@@ -348,6 +350,102 @@ impl BudgetedPolicy {
     /// runs fault-free).
     pub(crate) fn fault_events(&self) -> &[FaultEvent] {
         self.faults.as_ref().map_or(&[], |fs| fs.plan.events())
+    }
+}
+
+impl Snapshot for BudgetedPolicy {
+    /// Persist the runtime ceiling, the controller interior, and (when the
+    /// node is faulted) the degradation-ladder counters plus the fault
+    /// schedule's RNG cursor and event log. `hw_min`/`hw_max`/`setpoint`/
+    /// `epsilon` are construction-time values rebuilt from the node spec;
+    /// `pending` is drawn and consumed within a single tick, so a
+    /// between-period checkpoint never holds live pending faults.
+    fn save(&self, w: &mut Section) {
+        w.put_f64(self.limit);
+        match &self.kind {
+            Kind::Static => w.put_u8(0),
+            Kind::Pi(ctl) => {
+                w.put_u8(1);
+                ctl.save(w);
+            }
+        }
+        w.put_bool(self.faults.is_some());
+        if let Some(fs) = self.faults.as_deref() {
+            w.put_u32(fs.misses);
+            w.put_f64(fs.last_cap);
+            fs.plan.save(w);
+        }
+    }
+
+    fn restore(&mut self, r: &mut Section) -> Result<()> {
+        self.limit = r.take_f64()?;
+        let tag = r.take_u8()?;
+        match (&mut self.kind, tag) {
+            (Kind::Static, 0) => {}
+            (Kind::Pi(ctl), 1) => ctl.restore(r)?,
+            (Kind::Static, 1) => {
+                return Err(crate::err!(
+                    "node policy snapshot carries a PI controller, this node is static (spec mismatch)"
+                ))
+            }
+            (Kind::Pi(_), 0) => {
+                return Err(crate::err!(
+                    "node policy snapshot is static, this node runs a PI controller (spec mismatch)"
+                ))
+            }
+            (_, t) => return Err(crate::err!("node policy snapshot: unknown kind tag {t}")),
+        }
+        let has_faults = r.take_bool()?;
+        match (&mut self.faults, has_faults) {
+            (None, false) => {}
+            (Some(fs), true) => {
+                fs.misses = r.take_u32()?;
+                fs.last_cap = r.take_f64()?;
+                fs.plan.restore(r)?;
+                fs.pending = PeriodFaults::default();
+            }
+            (None, true) => {
+                return Err(crate::err!(
+                    "node policy snapshot carries fault state, this node runs fault-free (plan mismatch)"
+                ))
+            }
+            (Some(_), false) => {
+                return Err(crate::err!(
+                    "node policy snapshot is fault-free, this node has a fault plan (plan mismatch)"
+                ))
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Snapshot for FleetBackend {
+    fn save(&self, w: &mut Section) {
+        match self {
+            FleetBackend::Classic(b) => {
+                w.put_u8(0);
+                b.save(w);
+            }
+            FleetBackend::Hetero(b) => {
+                w.put_u8(1);
+                b.save(w);
+            }
+        }
+    }
+
+    fn restore(&mut self, r: &mut Section) -> Result<()> {
+        let tag = r.take_u8()?;
+        match (self, tag) {
+            (FleetBackend::Classic(b), 0) => b.restore(r),
+            (FleetBackend::Hetero(b), 1) => b.restore(r),
+            (FleetBackend::Classic(_), 1) => Err(crate::err!(
+                "node backend snapshot is hetero, this node is single-device (spec mismatch)"
+            )),
+            (FleetBackend::Hetero(_), 0) => Err(crate::err!(
+                "node backend snapshot is single-device, this node is hetero (spec mismatch)"
+            )),
+            (_, t) => Err(crate::err!("node backend snapshot: unknown kind tag {t}")),
+        }
     }
 }
 

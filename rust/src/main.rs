@@ -13,6 +13,7 @@
 //! powerctl hetero                      CPU+GPU node campaign (device-split strategies)
 //! powerctl faults                      fault campaign (graceful degradation under injection)
 //! powerctl tree                        coordinator-tree campaign (depth × arity × policy)
+//! powerctl checkpoint                  checkpoint campaign (kill/resume byte-identity)
 //! powerctl ablation                    design-choice ablations
 //! powerctl live [--iterations n]       live PJRT workload + NRM daemon demo
 //! powerctl all [--full]                everything, in order
@@ -42,6 +43,7 @@ fn cli() -> Cli {
         .subcommand("hetero", "heterogeneous-node campaign: CPU+GPU device-split strategies")
         .subcommand("faults", "fault campaign: graceful degradation under seeded injection")
         .subcommand("tree", "coordinator-tree campaign: depth × arity × budget-policy scaling")
+        .subcommand("checkpoint", "checkpoint campaign: kill/resume byte-identity across configs")
         .subcommand("ablation", "design-choice ablations")
         .subcommand("replay", "re-fit models + aggregates from saved campaign CSVs")
         .subcommand("live", "live demo: PJRT workload + NRM daemon + PI")
@@ -130,6 +132,16 @@ fn main() {
             print!("{out}");
             println!("raw points: {}", ctx.path("tree.csv").display());
         }
+        "checkpoint" => {
+            let idents = experiments::identify_all(&ctx);
+            let (out, points) = experiments::checkpoint::run(&ctx, &idents);
+            print!("{out}");
+            println!("raw points: {}", ctx.path("checkpoint.csv").display());
+            if points.iter().any(|p| !p.identical) {
+                eprintln!("resume diverged from the uninterrupted oracle");
+                std::process::exit(1);
+            }
+        }
         "ablation" => {
             let idents = experiments::identify_all(&ctx);
             print!("{}", experiments::ablation::run(&ctx, &idents));
@@ -164,6 +176,8 @@ fn main() {
             print!("{fa}");
             let (tr, _) = experiments::tree::run(&ctx, &idents);
             print!("{tr}");
+            let (ck, _) = experiments::checkpoint::run(&ctx, &idents);
+            print!("{ck}");
             print!("{}", experiments::ablation::run(&ctx, &idents));
         }
         other => {

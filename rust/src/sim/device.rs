@@ -17,7 +17,9 @@ use crate::sim::cluster::Cluster;
 use crate::sim::disturbance::{DisturbanceState, Disturbances};
 use crate::sim::plant::{Plant, PowerProfile};
 use crate::sim::rapl::{EnergyCounter, RaplPackage};
+use crate::util::error::Result;
 use crate::util::rng::Pcg64;
+use crate::util::snapshot::{Section, Snapshot};
 
 /// Per-beat interval jitter coefficient of variation. Deliberately includes
 /// occasional heavy-tailed outliers so the median-vs-mean choice in Eq. (1)
@@ -329,6 +331,41 @@ impl Device {
             beats,
             energy,
         )
+    }
+}
+
+impl Snapshot for Device {
+    fn save(&self, w: &mut Section) {
+        self.package.save(w);
+        self.plant.save(w);
+        self.disturbances.save(w);
+        self.rng.save(w);
+        w.put_f64(self.ou);
+        w.put_f64(self.backlog);
+        w.put_f64(self.last_beat);
+        w.put_u64(self.beats);
+        w.put_f64(self.last_power);
+        w.put_f64(self.last_dist.progress_ceiling);
+        w.put_bool(self.last_dist.drop_active);
+        w.put_f64(self.last_dist.thermal_factor);
+    }
+
+    fn restore(&mut self, r: &mut Section) -> Result<()> {
+        self.package.restore(r)?;
+        self.plant.restore(r)?;
+        self.disturbances.restore(r)?;
+        self.rng.restore(r)?;
+        self.ou = r.take_f64()?;
+        self.backlog = r.take_f64()?;
+        self.last_beat = r.take_f64()?;
+        self.beats = r.take_u64()?;
+        self.last_power = r.take_f64()?;
+        self.last_dist = DisturbanceState {
+            progress_ceiling: r.take_f64()?,
+            drop_active: r.take_bool()?,
+            thermal_factor: r.take_f64()?,
+        };
+        Ok(())
     }
 }
 

@@ -13,7 +13,9 @@
 //! durations; thermal drift is a slow bounded random walk.
 
 use crate::sim::cluster::Cluster;
+use crate::util::error::Result;
 use crate::util::rng::Pcg64;
+use crate::util::snapshot::{Section, Snapshot};
 
 /// Current disturbance state applied by the plant.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -166,6 +168,20 @@ impl Disturbances {
             drop_active,
             thermal_factor: self.thermal,
         }
+    }
+}
+
+impl Snapshot for Disturbances {
+    fn save(&self, w: &mut Section) {
+        w.put_f64(self.active_left);
+        w.put_f64(self.thermal);
+        self.rng.save(w);
+    }
+
+    fn restore(&mut self, r: &mut Section) -> Result<()> {
+        self.active_left = r.take_f64()?;
+        self.thermal = r.take_f64()?;
+        self.rng.restore(r)
     }
 }
 

@@ -25,7 +25,9 @@
 //! channels whose probability is strictly positive, in a fixed documented
 //! order, so enabling one channel never shifts another channel's stream.
 
+use crate::util::error::Result;
 use crate::util::rng::Pcg64;
+use crate::util::snapshot::{Section, Snapshot};
 
 /// Stream tag for the per-plan root RNG (all node streams split from it).
 const FAULT_STREAM: u64 = 0xFA_017;
@@ -282,6 +284,38 @@ pub enum FaultEventKind {
 }
 
 impl FaultEventKind {
+    /// Stable one-byte tag used by the snapshot codec.
+    fn snapshot_tag(self) -> u8 {
+        match self {
+            FaultEventKind::SensorDropout => 0,
+            FaultEventKind::Garbled => 1,
+            FaultEventKind::ActuatorIgnored => 2,
+            FaultEventKind::ActuatorPartial => 3,
+            FaultEventKind::ActuatorClamped => 4,
+            FaultEventKind::Crash => 5,
+            FaultEventKind::Restart => 6,
+            FaultEventKind::Panic => 7,
+            FaultEventKind::FallbackFullCap => 8,
+            FaultEventKind::Reengage => 9,
+        }
+    }
+
+    fn from_snapshot_tag(tag: u8) -> Option<FaultEventKind> {
+        Some(match tag {
+            0 => FaultEventKind::SensorDropout,
+            1 => FaultEventKind::Garbled,
+            2 => FaultEventKind::ActuatorIgnored,
+            3 => FaultEventKind::ActuatorPartial,
+            4 => FaultEventKind::ActuatorClamped,
+            5 => FaultEventKind::Crash,
+            6 => FaultEventKind::Restart,
+            7 => FaultEventKind::Panic,
+            8 => FaultEventKind::FallbackFullCap,
+            9 => FaultEventKind::Reengage,
+            _ => return None,
+        })
+    }
+
     /// Stable string used in `RunRecord` JSON.
     pub fn as_str(&self) -> &'static str {
         match self {
@@ -418,6 +452,41 @@ impl NodeFaults {
         }
 
         FaultAction::Run(pf)
+    }
+}
+
+/// The regime and `fallback_k` are plan configuration (rebuilt on resume
+/// from the same [`FaultPlan`]); the live state is the RNG cursor, the
+/// outage timer, the one-shot schedule arms and the event log.
+impl Snapshot for NodeFaults {
+    fn save(&self, w: &mut Section) {
+        self.rng.save(w);
+        w.put_opt_f64(self.down_since);
+        w.put_bool(self.crash_at_armed);
+        w.put_bool(self.panic_armed);
+        w.put_u64(self.events.len() as u64);
+        for e in &self.events {
+            w.put_f64(e.t);
+            w.put_u8(e.kind.snapshot_tag());
+        }
+    }
+
+    fn restore(&mut self, r: &mut Section) -> Result<()> {
+        self.rng.restore(r)?;
+        self.down_since = r.take_opt_f64()?;
+        self.crash_at_armed = r.take_bool()?;
+        self.panic_armed = r.take_bool()?;
+        let n = r.take_u64()? as usize;
+        self.events.clear();
+        self.events.reserve(n);
+        for _ in 0..n {
+            let t = r.take_f64()?;
+            let tag = r.take_u8()?;
+            let kind = FaultEventKind::from_snapshot_tag(tag)
+                .ok_or_else(|| crate::err!("fault snapshot: unknown event tag {tag}"))?;
+            self.events.push(FaultEvent { t, kind });
+        }
+        Ok(())
     }
 }
 

@@ -756,6 +756,21 @@ impl ShardKernel {
         node.resident = false;
     }
 
+    /// Copy resident node `j`'s full hot state back into its `Device`
+    /// views **without** ending its residency — the checkpoint pause
+    /// point. Identical scatter semantics to [`release`](Self::release)
+    /// (including the control-plane cap preservation), but the arrays stay
+    /// authoritative: after the snapshot is serialized the run continues
+    /// with zero re-adopt cost and no residency churn.
+    pub(crate) fn snapshot_node(&mut self, j: usize, node: &mut NodeSim) {
+        debug_assert!(self.resident, "snapshot_node on a non-resident kernel");
+        debug_assert!(
+            node.resident && node.staged.is_none(),
+            "snapshot_node outside the between-periods pause point"
+        );
+        self.scatter_state(j, node);
+    }
+
     /// Re-adopt a previously released node into the slots it already owns
     /// (the inverse of [`release`](Self::release) — a restart after a
     /// crash outage). The node's views are re-gathered in place: indices,

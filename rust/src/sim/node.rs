@@ -23,6 +23,8 @@ use crate::sim::cluster::Cluster;
 use crate::sim::device::{Device, DeviceSpec};
 use crate::sim::kernel::ShardKernel;
 use crate::sim::rapl::EnergyCounter;
+use crate::util::error::Result;
+use crate::util::snapshot::{Section, Snapshot};
 
 /// Sensor snapshot returned by [`NodeSim::step`].
 #[derive(Debug, Clone)]
@@ -112,6 +114,40 @@ pub struct NodeSim {
     /// Classic per-device scalar stepping instead of the batched kernel
     /// (oracle/bench mode; byte-identical by construction).
     classic: bool,
+}
+
+/// Checkpoints are taken between control periods, when `staged` is `None`
+/// and (for resident nodes) the kernel has scattered current state back
+/// into the device structs via a pause-point gather — so only the device
+/// states, the energy counter and the clock are live; `scratch`,
+/// `merge_idx` and the per-node kernel are transient and rebuilt.
+impl Snapshot for NodeSim {
+    fn save(&self, w: &mut Section) {
+        debug_assert!(self.staged.is_none(), "snapshot with a staged period");
+        w.put_u64(self.devices.len() as u64);
+        for d in &self.devices {
+            d.save(w);
+        }
+        self.energy.save(w);
+        w.put_f64(self.time);
+    }
+
+    fn restore(&mut self, r: &mut Section) -> Result<()> {
+        let n = r.take_u64()? as usize;
+        if n != self.devices.len() {
+            return Err(crate::err!(
+                "node snapshot has {n} devices, this node has {} (spec mismatch)",
+                self.devices.len()
+            ));
+        }
+        for d in &mut self.devices {
+            d.restore(r)?;
+        }
+        self.energy.restore(r)?;
+        self.time = r.take_f64()?;
+        self.staged = None;
+        Ok(())
+    }
 }
 
 impl NodeSim {

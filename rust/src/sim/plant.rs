@@ -13,6 +13,8 @@
 
 use crate::sim::cluster::Cluster;
 use crate::sim::disturbance::DisturbanceState;
+use crate::util::error::Result;
+use crate::util::snapshot::{Section, Snapshot};
 
 /// Power→progress profile of the running application phase.
 ///
@@ -145,6 +147,26 @@ impl Plant {
     /// Current (noise-free) progress [Hz].
     pub fn progress(&self) -> f64 {
         self.progress
+    }
+}
+
+impl Snapshot for Plant {
+    fn save(&self, w: &mut Section) {
+        w.put_u8(match self.profile {
+            PowerProfile::MemoryBound => 0,
+            PowerProfile::ComputeBound => 1,
+        });
+        w.put_f64(self.progress);
+    }
+
+    fn restore(&mut self, r: &mut Section) -> Result<()> {
+        self.profile = match r.take_u8()? {
+            0 => PowerProfile::MemoryBound,
+            1 => PowerProfile::ComputeBound,
+            t => return Err(crate::err!("plant snapshot: unknown profile tag {t}")),
+        };
+        self.progress = r.take_f64()?;
+        Ok(())
     }
 }
 

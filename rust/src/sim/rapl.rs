@@ -12,7 +12,9 @@
 //! * an energy counter integrates delivered power, like the RAPL
 //!   `energy_uj` sysfs counter, with wraparound handled by the reader.
 
+use crate::util::error::Result;
 use crate::util::rng::Pcg64;
+use crate::util::snapshot::{Section, Snapshot};
 
 /// Per-package RAPL model. A node has `sockets` packages; the paper
 /// applies the same cap to every package, so the node-level actuator
@@ -122,6 +124,19 @@ impl RaplPackage {
     }
 }
 
+impl Snapshot for RaplPackage {
+    fn save(&self, w: &mut Section) {
+        w.put_f64(self.cap);
+        w.put_f64(self.power);
+    }
+
+    fn restore(&mut self, r: &mut Section) -> Result<()> {
+        self.cap = r.take_f64()?;
+        self.power = r.take_f64()?;
+        Ok(())
+    }
+}
+
 /// Node-level energy counter: integrates true power like the RAPL
 /// `energy_uj` counter (in joules here; no wraparound in the simulator, but
 /// the reader API mirrors a counter, not a rate).
@@ -145,6 +160,17 @@ impl EnergyCounter {
     /// Monotone counter value [J].
     pub fn read(&self) -> f64 {
         self.joules
+    }
+}
+
+impl Snapshot for EnergyCounter {
+    fn save(&self, w: &mut Section) {
+        w.put_f64(self.joules);
+    }
+
+    fn restore(&mut self, r: &mut Section) -> Result<()> {
+        self.joules = r.take_f64()?;
+        Ok(())
     }
 }
 

@@ -14,5 +14,6 @@ pub mod error;
 pub mod json;
 pub mod parallel;
 pub mod rng;
+pub mod snapshot;
 pub mod stats;
 pub mod timeseries;

@@ -7,12 +7,28 @@
 //! through [`Pcg64`] with explicitly recorded seeds so every run is exactly
 //! reproducible.
 
+use crate::util::error::Result;
+use crate::util::snapshot::{Section, Snapshot};
+
 /// PCG-XSH-RR with 64-bit state and 32-bit output, extended to produce
 /// 64-bit values by concatenating two outputs.
 #[derive(Debug, Clone)]
 pub struct Pcg64 {
     state: u64,
     inc: u64,
+}
+
+impl Snapshot for Pcg64 {
+    fn save(&self, w: &mut Section) {
+        w.put_u64(self.state);
+        w.put_u64(self.inc);
+    }
+
+    fn restore(&mut self, r: &mut Section) -> Result<()> {
+        self.state = r.take_u64()?;
+        self.inc = r.take_u64()?;
+        Ok(())
+    }
 }
 
 const PCG_MULT: u64 = 6364136223846793005;

@@ -1,0 +1,741 @@
+//! Versioned, checksummed, self-describing binary snapshot codec.
+//!
+//! The checkpoint/restore layer (DESIGN.md "Checkpoint/restore") needs to
+//! persist every bit of live controller state — RNG streams, PI
+//! integrators, resident kernel arrays, fault cursors — and resume
+//! **byte-identically**. `serde`/`bincode` are not in the vendored crate
+//! set (offline build, DESIGN.md §3), so this module hand-rolls the codec:
+//!
+//! ```text
+//! file   := magic "PCTLSNAP" | version u32 | nsections u32
+//!           | section* | file_crc u32
+//! section:= name_len u32 | name bytes | payload_len u64 | payload
+//!           | section_crc u32            (CRC-32 over name ‖ payload)
+//! ```
+//!
+//! All integers are little-endian; `f64`s are stored as their exact IEEE-754
+//! bit patterns (`to_bits`/`from_bits`), so NaN payloads, signed zeros and
+//! subnormals round-trip bit-for-bit. Every value inside a payload carries a
+//! one-byte type tag, which makes decode failures *descriptive* ("section
+//! 'node.3': expected f64 at byte 17, found tag 0x03") instead of silently
+//! misaligned. The trailing file-level CRC-32 covers every preceding byte,
+//! so truncation at any offset and single-bit corruption anywhere are both
+//! rejected with a [`crate::util::error::Error`] — never a panic, never a
+//! silently-wrong restore.
+//!
+//! [`SnapshotWriter::write_atomic`] provides crash consistency: the bytes
+//! go to a sibling `*.tmp` file which is fsynced and then renamed over the
+//! destination, so a crash mid-write leaves the previous checkpoint intact.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::util::error::{Context, Error, Result};
+
+/// File magic: identifies a powerctl snapshot.
+const MAGIC: &[u8; 8] = b"PCTLSNAP";
+
+/// Codec version; bump on any layout change. Mismatched files are rejected.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// Hard cap on section name / payload lengths accepted by the decoder, so
+/// a corrupted length field cannot trigger an absurd allocation.
+const MAX_SECTION_LEN: u64 = 1 << 32;
+
+// Per-value type tags (one byte before every encoded value).
+const TAG_U8: u8 = 0x01;
+const TAG_U32: u8 = 0x02;
+const TAG_U64: u8 = 0x03;
+const TAG_F64: u8 = 0x04;
+const TAG_BOOL: u8 = 0x05;
+const TAG_STR: u8 = 0x06;
+const TAG_NONE: u8 = 0x07;
+const TAG_SOME: u8 = 0x08;
+const TAG_F64S: u8 = 0x09;
+
+const CRC_TABLE: [u32; 256] = crc_table();
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+/// Streaming CRC-32 (IEEE 802.3 polynomial) update; start from
+/// [`CRC_INIT`], finish by XOR with `0xFFFF_FFFF`.
+const CRC_INIT: u32 = 0xFFFF_FFFF;
+
+fn crc_update(mut state: u32, bytes: &[u8]) -> u32 {
+    for &b in bytes {
+        state = CRC_TABLE[((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
+    }
+    state
+}
+
+/// CRC-32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    crc_update(CRC_INIT, bytes) ^ 0xFFFF_FFFF
+}
+
+/// Every stateful layer implements this pair: `save` appends the layer's
+/// live state to a [`Section`], `restore` consumes the same values in the
+/// same order from a decoded section. Implementations live in the module
+/// that owns the (usually private) fields, and `restore` must validate
+/// structural expectations (counts, variant tags) with descriptive errors
+/// rather than panicking.
+pub trait Snapshot {
+    /// Append this layer's state to the section.
+    fn save(&self, w: &mut Section);
+    /// Overwrite this layer's state from the section cursor.
+    fn restore(&mut self, r: &mut Section) -> Result<()>;
+}
+
+/// One named, independently-checksummed chunk of a snapshot. Acts as a
+/// write buffer (`put_*`) while building and as a cursor-tracked reader
+/// (`take_*`) after decoding.
+#[derive(Debug, Clone)]
+pub struct Section {
+    name: String,
+    buf: Vec<u8>,
+    cursor: usize,
+}
+
+impl Section {
+    fn new(name: &str) -> Self {
+        Section {
+            name: name.to_string(),
+            buf: Vec::new(),
+            cursor: 0,
+        }
+    }
+
+    /// The section's name (as written in the file).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Encoded payload length in bytes.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// True when the payload is empty.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    // ---- encoding ----
+
+    /// Append a `u8`.
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(TAG_U8);
+        self.buf.push(v);
+    }
+
+    /// Append a `u32`.
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.push(TAG_U32);
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append a `u64`.
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.push(TAG_U64);
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Append an `f64` as its exact bit pattern (NaN payloads, signed
+    /// zeros and subnormals survive).
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.push(TAG_F64);
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    /// Append a `bool`.
+    pub fn put_bool(&mut self, v: bool) {
+        self.buf.push(TAG_BOOL);
+        self.buf.push(v as u8);
+    }
+
+    /// Append a UTF-8 string.
+    pub fn put_str(&mut self, v: &str) {
+        self.buf.push(TAG_STR);
+        self.buf
+            .extend_from_slice(&(v.len() as u32).to_le_bytes());
+        self.buf.extend_from_slice(v.as_bytes());
+    }
+
+    /// Append an `Option<f64>`.
+    pub fn put_opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            None => self.buf.push(TAG_NONE),
+            Some(x) => {
+                self.buf.push(TAG_SOME);
+                self.buf.extend_from_slice(&x.to_bits().to_le_bytes());
+            }
+        }
+    }
+
+    /// Append an `f64` slice as one length-prefixed run of bit patterns.
+    pub fn put_f64s(&mut self, vs: &[f64]) {
+        self.buf.push(TAG_F64S);
+        self.buf
+            .extend_from_slice(&(vs.len() as u64).to_le_bytes());
+        for &v in vs {
+            self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+        }
+    }
+
+    // ---- decoding ----
+
+    fn short(&self, what: &str) -> Error {
+        crate::err!(
+            "snapshot section '{}': truncated while reading {} at byte {} (len {})",
+            self.name,
+            what,
+            self.cursor,
+            self.buf.len()
+        )
+    }
+
+    fn raw_bytes(&mut self, n: usize, what: &str) -> Result<&[u8]> {
+        if self.cursor + n > self.buf.len() {
+            return Err(self.short(what));
+        }
+        let s = &self.buf[self.cursor..self.cursor + n];
+        self.cursor += n;
+        Ok(s)
+    }
+
+    fn raw_u8(&mut self, what: &str) -> Result<u8> {
+        Ok(self.raw_bytes(1, what)?[0])
+    }
+
+    fn raw_u32(&mut self, what: &str) -> Result<u32> {
+        let b = self.raw_bytes(4, what)?;
+        Ok(u32::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn raw_u64(&mut self, what: &str) -> Result<u64> {
+        let b = self.raw_bytes(8, what)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+
+    fn expect_tag(&mut self, want: u8, what: &str) -> Result<()> {
+        let at = self.cursor;
+        let got = self.raw_u8(what)?;
+        if got != want {
+            return Err(crate::err!(
+                "snapshot section '{}': expected {} at byte {}, found tag {:#04x}",
+                self.name,
+                what,
+                at,
+                got
+            ));
+        }
+        Ok(())
+    }
+
+    /// Read the next `u8`.
+    pub fn take_u8(&mut self) -> Result<u8> {
+        self.expect_tag(TAG_U8, "u8")?;
+        self.raw_u8("u8")
+    }
+
+    /// Read the next `u32`.
+    pub fn take_u32(&mut self) -> Result<u32> {
+        self.expect_tag(TAG_U32, "u32")?;
+        self.raw_u32("u32")
+    }
+
+    /// Read the next `u64`.
+    pub fn take_u64(&mut self) -> Result<u64> {
+        self.expect_tag(TAG_U64, "u64")?;
+        self.raw_u64("u64")
+    }
+
+    /// Read the next `f64` (exact bit pattern).
+    pub fn take_f64(&mut self) -> Result<f64> {
+        self.expect_tag(TAG_F64, "f64")?;
+        Ok(f64::from_bits(self.raw_u64("f64")?))
+    }
+
+    /// Read the next `bool`.
+    pub fn take_bool(&mut self) -> Result<bool> {
+        self.expect_tag(TAG_BOOL, "bool")?;
+        match self.raw_u8("bool")? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => Err(crate::err!(
+                "snapshot section '{}': invalid bool byte {:#04x}",
+                self.name,
+                b
+            )),
+        }
+    }
+
+    /// Read the next string.
+    pub fn take_str(&mut self) -> Result<String> {
+        self.expect_tag(TAG_STR, "str")?;
+        let n = self.raw_u32("str length")? as usize;
+        let bytes = self.raw_bytes(n, "str bytes")?.to_vec();
+        String::from_utf8(bytes).map_err(|e| {
+            crate::err!(
+                "snapshot section '{}': invalid utf-8 in string: {e}",
+                self.name
+            )
+        })
+    }
+
+    /// Read the next `Option<f64>`.
+    pub fn take_opt_f64(&mut self) -> Result<Option<f64>> {
+        let at = self.cursor;
+        match self.raw_u8("option tag")? {
+            TAG_NONE => Ok(None),
+            TAG_SOME => Ok(Some(f64::from_bits(self.raw_u64("Some(f64)")?))),
+            t => Err(crate::err!(
+                "snapshot section '{}': expected option at byte {}, found tag {:#04x}",
+                self.name,
+                at,
+                t
+            )),
+        }
+    }
+
+    /// Read the next `f64` run into a fresh vector.
+    pub fn take_f64s(&mut self) -> Result<Vec<f64>> {
+        self.expect_tag(TAG_F64S, "f64 slice")?;
+        let n = self.raw_u64("f64 slice length")?;
+        if n > MAX_SECTION_LEN / 8 {
+            return Err(crate::err!(
+                "snapshot section '{}': implausible f64 slice length {n}",
+                self.name
+            ));
+        }
+        let mut out = Vec::with_capacity(n as usize);
+        for _ in 0..n {
+            out.push(f64::from_bits(self.raw_u64("f64 slice element")?));
+        }
+        Ok(out)
+    }
+
+    /// Error unless every payload byte has been consumed — catches schema
+    /// drift where a reader stops short of what the writer recorded.
+    pub fn expect_end(&self) -> Result<()> {
+        if self.cursor != self.buf.len() {
+            return Err(crate::err!(
+                "snapshot section '{}': {} unread bytes after decode (schema mismatch?)",
+                self.name,
+                self.buf.len() - self.cursor
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Builds a snapshot as an ordered list of named sections and serializes
+/// it with per-section and file-level CRCs.
+#[derive(Debug, Default)]
+pub struct SnapshotWriter {
+    sections: Vec<Section>,
+}
+
+impl SnapshotWriter {
+    /// Empty snapshot.
+    pub fn new() -> Self {
+        SnapshotWriter::default()
+    }
+
+    /// Start (or continue) the section called `name` and return its buffer.
+    pub fn section(&mut self, name: &str) -> &mut Section {
+        if let Some(i) = self.sections.iter().position(|s| s.name == name) {
+            return &mut self.sections[i];
+        }
+        self.sections.push(Section::new(name));
+        self.sections.last_mut().unwrap()
+    }
+
+    /// Serialize to the on-disk byte layout (see module docs).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.sections.len() as u32).to_le_bytes());
+        for s in &self.sections {
+            out.extend_from_slice(&(s.name.len() as u32).to_le_bytes());
+            out.extend_from_slice(s.name.as_bytes());
+            out.extend_from_slice(&(s.buf.len() as u64).to_le_bytes());
+            out.extend_from_slice(&s.buf);
+            let mut c = crc_update(CRC_INIT, s.name.as_bytes());
+            c = crc_update(c, &s.buf);
+            out.extend_from_slice(&(c ^ 0xFFFF_FFFF).to_le_bytes());
+        }
+        let file_crc = crc32(&out);
+        out.extend_from_slice(&file_crc.to_le_bytes());
+        out
+    }
+
+    /// Write the snapshot to `path` crash-consistently: the bytes go to a
+    /// sibling `<path>.tmp`, which is fsynced and then atomically renamed
+    /// over `path`. A crash at any point leaves either the previous
+    /// checkpoint or the complete new one — never a torn file under `path`.
+    pub fn write_atomic(&self, path: &Path) -> Result<()> {
+        let bytes = self.to_bytes();
+        let mut tmp_os = path.as_os_str().to_owned();
+        tmp_os.push(".tmp");
+        let tmp = PathBuf::from(tmp_os);
+        {
+            let mut f = fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&bytes)
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            f.sync_all()
+                .with_context(|| format!("fsyncing {}", tmp.display()))?;
+        }
+        fs::rename(&tmp, path).with_context(|| {
+            format!("renaming {} over {}", tmp.display(), path.display())
+        })?;
+        Ok(())
+    }
+}
+
+/// Decodes and validates a snapshot; hands out sections for `take_*` reads.
+#[derive(Debug)]
+pub struct SnapshotReader {
+    sections: Vec<Section>,
+}
+
+impl SnapshotReader {
+    /// Read and validate a snapshot file.
+    pub fn read(path: &Path) -> Result<Self> {
+        let bytes = fs::read(path)
+            .with_context(|| format!("reading snapshot {}", path.display()))?;
+        Self::from_bytes(&bytes)
+            .with_context(|| format!("decoding snapshot {}", path.display()))
+    }
+
+    /// Decode and validate a snapshot from raw bytes. Rejects bad magic,
+    /// version mismatches, truncation at any offset, and any CRC failure.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        // Fixed header (magic + version + nsections) and trailing file CRC.
+        if bytes.len() < MAGIC.len() + 4 + 4 + 4 {
+            return Err(crate::err!(
+                "snapshot too short: {} bytes (truncated?)",
+                bytes.len()
+            ));
+        }
+        if &bytes[..MAGIC.len()] != MAGIC {
+            return Err(Error::msg("not a powerctl snapshot (bad magic)"));
+        }
+        let body = &bytes[..bytes.len() - 4];
+        let stored_crc =
+            u32::from_le_bytes(bytes[bytes.len() - 4..].try_into().unwrap());
+        let actual_crc = crc32(body);
+        if stored_crc != actual_crc {
+            return Err(crate::err!(
+                "snapshot file CRC mismatch: stored {stored_crc:#010x}, computed {actual_crc:#010x} (torn or corrupted file)"
+            ));
+        }
+        let mut pos = MAGIC.len();
+        let version = u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+        pos += 4;
+        if version != SNAPSHOT_VERSION {
+            return Err(crate::err!(
+                "snapshot version {version} not supported (this build reads version {SNAPSHOT_VERSION})"
+            ));
+        }
+        let nsections =
+            u32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()) as usize;
+        pos += 4;
+        let mut sections = Vec::with_capacity(nsections.min(1024));
+        let take = |pos: &mut usize, n: usize, what: &str| -> Result<&[u8]> {
+            if *pos + n > body.len() {
+                return Err(crate::err!(
+                    "snapshot truncated while reading {what} at byte {pos}"
+                ));
+            }
+            let s = &body[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        };
+        for i in 0..nsections {
+            let name_len = u32::from_le_bytes(
+                take(&mut pos, 4, "section name length")?.try_into().unwrap(),
+            ) as u64;
+            if name_len > MAX_SECTION_LEN {
+                return Err(crate::err!(
+                    "snapshot section {i}: implausible name length {name_len}"
+                ));
+            }
+            let name_bytes = take(&mut pos, name_len as usize, "section name")?.to_vec();
+            let name = String::from_utf8(name_bytes).map_err(|e| {
+                crate::err!("snapshot section {i}: invalid utf-8 name: {e}")
+            })?;
+            let payload_len = u64::from_le_bytes(
+                take(&mut pos, 8, "section payload length")?.try_into().unwrap(),
+            );
+            if payload_len > MAX_SECTION_LEN {
+                return Err(crate::err!(
+                    "snapshot section '{name}': implausible payload length {payload_len}"
+                ));
+            }
+            let payload = take(&mut pos, payload_len as usize, "section payload")?.to_vec();
+            let stored = u32::from_le_bytes(
+                take(&mut pos, 4, "section CRC")?.try_into().unwrap(),
+            );
+            let mut c = crc_update(CRC_INIT, name.as_bytes());
+            c = crc_update(c, &payload);
+            let actual = c ^ 0xFFFF_FFFF;
+            if stored != actual {
+                return Err(crate::err!(
+                    "snapshot section '{name}': CRC mismatch (stored {stored:#010x}, computed {actual:#010x})"
+                ));
+            }
+            sections.push(Section {
+                name,
+                buf: payload,
+                cursor: 0,
+            });
+        }
+        if pos != body.len() {
+            return Err(crate::err!(
+                "snapshot has {} trailing bytes after the last section",
+                body.len() - pos
+            ));
+        }
+        Ok(SnapshotReader { sections })
+    }
+
+    /// The section called `name`, with its read cursor, or a descriptive
+    /// error when the file does not contain it.
+    pub fn section(&mut self, name: &str) -> Result<&mut Section> {
+        self.sections
+            .iter_mut()
+            .find(|s| s.name == name)
+            .ok_or_else(|| crate::err!("snapshot has no section '{name}'"))
+    }
+
+    /// True when the snapshot contains a section called `name`.
+    pub fn has_section(&self, name: &str) -> bool {
+        self.sections.iter().any(|s| s.name == name)
+    }
+
+    /// Names of all sections, in file order.
+    pub fn section_names(&self) -> Vec<&str> {
+        self.sections.iter().map(|s| s.name.as_str()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn sample_snapshot() -> SnapshotWriter {
+        let mut w = SnapshotWriter::new();
+        let s = w.section("alpha");
+        s.put_u64(42);
+        s.put_f64(std::f64::consts::PI);
+        s.put_bool(true);
+        s.put_str("hello");
+        s.put_opt_f64(None);
+        s.put_opt_f64(Some(-0.0));
+        let s = w.section("beta");
+        s.put_u8(7);
+        s.put_u32(123456);
+        s.put_f64s(&[1.0, f64::NEG_INFINITY, 5e-324]);
+        w
+    }
+
+    #[test]
+    fn round_trip_basic() {
+        let bytes = sample_snapshot().to_bytes();
+        let mut r = SnapshotReader::from_bytes(&bytes).unwrap();
+        assert_eq!(r.section_names(), vec!["alpha", "beta"]);
+        let s = r.section("alpha").unwrap();
+        assert_eq!(s.take_u64().unwrap(), 42);
+        assert_eq!(s.take_f64().unwrap(), std::f64::consts::PI);
+        assert!(s.take_bool().unwrap());
+        assert_eq!(s.take_str().unwrap(), "hello");
+        assert_eq!(s.take_opt_f64().unwrap(), None);
+        let z = s.take_opt_f64().unwrap().unwrap();
+        assert_eq!(z.to_bits(), (-0.0f64).to_bits());
+        s.expect_end().unwrap();
+        let s = r.section("beta").unwrap();
+        assert_eq!(s.take_u8().unwrap(), 7);
+        assert_eq!(s.take_u32().unwrap(), 123456);
+        let vs = s.take_f64s().unwrap();
+        assert_eq!(vs.len(), 3);
+        assert_eq!(vs[1], f64::NEG_INFINITY);
+        assert_eq!(vs[2].to_bits(), 5e-324f64.to_bits());
+        s.expect_end().unwrap();
+    }
+
+    #[test]
+    fn f64_bit_patterns_survive_exactly() {
+        // Random bit patterns, plus the adversarial corners: NaNs with
+        // payloads, signalling-style NaNs, ±0.0, subnormals, infinities.
+        let mut rng = Pcg64::seeded(0x5EED);
+        let mut patterns: Vec<u64> = (0..512).map(|_| rng.next_u64()).collect();
+        patterns.extend([
+            0x7FF8_0000_0000_0001, // quiet NaN, payload 1
+            0x7FF0_0000_0000_0001, // signalling-style NaN
+            0xFFF8_DEAD_BEEF_CAFE, // negative NaN with payload
+            0x8000_0000_0000_0000, // -0.0
+            0x0000_0000_0000_0000, // +0.0
+            0x0000_0000_0000_0001, // smallest subnormal
+            0x000F_FFFF_FFFF_FFFF, // largest subnormal
+            0x7FF0_0000_0000_0000, // +inf
+            0xFFF0_0000_0000_0000, // -inf
+        ]);
+        let mut w = SnapshotWriter::new();
+        let s = w.section("bits");
+        for &p in &patterns {
+            s.put_f64(f64::from_bits(p));
+        }
+        let bytes = w.to_bytes();
+        let mut r = SnapshotReader::from_bytes(&bytes).unwrap();
+        let s = r.section("bits").unwrap();
+        for &p in &patterns {
+            assert_eq!(s.take_f64().unwrap().to_bits(), p);
+        }
+        s.expect_end().unwrap();
+    }
+
+    #[test]
+    fn truncation_at_every_byte_offset_rejected() {
+        let bytes = sample_snapshot().to_bytes();
+        for n in 0..bytes.len() {
+            assert!(
+                SnapshotReader::from_bytes(&bytes[..n]).is_err(),
+                "truncation to {n}/{} bytes was accepted",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn single_bit_corruption_rejected_everywhere() {
+        let bytes = sample_snapshot().to_bytes();
+        // Flip one bit per byte position (cycling through bit indices so
+        // every byte is covered without 8x the work).
+        for (i, _) in bytes.iter().enumerate() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 1 << (i % 8);
+            assert!(
+                SnapshotReader::from_bytes(&bad).is_err(),
+                "bit flip at byte {i} was accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let mut bytes = sample_snapshot().to_bytes();
+        // Bump the version field and re-stamp the file CRC so the version
+        // check itself (not the CRC) is what rejects the file.
+        let v = SNAPSHOT_VERSION + 1;
+        bytes[8..12].copy_from_slice(&v.to_le_bytes());
+        let n = bytes.len();
+        let crc = crc32(&bytes[..n - 4]);
+        bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+        let e = SnapshotReader::from_bytes(&bytes).unwrap_err();
+        assert!(e.to_string().contains("version"), "{e}");
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = sample_snapshot().to_bytes();
+        bytes[0] = b'X';
+        assert!(SnapshotReader::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn wrong_type_tag_is_descriptive() {
+        let mut w = SnapshotWriter::new();
+        w.section("s").put_u64(5);
+        let bytes = w.to_bytes();
+        let mut r = SnapshotReader::from_bytes(&bytes).unwrap();
+        let e = r.section("s").unwrap().take_f64().unwrap_err();
+        let msg = e.to_string();
+        assert!(msg.contains("expected f64"), "{msg}");
+        assert!(msg.contains("'s'"), "{msg}");
+    }
+
+    #[test]
+    fn missing_section_is_descriptive() {
+        let bytes = sample_snapshot().to_bytes();
+        let mut r = SnapshotReader::from_bytes(&bytes).unwrap();
+        let e = r.section("gamma").unwrap_err();
+        assert!(e.to_string().contains("gamma"), "{e}");
+    }
+
+    #[test]
+    fn unread_bytes_detected() {
+        let mut w = SnapshotWriter::new();
+        let s = w.section("s");
+        s.put_u64(1);
+        s.put_u64(2);
+        let bytes = w.to_bytes();
+        let mut r = SnapshotReader::from_bytes(&bytes).unwrap();
+        let s = r.section("s").unwrap();
+        s.take_u64().unwrap();
+        assert!(s.expect_end().is_err());
+    }
+
+    #[test]
+    fn snapshot_trait_round_trips_rng() {
+        let mut rng = Pcg64::seeded(77);
+        for _ in 0..13 {
+            rng.next_u64();
+        }
+        let mut w = SnapshotWriter::new();
+        rng.save(w.section("rng"));
+        let bytes = w.to_bytes();
+
+        let mut reference = rng.clone();
+        let mut restored = Pcg64::seeded(0);
+        let mut r = SnapshotReader::from_bytes(&bytes).unwrap();
+        restored.restore(r.section("rng").unwrap()).unwrap();
+        for _ in 0..64 {
+            assert_eq!(restored.next_u64(), reference.next_u64());
+        }
+    }
+
+    #[test]
+    fn atomic_write_then_read() {
+        let dir = std::env::temp_dir().join(format!("powerctl-snap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.ckpt");
+        let w = sample_snapshot();
+        w.write_atomic(&path).unwrap();
+        // Overwrite with a second snapshot: rename must replace in place.
+        let mut w2 = SnapshotWriter::new();
+        w2.section("only").put_u64(9);
+        w2.write_atomic(&path).unwrap();
+        let mut r = SnapshotReader::read(&path).unwrap();
+        assert_eq!(r.section_names(), vec!["only"]);
+        assert_eq!(r.section("only").unwrap().take_u64().unwrap(), 9);
+        assert!(!dir.join("test.ckpt.tmp").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_file_and_garbage_rejected() {
+        assert!(SnapshotReader::from_bytes(&[]).is_err());
+        assert!(SnapshotReader::from_bytes(&[0u8; 3]).is_err());
+        let garbage: Vec<u8> = (0..200u8).collect();
+        assert!(SnapshotReader::from_bytes(&garbage).is_err());
+    }
+}

@@ -6,6 +6,9 @@
 //! extraction and resampling — the operations Figs. 3/5/6 need to align the
 //! powercap, power, and progress signals on a common clock.
 
+use crate::util::error::Result;
+use crate::util::snapshot::{Section, Snapshot};
+
 /// A timestamped scalar signal. Times are in seconds on the experiment's
 /// virtual clock; monotonic non-decreasing order is enforced on `push`.
 #[derive(Debug, Clone, Default, PartialEq)]
@@ -179,6 +182,22 @@ impl TimeSeries {
             return self.values[0];
         }
         self.integrate() / span
+    }
+}
+
+impl Snapshot for TimeSeries {
+    fn save(&self, w: &mut Section) {
+        w.put_f64s(&self.times);
+        w.put_f64s(&self.values);
+    }
+
+    fn restore(&mut self, r: &mut Section) -> Result<()> {
+        // Assign directly (not via `push`): the source series already
+        // satisfied the monotonicity invariant, and bit-exact restore must
+        // not re-derive or re-check float ordering.
+        self.times = r.take_f64s()?;
+        self.values = r.take_f64s()?;
+        Ok(())
     }
 }
 

@@ -1,0 +1,345 @@
+//! Checkpoint/restore equivalence contract.
+//!
+//! Four pins:
+//!
+//! 1. `kill_at_every_period_resume_is_byte_identical` — a fleet run under
+//!    an active fault plan, killed after *every* possible node period and
+//!    resumed from the checkpoint written that period, reproduces the
+//!    uninterrupted run byte-for-byte: per-node record JSON, the full
+//!    ceilings trace, and the summary scalars all match exactly.
+//! 2. The same identity holds across the stepping paths (batched-scalar,
+//!    classic) and under a depth-3 coordinator tree — the checkpoint
+//!    captures semantic state only, so it is portable across execution
+//!    strategies.
+//! 3. A *real* checkpoint file truncated at any length, or with any bit
+//!    flipped, is rejected with a recoverable error — never a panic,
+//!    never a silently divergent resume.
+//! 4. Resuming under a different configuration (fleet size, budget,
+//!    stepping path, allocator shape) is rejected with a descriptive
+//!    error before any state is touched.
+
+use std::path::PathBuf;
+
+use powerctl::control::budget::SlackProportional;
+use powerctl::control::tree::{BudgetPolicySpec, CoordinatorTree, TreeSpec};
+use powerctl::experiments::checkpoint::outcomes_identical;
+use powerctl::fleet::node::noise_free_model;
+use powerctl::fleet::{
+    resume_fleet, resume_fleet_tree, run_fleet_killed, run_fleet_tree_killed,
+    run_fleet_tree_with_faults, run_fleet_with_faults, CheckpointSpec, FleetConfig, FleetOutcome,
+    NodeHardware, NodePolicySpec, NodeSpec, SimPath,
+};
+use powerctl::sim::cluster::ClusterId;
+use powerctl::sim::faults::{FaultPlan, FaultRegime, NodeSelector};
+
+fn specs(n: usize) -> Vec<NodeSpec> {
+    let order = [ClusterId::Gros, ClusterId::Dahu];
+    let models = [
+        noise_free_model(ClusterId::Gros),
+        noise_free_model(ClusterId::Dahu),
+    ];
+    (0..n)
+        .map(|i| NodeSpec {
+            cluster: order[i % 2],
+            model: models[i % 2].clone(),
+            policy: NodePolicySpec::Pi { epsilon: 0.15 },
+            hardware: NodeHardware::SingleCpu,
+        })
+        .collect()
+}
+
+fn config(n: usize) -> FleetConfig {
+    FleetConfig {
+        budget: n as f64 * 85.0,
+        period: 1.0,
+        realloc_every: 5,
+        total_beats: 300,
+        max_time: 120.0,
+        seed: 7,
+        threads: None,
+    }
+}
+
+/// Live fault plane during every run: one crash-with-restart plus
+/// fleetwide sensor dropout, so the checkpoint must carry fault state
+/// (armed restarts, event logs, fault RNG streams) to reproduce bytes.
+fn plan() -> FaultPlan {
+    FaultPlan::seeded(0x5EED)
+        .with_rule(
+            NodeSelector::Node(2),
+            FaultRegime {
+                crash_at: Some(20.0),
+                restart_after: Some(30.0),
+                ..FaultRegime::default()
+            },
+        )
+        .with_rule(
+            NodeSelector::All,
+            FaultRegime {
+                sensor_dropout: 0.10,
+                ..FaultRegime::default()
+            },
+        )
+}
+
+fn ckpt_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("powerctl-ckpt-eq-{tag}-{}.bin", std::process::id()))
+}
+
+/// Total node periods the uninterrupted run took (the break period
+/// included) — kills are only possible strictly before it.
+fn final_period(out: &FleetOutcome, n: usize) -> u64 {
+    out.node_ticks / n as u64
+}
+
+#[test]
+fn kill_at_every_period_resume_is_byte_identical() {
+    let n = 6;
+    let specs = specs(n);
+    let cfg = config(n);
+    let plan = plan();
+    let oracle = run_fleet_with_faults(
+        &specs,
+        &mut SlackProportional::default(),
+        &cfg,
+        SimPath::Batched,
+        &plan,
+    );
+    let last = final_period(&oracle, n);
+    assert!(last > 20, "run too short ({last} periods) for a meaningful sweep");
+    let ckpt = CheckpointSpec {
+        every: 1,
+        path: ckpt_path("sweep"),
+    };
+    for kill_at in 1..last {
+        let killed = run_fleet_killed(
+            &specs,
+            &mut SlackProportional::default(),
+            &cfg,
+            SimPath::Batched,
+            &plan,
+            &ckpt,
+            kill_at,
+        )
+        .expect("checkpointed drive failed");
+        assert!(killed.is_none(), "kill at {kill_at} did not fire");
+        let resumed = resume_fleet(
+            &specs,
+            &mut SlackProportional::default(),
+            &cfg,
+            SimPath::Batched,
+            &plan,
+            &ckpt.path,
+        )
+        .expect("resume failed");
+        assert!(
+            outcomes_identical(&oracle, &resumed),
+            "resume after kill at period {kill_at} diverged from the oracle"
+        );
+    }
+    let _ = std::fs::remove_file(&ckpt.path);
+}
+
+#[test]
+fn kill_resume_identity_across_paths_and_allocators() {
+    let n = 6;
+    let specs = specs(n);
+    let cfg = config(n);
+    let plan = plan();
+
+    // The other two stepping paths, flat allocation.
+    for (tag, path) in [
+        ("scalar", SimPath::BatchedScalar),
+        ("classic", SimPath::Classic),
+    ] {
+        let oracle =
+            run_fleet_with_faults(&specs, &mut SlackProportional::default(), &cfg, path, &plan);
+        let last = final_period(&oracle, n);
+        assert!(last > 22, "{path:?}: run too short ({last} periods)");
+        let ckpt = CheckpointSpec {
+            every: 1,
+            path: ckpt_path(tag),
+        };
+        // Mid-epoch, on-epoch, just-after-crash, and late kills.
+        for kill_at in [3, 5, 21, last / 2, last - 1] {
+            let killed = run_fleet_killed(
+                &specs,
+                &mut SlackProportional::default(),
+                &cfg,
+                path,
+                &plan,
+                &ckpt,
+                kill_at,
+            )
+            .expect("checkpointed drive failed");
+            assert!(killed.is_none(), "{path:?}: kill at {kill_at} did not fire");
+            let resumed = resume_fleet(
+                &specs,
+                &mut SlackProportional::default(),
+                &cfg,
+                path,
+                &plan,
+                &ckpt.path,
+            )
+            .expect("resume failed");
+            assert!(
+                outcomes_identical(&oracle, &resumed),
+                "{path:?}: resume after kill at {kill_at} diverged"
+            );
+        }
+        let _ = std::fs::remove_file(&ckpt.path);
+    }
+
+    // Depth-3 coordinator tree on the default path. The resumed tree is
+    // freshly built: interior allocator state is per-epoch scratch, so
+    // only the drive loop's state needs the checkpoint.
+    let spec = TreeSpec::balanced(BudgetPolicySpec::SlackProportional, 3, 2, n);
+    let mut t1 = CoordinatorTree::new(&spec);
+    let oracle = run_fleet_tree_with_faults(&specs, &mut t1, &cfg, SimPath::Batched, &plan);
+    let last = final_period(&oracle, n);
+    assert!(last > 22, "tree: run too short ({last} periods)");
+    let ckpt = CheckpointSpec {
+        every: 1,
+        path: ckpt_path("tree"),
+    };
+    for kill_at in [3, 5, 21, last / 2, last - 1] {
+        let mut t2 = CoordinatorTree::new(&spec);
+        let killed =
+            run_fleet_tree_killed(&specs, &mut t2, &cfg, SimPath::Batched, &plan, &ckpt, kill_at)
+                .expect("checkpointed tree drive failed");
+        assert!(killed.is_none(), "tree: kill at {kill_at} did not fire");
+        let mut t3 = CoordinatorTree::new(&spec);
+        let resumed =
+            resume_fleet_tree(&specs, &mut t3, &cfg, SimPath::Batched, &plan, &ckpt.path)
+                .expect("tree resume failed");
+        assert!(
+            outcomes_identical(&oracle, &resumed),
+            "tree: resume after kill at {kill_at} diverged"
+        );
+    }
+    let _ = std::fs::remove_file(&ckpt.path);
+}
+
+/// Produce one real checkpoint file and return its bytes.
+fn real_checkpoint(tag: &str) -> (Vec<NodeSpec>, FleetConfig, FaultPlan, PathBuf, Vec<u8>) {
+    let n = 6;
+    let specs = specs(n);
+    let cfg = config(n);
+    let plan = plan();
+    let ckpt = CheckpointSpec {
+        every: 1,
+        path: ckpt_path(tag),
+    };
+    let killed = run_fleet_killed(
+        &specs,
+        &mut SlackProportional::default(),
+        &cfg,
+        SimPath::Batched,
+        &plan,
+        &ckpt,
+        7,
+    )
+    .expect("checkpointed drive failed");
+    assert!(killed.is_none());
+    let bytes = std::fs::read(&ckpt.path).expect("checkpoint file missing");
+    (specs, cfg, plan, ckpt.path, bytes)
+}
+
+#[test]
+fn truncated_or_corrupted_checkpoint_is_rejected_not_panic() {
+    let (specs, cfg, plan, path, bytes) = real_checkpoint("corrupt");
+    assert!(bytes.len() > 64, "checkpoint suspiciously small");
+    let resume = |p: &PathBuf| {
+        resume_fleet(
+            &specs,
+            &mut SlackProportional::default(),
+            &cfg,
+            SimPath::Batched,
+            &plan,
+            p,
+        )
+    };
+    // Sanity: the pristine file resumes fine.
+    assert!(resume(&path).is_ok(), "pristine checkpoint failed to resume");
+
+    // Truncation at a spread of lengths, the empty file and off-by-one
+    // included: always a recoverable error.
+    let cut = path.with_extension("cut");
+    for len in [0, 1, 7, 8, 12, bytes.len() / 3, bytes.len() / 2, bytes.len() - 1] {
+        std::fs::write(&cut, &bytes[..len]).unwrap();
+        assert!(
+            resume(&cut).is_err(),
+            "truncation to {len} of {} bytes was not rejected",
+            bytes.len()
+        );
+    }
+
+    // A single bit flipped anywhere: the section and file CRCs catch it.
+    let flip = path.with_extension("flip");
+    let stride = (bytes.len() / 97).max(1);
+    for off in (0..bytes.len()).step_by(stride) {
+        let mut bad = bytes.clone();
+        bad[off] ^= 0x10;
+        std::fs::write(&flip, &bad).unwrap();
+        assert!(resume(&flip).is_err(), "bit flip at byte {off} was not rejected");
+    }
+
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&cut);
+    let _ = std::fs::remove_file(&flip);
+}
+
+#[test]
+fn resume_under_mismatched_config_is_rejected() {
+    let (specs, cfg, plan, path, _) = real_checkpoint("mismatch");
+
+    // Wrong fleet size.
+    let small = &specs[..4];
+    let mut small_cfg = cfg.clone();
+    small_cfg.budget = 4.0 * 85.0;
+    let e = resume_fleet(
+        small,
+        &mut SlackProportional::default(),
+        &small_cfg,
+        SimPath::Batched,
+        &plan,
+        &path,
+    )
+    .unwrap_err();
+    assert!(e.to_string().contains("nodes"), "{e}");
+
+    // Wrong budget.
+    let mut bad_cfg = cfg.clone();
+    bad_cfg.budget += 1.0;
+    let e = resume_fleet(
+        &specs,
+        &mut SlackProportional::default(),
+        &bad_cfg,
+        SimPath::Batched,
+        &plan,
+        &path,
+    )
+    .unwrap_err();
+    assert!(e.to_string().contains("budget"), "{e}");
+
+    // Wrong stepping path.
+    let e = resume_fleet(
+        &specs,
+        &mut SlackProportional::default(),
+        &cfg,
+        SimPath::Classic,
+        &plan,
+        &path,
+    )
+    .unwrap_err();
+    assert!(e.to_string().contains("path"), "{e}");
+
+    // Wrong allocator shape: the checkpoint came from a flat run.
+    let spec = TreeSpec::balanced(BudgetPolicySpec::SlackProportional, 3, 2, specs.len());
+    let mut tree = CoordinatorTree::new(&spec);
+    let e = resume_fleet_tree(&specs, &mut tree, &cfg, SimPath::Batched, &plan, &path)
+        .unwrap_err();
+    assert!(e.to_string().contains("allocator"), "{e}");
+
+    let _ = std::fs::remove_file(&path);
+}
