@@ -31,7 +31,15 @@
 //!   overhead of a crash-consistent snapshot every 32 periods on the
 //!   256-node drive — reported only after the kill/resume byte-identity
 //!   contract is asserted in-bench under an active fault plan
-//!   (`restore_vs_uninterrupted_identical`, grepped by the CI gate).
+//!   (`restore_vs_uninterrupted_identical`, grepped by the CI gate);
+//! * **chaos plane**: `fleet_chaos_node_ticks_per_s_256` — the same
+//!   resident drive under the 10% loss + 10% dup + 50% reorder transport
+//!   storm with the per-node watchdog armed — reported only after the
+//!   empty-plan byte-identity contract is asserted in-bench
+//!   (`chaos_empty_plan_identical`, grepped by the CI gate), plus the
+//!   per-retry backoff decision (`retry_backoff_decide_ns`) and a
+//!   zero-allocation window over the armed watchdog/deadline-scheduler
+//!   branch.
 //!
 //! Emits the machine-readable `BENCH_l3.json` (override the path with
 //! `BENCH_L3_JSON`). `POWERCTL_BENCH_SMOKE=1` caps iterations and fleet
@@ -43,9 +51,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use powerctl::control::baseline::{PiPolicy, Uncontrolled};
 use powerctl::control::budget::{BudgetPolicy, NodeReport, SlackProportional};
 use powerctl::control::pi::{PiConfig, PiController};
-use powerctl::coordinator::engine::{ControlLoop, LockstepBackend};
+use powerctl::coordinator::chaos::ChaosPlan;
+use powerctl::coordinator::engine::{CatchUp, ControlLoop, LockstepBackend, PeriodScheduler};
 use powerctl::coordinator::experiment::{run_closed_loop, RunConfig};
 use powerctl::coordinator::progress::ProgressAggregator;
+use powerctl::coordinator::supervisor::Watchdog;
 use powerctl::experiments::{identify, Ctx, Scale};
 use powerctl::control::node_budget::{ideal_device_model, DeviceCtl, DeviceSplitSpec, NodeBudgetController};
 use powerctl::control::tree::{BudgetPolicySpec, CoordinatorTree, TreeSpec};
@@ -53,9 +63,9 @@ use powerctl::coordinator::hetero::HeteroBackend;
 use powerctl::fleet::coordinator::node_seed;
 use powerctl::fleet::{
     resume_fleet, run_fleet, run_fleet_killed, run_fleet_threaded, run_fleet_tree_with_path,
-    run_fleet_with_checkpoints, run_fleet_with_faults, run_fleet_with_path, BudgetedPolicy,
-    CheckpointSpec, FleetConfig, NodeHardware, NodePolicySpec, NodeSpec, ShardedExecutor, SimPath,
-    WorkerConfig,
+    run_fleet_with_chaos, run_fleet_with_checkpoints, run_fleet_with_faults, run_fleet_with_path,
+    BudgetedPolicy, CheckpointSpec, FleetConfig, NodeHardware, NodePolicySpec, NodeSpec,
+    ShardedExecutor, SimPath, WorkerConfig,
 };
 use powerctl::sim::device::DeviceSpec;
 use powerctl::sim::faults::{FaultPlan, FaultRegime, NodeSelector};
@@ -63,6 +73,7 @@ use powerctl::sim::cluster::{Cluster, ClusterId};
 use powerctl::sim::node::NodeSim;
 use powerctl::util::bench::{black_box, section, smoke, Bench, Report};
 use powerctl::util::parallel::{default_threads, PinStatus};
+use powerctl::util::retry::{Retrier, RetryPolicy};
 
 /// Counting allocator: lets the bench prove the steady-state fleet tick
 /// path performs zero allocations (counts every alloc/realloc on every
@@ -821,6 +832,150 @@ fn main() {
         report.add_metric(&format!("fleet_checkpoint_overhead_pct_{n}"), overhead_pct);
         report.add_metric(&format!("fleet_checkpoint_bytes_{n}"), bytes as f64);
         let _ = std::fs::remove_file(&ckpt.path);
+    }
+
+    section("chaos plane (empty-plan identity + storm throughput + retry decide)");
+    {
+        // Contract first, throughput second — same shape as the fault,
+        // tree and checkpoint sections. The empty-plan identity is
+        // asserted here, in the same binary that reports the chaotic
+        // throughput, so the `chaos_empty_plan_identical` metric the CI
+        // gate greps for cannot appear without the byte-equality having
+        // actually held on this build.
+        let to_bytes = |out: &powerctl::fleet::FleetOutcome| {
+            out.records
+                .iter()
+                .map(|r| r.to_json().dump())
+                .collect::<Vec<_>>()
+                .join("\n")
+        };
+        {
+            let specs = gros_specs(&ident, 8, 0.15);
+            let cfg = FleetConfig {
+                budget: 85.0 * 8.0,
+                period: 1.0,
+                realloc_every: 5,
+                total_beats: 400,
+                max_time: 60.0,
+                seed: 11,
+                threads: None,
+            };
+            let clean = run_fleet_with_path(
+                &specs,
+                &mut SlackProportional::default(),
+                &cfg,
+                SimPath::Batched,
+            );
+            let empty = run_fleet_with_chaos(
+                &specs,
+                &mut SlackProportional::default(),
+                &cfg,
+                SimPath::Batched,
+                &FaultPlan::default(),
+                &ChaosPlan::default(),
+            );
+            assert_eq!(
+                to_bytes(&clean),
+                to_bytes(&empty),
+                "empty chaos plan perturbed record bytes"
+            );
+            assert_eq!(
+                clean.limits_trace, empty.limits_trace,
+                "empty chaos plan perturbed the ceiling trace"
+            );
+            println!("  empty-plan identity: byte-identical on an 8-node fleet");
+            report.add_metric("chaos_empty_plan_identical", 1.0);
+        }
+
+        // Throughput under the acceptance storm: fleet-wide 10% loss +
+        // 10% duplication + 50% reordering, with the per-node watchdog
+        // armed and the degradation ladder live. Same drive shape as the
+        // clean `fleet_simd_node_ticks_per_s_256` key so the hardening
+        // tax is directly comparable.
+        let n = 256;
+        let periods = if smoke() { 20.0 } else { 120.0 };
+        let cfg = FleetConfig {
+            budget: 95.0 * n as f64,
+            period: 1.0,
+            realloc_every: 5,
+            total_beats: u64::MAX,
+            max_time: periods,
+            seed: 42,
+            threads: None,
+        };
+        let specs = gros_specs(&ident, n, 0.15);
+        let plan = ChaosPlan::seeded(42)
+            .with_rule(NodeSelector::All, powerctl::experiments::chaos::storm_regime());
+        let mut strategy = SlackProportional::default();
+        let out = run_fleet_with_chaos(
+            &specs,
+            &mut strategy,
+            &cfg,
+            SimPath::Batched,
+            &FaultPlan::default(),
+            &plan,
+        );
+        let tps = out.node_ticks as f64 / out.wall_seconds;
+        println!(
+            "  chaotic  {n:>5} nodes: {tps:>12.0} node-ticks/s ({} ticks, 10% loss + 10% dup + 50% reorder)",
+            out.node_ticks
+        );
+        report.add_metric(&format!("fleet_chaos_node_ticks_per_s_{n}"), tps);
+
+        // The per-retry hot decision: one `powi`, one `min`, at most one
+        // RNG draw. This is what every failed actuator write or runtime
+        // RPC pays per backoff step.
+        let mut retrier = Retrier::new(RetryPolicy::default(), 42);
+        let mut k = 0u32;
+        let r = fast.run("retry_backoff_decide", || {
+            k = (k + 1) & 7;
+            black_box(retrier.decide(k));
+        });
+        report.add(&r);
+        report.add_metric("retry_backoff_decide_ns", r.mean.as_nanos() as f64);
+
+        // Zero-allocation window over the armed watchdog + deadline-
+        // scheduler branch: a hardened in-process engine (watchdog
+        // installed, fresh beat stream, no chaos) plus a live
+        // `PeriodScheduler` must not allocate in steady state — arming
+        // the hardened plane may not tax a healthy loop.
+        let counted: u64 = if smoke() { 200 } else { 2_000 };
+        let rows = 200 + counted as usize + 64;
+        let node = NodeSim::new(cluster.clone(), 9);
+        let mut engine = ControlLoop::new(LockstepBackend::new(node), 1.0);
+        engine.reserve_samples(rows);
+        engine.set_initial_pcap(100.0);
+        engine.set_watchdog(Watchdog::new(2.0));
+        let mut policy = powerctl::control::baseline::StaticCap { pcap: 100.0 };
+        let mut sched = PeriodScheduler::new(0.0, 1.0, CatchUp::Skip);
+        let mut now = 0.0;
+        for _ in 0..200 {
+            now += 1.0;
+            engine.tick(now, &mut policy);
+            black_box(sched.completed(now));
+        }
+        let before = allocations();
+        for _ in 0..counted {
+            now += 1.0;
+            engine.tick(now, &mut policy);
+            black_box(sched.completed(now));
+        }
+        let delta = allocations() - before;
+        println!(
+            "  allocations over {counted} steady-state hardened periods \
+             (armed watchdog + deadline scheduler, fresh stream): {delta}"
+        );
+        report.add_metric("hardened_steady_state_allocations", delta as f64);
+        assert_eq!(
+            delta, 0,
+            "armed watchdog/scheduler branch allocated {delta} times in steady state"
+        );
+        assert_eq!(sched.overruns(), 0, "lockstep drive must never overrun");
+        assert_eq!(
+            engine.watchdog().map(|w| w.stale_verdicts()),
+            Some(0),
+            "fresh stream flagged stale"
+        );
     }
 
     section("SIMD sub-step components (scalar vs lanes, 1024 devices)");

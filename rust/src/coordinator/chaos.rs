@@ -1,0 +1,636 @@
+//! Deterministic transport chaos: seeded loss, duplication, reordering,
+//! delay and corruption for heartbeat streams.
+//!
+//! The hardened live control plane (DESIGN.md "Live control plane
+//! hardening") must be testable byte-reproducibly, so transport
+//! misbehavior is injected exactly like simulation faults
+//! ([`crate::sim::faults`]): a [`ChaosPlan`] is seeded, compiles per
+//! matched node into a [`BeatChaos`] state machine on a **dedicated**
+//! [`Pcg64`] stream, and replays identically run over run. The same
+//! disturbance engine serves both layers:
+//!
+//! * the live daemon path wraps any [`BeatReceiver`] in a [`ChaosLink`]
+//!   that disturbs real [`Heartbeat`] frames between the socket and the
+//!   aggregator;
+//! * the fleet path installs the bare [`BeatChaos`] into the control
+//!   engine ([`ControlLoop::install_chaos`]
+//!   (crate::coordinator::engine::ControlLoop::install_chaos)), where it
+//!   disturbs the per-period beat-timestamp buffer **after** quota
+//!   accounting (completion is ground truth — chaos corrupts telemetry,
+//!   not the work itself).
+//!
+//! **Byte-identity contract** (the safety rail, mirrored from
+//! `sim::faults`): an empty or all-inert plan compiles to *no* chaos state
+//! at all — zero RNG draws, zero JSON deltas, zero steady-state
+//! allocations on every `SimPath`. Probability draws happen **only** for
+//! channels whose probability is strictly positive, in a fixed documented
+//! per-beat order (loss → corrupt → dup → delay, then one per-period
+//! reorder draw), so enabling one channel never shifts another's stream.
+
+use crate::coordinator::transport::{BeatReceiver, Heartbeat};
+use crate::sim::faults::{FaultEvent, FaultEventKind, NodeSelector, DEFAULT_FALLBACK_K};
+use crate::util::error::Result;
+use crate::util::rng::Pcg64;
+use crate::util::snapshot::{Section, Snapshot};
+
+/// Stream tag for the per-plan chaos root RNG — distinct from the fault
+/// stream so chaos and fault schedules never alias.
+const CHAOS_STREAM: u64 = 0xC4405;
+
+/// Bound on beats held in flight by the delay channel. Oldest beats are
+/// dropped (and counted as lost) beyond this — chaos must never grow an
+/// unbounded queue.
+const MAX_HELD: usize = 1024;
+
+/// One node's transport-chaos regime: which disturbance channels are
+/// active and how often they fire. Default is fully inert.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosRegime {
+    /// Per-beat probability the frame is lost in transit.
+    pub loss: f64,
+    /// Per-beat probability the frame is truncated/corrupted — it reaches
+    /// the receiver undecodable and is dropped there (same effect as loss,
+    /// counted separately).
+    pub corrupt: f64,
+    /// Per-beat probability the frame is duplicated (delivered twice).
+    pub dup: f64,
+    /// Per-beat probability the frame is delayed by [`Self::delay_secs`]
+    /// into a later period.
+    pub delay: f64,
+    /// How long a delayed frame is held before delivery [s].
+    pub delay_secs: f64,
+    /// Per-period probability this period's delivered frames arrive
+    /// reordered (a seeded shuffle).
+    pub reorder: f64,
+}
+
+impl Default for ChaosRegime {
+    fn default() -> Self {
+        ChaosRegime {
+            loss: 0.0,
+            corrupt: 0.0,
+            dup: 0.0,
+            delay: 0.0,
+            delay_secs: 0.0,
+            reorder: 0.0,
+        }
+    }
+}
+
+impl ChaosRegime {
+    /// True when no channel can ever fire — indistinguishable from no
+    /// rule at all.
+    pub fn is_inert(&self) -> bool {
+        self.loss <= 0.0
+            && self.corrupt <= 0.0
+            && self.dup <= 0.0
+            && self.delay <= 0.0
+            && self.reorder <= 0.0
+    }
+}
+
+/// A seeded, replayable transport-chaos schedule for a whole fleet.
+/// Rules are checked in order; the first selector matching a node decides
+/// its regime (the [`NodeSelector`] vocabulary is shared with
+/// [`crate::sim::faults::FaultPlan`]).
+#[derive(Debug, Clone)]
+pub struct ChaosPlan {
+    /// Root seed for all chaos randomness (independent of both the
+    /// simulation seed and any fault-plan seed).
+    pub seed: u64,
+    /// Staleness window handed to the degradation ladder on chaos-matched
+    /// nodes (consecutive stale periods before full-cap fallback).
+    pub fallback_k: u32,
+    /// `(selector, regime)` rules, first match wins.
+    pub rules: Vec<(NodeSelector, ChaosRegime)>,
+}
+
+impl Default for ChaosPlan {
+    fn default() -> Self {
+        ChaosPlan {
+            seed: 0,
+            fallback_k: DEFAULT_FALLBACK_K,
+            rules: Vec::new(),
+        }
+    }
+}
+
+impl ChaosPlan {
+    /// An empty plan with the given seed and the default fallback window.
+    pub fn seeded(seed: u64) -> Self {
+        ChaosPlan {
+            seed,
+            fallback_k: DEFAULT_FALLBACK_K,
+            rules: Vec::new(),
+        }
+    }
+
+    /// Append a rule and return the plan (builder style).
+    pub fn with_rule(mut self, selector: NodeSelector, regime: ChaosRegime) -> Self {
+        self.rules.push((selector, regime));
+        self
+    }
+
+    /// True when no rule can ever disturb any node's transport.
+    pub fn is_empty(&self) -> bool {
+        self.rules.iter().all(|(_, r)| r.is_inert())
+    }
+
+    /// Compile the plan for one node: `None` when the node matches no rule
+    /// (or only an inert one), otherwise a [`BeatChaos`] on its own RNG
+    /// stream split deterministically from `(plan seed, node id)` — two
+    /// compilations for the same inputs replay identically.
+    pub fn link(&self, node_id: u32) -> Option<BeatChaos> {
+        let (_, regime) = self.rules.iter().find(|(sel, _)| sel.matches(node_id))?;
+        if regime.is_inert() {
+            return None;
+        }
+        let mut root = Pcg64::new(self.seed, CHAOS_STREAM);
+        Some(BeatChaos::new(*regime, root.split(node_id as u64)))
+    }
+}
+
+/// Per-node chaos state machine: the regime, its dedicated RNG cursor, and
+/// disturbance counters. Generic over the beat representation via
+/// [`disturb`](Self::disturb), so the live path (real [`Heartbeat`]s) and
+/// the fleet path (beat timestamps) share one engine.
+#[derive(Debug, Clone)]
+pub struct BeatChaos {
+    regime: ChaosRegime,
+    rng: Pcg64,
+    lost: u64,
+    corrupted: u64,
+    duplicated: u64,
+    delayed: u64,
+    reordered: u64,
+}
+
+impl BeatChaos {
+    /// Build from a regime and a pre-split RNG (use [`ChaosPlan::link`]
+    /// for the canonical seeding).
+    pub fn new(regime: ChaosRegime, rng: Pcg64) -> Self {
+        BeatChaos {
+            regime,
+            rng,
+            lost: 0,
+            corrupted: 0,
+            duplicated: 0,
+            delayed: 0,
+            reordered: 0,
+        }
+    }
+
+    /// The compiled regime (read-only).
+    pub fn regime(&self) -> &ChaosRegime {
+        &self.regime
+    }
+
+    /// Beats lost in transit so far (including held-queue overflow drops).
+    pub fn lost(&self) -> u64 {
+        self.lost
+    }
+
+    /// Beats corrupted in transit so far (dropped at the receiver).
+    pub fn corrupted(&self) -> u64 {
+        self.corrupted
+    }
+
+    /// Beats duplicated so far.
+    pub fn duplicated(&self) -> u64 {
+        self.duplicated
+    }
+
+    /// Beats delayed into a later period so far.
+    pub fn delayed(&self) -> u64 {
+        self.delayed
+    }
+
+    /// Periods whose delivery order was shuffled so far.
+    pub fn reordered(&self) -> u64 {
+        self.reordered
+    }
+
+    /// Total disturbances across every channel (the `RunRecord`-facing
+    /// summary count).
+    pub fn disturbances(&self) -> u64 {
+        self.lost + self.corrupted + self.duplicated + self.delayed + self.reordered
+    }
+
+    /// Disturb one period's beats in place. `buf` holds the beats that
+    /// arrived this period; `held` is the caller-owned delay queue
+    /// (`(release_at, beat)` pairs, bounded at [`MAX_HELD`] with
+    /// drop-oldest); `events` receives **at most one** [`FaultEvent`] per
+    /// chaos kind per period (the counters carry exact totals).
+    ///
+    /// Per-beat draw order is fixed: loss → corrupt → dup → delay; a lost
+    /// or corrupted beat makes no further draws. Held beats whose release
+    /// time has arrived are re-delivered ahead of this period's beats
+    /// (old-then-new) and are **not** disturbed a second time. Finally one
+    /// per-period reorder draw (made only when the channel is armed and at
+    /// least two beats were delivered) may shuffle the delivery order.
+    pub fn disturb<T: Copy>(
+        &mut self,
+        now: f64,
+        buf: &mut Vec<T>,
+        held: &mut Vec<(f64, T)>,
+        events: &mut Vec<FaultEvent>,
+    ) {
+        let mut fired = [false; 5]; // loss, corrupt, dup, delay, reorder
+        let incoming = std::mem::take(buf);
+        // Release due held beats first: a delayed beat arrives late but
+        // still before anything newer (old-then-new), and is disturbed
+        // only once — on the period it was originally sent.
+        held.retain(|&(release_at, b)| {
+            if release_at <= now {
+                buf.push(b);
+                false
+            } else {
+                true
+            }
+        });
+        for b in incoming {
+            if self.regime.loss > 0.0 && self.rng.f64() < self.regime.loss {
+                self.lost += 1;
+                fired[0] = true;
+                continue;
+            }
+            if self.regime.corrupt > 0.0 && self.rng.f64() < self.regime.corrupt {
+                self.corrupted += 1;
+                fired[1] = true;
+                continue;
+            }
+            let dup = self.regime.dup > 0.0 && self.rng.f64() < self.regime.dup;
+            let delay = self.regime.delay > 0.0 && self.rng.f64() < self.regime.delay;
+            if delay {
+                self.delayed += 1;
+                fired[3] = true;
+                if held.len() >= MAX_HELD {
+                    // Bounded in-flight queue: drop the oldest held beat
+                    // and count it as lost rather than grow without bound.
+                    held.remove(0);
+                    self.lost += 1;
+                    fired[0] = true;
+                }
+                held.push((now + self.regime.delay_secs.max(0.0), b));
+                if dup {
+                    // The duplicate of a delayed beat is delivered now.
+                    self.duplicated += 1;
+                    fired[2] = true;
+                    buf.push(b);
+                }
+                continue;
+            }
+            buf.push(b);
+            if dup {
+                self.duplicated += 1;
+                fired[2] = true;
+                buf.push(b);
+            }
+        }
+        if self.regime.reorder > 0.0 && buf.len() >= 2 && self.rng.f64() < self.regime.reorder {
+            self.reordered += 1;
+            fired[4] = true;
+            self.rng.shuffle(buf);
+        }
+        const KINDS: [FaultEventKind; 5] = [
+            FaultEventKind::ChaosLoss,
+            FaultEventKind::ChaosCorrupt,
+            FaultEventKind::ChaosDup,
+            FaultEventKind::ChaosDelay,
+            FaultEventKind::ChaosReorder,
+        ];
+        for (hit, kind) in fired.into_iter().zip(KINDS) {
+            if hit {
+                events.push(FaultEvent { t: now, kind });
+            }
+        }
+    }
+}
+
+/// The regime is plan configuration (rebuilt on resume from the same
+/// [`ChaosPlan`]); the live state is the RNG cursor and the counters. The
+/// held queue lives with the installer and is serialized there.
+impl Snapshot for BeatChaos {
+    fn save(&self, w: &mut Section) {
+        self.rng.save(w);
+        w.put_u64(self.lost);
+        w.put_u64(self.corrupted);
+        w.put_u64(self.duplicated);
+        w.put_u64(self.delayed);
+        w.put_u64(self.reordered);
+    }
+
+    fn restore(&mut self, r: &mut Section) -> Result<()> {
+        self.rng.restore(r)?;
+        self.lost = r.take_u64()?;
+        self.corrupted = r.take_u64()?;
+        self.duplicated = r.take_u64()?;
+        self.delayed = r.take_u64()?;
+        self.reordered = r.take_u64()?;
+        Ok(())
+    }
+}
+
+/// A chaos-injecting wrapper around any [`BeatReceiver`]: the live-path
+/// face of [`BeatChaos`]. Every drain pulls from the inner transport into
+/// a scratch buffer, disturbs it, and delivers the survivors — the daemon
+/// downstream cannot tell injected chaos from a genuinely bad network.
+pub struct ChaosLink<R: BeatReceiver> {
+    inner: R,
+    chaos: BeatChaos,
+    held: Vec<(f64, Heartbeat)>,
+    scratch: Vec<Heartbeat>,
+    events: Vec<FaultEvent>,
+}
+
+impl<R: BeatReceiver> ChaosLink<R> {
+    /// Wrap `inner` with the given chaos state (from [`ChaosPlan::link`]).
+    pub fn new(inner: R, chaos: BeatChaos) -> Self {
+        ChaosLink {
+            inner,
+            chaos,
+            held: Vec::new(),
+            scratch: Vec::new(),
+            events: Vec::new(),
+        }
+    }
+
+    /// The chaos state (counters, regime).
+    pub fn chaos(&self) -> &BeatChaos {
+        &self.chaos
+    }
+
+    /// Chaos events logged so far (at most one per kind per period).
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+}
+
+impl<R: BeatReceiver> BeatReceiver for ChaosLink<R> {
+    fn drain(&mut self, now: f64, out: &mut Vec<Heartbeat>) {
+        self.scratch.clear();
+        self.inner.drain(now, &mut self.scratch);
+        self.chaos
+            .disturb(now, &mut self.scratch, &mut self.held, &mut self.events);
+        out.extend_from_slice(&self.scratch);
+    }
+
+    fn dropped(&self) -> u64 {
+        // Corrupted frames reach the receiver undecodable — they surface
+        // through the same drop accounting as genuinely bad frames.
+        self.inner.dropped() + self.chaos.corrupted()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::transport::{BeatSender, InProc};
+
+    fn regime_all() -> ChaosRegime {
+        ChaosRegime {
+            loss: 0.2,
+            corrupt: 0.1,
+            dup: 0.2,
+            delay: 0.1,
+            delay_secs: 2.0,
+            reorder: 0.3,
+        }
+    }
+
+    #[test]
+    fn empty_plan_compiles_to_nothing() {
+        let plan = ChaosPlan::default();
+        assert!(plan.is_empty());
+        for id in 0..64 {
+            assert!(plan.link(id).is_none());
+        }
+        // An inert rule is the same as no rule.
+        let inert = ChaosPlan::seeded(5).with_rule(NodeSelector::All, ChaosRegime::default());
+        assert!(inert.is_empty());
+        assert!(inert.link(0).is_none());
+    }
+
+    #[test]
+    fn replay_is_exact() {
+        let plan = ChaosPlan::seeded(42).with_rule(NodeSelector::All, regime_all());
+        let run = || {
+            let mut c = plan.link(7).unwrap();
+            let mut held = Vec::new();
+            let mut events = Vec::new();
+            let mut trace = Vec::new();
+            for k in 0..200 {
+                let now = (k + 1) as f64;
+                let mut buf: Vec<f64> = (0..5).map(|j| now - 0.1 * j as f64).collect();
+                c.disturb(now, &mut buf, &mut held, &mut events);
+                trace.push(buf);
+            }
+            (trace, events, c.disturbances())
+        };
+        let (ta, ea, da) = run();
+        let (tb, eb, db) = run();
+        assert_eq!(ta, tb);
+        assert_eq!(ea, eb);
+        assert_eq!(da, db);
+        assert!(da > 0, "an armed all-channel regime must disturb something");
+    }
+
+    #[test]
+    fn node_streams_are_independent() {
+        let plan = ChaosPlan::seeded(9).with_rule(NodeSelector::All, regime_all());
+        let run = |id: u32| {
+            let mut c = plan.link(id).unwrap();
+            let (mut held, mut ev) = (Vec::new(), Vec::new());
+            let mut trace = Vec::new();
+            for k in 0..64 {
+                let mut buf: Vec<f64> = (0..4).map(|j| k as f64 + j as f64).collect();
+                c.disturb(k as f64, &mut buf, &mut held, &mut ev);
+                trace.push(buf);
+            }
+            trace
+        };
+        assert_ne!(run(0), run(1), "distinct nodes drew identical chaos");
+    }
+
+    #[test]
+    fn pure_loss_drops_and_counts() {
+        let regime = ChaosRegime {
+            loss: 1.0,
+            ..ChaosRegime::default()
+        };
+        let mut c = BeatChaos::new(regime, Pcg64::new(1, CHAOS_STREAM));
+        let (mut held, mut ev) = (Vec::new(), Vec::new());
+        let mut buf = vec![1.0, 2.0, 3.0];
+        c.disturb(1.0, &mut buf, &mut held, &mut ev);
+        assert!(buf.is_empty());
+        assert_eq!(c.lost(), 3);
+        // At most one event per kind per period.
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].kind, FaultEventKind::ChaosLoss);
+    }
+
+    #[test]
+    fn pure_dup_delivers_twice_in_order() {
+        let regime = ChaosRegime {
+            dup: 1.0,
+            ..ChaosRegime::default()
+        };
+        let mut c = BeatChaos::new(regime, Pcg64::new(2, CHAOS_STREAM));
+        let (mut held, mut ev) = (Vec::new(), Vec::new());
+        let mut buf = vec![1.0, 2.0];
+        c.disturb(1.0, &mut buf, &mut held, &mut ev);
+        assert_eq!(buf, vec![1.0, 1.0, 2.0, 2.0]);
+        assert_eq!(c.duplicated(), 2);
+    }
+
+    #[test]
+    fn delay_holds_then_releases_old_before_new() {
+        let regime = ChaosRegime {
+            delay: 1.0,
+            delay_secs: 2.0,
+            ..ChaosRegime::default()
+        };
+        let mut c = BeatChaos::new(regime, Pcg64::new(3, CHAOS_STREAM));
+        let (mut held, mut ev) = (Vec::new(), Vec::new());
+        let mut buf = vec![10.0];
+        c.disturb(1.0, &mut buf, &mut held, &mut ev);
+        assert!(buf.is_empty(), "delayed beat delivered early");
+        assert_eq!(held.len(), 1);
+        // Not yet due at t=2.
+        let mut buf = Vec::new();
+        c.disturb(2.0, &mut buf, &mut held, &mut ev);
+        assert!(buf.is_empty());
+        // Due at t=3 — released ahead of the period's own beats, and NOT
+        // disturbed a second time (the fresh beat 20.0 is held instead).
+        let mut buf = vec![20.0];
+        c.disturb(3.0, &mut buf, &mut held, &mut ev);
+        assert_eq!(buf, vec![10.0]);
+        assert_eq!(held.len(), 1);
+        assert_eq!(c.delayed(), 2);
+    }
+
+    #[test]
+    fn held_queue_is_bounded() {
+        let regime = ChaosRegime {
+            delay: 1.0,
+            delay_secs: 1e9,
+            ..ChaosRegime::default()
+        };
+        let mut c = BeatChaos::new(regime, Pcg64::new(4, CHAOS_STREAM));
+        let (mut held, mut ev) = (Vec::new(), Vec::new());
+        for k in 0..(MAX_HELD + 100) {
+            let mut buf = vec![k as f64];
+            c.disturb(k as f64, &mut buf, &mut held, &mut ev);
+        }
+        assert_eq!(held.len(), MAX_HELD);
+        assert_eq!(c.lost(), 100, "overflow drops must be counted as lost");
+    }
+
+    #[test]
+    fn reorder_shuffles_deterministically() {
+        let regime = ChaosRegime {
+            reorder: 1.0,
+            ..ChaosRegime::default()
+        };
+        let run = || {
+            let mut c = BeatChaos::new(regime, Pcg64::new(5, CHAOS_STREAM));
+            let (mut held, mut ev) = (Vec::new(), Vec::new());
+            let mut buf: Vec<f64> = (0..16).map(|k| k as f64).collect();
+            c.disturb(1.0, &mut buf, &mut held, &mut ev);
+            buf
+        };
+        let a = run();
+        let b = run();
+        assert_eq!(a, b, "seeded shuffle must replay");
+        let mut sorted = a.clone();
+        sorted.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        assert_eq!(sorted, (0..16).map(|k| k as f64).collect::<Vec<_>>());
+        assert_ne!(a, sorted, "16 elements must actually move");
+    }
+
+    #[test]
+    fn inert_channels_draw_nothing() {
+        // A reorder-only regime facing single-beat periods never draws
+        // (reorder draws only with ≥ 2 delivered beats), so the RNG cursor
+        // must not move.
+        let regime = ChaosRegime {
+            reorder: 0.5,
+            ..ChaosRegime::default()
+        };
+        let mut c = BeatChaos::new(regime, Pcg64::new(6, CHAOS_STREAM));
+        let before = c.rng.clone();
+        let (mut held, mut ev) = (Vec::new(), Vec::new());
+        for k in 0..50 {
+            let mut buf = vec![k as f64];
+            c.disturb(k as f64, &mut buf, &mut held, &mut ev);
+            assert_eq!(buf, vec![k as f64]);
+        }
+        assert_eq!(c.rng.clone().next_u64(), before.clone().next_u64());
+        assert!(ev.is_empty());
+    }
+
+    #[test]
+    fn chaos_link_disturbs_the_live_transport() {
+        let (tx, rx) = InProc::pair();
+        let plan = ChaosPlan::seeded(11).with_rule(
+            NodeSelector::All,
+            ChaosRegime {
+                loss: 0.5,
+                dup: 0.3,
+                ..ChaosRegime::default()
+            },
+        );
+        let mut link = ChaosLink::new(rx, plan.link(0).unwrap());
+        let mut delivered = 0usize;
+        let mut sent = 0usize;
+        for k in 0..100 {
+            for _ in 0..4 {
+                tx.send(1, 1).unwrap();
+                sent += 1;
+            }
+            let mut out = Vec::new();
+            link.drain(k as f64, &mut out);
+            for b in &out {
+                assert_eq!(b.app_id, 1);
+            }
+            delivered += out.len();
+        }
+        let c = link.chaos();
+        assert!(c.lost() > 0 && c.duplicated() > 0);
+        assert_eq!(
+            delivered as u64,
+            sent as u64 - c.lost() + c.duplicated(),
+            "delivery accounting must balance"
+        );
+        assert!(!link.events().is_empty());
+    }
+
+    #[test]
+    fn snapshot_roundtrips_rng_and_counters() {
+        use crate::util::snapshot::{SnapshotReader, SnapshotWriter};
+        let plan = ChaosPlan::seeded(13).with_rule(NodeSelector::All, regime_all());
+        let mut a = plan.link(3).unwrap();
+        let (mut held, mut ev) = (Vec::new(), Vec::new());
+        for k in 0..20 {
+            let mut buf = vec![k as f64, k as f64 + 0.5];
+            a.disturb(k as f64, &mut buf, &mut held, &mut ev);
+        }
+        let mut w = SnapshotWriter::new();
+        a.save(w.section("chaos"));
+        let bytes = w.to_bytes();
+        let mut b = plan.link(3).unwrap();
+        let mut r = SnapshotReader::from_bytes(&bytes).unwrap();
+        b.restore(r.section("chaos").unwrap()).unwrap();
+        // Identical continuation from the restored cursor.
+        let (mut ha, mut hb) = (held.clone(), held);
+        let (mut ea, mut eb) = (Vec::new(), Vec::new());
+        for k in 20..40 {
+            let mut ba = vec![k as f64, k as f64 + 0.5];
+            let mut bb = ba.clone();
+            a.disturb(k as f64, &mut ba, &mut ha, &mut ea);
+            b.disturb(k as f64, &mut bb, &mut hb, &mut eb);
+            assert_eq!(ba, bb, "period {k}");
+        }
+        assert_eq!(a.disturbances(), b.disturbances());
+    }
+}

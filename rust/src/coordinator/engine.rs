@@ -33,13 +33,122 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 
 use crate::control::baseline::Policy;
+use crate::coordinator::chaos::BeatChaos;
 use crate::coordinator::progress::ProgressAggregator;
 use crate::coordinator::records::{DeviceTrace, RunRecord};
+use crate::coordinator::supervisor::Watchdog;
 use crate::ident::signals::Plan;
 use crate::sim::clock::Clock;
+use crate::sim::faults::{FaultEvent, FaultEventKind};
 use crate::sim::node::NodeSim;
 use crate::util::error::Result;
 use crate::util::snapshot::{Section, Snapshot};
+
+/// What a deadline-scheduled loop does after a period overrun (the tick
+/// finished past the next period boundary).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CatchUp {
+    /// Jump to the next on-grid period boundary: phase is preserved, the
+    /// missed periods are skipped (and counted) rather than replayed. The
+    /// default — a congested control plane must not also owe back-ticks.
+    #[default]
+    Skip,
+    /// Keep every deadline: run the owed ticks back-to-back until the
+    /// schedule catches up (classic `next += period` drift behaviour,
+    /// made explicit and counted).
+    Compress,
+}
+
+/// Deadline scheduler for the period loop: owns the `next` deadline that
+/// [`ControlLoop::run`] used to advance blindly, detects overruns (the
+/// tick completed at or past the following deadline), and applies the
+/// configured [`CatchUp`] policy instead of silently drifting.
+///
+/// Under a virtual lockstep clock a tick completes "instantly" at its own
+/// deadline, so no overrun can ever fire and the schedule degenerates to
+/// the historical `next += period` — byte-identical campaigns.
+#[derive(Debug, Clone)]
+pub struct PeriodScheduler {
+    period: f64,
+    next: f64,
+    policy: CatchUp,
+    overruns: u64,
+    skipped: u64,
+}
+
+impl PeriodScheduler {
+    /// Schedule periods of `period` seconds starting at `start`, with the
+    /// given catch-up policy.
+    pub fn new(start: f64, period: f64, policy: CatchUp) -> Self {
+        assert!(period > 0.0, "control period must be positive");
+        PeriodScheduler {
+            period,
+            next: start + period,
+            policy,
+            overruns: 0,
+            skipped: 0,
+        }
+    }
+
+    /// The next tick deadline [s].
+    pub fn next_deadline(&self) -> f64 {
+        self.next
+    }
+
+    /// Report that the tick scheduled for the current deadline completed
+    /// at time `now`, and advance the schedule. Returns `true` when the
+    /// tick overran its period (completed at or past the next boundary).
+    pub fn completed(&mut self, now: f64) -> bool {
+        let mut next = self.next + self.period;
+        let overran = now >= next;
+        if overran {
+            self.overruns += 1;
+            if self.policy == CatchUp::Skip {
+                while next <= now {
+                    next += self.period;
+                    self.skipped += 1;
+                }
+            }
+        }
+        self.next = next;
+        overran
+    }
+
+    /// Ticks that completed past their following deadline.
+    pub fn overruns(&self) -> u64 {
+        self.overruns
+    }
+
+    /// Period boundaries skipped by the [`CatchUp::Skip`] policy.
+    pub fn skipped(&self) -> u64 {
+        self.skipped
+    }
+}
+
+/// The optional hardening state of a control loop: transport chaos, the
+/// liveness watchdog, deadline bookkeeping, and the hardened event log.
+/// `None` (the default) keeps the engine byte-identical to the unhardened
+/// path at the cost of one `Option` branch per tick.
+#[derive(Debug, Default)]
+struct Hardening {
+    /// Seeded transport chaos disturbing the telemetry beat stream.
+    chaos: Option<BeatChaos>,
+    /// Chaos delay queue: `(release_at, beat_timestamp)` held in flight.
+    delayed: Vec<(f64, f64)>,
+    /// Heartbeat-recency watchdog; a stale verdict withholds the progress
+    /// sample (forced non-finite) so the degradation ladder takes over.
+    watchdog: Option<Watchdog>,
+    /// Catch-up policy for deadline overruns in [`ControlLoop::run`].
+    catchup: CatchUp,
+    /// Ground-truth beats observed from the backend, before chaos touches
+    /// the telemetry copy — quota/finish accounting runs on this.
+    true_total: u64,
+    /// Deadline overruns logged by the scheduler.
+    overruns: u64,
+    /// Hardened-plane events (chaos, watchdog, overruns), merged into the
+    /// record alongside any fault-plan events.
+    events: Vec<FaultEvent>,
+}
 
 /// Sensor snapshot for one control period.
 #[derive(Debug, Clone, Copy)]
@@ -249,6 +358,9 @@ pub struct ControlLoop<B: NodeBackend> {
     finish_time: Option<f64>,
     timed_out: bool,
     last_energy: f64,
+    /// Hardened-plane state (chaos, watchdog, deadline bookkeeping).
+    /// `None` keeps the tick path byte-identical to the unhardened engine.
+    hardening: Option<Box<Hardening>>,
 }
 
 impl<B: NodeBackend> ControlLoop<B> {
@@ -268,7 +380,56 @@ impl<B: NodeBackend> ControlLoop<B> {
             finish_time: None,
             timed_out: false,
             last_energy: 0.0,
+            hardening: None,
         }
+    }
+
+    /// The hardening block, armed on first use.
+    fn hardening_mut(&mut self) -> &mut Hardening {
+        self.hardening.get_or_insert_with(Box::default)
+    }
+
+    /// Arm transport chaos: the seeded link disturbs the telemetry copy of
+    /// every period's beat batch (loss, duplication, delay, reordering,
+    /// corruption) while quota/finish accounting keeps running on the
+    /// ground-truth stream.
+    pub fn install_chaos(&mut self, chaos: BeatChaos) {
+        self.hardening_mut().chaos = Some(chaos);
+    }
+
+    /// Arm the liveness watchdog: when the heartbeat stream goes stale for
+    /// longer than the watchdog bound, the period's progress sample is
+    /// withheld (forced non-finite) so the policy-side degradation ladder
+    /// (hold-last-cap → full-cap fallback → bumpless re-engage) takes over.
+    pub fn set_watchdog(&mut self, watchdog: Watchdog) {
+        self.hardening_mut().watchdog = Some(watchdog);
+    }
+
+    /// Choose the deadline catch-up policy for [`run`](Self::run) and arm
+    /// overrun logging.
+    pub fn set_catchup(&mut self, catchup: CatchUp) {
+        self.hardening_mut().catchup = catchup;
+    }
+
+    /// The seeded chaos link, if armed (counter inspection).
+    pub fn chaos(&self) -> Option<&BeatChaos> {
+        self.hardening.as_deref().and_then(|h| h.chaos.as_ref())
+    }
+
+    /// The liveness watchdog, if armed (staleness inspection).
+    pub fn watchdog(&self) -> Option<&Watchdog> {
+        self.hardening.as_deref().and_then(|h| h.watchdog.as_ref())
+    }
+
+    /// Deadline overruns logged by [`run`](Self::run) (hardening armed).
+    pub fn overruns(&self) -> u64 {
+        self.hardening.as_deref().map_or(0, |h| h.overruns)
+    }
+
+    /// Events logged by the hardened plane (chaos disturbances, watchdog
+    /// staleness verdicts, deadline overruns), in chronological order.
+    pub fn hardening_events(&self) -> &[FaultEvent] {
+        self.hardening.as_deref().map_or(&[], |h| h.events.as_slice())
     }
 
     /// Tag this loop's records with a node id (fleet bookkeeping).
@@ -332,9 +493,16 @@ impl<B: NodeBackend> ControlLoop<B> {
         &self.samples
     }
 
-    /// Total heartbeats ingested by the Eq. (1) aggregator.
+    /// Total heartbeats observed. Unhardened, this is the Eq. (1)
+    /// aggregator's ingest count; with hardening armed it is the
+    /// ground-truth backend count — chaos loss/duplication distorts what
+    /// the aggregator sees, but completion accounting reports the work
+    /// actually done.
     pub fn total_beats(&self) -> u64 {
-        self.aggregator.total_beats()
+        match self.hardening.as_deref() {
+            Some(h) => h.true_total,
+            None => self.aggregator.total_beats(),
+        }
     }
 
     /// Most recent finite energy-counter reading [J].
@@ -353,10 +521,14 @@ impl<B: NodeBackend> ControlLoop<B> {
         }
 
         // Completion: record the exact timestamp of the quota-th beat from
-        // the heartbeat stream (not the period boundary).
+        // the heartbeat stream (not the period boundary). Ground truth —
+        // chaos below only disturbs the telemetry copy, never this check.
         if self.finish_time.is_none() {
             if let Some(q) = self.quota {
-                let before = self.aggregator.total_beats();
+                let before = match self.hardening.as_deref() {
+                    Some(h) => h.true_total,
+                    None => self.aggregator.total_beats(),
+                };
                 if before + self.beat_buf.len() as u64 >= q {
                     let need = q.saturating_sub(before) as usize;
                     self.finish_time = if need == 0 {
@@ -368,8 +540,28 @@ impl<B: NodeBackend> ControlLoop<B> {
             }
         }
 
+        if let Some(h) = self.hardening.as_deref_mut() {
+            h.true_total += self.beat_buf.len() as u64;
+            if let Some(chaos) = h.chaos.as_mut() {
+                chaos.disturb(now, &mut self.beat_buf, &mut h.delayed, &mut h.events);
+            }
+        }
+
         self.aggregator.ingest(&self.beat_buf);
-        let progress = self.aggregator.sample();
+        let mut progress = self.aggregator.sample();
+        if let Some(h) = self.hardening.as_deref_mut() {
+            if let Some(wd) = h.watchdog.as_mut() {
+                if wd.observe(now, self.beat_buf.len()) {
+                    // Stale heartbeat stream: withhold the sample so the
+                    // policy's degradation ladder engages, and log it.
+                    progress = f64::NAN;
+                    h.events.push(FaultEvent {
+                        t: now,
+                        kind: FaultEventKind::WatchdogStale,
+                    });
+                }
+            }
+        }
         if sensors.time - self.run_start >= self.max_time {
             self.timed_out = true;
         }
@@ -405,11 +597,25 @@ impl<B: NodeBackend> ControlLoop<B> {
         self.timed_out = false;
         self.finish_time = None;
         self.run_start = clock.now();
-        let mut next = self.run_start + self.period;
+        let catchup = self.hardening.as_deref().map_or(CatchUp::default(), |h| h.catchup);
+        let mut sched = PeriodScheduler::new(self.run_start, self.period, catchup);
         loop {
-            clock.wait_until(next);
+            clock.wait_until(sched.next_deadline());
             self.tick(clock.now(), policy);
-            next += self.period;
+            // Overrun detection reads the clock again: under a wall clock a
+            // slow tick has consumed real time by now; under the virtual
+            // lockstep clock `now` is still the deadline, so no tick can
+            // ever overrun and the schedule matches the historical
+            // `next += period` byte-for-byte.
+            if sched.completed(clock.now()) {
+                if let Some(h) = self.hardening.as_deref_mut() {
+                    h.overruns += 1;
+                    h.events.push(FaultEvent {
+                        t: clock.now(),
+                        kind: FaultEventKind::DeadlineOverrun,
+                    });
+                }
+            }
             let stopped = stop.is_some_and(|s| s.load(Ordering::Relaxed));
             if stopped || self.finished() {
                 break;
@@ -441,6 +647,9 @@ impl<B: NodeBackend> ControlLoop<B> {
         }
         rec.devices = self.backend.device_traces();
         rec.exec_time = self.samples.last().map(|s| s.time).unwrap_or(0.0);
+        if let Some(h) = self.hardening.as_deref() {
+            rec.faults = h.events.clone();
+        }
         rec
     }
 
@@ -466,6 +675,35 @@ impl<B: NodeBackend> ControlLoop<B> {
         w.put_f64(self.last_energy);
         w.put_f64(self.run_start);
         self.aggregator.save(w);
+        // Hardening block, appended after every pre-existing field so
+        // unhardened checkpoints keep their exact historical layout.
+        w.put_bool(self.hardening.is_some());
+        if let Some(h) = self.hardening.as_deref() {
+            w.put_bool(h.chaos.is_some());
+            if let Some(c) = h.chaos.as_ref() {
+                c.save(w);
+            }
+            w.put_u64(h.delayed.len() as u64);
+            for &(at, beat) in &h.delayed {
+                w.put_f64(at);
+                w.put_f64(beat);
+            }
+            w.put_bool(h.watchdog.is_some());
+            if let Some(wd) = h.watchdog.as_ref() {
+                wd.save(w);
+            }
+            w.put_u8(match h.catchup {
+                CatchUp::Skip => 0,
+                CatchUp::Compress => 1,
+            });
+            w.put_u64(h.true_total);
+            w.put_u64(h.overruns);
+            w.put_u64(h.events.len() as u64);
+            for e in &h.events {
+                w.put_f64(e.t);
+                w.put_u8(e.kind.snapshot_tag());
+            }
+        }
     }
 
     /// Counterpart of [`save_loop_state`](Self::save_loop_state).
@@ -489,6 +727,64 @@ impl<B: NodeBackend> ControlLoop<B> {
         self.run_start = r.take_f64()?;
         self.aggregator.restore(r)?;
         self.beat_buf.clear();
+        let hardened = r.take_bool()?;
+        if hardened != self.hardening.is_some() {
+            return Err(crate::err!(
+                "checkpoint hardening mismatch: saved {}, rebuilt {} — resume with the same chaos/watchdog arming",
+                hardened,
+                self.hardening.is_some()
+            ));
+        }
+        if hardened {
+            let h = self.hardening_mut();
+            let saved_chaos = r.take_bool()?;
+            if saved_chaos != h.chaos.is_some() {
+                return Err(crate::err!(
+                    "checkpoint chaos mismatch: saved {}, rebuilt {}",
+                    saved_chaos,
+                    h.chaos.is_some()
+                ));
+            }
+            if let Some(c) = h.chaos.as_mut() {
+                c.restore(r)?;
+            }
+            let held = r.take_u64()? as usize;
+            h.delayed.clear();
+            h.delayed.reserve(held);
+            for _ in 0..held {
+                let at = r.take_f64()?;
+                let beat = r.take_f64()?;
+                h.delayed.push((at, beat));
+            }
+            let saved_wd = r.take_bool()?;
+            if saved_wd != h.watchdog.is_some() {
+                return Err(crate::err!(
+                    "checkpoint watchdog mismatch: saved {}, rebuilt {}",
+                    saved_wd,
+                    h.watchdog.is_some()
+                ));
+            }
+            if let Some(wd) = h.watchdog.as_mut() {
+                wd.restore(r)?;
+            }
+            h.catchup = match r.take_u8()? {
+                0 => CatchUp::Skip,
+                1 => CatchUp::Compress,
+                other => return Err(crate::err!("unknown catch-up tag {other}")),
+            };
+            h.true_total = r.take_u64()?;
+            h.overruns = r.take_u64()?;
+            let n_events = r.take_u64()? as usize;
+            h.events.clear();
+            h.events.reserve(n_events);
+            for _ in 0..n_events {
+                let t = r.take_f64()?;
+                let tag = r.take_u8()?;
+                let kind = FaultEventKind::from_snapshot_tag(tag)
+                    .ok_or_else(|| crate::err!("unknown fault event tag {tag}"))?;
+                h.events.push(FaultEvent { t, kind });
+            }
+        }
         Ok(())
     }
 }
@@ -638,5 +934,199 @@ mod tests {
         assert_eq!(engine.total_beats(), beats_before);
         assert_eq!(engine.last_energy(), energy_before);
         assert!(s.power.is_nan());
+    }
+
+    #[test]
+    fn period_scheduler_on_time_never_overruns() {
+        let mut sched = PeriodScheduler::new(0.0, 1.0, CatchUp::Skip);
+        for k in 1..=100u64 {
+            assert_eq!(sched.next_deadline(), k as f64);
+            // Lockstep: the tick completes at its own deadline.
+            assert!(!sched.completed(k as f64));
+        }
+        assert_eq!(sched.overruns(), 0);
+        assert_eq!(sched.skipped(), 0);
+    }
+
+    #[test]
+    fn period_scheduler_skip_preserves_phase() {
+        let mut sched = PeriodScheduler::new(0.0, 1.0, CatchUp::Skip);
+        // The tick scheduled for t=1 completes at t=2.5: one overrun, one
+        // boundary (t=2) skipped, and the next deadline snaps back onto
+        // the grid at t=3 rather than drifting off-phase.
+        assert!(sched.completed(2.5));
+        assert_eq!(sched.overruns(), 1);
+        assert_eq!(sched.skipped(), 1);
+        assert_eq!(sched.next_deadline(), 3.0);
+    }
+
+    #[test]
+    fn period_scheduler_compress_keeps_every_deadline() {
+        let mut sched = PeriodScheduler::new(0.0, 1.0, CatchUp::Compress);
+        assert!(sched.completed(2.5));
+        assert_eq!(sched.overruns(), 1);
+        assert_eq!(sched.skipped(), 0);
+        // The owed deadline stays owed: the next wait returns immediately
+        // and the back-ticks run until the schedule catches up.
+        assert_eq!(sched.next_deadline(), 2.0);
+    }
+
+    /// Clock whose wakeups land `lag` seconds past every requested
+    /// deadline — a congested control plane in miniature.
+    struct LaggyClock {
+        now: f64,
+        lag: f64,
+    }
+
+    impl Clock for LaggyClock {
+        fn now(&self) -> f64 {
+            self.now
+        }
+        fn wait_until(&mut self, t: f64) {
+            self.now = t + self.lag;
+        }
+    }
+
+    #[test]
+    fn run_logs_deadline_overruns_when_hardened() {
+        let mut engine = ControlLoop::new(ScriptBackend::new(10.0), 1.0);
+        engine.set_catchup(CatchUp::Skip);
+        engine.set_max_time(4.0);
+        let mut policy = Uncontrolled { pcap_max: 120.0 };
+        // Every wakeup lands 1.6 s late: ticks run at 2.6 then 4.6 (the
+        // t=2 boundary is skipped, phase preserved), each one an overrun.
+        let mut clock = LaggyClock { now: 0.0, lag: 1.6 };
+        engine.run(&mut clock, &mut policy, None);
+        assert!(engine.timed_out());
+        assert_eq!(engine.overruns(), 2);
+        let kinds: Vec<_> = engine.hardening_events().iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![FaultEventKind::DeadlineOverrun, FaultEventKind::DeadlineOverrun]
+        );
+        assert_eq!(engine.record().faults.len(), 2);
+    }
+
+    #[test]
+    fn chaos_loss_never_breaks_completion() {
+        use crate::coordinator::chaos::{BeatChaos, ChaosRegime};
+        use crate::util::rng::Pcg64;
+        let mut engine = ControlLoop::new(ScriptBackend::new(20.0), 1.0);
+        engine.set_quota(Some(30));
+        let regime = ChaosRegime {
+            loss: 1.0,
+            ..ChaosRegime::default()
+        };
+        engine.install_chaos(BeatChaos::new(regime, Pcg64::new(7, 0xC4405)));
+        let mut policy = Uncontrolled { pcap_max: 120.0 };
+        engine.tick(1.0, &mut policy);
+        engine.tick(2.0, &mut policy);
+        // Total loss: the aggregator saw nothing, yet completion ran on
+        // the ground-truth stream — exact quota timestamp and true count.
+        let ft = engine.finish_time().expect("quota reached under loss");
+        assert!((ft - 1.5).abs() < 1e-9, "finish {ft}");
+        assert_eq!(engine.total_beats(), 40);
+        assert_eq!(engine.chaos().unwrap().lost(), 40);
+        assert!(engine
+            .hardening_events()
+            .iter()
+            .any(|e| e.kind == FaultEventKind::ChaosLoss));
+        // The telemetry the controller saw reads zero progress.
+        assert_eq!(engine.samples()[0].beats_total, 0);
+    }
+
+    #[test]
+    fn watchdog_staleness_withholds_progress_sample() {
+        // One beat every 10 s against a 2 s staleness bound: the stream
+        // goes quiet and the watchdog must withhold the sample.
+        let mut engine = ControlLoop::new(ScriptBackend::new(0.1), 1.0);
+        engine.set_watchdog(Watchdog::new(2.0));
+        let mut policy = Uncontrolled { pcap_max: 120.0 };
+        for i in 1..=5 {
+            engine.tick(i as f64, &mut policy);
+        }
+        let samples = engine.samples();
+        // Anchor at t=1 (grace), within bound at t=2 and t=3 (strict
+        // bound: 3-1 = 2.0 is not yet past it), stale from t=4 on.
+        for s in &samples[..3] {
+            assert!(!s.progress.is_nan(), "fresh-enough sample kept");
+        }
+        for s in &samples[3..] {
+            assert!(s.progress.is_nan(), "stale sample must be withheld");
+        }
+        assert_eq!(engine.watchdog().unwrap().stale_verdicts(), 2);
+        let stale_events = engine
+            .hardening_events()
+            .iter()
+            .filter(|e| e.kind == FaultEventKind::WatchdogStale)
+            .count();
+        assert_eq!(stale_events, 2);
+    }
+
+    #[test]
+    fn hardened_loop_state_roundtrips() {
+        use crate::coordinator::chaos::{BeatChaos, ChaosRegime};
+        use crate::util::rng::Pcg64;
+        use crate::util::snapshot::{SnapshotReader, SnapshotWriter};
+        let regime = ChaosRegime {
+            loss: 0.3,
+            dup: 0.3,
+            delay: 0.3,
+            delay_secs: 2.5,
+            ..ChaosRegime::default()
+        };
+        let build = || {
+            let mut e = ControlLoop::new(ScriptBackend::new(20.0), 1.0);
+            e.install_chaos(BeatChaos::new(regime, Pcg64::new(11, 0xC4405)));
+            e.set_watchdog(Watchdog::new(2.0));
+            e.set_catchup(CatchUp::Compress);
+            e
+        };
+        let mut policy = Uncontrolled { pcap_max: 120.0 };
+        let mut engine = build();
+        for i in 1..=6 {
+            engine.tick(i as f64, &mut policy);
+        }
+        let mut w = SnapshotWriter::new();
+        engine.save_loop_state(w.section("loop"));
+        let bytes = w.to_bytes();
+
+        let mut resumed = build();
+        let mut r = SnapshotReader::from_bytes(&bytes).unwrap();
+        resumed.restore_loop_state(r.section("loop").unwrap()).unwrap();
+
+        // Drive both engines on and the futures must stay identical: the
+        // chaos RNG cursor, held-delay queue and counters all came back.
+        for i in 7..=12 {
+            let a = engine.tick(i as f64, &mut policy);
+            let b = resumed.tick(i as f64, &mut policy);
+            assert_eq!(a.progress.to_bits(), b.progress.to_bits());
+            assert_eq!(a.beats_total, b.beats_total);
+        }
+        assert_eq!(engine.total_beats(), resumed.total_beats());
+        assert_eq!(
+            engine.chaos().unwrap().disturbances(),
+            resumed.chaos().unwrap().disturbances()
+        );
+        assert_eq!(engine.hardening_events(), resumed.hardening_events());
+    }
+
+    #[test]
+    fn unhardened_checkpoint_rejects_hardened_resume() {
+        use crate::util::snapshot::{SnapshotReader, SnapshotWriter};
+        let mut engine = ControlLoop::new(ScriptBackend::new(10.0), 1.0);
+        let mut policy = Uncontrolled { pcap_max: 120.0 };
+        engine.tick(1.0, &mut policy);
+        let mut w = SnapshotWriter::new();
+        engine.save_loop_state(w.section("loop"));
+        let bytes = w.to_bytes();
+
+        let mut resumed = ControlLoop::new(ScriptBackend::new(10.0), 1.0);
+        resumed.set_watchdog(Watchdog::new(2.0));
+        let mut r = SnapshotReader::from_bytes(&bytes).unwrap();
+        let err = resumed
+            .restore_loop_state(r.section("loop").unwrap())
+            .unwrap_err();
+        assert!(err.to_string().contains("hardening mismatch"), "{err}");
     }
 }

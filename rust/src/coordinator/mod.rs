@@ -11,18 +11,28 @@
 //!   the simulated node (the campaign path);
 //! * [`hetero`] — the hierarchical backend: a multi-device node with the
 //!   device-split inner loop inside, behind the same engine interface;
-//! * [`records`] — run records with CSV/JSON export.
+//! * [`records`] — run records with CSV/JSON export;
+//! * [`chaos`] — the seeded transport-chaos link (loss, duplication,
+//!   delay, reordering, corruption) hardening is tested against;
+//! * [`supervisor`] — heartbeat liveness watchdogs and the retrying
+//!   actuator wrapper (the hardened live plane).
 
+pub mod chaos;
 pub mod engine;
 pub mod experiment;
 pub mod hetero;
 pub mod nrm;
 pub mod progress;
 pub mod records;
+pub mod supervisor;
 pub mod transport;
 
-pub use engine::{ControlLoop, LockstepBackend, NodeBackend, PeriodRecord, PlanPolicy};
+pub use chaos::{BeatChaos, ChaosLink, ChaosPlan, ChaosRegime};
+pub use engine::{
+    CatchUp, ControlLoop, LockstepBackend, NodeBackend, PeriodRecord, PeriodScheduler, PlanPolicy,
+};
 pub use experiment::{run_closed_loop, run_open_loop, RunConfig};
 pub use hetero::HeteroBackend;
 pub use progress::ProgressAggregator;
 pub use records::{DeviceTrace, RunRecord};
+pub use supervisor::{Actuator, RetryingActuator, Supervisor, Watchdog};

@@ -248,6 +248,34 @@ impl<R: BeatReceiver + Send> NrmDaemon<R> {
     pub fn backend(&self) -> &dyn NodeBackend {
         self.engine.backend().inner().as_ref()
     }
+
+    /// Arm the engine's liveness watchdog: periods with a stale heartbeat
+    /// stream (no beat within `bound_secs`) withhold the progress sample so
+    /// the policy's degradation ladder engages instead of the controller
+    /// chasing a silent stream. (Transport chaos composes at the type
+    /// level instead — wrap the receiver in a
+    /// [`ChaosLink`](crate::coordinator::chaos::ChaosLink).)
+    pub fn set_watchdog(&mut self, bound_secs: f64) {
+        self.engine
+            .set_watchdog(crate::coordinator::supervisor::Watchdog::new(bound_secs));
+    }
+
+    /// Choose the deadline catch-up policy for [`run`](Self::run) and arm
+    /// overrun logging on the engine.
+    pub fn set_catchup(&mut self, catchup: crate::coordinator::engine::CatchUp) {
+        self.engine.set_catchup(catchup);
+    }
+
+    /// Deadline overruns logged by [`run`](Self::run) (hardening armed).
+    pub fn overruns(&self) -> u64 {
+        self.engine.overruns()
+    }
+
+    /// Hardened-plane events (watchdog staleness, deadline overruns) in
+    /// chronological order.
+    pub fn hardening_events(&self) -> &[crate::sim::faults::FaultEvent] {
+        self.engine.hardening_events()
+    }
 }
 
 #[cfg(test)]
@@ -388,6 +416,63 @@ mod tests {
         assert_eq!(rec.pcap.len(), 10);
         assert_eq!(rec.policy, "uncontrolled");
         assert!(rec.completed);
+    }
+
+    #[test]
+    fn daemon_watchdog_flags_silent_stream() {
+        use crate::sim::faults::FaultEventKind;
+        let (_tx, rx) = InProc::pair(); // workload never beats
+        let mut d = NrmDaemon::new(
+            rx,
+            Box::new(sim_backend(ClusterId::Gros, 7)),
+            Box::new(Uncontrolled { pcap_max: 120.0 }),
+            1.0,
+            f64::NAN,
+            f64::NAN,
+        );
+        d.set_watchdog(2.0);
+        for i in 1..=5 {
+            d.tick(i as f64);
+        }
+        // Anchored at t=1 with one-bound grace; strictly past the bound
+        // from t=4 on, the sample is withheld and the verdict logged.
+        assert!(d.samples()[4].progress.is_nan());
+        assert!(d
+            .hardening_events()
+            .iter()
+            .any(|e| e.kind == FaultEventKind::WatchdogStale));
+        assert!(!d.record().faults.is_empty());
+    }
+
+    #[test]
+    fn daemon_over_chaos_link_keeps_serving() {
+        use crate::coordinator::chaos::{BeatChaos, ChaosLink, ChaosRegime};
+        use crate::util::rng::Pcg64;
+        let (tx, rx) = InProc::pair();
+        let regime = ChaosRegime {
+            loss: 0.5,
+            ..ChaosRegime::default()
+        };
+        let link = ChaosLink::new(rx, BeatChaos::new(regime, Pcg64::new(9, 0xC4405)));
+        let mut d = NrmDaemon::new(
+            link,
+            Box::new(sim_backend(ClusterId::Gros, 8)),
+            Box::new(Uncontrolled { pcap_max: 120.0 }),
+            1.0,
+            f64::NAN,
+            f64::NAN,
+        );
+        for i in 1..=20 {
+            for _ in 0..10 {
+                tx.send(1, 1).unwrap();
+            }
+            d.tick(i as f64);
+        }
+        // Half the stream was lost on the wire, yet the daemon served every
+        // period and the surviving beats still measured progress.
+        let total = d.samples().last().unwrap().beats_total;
+        assert!(total > 0 && total < 200, "beats {total}");
+        assert!(d.samples().iter().all(|s| s.pcap == 120.0));
     }
 
     #[test]

@@ -1,0 +1,354 @@
+//! Liveness supervision for the hardened control plane: heartbeat
+//! watchdogs and retrying actuators.
+//!
+//! The paper's loop quietly assumes fresh telemetry every period. The
+//! [`Watchdog`] makes that assumption explicit and bounded: it tracks the
+//! recency of a node's heartbeat stream and declares the stream **stale**
+//! once no beat has arrived within the staleness bound. A stale verdict
+//! does not invent a new recovery mechanism — the engine withholds the
+//! progress sample (forces it non-finite), which flows into the existing
+//! PR 7 degradation ladder: hold-last-cap → full-cap fallback after
+//! `fallback_k` periods → bumpless re-engage on the first fresh sample.
+//! Live and simulated degradation share ONE mechanism.
+//!
+//! The [`Supervisor`] scales the same verdict to many tenants (one NRM
+//! daemon tracking several instrumented applications), and
+//! [`RetryingActuator`] wraps any fallible power-cap sink in the
+//! seeded-jitter backoff policy of [`crate::util::retry`] — a cap write
+//! that keeps failing degrades to a counted, descriptive error, never a
+//! panic and never an unbounded stall.
+
+use std::collections::BTreeMap;
+
+use crate::util::error::Result;
+use crate::util::retry::{Retrier, RetryPolicy};
+use crate::util::snapshot::{Section, Snapshot};
+
+/// Heartbeat-recency watchdog for one beat stream.
+///
+/// `observe` is called once per control period with the number of beats
+/// that arrived; the verdict is pure arithmetic on the last-seen time, so
+/// the watchdog is deterministic and snapshot-friendly. The first
+/// observation anchors the clock — a stream that never beats goes stale
+/// one bound after supervision starts, not immediately.
+#[derive(Debug, Clone)]
+pub struct Watchdog {
+    bound: f64,
+    last_seen: Option<f64>,
+    stale_verdicts: u64,
+}
+
+impl Watchdog {
+    /// A watchdog declaring staleness after `bound_secs` without a beat.
+    pub fn new(bound_secs: f64) -> Self {
+        Watchdog {
+            bound: bound_secs.max(0.0),
+            last_seen: None,
+            stale_verdicts: 0,
+        }
+    }
+
+    /// The configured staleness bound [s].
+    pub fn bound(&self) -> f64 {
+        self.bound
+    }
+
+    /// Record one period's arrivals and return the verdict: `true` means
+    /// the stream is stale (no beat within the bound). Stale verdicts are
+    /// counted for `RunRecord` reporting.
+    pub fn observe(&mut self, now: f64, fresh_beats: usize) -> bool {
+        if fresh_beats > 0 {
+            self.last_seen = Some(now);
+        } else if self.last_seen.is_none() {
+            // Anchor at first observation: grace of one full bound before
+            // a silent stream is condemned.
+            self.last_seen = Some(now);
+            return false;
+        }
+        let stale = self.is_stale(now);
+        if stale {
+            self.stale_verdicts += 1;
+        }
+        stale
+    }
+
+    /// Pure staleness query at time `now` (no state change, no counting).
+    pub fn is_stale(&self, now: f64) -> bool {
+        match self.last_seen {
+            Some(t) => now - t > self.bound,
+            None => false,
+        }
+    }
+
+    /// Periods on which the stream was judged stale.
+    pub fn stale_verdicts(&self) -> u64 {
+        self.stale_verdicts
+    }
+}
+
+/// The bound is configuration; the live state is the recency anchor and
+/// the verdict counter.
+impl Snapshot for Watchdog {
+    fn save(&self, w: &mut Section) {
+        w.put_opt_f64(self.last_seen);
+        w.put_u64(self.stale_verdicts);
+    }
+
+    fn restore(&mut self, r: &mut Section) -> Result<()> {
+        self.last_seen = r.take_opt_f64()?;
+        self.stale_verdicts = r.take_u64()?;
+        Ok(())
+    }
+}
+
+/// Per-tenant liveness supervision: one [`Watchdog`]-equivalent recency
+/// record per application id, under a shared staleness bound. The map is
+/// ordered so iteration (and any serialization) is deterministic.
+#[derive(Debug, Clone)]
+pub struct Supervisor {
+    bound: f64,
+    tenants: BTreeMap<u32, Watchdog>,
+}
+
+impl Supervisor {
+    /// A supervisor declaring a tenant stale after `bound_secs` without a
+    /// beat from it.
+    pub fn new(bound_secs: f64) -> Self {
+        Supervisor {
+            bound: bound_secs.max(0.0),
+            tenants: BTreeMap::new(),
+        }
+    }
+
+    /// Record `fresh_beats` arrivals from `tenant` this period and return
+    /// the tenant's verdict. Unknown tenants are enrolled on first
+    /// observation.
+    pub fn observe(&mut self, tenant: u32, now: f64, fresh_beats: usize) -> bool {
+        self.tenants
+            .entry(tenant)
+            .or_insert_with(|| Watchdog::new(self.bound))
+            .observe(now, fresh_beats)
+    }
+
+    /// Pure staleness query for one tenant (unknown tenants are not
+    /// stale — they have never been supervised).
+    pub fn is_stale(&self, tenant: u32, now: f64) -> bool {
+        self.tenants
+            .get(&tenant)
+            .map(|w| w.is_stale(now))
+            .unwrap_or(false)
+    }
+
+    /// All currently-stale tenant ids, ascending.
+    pub fn stale_tenants(&self, now: f64) -> Vec<u32> {
+        self.tenants
+            .iter()
+            .filter(|(_, w)| w.is_stale(now))
+            .map(|(&id, _)| id)
+            .collect()
+    }
+
+    /// Number of tenants ever observed.
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Total stale verdicts across all tenants.
+    pub fn stale_verdicts(&self) -> u64 {
+        self.tenants.values().map(|w| w.stale_verdicts()).sum()
+    }
+}
+
+/// A fallible power-cap sink: the seam between the control decision and
+/// the hardware write (RAPL, a hypervisor RPC, a test double). Returns
+/// the watts actually in force after the write.
+pub trait Actuator {
+    /// Apply `watts`; return the cap actually in force, or a descriptive
+    /// error when the write failed.
+    fn apply(&mut self, watts: f64) -> Result<f64>;
+}
+
+impl<F: FnMut(f64) -> Result<f64>> Actuator for F {
+    fn apply(&mut self, watts: f64) -> Result<f64> {
+        self(watts)
+    }
+}
+
+/// An [`Actuator`] hardened with the seeded-jitter retry policy: each
+/// failed write is retried under exponential backoff until the attempt
+/// budget or backoff deadline runs out. A give-up returns the descriptive
+/// retry error (and is counted — [`Self::give_ups`]); it never panics, so
+/// the caller's period keeps closing and the previously-applied cap stays
+/// in force on the plant.
+pub struct RetryingActuator<A: Actuator> {
+    inner: A,
+    retrier: Retrier,
+    sleep: Box<dyn FnMut(f64) + Send>,
+    last_applied: Option<f64>,
+}
+
+impl<A: Actuator> RetryingActuator<A> {
+    /// Wrap `inner` under `policy`, jitter-seeded by `seed`, with a no-op
+    /// sleeper (correct for simulated time and tests; daemons wanting
+    /// real backoff install one via [`Self::with_sleeper`]).
+    pub fn new(inner: A, policy: RetryPolicy, seed: u64) -> Self {
+        RetryingActuator {
+            inner,
+            retrier: Retrier::new(policy, seed),
+            sleep: Box::new(|_| {}),
+            last_applied: None,
+        }
+    }
+
+    /// Replace the backoff sleeper (e.g. `std::thread::sleep` for a live
+    /// daemon, a recorder for tests).
+    pub fn with_sleeper(mut self, sleep: impl FnMut(f64) + Send + 'static) -> Self {
+        self.sleep = Box::new(sleep);
+        self
+    }
+
+    /// Writes that exhausted the retry budget.
+    pub fn give_ups(&self) -> u64 {
+        self.retrier.give_ups()
+    }
+
+    /// Total write attempts (including retries).
+    pub fn attempts(&self) -> u64 {
+        self.retrier.attempts()
+    }
+
+    /// The last successfully applied cap, if any write ever landed.
+    pub fn last_applied(&self) -> Option<f64> {
+        self.last_applied
+    }
+
+    /// The wrapped actuator (read-only).
+    pub fn inner(&self) -> &A {
+        &self.inner
+    }
+}
+
+impl<A: Actuator> Actuator for RetryingActuator<A> {
+    fn apply(&mut self, watts: f64) -> Result<f64> {
+        let inner = &mut self.inner;
+        let actual = self.retrier.run(
+            "pcap actuation",
+            &mut self.sleep,
+            &mut |_attempt| inner.apply(watts),
+        )?;
+        self.last_applied = Some(actual);
+        Ok(actual)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn watchdog_fresh_stream_never_stale() {
+        let mut w = Watchdog::new(2.5);
+        for k in 0..50 {
+            assert!(!w.observe(k as f64, 3), "period {k}");
+        }
+        assert_eq!(w.stale_verdicts(), 0);
+    }
+
+    #[test]
+    fn watchdog_declares_staleness_after_bound_and_recovers() {
+        let mut w = Watchdog::new(2.5);
+        assert!(!w.observe(1.0, 1));
+        // Silence: stale strictly after 2.5 s without a beat.
+        assert!(!w.observe(2.0, 0));
+        assert!(!w.observe(3.0, 0));
+        assert!(w.observe(4.0, 0), "3 s of silence > 2.5 s bound");
+        assert!(w.observe(5.0, 0));
+        // One fresh beat clears the verdict immediately.
+        assert!(!w.observe(6.0, 2));
+        assert_eq!(w.stale_verdicts(), 2);
+    }
+
+    #[test]
+    fn watchdog_grace_anchor_on_silent_start() {
+        let mut w = Watchdog::new(2.0);
+        assert!(!w.is_stale(100.0), "unobserved stream is not stale");
+        assert!(!w.observe(10.0, 0), "first observation anchors");
+        assert!(!w.observe(11.0, 0));
+        assert!(w.observe(13.0, 0), "grace expired");
+    }
+
+    #[test]
+    fn watchdog_snapshot_roundtrips() {
+        use crate::util::snapshot::{SnapshotReader, SnapshotWriter};
+        let mut a = Watchdog::new(1.5);
+        a.observe(1.0, 1);
+        a.observe(2.0, 0);
+        a.observe(4.0, 0);
+        let mut w = SnapshotWriter::new();
+        a.save(w.section("wd"));
+        let bytes = w.to_bytes();
+        let mut b = Watchdog::new(1.5);
+        let mut r = SnapshotReader::from_bytes(&bytes).unwrap();
+        b.restore(r.section("wd").unwrap()).unwrap();
+        assert_eq!(b.stale_verdicts(), a.stale_verdicts());
+        assert_eq!(b.is_stale(5.0), a.is_stale(5.0));
+    }
+
+    #[test]
+    fn supervisor_tracks_tenants_independently() {
+        let mut s = Supervisor::new(2.0);
+        s.observe(1, 1.0, 1);
+        s.observe(2, 1.0, 1);
+        // Tenant 2 goes silent; tenant 1 keeps beating.
+        for k in 2..6 {
+            s.observe(1, k as f64, 1);
+            s.observe(2, k as f64, 0);
+        }
+        assert!(!s.is_stale(1, 5.0));
+        assert!(s.is_stale(2, 5.0));
+        assert_eq!(s.stale_tenants(5.0), vec![2]);
+        assert_eq!(s.tenant_count(), 2);
+        assert!(s.stale_verdicts() > 0);
+        assert!(!s.is_stale(99, 5.0), "never-seen tenant is not stale");
+    }
+
+    #[test]
+    fn retrying_actuator_rides_through_transients() {
+        let mut failures = 2;
+        let actuator = move |w: f64| {
+            if failures > 0 {
+                failures -= 1;
+                Err(crate::err!("EBUSY"))
+            } else {
+                Ok(w)
+            }
+        };
+        let mut ra = RetryingActuator::new(actuator, RetryPolicy::default(), 7);
+        assert_eq!(ra.apply(85.0).unwrap(), 85.0);
+        assert_eq!(ra.give_ups(), 0);
+        assert_eq!(ra.attempts(), 3);
+        assert_eq!(ra.last_applied(), Some(85.0));
+    }
+
+    #[test]
+    fn retrying_actuator_gives_up_descriptively() {
+        let actuator = |_w: f64| -> Result<f64> { Err(crate::err!("firmware wedged")) };
+        let policy = RetryPolicy {
+            max_attempts: 3,
+            ..RetryPolicy::default()
+        };
+        let mut slept = Vec::new();
+        // Channel the recorded delays out through a shared cell.
+        let log = std::sync::Arc::new(std::sync::Mutex::new(Vec::new()));
+        let log2 = log.clone();
+        let mut ra = RetryingActuator::new(actuator, policy, 7)
+            .with_sleeper(move |d| log2.lock().unwrap().push(d));
+        let err = ra.apply(85.0).unwrap_err().to_string();
+        assert!(err.contains("pcap actuation"), "{err}");
+        assert!(err.contains("firmware wedged"), "{err}");
+        assert_eq!(ra.give_ups(), 1);
+        assert_eq!(ra.last_applied(), None);
+        slept.extend(log.lock().unwrap().iter().copied());
+        assert_eq!(slept.len(), 2, "two backoffs for three attempts");
+    }
+}

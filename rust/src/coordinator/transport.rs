@@ -122,15 +122,33 @@ pub fn decode_beat(msg: &str) -> crate::util::error::Result<(u32, u32)> {
         .ok_or_else(|| err!("heartbeat frame missing app id"))?
         .parse()
         .map_err(|e| err!("heartbeat app id: {e}"))?;
-    let units = parts
+    let units_str = parts
         .next()
-        .ok_or_else(|| err!("heartbeat frame missing units"))?
+        .ok_or_else(|| err!("heartbeat frame missing units"))?;
+    // Parse through f64 first so hostile floats are rejected with a
+    // descriptive cause instead of a generic integer-parse error: NaN and
+    // the infinities are "non-finite", negatives and fractions are named
+    // as such. Side effect (pinned in tests): integral scientific
+    // notation like `1e3` is accepted as 1000.
+    let units_f: f64 = units_str
         .parse()
         .map_err(|e| err!("heartbeat units: {e}"))?;
+    if !units_f.is_finite() {
+        return Err(err!("heartbeat units must be finite, got {units_str:?}"));
+    }
+    if units_f < 0.0 {
+        return Err(err!("heartbeat units must be non-negative, got {units_str:?}"));
+    }
+    if units_f > u32::MAX as f64 {
+        return Err(err!("heartbeat units exceed u32 range, got {units_str:?}"));
+    }
+    if units_f.fract() != 0.0 {
+        return Err(err!("heartbeat units must be integral, got {units_str:?}"));
+    }
     if parts.next().is_some() {
         return Err(err!("heartbeat frame has trailing fields"));
     }
-    Ok((app_id, units))
+    Ok((app_id, units_f as u32))
 }
 
 /// Unix-datagram transport bound to a filesystem path.
@@ -170,6 +188,23 @@ pub struct UnixSocketReceiver {
     max_frame: usize,
     drain_budget: usize,
     dropped: u64,
+    summary: DrainSummary,
+}
+
+/// Aggregate outcome of the most recent [`drain`](BeatReceiver::drain)
+/// call: how many frames it dropped and why the last one was dropped.
+/// The cumulative [`BeatReceiver::dropped`] counter says *that* frames are
+/// being lost; this says *what went wrong just now*, so the daemon can log
+/// one meaningful line per period instead of a bare number.
+#[derive(Debug, Clone, Default)]
+pub struct DrainSummary {
+    /// Frames dropped during the call (decode failures, oversized frames,
+    /// flood discards, socket errors).
+    pub dropped: u64,
+    /// Human-readable cause of the most recent drop, `None` on a clean
+    /// drain. Only allocated on the error path — a clean steady-state
+    /// drain never formats a string.
+    pub last_cause: Option<String>,
 }
 
 impl UnixSocket {
@@ -186,6 +221,7 @@ impl UnixSocket {
             max_frame: DEFAULT_MAX_FRAME,
             drain_budget: DEFAULT_DRAIN_BUDGET,
             dropped: 0,
+            summary: DrainSummary::default(),
         })
     }
 
@@ -212,6 +248,34 @@ impl UnixSocketReceiver {
     pub fn set_drain_budget(&mut self, frames: usize) {
         self.drain_budget = frames.max(1);
     }
+
+    /// Aggregate error summary of the most recent drain call: drop count
+    /// plus the last cause, reset at the start of every drain.
+    pub fn last_drain(&self) -> &DrainSummary {
+        &self.summary
+    }
+
+    /// Switch the socket between bounded blocking receives (`Some(t)`:
+    /// each recv waits at most `t` for a frame) and pure non-blocking
+    /// polling (`None`, the bind-time default). A live daemon sleeping on
+    /// its control period can use a bounded timeout instead of spinning;
+    /// the drain loop treats a timeout exactly like "queue empty".
+    pub fn set_recv_timeout(&mut self, timeout: Option<std::time::Duration>) -> io::Result<()> {
+        match timeout {
+            Some(t) => {
+                self.sock.set_nonblocking(false)?;
+                self.sock.set_read_timeout(Some(t))
+            }
+            None => self.sock.set_nonblocking(true),
+        }
+    }
+
+    /// Record one dropped frame with its cause (error path only).
+    fn drop_frame(&mut self, cause: impl FnOnce() -> String) {
+        self.dropped += 1;
+        self.summary.dropped += 1;
+        self.summary.last_cause = Some(cause());
+    }
 }
 
 impl BeatSender for UnixSocketSender {
@@ -224,6 +288,9 @@ impl BeatSender for UnixSocketSender {
 
 impl BeatReceiver for UnixSocketReceiver {
     fn drain(&mut self, now: f64, out: &mut Vec<Heartbeat>) {
+        // Per-call summary starts clean; the clean path never writes it.
+        self.summary.dropped = 0;
+        self.summary.last_cause = None;
         let mut handled = 0usize;
         loop {
             if handled >= self.drain_budget {
@@ -231,11 +298,20 @@ impl BeatReceiver for UnixSocketReceiver {
                 // discard up to one more budget's worth so the babble is
                 // *counted*, then yield — total work per drain stays
                 // bounded at 2× budget and the period tick runs on time.
+                let mut discarded = 0u64;
                 for _ in 0..self.drain_budget {
                     match self.sock.recv(&mut self.buf) {
-                        Ok(_) => self.dropped += 1,
+                        Ok(_) => discarded += 1,
                         Err(_) => break,
                     }
+                }
+                if discarded > 0 {
+                    self.dropped += discarded;
+                    self.summary.dropped += discarded;
+                    self.summary.last_cause = Some(format!(
+                        "drain budget ({}) exhausted: discarded {discarded} flood frame(s)",
+                        self.drain_budget
+                    ));
                 }
                 break;
             }
@@ -246,7 +322,8 @@ impl BeatReceiver for UnixSocketReceiver {
                         // Oversized datagram: the buffer is one byte larger
                         // than the cap precisely so this is detectable.
                         // Drop it whole — never decode a truncated prefix.
-                        self.dropped += 1;
+                        let cap = self.max_frame;
+                        self.drop_frame(|| format!("oversized frame: {n} bytes > {cap}-byte cap"));
                         continue;
                     }
                     let decoded = std::str::from_utf8(&self.buf[..n])
@@ -260,14 +337,20 @@ impl BeatReceiver for UnixSocketReceiver {
                         }),
                         // Bad client frame: drop it, count it, keep
                         // serving — the daemon must never die here.
-                        Err(_) => self.dropped += 1,
+                        Err(e) => self.drop_frame(|| e.to_string()),
                     }
                 }
-                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
-                Err(_) => {
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut =>
+                {
+                    // Queue empty (or bounded recv timeout elapsed).
+                    break;
+                }
+                Err(e) => {
                     // Transient socket error: count it and yield; the
                     // next drain retries rather than spinning here.
-                    self.dropped += 1;
+                    self.drop_frame(|| format!("socket error: {e}"));
                     break;
                 }
             }
@@ -407,6 +490,79 @@ mod tests {
         assert_eq!(out.len(), 4);
         assert_eq!(out[0].units, 8);
         assert_eq!(rx.dropped(), 4);
+    }
+
+    #[test]
+    fn decode_rejects_hostile_unit_values() {
+        // Non-finite, negative, fractional and out-of-range unit counts
+        // are all recoverable errors with a cause the daemon can log.
+        let cases = [
+            ("beat 1 NaN", "finite"),
+            ("beat 1 inf", "finite"),
+            ("beat 1 -inf", "finite"),
+            ("beat 1 -1", "non-negative"),
+            ("beat 1 1.5", "integral"),
+            ("beat 1 4294967296", "u32 range"),
+        ];
+        for (frame, cause) in cases {
+            let e = decode_beat(frame).unwrap_err();
+            assert!(e.to_string().contains(cause), "{frame:?}: {e}");
+        }
+    }
+
+    #[test]
+    fn decode_accepts_integral_scientific_notation() {
+        // Pinned side effect of float-first parsing: `1e3` means 1000.
+        assert_eq!(decode_beat("beat 7 1e3").unwrap(), (7, 1000));
+    }
+
+    #[test]
+    fn drain_summary_reports_count_and_last_cause() {
+        let path = std::env::temp_dir().join(format!("powerctl-sum-{}.sock", std::process::id()));
+        let mut rx = UnixSocket::bind(&path).unwrap();
+        let raw = UnixDatagram::unbound().unwrap();
+        raw.send_to(b"pulse 1 1", &path).unwrap();
+        raw.send_to(b"beat 1 NaN", &path).unwrap();
+        let tx = UnixSocket::connect(&path).unwrap();
+        tx.send(3, 1).unwrap();
+        let mut out = Vec::new();
+        rx.drain(0.0, &mut out);
+        assert_eq!(out.len(), 1);
+        let s = rx.last_drain();
+        assert_eq!(s.dropped, 2);
+        let cause = s.last_cause.as_deref().expect("cause recorded");
+        assert!(cause.contains("finite"), "{cause}");
+        // A clean follow-up drain resets the summary.
+        tx.send(3, 2).unwrap();
+        out.clear();
+        rx.drain(1.0, &mut out);
+        assert_eq!(out.len(), 1);
+        assert_eq!(rx.last_drain().dropped, 0);
+        assert!(rx.last_drain().last_cause.is_none());
+        // The cumulative counter still remembers.
+        assert_eq!(rx.dropped(), 2);
+    }
+
+    #[test]
+    fn bounded_recv_timeout_returns_empty_handed() {
+        let path = std::env::temp_dir().join(format!("powerctl-tmo-{}.sock", std::process::id()));
+        let mut rx = UnixSocket::bind(&path).unwrap();
+        rx.set_recv_timeout(Some(std::time::Duration::from_millis(5)))
+            .unwrap();
+        let mut out = Vec::new();
+        let t0 = std::time::Instant::now();
+        rx.drain(0.0, &mut out);
+        // The bounded wait elapsed like an empty queue: no beats, no drops,
+        // and well under a second (i.e. it did not block forever).
+        assert!(out.is_empty());
+        assert_eq!(rx.last_drain().dropped, 0);
+        assert!(t0.elapsed() < std::time::Duration::from_secs(2));
+        // Back to non-blocking: delivery still works.
+        rx.set_recv_timeout(None).unwrap();
+        let tx = UnixSocket::connect(&path).unwrap();
+        tx.send(1, 1).unwrap();
+        rx.drain(1.0, &mut out);
+        assert_eq!(out.len(), 1);
     }
 
     #[test]

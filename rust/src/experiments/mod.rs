@@ -12,6 +12,7 @@
 //! | [`fleet`] | fleet-budget campaign: energy vs ε across budget strategies |
 //! | [`hetero`] | heterogeneous-node campaign: CPU+GPU device-split strategies |
 //! | [`faults`] | fault campaign: graceful degradation under seeded fault injection |
+//! | [`chaos`] | chaos campaign: hardened transport under seeded loss/dup/delay/reorder |
 //! | [`tree`] | coordinator-tree campaign: depth × arity × policy scaling |
 //! | [`checkpoint`] | checkpoint campaign: kill/resume byte-identity across paths × allocators |
 //!
@@ -19,6 +20,7 @@
 //! directory and returns a printed summary with the paper-shape checks.
 
 pub mod ablation;
+pub mod chaos;
 pub mod checkpoint;
 pub mod common;
 pub mod faults;

@@ -38,6 +38,7 @@ use crate::control::tree::CoordinatorTree;
 use crate::coordinator::records::RunRecord;
 use crate::fleet::executor::ShardedExecutor;
 use crate::fleet::node::{spawn_worker, Cmd, NodeSpec, WorkerConfig, WorkerHandle};
+use crate::coordinator::chaos::ChaosPlan;
 use crate::sim::faults::FaultPlan;
 use crate::sim::kernel::SimPath;
 use crate::util::error::Result;
@@ -195,7 +196,26 @@ pub fn run_fleet_with_faults(
     path: SimPath,
     plan: &FaultPlan,
 ) -> FleetOutcome {
-    drive_fleet(specs, EpochAllocator::Flat(strategy), config, path, plan)
+    run_fleet_with_chaos(specs, strategy, config, path, plan, &ChaosPlan::default())
+}
+
+/// [`run_fleet_with_faults`] under an additional seeded [`ChaosPlan`]:
+/// chaos-matched nodes get a deterministic transport-chaos link on the
+/// telemetry path (loss, corruption, duplication, delay, reordering), a
+/// one-period liveness watchdog, and the draw-free degradation ladder —
+/// see [`ShardedExecutor::with_chaos`]. An empty chaos plan is
+/// byte-identical to [`run_fleet_with_faults`] on every stepping path
+/// (`tests/live_chaos.rs`); the same seeded plan replays byte-identically
+/// across repeated runs and worker counts.
+pub fn run_fleet_with_chaos(
+    specs: &[NodeSpec],
+    strategy: &mut dyn BudgetPolicy,
+    config: &FleetConfig,
+    path: SimPath,
+    plan: &FaultPlan,
+    chaos: &ChaosPlan,
+) -> FleetOutcome {
+    drive_fleet(specs, EpochAllocator::Flat(strategy), config, path, plan, chaos)
 }
 
 /// Run `specs` as a fleet under a hierarchical [`CoordinatorTree`] of
@@ -242,7 +262,14 @@ pub fn run_fleet_tree_with_faults(
         specs.len(),
         "tree leaf count must match the fleet size"
     );
-    drive_fleet(specs, EpochAllocator::Tree(tree), config, path, plan)
+    drive_fleet(
+        specs,
+        EpochAllocator::Tree(tree),
+        config,
+        path,
+        plan,
+        &ChaosPlan::default(),
+    )
 }
 
 /// The budget-layer shape driving a fleet run: a flat allocator over all
@@ -265,8 +292,9 @@ fn drive_fleet(
     config: &FleetConfig,
     path: SimPath,
     plan: &FaultPlan,
+    chaos: &ChaosPlan,
 ) -> FleetOutcome {
-    drive_fleet_ext(specs, alloc, config, path, plan, None, None, None)
+    drive_fleet_ext(specs, alloc, config, path, plan, chaos, None, None, None)
         .expect("checkpoint-free fleet drive cannot fail")
         .expect("kill-free fleet drive always produces an outcome")
 }
@@ -412,6 +440,7 @@ fn drive_fleet_ext(
     config: &FleetConfig,
     path: SimPath,
     plan: &FaultPlan,
+    chaos: &ChaosPlan,
     ckpt: Option<&CheckpointSpec>,
     kill_at: Option<u64>,
     resume: Option<&Path>,
@@ -425,7 +454,7 @@ fn drive_fleet_ext(
         EpochAllocator::Flat(_) => "flat",
         EpochAllocator::Tree(_) => "tree",
     };
-    let mut exec = ShardedExecutor::with_faults(
+    let mut exec = ShardedExecutor::with_chaos(
         specs,
         initial_limit,
         worker_config(config),
@@ -433,6 +462,7 @@ fn drive_fleet_ext(
         threads,
         path,
         plan,
+        chaos,
     );
 
     let mut limits = vec![0.0; n];
@@ -543,6 +573,7 @@ pub fn run_fleet_with_checkpoints(
         config,
         path,
         plan,
+        &ChaosPlan::default(),
         Some(ckpt),
         None,
         None,
@@ -572,6 +603,7 @@ pub fn run_fleet_tree_with_checkpoints(
         config,
         path,
         plan,
+        &ChaosPlan::default(),
         Some(ckpt),
         None,
         None,
@@ -599,6 +631,7 @@ pub fn run_fleet_killed(
         config,
         path,
         plan,
+        &ChaosPlan::default(),
         Some(ckpt),
         Some(kill_at),
         None,
@@ -627,6 +660,7 @@ pub fn run_fleet_tree_killed(
         config,
         path,
         plan,
+        &ChaosPlan::default(),
         Some(ckpt),
         Some(kill_at),
         None,
@@ -652,6 +686,7 @@ pub fn resume_fleet(
         config,
         path,
         plan,
+        &ChaosPlan::default(),
         None,
         None,
         Some(from),
@@ -681,6 +716,7 @@ pub fn resume_fleet_tree(
         config,
         path,
         plan,
+        &ChaosPlan::default(),
         None,
         None,
         Some(from),

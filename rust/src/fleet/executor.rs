@@ -74,14 +74,16 @@
 use std::time::Instant;
 
 use crate::control::budget::{BudgetPolicy, NodeReport};
+use crate::coordinator::chaos::ChaosPlan;
 use crate::coordinator::engine::ControlLoop;
 use crate::coordinator::records::RunRecord;
+use crate::coordinator::supervisor::Watchdog;
 use crate::fleet::node::{
     build_node, finalize_record, node_report, BudgetedPolicy, FleetBackend, NodeSpec, WorkerConfig,
 };
 use crate::sim::cluster::Cluster;
 use crate::sim::device::DeviceKind;
-use crate::sim::faults::{FaultAction, FaultEventKind, FaultPlan};
+use crate::sim::faults::{FaultAction, FaultEventKind, FaultPlan, NodeFaults};
 use crate::sim::kernel::{ShardKernel, SimPath};
 use crate::util::error::Result;
 use crate::util::parallel::{catch_quiet, PinStatus, SendPtr, WorkerPool};
@@ -449,6 +451,41 @@ impl ShardedExecutor {
         path: SimPath,
         plan: &FaultPlan,
     ) -> Self {
+        ShardedExecutor::with_chaos(
+            specs,
+            initial_limit,
+            cfg,
+            seeds,
+            threads,
+            path,
+            plan,
+            &ChaosPlan::default(),
+        )
+    }
+
+    /// [`with_faults`](Self::with_faults) plus a seeded [`ChaosPlan`]:
+    /// each node whose id matches a non-inert chaos rule gets (a) a
+    /// [`BeatChaos`](crate::coordinator::chaos::BeatChaos) link disturbing
+    /// its telemetry beat stream (loss, corruption, duplication, delay,
+    /// reordering) on a dedicated RNG stream split from `(chaos seed, node
+    /// id)`, (b) a liveness watchdog bounded at one control period — at
+    /// period granularity the stale verdict lands on the second silent
+    /// tick — and (c) the policy-side degradation ladder armed draw-free
+    /// ([`NodeFaults::ladder_only`]) unless a fault rule already armed it,
+    /// so watchdog-withheld samples walk hold-last-cap → full-cap fallback
+    /// → bumpless re-engage. An empty (or all-inert) chaos plan installs
+    /// nothing and leaves the executor byte-identical to a chaos-free run.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_chaos(
+        specs: &[NodeSpec],
+        initial_limit: f64,
+        cfg: WorkerConfig,
+        seeds: &[u64],
+        threads: usize,
+        path: SimPath,
+        plan: &FaultPlan,
+        chaos: &ChaosPlan,
+    ) -> Self {
         assert!(!specs.is_empty(), "executor needs at least one node");
         assert_eq!(specs.len(), seeds.len(), "one seed per node spec");
         let n = specs.len();
@@ -466,10 +503,20 @@ impl ShardedExecutor {
             .enumerate()
             .map(|(i, (spec, &seed))| {
                 let cluster = Cluster::get(spec.cluster);
-                let (engine, mut policy) =
+                let (mut engine, mut policy) =
                     build_node(i as u32, spec, &cluster, initial_limit, cfg, seed, rows);
+                let faults_armed = plan.node_faults(i as u32).is_some();
                 if let Some(nf) = plan.node_faults(i as u32) {
                     policy.install_faults(nf);
+                }
+                if let Some(link) = chaos.link(i as u32) {
+                    engine.install_chaos(link);
+                    engine.set_watchdog(Watchdog::new(cfg.period));
+                    if !faults_armed {
+                        // Arm the degradation ladder without arming any
+                        // fault channel — zero extra RNG draws.
+                        policy.install_faults(NodeFaults::ladder_only(chaos.fallback_k));
+                    }
                 }
                 let report = node_report(i as u32, &engine, &policy);
                 let kinds: Vec<DeviceKind> = match &spec.hardware {

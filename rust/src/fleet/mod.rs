@@ -36,7 +36,8 @@ pub use coordinator::{
     resume_fleet, resume_fleet_tree, run_fleet, run_fleet_killed, run_fleet_threaded,
     run_fleet_tree, run_fleet_tree_killed, run_fleet_tree_with_checkpoints,
     run_fleet_tree_with_faults, run_fleet_tree_with_path, run_fleet_with_checkpoints,
-    run_fleet_with_faults, run_fleet_with_path, CheckpointSpec, FleetConfig, FleetOutcome,
+    run_fleet_with_chaos, run_fleet_with_faults, run_fleet_with_path, CheckpointSpec, FleetConfig,
+    FleetOutcome,
 };
 pub use executor::ShardedExecutor;
 pub use node::{BudgetedPolicy, FleetBackend, NodeHardware, NodePolicySpec, NodeSpec, WorkerConfig};

@@ -679,7 +679,32 @@ pub(crate) fn finalize_record(
         None => engine.samples().last().map(|s| s.time).unwrap_or(0.0),
     };
     rec.beats = engine.total_beats().min(cfg.total_beats);
-    rec.faults = policy.fault_events().to_vec();
+    // Merge the policy-side fault/ladder events with the engine-side
+    // hardened-plane events (chaos, watchdog, overruns) chronologically;
+    // on a timestamp tie the policy event sorts first, so unhardened
+    // records keep their exact historical order.
+    let hardened = engine.hardening_events();
+    if hardened.is_empty() {
+        rec.faults = policy.fault_events().to_vec();
+    } else {
+        let mut merged = Vec::with_capacity(policy.fault_events().len() + hardened.len());
+        let (mut p, mut h) = (policy.fault_events().iter().peekable(), hardened.iter().peekable());
+        loop {
+            match (p.peek(), h.peek()) {
+                (Some(a), Some(b)) => {
+                    if a.t <= b.t {
+                        merged.push(*p.next().unwrap());
+                    } else {
+                        merged.push(*h.next().unwrap());
+                    }
+                }
+                (Some(_), None) => merged.push(*p.next().unwrap()),
+                (None, Some(_)) => merged.push(*h.next().unwrap()),
+                (None, None) => break,
+            }
+        }
+        rec.faults = merged;
+    }
     rec
 }
 

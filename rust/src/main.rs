@@ -12,6 +12,7 @@
 //! powerctl fleet [--full]              fleet-budget campaign (energy vs ε per strategy)
 //! powerctl hetero                      CPU+GPU node campaign (device-split strategies)
 //! powerctl faults                      fault campaign (graceful degradation under injection)
+//! powerctl chaos                       chaos campaign (hardened transport under loss/dup/delay)
 //! powerctl tree                        coordinator-tree campaign (depth × arity × policy)
 //! powerctl checkpoint                  checkpoint campaign (kill/resume byte-identity)
 //! powerctl ablation                    design-choice ablations
@@ -42,6 +43,7 @@ fn cli() -> Cli {
         .subcommand("fleet", "fleet-budget campaign: N nodes under one global power budget")
         .subcommand("hetero", "heterogeneous-node campaign: CPU+GPU device-split strategies")
         .subcommand("faults", "fault campaign: graceful degradation under seeded injection")
+        .subcommand("chaos", "chaos campaign: hardened transport under seeded loss/dup/delay/reorder")
         .subcommand("tree", "coordinator-tree campaign: depth × arity × budget-policy scaling")
         .subcommand("checkpoint", "checkpoint campaign: kill/resume byte-identity across configs")
         .subcommand("ablation", "design-choice ablations")
@@ -126,6 +128,12 @@ fn main() {
             print!("{out}");
             println!("raw points: {}", ctx.path("faults.csv").display());
         }
+        "chaos" => {
+            let idents = experiments::identify_all(&ctx);
+            let (out, _) = experiments::chaos::run(&ctx, &idents);
+            print!("{out}");
+            println!("raw points: {}", ctx.path("chaos.csv").display());
+        }
         "tree" => {
             let idents = experiments::identify_all(&ctx);
             let (out, _) = experiments::tree::run(&ctx, &idents);
@@ -174,6 +182,8 @@ fn main() {
             print!("{ht}");
             let (fa, _) = experiments::faults::run(&ctx, &idents);
             print!("{fa}");
+            let (ch, _) = experiments::chaos::run(&ctx, &idents);
+            print!("{ch}");
             let (tr, _) = experiments::tree::run(&ctx, &idents);
             print!("{tr}");
             let (ck, _) = experiments::checkpoint::run(&ctx, &idents);

@@ -12,6 +12,7 @@ use std::path::{Path, PathBuf};
 use crate::err;
 use crate::runtime::manifest::Manifest;
 use crate::util::error::Result;
+use crate::util::retry::{Retrier, RetryPolicy};
 
 /// A compiled artifact cache over one PJRT client.
 pub struct Runtime {
@@ -20,10 +21,16 @@ pub struct Runtime {
     /// The artifact manifest the runtime loaded.
     pub manifest: Manifest,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Seeded-backoff retry for the execute RPC (DESIGN.md "Live control
+    /// plane hardening"): transient PJRT failures are re-attempted with
+    /// jittered exponential delays instead of failing the control period.
+    retrier: Retrier,
 }
 
 impl Runtime {
-    /// Create a CPU PJRT client and load the manifest from `dir`.
+    /// Create a CPU PJRT client and load the manifest from `dir`. RPC
+    /// retries start on [`RetryPolicy::default`] with seed 0; reseed via
+    /// [`Self::set_retry_policy`] for deterministic jitter schedules.
     pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir)?;
@@ -33,7 +40,28 @@ impl Runtime {
             dir,
             manifest,
             executables: HashMap::new(),
+            retrier: Retrier::new(RetryPolicy::default(), 0),
         })
+    }
+
+    /// Swap the RPC retry policy and reseed its jitter stream. Two runtimes
+    /// configured with the same `(policy, seed)` decide byte-identical
+    /// backoff schedules (the replayability contract of
+    /// [`crate::util::retry`]).
+    pub fn set_retry_policy(&mut self, policy: RetryPolicy, seed: u64) {
+        self.retrier = Retrier::new(policy, seed);
+    }
+
+    /// Execute-RPC attempts made through the retry layer (first tries
+    /// included).
+    pub fn retry_attempts(&self) -> u64 {
+        self.retrier.attempts()
+    }
+
+    /// Execute RPCs that exhausted their attempt budget or backoff
+    /// deadline and surfaced a descriptive give-up error.
+    pub fn retry_give_ups(&self) -> u64 {
+        self.retrier.give_ups()
     }
 
     /// Name of the PJRT platform backing the runtime.
@@ -67,13 +95,24 @@ impl Runtime {
     }
 
     /// Execute an entry with literal inputs; returns the flattened tuple of
-    /// output literals (aot.py lowers with `return_tuple=True`).
+    /// output literals (aot.py lowers with `return_tuple=True`). The device
+    /// dispatch — the RPC proper — runs under the seeded-backoff
+    /// [`Retrier`]: transient failures re-attempt with jittered
+    /// exponential delays (real sleeps), exhaustion returns the retrier's
+    /// descriptive give-up error naming the entry, attempt count and
+    /// backoff spent.
     pub fn execute(&mut self, entry: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
         self.load(entry)?;
         let exe = &self.executables[entry];
-        let result = exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| err!("executing '{entry}': {e:?}"))?;
+        let what = format!("executing '{entry}'");
+        let result = self.retrier.run(
+            &what,
+            &mut |d| std::thread::sleep(std::time::Duration::from_secs_f64(d)),
+            &mut |_attempt| {
+                exe.execute::<xla::Literal>(inputs)
+                    .map_err(|e| err!("executing '{entry}': {e:?}"))
+            },
+        )?;
         let literal = result[0][0]
             .to_literal_sync()
             .map_err(|e| err!("fetching result of '{entry}': {e:?}"))?;

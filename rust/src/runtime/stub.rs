@@ -13,6 +13,7 @@ use std::path::{Path, PathBuf};
 use crate::err;
 use crate::runtime::manifest::Manifest;
 use crate::util::error::Result;
+use crate::util::retry::{Retrier, RetryPolicy};
 
 fn unavailable(what: &str) -> crate::util::error::Error {
     err!(
@@ -27,6 +28,12 @@ pub struct Runtime {
     /// The artifact manifest the runtime loaded.
     pub manifest: Manifest,
     dir: PathBuf,
+    /// Mirrors the real runtime's RPC retry layer so the hardening
+    /// plumbing (policy wiring, attempt/give-up accounting, descriptive
+    /// exhaustion errors) compiles and is testable without `pjrt`. The
+    /// stub's sleeper is a no-op: its failures are permanent, so tests
+    /// exercise the give-up path without real backoff sleeps.
+    retrier: Retrier,
 }
 
 impl Runtime {
@@ -42,12 +49,35 @@ impl Runtime {
         "pjrt-stub".to_string()
     }
 
+    /// Swap the RPC retry policy and reseed its jitter stream — the same
+    /// surface as the real runtime, so live-demo plumbing configures
+    /// retries without caring which runtime it got.
+    pub fn set_retry_policy(&mut self, policy: RetryPolicy, seed: u64) {
+        self.retrier = Retrier::new(policy, seed);
+    }
+
+    /// RPC attempts made through the retry layer (first tries included).
+    pub fn retry_attempts(&self) -> u64 {
+        self.retrier.attempts()
+    }
+
+    /// RPCs that exhausted their attempt budget or backoff deadline and
+    /// surfaced a descriptive give-up error.
+    pub fn retry_give_ups(&self) -> u64 {
+        self.retrier.give_ups()
+    }
+
     /// Stub load: validates the entry against the manifest (a bad request
-    /// is its own recoverable error, not a missing-feature one), then
-    /// fails with the feature hint (build with `--features pjrt`).
+    /// is its own recoverable error, not a missing-feature one — and burns
+    /// no retry attempts), then runs the missing-feature failure through
+    /// the retry layer: the give-up error wraps the feature hint (build
+    /// with `--features pjrt`) as its last cause.
     pub fn load(&mut self, entry: &str) -> Result<()> {
         self.check_entry(entry)?;
-        Err(unavailable("compiling an artifact"))
+        let what = format!("compiling '{entry}'");
+        self.retrier.run(&what, &mut |_backoff| {}, &mut |_attempt| {
+            Err::<(), _>(unavailable("compiling an artifact"))
+        })
     }
 
     /// Reject entry names the manifest does not define — mirrors the real
@@ -156,10 +186,50 @@ mod tests {
         let runtime = Runtime {
             manifest: Manifest::load(&dir).unwrap(),
             dir: dir.clone(),
+            retrier: Retrier::new(RetryPolicy::default(), 0),
         };
         let e = StreamExecutor::with_entry(runtime, "no_such_entry", 1, false).unwrap_err();
         assert!(e.to_string().contains("no_such_entry"), "{e}");
         assert!(e.to_string().contains("stream_step"), "{e}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn stub_load_retries_then_gives_up_descriptively() {
+        let dir = std::env::temp_dir().join("powerctl-stub-retry-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"n": 4, "block": 2, "scalar": 0.5, "bytes_per_step": 160,
+                "entries": {"stream_step": {"file": "s.hlo.txt"}}}"#,
+        )
+        .unwrap();
+        let mut rt = Runtime {
+            manifest: Manifest::load(&dir).unwrap(),
+            dir: dir.clone(),
+            retrier: Retrier::new(RetryPolicy::default(), 0),
+        };
+        rt.set_retry_policy(
+            RetryPolicy {
+                max_attempts: 3,
+                jitter: 0.0,
+                ..RetryPolicy::default()
+            },
+            11,
+        );
+        // The missing feature is a permanent failure: bounded attempts,
+        // then a give-up naming the entry, the attempt count, and the
+        // feature hint as last cause — never a panic.
+        let e = rt.load("stream_step").unwrap_err().to_string();
+        assert!(e.contains("compiling 'stream_step'"), "{e}");
+        assert!(e.contains("3 attempt(s)"), "{e}");
+        assert!(e.contains("pjrt"), "{e}");
+        assert_eq!(rt.retry_attempts(), 3);
+        assert_eq!(rt.retry_give_ups(), 1);
+        // A bad entry name is rejected up front and burns no attempts.
+        let e2 = rt.load("no_such_entry").unwrap_err().to_string();
+        assert!(e2.contains("no_such_entry"), "{e2}");
+        assert_eq!(rt.retry_attempts(), 3);
         let _ = std::fs::remove_dir_all(dir);
     }
 }

@@ -281,11 +281,29 @@ pub enum FaultEventKind {
     FallbackFullCap,
     /// PI bumplessly re-engaged on the first fresh sample after staleness.
     Reengage,
+    /// Liveness watchdog declared the node's heartbeat stream stale
+    /// (no beat within the staleness bound — the sample is withheld and
+    /// the degradation ladder takes over).
+    WatchdogStale,
+    /// A control period overran its deadline (tick took longer than the
+    /// period); the scheduler applied its catch-up policy.
+    DeadlineOverrun,
+    /// Chaos link dropped one or more heartbeats this period.
+    ChaosLoss,
+    /// Chaos link duplicated one or more heartbeats this period.
+    ChaosDup,
+    /// Chaos link delayed one or more heartbeats into a later period.
+    ChaosDelay,
+    /// Chaos link reordered this period's heartbeats.
+    ChaosReorder,
+    /// Chaos link corrupted one or more heartbeat frames (dropped at the
+    /// receiver as undecodable).
+    ChaosCorrupt,
 }
 
 impl FaultEventKind {
     /// Stable one-byte tag used by the snapshot codec.
-    fn snapshot_tag(self) -> u8 {
+    pub(crate) fn snapshot_tag(self) -> u8 {
         match self {
             FaultEventKind::SensorDropout => 0,
             FaultEventKind::Garbled => 1,
@@ -297,10 +315,17 @@ impl FaultEventKind {
             FaultEventKind::Panic => 7,
             FaultEventKind::FallbackFullCap => 8,
             FaultEventKind::Reengage => 9,
+            FaultEventKind::WatchdogStale => 10,
+            FaultEventKind::DeadlineOverrun => 11,
+            FaultEventKind::ChaosLoss => 12,
+            FaultEventKind::ChaosDup => 13,
+            FaultEventKind::ChaosDelay => 14,
+            FaultEventKind::ChaosReorder => 15,
+            FaultEventKind::ChaosCorrupt => 16,
         }
     }
 
-    fn from_snapshot_tag(tag: u8) -> Option<FaultEventKind> {
+    pub(crate) fn from_snapshot_tag(tag: u8) -> Option<FaultEventKind> {
         Some(match tag {
             0 => FaultEventKind::SensorDropout,
             1 => FaultEventKind::Garbled,
@@ -312,6 +337,13 @@ impl FaultEventKind {
             7 => FaultEventKind::Panic,
             8 => FaultEventKind::FallbackFullCap,
             9 => FaultEventKind::Reengage,
+            10 => FaultEventKind::WatchdogStale,
+            11 => FaultEventKind::DeadlineOverrun,
+            12 => FaultEventKind::ChaosLoss,
+            13 => FaultEventKind::ChaosDup,
+            14 => FaultEventKind::ChaosDelay,
+            15 => FaultEventKind::ChaosReorder,
+            16 => FaultEventKind::ChaosCorrupt,
             _ => return None,
         })
     }
@@ -329,6 +361,13 @@ impl FaultEventKind {
             FaultEventKind::Panic => "panic",
             FaultEventKind::FallbackFullCap => "fallback_full_cap",
             FaultEventKind::Reengage => "reengage",
+            FaultEventKind::WatchdogStale => "watchdog_stale",
+            FaultEventKind::DeadlineOverrun => "deadline_overrun",
+            FaultEventKind::ChaosLoss => "chaos_loss",
+            FaultEventKind::ChaosDup => "chaos_dup",
+            FaultEventKind::ChaosDelay => "chaos_delay",
+            FaultEventKind::ChaosReorder => "chaos_reorder",
+            FaultEventKind::ChaosCorrupt => "chaos_corrupt",
         }
     }
 }
@@ -355,6 +394,26 @@ pub struct NodeFaults {
 }
 
 impl NodeFaults {
+    /// A draw-free fault state that exists only to arm the degradation
+    /// ladder: inert regime, no schedules, no events, and an RNG that is
+    /// never drawn from. The chaos harness
+    /// ([`crate::coordinator::chaos`]) installs this on chaos-matched
+    /// nodes so the freshness gate's `misses`/`last_cap` machinery is live
+    /// without any fault-plan randomness — [`Self::begin_period`] on a
+    /// ladder-only state always returns `FaultAction::Run(no faults)` and
+    /// consumes nothing.
+    pub fn ladder_only(fallback_k: u32) -> NodeFaults {
+        NodeFaults {
+            regime: FaultRegime::default(),
+            fallback_k: fallback_k.max(1),
+            rng: Pcg64::new(0, FAULT_STREAM),
+            down_since: None,
+            crash_at_armed: false,
+            panic_armed: false,
+            events: Vec::new(),
+        }
+    }
+
     /// The consecutive-staleness window for the PI freshness gate.
     pub fn fallback_k(&self) -> u32 {
         self.fallback_k
@@ -656,6 +715,30 @@ mod tests {
         assert!(matches!(f.begin_period(3.0), FaultAction::Run(pf) if !pf.panic));
         assert!(matches!(f.begin_period(4.0), FaultAction::Run(pf) if pf.panic));
         assert!(matches!(f.begin_period(5.0), FaultAction::Run(pf) if !pf.panic));
+    }
+
+    #[test]
+    fn ladder_only_state_is_draw_free_and_inert() {
+        let mut f = NodeFaults::ladder_only(3);
+        assert_eq!(f.fallback_k(), 3);
+        let rng_before = f.rng.clone();
+        for k in 0..100 {
+            match f.begin_period(k as f64) {
+                FaultAction::Run(pf) => {
+                    assert!(!pf.dropout && pf.garble.is_none() && !pf.panic);
+                    assert_eq!(pf.actuator, ActuatorFault::None);
+                }
+                other => panic!("ladder-only state acted: {other:?}"),
+            }
+        }
+        assert!(f.events().is_empty());
+        assert_eq!(
+            f.rng.clone().next_u64(),
+            rng_before.clone().next_u64(),
+            "ladder-only state drew randomness"
+        );
+        // fallback_k is floored at 1 like the plan-compiled path.
+        assert_eq!(NodeFaults::ladder_only(0).fallback_k(), 1);
     }
 
     #[test]

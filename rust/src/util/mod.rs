@@ -13,6 +13,7 @@ pub mod csv;
 pub mod error;
 pub mod json;
 pub mod parallel;
+pub mod retry;
 pub mod rng;
 pub mod snapshot;
 pub mod stats;

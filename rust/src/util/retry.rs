@@ -1,0 +1,291 @@
+//! Seeded-jitter exponential-backoff retry (the live plane's patience).
+//!
+//! The hardened control plane (DESIGN.md "Live control plane hardening")
+//! never lets a flaky actuator write or runtime RPC take down a period:
+//! fallible side effects run through a [`Retrier`], which re-attempts with
+//! exponentially growing, jittered delays until the attempt budget or the
+//! backoff deadline runs out — and every give-up is a *descriptive*
+//! [`crate::util::error`] result plus a counted event, never a panic.
+//!
+//! Determinism contract (the same discipline as [`crate::sim::faults`]):
+//! jitter comes from a dedicated [`Pcg64`] stream seeded at construction,
+//! and sleeping is delegated to an injected closure — so tests drive the
+//! exact delay sequence with a recording no-op sleeper, and two retriers
+//! built from the same seed decide byte-identical backoff schedules.
+//! Elapsed time is accounted as the sum of *requested* delays (not wall
+//! clock), which is what makes the deadline cap replayable.
+
+use crate::util::error::{Error, Result};
+use crate::util::rng::Pcg64;
+
+/// Dedicated RNG stream for retry jitter: retry randomness never aliases
+/// simulation noise, fault schedules or chaos draws.
+pub const RETRY_STREAM: u64 = 0x4E7C1;
+
+/// Shape of an exponential-backoff schedule: `attempt` retries at most,
+/// delay `base_delay * factor^k` (capped at `max_delay`) between attempts,
+/// the whole backoff bounded by `deadline` seconds, and each delay pulled
+/// down by up to `jitter` of itself (de-synchronizing retry storms).
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Maximum attempts (the first try counts; `1` means no retries).
+    pub max_attempts: u32,
+    /// Delay before the first retry [s].
+    pub base_delay: f64,
+    /// Multiplicative growth per retry.
+    pub factor: f64,
+    /// Per-delay ceiling [s].
+    pub max_delay: f64,
+    /// Total backoff budget [s]: cumulative delays never exceed this, and
+    /// a retry that would is truncated to the remaining budget (or skipped
+    /// when none is left) — the deadline cap.
+    pub deadline: f64,
+    /// Jitter fraction in `[0, 1]`: each delay is scaled by a seeded
+    /// uniform draw from `[1 - jitter, 1]`. `0` disables jitter (and the
+    /// draw itself — a jitter-free policy consumes no randomness).
+    pub jitter: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base_delay: 0.05,
+            factor: 2.0,
+            max_delay: 1.0,
+            deadline: 5.0,
+            jitter: 0.5,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The undecorated (pre-jitter, pre-deadline) delay before retry
+    /// `attempt` (0-based): `base_delay * factor^attempt`, capped at
+    /// `max_delay`.
+    pub fn nominal_delay(&self, attempt: u32) -> f64 {
+        let d = self.base_delay * self.factor.powi(attempt.min(63) as i32);
+        d.min(self.max_delay)
+    }
+}
+
+/// A retry executor: policy + seeded jitter stream + give-up accounting.
+#[derive(Debug, Clone)]
+pub struct Retrier {
+    policy: RetryPolicy,
+    rng: Pcg64,
+    attempts: u64,
+    give_ups: u64,
+}
+
+impl Retrier {
+    /// Build a retrier over `policy` with jitter drawn from the dedicated
+    /// retry stream of `seed`.
+    pub fn new(policy: RetryPolicy, seed: u64) -> Self {
+        Retrier {
+            policy,
+            rng: Pcg64::new(seed, RETRY_STREAM),
+            attempts: 0,
+            give_ups: 0,
+        }
+    }
+
+    /// The policy this retrier runs.
+    pub fn policy(&self) -> &RetryPolicy {
+        &self.policy
+    }
+
+    /// Total attempts made across every [`run`](Self::run) call.
+    pub fn attempts(&self) -> u64 {
+        self.attempts
+    }
+
+    /// Operations that exhausted their attempt budget or backoff deadline.
+    pub fn give_ups(&self) -> u64 {
+        self.give_ups
+    }
+
+    /// Decide the jittered delay before retry `attempt` (0-based). This is
+    /// the per-retry hot decision the `retry_backoff_decide_ns` bench row
+    /// measures: one `powi`, one `min`, at most one RNG draw.
+    pub fn decide(&mut self, attempt: u32) -> f64 {
+        let d = self.policy.nominal_delay(attempt);
+        if self.policy.jitter <= 0.0 {
+            return d;
+        }
+        let scale = 1.0 - self.policy.jitter * self.rng.f64();
+        d * scale
+    }
+
+    /// Run `op` under the retry policy. `op` receives the 0-based attempt
+    /// index; `sleep` receives each backoff delay [s] (inject a recording
+    /// no-op in tests, a real sleeper in the daemon). On exhaustion the
+    /// result is a descriptive error naming `what`, the attempt count, the
+    /// backoff spent, and the last underlying cause — and the give-up is
+    /// counted. Never panics.
+    pub fn run<T>(
+        &mut self,
+        what: &str,
+        sleep: &mut dyn FnMut(f64),
+        op: &mut dyn FnMut(u32) -> Result<T>,
+    ) -> Result<T> {
+        let mut elapsed = 0.0;
+        let mut last: Option<Error> = None;
+        let mut made = 0u32;
+        for attempt in 0..self.policy.max_attempts {
+            self.attempts += 1;
+            made += 1;
+            match op(attempt) {
+                Ok(v) => return Ok(v),
+                Err(e) => last = Some(e),
+            }
+            if attempt + 1 == self.policy.max_attempts {
+                break;
+            }
+            let mut d = self.decide(attempt);
+            let remaining = self.policy.deadline - elapsed;
+            if remaining <= 0.0 {
+                // Deadline already spent: no further retries.
+                break;
+            }
+            if d > remaining {
+                d = remaining; // deadline cap: truncate the final backoff
+            }
+            if d > 0.0 {
+                sleep(d);
+                elapsed += d;
+            }
+        }
+        self.give_ups += 1;
+        let cause = last.map(|e| e.to_string()).unwrap_or_else(|| "no cause recorded".into());
+        Err(crate::err!(
+            "{what}: gave up after {made} attempt(s), {elapsed:.3} s of {:.3} s backoff budget: {cause}",
+            self.policy.deadline
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flaky(fail_first: u32) -> impl FnMut(u32) -> Result<u32> {
+        move |attempt| {
+            if attempt < fail_first {
+                Err(crate::err!("transient #{attempt}"))
+            } else {
+                Ok(attempt)
+            }
+        }
+    }
+
+    #[test]
+    fn succeeds_after_transient_failures() {
+        let mut r = Retrier::new(RetryPolicy::default(), 7);
+        let mut slept = Vec::new();
+        let got = r
+            .run("op", &mut |d| slept.push(d), &mut flaky(2))
+            .expect("third attempt succeeds");
+        assert_eq!(got, 2);
+        assert_eq!(slept.len(), 2, "one backoff per failed attempt");
+        assert_eq!(r.attempts(), 3);
+        assert_eq!(r.give_ups(), 0);
+    }
+
+    #[test]
+    fn gives_up_with_descriptive_error_and_counter() {
+        let mut r = Retrier::new(RetryPolicy::default(), 7);
+        let mut sleep = |_d: f64| {};
+        let err = r
+            .run("pcap write", &mut sleep, &mut flaky(99))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("pcap write"), "{err}");
+        assert!(err.contains("4 attempt(s)"), "{err}");
+        assert!(err.contains("transient #3"), "{err}");
+        assert_eq!(r.give_ups(), 1);
+        assert_eq!(r.attempts(), 4);
+    }
+
+    #[test]
+    fn delays_grow_exponentially_and_cap() {
+        let policy = RetryPolicy {
+            max_attempts: 8,
+            base_delay: 0.1,
+            factor: 2.0,
+            max_delay: 0.5,
+            deadline: 100.0,
+            jitter: 0.0,
+        };
+        let mut r = Retrier::new(policy, 1);
+        let seq: Vec<f64> = (0..5).map(|k| r.decide(k)).collect();
+        assert_eq!(seq, vec![0.1, 0.2, 0.4, 0.5, 0.5]);
+    }
+
+    #[test]
+    fn jitter_is_deterministic_under_fixed_seed() {
+        let policy = RetryPolicy {
+            jitter: 0.5,
+            ..RetryPolicy::default()
+        };
+        let mut a = Retrier::new(policy, 42);
+        let mut b = Retrier::new(policy, 42);
+        let sa: Vec<f64> = (0..6).map(|k| a.decide(k)).collect();
+        let sb: Vec<f64> = (0..6).map(|k| b.decide(k)).collect();
+        assert_eq!(sa, sb, "same seed must decide the same schedule");
+        let mut c = Retrier::new(policy, 43);
+        let sc: Vec<f64> = (0..6).map(|k| c.decide(k)).collect();
+        assert_ne!(sa, sc, "different seed must (generically) differ");
+        // Jitter only ever pulls a delay DOWN from its nominal value.
+        for (k, &d) in sa.iter().enumerate() {
+            let nominal = policy.nominal_delay(k as u32);
+            assert!(d <= nominal && d >= nominal * (1.0 - policy.jitter));
+        }
+    }
+
+    #[test]
+    fn zero_jitter_draws_no_randomness() {
+        let policy = RetryPolicy {
+            jitter: 0.0,
+            ..RetryPolicy::default()
+        };
+        let mut r = Retrier::new(policy, 5);
+        let before = r.rng.clone();
+        let _ = r.decide(0);
+        let _ = r.decide(1);
+        assert_eq!(r.rng.next_u64(), before.clone().next_u64());
+    }
+
+    #[test]
+    fn deadline_cap_bounds_total_backoff() {
+        let policy = RetryPolicy {
+            max_attempts: 50,
+            base_delay: 0.3,
+            factor: 2.0,
+            max_delay: 10.0,
+            deadline: 1.0,
+            jitter: 0.0,
+        };
+        let mut r = Retrier::new(policy, 3);
+        let mut total = 0.0;
+        let err = r.run("rpc", &mut |d| total += d, &mut flaky(99)).unwrap_err();
+        assert!(total <= policy.deadline + 1e-12, "slept {total} > deadline");
+        // The cap cut retries short well before the 50-attempt budget.
+        assert!(r.attempts() < 50);
+        assert!(err.to_string().contains("backoff budget"));
+    }
+
+    #[test]
+    fn single_attempt_policy_never_sleeps() {
+        let policy = RetryPolicy {
+            max_attempts: 1,
+            ..RetryPolicy::default()
+        };
+        let mut r = Retrier::new(policy, 9);
+        let mut slept = 0u32;
+        let err = r.run("once", &mut |_| slept += 1, &mut flaky(99));
+        assert!(err.is_err());
+        assert_eq!(slept, 0);
+        assert_eq!(r.attempts(), 1);
+    }
+}

@@ -1,0 +1,318 @@
+//! Hardened-control-plane contracts under transport chaos.
+//!
+//! Four pins (DESIGN.md "Live control plane hardening"):
+//!
+//! 1. `chaos_empty_plan_identical` — an empty (or all-inert) [`ChaosPlan`]
+//!    is **byte-identical** to the chaos-free path on all three `SimPath`s:
+//!    the hardened plane costs nothing — not one RNG draw, not one JSON
+//!    key — until a rule matches.
+//! 2. A seeded chaos plan replays byte-identically across repeated runs
+//!    *and* worker counts — disturbance draws are per-node streams, never
+//!    scheduling-order dependent.
+//! 3. The acceptance storm: 64 nodes under 10% loss + 10% duplication +
+//!    50% reordering complete without panic, with disturbances logged on
+//!    the records; and under a deterministic transport blackout every
+//!    chaos-matched node walks the full degradation ladder (watchdog
+//!    staleness → full-cap fallback → bumpless re-engage) while survivor
+//!    bytes stay untouched under frozen ceilings.
+//! 4. Retry backoff is seed-deterministic and deadline-capped — the same
+//!    `(policy, seed)` decides the same sleep schedule, and cumulative
+//!    backoff never exceeds the policy deadline.
+
+use std::sync::{Arc, Mutex};
+
+use powerctl::control::budget::{BudgetPolicy, FrozenLimits, SlackProportional};
+use powerctl::coordinator::supervisor::{Actuator, RetryingActuator};
+use powerctl::coordinator::{ChaosPlan, ChaosRegime};
+use powerctl::experiments::chaos::storm_regime;
+use powerctl::fleet::node::noise_free_model;
+use powerctl::fleet::{
+    run_fleet_with_chaos, run_fleet_with_path, FleetConfig, FleetOutcome, NodeHardware,
+    NodePolicySpec, NodeSpec, SimPath,
+};
+use powerctl::sim::cluster::ClusterId;
+use powerctl::sim::faults::{FaultEventKind, FaultPlan, NodeSelector};
+use powerctl::util::retry::RetryPolicy;
+
+fn specs(n: usize) -> Vec<NodeSpec> {
+    let order = [ClusterId::Gros, ClusterId::Dahu];
+    let models = [
+        noise_free_model(ClusterId::Gros),
+        noise_free_model(ClusterId::Dahu),
+    ];
+    (0..n)
+        .map(|i| NodeSpec {
+            cluster: order[i % 2],
+            model: models[i % 2].clone(),
+            policy: NodePolicySpec::Pi { epsilon: 0.15 },
+            hardware: NodeHardware::SingleCpu,
+        })
+        .collect()
+}
+
+fn config(n: usize) -> FleetConfig {
+    FleetConfig {
+        budget: n as f64 * 85.0,
+        period: 1.0,
+        realloc_every: 5,
+        total_beats: 300,
+        max_time: 120.0,
+        seed: 7,
+        threads: None,
+    }
+}
+
+fn record_bytes(out: &FleetOutcome) -> String {
+    out.records
+        .iter()
+        .map(|r| r.to_json().dump())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// The CI grep gate anchors on this test name (see `.github/workflows/
+/// ci.yml`): empty and all-inert chaos plans are byte-free no-ops on
+/// every stepping path — the tick hot path pays one `Option` branch and
+/// nothing else until chaos is armed.
+#[test]
+fn chaos_empty_plan_identical() {
+    let specs = specs(12);
+    let cfg = config(12);
+    // "Inert": a rule present but with every channel at zero probability —
+    // `link` compiles it to nothing.
+    let inert = ChaosPlan::seeded(99).with_rule(NodeSelector::All, ChaosRegime::default());
+    assert!(inert.is_empty());
+    for path in [SimPath::Batched, SimPath::BatchedScalar, SimPath::Classic] {
+        let clean = run_fleet_with_path(&specs, &mut SlackProportional::default(), &cfg, path);
+        let empty = run_fleet_with_chaos(
+            &specs,
+            &mut SlackProportional::default(),
+            &cfg,
+            path,
+            &FaultPlan::default(),
+            &ChaosPlan::default(),
+        );
+        let inert_out = run_fleet_with_chaos(
+            &specs,
+            &mut SlackProportional::default(),
+            &cfg,
+            path,
+            &FaultPlan::default(),
+            &inert,
+        );
+        let a = record_bytes(&clean);
+        assert!(
+            a == record_bytes(&empty),
+            "{path:?}: empty chaos plan changed bytes"
+        );
+        assert!(
+            a == record_bytes(&inert_out),
+            "{path:?}: all-inert chaos plan changed bytes"
+        );
+        assert_eq!(clean.limits_trace, empty.limits_trace, "{path:?}");
+        assert_eq!(clean.limits_trace, inert_out.limits_trace, "{path:?}");
+        assert!(
+            !a.contains("\"faults\""),
+            "{path:?}: clean records grew a faults key"
+        );
+    }
+}
+
+/// A seeded storm plan replays byte-identically across repeated runs and
+/// worker counts: chaos draws come from per-node RNG streams split from
+/// the plan seed, so shard scheduling can never leak into the bytes.
+#[test]
+fn seeded_chaos_replays_across_runs_and_worker_counts() {
+    let n = 16;
+    let specs = specs(n);
+    let plan = ChaosPlan::seeded(0x57E0).with_rule(NodeSelector::All, storm_regime());
+    let run = |threads: Option<usize>| {
+        let mut cfg = config(n);
+        cfg.threads = threads;
+        let mut strat = SlackProportional::default();
+        run_fleet_with_chaos(
+            &specs,
+            &mut strat,
+            &cfg,
+            SimPath::Batched,
+            &FaultPlan::default(),
+            &plan,
+        )
+    };
+    let a = run(None);
+    let bytes = record_bytes(&a);
+    for threads in [None, Some(1), Some(4)] {
+        let b = run(threads);
+        assert_eq!(
+            bytes,
+            record_bytes(&b),
+            "chaos replay diverged at threads={threads:?}"
+        );
+        assert_eq!(a.limits_trace, b.limits_trace, "threads={threads:?}");
+    }
+    // The storm actually disturbed something — the replay check above
+    // would be vacuous on an accidentally-inert plan.
+    assert!(
+        bytes.contains("\"faults\""),
+        "storm left no chaos events on any record"
+    );
+}
+
+/// Acceptance storm: 64 nodes under 10% loss + 10% duplication + 50%
+/// reordering. Every node completes its quota (completion runs on
+/// ground-truth beats — chaos corrupts telemetry, not work), nothing
+/// panics, and the disturbances are visible on the records.
+#[test]
+fn storm_64_nodes_completes_under_loss_dup_reorder() {
+    let n = 64;
+    let specs = specs(n);
+    let cfg = config(n);
+    let plan = ChaosPlan::seeded(0xC4A0).with_rule(NodeSelector::All, storm_regime());
+    let mut strat = SlackProportional::default();
+    let out = run_fleet_with_chaos(
+        &specs,
+        &mut strat,
+        &cfg,
+        SimPath::Batched,
+        &FaultPlan::default(),
+        &plan,
+    );
+    let mut disturbed_nodes = 0;
+    for (i, r) in out.records.iter().enumerate() {
+        assert!(r.completed, "node {i} did not complete under the storm");
+        let chaos_events = r
+            .faults
+            .iter()
+            .filter(|e| {
+                matches!(
+                    e.kind,
+                    FaultEventKind::ChaosLoss
+                        | FaultEventKind::ChaosDup
+                        | FaultEventKind::ChaosReorder
+                )
+            })
+            .count();
+        if chaos_events > 0 {
+            disturbed_nodes += 1;
+        }
+    }
+    assert_eq!(
+        disturbed_nodes, n,
+        "a fleetwide 10%/10%/50% storm must disturb every node's telemetry"
+    );
+}
+
+/// Deterministic blackout recovery: a delay-everything regime silences a
+/// quarter of the fleet's telemetry for 10 s. Every matched node must walk
+/// the full ladder — watchdog staleness, full-cap fallback after the
+/// staleness window, bumpless re-engage once delayed beats flow — and
+/// still complete. Under frozen ceilings, every unmatched node's record is
+/// byte-identical to the chaos-free run.
+#[test]
+fn ladder_recovers_from_blackout_with_survivor_bytes_untouched() {
+    let n = 16;
+    let specs = specs(n);
+    let cfg = config(n);
+    let blackout = ChaosRegime {
+        delay: 1.0,
+        delay_secs: 10.0,
+        ..ChaosRegime::default()
+    };
+    let plan =
+        ChaosPlan::seeded(0xB1A0).with_rule(NodeSelector::EveryKth { k: 4, offset: 1 }, blackout);
+    let clean = run_fleet_with_path(&specs, &mut FrozenLimits, &cfg, SimPath::Batched);
+    let dark = run_fleet_with_chaos(
+        &specs,
+        &mut FrozenLimits,
+        &cfg,
+        SimPath::Batched,
+        &FaultPlan::default(),
+        &plan,
+    );
+    for i in 0..n {
+        let r = &dark.records[i];
+        if i % 4 == 1 {
+            assert!(r.completed, "blacked-out node {i} did not complete");
+            for kind in [
+                FaultEventKind::WatchdogStale,
+                FaultEventKind::FallbackFullCap,
+                FaultEventKind::Reengage,
+                FaultEventKind::ChaosDelay,
+            ] {
+                assert!(
+                    r.faults.iter().any(|e| e.kind == kind),
+                    "node {i} missing {kind:?} — ladder not fully walked"
+                );
+            }
+            // The ladder order is causal: staleness precedes the fallback,
+            // the fallback precedes the re-engage.
+            let first = |k: FaultEventKind| {
+                r.faults
+                    .iter()
+                    .find(|e| e.kind == k)
+                    .map(|e| e.t)
+                    .unwrap()
+            };
+            let stale = first(FaultEventKind::WatchdogStale);
+            let fallback = first(FaultEventKind::FallbackFullCap);
+            let reengage = first(FaultEventKind::Reengage);
+            assert!(
+                stale <= fallback && fallback < reengage,
+                "node {i}: ladder out of order ({stale} / {fallback} / {reengage})"
+            );
+        } else {
+            assert_eq!(
+                clean.records[i].to_json().dump(),
+                r.to_json().dump(),
+                "node {i}'s bytes perturbed by its neighbours' blackout"
+            );
+        }
+    }
+}
+
+/// Retry backoff is seed-deterministic and deadline-capped: two actuators
+/// under the same `(policy, seed)` sleep the exact same schedule, a
+/// different seed (generically) differs, and cumulative backoff never
+/// exceeds the policy deadline — the cap that keeps a wedged actuator from
+/// stalling the control period indefinitely.
+#[test]
+fn retry_backoff_is_deterministic_and_deadline_capped() {
+    let policy = RetryPolicy {
+        max_attempts: 10,
+        base_delay: 0.2,
+        factor: 2.0,
+        max_delay: 5.0,
+        deadline: 1.5,
+        jitter: 0.5,
+    };
+    let run = |seed: u64| {
+        let slept = Arc::new(Mutex::new(Vec::new()));
+        let recorder = Arc::clone(&slept);
+        let mut act = RetryingActuator::new(
+            |_w: f64| -> powerctl::util::error::Result<f64> {
+                Err(powerctl::err!("actuator wedged"))
+            },
+            policy,
+            seed,
+        )
+        .with_sleeper(move |d| recorder.lock().unwrap().push(d));
+        let err = act.apply(60.0).unwrap_err().to_string();
+        assert!(err.contains("pcap actuation"), "{err}");
+        assert!(err.contains("actuator wedged"), "{err}");
+        assert!(act.give_ups() == 1 && act.attempts() >= 2);
+        let schedule = slept.lock().unwrap().clone();
+        schedule
+    };
+    let a = run(42);
+    let b = run(42);
+    let c = run(43);
+    assert_eq!(a, b, "same seed must sleep the same backoff schedule");
+    assert_ne!(a, c, "different seed must (generically) differ");
+    let total: f64 = a.iter().sum();
+    assert!(
+        total <= policy.deadline + 1e-12,
+        "slept {total} s > {} s deadline cap",
+        policy.deadline
+    );
+    assert!(!a.is_empty(), "a wedged actuator must have backed off");
+}
